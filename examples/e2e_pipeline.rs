@@ -1,0 +1,131 @@
+//! END-TO-END driver (DESIGN.md §"End-to-end validation"): the full system
+//! on the complete synthetic pre-clinical dataset —
+//!
+//!   1. generate the five Table-2 registration pairs;
+//!   2. affine pre-alignment (reg_aladin analog);
+//!   3. FFD non-rigid registration twice per pair: once with the NiftyReg
+//!      (TV) interpolation and once with the paper's TTLI;
+//!   4. report the Table-5 quality table (MAE/SSIM: affine vs proposed vs
+//!      NiftyReg) and the Figure-8/9 timing comparison (total registration
+//!      time, speedup, BSI share).
+//!
+//! Results are appended as JSON to target/bench-reports/e2e_pipeline.json
+//! and quoted in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example e2e_pipeline -- [--scale 0.15] [--iters 25]
+
+use ffdreg::bspline::Method;
+use ffdreg::cli::Args;
+use ffdreg::ffd::{multilevel::register_with_method, FfdConfig};
+use ffdreg::metrics::{mae_normalized, ssim};
+use ffdreg::phantom::dataset::generate_dataset;
+use ffdreg::util::bench::Report;
+use ffdreg::util::timer;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let scale = args.get_f64("scale", 0.15).unwrap();
+    let iters = args.get_usize("iters", 25).unwrap();
+    let levels = args.get_usize("levels", 2).unwrap();
+
+    println!("== e2e pipeline: dataset -> affine -> FFD(TV) & FFD(TTLI) ==");
+    println!("scale {scale}, {levels} levels, {iters} iters/level\n");
+
+    let (pairs, t_ds) = timer::time_once(|| generate_dataset(scale, 7));
+    println!("dataset: 5 pairs generated in {}", timer::fmt_secs(t_ds));
+
+    let cfg = FfdConfig { levels, max_iter: iters, ..Default::default() };
+    let mut quality = Report::new("e2e_table5", "MAE / SSIM per pair (Table 5 analog)");
+    let mut timing = Report::new("e2e_fig8", "registration time + speedup (Fig 8/9 analog)");
+
+    let mut speedups = Vec::new();
+    let mut mae_acc = [0.0f64; 3]; // affine, proposed(ttli), niftyreg(tv)
+    let mut ssim_acc = [0.0f64; 3];
+
+    for pair in &pairs {
+        let reference = &pair.intra;
+        println!("\n-- {} ({}x{}x{}) --", pair.name, reference.dims.nx, reference.dims.ny, reference.dims.nz);
+
+        // Affine stage.
+        let (aff, t_aff) = timer::time_once(|| {
+            ffdreg::affine::register(reference, &pair.pre, &Default::default())
+        });
+        let mae_aff = mae_normalized(reference, &aff.warped);
+        let ssim_aff = ssim(reference, &aff.warped);
+        println!(
+            "  affine: {} ({} matches)  MAE {:.4}  SSIM {:.4}",
+            timer::fmt_secs(t_aff),
+            aff.matches_used,
+            mae_aff,
+            ssim_aff
+        );
+
+        // FFD with TTLI (proposed) and TV (original NiftyReg).
+        let res_ttli = register_with_method(reference, &aff.warped, Method::Ttli, &cfg);
+        let res_tv = register_with_method(reference, &aff.warped, Method::Tv, &cfg);
+
+        let mae_ttli = mae_normalized(reference, &res_ttli.warped);
+        let ssim_ttli = ssim(reference, &res_ttli.warped);
+        let mae_tv = mae_normalized(reference, &res_tv.warped);
+        let ssim_tv = ssim(reference, &res_tv.warped);
+        let speedup = res_tv.timing.total_s / res_ttli.timing.total_s;
+        speedups.push(speedup);
+
+        println!(
+            "  FFD(TTLI): {}  (BSI {:4.1}%)  MAE {:.4}  SSIM {:.4}",
+            timer::fmt_secs(res_ttli.timing.total_s),
+            100.0 * res_ttli.timing.bsi_fraction(),
+            mae_ttli,
+            ssim_ttli
+        );
+        println!(
+            "  FFD(TV):   {}  (BSI {:4.1}%)  MAE {:.4}  SSIM {:.4}  -> speedup {:.2}x",
+            timer::fmt_secs(res_tv.timing.total_s),
+            100.0 * res_tv.timing.bsi_fraction(),
+            mae_tv,
+            ssim_tv,
+            speedup
+        );
+
+        quality
+            .row(&pair.name)
+            .cell("MAE affine", mae_aff)
+            .cell("MAE proposed", mae_ttli)
+            .cell("MAE NiftyReg", mae_tv)
+            .cell("SSIM affine", ssim_aff)
+            .cell("SSIM proposed", ssim_ttli)
+            .cell("SSIM NiftyReg", ssim_tv);
+        timing
+            .row(&pair.name)
+            .cell("TV total s", res_tv.timing.total_s)
+            .cell("TTLI total s", res_ttli.timing.total_s)
+            .cell("speedup", speedup)
+            .cell("BSI % (TV)", 100.0 * res_tv.timing.bsi_fraction())
+            .cell("BSI % (TTLI)", 100.0 * res_ttli.timing.bsi_fraction());
+
+        mae_acc[0] += mae_aff;
+        mae_acc[1] += mae_ttli;
+        mae_acc[2] += mae_tv;
+        ssim_acc[0] += ssim_aff;
+        ssim_acc[1] += ssim_ttli;
+        ssim_acc[2] += ssim_tv;
+    }
+
+    let n = pairs.len() as f64;
+    quality
+        .row("Average")
+        .cell("MAE affine", mae_acc[0] / n)
+        .cell("MAE proposed", mae_acc[1] / n)
+        .cell("MAE NiftyReg", mae_acc[2] / n)
+        .cell("SSIM affine", ssim_acc[0] / n)
+        .cell("SSIM proposed", ssim_acc[1] / n)
+        .cell("SSIM NiftyReg", ssim_acc[2] / n);
+    let avg_speedup = speedups.iter().sum::<f64>() / n;
+    timing.row("Average").cell("speedup", avg_speedup);
+    quality.note("paper Table 5 avg: MAE 0.216/0.124/0.125, SSIM 0.837/0.896/0.896");
+    timing.note("paper Fig 8/9: registration speedup 1.30x (GTX1050) / 1.14x (RTX2070)");
+
+    quality.finish();
+    timing.finish();
+    println!("\naverage registration speedup TTLI vs TV: {avg_speedup:.2}x");
+}

@@ -1,0 +1,59 @@
+//! Image zooming through B-spline interpolation — the paper's Discussion
+//! §8 application ("our improved BSI can also be used in generic image
+//! interpolation applications, e.g., image zooming, by using image pixels
+//! as the control points"). Pipeline: Unser/Ruijters prefilter (direct
+//! B-spline transform) → spline evaluation at the target lattice, compared
+//! against plain trilinear resizing on a phantom slice.
+//!
+//!     cargo run --release --example image_zoom -- [--factor 2]
+
+use ffdreg::bspline::prefilter;
+use ffdreg::cli::Args;
+use ffdreg::phantom::{generate, PhantomSpec};
+use ffdreg::util::timer;
+use ffdreg::volume::{resample, Dims};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let factor = args.get_usize("factor", 2).unwrap();
+
+    let spec = PhantomSpec { dims: Dims::new(48, 40, 44), ..Default::default() };
+    let vol = generate(&spec);
+    let target = Dims::new(vol.dims.nx * factor, vol.dims.ny * factor, vol.dims.nz * factor);
+    println!(
+        "zooming {}x{}x{} -> {}x{}x{} (factor {factor})",
+        vol.dims.nx, vol.dims.ny, vol.dims.nz, target.nx, target.ny, target.nz
+    );
+
+    let (spline, t_spline) = timer::time_once(|| prefilter::zoom(&vol, target));
+    let (trilinear, t_tri) = timer::time_once(|| resample::resize(&vol, target));
+    println!(
+        "  B-spline zoom: {}   trilinear resize: {}",
+        timer::fmt_secs(t_spline),
+        timer::fmt_secs(t_tri)
+    );
+
+    // Quality check: downsample both back and compare against the original.
+    let back_spline = resample::resize(&spline, vol.dims);
+    let back_tri = resample::resize(&trilinear, vol.dims);
+    let mae_spline = vol.mean_abs_diff(&back_spline);
+    let mae_tri = vol.mean_abs_diff(&back_tri);
+    println!("  round-trip MAE: B-spline {mae_spline:.5} vs trilinear {mae_tri:.5}");
+
+    // Sharpness proxy: mean gradient magnitude of the zoomed volumes (the
+    // cubic spline preserves edges better than trilinear blurring).
+    let sharp = |v: &ffdreg::volume::Volume| {
+        let g = resample::gradient(v);
+        let mut acc = 0.0f64;
+        for i in 0..g.x.len() {
+            acc += ((g.x[i] * g.x[i] + g.y[i] * g.y[i] + g.z[i] * g.z[i]) as f64).sqrt();
+        }
+        acc / g.x.len() as f64
+    };
+    println!(
+        "  mean gradient magnitude: B-spline {:.5} vs trilinear {:.5}",
+        sharp(&spline),
+        sharp(&trilinear)
+    );
+    println!("\nB-spline zoom preserves more structure at comparable cost — Discussion §8.");
+}

@@ -1,0 +1,87 @@
+//! Interpolation survey: every BSI implementation (plus the PJRT artifact
+//! when available) on one workload — time per voxel, speedup over the
+//! NiftyReg-TV baseline, and accuracy vs the f64 reference. A compact
+//! console version of the paper's Figures 5–7 and Tables 3–4.
+//!
+//!     cargo run --release --example interpolation_survey -- [--dims X,Y,Z] [--tile N]
+
+use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::cli::Args;
+use ffdreg::util::timer;
+use ffdreg::volume::Dims;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let d = args.get_triple("dims", [96, 96, 96]).expect("--dims X,Y,Z");
+    let tile = args.get_usize("tile", 5).expect("--tile N");
+    let vd = Dims::new(d[0], d[1], d[2]);
+    let mut grid = ControlGrid::zeros(vd, [tile, tile, tile]);
+    grid.randomize(7, 5.0);
+
+    println!(
+        "== BSI survey: {}x{}x{} voxels, tile {tile}, {} threads ==\n",
+        vd.nx,
+        vd.ny,
+        vd.nz,
+        ffdreg::util::threadpool::num_threads()
+    );
+    let reference = ffdreg::bspline::reference::interpolate_f64(&grid, vd);
+
+    let mut baseline_ns = None;
+    println!(
+        "{:<28} {:>12} {:>10} {:>14}",
+        "method", "ns/voxel", "speedup", "err vs f64"
+    );
+    for m in Method::ALL {
+        let imp = m.instance();
+        let stats = timer::time_adaptive(3, 15, 0.4, || {
+            std::hint::black_box(imp.interpolate(&grid, vd));
+        });
+        let ns = stats.mean() * 1e9 / vd.count() as f64;
+        if m == Method::Tv {
+            baseline_ns = Some(ns);
+        }
+        let speedup = baseline_ns.map(|b| b / ns).unwrap_or(f64::NAN);
+        let f = imp.interpolate(&grid, vd);
+        let err = f.mean_abs_diff_f64(&reference.x, &reference.y, &reference.z);
+        println!("{:<28} {:>12.3} {:>9.2}x {:>14.3e}", imp.name(), ns, speedup, err);
+    }
+
+    // PJRT artifact, if built (`make artifacts`) and a matching config.
+    let dir = ffdreg::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        if let Ok(rt) = ffdreg::runtime::Runtime::open(&dir) {
+            let configs = rt.manifest().configs_for("bsi_ttli");
+            if let Some(&(vdims, t)) = configs.last() {
+                let vd2 = Dims::new(vdims[2], vdims[1], vdims[0]);
+                let mut g2 = ControlGrid::zeros(vd2, [t, t, t]);
+                g2.randomize(7, 5.0);
+                // warm-up compiles the executable
+                let _ = rt.bsi_field(&g2, vd2).expect("pjrt");
+                let stats = timer::time_adaptive(2, 8, 0.3, || {
+                    std::hint::black_box(rt.bsi_field(&g2, vd2).expect("pjrt"));
+                });
+                let ns = stats.mean() * 1e9 / vd2.count() as f64;
+                println!(
+                    "{:<28} {:>12.3}        (on {}x{}x{}, AOT Pallas via PJRT)",
+                    "TTLI (pjrt artifact)", ns, vd2.nx, vd2.ny, vd2.nz
+                );
+            }
+        }
+    } else {
+        println!("\n(pjrt row skipped: run `make artifacts` first)");
+    }
+
+    println!("\nGPU analytic model (paper's testbeds, DESIGN.md S15):");
+    for gpu in [
+        &ffdreg::memmodel::gpumodel::GTX1050,
+        &ffdreg::memmodel::gpumodel::RTX2070,
+    ] {
+        print!("  {:<9}", gpu.name);
+        for m in Method::GPU_SET {
+            let t = ffdreg::memmodel::gpumodel::time_per_voxel(gpu, m, tile as f64);
+            print!("  {}={:.3}ns", m.key(), t.per_voxel() * 1e9);
+        }
+        println!();
+    }
+}

@@ -1,0 +1,79 @@
+//! Coordinator demo: start the interpolation service, drive it with a
+//! multi-client workload over TCP, and print throughput/latency — the
+//! serving-system view of the paper's kernel.
+//!
+//!     cargo run --release --example registration_server -- [--clients 4] [--jobs 8]
+
+use std::sync::Arc;
+
+use ffdreg::cli::Args;
+use ffdreg::coordinator::server::{Client, Server};
+use ffdreg::coordinator::{InterpolationService, Scheduler, SchedulerConfig};
+use ffdreg::util::json::Json;
+use ffdreg::util::stats::Summary;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let clients = args.get_usize("clients", 4).unwrap();
+    let jobs = args.get_usize("jobs", 8).unwrap();
+
+    let service = InterpolationService::with_default_runtime();
+    println!(
+        "starting coordinator (pjrt artifacts available: {})",
+        service.has_pjrt()
+    );
+    let sched = Arc::new(Scheduler::start(
+        service,
+        SchedulerConfig { workers: 2, queue_capacity: 128, max_batch: 8 },
+    ));
+    let server = Server::start("127.0.0.1:0", sched.clone()).expect("bind");
+    println!("listening on {}", server.addr);
+
+    let t0 = std::time::Instant::now();
+    let addr = server.addr;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                let mut lat = Vec::new();
+                for j in 0..jobs {
+                    let req = Json::obj(vec![
+                        ("op", Json::Str("interpolate".into())),
+                        ("dims", Json::arr_usize(&[48, 48, 48])),
+                        ("tile", Json::Num(5.0)),
+                        ("seed", Json::Num((c * 100 + j) as f64)),
+                        ("engine", Json::Str("cpu:ttli".into())),
+                    ]);
+                    let t = std::time::Instant::now();
+                    let resp = client.call(&req).expect("call");
+                    assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp:?}");
+                    lat.push(t.elapsed().as_secs_f64());
+                }
+                lat
+            })
+        })
+        .collect();
+
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::from_slice(&all);
+    let total_jobs = clients * jobs;
+    let voxels = total_jobs as f64 * 48.0 * 48.0 * 48.0;
+    println!("\n{total_jobs} jobs from {clients} clients in {wall:.2}s");
+    println!(
+        "  latency: mean {:.1} ms, p95 {:.1} ms  |  throughput {:.1} jobs/s, {:.1} Mvox/s",
+        s.mean() * 1e3,
+        ffdreg::util::stats::percentile(&all, 95.0) * 1e3,
+        total_jobs as f64 / wall,
+        voxels / wall / 1e6
+    );
+
+    // Server-side metrics.
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c.call(&Json::obj(vec![("op", Json::Str("stats".into()))])).unwrap();
+    println!("  server stats: {}", stats.get("stats").to_string());
+    server.stop();
+}

@@ -1,0 +1,5 @@
+"""Build-time Python package: JAX/Pallas authoring + AOT lowering.
+
+Never imported at runtime -- `make artifacts` runs once, the rust binary
+loads the resulting HLO text through PJRT (see DESIGN.md section 2).
+"""

@@ -1,0 +1,161 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Artifacts (one per entry point × configuration):
+  bsi_ttli_<nz>x<ny>x<nx>_t<d>.hlo.txt   cp -> field      (Pallas TTLI)
+  bsi_tt_<...>.hlo.txt                   cp -> field      (Pallas TT)
+  warp_<...>.hlo.txt                     (vol, field) -> warped
+  ssd_grad_<...>.hlo.txt                 (ref, flo, cp) -> (loss, grad)
+  ffd_step_<...>.hlo.txt                 (ref, flo, cp, step) -> (cp', loss)
+  manifest.json                          shapes + entry metadata
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (volume dims (nz,ny,nx), cubic tile edge). Shapes are static in HLO; the
+# rust coordinator picks the artifact matching the request (and the quickstart
+# dataset is generated to these sizes).
+STANDARD_CONFIGS = [
+    ((20, 20, 20), 5),   # smoke size (fast to compile/execute in tests)
+    ((40, 40, 40), 5),   # quickstart size
+    ((60, 60, 60), 5),   # e2e size
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def grid_shape(vol, d):
+    nz, ny, nx = vol
+    return (3, nz // d + 3, ny // d + 3, nx // d + 3)
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    for vol, d in STANDARD_CONFIGS:
+        nz, ny, nx = vol
+        tag = f"{nz}x{ny}x{nx}_t{d}"
+        tile = (d, d, d)
+        cp = jax.ShapeDtypeStruct(grid_shape(vol, d), jnp.float32)
+        volume = jax.ShapeDtypeStruct(vol, jnp.float32)
+        field = jax.ShapeDtypeStruct((3,) + vol, jnp.float32)
+        step = jax.ShapeDtypeStruct((), jnp.float32)
+
+        def emit(name, lowered, inputs, outputs):
+            path = f"{name}_{tag}.hlo.txt"
+            with open(os.path.join(out_dir, path), "w") as f:
+                f.write(to_hlo_text(lowered))
+            entries.append(
+                {
+                    "name": f"{name}_{tag}",
+                    "entry": name,
+                    "file": path,
+                    "vol_dims": [nz, ny, nx],
+                    "tile": d,
+                    "inputs": inputs,
+                    "outputs": outputs,
+                }
+            )
+
+        emit(
+            "bsi_ttli",
+            jax.jit(lambda c: model.bsi_field(c, tile, vol)).lower(cp),
+            [{"name": "cp", "shape": list(cp.shape)}],
+            [{"name": "field", "shape": [3, nz, ny, nx]}],
+        )
+        emit(
+            "bsi_tt",
+            jax.jit(lambda c: model.bsi_field_tt(c, tile, vol)).lower(cp),
+            [{"name": "cp", "shape": list(cp.shape)}],
+            [{"name": "field", "shape": [3, nz, ny, nx]}],
+        )
+        emit(
+            "warp",
+            jax.jit(model.warp_volume).lower(volume, field),
+            [
+                {"name": "vol", "shape": list(vol)},
+                {"name": "field", "shape": [3, nz, ny, nx]},
+            ],
+            [{"name": "warped", "shape": list(vol)}],
+        )
+        emit(
+            "ssd_grad",
+            jax.jit(lambda r, f, c: model.ssd_loss_and_grad(r, f, c, tile)).lower(
+                volume, volume, cp
+            ),
+            [
+                {"name": "reference", "shape": list(vol)},
+                {"name": "floating", "shape": list(vol)},
+                {"name": "cp", "shape": list(cp.shape)},
+            ],
+            [
+                {"name": "loss", "shape": []},
+                {"name": "grad", "shape": list(cp.shape)},
+            ],
+        )
+        emit(
+            "ffd_step",
+            jax.jit(lambda r, f, c, s: model.ffd_step(r, f, c, s, tile)).lower(
+                volume, volume, cp, step
+            ),
+            [
+                {"name": "reference", "shape": list(vol)},
+                {"name": "floating", "shape": list(vol)},
+                {"name": "cp", "shape": list(cp.shape)},
+                {"name": "step", "shape": []},
+            ],
+            [
+                {"name": "new_cp", "shape": list(cp.shape)},
+                {"name": "loss", "shape": []},
+            ],
+        )
+
+    manifest = {
+        "format": "hlo-text",
+        "dtype": "f32",
+        "layout_note": "volumes (nz,ny,nx) x-fastest; fields (3,nz,ny,nx) "
+        "components x,y,z; grids (3,gz,gy,gx)",
+        "jax_version": jax.__version__,
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    manifest = lower_all(args.out)
+    n = len(manifest["artifacts"])
+    total = sum(
+        os.path.getsize(os.path.join(args.out, e["file"])) for e in manifest["artifacts"]
+    )
+    print(f"wrote {n} artifacts ({total / 1e6:.1f} MB of HLO text) to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

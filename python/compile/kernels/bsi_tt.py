@@ -1,0 +1,66 @@
+"""Layer-1 Pallas kernel: TT B-spline interpolation (paper §3.2).
+
+The ablation partner of :mod:`.bsi_ttli`: identical tile-per-program
+staging, but the direct 64-term weighted summation (Appendix B's 255
+ops/voxel) instead of the trilinear reformulation. Comparing the two lowered
+modules isolates the arithmetic-reformulation effect exactly as the paper's
+TT vs TTLI comparison does.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import basis_lut
+
+
+def _kernel(lutz_ref, luty_ref, lutx_ref, cp_ref, out_ref):
+    tz = pl.program_id(0)
+    ty = pl.program_id(1)
+    tx = pl.program_id(2)
+    cube = pl.load(
+        cp_ref,
+        (slice(None), pl.dslice(tz, 4), pl.dslice(ty, 4), pl.dslice(tx, 4)),
+    )  # (3, 4, 4, 4)
+
+    acc = jnp.zeros(out_ref.shape, out_ref.dtype)
+    # 64 summands, each: 3 multiplications + 1 accumulation (Appendix B).
+    for n in range(4):
+        wz = lutz_ref[:, n][:, None, None]
+        for m in range(4):
+            wy = luty_ref[:, m][None, :, None]
+            for l in range(4):
+                wx = lutx_ref[:, l][None, None, :]
+                phi = cube[:, n, m, l][:, None, None, None]
+                acc = acc + (wz * wy * wx)[None] * phi
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "vol_dims"))
+def bsi_tt(cp, tile, vol_dims):
+    """TT dense deformation field (same contract as bsi_ttli)."""
+    dz, dy, dx = tile
+    nz, ny, nx = vol_dims
+    tz, ty, tx = nz // dz, ny // dy, nx // dx
+    assert tz * dz == nz and ty * dy == ny and tx * dx == nx
+    assert cp.shape == (3, tz + 3, ty + 3, tx + 3), cp.shape
+
+    lutz = basis_lut(dz, cp.dtype)
+    luty = basis_lut(dy, cp.dtype)
+    lutx = basis_lut(dx, cp.dtype)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(tz, ty, tx),
+        in_specs=[
+            pl.BlockSpec(lutz.shape, lambda i, j, k: (0, 0)),
+            pl.BlockSpec(luty.shape, lambda i, j, k: (0, 0)),
+            pl.BlockSpec(lutx.shape, lambda i, j, k: (0, 0)),
+            pl.BlockSpec(cp.shape, lambda i, j, k: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((3, dz, dy, dx), lambda i, j, k: (0, i, j, k)),
+        out_shape=jax.ShapeDtypeStruct((3, nz, ny, nx), cp.dtype),
+        interpret=True,
+    )(lutz, luty, lutx, cp)

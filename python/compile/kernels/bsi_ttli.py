@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernel: TTLI B-spline interpolation (paper §3.3).
+
+Hardware adaptation (DESIGN.md §2): the paper's CUDA scheme assigns a tile
+per thread and pins the 4×4×4 control-point cube in registers. On TPU the
+analog is a *program instance per tile*: the cube is staged into VMEM once
+per instance (a dynamic 4³ window of the control grid — the overlap between
+neighboring instances is exactly the paper's Eq. A.4 reuse), the B-spline
+lerp-fraction LUTs live in VMEM scratch (the paper's constant-memory LUTs),
+and the 8+1 trilinear interpolations are evaluated as broadcast FMA chains
+over the whole tile at once — the VPU-lane analog of the paper's
+one-thread-many-voxels register tiling.
+
+The kernel is lowered with ``interpret=True``: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md), and the numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import lerp_lut
+
+
+def _lerp(a, b, t):
+    return a + t * (b - a)
+
+
+def _kernel(lutz_ref, luty_ref, lutx_ref, cp_ref, out_ref):
+    """One program instance = one tile of (dz, dy, dx) voxels."""
+    tz = pl.program_id(0)
+    ty = pl.program_id(1)
+    tx = pl.program_id(2)
+
+    # Stage the 4x4x4 control-point cube for this tile into VMEM values.
+    cube = pl.load(
+        cp_ref,
+        (slice(None), pl.dslice(tz, 4), pl.dslice(ty, 4), pl.dslice(tx, 4)),
+    )  # (3, 4, 4, 4)
+
+    # Lerp-fraction LUTs: (delta, 3) columns [g0, g1, s1].
+    gz0 = lutz_ref[:, 0][:, None, None]
+    gz1 = lutz_ref[:, 1][:, None, None]
+    sz = lutz_ref[:, 2][:, None, None]
+    gy0 = luty_ref[:, 0][None, :, None]
+    gy1 = luty_ref[:, 1][None, :, None]
+    sy = luty_ref[:, 2][None, :, None]
+    gx0 = lutx_ref[:, 0][None, None, :]
+    gx1 = lutx_ref[:, 1][None, None, :]
+    sx = lutx_ref[:, 2][None, None, :]
+
+    def subcube(c, b, a, fz, fy, fx):
+        """Trilerp of sub-cube (z=c, y=b, x=a) over the whole tile: 7 lerps.
+
+        cube axes are (comp, z, y, x); fractions broadcast over (dz,dy,dx).
+        Returns (3, dz, dy, dx)."""
+        z0, y0, x0 = 2 * c, 2 * b, 2 * a
+        v = cube[:, z0 : z0 + 2, y0 : y0 + 2, x0 : x0 + 2]
+        # x direction
+        x00 = _lerp(v[:, 0, 0, 0][:, None, None, None], v[:, 0, 0, 1][:, None, None, None], fx)
+        x01 = _lerp(v[:, 0, 1, 0][:, None, None, None], v[:, 0, 1, 1][:, None, None, None], fx)
+        x10 = _lerp(v[:, 1, 0, 0][:, None, None, None], v[:, 1, 0, 1][:, None, None, None], fx)
+        x11 = _lerp(v[:, 1, 1, 0][:, None, None, None], v[:, 1, 1, 1][:, None, None, None], fx)
+        y0v = _lerp(x00, x01, fy)
+        y1v = _lerp(x10, x11, fy)
+        return _lerp(y0v, y1v, fz)
+
+    # The eight independent sub-cube trilerps (ILP on GPU, one fused VPU
+    # expression here).
+    t000 = subcube(0, 0, 0, gz0, gy0, gx0)
+    t001 = subcube(0, 0, 1, gz0, gy0, gx1)
+    t010 = subcube(0, 1, 0, gz0, gy1, gx0)
+    t011 = subcube(0, 1, 1, gz0, gy1, gx1)
+    t100 = subcube(1, 0, 0, gz1, gy0, gx0)
+    t101 = subcube(1, 0, 1, gz1, gy0, gx1)
+    t110 = subcube(1, 1, 0, gz1, gy1, gx0)
+    t111 = subcube(1, 1, 1, gz1, gy1, gx1)
+
+    # 9th trilerp: combine along x, then y, then z with the s fractions.
+    a0 = _lerp(t000, t001, sx)
+    a1 = _lerp(t010, t011, sx)
+    a2 = _lerp(t100, t101, sx)
+    a3 = _lerp(t110, t111, sx)
+    b0 = _lerp(a0, a1, sy)
+    b1 = _lerp(a2, a3, sy)
+    out_ref[...] = _lerp(b0, b1, sz)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "vol_dims"))
+def bsi_ttli(cp, tile, vol_dims):
+    """TTLI dense deformation field.
+
+    cp: (3, tz+3, ty+3, tx+3) float32; tile: (dz, dy, dx);
+    vol_dims: (nz, ny, nx) exact multiples of the tile. Returns
+    (3, nz, ny, nx).
+    """
+    dz, dy, dx = tile
+    nz, ny, nx = vol_dims
+    tz, ty, tx = nz // dz, ny // dy, nx // dx
+    assert tz * dz == nz and ty * dy == ny and tx * dx == nx
+    assert cp.shape == (3, tz + 3, ty + 3, tx + 3), cp.shape
+
+    lutz = lerp_lut(dz, cp.dtype)
+    luty = lerp_lut(dy, cp.dtype)
+    lutx = lerp_lut(dx, cp.dtype)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(tz, ty, tx),
+        in_specs=[
+            # LUTs replicated to every instance (constant memory analog).
+            pl.BlockSpec(lutz.shape, lambda i, j, k: (0, 0)),
+            pl.BlockSpec(luty.shape, lambda i, j, k: (0, 0)),
+            pl.BlockSpec(lutx.shape, lambda i, j, k: (0, 0)),
+            # Whole control grid visible; the kernel stages its 4^3 window
+            # (overlapping windows cannot be expressed as disjoint blocks).
+            pl.BlockSpec(cp.shape, lambda i, j, k: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((3, dz, dy, dx), lambda i, j, k: (0, i, j, k)),
+        out_shape=jax.ShapeDtypeStruct((3, nz, ny, nx), cp.dtype),
+        interpret=True,
+    )(lutz, luty, lutx, cp)

@@ -1,0 +1,139 @@
+"""Pure-jnp oracle for B-spline interpolation (Eq. 1 of the paper).
+
+This is the correctness reference every Pallas kernel is validated against
+(pytest + hypothesis), and the differentiable formulation the L2 gradient
+graph uses (XLA fuses it; the Pallas kernel serves the forward dense-field
+path).
+
+Conventions match the rust side (rust/src/bspline/mod.rs):
+  * control grid `cp` has shape (3, tz+3, ty+3, tx+3) for (tz,ty,tx) tiles,
+    stored with a +1 offset so the support of tile t is cp[:, t:t+4, ...];
+  * the dense field has shape (3, nz, ny, nx), displacements in voxels;
+  * the volume extent must be an exact multiple of the tile size (the rust
+    coordinator pads borders; the AOT artifacts use exact multiples).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def bspline_basis(u):
+    """The four cubic B-spline basis values at parameter u (array ok)."""
+    um = 1.0 - u
+    u2 = u * u
+    u3 = u2 * u
+    return (
+        um * um * um / 6.0,
+        (3.0 * u3 - 6.0 * u2 + 4.0) / 6.0,
+        (-3.0 * u3 + 3.0 * u2 + 3.0 * u + 1.0) / 6.0,
+        u3 / 6.0,
+    )
+
+
+def basis_lut(delta: int, dtype=jnp.float32):
+    """(delta, 4) basis weight LUT for intra-tile offsets a/delta."""
+    u = np.arange(delta, dtype=np.float64) / delta
+    b = np.stack(bspline_basis(u), axis=1)
+    return jnp.asarray(b, dtype=dtype)
+
+
+def lerp_lut(delta: int, dtype=jnp.float32):
+    """(delta, 3) trilinear-reformulation LUT [g0, g1, s1] (paper 3.3).
+
+    g0 = B1/(B0+B1), g1 = B3/(B2+B3), s1 = B2+B3; see
+    rust/src/bspline/coeffs.rs for the derivation.
+    """
+    u = np.arange(delta, dtype=np.float64) / delta
+    b0, b1, b2, b3 = bspline_basis(u)
+    s0 = b0 + b1
+    s1 = b2 + b3
+    out = np.stack([b1 / s0, b3 / s1, s1], axis=1)
+    return jnp.asarray(out, dtype=dtype)
+
+
+def bsi_ref(cp, tile, vol_dims):
+    """Dense deformation field by the direct 64-term weighted sum.
+
+    cp: (3, gz, gy, gx); tile: (dz, dy, dx); vol_dims: (nz, ny, nx), each an
+    exact multiple of the corresponding tile edge. Returns (3, nz, ny, nx).
+    """
+    dz, dy, dx = tile
+    nz, ny, nx = vol_dims
+    tz, ty, tx = nz // dz, ny // dy, nx // dx
+    assert tz * dz == nz and ty * dy == ny and tx * dx == nx, (
+        "oracle requires exact tile multiples"
+    )
+    assert cp.shape[1:] == (tz + 3, ty + 3, tx + 3), (
+        f"grid {cp.shape} does not cover {vol_dims} with tile {tile}"
+    )
+    wz = basis_lut(dz, cp.dtype)  # (dz, 4)
+    wy = basis_lut(dy, cp.dtype)
+    wx = basis_lut(dx, cp.dtype)
+
+    # out[c, Z, a, Y, b, X, g] = sum_{n,m,l} wz[a,n] wy[b,m] wx[g,l]
+    #                            * cp[c, Z+n, Y+m, X+l]
+    out = jnp.zeros((3, tz, dz, ty, dy, tx, dx), dtype=cp.dtype)
+    for n in range(4):
+        for m in range(4):
+            for l in range(4):
+                block = cp[:, n : n + tz, m : m + ty, l : l + tx]
+                term = (
+                    block[:, :, None, :, None, :, None]
+                    * wz[:, n][None, None, :, None, None, None, None]
+                    * wy[:, m][None, None, None, None, :, None, None]
+                    * wx[:, l][None, None, None, None, None, None, :]
+                )
+                out = out + term
+    return out.reshape(3, nz, ny, nx)
+
+
+def warp_ref(vol, field):
+    """Trilinear warp: out(v) = vol(v + field(v)), border-clamped.
+
+    vol: (nz, ny, nx); field: (3, nz, ny, nx) displacements (x, y, z
+    components in field[0], field[1], field[2] matching the rust VectorField
+    layout: [0]=x (fastest axis), [1]=y, [2]=z).
+    """
+    nz, ny, nx = vol.shape
+    zz, yy, xx = jnp.meshgrid(
+        jnp.arange(nz, dtype=vol.dtype),
+        jnp.arange(ny, dtype=vol.dtype),
+        jnp.arange(nx, dtype=vol.dtype),
+        indexing="ij",
+    )
+    px = xx + field[0]
+    py = yy + field[1]
+    pz = zz + field[2]
+
+    x0 = jnp.floor(px)
+    y0 = jnp.floor(py)
+    z0 = jnp.floor(pz)
+    fx = px - x0
+    fy = py - y0
+    fz = pz - z0
+
+    def at(zi, yi, xi):
+        zi = jnp.clip(zi.astype(jnp.int32), 0, nz - 1)
+        yi = jnp.clip(yi.astype(jnp.int32), 0, ny - 1)
+        xi = jnp.clip(xi.astype(jnp.int32), 0, nx - 1)
+        return vol[zi, yi, xi]
+
+    c000 = at(z0, y0, x0)
+    c001 = at(z0, y0, x0 + 1)
+    c010 = at(z0, y0 + 1, x0)
+    c011 = at(z0, y0 + 1, x0 + 1)
+    c100 = at(z0 + 1, y0, x0)
+    c101 = at(z0 + 1, y0, x0 + 1)
+    c110 = at(z0 + 1, y0 + 1, x0)
+    c111 = at(z0 + 1, y0 + 1, x0 + 1)
+
+    def lerp(a, b, t):
+        return a + t * (b - a)
+
+    x00 = lerp(c000, c001, fx)
+    x01 = lerp(c010, c011, fx)
+    x10 = lerp(c100, c101, fx)
+    x11 = lerp(c110, c111, fx)
+    y0v = lerp(x00, x01, fy)
+    y1v = lerp(x10, x11, fy)
+    return lerp(y0v, y1v, fz)

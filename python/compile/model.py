@@ -1,0 +1,72 @@
+"""Layer-2 JAX model: the FFD registration compute graph.
+
+Entry points (all AOT-lowered by :mod:`compile.aot`):
+
+* :func:`bsi_field` — control grid → dense deformation field through the
+  Layer-1 Pallas TTLI kernel (the paper's hot spot);
+* :func:`bsi_field_tt` — same through the TT kernel (ablation);
+* :func:`warp_volume` — trilinear resampling by a dense field;
+* :func:`ssd_loss` — registration similarity;
+* :func:`ffd_step` — one gradient-ascent step on the control grid: loss and
+  analytic gradient via ``jax.grad`` through the differentiable jnp
+  formulation (the Pallas interpret kernel is forward-only; XLA fuses the
+  jnp path into the same arithmetic — DESIGN.md §2).
+
+Everything is shape-static: the AOT recipe emits one artifact per
+(volume, tile) configuration listed in ``aot.STANDARD_CONFIGS``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bsi_tt import bsi_tt
+from .kernels.bsi_ttli import bsi_ttli
+from .kernels.ref import bsi_ref, warp_ref
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "vol_dims"))
+def bsi_field(cp, tile, vol_dims):
+    """Dense deformation field via the Pallas TTLI kernel."""
+    return bsi_ttli(cp, tile, vol_dims)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "vol_dims"))
+def bsi_field_tt(cp, tile, vol_dims):
+    """Dense deformation field via the Pallas TT kernel (ablation)."""
+    return bsi_tt(cp, tile, vol_dims)
+
+
+@jax.jit
+def warp_volume(vol, field):
+    """Trilinear warp of `vol` (nz,ny,nx) by `field` (3,nz,ny,nx)."""
+    return warp_ref(vol, field)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def ssd_loss(reference, floating, cp, tile):
+    """SSD between reference and the floating image warped by the spline."""
+    field = bsi_ref(cp, tile, reference.shape)
+    warped = warp_ref(floating, field)
+    d = reference - warped
+    return jnp.mean(d * d)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def ssd_loss_and_grad(reference, floating, cp, tile):
+    """(loss, dloss/dcp) — the registration gradient pair."""
+    return jax.value_and_grad(ssd_loss, argnums=2)(reference, floating, cp, tile)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def ffd_step(reference, floating, cp, step, tile):
+    """One normalized gradient-descent step on the control grid.
+
+    Returns (new_cp, loss). `step` is the control-point motion in voxels
+    (L∞-normalized gradient, NiftyReg style).
+    """
+    loss, g = ssd_loss_and_grad(reference, floating, cp, tile)
+    norm = jnp.max(jnp.abs(g))
+    scale = jnp.where(norm > 0, step / norm, 0.0)
+    return cp - scale * g, loss

@@ -1,0 +1,81 @@
+"""Layer-1 Pallas kernels vs the pure-jnp oracle, including hypothesis
+sweeps over tile sizes and volume shapes (the L1 validation contract)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.bsi_tt import bsi_tt
+from compile.kernels.bsi_ttli import bsi_ttli
+from compile.kernels.ref import bsi_ref
+
+
+def _random_case(rng, tile, tiles):
+    d = tuple(t * e for t, e in zip(tiles, tile))
+    cp = rng.standard_normal((3, tiles[0] + 3, tiles[1] + 3, tiles[2] + 3)) * 5
+    return jnp.asarray(cp.astype(np.float32)), tile, d
+
+
+def test_ttli_matches_ref_paper_tile_sizes():
+    rng = np.random.default_rng(1)
+    for d in (3, 4, 5, 6, 7):
+        cp, tile, vd = _random_case(rng, (d, d, d), (3, 2, 2))
+        want = np.asarray(bsi_ref(cp, tile, vd))
+        got = np.asarray(bsi_ttli(cp, tile, vd))
+        np.testing.assert_allclose(got, want, atol=5e-5, err_msg=f"tile {d}")
+
+
+def test_tt_matches_ref_paper_tile_sizes():
+    rng = np.random.default_rng(2)
+    for d in (3, 5, 7):
+        cp, tile, vd = _random_case(rng, (d, d, d), (2, 2, 3))
+        want = np.asarray(bsi_ref(cp, tile, vd))
+        got = np.asarray(bsi_tt(cp, tile, vd))
+        np.testing.assert_allclose(got, want, atol=5e-5)
+
+
+def test_ttli_constant_grid_is_exact():
+    cp = jnp.full((3, 6, 6, 6), 4.25, jnp.float32)
+    out = np.asarray(bsi_ttli(cp, (4, 4, 4), (12, 12, 12)))
+    # Lerp of equal endpoints is exact in floating point.
+    assert (out == 4.25).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    dz=st.integers(2, 6),
+    dy=st.integers(2, 6),
+    dx=st.integers(2, 6),
+    tz=st.integers(1, 3),
+    ty=st.integers(1, 3),
+    tx=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ttli_matches_ref_hypothesis(dz, dy, dx, tz, ty, tx, seed):
+    rng = np.random.default_rng(seed)
+    cp, tile, vd = _random_case(rng, (dz, dy, dx), (tz, ty, tx))
+    want = np.asarray(bsi_ref(cp, tile, vd))
+    got = np.asarray(bsi_ttli(cp, tile, vd))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    d=st.integers(2, 7),
+    tiles=st.tuples(st.integers(1, 3), st.integers(1, 3), st.integers(1, 3)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tt_matches_ttli_hypothesis(d, tiles, seed):
+    # The two kernels compute the same field by different arithmetic.
+    rng = np.random.default_rng(seed)
+    cp, tile, vd = _random_case(rng, (d, d, d), tiles)
+    a = np.asarray(bsi_tt(cp, tile, vd))
+    b = np.asarray(bsi_ttli(cp, tile, vd))
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_kernels_preserve_dtype_and_shape():
+    cp = jnp.zeros((3, 5, 5, 5), jnp.float32)
+    out = bsi_ttli(cp, (3, 3, 3), (6, 6, 6))
+    assert out.shape == (3, 6, 6, 6)
+    assert out.dtype == jnp.float32

@@ -1,0 +1,79 @@
+"""Layer-2 model graph: loss/gradient correctness and descent behavior."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+
+
+def _blob(shape, center, sigma2=30.0):
+    zz, yy, xx = np.meshgrid(*[np.arange(s, dtype=np.float32) for s in shape], indexing="ij")
+    d2 = (xx - center[0]) ** 2 + (yy - center[1]) ** 2 + (zz - center[2]) ** 2
+    return jnp.asarray(np.exp(-d2 / sigma2))
+
+
+def test_ssd_zero_for_identical_images_and_zero_grid():
+    vol = _blob((20, 20, 20), (10, 10, 10))
+    cp = jnp.zeros((3, 7, 7, 7), jnp.float32)
+    loss = model.ssd_loss(vol, vol, cp, (5, 5, 5))
+    assert float(loss) < 1e-10
+
+
+def test_ssd_grad_matches_finite_difference():
+    ref = _blob((20, 20, 20), (10, 10, 10))
+    flo = _blob((20, 20, 20), (11.5, 10, 10))
+    cp = jnp.zeros((3, 7, 7, 7), jnp.float32)
+    tile = (5, 5, 5)
+    loss, g = model.ssd_loss_and_grad(ref, flo, cp, tile)
+    assert float(loss) > 0
+    # Central difference on a few central control points. h must be large
+    # enough that the f32 loss difference resolves (the loss is O(1e-3)).
+    h = 0.5
+    # Only x-displacement CPs: the blob shift is along x, so y/z gradients
+    # sit at f32 noise level where FD cannot resolve them.
+    for idx in [(0, 3, 3, 3), (0, 3, 4, 3), (0, 3, 3, 4)]:
+        cpp = cp.at[idx].add(h)
+        cpm = cp.at[idx].add(-h)
+        fd = (model.ssd_loss(ref, flo, cpp, tile) - model.ssd_loss(ref, flo, cpm, tile)) / (
+            2 * h
+        )
+        np.testing.assert_allclose(float(g[idx]), float(fd), rtol=0.2, atol=2e-7)
+
+
+def test_ffd_step_decreases_loss():
+    ref = _blob((20, 20, 20), (10, 10, 10))
+    flo = _blob((20, 20, 20), (12, 10, 10))
+    cp = jnp.zeros((3, 7, 7, 7), jnp.float32)
+    tile = (5, 5, 5)
+    losses = [float(model.ssd_loss(ref, flo, cp, tile))]
+    for _ in range(8):
+        cp, loss = model.ffd_step(ref, flo, cp, jnp.float32(0.5), tile)
+        losses.append(float(loss))
+    # ffd_step returns the pre-step loss; evaluate final state explicitly.
+    final = float(model.ssd_loss(ref, flo, cp, tile))
+    assert final < 0.5 * losses[0], f"{losses[0]} -> {final}"
+
+
+def test_ffd_step_fixed_point_on_identical_images():
+    vol = _blob((20, 20, 20), (10, 10, 10))
+    cp = jnp.zeros((3, 7, 7, 7), jnp.float32)
+    new_cp, loss = model.ffd_step(vol, vol, cp, jnp.float32(1.0), (5, 5, 5))
+    assert float(loss) < 1e-10
+    np.testing.assert_allclose(np.asarray(new_cp), 0.0, atol=1e-6)
+
+
+def test_bsi_field_pallas_equals_jnp_path():
+    rng = np.random.default_rng(3)
+    cp = jnp.asarray(rng.standard_normal((3, 7, 7, 7)).astype(np.float32))
+    from compile.kernels.ref import bsi_ref
+
+    a = np.asarray(model.bsi_field(cp, (5, 5, 5), (20, 20, 20)))
+    b = np.asarray(bsi_ref(cp, (5, 5, 5), (20, 20, 20)))
+    np.testing.assert_allclose(a, b, atol=5e-5)
+
+
+def test_warp_volume_jit_identity():
+    vol = _blob((12, 12, 12), (6, 6, 6))
+    out = model.warp_volume(vol, jnp.zeros((3, 12, 12, 12), jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(vol), atol=1e-6)

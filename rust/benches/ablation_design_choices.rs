@@ -1,0 +1,96 @@
+//! Ablation benches for the design choices DESIGN.md §5 calls out:
+//!
+//!  A. Block shape (Appendix A, Eq. A.4): the paper picks 4×4×4 tile blocks
+//!     because a cube maximizes overlap. Sweep l×m×n shapes at equal tile
+//!     count and show the cube minimizes modeled transfers.
+//!  B. LUT vs on-the-fly basis weights (§3.4): compare TTLI with
+//!     precomputed LerpLUTs against scattered evaluation computing weights
+//!     per point, on the same lattice.
+//!  C. Register tiling (TT) vs staging-buffer re-reads (TV-tiling) at
+//!     several tile sizes — the measured Step-2 effect of Figure 3.
+//!
+//! Run: cargo bench --bench ablation_design_choices
+
+use ffdreg::bspline::{scattered, ControlGrid, Method};
+use ffdreg::memmodel::transfers_blocks_of_tiles;
+use ffdreg::util::bench::Report;
+use ffdreg::util::timer;
+use ffdreg::volume::Dims;
+
+fn main() {
+    // A. Block-shape ablation (modeled transfers per voxel, 5³ tiles).
+    let mut shape = Report::new(
+        "ablation_block_shape",
+        "Eq. A.4 transfers per Mvoxel for 64-tile blocks of different shapes",
+    );
+    let t = 125.0;
+    for (l, m, n) in [
+        (64.0, 1.0, 1.0),
+        (16.0, 4.0, 1.0),
+        (8.0, 8.0, 1.0),
+        (16.0, 2.0, 2.0),
+        (8.0, 4.0, 2.0),
+        (4.0, 4.0, 4.0),
+    ] {
+        shape
+            .row(&format!("{l}x{m}x{n}"))
+            .cell("transfers/Mvox", transfers_blocks_of_tiles(1e6, t, l, m, n));
+    }
+    shape.note("paper §3.4: the cube 'maximizes overlap and consequently minimizes memory transfers'");
+    shape.finish();
+
+    // B. LUT vs on-the-fly weights.
+    let vd = Dims::new(80, 80, 80);
+    let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
+    grid.randomize(1, 5.0);
+    let imp = Method::Ttli.instance();
+    let t_lut = timer::time_adaptive(1, 6, 0.3, || {
+        std::hint::black_box(imp.interpolate(&grid, vd));
+    });
+    // Same lattice through the scattered path (weights per point).
+    let points: Vec<[f32; 3]> = {
+        let mut v = Vec::with_capacity(vd.count());
+        for z in 0..vd.nz {
+            for y in 0..vd.ny {
+                for x in 0..vd.nx {
+                    v.push([x as f32, y as f32, z as f32]);
+                }
+            }
+        }
+        v
+    };
+    let t_fly = timer::time_adaptive(1, 4, 0.3, || {
+        std::hint::black_box(scattered::eval_batch(&grid, &points));
+    });
+    let mut lut = Report::new("ablation_lut", "LUT weights vs on-the-fly weights (same lattice)");
+    lut.row("TTLI + LerpLUT (aligned)")
+        .cell("ns/voxel", t_lut.min() * 1e9 / vd.count() as f64);
+    lut.row("scattered, weights on the fly")
+        .cell("ns/voxel", t_fly.min() * 1e9 / vd.count() as f64);
+    lut.note("paper §3.4 stores the coefficients in LUTs because the grid is aligned & uniform");
+    lut.finish();
+
+    // C. Register tiling vs staging re-reads across tile sizes.
+    let mut reg = Report::new(
+        "ablation_register_tiling",
+        "TT (register tiling) vs TV-tiling (staging re-reads) measured",
+    );
+    for &ts in &[3usize, 5, 7] {
+        let mut g = ControlGrid::zeros(vd, [ts, ts, ts]);
+        g.randomize(2, 5.0);
+        let tt = Method::Tt.instance();
+        let tvt = Method::TvTiling.instance();
+        let a = timer::time_adaptive(1, 5, 0.2, || {
+            std::hint::black_box(tt.interpolate(&g, vd));
+        });
+        let b = timer::time_adaptive(1, 5, 0.2, || {
+            std::hint::black_box(tvt.interpolate(&g, vd));
+        });
+        reg.row(&format!("tile {ts}³"))
+            .cell("TT ns/vox", a.min() * 1e9 / vd.count() as f64)
+            .cell("TV-tiling ns/vox", b.min() * 1e9 / vd.count() as f64)
+            .cell("ratio", b.min() / a.min());
+    }
+    reg.note("paper §5.2.1: 'TT does not provide significant speedup over TV-tiling' (compute-bound)");
+    reg.finish();
+}

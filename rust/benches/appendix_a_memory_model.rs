@@ -1,0 +1,49 @@
+//! Appendix A reproduction: external-memory transfer counts for the four
+//! loading schemes, per tile size, plus the §3.2.1 headline ratios
+//! (TT needs ≈12× fewer transfers than TV and ≈187× fewer than TH at 5³).
+//!
+//! Run: cargo bench --bench appendix_a_memory_model
+
+use ffdreg::memmodel::{
+    headline_ratios, transfers_block_per_tile, transfers_blocks_of_tiles, transfers_no_tiles,
+    transfers_texture,
+};
+use ffdreg::util::bench::Report;
+
+fn main() {
+    let m = 10.7e6; // Porcine1-scale voxel count (Table 2)
+
+    let mut rep = Report::new(
+        "appendix_a_transfers",
+        "L-sized memory transfers per scheme (10.7 Mvoxel volume)",
+    );
+    for &t in &[3usize, 4, 5, 6, 7] {
+        let tv = t as f64;
+        let tcount = tv * tv * tv;
+        rep.row(&format!("tile {t}³"))
+            .cell("(a) no tiles", transfers_no_tiles(m))
+            .cell("(b) texture HW", transfers_texture(m))
+            .cell("(c) block/tile", transfers_block_per_tile(m, tcount))
+            .cell("(d) 4³ tile blocks", transfers_blocks_of_tiles(m, tcount, 4.0, 4.0, 4.0));
+    }
+    rep.finish();
+
+    let mut ratios = Report::new(
+        "appendix_a_ratios",
+        "transfer-reduction ratios of TT (blocks of tiles) — paper §3.2.1",
+    );
+    for &t in &[3usize, 4, 5, 6, 7] {
+        let r = headline_ratios(t as f64, 4.0);
+        ratios
+            .row(&format!("tile {t}³"))
+            .cell("TV / TT", r.tv_over_tt)
+            .cell("TH / TT", r.th_over_tt);
+    }
+    ratios.note("paper (5³): TT ≈12x fewer than TV, ≈187x fewer than TH");
+    ratios.finish();
+
+    let r5 = headline_ratios(5.0, 4.0);
+    assert!((r5.tv_over_tt - 12.0).abs() < 0.5);
+    assert!((r5.th_over_tt - 187.0).abs() < 2.0);
+    println!("\nAppendix A headline ratios reproduced exactly");
+}

@@ -1,0 +1,90 @@
+//! Coordinator throughput/latency under load (our serving-layer extension,
+//! not a paper figure): sweep worker counts and batch caps, report
+//! jobs/s, Mvox/s, and p50/p99 latency. Demonstrates that the coordinator
+//! adds negligible overhead over the raw kernel (DESIGN.md §7 target:
+//! <5% at ≥64³ jobs).
+//!
+//! Run: cargo bench --bench coordinator_throughput
+
+use std::sync::Arc;
+
+use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::coordinator::{
+    Engine, InterpolateJob, InterpolationService, Scheduler, SchedulerConfig,
+};
+use ffdreg::util::bench::{full_scale, Report};
+use ffdreg::util::timer;
+use ffdreg::volume::Dims;
+
+fn main() {
+    let edge = if full_scale() { 96 } else { 48 };
+    let vd = Dims::new(edge, edge, edge);
+    let jobs = if full_scale() { 64 } else { 24 };
+
+    // Raw kernel baseline (no coordinator).
+    let mut grid0 = ControlGrid::zeros(vd, [5, 5, 5]);
+    grid0.randomize(0, 5.0);
+    let imp = Method::Ttli.instance();
+    let raw = timer::time_adaptive(1, 6, 0.3, || {
+        std::hint::black_box(imp.interpolate(&grid0, vd));
+    });
+    let raw_per_job = raw.min();
+
+    let mut rep = Report::new(
+        "coordinator_throughput",
+        "scheduler overhead and throughput vs workers / batch cap",
+    );
+    rep.row("raw kernel (no coordinator)")
+        .cell("jobs/s", 1.0 / raw_per_job)
+        .cell("per-job ms", raw_per_job * 1e3)
+        .cell("overhead %", 0.0);
+
+    for (workers, max_batch) in [(1usize, 1usize), (1, 8), (2, 1), (2, 8)] {
+        let sched = Scheduler::start(
+            InterpolationService::new(None),
+            SchedulerConfig { workers, queue_capacity: 256, max_batch },
+        );
+        let grids: Vec<Arc<ControlGrid>> = (0..jobs)
+            .map(|i| {
+                let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
+                g.randomize(i as u64, 5.0);
+                Arc::new(g)
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let receivers: Vec<_> = grids
+            .iter()
+            .enumerate()
+            .map(|(i, g)| {
+                sched
+                    .submit(InterpolateJob {
+                        id: i as u64,
+                        grid: g.clone(),
+                        vol_dims: vd,
+                        engine: Engine::Cpu(Method::Ttli),
+                    })
+                    .expect("queue sized for the burst")
+            })
+            .collect();
+        for rx in receivers {
+            rx.recv().unwrap().result.unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let per_job = wall / jobs as f64;
+        // Single-worker overhead vs the raw kernel (multi-worker rows show
+        // scaling, not overhead).
+        let overhead = if workers == 1 {
+            (per_job / raw_per_job - 1.0) * 100.0
+        } else {
+            f64::NAN
+        };
+        rep.row(&format!("{workers}w batch≤{max_batch}"))
+            .cell("jobs/s", jobs as f64 / wall)
+            .cell("per-job ms", per_job * 1e3)
+            .cell("overhead %", overhead)
+            .cell("p99 exec s", sched.metrics.exec_percentile(99.0));
+        sched.shutdown();
+    }
+    rep.note("target: coordinator overhead <5% of kernel time at this job size");
+    rep.finish();
+}

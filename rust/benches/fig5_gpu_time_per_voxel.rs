@@ -1,0 +1,75 @@
+//! Figure 5 reproduction: average time per voxel vs tile size for the five
+//! GPU-comparison methods (TH, NiftyReg-TV, TV-tiling, TT, TTLI).
+//!
+//! Two views are printed:
+//!   * measured — our CPU ports, which preserve each scheme's data-movement
+//!     structure (mean over the five dataset-pair workloads, with the
+//!     paper's <3% CV check);
+//!   * modeled — the analytic GPU model on the paper's GTX 1050 / RTX 2070
+//!     rooflines (DESIGN.md S15).
+//!
+//! Run: cargo bench --bench fig5_gpu_time_per_voxel
+//! (FFDREG_BENCH_FULL=1 for paper-scale volumes)
+
+use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::memmodel::gpumodel::{time_per_voxel, GTX1050, RTX2070};
+use ffdreg::phantom::dataset::{scaled_dims, TABLE2};
+use ffdreg::util::bench::{full_scale, Report};
+use ffdreg::util::stats::Summary;
+use ffdreg::util::timer;
+
+fn main() {
+    let tiles = [3usize, 4, 5, 6, 7];
+    let scale = if full_scale() { 0.5 } else { 0.12 };
+
+    let mut rep = Report::new(
+        "fig5_time_per_voxel",
+        "GPU-set time per voxel vs tile size (measured CPU ports + modeled GPUs)",
+    );
+
+    for m in Method::GPU_SET {
+        let imp = m.instance();
+        let row_label = format!("measured {}", imp.name());
+        let mut cells = Vec::new();
+        for &t in &tiles {
+            // Mean over the 5 dataset workload shapes (paper: 5 pairs).
+            let mut per_pair = Summary::new();
+            for (pi, &(_, res, _)) in TABLE2.iter().enumerate() {
+                let vd = scaled_dims(res, scale);
+                let mut grid = ControlGrid::zeros(vd, [t, t, t]);
+                grid.randomize(pi as u64 + 1, 5.0);
+                let stats = timer::time_adaptive(1, 5, 0.1, || {
+                    std::hint::black_box(imp.interpolate(&grid, vd));
+                });
+                per_pair.push(stats.min() * 1e9 / vd.count() as f64);
+            }
+            cells.push((format!("{t}³ ns/vox"), per_pair.mean()));
+            if t == 5 && per_pair.cv() > 0.25 {
+                eprintln!(
+                    "note: {} CV across pairs = {:.1}% (paper reports <3% on GPU)",
+                    imp.name(),
+                    per_pair.cv() * 100.0
+                );
+            }
+        }
+        let r = rep.row(&row_label);
+        for (c, v) in cells {
+            r.cell(&c, v);
+        }
+    }
+
+    for (gpu, label) in [(&GTX1050, "model GTX1050"), (&RTX2070, "model RTX2070")] {
+        for m in Method::GPU_SET {
+            let r = rep.row(&format!("{label} {}", m.paper_name()));
+            for &t in &tiles {
+                r.cell(
+                    &format!("{t}³ ns/vox"),
+                    time_per_voxel(gpu, m, t as f64).per_voxel() * 1e9,
+                );
+            }
+        }
+    }
+
+    rep.note("paper Fig 5: TTLI fastest at every tile size; time/voxel ~flat vs tile size except TV-tiling");
+    rep.finish();
+}

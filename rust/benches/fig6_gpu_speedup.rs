@@ -1,0 +1,58 @@
+//! Figure 6 reproduction: speedup over NiftyReg (TV) vs tile size, for the
+//! measured CPU ports and the modeled GPUs. Paper anchors: TTLI 6.5× avg
+//! (up to 7×) on GPU; TTLI/TT = 1.77× (GTX 1050) and 1.5× (RTX 2070);
+//! TT ≈ TV-tiling.
+//!
+//! Run: cargo bench --bench fig6_gpu_speedup
+
+use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::memmodel::gpumodel::{speedup_over_tv, GTX1050, RTX2070};
+use ffdreg::util::bench::{full_scale, Report};
+use ffdreg::util::timer;
+use ffdreg::volume::Dims;
+
+fn main() {
+    let tiles = [3usize, 4, 5, 6, 7];
+    let edge = if full_scale() { 160 } else { 80 };
+    let vd = Dims::new(edge, edge, edge);
+
+    let mut rep = Report::new("fig6_speedup", "speedup over NiftyReg (TV) vs tile size");
+
+    // Measured CPU ports.
+    let mut tv_ns = vec![0.0f64; tiles.len()];
+    for (ti, &t) in tiles.iter().enumerate() {
+        let mut grid = ControlGrid::zeros(vd, [t, t, t]);
+        grid.randomize(1, 5.0);
+        let imp = Method::Tv.instance();
+        let s = timer::time_adaptive(1, 5, 0.2, || {
+            std::hint::black_box(imp.interpolate(&grid, vd));
+        });
+        tv_ns[ti] = s.min() * 1e9 / vd.count() as f64;
+    }
+    for m in [Method::Texture, Method::TvTiling, Method::Tt, Method::Ttli] {
+        let imp = m.instance();
+        let r = rep.row(&format!("measured {}", imp.name()));
+        for (ti, &t) in tiles.iter().enumerate() {
+            let mut grid = ControlGrid::zeros(vd, [t, t, t]);
+            grid.randomize(1, 5.0);
+            let s = timer::time_adaptive(1, 5, 0.2, || {
+                std::hint::black_box(imp.interpolate(&grid, vd));
+            });
+            let ns = s.min() * 1e9 / vd.count() as f64;
+            r.cell(&format!("{t}³"), tv_ns[ti] / ns);
+        }
+    }
+
+    // Modeled GPUs.
+    for (gpu, label) in [(&GTX1050, "model GTX1050"), (&RTX2070, "model RTX2070")] {
+        for m in [Method::Texture, Method::TvTiling, Method::Tt, Method::Ttli] {
+            let r = rep.row(&format!("{label} {}", m.paper_name()));
+            for &t in &tiles {
+                r.cell(&format!("{t}³"), speedup_over_tv(gpu, m, t as f64));
+            }
+        }
+    }
+
+    rep.note("paper Fig 6: TTLI ≈6.5x avg (up to 7x); TTLI/TT ≈1.77x (1050) / 1.5x (2070); TT ≈ TV-tiling");
+    rep.finish();
+}

@@ -1,0 +1,55 @@
+//! Figure 7 reproduction: CPU BSI — time per voxel (a) and speedup over the
+//! NiftyReg CPU baseline (b) for VT and VV across tile sizes. Paper
+//! anchors: VT 4.12× avg (≈5× at the largest tiles, rising with tile size
+//! as SIMD slots fill); VV 3.30× avg, the best choice only at 3³.
+//!
+//! Run: cargo bench --bench fig7_cpu_bsi
+
+use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::util::bench::{full_scale, Report};
+use ffdreg::util::timer;
+use ffdreg::volume::Dims;
+
+fn main() {
+    let tiles = [3usize, 4, 5, 6, 7];
+    let edge = if full_scale() { 160 } else { 96 };
+    let vd = Dims::new(edge, edge, edge);
+
+    let mut time_rep = Report::new("fig7a_cpu_time_per_voxel", "CPU time per voxel vs tile size");
+    let mut speed_rep = Report::new("fig7b_cpu_speedup", "CPU speedup over NiftyReg (TV) baseline");
+
+    let mut ns_table: Vec<Vec<f64>> = Vec::new();
+    let methods = [Method::Tv, Method::Vt, Method::Vv];
+    for &m in &methods {
+        let imp = m.instance();
+        let mut per_tile = Vec::new();
+        for &t in &tiles {
+            let mut grid = ControlGrid::zeros(vd, [t, t, t]);
+            grid.randomize(3, 5.0);
+            let s = timer::time_adaptive(1, 5, 0.2, || {
+                std::hint::black_box(imp.interpolate(&grid, vd));
+            });
+            per_tile.push(s.min() * 1e9 / vd.count() as f64);
+        }
+        ns_table.push(per_tile);
+    }
+
+    for (mi, &m) in methods.iter().enumerate() {
+        let name = if m == Method::Tv { "NiftyReg (TV) CPU".to_string() } else { m.paper_name().to_string() };
+        let r = time_rep.row(&name);
+        for (ti, &t) in tiles.iter().enumerate() {
+            r.cell(&format!("{t}³ ns/vox"), ns_table[mi][ti]);
+        }
+    }
+    for (mi, &m) in methods.iter().enumerate().skip(1) {
+        let r = speed_rep.row(m.paper_name());
+        for (ti, &t) in tiles.iter().enumerate() {
+            r.cell(&format!("{t}³"), ns_table[0][ti] / ns_table[mi][ti]);
+        }
+    }
+
+    time_rep.note("paper Fig 7a: time/voxel falls with tile size for every CPU method");
+    time_rep.finish();
+    speed_rep.note("paper Fig 7b: VT 4.12x avg (≈5x at 7³, rising with tile size); VV 3.30x avg, best only at 3³");
+    speed_rep.finish();
+}

@@ -1,0 +1,70 @@
+//! Figures 8 & 9 reproduction: total registration time and speedup with the
+//! proposed (TTLI) vs original NiftyReg (TV) interpolation, per dataset
+//! pair, plus the BSI share of total time. Paper anchors: 1.30× average
+//! speedup on the GTX 1050 platform (BSI = 27% of registration), 1.14× on
+//! the RTX 2070 platform (BSI = 15%) — Amdahl's law couples the two.
+//!
+//! Our testbed measures the CPU-port pipeline; the Amdahl projection for
+//! the two GPU platforms is derived from the measured BSI fraction and the
+//! modeled GPU kernel speedups.
+//!
+//! Run: cargo bench --bench fig8_fig9_registration
+
+use ffdreg::bspline::Method;
+use ffdreg::ffd::{multilevel::register_with_method, FfdConfig};
+use ffdreg::memmodel::gpumodel::{speedup_over_tv, GTX1050, RTX2070};
+use ffdreg::phantom::dataset::generate_dataset;
+use ffdreg::util::bench::{full_scale, Report};
+
+fn main() {
+    let scale = if full_scale() { 0.25 } else { 0.10 };
+    let iters = if full_scale() { 30 } else { 12 };
+    let pairs = generate_dataset(scale, 7);
+    let cfg = FfdConfig { levels: 2, max_iter: iters, ..Default::default() };
+
+    let mut rep = Report::new(
+        "fig8_fig9_registration",
+        "registration time + speedup: FFD(TV) vs FFD(TTLI)",
+    );
+
+    let mut sum_speedup = 0.0;
+    let mut sum_bsi_frac = 0.0;
+    for pair in &pairs {
+        let aff = ffdreg::affine::register(&pair.intra, &pair.pre, &Default::default());
+        let tv = register_with_method(&pair.intra, &aff.warped, Method::Tv, &cfg);
+        let ttli = register_with_method(&pair.intra, &aff.warped, Method::Ttli, &cfg);
+        let speedup = tv.timing.total_s / ttli.timing.total_s;
+        sum_speedup += speedup;
+        sum_bsi_frac += tv.timing.bsi_fraction();
+        rep.row(&pair.name)
+            .cell("TV s", tv.timing.total_s)
+            .cell("TTLI s", ttli.timing.total_s)
+            .cell("speedup", speedup)
+            .cell("BSI% (TV)", 100.0 * tv.timing.bsi_fraction())
+            .cell("BSI% (TTLI)", 100.0 * ttli.timing.bsi_fraction());
+    }
+    let n = pairs.len() as f64;
+    let measured_frac = sum_bsi_frac / n;
+    rep.row("Average").cell("speedup", sum_speedup / n).cell(
+        "BSI% (TV)",
+        100.0 * measured_frac,
+    );
+
+    // Amdahl projection onto the paper's platforms: with BSI fraction f of
+    // total time and kernel speedup s, registration speedup = 1/(1-f+f/s).
+    for (gpu, name, paper_frac, paper_speedup) in [
+        (&GTX1050, "projected GTX1050", 0.27, 1.30),
+        (&RTX2070, "projected RTX2070", 0.15, 1.14),
+    ] {
+        let s = speedup_over_tv(gpu, Method::Ttli, 5.0);
+        let amdahl = |f: f64| 1.0 / (1.0 - f + f / s);
+        rep.row(name)
+            .cell("kernel speedup", s)
+            .cell("reg speedup @paper BSI%", amdahl(paper_frac))
+            .cell("reg speedup @measured BSI%", amdahl(measured_frac))
+            .cell("paper reg speedup", paper_speedup);
+    }
+
+    rep.note("paper Fig 8: 1.30x avg (GTX1050, BSI 27% of total); Fig 9: 1.14x (RTX2070, BSI 15%)");
+    rep.finish();
+}

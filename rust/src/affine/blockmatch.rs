@@ -1,0 +1,180 @@
+//! Block matching (Ourselin's scheme, as in NiftyReg's reg_aladin): select
+//! high-variance reference blocks, exhaustively search the floating image
+//! around each for the best NCC match, emit point correspondences.
+
+use super::AffineConfig;
+use crate::volume::Volume;
+
+/// One correspondence: reference block center → matched floating position.
+#[derive(Clone, Copy, Debug)]
+pub struct Match {
+    pub from: [f32; 3],
+    pub to: [f32; 3],
+    pub score: f32,
+}
+
+/// Mean/variance of a block.
+fn block_stats(vol: &Volume, x0: usize, y0: usize, z0: usize, b: usize) -> (f32, f32) {
+    let mut s = 0.0f64;
+    let mut s2 = 0.0f64;
+    let n = (b * b * b) as f64;
+    for z in z0..z0 + b {
+        for y in y0..y0 + b {
+            for x in x0..x0 + b {
+                let v = vol.at(x, y, z) as f64;
+                s += v;
+                s2 += v * v;
+            }
+        }
+    }
+    let mean = s / n;
+    ((mean) as f32, ((s2 / n - mean * mean).max(0.0)) as f32)
+}
+
+/// NCC between a reference block and a floating block at integer offset.
+fn block_ncc(
+    reference: &Volume,
+    floating: &Volume,
+    rx: usize,
+    ry: usize,
+    rz: usize,
+    fx: isize,
+    fy: isize,
+    fz: isize,
+    b: usize,
+) -> f32 {
+    let n = (b * b * b) as f64;
+    let (mut sr, mut sf, mut srr, mut sff, mut srf) = (0.0f64, 0.0, 0.0, 0.0, 0.0);
+    for dz in 0..b as isize {
+        for dy in 0..b as isize {
+            for dx in 0..b as isize {
+                let r = reference.at(rx + dx as usize, ry + dy as usize, rz + dz as usize) as f64;
+                let f = floating.at_clamped(fx + dx, fy + dy, fz + dz) as f64;
+                sr += r;
+                sf += f;
+                srr += r * r;
+                sff += f * f;
+                srf += r * f;
+            }
+        }
+    }
+    let vr = srr / n - (sr / n) * (sr / n);
+    let vf = sff / n - (sf / n) * (sf / n);
+    if vr <= 1e-12 || vf <= 1e-12 {
+        return -1.0;
+    }
+    ((srf / n - (sr / n) * (sf / n)) / (vr * vf).sqrt()) as f32
+}
+
+/// Find correspondences between `reference` and `floating`.
+pub fn find_matches(reference: &Volume, floating: &Volume, cfg: &AffineConfig) -> Vec<Match> {
+    let b = cfg.block_size;
+    let dims = reference.dims;
+    if dims.nx < 2 * b || dims.ny < 2 * b || dims.nz < 2 * b {
+        return vec![];
+    }
+    // Pass 1: block variances.
+    let mut blocks: Vec<(usize, usize, usize, f32)> = Vec::new();
+    for z0 in (0..dims.nz - b).step_by(b) {
+        for y0 in (0..dims.ny - b).step_by(b) {
+            for x0 in (0..dims.nx - b).step_by(b) {
+                let (_, var) = block_stats(reference, x0, y0, z0, b);
+                blocks.push((x0, y0, z0, var));
+            }
+        }
+    }
+    // Keep the top `block_fraction` by variance.
+    blocks.sort_by(|a, pb| pb.3.partial_cmp(&a.3).unwrap());
+    let keep = ((blocks.len() as f64 * cfg.block_fraction) as usize).max(1);
+    blocks.truncate(keep);
+
+    // Pass 2: exhaustive NCC search (parallelized over blocks).
+    let r = cfg.search_radius as isize;
+    let matches: Vec<Option<Match>> = crate::util::threadpool::par_map(blocks.len(), |bi| {
+        let (x0, y0, z0, _) = blocks[bi];
+        let mut best = (-2.0f32, [0isize; 3]);
+        for dz in -r..=r {
+            for dy in -r..=r {
+                for dx in -r..=r {
+                    let s = block_ncc(
+                        reference,
+                        floating,
+                        x0,
+                        y0,
+                        z0,
+                        x0 as isize + dx,
+                        y0 as isize + dy,
+                        z0 as isize + dz,
+                        b,
+                    );
+                    if s > best.0 {
+                        best = (s, [dx, dy, dz]);
+                    }
+                }
+            }
+        }
+        if best.0 <= 0.0 {
+            return None;
+        }
+        let half = b as f32 / 2.0;
+        let c = [x0 as f32 + half, y0 as f32 + half, z0 as f32 + half];
+        Some(Match {
+            from: c,
+            to: [c[0] + best.1[0] as f32, c[1] + best.1[1] as f32, c[2] + best.1[2] as f32],
+            score: best.0,
+        })
+    });
+    matches.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::Dims;
+
+    fn textured(dims: Dims, shift: [isize; 3]) -> Volume {
+        use crate::util::rng::Pcg32;
+        // Smooth deterministic texture with enough variance everywhere.
+        let mut base = vec![0.0f32; dims.count()];
+        let mut rng = Pcg32::seeded(1234);
+        for v in &mut base {
+            *v = rng.uniform();
+        }
+        let noise = Volume { dims, spacing: [1.0; 3], data: base };
+        let smooth = crate::volume::pyramid::smooth(&noise);
+        Volume::from_fn(dims, [1.0; 3], |x, y, z| {
+            smooth.at_clamped(x as isize + shift[0], y as isize + shift[1], z as isize + shift[2])
+        })
+    }
+
+    #[test]
+    fn matches_shifted_texture() {
+        let dims = Dims::new(24, 24, 24);
+        let reference = textured(dims, [0, 0, 0]);
+        let floating = textured(dims, [2, 0, -1]); // floating(v) = tex(v+2,·,v−1)
+        let cfg = AffineConfig::default();
+        let ms = find_matches(&reference, &floating, &cfg);
+        assert!(!ms.is_empty());
+        // Median displacement should be close to (−2, 0, +1): reference
+        // block at p matches floating content at p − shift.
+        let mut dxs: Vec<f32> = ms.iter().map(|m| m.to[0] - m.from[0]).collect();
+        dxs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = dxs[dxs.len() / 2];
+        assert!((med + 2.0).abs() <= 1.0, "median dx {med}");
+    }
+
+    #[test]
+    fn flat_images_produce_no_matches() {
+        let dims = Dims::new(20, 20, 20);
+        let flat = Volume::zeros(dims, [1.0; 3]);
+        let ms = find_matches(&flat, &flat, &AffineConfig::default());
+        assert!(ms.is_empty());
+    }
+
+    #[test]
+    fn too_small_volume_is_empty_not_panic() {
+        let dims = Dims::new(6, 6, 6);
+        let v = Volume::zeros(dims, [1.0; 3]);
+        assert!(find_matches(&v, &v, &AffineConfig::default()).is_empty());
+    }
+}

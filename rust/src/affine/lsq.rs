@@ -1,0 +1,157 @@
+//! Trimmed least-squares affine estimation from block-matching
+//! correspondences (the LTS step of reg_aladin: solve, rank residuals, keep
+//! the best fraction, re-solve).
+
+use super::blockmatch::Match;
+use super::transform::Affine;
+
+/// Solve the 4×4 symmetric system `A·x = b` by Gaussian elimination with
+/// partial pivoting (small fixed-size system; no external linear algebra).
+fn solve4(a: &mut [[f64; 5]; 4]) -> Option<[f64; 4]> {
+    for col in 0..4 {
+        // Pivot.
+        let mut piv = col;
+        for r in col + 1..4 {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, piv);
+        // Eliminate.
+        for r in 0..4 {
+            if r != col {
+                let f = a[r][col] / a[col][col];
+                for c in col..5 {
+                    a[r][c] -= f * a[col][c];
+                }
+            }
+        }
+    }
+    Some([a[0][4] / a[0][0], a[1][4] / a[1][1], a[2][4] / a[2][2], a[3][4] / a[3][3]])
+}
+
+/// Ordinary least-squares affine from correspondences: three independent
+/// 4-parameter rows sharing the same normal matrix.
+pub fn fit_affine(matches: &[Match]) -> Option<Affine> {
+    if matches.len() < 4 {
+        return None;
+    }
+    // Normal matrix over rows [x, y, z, 1].
+    let mut ata = [[0.0f64; 4]; 4];
+    let mut atb = [[0.0f64; 3]; 4]; // per output coordinate
+    for m in matches {
+        let row = [m.from[0] as f64, m.from[1] as f64, m.from[2] as f64, 1.0];
+        for i in 0..4 {
+            for j in 0..4 {
+                ata[i][j] += row[i] * row[j];
+            }
+            for (k, slot) in atb[i].iter_mut().enumerate() {
+                *slot += row[i] * m.to[k] as f64;
+            }
+        }
+    }
+    let mut out = [0.0f32; 12];
+    for k in 0..3 {
+        let mut aug = [[0.0f64; 5]; 4];
+        for i in 0..4 {
+            aug[i][..4].copy_from_slice(&ata[i]);
+            aug[i][4] = atb[i][k];
+        }
+        let sol = solve4(&mut aug)?;
+        for i in 0..4 {
+            out[k * 4 + i] = sol[i] as f32;
+        }
+    }
+    Some(Affine { m: out })
+}
+
+/// Trimmed LSQ: fit, rank residuals, keep the best `keep_fraction`, re-fit.
+/// Falls back to identity when degenerate.
+pub fn trimmed_affine(matches: &[Match], keep_fraction: f64) -> Affine {
+    let Some(first) = fit_affine(matches) else {
+        return Affine::identity();
+    };
+    // Residuals under the first fit.
+    let mut scored: Vec<(f64, &Match)> = matches
+        .iter()
+        .map(|m| {
+            let p = first.apply_point(m.from);
+            let r = (p[0] - m.to[0]).powi(2) + (p[1] - m.to[1]).powi(2) + (p[2] - m.to[2]).powi(2);
+            (r as f64, m)
+        })
+        .collect();
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let keep = ((matches.len() as f64 * keep_fraction) as usize).max(4).min(matches.len());
+    let trimmed: Vec<Match> = scored[..keep].iter().map(|(_, m)| **m).collect();
+    fit_affine(&trimmed).unwrap_or(first)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_matches(affine: &Affine, n: usize, noise: f32, outliers: usize) -> Vec<Match> {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(55);
+        let mut ms = Vec::new();
+        for i in 0..n {
+            let from = [
+                rng.range(0.0, 30.0),
+                rng.range(0.0, 30.0),
+                rng.range(0.0, 30.0),
+            ];
+            let mut to = affine.apply_point(from);
+            for t in &mut to {
+                *t += noise * rng.normal();
+            }
+            if i < outliers {
+                to[0] += 15.0; // gross outlier
+            }
+            ms.push(Match { from, to, score: 1.0 });
+        }
+        ms
+    }
+
+    #[test]
+    fn exact_fit_recovers_affine() {
+        let mut truth = Affine::translation([2.0, -1.0, 0.5]);
+        truth.m[0] = 1.1;
+        truth.m[5] = 0.9;
+        let ms = synth_matches(&truth, 50, 0.0, 0);
+        let got = fit_affine(&ms).unwrap();
+        for i in 0..12 {
+            assert!((got.m[i] - truth.m[i]).abs() < 1e-4, "param {i}");
+        }
+    }
+
+    #[test]
+    fn trimming_rejects_outliers() {
+        let truth = Affine::translation([1.0, 2.0, 3.0]);
+        let ms = synth_matches(&truth, 60, 0.05, 12); // 20% outliers
+        let naive = fit_affine(&ms).unwrap();
+        let robust = trimmed_affine(&ms, 0.5);
+        let err = |a: &Affine| {
+            (0..12).map(|i| (a.m[i] - truth.m[i]).abs() as f64).sum::<f64>()
+        };
+        assert!(err(&robust) < err(&naive), "robust {} naive {}", err(&robust), err(&naive));
+        assert!(err(&robust) < 0.5);
+    }
+
+    #[test]
+    fn degenerate_input_falls_back_to_identity() {
+        assert_eq!(trimmed_affine(&[], 0.5), Affine::identity());
+        // Coplanar points: singular normal matrix → identity, not panic.
+        let flat: Vec<Match> = (0..10)
+            .map(|i| Match {
+                from: [i as f32, 2.0 * i as f32, 0.0],
+                to: [i as f32, 2.0 * i as f32, 0.0],
+                score: 1.0,
+            })
+            .collect();
+        let a = trimmed_affine(&flat, 0.5);
+        assert_eq!(a, Affine::identity());
+    }
+}

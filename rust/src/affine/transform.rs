@@ -1,0 +1,153 @@
+//! 3D affine transform (3×4 row-major matrix) and its application to
+//! volumes by inverse-free direct resampling: `out(v) = floating(A·v)`.
+
+use crate::util::threadpool::par_chunks_mut;
+use crate::volume::resample::sample_trilinear;
+use crate::volume::{Dims, Volume};
+
+/// Row-major 3×4 affine: `[r0 | t0; r1 | t1; r2 | t2]`, indices 0..12.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Affine {
+    pub m: [f32; 12],
+}
+
+impl Affine {
+    pub fn identity() -> Self {
+        Affine { m: [1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0] }
+    }
+
+    pub fn translation(t: [f32; 3]) -> Self {
+        let mut a = Affine::identity();
+        a.m[3] = t[0];
+        a.m[7] = t[1];
+        a.m[11] = t[2];
+        a
+    }
+
+    /// Apply to a point.
+    #[inline]
+    pub fn apply_point(&self, p: [f32; 3]) -> [f32; 3] {
+        let m = &self.m;
+        [
+            m[0] * p[0] + m[1] * p[1] + m[2] * p[2] + m[3],
+            m[4] * p[0] + m[5] * p[1] + m[6] * p[2] + m[7],
+            m[8] * p[0] + m[9] * p[1] + m[10] * p[2] + m[11],
+        ]
+    }
+
+    /// `self ∘ other` — apply `other` first.
+    pub fn compose(&self, other: &Affine) -> Affine {
+        let a = &self.m;
+        let b = &other.m;
+        let mut out = [0.0f32; 12];
+        for r in 0..3 {
+            for c in 0..3 {
+                out[r * 4 + c] =
+                    a[r * 4] * b[c] + a[r * 4 + 1] * b[4 + c] + a[r * 4 + 2] * b[8 + c];
+            }
+            out[r * 4 + 3] = a[r * 4] * b[3]
+                + a[r * 4 + 1] * b[7]
+                + a[r * 4 + 2] * b[11]
+                + a[r * 4 + 3];
+        }
+        Affine { m: out }
+    }
+
+    /// Scale the translation column (used when promoting between pyramid
+    /// levels, where voxel coordinates double).
+    pub fn scaled_translation(mut self, s: f32) -> Affine {
+        self.m[3] *= s;
+        self.m[7] *= s;
+        self.m[11] *= s;
+        self
+    }
+
+    /// Mean displacement magnitude over a lattice — a cheap "how far from
+    /// identity" measure used in tests and reporting.
+    pub fn mean_displacement(&self, dims: Dims) -> f32 {
+        let mut acc = 0.0f64;
+        let mut n = 0usize;
+        for z in (0..dims.nz).step_by(4.max(dims.nz / 8)) {
+            for y in (0..dims.ny).step_by(4.max(dims.ny / 8)) {
+                for x in (0..dims.nx).step_by(4.max(dims.nx / 8)) {
+                    let p = [x as f32, y as f32, z as f32];
+                    let q = self.apply_point(p);
+                    let d = ((q[0] - p[0]).powi(2) + (q[1] - p[1]).powi(2)
+                        + (q[2] - p[2]).powi(2))
+                    .sqrt();
+                    acc += d as f64;
+                    n += 1;
+                }
+            }
+        }
+        (acc / n as f64) as f32
+    }
+}
+
+/// Resample `floating` through the affine into a lattice of `out_dims`.
+pub fn apply(floating: &Volume, affine: &Affine, out_dims: Dims) -> Volume {
+    let mut out = Volume::zeros(out_dims, floating.spacing);
+    let row = out_dims.nx;
+    par_chunks_mut(&mut out.data, row, |chunk_i, slice| {
+        let y = chunk_i % out_dims.ny;
+        let z = chunk_i / out_dims.ny;
+        for (x, o) in slice.iter_mut().enumerate() {
+            let p = affine.apply_point([x as f32, y as f32, z as f32]);
+            *o = sample_trilinear(floating, p[0], p[1], p[2]);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_application_is_identity() {
+        let v = Volume::from_fn(Dims::new(8, 8, 8), [1.0; 3], |x, y, z| {
+            (x + 2 * y + 3 * z) as f32
+        });
+        let w = apply(&v, &Affine::identity(), v.dims);
+        for (a, b) in w.data.iter().zip(&v.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn compose_matches_sequential_application() {
+        let a = Affine::translation([1.0, 2.0, 3.0]);
+        let mut b = Affine::identity();
+        b.m[0] = 2.0; // scale x
+        let c = a.compose(&b); // apply b then a
+        let p = [1.0, 1.0, 1.0];
+        let want = a.apply_point(b.apply_point(p));
+        let got = c.apply_point(p);
+        for i in 0..3 {
+            assert!((want[i] - got[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn translation_resamples_correctly() {
+        let v = Volume::from_fn(Dims::new(10, 10, 10), [1.0; 3], |x, y, z| {
+            (x + 10 * y + 100 * z) as f32
+        });
+        let w = apply(&v, &Affine::translation([1.0, 0.0, 0.0]), v.dims);
+        // out(x) = v(x+1)
+        for z in 0..10 {
+            for y in 0..10 {
+                for x in 0..9 {
+                    assert!((w.at(x, y, z) - v.at(x + 1, y, z)).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mean_displacement_zero_for_identity() {
+        assert_eq!(Affine::identity().mean_displacement(Dims::new(16, 16, 16)), 0.0);
+        let t = Affine::translation([3.0, 0.0, 0.0]);
+        assert!((t.mean_displacement(Dims::new(16, 16, 16)) - 3.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,192 @@
+//! Cubic B-spline basis functions and the per-tile weight look-up tables.
+//!
+//! The control grid is aligned to the voxel grid and uniformly spaced
+//! (paper §3.4), so the fractional offset `u = x/δ − ⌊x/δ⌋` takes only δ
+//! distinct values — the B-spline weights are precomputed into LUTs indexed
+//! by the intra-tile voxel offset, exactly as the paper stores the scalar
+//! coefficients in constant-memory LUTs.
+
+/// The four cubic B-spline basis values at parameter `u ∈ [0,1)`.
+///
+/// B0(u) = (1−u)³/6, B1(u) = (3u³−6u²+4)/6,
+/// B2(u) = (−3u³+3u²+3u+1)/6, B3(u) = u³/6.
+#[inline]
+pub fn basis_f64(u: f64) -> [f64; 4] {
+    let one_minus = 1.0 - u;
+    let u2 = u * u;
+    let u3 = u2 * u;
+    [
+        one_minus * one_minus * one_minus / 6.0,
+        (3.0 * u3 - 6.0 * u2 + 4.0) / 6.0,
+        (-3.0 * u3 + 3.0 * u2 + 3.0 * u + 1.0) / 6.0,
+        u3 / 6.0,
+    ]
+}
+
+/// f32 basis (used by the single-precision kernels when no LUT applies).
+#[inline]
+pub fn basis_f32(u: f32) -> [f32; 4] {
+    let b = basis_f64(u as f64);
+    [b[0] as f32, b[1] as f32, b[2] as f32, b[3] as f32]
+}
+
+/// First derivatives of the cubic basis (for the FFD gradient / bending
+/// energy): B0' = −(1−u)²/2, B1' = (3u²−4u)/2·... computed analytically.
+#[inline]
+pub fn basis_deriv_f64(u: f64) -> [f64; 4] {
+    let one_minus = 1.0 - u;
+    [
+        -0.5 * one_minus * one_minus,
+        (9.0 * u * u - 12.0 * u) / 6.0,
+        (-9.0 * u * u + 6.0 * u + 3.0) / 6.0,
+        0.5 * u * u,
+    ]
+}
+
+/// Weighted-sum LUT: for each intra-tile offset `a ∈ [0,δ)` the four basis
+/// weights at `u = a/δ`. Weights are computed in f64 and rounded once to f32
+/// (what NiftyReg's precomputation does).
+#[derive(Clone, Debug)]
+pub struct WeightLut {
+    pub delta: usize,
+    /// `w[a][l]`, flattened as `a*4 + l`.
+    pub w: Vec<f32>,
+}
+
+impl WeightLut {
+    pub fn new(delta: usize) -> Self {
+        assert!(delta >= 1);
+        let mut w = Vec::with_capacity(delta * 4);
+        for a in 0..delta {
+            let b = basis_f64(a as f64 / delta as f64);
+            w.extend_from_slice(&[b[0] as f32, b[1] as f32, b[2] as f32, b[3] as f32]);
+        }
+        WeightLut { delta, w }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, a: usize) -> &[f32] {
+        &self.w[a * 4..a * 4 + 4]
+    }
+}
+
+/// Trilinear-reformulation LUT (paper §3.3): for each intra-tile offset the
+/// *lerp fractions* replacing the weighted sums. For axis weights
+/// `(B0,B1,B2,B3)` the two 2-point groups collapse to lerps with fractions
+/// `g0 = B1/(B0+B1)`, `g1 = B3/(B2+B3)`, and — because the basis sums to 1 —
+/// the final combination is itself a lerp with fraction `s1 = B2+B3`.
+#[derive(Clone, Debug)]
+pub struct LerpLut {
+    pub delta: usize,
+    /// `[g0, g1, s1]` per offset, flattened as `a*3 + k`.
+    pub g: Vec<f32>,
+}
+
+impl LerpLut {
+    pub fn new(delta: usize) -> Self {
+        assert!(delta >= 1);
+        let mut g = Vec::with_capacity(delta * 3);
+        for a in 0..delta {
+            let b = basis_f64(a as f64 / delta as f64);
+            let s0 = b[0] + b[1];
+            let s1 = b[2] + b[3];
+            g.push((b[1] / s0) as f32);
+            g.push((b[3] / s1) as f32);
+            g.push(s1 as f32);
+        }
+        LerpLut { delta, g }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, a: usize) -> [f32; 3] {
+        [self.g[a * 3], self.g[a * 3 + 1], self.g[a * 3 + 2]]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basis_partitions_unity() {
+        for i in 0..100 {
+            let u = i as f64 / 100.0;
+            let b = basis_f64(u);
+            let sum: f64 = b.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-15, "u={u} sum={sum}");
+            assert!(b.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn basis_has_linear_precision() {
+        // Σ_l B_l(u) · l = u + 1 (Greville abscissa of the cubic B-spline).
+        for i in 0..50 {
+            let u = i as f64 / 50.0;
+            let b = basis_f64(u);
+            let m: f64 = b.iter().enumerate().map(|(l, &w)| w * l as f64).sum();
+            assert!((m - (u + 1.0)).abs() < 1e-14, "u={u} m={m}");
+        }
+    }
+
+    #[test]
+    fn basis_known_values() {
+        let b = basis_f64(0.0);
+        assert!((b[0] - 1.0 / 6.0).abs() < 1e-15);
+        assert!((b[1] - 4.0 / 6.0).abs() < 1e-15);
+        assert!((b[2] - 1.0 / 6.0).abs() < 1e-15);
+        assert!(b[3].abs() < 1e-15);
+    }
+
+    #[test]
+    fn deriv_matches_finite_difference() {
+        let h = 1e-6;
+        for i in 1..50 {
+            let u = i as f64 / 50.0;
+            let d = basis_deriv_f64(u);
+            let bp = basis_f64(u + h);
+            let bm = basis_f64(u - h);
+            for l in 0..4 {
+                let fd = (bp[l] - bm[l]) / (2.0 * h);
+                assert!((d[l] - fd).abs() < 1e-8, "u={u} l={l} {} vs {fd}", d[l]);
+            }
+        }
+    }
+
+    #[test]
+    fn deriv_sums_to_zero() {
+        for i in 0..50 {
+            let u = i as f64 / 50.0;
+            let s: f64 = basis_deriv_f64(u).iter().sum();
+            assert!(s.abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn weight_lut_matches_direct_basis() {
+        let lut = WeightLut::new(5);
+        for a in 0..5 {
+            let b = basis_f64(a as f64 / 5.0);
+            for l in 0..4 {
+                assert!((lut.at(a)[l] as f64 - b[l]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn lerp_lut_reconstructs_weighted_sum() {
+        // s0·lerp(p0,p1,g0) then lerp with the (B2,B3) group must equal the
+        // 4-term weighted sum for arbitrary points.
+        let lut = LerpLut::new(7);
+        let pts = [1.3f64, -0.2, 4.0, 2.5];
+        for a in 0..7 {
+            let b = basis_f64(a as f64 / 7.0);
+            let want: f64 = (0..4).map(|l| b[l] * pts[l]).sum();
+            let [g0, g1, s1] = lut.at(a);
+            let lo = pts[0] + g0 as f64 * (pts[1] - pts[0]);
+            let hi = pts[2] + g1 as f64 * (pts[3] - pts[2]);
+            let got = lo + s1 as f64 * (hi - lo);
+            assert!((got - want).abs() < 1e-6, "a={a}: {got} vs {want}");
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Method registry: string-keyed dispatch over every BSI implementation,
+//! used by the CLI (`--method`), the coordinator's engine routing and the
+//! bench harnesses.
+
+use super::{reference, texture, tt, ttli, tv, tv_tiling, vt, vv, Interpolator};
+
+/// All BSI schemes, in the order the paper's figures present them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// Texture-hardware simulation (Ruijters et al.).
+    Texture,
+    /// NiftyReg GPU baseline: thread per voxel, no tiling.
+    Tv,
+    /// Ellingwood-style: thread per voxel over staged tiles.
+    TvTiling,
+    /// Paper §3.2: thread per tile, register tiling, weighted sum.
+    Tt,
+    /// Paper §3.3: thread per tile with trilinear interpolations (headline).
+    Ttli,
+    /// Paper §3.5: vector per tile (CPU SIMD).
+    Vt,
+    /// Paper §3.5: vector per voxel (CPU SIMD).
+    Vv,
+    /// f64 high-precision reference.
+    Reference,
+}
+
+impl Method {
+    /// Every method, figure order.
+    pub const ALL: [Method; 8] = [
+        Method::Texture,
+        Method::Tv,
+        Method::TvTiling,
+        Method::Tt,
+        Method::Ttli,
+        Method::Vt,
+        Method::Vv,
+        Method::Reference,
+    ];
+
+    /// The GPU-side comparison set of Figures 5/6.
+    pub const GPU_SET: [Method; 5] =
+        [Method::Texture, Method::Tv, Method::TvTiling, Method::Tt, Method::Ttli];
+
+    /// The CPU-side comparison set of Figure 7 (plus the NiftyReg CPU
+    /// baseline, which our Tv port stands in for).
+    pub const CPU_SET: [Method; 3] = [Method::Tv, Method::Vt, Method::Vv];
+
+    /// Stable CLI key.
+    pub fn key(&self) -> &'static str {
+        match self {
+            Method::Texture => "th",
+            Method::Tv => "tv",
+            Method::TvTiling => "tv-tiling",
+            Method::Tt => "tt",
+            Method::Ttli => "ttli",
+            Method::Vt => "vt",
+            Method::Vv => "vv",
+            Method::Reference => "ref",
+        }
+    }
+
+    /// Parse a CLI key (case-insensitive; accepts a few aliases).
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "th" | "texture" => Some(Method::Texture),
+            "tv" | "niftyreg" => Some(Method::Tv),
+            "tv-tiling" | "tvt" | "tv_tiling" => Some(Method::TvTiling),
+            "tt" => Some(Method::Tt),
+            "ttli" => Some(Method::Ttli),
+            "vt" => Some(Method::Vt),
+            "vv" => Some(Method::Vv),
+            "ref" | "reference" | "f64" => Some(Method::Reference),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the implementation.
+    pub fn instance(&self) -> Box<dyn Interpolator + Send + Sync> {
+        match self {
+            Method::Texture => Box::new(texture::TextureSim),
+            Method::Tv => Box::new(tv::Tv),
+            Method::TvTiling => Box::new(tv_tiling::TvTiling),
+            Method::Tt => Box::new(tt::Tt),
+            Method::Ttli => Box::new(ttli::Ttli),
+            Method::Vt => Box::new(vt::Vt),
+            Method::Vv => Box::new(vv::Vv),
+            Method::Reference => Box::new(reference::Reference),
+        }
+    }
+
+    /// The paper's display name.
+    pub fn paper_name(&self) -> &'static str {
+        self.instance().name()
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::ControlGrid;
+    use crate::volume::Dims;
+
+    #[test]
+    fn parse_round_trips_all_keys() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.key()), Some(m), "{m:?}");
+        }
+        assert_eq!(Method::parse("TTLI"), Some(Method::Ttli));
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn every_method_produces_a_field_of_the_right_shape() {
+        let vd = Dims::new(10, 8, 6);
+        let mut g = ControlGrid::zeros(vd, [4, 4, 3]);
+        g.randomize(1, 2.0);
+        for m in Method::ALL {
+            let f = m.instance().interpolate(&g, vd);
+            assert_eq!(f.dims, vd, "{m:?}");
+            assert!(f.x.iter().all(|v| v.is_finite()), "{m:?} produced non-finite");
+        }
+    }
+
+    #[test]
+    fn all_methods_mutually_consistent() {
+        // Cross-check the whole registry against the reference: every
+        // scheme computes the same mathematical field.
+        let vd = Dims::new(15, 10, 10);
+        let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
+        g.randomize(2, 4.0);
+        let r = Method::Reference.instance().interpolate(&g, vd);
+        for m in Method::ALL {
+            let f = m.instance().interpolate(&g, vd);
+            let tol = if m == Method::Texture { 0.05 } else { 1e-4 };
+            assert!(
+                f.max_abs_diff(&r) < tol,
+                "{m:?} deviates by {}",
+                f.max_abs_diff(&r)
+            );
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! B-spline interpolation (BSI) core — the paper's contribution and all its
+//! comparison baselines, as CPU ports that keep each scheme's exact
+//! data-movement structure (DESIGN.md §5):
+//!
+//! | module       | paper name                       | movement structure |
+//! |--------------|----------------------------------|--------------------|
+//! | [`tv`]       | NiftyReg (TV)                    | 64 CP gathers per *voxel* straight from the grid |
+//! | [`tv_tiling`]| Thread-per-Voxel + tiling        | 64 CP gathers per *tile* into a staging buffer (shared-memory analog), voxels read the buffer |
+//! | [`tt`]       | Thread-per-Tile (§3.2)           | 64 CP gathers per tile into fixed-size locals (register-tiling analog), weighted sums |
+//! | [`ttli`]     | Thread-per-Tile + lin. interp (§3.3) | as TT but 8+1 trilinear interpolations of FMA form — the headline method |
+//! | [`vt`]       | Vector-per-Tile (§3.5)           | row-vectorized TTLI across the tile x-extent |
+//! | [`vv`]       | Vector-per-Voxel (§3.5)          | 8 sub-cube lanes per voxel vectorized |
+//! | [`texture`]  | Texture Hardware (Ruijters)      | per-voxel trilinear fetches with 8-bit lerp fractions |
+//! | [`reference`]| high-precision CPU reference     | f64 weighted sum (accuracy baseline, §5.4) |
+
+pub mod coeffs;
+pub mod dispatch;
+pub mod prefilter;
+pub mod scattered;
+pub mod reference;
+pub mod texture;
+pub mod tt;
+pub mod ttli;
+pub mod tv;
+pub mod tv_tiling;
+pub mod vt;
+pub mod vv;
+
+pub use dispatch::Method;
+
+use crate::util::rng::Pcg32;
+use crate::volume::{Dims, VectorField};
+
+/// A uniformly spaced control-point grid aligned to the voxel lattice
+/// (Eq. 1). For `t` tiles along an axis the grid holds `t + 3` control
+/// points: the support of voxel `x` is `φ[i..i+4]` with
+/// `i = ⌊x/δ⌋ − 1`, stored with a +1 offset so indices stay non-negative.
+#[derive(Clone, Debug)]
+pub struct ControlGrid {
+    /// Tile size δ (voxels) per axis — the control point spacing.
+    pub tile: [usize; 3],
+    /// Number of tiles covering the target volume per axis.
+    pub tiles: [usize; 3],
+    /// Control-point lattice dims: `tiles + 3` per axis.
+    pub dims: Dims,
+    /// Control-point displacement components (structure-of-arrays).
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub z: Vec<f32>,
+}
+
+impl ControlGrid {
+    /// Grid sized to cover a volume of `vol_dims` with tile size `tile`.
+    pub fn zeros(vol_dims: Dims, tile: [usize; 3]) -> Self {
+        assert!(tile.iter().all(|&d| d >= 1), "tile size must be >= 1");
+        let tiles = [
+            vol_dims.nx.div_ceil(tile[0]),
+            vol_dims.ny.div_ceil(tile[1]),
+            vol_dims.nz.div_ceil(tile[2]),
+        ];
+        let dims = Dims::new(tiles[0] + 3, tiles[1] + 3, tiles[2] + 3);
+        let n = dims.count();
+        ControlGrid { tile, tiles, dims, x: vec![0.0; n], y: vec![0.0; n], z: vec![0.0; n] }
+    }
+
+    /// Number of control points.
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    /// Flat index of control point (ci, cj, ck) in *storage* coordinates
+    /// (already offset by +1 relative to Eq. 1's i).
+    #[inline(always)]
+    pub fn idx(&self, ci: usize, cj: usize, ck: usize) -> usize {
+        self.dims.idx(ci, cj, ck)
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> [f32; 3] {
+        [self.x[i], self.y[i], self.z[i]]
+    }
+
+    /// Fill with smooth random displacements of magnitude ~`amp` voxels
+    /// (deterministic; used by accuracy/performance workloads — the paper's
+    /// deformation grids come out of registration, ours out of a seeded RNG,
+    /// which §5.2 justifies: BSI cost is content-independent).
+    pub fn randomize(&mut self, seed: u64, amp: f32) {
+        let mut rng = Pcg32::seeded(seed);
+        for i in 0..self.len() {
+            self.x[i] = amp * (2.0 * rng.uniform() - 1.0);
+            self.y[i] = amp * (2.0 * rng.uniform() - 1.0);
+            self.z[i] = amp * (2.0 * rng.uniform() - 1.0);
+        }
+    }
+
+    /// The volume extent this grid serves (tiles × tile size; callers may
+    /// interpolate any sub-extent, benches use the full one).
+    pub fn full_extent(&self) -> Dims {
+        Dims::new(
+            self.tiles[0] * self.tile[0],
+            self.tiles[1] * self.tile[1],
+            self.tiles[2] * self.tile[2],
+        )
+    }
+
+    /// Gather the 4×4×4 control-point neighborhood of tile (tx,ty,tz) into
+    /// caller-provided SoA arrays (the "move the cube once per tile" step
+    /// shared by TT/TTLI/VT/VV). Storage index of the first corner is simply
+    /// (tx, ty, tz) thanks to the +1 offset.
+    #[inline]
+    pub fn gather_tile_cube(
+        &self,
+        tx: usize,
+        ty: usize,
+        tz: usize,
+        cx: &mut [f32; 64],
+        cy: &mut [f32; 64],
+        cz: &mut [f32; 64],
+    ) {
+        let mut k = 0;
+        for dz in 0..4 {
+            for dy in 0..4 {
+                let base = self.idx(tx, ty + dy, tz + dz);
+                // Four contiguous x-reads — the coalesced load the paper's
+                // Step 1 performs.
+                cx[k..k + 4].copy_from_slice(&self.x[base..base + 4]);
+                cy[k..k + 4].copy_from_slice(&self.y[base..base + 4]);
+                cz[k..k + 4].copy_from_slice(&self.z[base..base + 4]);
+                k += 4;
+            }
+        }
+    }
+}
+
+/// Common interface implemented by every BSI scheme: produce the dense
+/// deformation field `T(x,y,z)` (Eq. 1) over `vol_dims` from `grid`.
+pub trait Interpolator {
+    /// Human-readable method name (matches the paper's terminology).
+    fn name(&self) -> &'static str;
+
+    /// Compute the deformation field.
+    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField;
+}
+
+/// Validate that `vol_dims` is coverable by `grid` (defensive check shared
+/// by implementations).
+pub(crate) fn check_extent(grid: &ControlGrid, vol_dims: Dims) {
+    let ext = grid.full_extent();
+    assert!(
+        vol_dims.nx <= ext.nx && vol_dims.ny <= ext.ny && vol_dims.nz <= ext.nz,
+        "volume {vol_dims:?} exceeds grid extent {ext:?}"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_dims_follow_niftyreg_convention() {
+        let g = ControlGrid::zeros(Dims::new(50, 50, 50), [5, 5, 5]);
+        assert_eq!(g.tiles, [10, 10, 10]);
+        assert_eq!(g.dims, Dims::new(13, 13, 13));
+    }
+
+    #[test]
+    fn grid_covers_non_multiple_volumes() {
+        let g = ControlGrid::zeros(Dims::new(47, 33, 21), [5, 4, 3]);
+        assert_eq!(g.tiles, [10, 9, 7]);
+        let ext = g.full_extent();
+        assert!(ext.nx >= 47 && ext.ny >= 33 && ext.nz >= 21);
+    }
+
+    #[test]
+    fn gather_tile_cube_picks_the_right_neighborhood() {
+        let mut g = ControlGrid::zeros(Dims::new(10, 10, 10), [5, 5, 5]);
+        // Tag each control point with its flat storage index.
+        for i in 0..g.len() {
+            g.x[i] = i as f32;
+        }
+        let (mut cx, mut cy, mut cz) = ([0.0; 64], [0.0; 64], [0.0; 64]);
+        g.gather_tile_cube(1, 0, 1, &mut cx, &mut cy, &mut cz);
+        // First element = storage (1,0,1); last = storage (4,3,4).
+        assert_eq!(cx[0], g.idx(1, 0, 1) as f32);
+        assert_eq!(cx[63], g.idx(4, 3, 4) as f32);
+        // Stride within a row is 1.
+        assert_eq!(cx[1], g.idx(2, 0, 1) as f32);
+    }
+
+    #[test]
+    fn randomize_is_deterministic_and_bounded() {
+        let mut a = ControlGrid::zeros(Dims::new(20, 20, 20), [5, 5, 5]);
+        let mut b = ControlGrid::zeros(Dims::new(20, 20, 20), [5, 5, 5]);
+        a.randomize(9, 2.0);
+        b.randomize(9, 2.0);
+        assert_eq!(a.x, b.x);
+        assert!(a.x.iter().all(|v| v.abs() <= 2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds grid extent")]
+    fn extent_check_fires() {
+        let g = ControlGrid::zeros(Dims::new(10, 10, 10), [5, 5, 5]);
+        check_extent(&g, Dims::new(11, 10, 10));
+    }
+}

@@ -1,0 +1,164 @@
+//! Scattered (non-lattice-aligned) B-spline evaluation — the paper's
+//! "future work" extension (§8: "Support for non-uniform grids is possible
+//! with minimal changes (e.g., calculating B-spline basis functions weights
+//! on-the-fly)"). Evaluates the deformation at arbitrary continuous
+//! positions instead of the aligned voxel lattice: basis weights computed
+//! per query, tile-cube gathers batched by sorting queries by tile for the
+//! same register-reuse the aligned TTLI path gets.
+
+use super::coeffs::basis_f64;
+use super::ControlGrid;
+
+/// One evaluation query in continuous voxel coordinates.
+pub type Point = [f32; 3];
+
+/// Evaluate at one point (weights on the fly, f64 accumulation).
+pub fn eval_at(grid: &ControlGrid, p: Point) -> [f32; 3] {
+    let [dx, dy, dz] = grid.tile;
+    let qx = (p[0] / dx as f32) as f64;
+    let qy = (p[1] / dy as f32) as f64;
+    let qz = (p[2] / dz as f32) as f64;
+    let (tx, ty, tz) = (qx.floor(), qy.floor(), qz.floor());
+    let wx = basis_f64(qx - tx);
+    let wy = basis_f64(qy - ty);
+    let wz = basis_f64(qz - tz);
+    let cx = (tx as isize).clamp(0, grid.tiles[0] as isize - 1) as usize;
+    let cy = (ty as isize).clamp(0, grid.tiles[1] as isize - 1) as usize;
+    let cz = (tz as isize).clamp(0, grid.tiles[2] as isize - 1) as usize;
+    let mut out = [0.0f64; 3];
+    for n in 0..4 {
+        for m in 0..4 {
+            let base = grid.idx(cx, cy + m, cz + n);
+            let wzy = wz[n] * wy[m];
+            for l in 0..4 {
+                let w = wzy * wx[l];
+                out[0] += w * grid.x[base + l] as f64;
+                out[1] += w * grid.y[base + l] as f64;
+                out[2] += w * grid.z[base + l] as f64;
+            }
+        }
+    }
+    [out[0] as f32, out[1] as f32, out[2] as f32]
+}
+
+/// Batch evaluation with tile-sorted processing: queries are grouped by
+/// their owning tile so each 4³ cube is gathered once per group (the
+/// thread-per-tile idea applied to scattered queries).
+pub fn eval_batch(grid: &ControlGrid, points: &[Point]) -> Vec<[f32; 3]> {
+    let [dx, dy, dz] = grid.tile;
+    // Order of tiles; stable sort keeps deterministic output mapping.
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    let tile_of = |p: &Point| {
+        let tx = ((p[0] / dx as f32).floor() as isize).clamp(0, grid.tiles[0] as isize - 1);
+        let ty = ((p[1] / dy as f32).floor() as isize).clamp(0, grid.tiles[1] as isize - 1);
+        let tz = ((p[2] / dz as f32).floor() as isize).clamp(0, grid.tiles[2] as isize - 1);
+        ((tz * grid.tiles[1] as isize + ty) * grid.tiles[0] as isize + tx) as usize
+    };
+    order.sort_by_key(|&i| tile_of(&points[i]));
+
+    let mut out = vec![[0.0f32; 3]; points.len()];
+    let mut cube_x = [0.0f32; 64];
+    let mut cube_y = [0.0f32; 64];
+    let mut cube_z = [0.0f32; 64];
+    let mut current_tile = usize::MAX;
+    for &i in &order {
+        let p = points[i];
+        let t = tile_of(&p);
+        if t != current_tile {
+            let tx = t % grid.tiles[0];
+            let ty = (t / grid.tiles[0]) % grid.tiles[1];
+            let tz = t / (grid.tiles[0] * grid.tiles[1]);
+            grid.gather_tile_cube(tx, ty, tz, &mut cube_x, &mut cube_y, &mut cube_z);
+            current_tile = t;
+        }
+        // Weights relative to the (clamped) owning tile.
+        let tx = (t % grid.tiles[0]) as f64;
+        let ty = ((t / grid.tiles[0]) % grid.tiles[1]) as f64;
+        let tz = (t / (grid.tiles[0] * grid.tiles[1])) as f64;
+        let wx = basis_f64(p[0] as f64 / dx as f64 - tx);
+        let wy = basis_f64(p[1] as f64 / dy as f64 - ty);
+        let wz = basis_f64(p[2] as f64 / dz as f64 - tz);
+        let mut acc = [0.0f64; 3];
+        let mut k = 0;
+        for n in 0..4 {
+            for m in 0..4 {
+                let wzy = wz[n] * wy[m];
+                for l in 0..4 {
+                    let w = wzy * wx[l];
+                    acc[0] += w * cube_x[k] as f64;
+                    acc[1] += w * cube_y[k] as f64;
+                    acc[2] += w * cube_z[k] as f64;
+                    k += 1;
+                }
+            }
+        }
+        out[i] = [acc[0] as f32, acc[1] as f32, acc[2] as f32];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::Method;
+    use crate::util::rng::Pcg32;
+    use crate::volume::Dims;
+
+    fn grid() -> (ControlGrid, Dims) {
+        let vd = Dims::new(20, 15, 25);
+        let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
+        g.randomize(77, 4.0);
+        (g, vd)
+    }
+
+    #[test]
+    fn matches_dense_field_on_lattice_points() {
+        let (g, vd) = grid();
+        let dense = Method::Reference.instance().interpolate(&g, vd);
+        for &(x, y, z) in &[(0usize, 0usize, 0usize), (7, 3, 12), (19, 14, 24)] {
+            let v = eval_at(&g, [x as f32, y as f32, z as f32]);
+            let i = vd.idx(x, y, z);
+            assert!((v[0] - dense.x[i]).abs() < 1e-4);
+            assert!((v[1] - dense.y[i]).abs() < 1e-4);
+            assert!((v[2] - dense.z[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn batch_equals_pointwise() {
+        let (g, _) = grid();
+        let mut rng = Pcg32::seeded(5);
+        let pts: Vec<Point> = (0..200)
+            .map(|_| [rng.range(0.0, 19.0), rng.range(0.0, 14.0), rng.range(0.0, 24.0)])
+            .collect();
+        let batch = eval_batch(&g, &pts);
+        for (p, b) in pts.iter().zip(&batch) {
+            let single = eval_at(&g, *p);
+            for k in 0..3 {
+                assert!((single[k] - b[k]).abs() < 1e-4, "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn continuous_between_lattice_points() {
+        // Sub-voxel steps produce sub-displacement-scale changes (the C²
+        // smoothness the paper's FFD relies on).
+        let (g, _) = grid();
+        let mut prev = eval_at(&g, [5.0, 5.0, 5.0]);
+        for i in 1..=20 {
+            let p = [5.0 + i as f32 * 0.05, 5.0, 5.0];
+            let v = eval_at(&g, p);
+            for k in 0..3 {
+                assert!((v[k] - prev[k]).abs() < 0.2, "jump at {p:?}");
+            }
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let (g, _) = grid();
+        assert!(eval_batch(&g, &[]).is_empty());
+    }
+}

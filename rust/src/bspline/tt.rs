@@ -1,0 +1,141 @@
+//! Thread-per-Tile (paper §3.2) — the first half of the contribution.
+//!
+//! One worker owns an entire tile: the 4×4×4 control-point cube is gathered
+//! *once* into fixed-size stack arrays (the register-tiling analog — the
+//! compiler keeps the `[f32; 64]` triple in registers/L1 for the whole tile)
+//! and every voxel of the tile is produced from those locals with the direct
+//! 64-term weighted sum. Input overlap between neighboring tiles is captured
+//! by the cache since consecutive tiles gather overlapping grid rows
+//! (§3.2.1's blocks-of-tiles effect).
+
+use super::coeffs::WeightLut;
+use super::{check_extent, ControlGrid, Interpolator};
+use crate::util::threadpool::par_chunks_mut3;
+use crate::volume::{Dims, VectorField};
+
+pub struct Tt;
+
+/// Weighted sum over a pre-gathered cube (shared with TV-tiling math, but
+/// reading tile-locals instead of a staging buffer).
+#[inline(always)]
+pub(crate) fn weighted_sum_cube(
+    cx: &[f32; 64],
+    cy: &[f32; 64],
+    cz: &[f32; 64],
+    wx: &[f32],
+    wy: &[f32],
+    wz: &[f32],
+) -> [f32; 3] {
+    let (mut ax, mut ay, mut az) = (0.0f32, 0.0f32, 0.0f32);
+    let mut k = 0;
+    for n in 0..4 {
+        for m in 0..4 {
+            let wzy = wz[n] * wy[m];
+            for l in 0..4 {
+                let w = wzy * wx[l];
+                ax += w * cx[k];
+                ay += w * cy[k];
+                az += w * cz[k];
+                k += 1;
+            }
+        }
+    }
+    [ax, ay, az]
+}
+
+impl Interpolator for Tt {
+    fn name(&self) -> &'static str {
+        "Thread per Tile"
+    }
+
+    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+        check_extent(grid, vol_dims);
+        let [dx, dy, dz] = grid.tile;
+        let lx = WeightLut::new(dx);
+        let ly = WeightLut::new(dy);
+        let lz = WeightLut::new(dz);
+        let mut out = VectorField::zeros(vol_dims);
+        let chunk = vol_dims.nx * vol_dims.ny * dz;
+        par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, chunk, |tz, ox, oy, oz| {
+            let z_lim = (vol_dims.nz - tz * dz).min(dz);
+            for ty in 0..grid.tiles[1] {
+                let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
+                if y_lim == 0 {
+                    continue;
+                }
+                for tx in 0..grid.tiles[0] {
+                    let x_lim = vol_dims.nx.saturating_sub(tx * dx).min(dx);
+                    if x_lim == 0 {
+                        continue;
+                    }
+                    // Register tiling: gather once, keep in locals for the
+                    // whole tile (paper Figure 3, Step 2 right).
+                    let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
+                    grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
+                    for lz_ in 0..z_lim {
+                        let wz = lz.at(lz_);
+                        for ly_ in 0..y_lim {
+                            let wy = ly.at(ly_);
+                            let row = ((lz_ * vol_dims.ny) + (ty * dy + ly_)) * vol_dims.nx
+                                + tx * dx;
+                            for lx_ in 0..x_lim {
+                                let v = weighted_sum_cube(&cx, &cy, &cz, lx.at(lx_), wy, wz);
+                                ox[row + lx_] = v[0];
+                                oy[row + lx_] = v[1];
+                                oz[row + lx_] = v[2];
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::reference::interpolate_f64;
+    use crate::bspline::tv::Tv;
+
+    #[test]
+    fn identical_to_tv_bitwise() {
+        // TT changes *where data lives*, not the arithmetic: results must be
+        // bit-identical to TV (same f32 summation order).
+        let vd = Dims::new(25, 20, 15);
+        let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
+        g.randomize(5, 6.0);
+        let a = Tt.interpolate(&g, vd);
+        let b = Tv.interpolate(&g, vd);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.z, b.z);
+    }
+
+    #[test]
+    fn close_to_reference_under_large_displacements() {
+        let vd = Dims::new(21, 14, 7);
+        let mut g = ControlGrid::zeros(vd, [7, 7, 7]);
+        g.randomize(13, 25.0);
+        let f = Tt.interpolate(&g, vd);
+        let r = interpolate_f64(&g, vd);
+        // Error scales with magnitude; 25-voxel displacements stay < 1e-4.
+        assert!(f.mean_abs_diff_f64(&r.x, &r.y, &r.z) < 1e-4);
+    }
+
+    #[test]
+    fn handles_all_paper_tile_sizes() {
+        for &t in &[3usize, 4, 5, 6, 7] {
+            let vd = Dims::new(2 * t + 1, t, t + 2);
+            let mut g = ControlGrid::zeros(vd, [t, t, t]);
+            g.randomize(t as u64, 2.0);
+            let f = Tt.interpolate(&g, vd);
+            let r = interpolate_f64(&g, vd);
+            assert!(
+                f.mean_abs_diff_f64(&r.x, &r.y, &r.z) < 1e-5,
+                "tile {t} deviates"
+            );
+        }
+    }
+}

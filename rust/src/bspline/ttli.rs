@@ -1,0 +1,180 @@
+//! Thread-per-Tile with Linear Interpolations (paper §3.3) — the headline
+//! method. TT's gathered cube plus the reformulation of the 64-term weighted
+//! sum into 8 sub-cube trilinear interpolations combined by a 9th:
+//!
+//! For axis weights `(B0..B3)` the partition-of-unity property makes the
+//! 4-point weighted sum along each axis collapse into nested lerps with
+//! fractions `g0 = B1/(B0+B1)`, `g1 = B3/(B2+B3)` and `s1 = B2+B3`
+//! (precomputed in [`super::coeffs::LerpLut`]). Every lerp is evaluated as
+//! `a + w·(b−a)` = one subtraction + one `mul_add` (the FMA the paper
+//! highlights for both speed and single-rounding accuracy), giving
+//! 9 trilerps × 7 lerps × 2 ops = 126 ops per voxel per component vs 255
+//! for the direct sum (Appendix B).
+
+use super::coeffs::LerpLut;
+use super::{check_extent, ControlGrid, Interpolator};
+use crate::util::threadpool::par_chunks_mut3;
+use crate::volume::{Dims, VectorField};
+
+pub struct Ttli;
+
+/// `a + t·(b−a)` with a fused multiply-add (single rounding).
+#[inline(always)]
+pub(crate) fn lerp(a: f32, b: f32, t: f32) -> f32 {
+    t.mul_add(b - a, a)
+}
+
+/// Trilinear interpolation of one 2×2×2 sub-cube of the gathered 4×4×4
+/// block. `(a, b, c)` selects the sub-cube (Figure 1's colored cubes);
+/// 7 lerps.
+#[inline(always)]
+fn subcube_trilerp(c: &[f32; 64], a: usize, b: usize, cc: usize, fx: f32, fy: f32, fz: f32) -> f32 {
+    let base = 2 * a + 8 * b + 32 * cc;
+    let x00 = lerp(c[base], c[base + 1], fx);
+    let x10 = lerp(c[base + 4], c[base + 5], fx);
+    let x01 = lerp(c[base + 16], c[base + 17], fx);
+    let x11 = lerp(c[base + 20], c[base + 21], fx);
+    let y0 = lerp(x00, x10, fy);
+    let y1 = lerp(x01, x11, fy);
+    lerp(y0, y1, fz)
+}
+
+/// Full TTLI evaluation of one component: 8 independent sub-cube trilerps
+/// (ILP-friendly — no data dependencies, paper §3.3) + the combining 9th.
+#[inline(always)]
+pub(crate) fn ttli_component(c: &[f32; 64], g: [f32; 3], h: [f32; 3], k: [f32; 3]) -> f32 {
+    let [gx0, gx1, sx] = g;
+    let [gy0, gy1, sy] = h;
+    let [gz0, gz1, sz] = k;
+    let t000 = subcube_trilerp(c, 0, 0, 0, gx0, gy0, gz0);
+    let t100 = subcube_trilerp(c, 1, 0, 0, gx1, gy0, gz0);
+    let t010 = subcube_trilerp(c, 0, 1, 0, gx0, gy1, gz0);
+    let t110 = subcube_trilerp(c, 1, 1, 0, gx1, gy1, gz0);
+    let t001 = subcube_trilerp(c, 0, 0, 1, gx0, gy0, gz1);
+    let t101 = subcube_trilerp(c, 1, 0, 1, gx1, gy0, gz1);
+    let t011 = subcube_trilerp(c, 0, 1, 1, gx0, gy1, gz1);
+    let t111 = subcube_trilerp(c, 1, 1, 1, gx1, gy1, gz1);
+    // 9th trilerp: partition of unity makes the combination itself a lerp
+    // with fractions (sx, sy, sz).
+    let x0 = lerp(t000, t100, sx);
+    let x1 = lerp(t010, t110, sx);
+    let x2 = lerp(t001, t101, sx);
+    let x3 = lerp(t011, t111, sx);
+    let y0 = lerp(x0, x1, sy);
+    let y1 = lerp(x2, x3, sy);
+    lerp(y0, y1, sz)
+}
+
+impl Interpolator for Ttli {
+    fn name(&self) -> &'static str {
+        "Thread per Tile (Interp.)"
+    }
+
+    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+        check_extent(grid, vol_dims);
+        let [dx, dy, dz] = grid.tile;
+        let lx = LerpLut::new(dx);
+        let ly = LerpLut::new(dy);
+        let lz = LerpLut::new(dz);
+        let mut out = VectorField::zeros(vol_dims);
+        let chunk = vol_dims.nx * vol_dims.ny * dz;
+        par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, chunk, |tz, ox, oy, oz| {
+            let z_lim = (vol_dims.nz - tz * dz).min(dz);
+            for ty in 0..grid.tiles[1] {
+                let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
+                if y_lim == 0 {
+                    continue;
+                }
+                for tx in 0..grid.tiles[0] {
+                    let x_lim = vol_dims.nx.saturating_sub(tx * dx).min(dx);
+                    if x_lim == 0 {
+                        continue;
+                    }
+                    let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
+                    grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
+                    for lz_ in 0..z_lim {
+                        let wz = lz.at(lz_);
+                        for ly_ in 0..y_lim {
+                            let wy = ly.at(ly_);
+                            let row = ((lz_ * vol_dims.ny) + (ty * dy + ly_)) * vol_dims.nx
+                                + tx * dx;
+                            for lx_ in 0..x_lim {
+                                let wx = lx.at(lx_);
+                                ox[row + lx_] = ttli_component(&cx, wx, wy, wz);
+                                oy[row + lx_] = ttli_component(&cy, wx, wy, wz);
+                                oz[row + lx_] = ttli_component(&cz, wx, wy, wz);
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::reference::interpolate_f64;
+    use crate::bspline::tt::Tt;
+
+    #[test]
+    fn close_to_reference() {
+        let vd = Dims::new(20, 20, 20);
+        let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
+        g.randomize(21, 5.0);
+        let f = Ttli.interpolate(&g, vd);
+        let r = interpolate_f64(&g, vd);
+        assert!(f.mean_abs_diff_f64(&r.x, &r.y, &r.z) < 1e-5);
+    }
+
+    #[test]
+    fn more_accurate_than_weighted_sum_on_average() {
+        // Table 3's claim: the FMA/trilerp formulation roughly halves the
+        // error vs the direct f32 sum. Check the direction of the effect
+        // across several seeds (per-seed noise can flip small cases).
+        let vd = Dims::new(30, 30, 30);
+        let mut err_tt = 0.0;
+        let mut err_ttli = 0.0;
+        for seed in 0..5 {
+            let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
+            g.randomize(seed, 10.0);
+            let r = interpolate_f64(&g, vd);
+            err_tt += Tt.interpolate(&g, vd).mean_abs_diff_f64(&r.x, &r.y, &r.z);
+            err_ttli += Ttli.interpolate(&g, vd).mean_abs_diff_f64(&r.x, &r.y, &r.z);
+        }
+        assert!(
+            err_ttli < err_tt,
+            "TTLI ({err_ttli}) should beat TT ({err_tt}) on accuracy"
+        );
+    }
+
+    #[test]
+    fn exact_on_constant_grids() {
+        let vd = Dims::new(12, 12, 12);
+        let mut g = ControlGrid::zeros(vd, [4, 4, 4]);
+        for i in 0..g.len() {
+            g.x[i] = -3.25;
+            g.y[i] = 1.5;
+            g.z[i] = 0.125;
+        }
+        let f = Ttli.interpolate(&g, vd);
+        // Lerp of equal endpoints is exact in floating point.
+        assert!(f.x.iter().all(|&v| v == -3.25));
+        assert!(f.y.iter().all(|&v| v == 1.5));
+        assert!(f.z.iter().all(|&v| v == 0.125));
+    }
+
+    #[test]
+    fn all_paper_tile_sizes_valid() {
+        for &t in &[3usize, 4, 5, 6, 7] {
+            let vd = Dims::new(3 * t, 2 * t, t + 1);
+            let mut g = ControlGrid::zeros(vd, [t, t, t]);
+            g.randomize(100 + t as u64, 3.0);
+            let f = Ttli.interpolate(&g, vd);
+            let r = interpolate_f64(&g, vd);
+            assert!(f.mean_abs_diff_f64(&r.x, &r.y, &r.z) < 1e-5, "tile {t}");
+        }
+    }
+}

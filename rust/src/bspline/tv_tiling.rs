@@ -1,0 +1,121 @@
+//! Thread-per-Voxel *with tiling* — the Ellingwood-style baseline the paper
+//! calls "TV-tiling" (§2.2, §5.1). One block of work per tile: the tile's
+//! 4×4×4 control points are staged once into a shared buffer (the
+//! shared-memory analog), then every voxel of the tile computes its weighted
+//! sum reading from that buffer. Compared to [`super::tv`] this removes the
+//! per-voxel global gathers; compared to [`super::tt`] the staging buffer is
+//! re-read per voxel (the paper's Figure 3, Step 2 left).
+
+use super::coeffs::WeightLut;
+use super::{check_extent, ControlGrid, Interpolator};
+use crate::util::threadpool::par_chunks_mut3;
+use crate::volume::{Dims, VectorField};
+
+pub struct TvTiling;
+
+impl Interpolator for TvTiling {
+    fn name(&self) -> &'static str {
+        "Thread per Voxel (Tiling)"
+    }
+
+    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+        check_extent(grid, vol_dims);
+        let [dx, dy, dz] = grid.tile;
+        let lx = WeightLut::new(dx);
+        let ly = WeightLut::new(dy);
+        let lz = WeightLut::new(dz);
+        let mut out = VectorField::zeros(vol_dims);
+        // One task per z-layer of tiles; output chunk covers dz voxel slices.
+        let chunk = vol_dims.nx * vol_dims.ny * dz;
+        par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, chunk, |tz, ox, oy, oz| {
+            let z_lim = (vol_dims.nz - tz * dz).min(dz);
+            // "Shared memory" staging buffer, reused across the layer's tiles.
+            let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
+            for ty in 0..grid.tiles[1] {
+                let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
+                if y_lim == 0 {
+                    continue;
+                }
+                for tx in 0..grid.tiles[0] {
+                    let x_lim = vol_dims.nx.saturating_sub(tx * dx).min(dx);
+                    if x_lim == 0 {
+                        continue;
+                    }
+                    // Step 1: global -> shared, once per tile (64 CPs).
+                    grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
+                    // Step 2: every voxel re-reads the staged cube.
+                    for lz_ in 0..z_lim {
+                        let wz = lz.at(lz_);
+                        for ly_ in 0..y_lim {
+                            let wy = ly.at(ly_);
+                            let row = ((lz_ * vol_dims.ny) + (ty * dy + ly_)) * vol_dims.nx
+                                + tx * dx;
+                            for lx_ in 0..x_lim {
+                                let wx = lx.at(lx_);
+                                let (mut ax, mut ay, mut az) = (0.0f32, 0.0f32, 0.0f32);
+                                let mut k = 0;
+                                for n in 0..4 {
+                                    for m in 0..4 {
+                                        let wzy = wz[n] * wy[m];
+                                        for l in 0..4 {
+                                            let w = wzy * wx[l];
+                                            ax += w * cx[k];
+                                            ay += w * cy[k];
+                                            az += w * cz[k];
+                                            k += 1;
+                                        }
+                                    }
+                                }
+                                let o = row + lx_;
+                                ox[o] = ax;
+                                oy[o] = ay;
+                                oz[o] = az;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::reference::interpolate_f64;
+    use crate::bspline::tv::Tv;
+
+    #[test]
+    fn agrees_with_tv_bitwise_on_shared_math() {
+        // Same weights, same summation order => identical f32 results.
+        let vd = Dims::new(20, 15, 10);
+        let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
+        g.randomize(7, 4.0);
+        let a = TvTiling.interpolate(&g, vd);
+        let b = Tv.interpolate(&g, vd);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.z, b.z);
+    }
+
+    #[test]
+    fn close_to_reference_on_partial_border_tiles() {
+        let vd = Dims::new(17, 13, 9); // not multiples of the tile
+        let mut g = ControlGrid::zeros(vd, [4, 4, 4]);
+        g.randomize(11, 3.0);
+        let f = TvTiling.interpolate(&g, vd);
+        let r = interpolate_f64(&g, vd);
+        assert!(f.mean_abs_diff_f64(&r.x, &r.y, &r.z) < 1e-5);
+    }
+
+    #[test]
+    fn tile_size_one_degenerates_gracefully() {
+        let vd = Dims::new(6, 6, 6);
+        let mut g = ControlGrid::zeros(vd, [1, 1, 1]);
+        g.randomize(2, 1.0);
+        let f = TvTiling.interpolate(&g, vd);
+        let r = interpolate_f64(&g, vd);
+        assert!(f.mean_abs_diff_f64(&r.x, &r.y, &r.z) < 1e-5);
+    }
+}

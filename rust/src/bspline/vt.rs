@@ -1,0 +1,145 @@
+//! Vector-per-Tile (paper §3.5) — CPU SIMD scheme #1.
+//!
+//! One thread owns a tile (register tiling of the control-point cube as in
+//! TT) and processes the `δx` voxels of each tile row *simultaneously*: the
+//! y/z part of the interpolation is shared by the whole row, so it is
+//! reduced first (per 4 x-columns), leaving a 4-point 1D interpolation per
+//! output voxel whose inner loop over the row is straight-line vectorizable
+//! (the paper's SIMD vector across x). Larger tiles fill more SIMD slots —
+//! the Figure 7 trend.
+
+use super::coeffs::LerpLut;
+use super::ttli::lerp;
+use super::{check_extent, ControlGrid, Interpolator};
+use crate::util::threadpool::par_chunks_mut3;
+use crate::volume::{Dims, VectorField};
+
+pub struct Vt;
+
+/// Reduce the 4×4 (y,z) plane of one x-column `l` of the cube with the lerp
+/// formulation: 4 bilerps + 1 combining bilerp = 15 lerps.
+#[inline(always)]
+fn reduce_yz(c: &[f32; 64], l: usize, gy: [f32; 3], gz: [f32; 3]) -> f32 {
+    let [gy0, gy1, sy] = gy;
+    let [gz0, gz1, sz] = gz;
+    #[inline(always)]
+    fn bilerp(c: &[f32; 64], base: usize, fy: f32, fz: f32) -> f32 {
+        let y0 = lerp(c[base], c[base + 4], fy);
+        let y1 = lerp(c[base + 16], c[base + 20], fy);
+        lerp(y0, y1, fz)
+    }
+    // Sub-squares of the (y,z) plane at column l: (m,n) ∈ {0,2}².
+    let t00 = bilerp(c, l, gy0, gz0);
+    let t10 = bilerp(c, l + 8, gy1, gz0);
+    let t01 = bilerp(c, l + 32, gy0, gz1);
+    let t11 = bilerp(c, l + 40, gy1, gz1);
+    let y0 = lerp(t00, t10, sy);
+    let y1 = lerp(t01, t11, sy);
+    lerp(y0, y1, sz)
+}
+
+impl Interpolator for Vt {
+    fn name(&self) -> &'static str {
+        "Vector per Tile"
+    }
+
+    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+        check_extent(grid, vol_dims);
+        let [dx, dy, dz] = grid.tile;
+        let lx = LerpLut::new(dx);
+        let ly = LerpLut::new(dy);
+        let lz = LerpLut::new(dz);
+        // De-interleave the x-LUT into three contiguous per-offset arrays so
+        // the row loop vectorizes cleanly.
+        let gx0: Vec<f32> = (0..dx).map(|a| lx.at(a)[0]).collect();
+        let gx1: Vec<f32> = (0..dx).map(|a| lx.at(a)[1]).collect();
+        let sx: Vec<f32> = (0..dx).map(|a| lx.at(a)[2]).collect();
+        let mut out = VectorField::zeros(vol_dims);
+        let chunk = vol_dims.nx * vol_dims.ny * dz;
+        par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, chunk, |tz, ox, oy, oz| {
+            let z_lim = (vol_dims.nz - tz * dz).min(dz);
+            for ty in 0..grid.tiles[1] {
+                let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
+                if y_lim == 0 {
+                    continue;
+                }
+                for tx in 0..grid.tiles[0] {
+                    let x_lim = vol_dims.nx.saturating_sub(tx * dx).min(dx);
+                    if x_lim == 0 {
+                        continue;
+                    }
+                    let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
+                    grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
+                    for lz_ in 0..z_lim {
+                        let gz = lz.at(lz_);
+                        for ly_ in 0..y_lim {
+                            let gy = ly.at(ly_);
+                            // Shared y/z reduction: 4 x-columns per component.
+                            let colx: [f32; 4] =
+                                std::array::from_fn(|l| reduce_yz(&cx, l, gy, gz));
+                            let coly: [f32; 4] =
+                                std::array::from_fn(|l| reduce_yz(&cy, l, gy, gz));
+                            let colz: [f32; 4] =
+                                std::array::from_fn(|l| reduce_yz(&cz, l, gy, gz));
+                            let row = ((lz_ * vol_dims.ny) + (ty * dy + ly_)) * vol_dims.nx
+                                + tx * dx;
+                            // Vector loop over the tile row: 3 lerps per
+                            // component, no cross-iteration dependency.
+                            for a in 0..x_lim {
+                                let (g0, g1, s) = (gx0[a], gx1[a], sx[a]);
+                                let vx =
+                                    lerp(lerp(colx[0], colx[1], g0), lerp(colx[2], colx[3], g1), s);
+                                let vy =
+                                    lerp(lerp(coly[0], coly[1], g0), lerp(coly[2], coly[3], g1), s);
+                                let vz =
+                                    lerp(lerp(colz[0], colz[1], g0), lerp(colz[2], colz[3], g1), s);
+                                ox[row + a] = vx;
+                                oy[row + a] = vy;
+                                oz[row + a] = vz;
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::reference::interpolate_f64;
+
+    #[test]
+    fn close_to_reference() {
+        let vd = Dims::new(25, 15, 20);
+        let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
+        g.randomize(31, 5.0);
+        let f = Vt.interpolate(&g, vd);
+        let r = interpolate_f64(&g, vd);
+        assert!(f.mean_abs_diff_f64(&r.x, &r.y, &r.z) < 1e-5);
+    }
+
+    #[test]
+    fn matches_ttli_within_fma_reassociation() {
+        use crate::bspline::ttli::Ttli;
+        let vd = Dims::new(14, 14, 14);
+        let mut g = ControlGrid::zeros(vd, [7, 7, 7]);
+        g.randomize(8, 4.0);
+        let a = Vt.interpolate(&g, vd);
+        let b = Ttli.interpolate(&g, vd);
+        // Different lerp nesting order → tiny f32 differences only.
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn anisotropic_tiles() {
+        let vd = Dims::new(18, 12, 10);
+        let mut g = ControlGrid::zeros(vd, [6, 4, 5]);
+        g.randomize(77, 3.0);
+        let f = Vt.interpolate(&g, vd);
+        let r = interpolate_f64(&g, vd);
+        assert!(f.mean_abs_diff_f64(&r.x, &r.y, &r.z) < 1e-5);
+    }
+}

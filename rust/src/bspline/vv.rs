@@ -1,0 +1,168 @@
+//! Vector-per-Voxel (paper §3.5) — CPU SIMD scheme #2.
+//!
+//! Each voxel's eight sub-cube trilinear interpolations run in eight SIMD
+//! lanes ("the SIMD vector length is equal to the number of sub-cubes"):
+//! the gathered cube is transposed once per tile into eight corner lane
+//! arrays (`corner[dx+2dy+4dz][lane]`, lane = sub-cube index), then every
+//! voxel performs 7 *vector* lerps of width 8 plus the scalar 9th trilerp.
+
+use super::coeffs::LerpLut;
+use super::ttli::lerp;
+use super::{check_extent, ControlGrid, Interpolator};
+use crate::util::threadpool::par_chunks_mut3;
+use crate::volume::{Dims, VectorField};
+
+pub struct Vv;
+
+/// Lane-transposed cube: `corner[c][q]` is corner `c = dx + 2dy + 4dz` of
+/// sub-cube `q = a + 2b + 4c` (paper Figure 1's colored cubes as lanes).
+#[inline]
+fn lanes(cube: &[f32; 64]) -> [[f32; 8]; 8] {
+    let mut out = [[0.0f32; 8]; 8];
+    for q in 0..8 {
+        let (a, b, c) = (q & 1, (q >> 1) & 1, (q >> 2) & 1);
+        let base = 2 * a + 8 * b + 32 * c;
+        for (corner, slot) in out.iter_mut().enumerate() {
+            let (dx, dy, dz) = (corner & 1, (corner >> 1) & 1, (corner >> 2) & 1);
+            slot[q] = cube[base + dx + 4 * dy + 16 * dz];
+        }
+    }
+    out
+}
+
+/// Vector lerp over the 8 lanes — compiles to a SIMD fma on AVX targets.
+#[inline(always)]
+fn vlerp(a: &[f32; 8], b: &[f32; 8], t: &[f32; 8]) -> [f32; 8] {
+    std::array::from_fn(|q| t[q].mul_add(b[q] - a[q], a[q]))
+}
+
+/// Evaluate one component from the lane-transposed cube.
+#[inline(always)]
+fn vv_component(ln: &[[f32; 8]; 8], fx: &[f32; 8], fy: &[f32; 8], fz: &[f32; 8], s: [f32; 3]) -> f32 {
+    // 7 vector lerps: all 8 sub-cube trilerps at once.
+    let x00 = vlerp(&ln[0], &ln[1], fx);
+    let x10 = vlerp(&ln[2], &ln[3], fx);
+    let x01 = vlerp(&ln[4], &ln[5], fx);
+    let x11 = vlerp(&ln[6], &ln[7], fx);
+    let y0 = vlerp(&x00, &x10, fy);
+    let y1 = vlerp(&x01, &x11, fy);
+    let t = vlerp(&y0, &y1, fz);
+    // 9th trilerp combining the 8 lane results (scalar).
+    let [sx, sy, sz] = s;
+    let a0 = lerp(t[0], t[1], sx);
+    let a1 = lerp(t[2], t[3], sx);
+    let a2 = lerp(t[4], t[5], sx);
+    let a3 = lerp(t[6], t[7], sx);
+    let b0 = lerp(a0, a1, sy);
+    let b1 = lerp(a2, a3, sy);
+    lerp(b0, b1, sz)
+}
+
+impl Interpolator for Vv {
+    fn name(&self) -> &'static str {
+        "Vector per Voxel"
+    }
+
+    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+        check_extent(grid, vol_dims);
+        let [dx, dy, dz] = grid.tile;
+        let lx = LerpLut::new(dx);
+        let ly = LerpLut::new(dy);
+        let lz = LerpLut::new(dz);
+        let mut out = VectorField::zeros(vol_dims);
+        let chunk = vol_dims.nx * vol_dims.ny * dz;
+        par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, chunk, |tz, ox, oy, oz| {
+            let z_lim = (vol_dims.nz - tz * dz).min(dz);
+            for ty in 0..grid.tiles[1] {
+                let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
+                if y_lim == 0 {
+                    continue;
+                }
+                for tx in 0..grid.tiles[0] {
+                    let x_lim = vol_dims.nx.saturating_sub(tx * dx).min(dx);
+                    if x_lim == 0 {
+                        continue;
+                    }
+                    let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
+                    grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
+                    let lnx = lanes(&cx);
+                    let lny = lanes(&cy);
+                    let lnz = lanes(&cz);
+                    for lz_ in 0..z_lim {
+                        let [gz0, gz1, sz] = lz.at(lz_);
+                        // fz per lane: lane q uses gz0 if its c-bit is 0.
+                        let fz: [f32; 8] =
+                            std::array::from_fn(|q| if q & 4 == 0 { gz0 } else { gz1 });
+                        for ly_ in 0..y_lim {
+                            let [gy0, gy1, sy] = ly.at(ly_);
+                            let fy: [f32; 8] =
+                                std::array::from_fn(|q| if q & 2 == 0 { gy0 } else { gy1 });
+                            let row = ((lz_ * vol_dims.ny) + (ty * dy + ly_)) * vol_dims.nx
+                                + tx * dx;
+                            for lx_ in 0..x_lim {
+                                let [gx0, gx1, sx] = lx.at(lx_);
+                                let fx: [f32; 8] =
+                                    std::array::from_fn(|q| if q & 1 == 0 { gx0 } else { gx1 });
+                                let s = [sx, sy, sz];
+                                ox[row + lx_] = vv_component(&lnx, &fx, &fy, &fz, s);
+                                oy[row + lx_] = vv_component(&lny, &fx, &fy, &fz, s);
+                                oz[row + lx_] = vv_component(&lnz, &fx, &fy, &fz, s);
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::reference::interpolate_f64;
+    use crate::bspline::ttli::Ttli;
+
+    #[test]
+    fn identical_to_ttli_bitwise() {
+        // VV evaluates exactly the same lerp tree as TTLI, just with the 8
+        // sub-cubes laid out as lanes — results must match bit for bit.
+        let vd = Dims::new(20, 15, 10);
+        let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
+        g.randomize(17, 6.0);
+        let a = Vv.interpolate(&g, vd);
+        let b = Ttli.interpolate(&g, vd);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.z, b.z);
+    }
+
+    #[test]
+    fn close_to_reference_small_tiles() {
+        let vd = Dims::new(9, 9, 9);
+        let mut g = ControlGrid::zeros(vd, [3, 3, 3]);
+        g.randomize(23, 4.0);
+        let f = Vv.interpolate(&g, vd);
+        let r = interpolate_f64(&g, vd);
+        assert!(f.mean_abs_diff_f64(&r.x, &r.y, &r.z) < 1e-5);
+    }
+
+    #[test]
+    fn lane_transpose_is_involution_consistent() {
+        // Sub-cube q, corner c of lanes() must equal the cube entry that
+        // subcube_trilerp reads.
+        let mut cube = [0.0f32; 64];
+        for (i, v) in cube.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        let ln = lanes(&cube);
+        for q in 0..8 {
+            let (a, b, c) = (q & 1, (q >> 1) & 1, (q >> 2) & 1);
+            for corner in 0..8 {
+                let (dx, dy, dz) = (corner & 1, (corner >> 1) & 1, (corner >> 2) & 1);
+                let expect = (2 * a + dx) + 4 * (2 * b + dy) + 16 * (2 * c + dz);
+                assert_eq!(ln[corner][q], expect as f32);
+            }
+        }
+    }
+}

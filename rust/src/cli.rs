@@ -1,0 +1,136 @@
+//! Hand-rolled CLI argument parser (the vendored crate set has no clap):
+//! `--flag value`, `--flag=value`, boolean `--flag`, and positionals.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32, String> {
+        self.get_f64(key, default as f64).map(|v| v as f32)
+    }
+
+    /// Parse "X,Y,Z" triples (e.g. --dims 64,64,64).
+    pub fn get_triple(&self, key: &str, default: [usize; 3]) -> Result<[usize; 3], String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                let parts: Vec<&str> = v.split(',').collect();
+                if parts.len() != 3 {
+                    return Err(format!("--{key} expects X,Y,Z, got '{v}'"));
+                }
+                let mut out = [0usize; 3];
+                for (i, p) in parts.iter().enumerate() {
+                    out[i] = p
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("--{key}: '{p}' is not an integer"))?;
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = parse("register --method ttli --levels 3 data/x.vol --dry-run");
+        assert_eq!(a.positional, vec!["register", "data/x.vol"]);
+        assert_eq!(a.get("method"), Some("ttli"));
+        assert_eq!(a.get_usize("levels", 1).unwrap(), 3);
+        assert!(a.has("dry-run"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn equals_form_and_defaults() {
+        let a = parse("x --scale=0.5");
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn triples() {
+        let a = parse("x --dims 64,32,16");
+        assert_eq!(a.get_triple("dims", [1, 1, 1]).unwrap(), [64, 32, 16]);
+        assert!(parse("x --dims 64,32").get_triple("dims", [1; 3]).is_err());
+        assert!(parse("x --dims a,b,c").get_triple("dims", [1; 3]).is_err());
+    }
+
+    #[test]
+    fn bad_numbers_are_errors() {
+        let a = parse("x --levels abc");
+        assert!(a.get_usize("levels", 1).is_err());
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse("x --check --method tv");
+        assert!(a.has("check"));
+        assert_eq!(a.get("method"), Some("tv"));
+    }
+}

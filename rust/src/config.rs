@@ -1,0 +1,158 @@
+//! Configuration system: registration/serving settings loadable from a JSON
+//! file (`--config path.json`) with CLI flag overrides layered on top —
+//! the launcher contract used by `ffdreg register` and `ffdreg serve`.
+
+use std::path::Path;
+
+use crate::bspline::Method;
+use crate::cli::Args;
+use crate::ffd::FfdConfig;
+use crate::util::json::Json;
+
+/// Full launcher configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub ffd: FfdConfig,
+    /// Affine pre-alignment before FFD (NiftyReg's aladin→f3d pipeline).
+    pub affine_first: bool,
+    pub server_addr: String,
+    pub workers: usize,
+    pub queue_capacity: usize,
+    pub max_batch: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            ffd: FfdConfig::default(),
+            affine_first: true,
+            server_addr: "127.0.0.1:7847".to_string(),
+            workers: crate::util::threadpool::num_threads(),
+            queue_capacity: 256,
+            max_batch: 8,
+        }
+    }
+}
+
+impl Config {
+    /// Parse from a JSON document (all fields optional).
+    pub fn from_json(j: &Json) -> Result<Config, String> {
+        let mut c = Config::default();
+        let ffd = j.get("ffd");
+        if let Some(v) = ffd.get("levels").as_usize() {
+            c.ffd.levels = v;
+        }
+        if let Some(v) = ffd.get("max_iter").as_usize() {
+            c.ffd.max_iter = v;
+        }
+        if let Some(v) = ffd.get("tile").as_usize() {
+            c.ffd.tile = [v, v, v];
+        }
+        if let Some(v) = ffd.get("bending_weight").as_f64() {
+            c.ffd.bending_weight = v as f32;
+        }
+        if let Some(m) = ffd.get("method").as_str() {
+            c.ffd.method =
+                Method::parse(m).ok_or_else(|| format!("unknown method '{m}'"))?;
+        }
+        if let Some(v) = j.get("affine_first").as_bool() {
+            c.affine_first = v;
+        }
+        if let Some(v) = j.get("server_addr").as_str() {
+            c.server_addr = v.to_string();
+        }
+        if let Some(v) = j.get("workers").as_usize() {
+            c.workers = v;
+        }
+        if let Some(v) = j.get("queue_capacity").as_usize() {
+            c.queue_capacity = v;
+        }
+        if let Some(v) = j.get("max_batch").as_usize() {
+            c.max_batch = v;
+        }
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::from_json(&j)
+    }
+
+    /// Layer CLI overrides over this config.
+    pub fn apply_args(mut self, args: &Args) -> Result<Config, String> {
+        if let Some(m) = args.get("method") {
+            self.ffd.method = Method::parse(m).ok_or_else(|| format!("unknown method '{m}'"))?;
+        }
+        self.ffd.levels = args.get_usize("levels", self.ffd.levels)?;
+        self.ffd.max_iter = args.get_usize("iters", self.ffd.max_iter)?;
+        let t = args.get_usize("tile", self.ffd.tile[0])?;
+        self.ffd.tile = [t, t, t];
+        self.ffd.bending_weight = args.get_f32("be", self.ffd.bending_weight)?;
+        if args.has("no-affine") {
+            self.affine_first = false;
+        }
+        if let Some(a) = args.get("addr") {
+            self.server_addr = a.to_string();
+        }
+        self.workers = args.get_usize("workers", self.workers)?;
+        self.queue_capacity = args.get_usize("queue", self.queue_capacity)?;
+        self.max_batch = args.get_usize("batch", self.max_batch)?;
+        Ok(self)
+    }
+
+    /// Resolve: default → optional --config file → CLI flags.
+    pub fn resolve(args: &Args) -> Result<Config, String> {
+        let base = match args.get("config") {
+            Some(p) => Config::load(Path::new(p))?,
+            None => Config::default(),
+        };
+        base.apply_args(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert_eq!(c.ffd.tile, [5, 5, 5]);
+        assert_eq!(c.ffd.method, Method::Ttli);
+        assert!(c.affine_first);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = Json::parse(
+            r#"{"ffd":{"levels":2,"method":"tv","tile":4,"bending_weight":0.01},
+                "affine_first":false,"workers":3}"#,
+        )
+        .unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.ffd.levels, 2);
+        assert_eq!(c.ffd.method, Method::Tv);
+        assert_eq!(c.ffd.tile, [4, 4, 4]);
+        assert!(!c.affine_first);
+        assert_eq!(c.workers, 3);
+    }
+
+    #[test]
+    fn cli_overrides_json() {
+        let j = Json::parse(r#"{"ffd":{"method":"tv"}}"#).unwrap();
+        let base = Config::from_json(&j).unwrap();
+        let args = crate::cli::Args::parse(
+            ["--method", "ttli", "--levels", "4"].iter().map(|s| s.to_string()),
+        );
+        let c = base.apply_args(&args).unwrap();
+        assert_eq!(c.ffd.method, Method::Ttli);
+        assert_eq!(c.ffd.levels, 4);
+    }
+
+    #[test]
+    fn unknown_method_is_an_error() {
+        let j = Json::parse(r#"{"ffd":{"method":"warp9"}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Batch formation: pull the queue head plus every *consecutive* compatible
+//! job (same batch key) up to the cap. Consecutive-only keeps FIFO fairness
+//! — a stream of alternating shapes never starves either shape, while
+//! homogeneous bursts (the common case: one registration level issues many
+//! identical-shape requests) fuse into full batches.
+
+use std::collections::VecDeque;
+
+/// Extract a batch from the queue front. `key_of` projects the batch key.
+pub fn form_batch<T, K: PartialEq>(
+    queue: &mut VecDeque<T>,
+    max_batch: usize,
+    key_of: impl Fn(&T) -> K,
+) -> Vec<T> {
+    let mut batch = Vec::new();
+    let Some(first) = queue.pop_front() else {
+        return batch;
+    };
+    let key = key_of(&first);
+    batch.push(first);
+    while batch.len() < max_batch {
+        match queue.front() {
+            Some(next) if key_of(next) == key => {
+                batch.push(queue.pop_front().unwrap());
+            }
+            _ => break,
+        }
+    }
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_queue_gives_empty_batch() {
+        let mut q: VecDeque<u32> = VecDeque::new();
+        assert!(form_batch(&mut q, 4, |x| *x).is_empty());
+    }
+
+    #[test]
+    fn homogeneous_run_fills_batch_up_to_cap() {
+        let mut q: VecDeque<(u32, char)> =
+            [(1, 'a'), (2, 'a'), (3, 'a'), (4, 'a'), (5, 'a')].into();
+        let b = form_batch(&mut q, 3, |x| x.1);
+        assert_eq!(b.len(), 3);
+        assert_eq!(q.len(), 2);
+        assert_eq!(b[0].0, 1);
+    }
+
+    #[test]
+    fn stops_at_first_incompatible_job() {
+        let mut q: VecDeque<(u32, char)> = [(1, 'a'), (2, 'b'), (3, 'a')].into();
+        let b = form_batch(&mut q, 8, |x| x.1);
+        assert_eq!(b.len(), 1, "must not reorder past the 'b' job");
+        assert_eq!(q.front().unwrap().0, 2);
+    }
+
+    #[test]
+    fn preserves_fifo_order_within_batch() {
+        let mut q: VecDeque<(u32, char)> = [(7, 'x'), (8, 'x'), (9, 'x')].into();
+        let b = form_batch(&mut q, 8, |x| x.1);
+        assert_eq!(b.iter().map(|x| x.0).collect::<Vec<_>>(), vec![7, 8, 9]);
+    }
+}

@@ -1,0 +1,97 @@
+//! Job types flowing through the coordinator.
+
+use std::sync::Arc;
+
+use crate::bspline::{ControlGrid, Method};
+use crate::volume::{Dims, VectorField};
+
+/// Which execution engine serves a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Engine {
+    /// In-process rust kernel.
+    Cpu(Method),
+    /// AOT-compiled JAX/Pallas artifact through PJRT.
+    Pjrt,
+}
+
+impl Engine {
+    pub fn parse(s: &str) -> Option<Engine> {
+        if let Some(rest) = s.strip_prefix("cpu:") {
+            return Method::parse(rest).map(Engine::Cpu);
+        }
+        match s {
+            "pjrt" => Some(Engine::Pjrt),
+            other => Method::parse(other).map(Engine::Cpu),
+        }
+    }
+
+    pub fn key(&self) -> String {
+        match self {
+            Engine::Cpu(m) => format!("cpu:{}", m.key()),
+            Engine::Pjrt => "pjrt".to_string(),
+        }
+    }
+}
+
+/// A dense-deformation-field request: the coordinator's unit of work.
+#[derive(Clone, Debug)]
+pub struct InterpolateJob {
+    pub id: u64,
+    pub grid: Arc<ControlGrid>,
+    pub vol_dims: Dims,
+    pub engine: Engine,
+}
+
+impl InterpolateJob {
+    /// Batching key: jobs with identical shape+engine can share a batch
+    /// (same executable / same LUTs).
+    pub fn batch_key(&self) -> (Dims, [usize; 3], String) {
+        (self.vol_dims, self.grid.tile, self.engine.key())
+    }
+}
+
+/// Completed-job result.
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub id: u64,
+    pub result: Result<VectorField, String>,
+    /// Queue wait (s) and execution time (s), for latency accounting.
+    pub wait_s: f64,
+    pub exec_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_parsing() {
+        assert_eq!(Engine::parse("pjrt"), Some(Engine::Pjrt));
+        assert_eq!(Engine::parse("cpu:ttli"), Some(Engine::Cpu(Method::Ttli)));
+        assert_eq!(Engine::parse("ttli"), Some(Engine::Cpu(Method::Ttli)));
+        assert_eq!(Engine::parse("cpu:nope"), None);
+        assert_eq!(Engine::parse(""), None);
+    }
+
+    #[test]
+    fn engine_key_round_trips() {
+        for e in [Engine::Pjrt, Engine::Cpu(Method::Tv), Engine::Cpu(Method::Vv)] {
+            assert_eq!(Engine::parse(&e.key()), Some(e));
+        }
+    }
+
+    #[test]
+    fn batch_key_groups_compatible_jobs() {
+        let grid = Arc::new(ControlGrid::zeros(Dims::new(20, 20, 20), [5, 5, 5]));
+        let a = InterpolateJob {
+            id: 1,
+            grid: grid.clone(),
+            vol_dims: Dims::new(20, 20, 20),
+            engine: Engine::Cpu(Method::Ttli),
+        };
+        let b = InterpolateJob { id: 2, ..a.clone() };
+        assert_eq!(a.batch_key(), b.batch_key());
+        let c = InterpolateJob { id: 3, engine: Engine::Pjrt, ..a.clone() };
+        assert_ne!(a.batch_key(), c.batch_key());
+    }
+}

@@ -1,0 +1,108 @@
+//! Service metrics: lock-free counters + a coarse log2 latency histogram,
+//! exposed through the server's STATS op and printed by the examples.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Histogram over latencies with 1µs–~1000s log2 buckets.
+const BUCKETS: usize = 32;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_jobs: AtomicU64,
+    /// Voxels interpolated (throughput numerator).
+    pub voxels: AtomicU64,
+    exec_hist: [AtomicU64; BUCKETS],
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bucket(seconds: f64) -> usize {
+        let micros = (seconds * 1e6).max(1.0);
+        (micros.log2() as usize).min(BUCKETS - 1)
+    }
+
+    pub fn record_exec(&self, seconds: f64) {
+        self.exec_hist[Self::bucket(seconds)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate latency percentile from the histogram (bucket midpoint).
+    pub fn exec_percentile(&self, p: f64) -> f64 {
+        let counts: Vec<u64> =
+            self.exec_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // Midpoint of the 2^i .. 2^(i+1) µs bucket.
+                return (1u64 << i) as f64 * 1.5e-6;
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Render a compact JSON string of the counters.
+    pub fn snapshot_json(&self) -> String {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("submitted", Json::Num(self.submitted.load(Ordering::Relaxed) as f64)),
+            ("rejected", Json::Num(self.rejected.load(Ordering::Relaxed) as f64)),
+            ("completed", Json::Num(self.completed.load(Ordering::Relaxed) as f64)),
+            ("failed", Json::Num(self.failed.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("batched_jobs", Json::Num(self.batched_jobs.load(Ordering::Relaxed) as f64)),
+            ("voxels", Json::Num(self.voxels.load(Ordering::Relaxed) as f64)),
+            ("exec_p50_s", Json::Num(self.exec_percentile(50.0))),
+            ("exec_p99_s", Json::Num(self.exec_percentile(99.0))),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_monotone() {
+        let m = Metrics::new();
+        for i in 1..=100 {
+            m.record_exec(i as f64 * 1e-5);
+        }
+        let p50 = m.exec_percentile(50.0);
+        let p99 = m.exec_percentile(99.0);
+        assert!(p50 > 0.0 && p99 >= p50, "p50={p50} p99={p99}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        assert_eq!(Metrics::new().exec_percentile(50.0), 0.0);
+    }
+
+    #[test]
+    fn snapshot_is_valid_json() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.record_exec(0.001);
+        let j = crate::util::json::Json::parse(&m.snapshot_json()).unwrap();
+        assert_eq!(j.get("submitted").as_usize(), Some(3));
+    }
+
+    #[test]
+    fn bucket_edges_are_safe() {
+        assert_eq!(Metrics::bucket(0.0), 0);
+        assert_eq!(Metrics::bucket(1e9), BUCKETS - 1);
+    }
+}

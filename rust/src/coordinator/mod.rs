@@ -1,0 +1,16 @@
+//! L3 coordinator (DESIGN.md S17): the service layer that turns the BSI /
+//! FFD kernels into a deployable system — job types, a bounded-queue worker
+//! pool with backpressure, a shape-keyed request batcher, engine routing
+//! (in-process rust kernels or AOT PJRT artifacts), service metrics, and a
+//! TCP line-protocol server.
+
+pub mod batch;
+pub mod job;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+pub mod service;
+
+pub use job::{Engine, InterpolateJob, JobOutcome};
+pub use scheduler::{Scheduler, SchedulerConfig, SubmitError};
+pub use service::InterpolationService;

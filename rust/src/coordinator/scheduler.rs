@@ -1,0 +1,290 @@
+//! Worker-pool scheduler with a bounded queue (backpressure) and batch
+//! formation. Jobs are grouped by [`InterpolateJob::batch_key`] as they are
+//! dequeued — compatible consecutive requests share one worker pass (one
+//! executable lookup / LUT build), the dynamic-batching idea of serving
+//! systems applied to interpolation requests.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use super::batch::form_batch;
+use super::job::{InterpolateJob, JobOutcome};
+use super::metrics::Metrics;
+use super::service::InterpolationService;
+
+/// Scheduler tuning knobs.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    pub workers: usize,
+    /// Queue capacity; submissions beyond it are rejected (backpressure).
+    pub queue_capacity: usize,
+    /// Max jobs fused into one batch.
+    pub max_batch: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            workers: crate::util::threadpool::num_threads(),
+            queue_capacity: 256,
+            max_batch: 8,
+        }
+    }
+}
+
+/// Submission failure.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    QueueFull,
+    ShuttingDown,
+}
+
+struct Queued {
+    job: InterpolateJob,
+    enqueued: Instant,
+    reply: std::sync::mpsc::Sender<JobOutcome>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Queued>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// The coordinator's job scheduler.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    cfg: SchedulerConfig,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Scheduler {
+    pub fn start(service: InterpolationService, cfg: SchedulerConfig) -> Scheduler {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let metrics = Arc::new(Metrics::new());
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for _ in 0..cfg.workers.max(1) {
+            let shared = shared.clone();
+            let service = service.clone();
+            let metrics = metrics.clone();
+            let max_batch = cfg.max_batch.max(1);
+            workers.push(std::thread::spawn(move || {
+                worker_loop(shared, service, metrics, max_batch)
+            }));
+        }
+        Scheduler { shared, cfg, metrics, next_id: AtomicU64::new(1), workers }
+    }
+
+    /// Allocate a job id.
+    pub fn next_job_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit a job; the outcome arrives on the returned receiver.
+    pub fn submit(
+        &self,
+        job: InterpolateJob,
+    ) -> Result<std::sync::mpsc::Receiver<JobOutcome>, SubmitError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(SubmitError::ShuttingDown);
+        }
+        let (tx, rx) = std::sync::mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.len() >= self.cfg.queue_capacity {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::QueueFull);
+            }
+            q.push_back(Queued { job, enqueued: Instant::now(), reply: tx });
+        }
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.shared.available.notify_one();
+        Ok(rx)
+    }
+
+    /// Submit and block for the result.
+    pub fn submit_and_wait(&self, job: InterpolateJob) -> Result<JobOutcome, SubmitError> {
+        let rx = self.submit(job)?;
+        rx.recv().map_err(|_| SubmitError::ShuttingDown)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Stop accepting work, drain, and join the workers.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    shared: Arc<Shared>,
+    service: InterpolationService,
+    metrics: Arc<Metrics>,
+    max_batch: usize,
+) {
+    loop {
+        // Take a batch of compatible jobs from the queue head.
+        let batch: Vec<Queued> = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+            form_batch(&mut q, max_batch, |queued| queued.job.batch_key())
+        };
+        if batch.len() > 1 {
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            metrics.batched_jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        }
+        for queued in batch {
+            let wait_s = queued.enqueued.elapsed().as_secs_f64();
+            let t0 = Instant::now();
+            let result = service.execute(&queued.job);
+            let exec_s = t0.elapsed().as_secs_f64();
+            metrics.record_exec(exec_s);
+            match &result {
+                Ok(f) => {
+                    metrics.completed.fetch_add(1, Ordering::Relaxed);
+                    metrics.voxels.fetch_add(f.dims.count() as u64, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            // Receiver may have hung up (fire-and-forget); ignore.
+            let _ = queued.reply.send(JobOutcome {
+                id: queued.job.id,
+                result,
+                wait_s,
+                exec_s,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::{ControlGrid, Method};
+    use crate::coordinator::job::Engine;
+    use crate::volume::Dims;
+
+    fn mk_job(id: u64, engine: Engine) -> InterpolateJob {
+        let vd = Dims::new(10, 10, 10);
+        let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
+        grid.randomize(id, 1.0);
+        InterpolateJob { id, grid: Arc::new(grid), vol_dims: vd, engine }
+    }
+
+    #[test]
+    fn jobs_complete_with_results() {
+        let sched = Scheduler::start(
+            InterpolationService::new(None),
+            SchedulerConfig { workers: 2, queue_capacity: 16, max_batch: 4 },
+        );
+        let outcome = sched
+            .submit_and_wait(mk_job(1, Engine::Cpu(Method::Ttli)))
+            .unwrap();
+        assert_eq!(outcome.id, 1);
+        let field = outcome.result.unwrap();
+        assert_eq!(field.dims, Dims::new(10, 10, 10));
+        assert!(outcome.exec_s >= 0.0);
+        sched.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Single worker + tiny queue: flood with jobs, expect rejections.
+        let sched = Scheduler::start(
+            InterpolationService::new(None),
+            SchedulerConfig { workers: 1, queue_capacity: 2, max_batch: 1 },
+        );
+        let mut rejected = 0;
+        let mut receivers = vec![];
+        for i in 0..50 {
+            match sched.submit(mk_job(i, Engine::Cpu(Method::Tv))) {
+                Ok(rx) => receivers.push(rx),
+                Err(SubmitError::QueueFull) => rejected += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(rejected > 0, "tiny queue must reject under flood");
+        for rx in receivers {
+            let _ = rx.recv();
+        }
+        sched.shutdown();
+    }
+
+    #[test]
+    fn failed_jobs_report_errors_not_panics() {
+        let sched = Scheduler::start(
+            InterpolationService::new(None), // no PJRT runtime
+            SchedulerConfig { workers: 1, queue_capacity: 8, max_batch: 2 },
+        );
+        let outcome = sched.submit_and_wait(mk_job(9, Engine::Pjrt)).unwrap();
+        assert!(outcome.result.is_err());
+        assert_eq!(
+            sched.metrics.failed.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        sched.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_joins() {
+        let sched = Scheduler::start(InterpolationService::new(None), SchedulerConfig::default());
+        sched.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_jobs_all_complete() {
+        let sched = Scheduler::start(
+            InterpolationService::new(None),
+            SchedulerConfig { workers: 3, queue_capacity: 128, max_batch: 8 },
+        );
+        let receivers: Vec<_> = (0..40)
+            .map(|i| sched.submit(mk_job(i, Engine::Cpu(Method::Ttli))).unwrap())
+            .collect();
+        let mut ok = 0;
+        for rx in receivers {
+            if rx.recv().unwrap().result.is_ok() {
+                ok += 1;
+            }
+        }
+        assert_eq!(ok, 40);
+        assert_eq!(
+            sched.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+            40
+        );
+        sched.shutdown();
+    }
+}

@@ -1,0 +1,293 @@
+//! TCP line-protocol server: one JSON object per line in, one per line out.
+//! Built on std::net (the offline environment has no tokio); each
+//! connection gets a handler thread, all sharing the scheduler.
+//!
+//! Ops:
+//!   {"op":"ping"}
+//!     -> {"ok":true,"pong":true}
+//!   {"op":"interpolate","dims":[nz,ny,nx],"tile":5,"seed":1,"engine":"cpu:ttli"}
+//!     -> {"ok":true,"id":n,"checksum":c,"exec_s":t,"wait_s":w}
+//!        (the grid is generated server-side from the seed: the protocol
+//!         exercises scheduling/batching without shipping megabytes)
+//!   {"op":"register","reference":"a.vol","floating":"b.vol","method":"ttli",
+//!    "levels":2,"iters":20,"out":"warped.vol"(optional)}
+//!     -> {"ok":true,"cost":c,"ssim":s,"mae":m,"total_s":t,"bsi_s":b}
+//!        (volumes are read from server-local .vol paths — the IGS workflow
+//!         of submitting an intra-op scan for registration)
+//!   {"op":"stats"}
+//!     -> {"ok":true,"stats":{...}}
+//!   {"op":"shutdown"}   (stops the listener)
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::job::{Engine, InterpolateJob};
+use super::scheduler::{Scheduler, SubmitError};
+use crate::bspline::ControlGrid;
+use crate::util::json::Json;
+use crate::volume::Dims;
+
+/// A running server (owns the listener thread).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    pub fn start(addr: &str, scheduler: Arc<Scheduler>) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            // Poll-accept with a timeout so the stop flag is honored.
+            listener.set_nonblocking(true).ok();
+            let mut conns: Vec<std::thread::JoinHandle<()>> = vec![];
+            while !stop2.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let sched = scheduler.clone();
+                        let stop3 = stop2.clone();
+                        conns.push(std::thread::spawn(move || {
+                            handle_conn(stream, sched, stop3)
+                        }));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        Ok(Server { addr: local, stop, handle: Some(handle) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn err_line(msg: &str) -> String {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))]).to_string()
+}
+
+fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<AtomicBool>) {
+    // Read with a timeout so a stop request can't deadlock on an idle
+    // client: Server::stop joins this thread.
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(50)));
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        // read_line appends, so a partial line survives a timeout and is
+        // completed on the next pass.
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) if line.ends_with('\n') => {}
+            Ok(_) => continue, // partial line without newline yet
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+        let request = std::mem::take(&mut line);
+        if request.trim().is_empty() {
+            continue;
+        }
+        let response = handle_line(&request, &sched, &stop);
+        let closing = response.is_none();
+        let msg = response.unwrap_or_else(|| {
+            Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]).to_string()
+        });
+        if writer.write_all(msg.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            break;
+        }
+        if closing {
+            break;
+        }
+    }
+}
+
+/// Process one request line; `None` means "respond bye and close".
+fn handle_line(line: &str, sched: &Scheduler, stop: &AtomicBool) -> Option<String> {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return Some(err_line(&format!("bad json: {e}"))),
+    };
+    match req.get("op").as_str() {
+        Some("ping") => Some(
+            Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string(),
+        ),
+        Some("stats") => Some(format!(
+            r#"{{"ok":true,"stats":{},"queue_depth":{}}}"#,
+            sched.metrics.snapshot_json(),
+            sched.queue_depth()
+        )),
+        Some("shutdown") => {
+            stop.store(true, Ordering::Release);
+            None
+        }
+        Some("interpolate") => Some(handle_interpolate(&req, sched)),
+        Some("register") => Some(handle_register(&req)),
+        Some(other) => Some(err_line(&format!("unknown op '{other}'"))),
+        None => Some(err_line("missing op")),
+    }
+}
+
+/// Full FFD registration of two server-local volumes (runs inline on the
+/// connection thread: registration is long-running and stateful, unlike
+/// the batched interpolation jobs).
+fn handle_register(req: &Json) -> String {
+    let Some(ref_path) = req.get("reference").as_str() else {
+        return err_line("missing reference path");
+    };
+    let Some(flo_path) = req.get("floating").as_str() else {
+        return err_line("missing floating path");
+    };
+    let reference = match crate::volume::io::load(std::path::Path::new(ref_path)) {
+        Ok(v) => v,
+        Err(e) => return err_line(&format!("reference: {e}")),
+    };
+    let floating = match crate::volume::io::load(std::path::Path::new(flo_path)) {
+        Ok(v) => v,
+        Err(e) => return err_line(&format!("floating: {e}")),
+    };
+    if reference.dims != floating.dims {
+        return err_line("reference/floating dims mismatch");
+    }
+    let method = match crate::bspline::Method::parse(req.get("method").as_str().unwrap_or("ttli"))
+    {
+        Some(m) => m,
+        None => return err_line("unknown method"),
+    };
+    let cfg = crate::ffd::FfdConfig {
+        method,
+        levels: req.get("levels").as_usize().unwrap_or(2).clamp(1, 6),
+        max_iter: req.get("iters").as_usize().unwrap_or(20).clamp(1, 500),
+        ..Default::default()
+    };
+    let res = crate::ffd::register(&reference, &floating, &cfg);
+    if let Some(out) = req.get("out").as_str() {
+        if let Err(e) = crate::volume::io::save(&res.warped, std::path::Path::new(out)) {
+            return err_line(&format!("saving {out}: {e}"));
+        }
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("cost", Json::Num(res.cost)),
+        ("ssim", Json::Num(crate::metrics::ssim(&reference, &res.warped))),
+        ("mae", Json::Num(crate::metrics::mae_normalized(&reference, &res.warped))),
+        ("total_s", Json::Num(res.timing.total_s)),
+        ("bsi_s", Json::Num(res.timing.bsi_s)),
+        ("iterations", Json::Num(res.timing.iterations as f64)),
+    ])
+    .to_string()
+}
+
+fn handle_interpolate(req: &Json, sched: &Scheduler) -> String {
+    let dims_arr = match req.get("dims").as_arr() {
+        Some(a) if a.len() == 3 => a,
+        _ => return err_line("dims must be [nz,ny,nx]"),
+    };
+    let (Some(nz), Some(ny), Some(nx)) = (
+        dims_arr[0].as_usize(),
+        dims_arr[1].as_usize(),
+        dims_arr[2].as_usize(),
+    ) else {
+        return err_line("dims entries must be non-negative integers");
+    };
+    if nx == 0 || ny == 0 || nz == 0 || nx * ny * nz > 1 << 27 {
+        return err_line("dims out of supported range");
+    }
+    let tile = req.get("tile").as_usize().unwrap_or(5);
+    if !(1..=16).contains(&tile) {
+        return err_line("tile out of supported range (1..=16)");
+    }
+    let seed = req.get("seed").as_usize().unwrap_or(0) as u64;
+    let engine = match Engine::parse(req.get("engine").as_str().unwrap_or("cpu:ttli")) {
+        Some(e) => e,
+        None => return err_line("unknown engine"),
+    };
+    let vol_dims = Dims::new(nx, ny, nz);
+    let mut grid = ControlGrid::zeros(vol_dims, [tile, tile, tile]);
+    grid.randomize(seed, 5.0);
+    let job = InterpolateJob {
+        id: sched.next_job_id(),
+        grid: std::sync::Arc::new(grid),
+        vol_dims,
+        engine,
+    };
+    let id = job.id;
+    match sched.submit_and_wait(job) {
+        Err(SubmitError::QueueFull) => err_line("backpressure: queue full"),
+        Err(SubmitError::ShuttingDown) => err_line("shutting down"),
+        Ok(outcome) => match outcome.result {
+            Err(e) => err_line(&e),
+            Ok(field) => {
+                // Order-independent checksum so clients can verify numerics.
+                let sum: f64 = field.x.iter().chain(&field.y).chain(&field.z).map(|&v| v as f64).sum();
+                Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("id", Json::Num(id as f64)),
+                    ("checksum", Json::Num(sum)),
+                    ("voxels", Json::Num(field.dims.count() as f64)),
+                    ("exec_s", Json::Num(outcome.exec_s)),
+                    ("wait_s", Json::Num(outcome.wait_s)),
+                ])
+                .to_string()
+            }
+        },
+    }
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { stream, reader })
+    }
+
+    /// Send one request line, read one response line.
+    pub fn call(&mut self, request: &Json) -> std::io::Result<Json> {
+        self.stream.write_all(request.to_string().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Json::parse(&line)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+    }
+}

@@ -1,0 +1,89 @@
+//! Engine routing: execute an interpolation job on the in-process rust
+//! kernels or on the AOT PJRT artifacts. The PJRT runtime is optional — a
+//! coordinator without artifacts serves CPU engines and cleanly rejects
+//! `pjrt` requests.
+
+use super::job::{Engine, InterpolateJob};
+use crate::runtime::PjrtHandle;
+use crate::volume::VectorField;
+
+/// Stateless-per-request execution service (cheap to clone across workers).
+/// PJRT jobs are forwarded to the single accelerator-owner thread behind
+/// [`PjrtHandle`]; CPU jobs run on the calling worker.
+#[derive(Clone)]
+pub struct InterpolationService {
+    pjrt: Option<PjrtHandle>,
+}
+
+impl InterpolationService {
+    pub fn new(pjrt: Option<PjrtHandle>) -> Self {
+        InterpolationService { pjrt }
+    }
+
+    /// Open the default artifact dir if present (best-effort PJRT support).
+    pub fn with_default_runtime() -> Self {
+        let dir = crate::runtime::default_artifact_dir();
+        let pjrt = if dir.join("manifest.json").exists() {
+            PjrtHandle::spawn(&dir).ok()
+        } else {
+            None
+        };
+        InterpolationService { pjrt }
+    }
+
+    pub fn has_pjrt(&self) -> bool {
+        self.pjrt.is_some()
+    }
+
+    /// Execute one job.
+    pub fn execute(&self, job: &InterpolateJob) -> Result<VectorField, String> {
+        match job.engine {
+            Engine::Cpu(method) => {
+                Ok(method.instance().interpolate(&job.grid, job.vol_dims))
+            }
+            Engine::Pjrt => match &self.pjrt {
+                None => Err("pjrt engine unavailable: no artifacts loaded".to_string()),
+                Some(h) => h
+                    .bsi_field(&job.grid, job.vol_dims)
+                    .map_err(|e| format!("pjrt execution failed: {e:#}")),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::{ControlGrid, Method};
+    use crate::volume::Dims;
+    use std::sync::Arc;
+
+    fn job(engine: Engine) -> InterpolateJob {
+        let vd = Dims::new(10, 10, 10);
+        let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
+        grid.randomize(1, 2.0);
+        InterpolateJob { id: 1, grid: Arc::new(grid), vol_dims: vd, engine }
+    }
+
+    #[test]
+    fn cpu_engine_executes() {
+        let svc = InterpolationService::new(None);
+        let f = svc.execute(&job(Engine::Cpu(Method::Ttli))).unwrap();
+        assert_eq!(f.dims, Dims::new(10, 10, 10));
+    }
+
+    #[test]
+    fn pjrt_without_runtime_is_clean_error() {
+        let svc = InterpolationService::new(None);
+        let err = svc.execute(&job(Engine::Pjrt)).unwrap_err();
+        assert!(err.contains("unavailable"), "{err}");
+    }
+
+    #[test]
+    fn cpu_engines_agree_across_methods() {
+        let svc = InterpolationService::new(None);
+        let a = svc.execute(&job(Engine::Cpu(Method::Ttli))).unwrap();
+        let b = svc.execute(&job(Engine::Cpu(Method::Tv))).unwrap();
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+}

@@ -1,0 +1,310 @@
+//! Back-propagation of the voxelwise similarity gradient onto the control
+//! points — the adjoint (transpose) of B-spline interpolation:
+//! `∂C/∂φ_c = Σ_{v ∈ support(c)} w_c(v) · ∂C/∂T(v)`.
+//!
+//! Implemented in *gather* form (one pass per control point over its 4δ³
+//! voxel support) so it parallelizes without atomics, mirroring NiftyReg's
+//! `reg_voxelCentric2NodeCentric`.
+
+use crate::bspline::coeffs::WeightLut;
+use crate::bspline::ControlGrid;
+use crate::util::threadpool::par_chunks_mut3;
+use crate::volume::VectorField;
+
+/// Control-point gradient with the same lattice layout as `grid`.
+///
+/// Dispatches to the separable three-pass implementation
+/// ([`voxel_to_cp_gradient_separable`]) — ~5× cheaper than the direct
+/// gather (12 vs 64 weighted accumulations per voxel, see EXPERIMENTS.md
+/// §Perf); the direct form is kept for cross-validation.
+pub fn voxel_to_cp_gradient(grid: &ControlGrid, voxel_grad: &VectorField) -> ControlGrid {
+    voxel_to_cp_gradient_separable(grid, voxel_grad)
+}
+
+/// Direct gather form: one pass per control point over its 4δ³ support.
+pub fn voxel_to_cp_gradient_direct(grid: &ControlGrid, voxel_grad: &VectorField) -> ControlGrid {
+    let [dx, dy, dz] = grid.tile;
+    let lx = WeightLut::new(dx);
+    let ly = WeightLut::new(dy);
+    let lz = WeightLut::new(dz);
+    let vd = voxel_grad.dims;
+    let mut out = ControlGrid {
+        tile: grid.tile,
+        tiles: grid.tiles,
+        dims: grid.dims,
+        x: vec![0.0; grid.len()],
+        y: vec![0.0; grid.len()],
+        z: vec![0.0; grid.len()],
+    };
+    let cp_dims = grid.dims;
+    // Parallel over z-planes of the control lattice.
+    let plane = cp_dims.nx * cp_dims.ny;
+    par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, plane, |ck, gx, gy, gz| {
+        for cj in 0..cp_dims.ny {
+            for ci in 0..cp_dims.nx {
+                // Control point (ci,cj,ck) in storage coords = grid position
+                // (ci−1, ...) in Eq. 1 coords. A voxel v with tile index t
+                // uses CPs with storage x-range [t, t+3], so this CP affects
+                // tiles t ∈ [ci−3, ci] — voxels x ∈ [(ci−3)·δx, (ci+1)·δx).
+                let (mut ax, mut ay, mut az) = (0.0f64, 0.0f64, 0.0f64);
+                let x_lo = (ci as isize - 3).max(0) as usize * dx;
+                let x_hi = ((ci + 1) * dx).min(vd.nx);
+                let y_lo = (cj as isize - 3).max(0) as usize * dy;
+                let y_hi = ((cj + 1) * dy).min(vd.ny);
+                let z_lo = (ck as isize - 3).max(0) as usize * dz;
+                let z_hi = ((ck + 1) * dz).min(vd.nz);
+                for z in z_lo..z_hi {
+                    let tz = z / dz;
+                    // Weight index of this CP for that voxel: storage ck is
+                    // the (ck − tz)-th of the 4 supports.
+                    let n = ck.wrapping_sub(tz);
+                    if n > 3 {
+                        continue;
+                    }
+                    let wz = lz.at(z % dz)[n];
+                    for y in y_lo..y_hi {
+                        let ty = y / dy;
+                        let m = cj.wrapping_sub(ty);
+                        if m > 3 {
+                            continue;
+                        }
+                        let wzy = wz * ly.at(y % dy)[m];
+                        let row = (z * vd.ny + y) * vd.nx;
+                        for x in x_lo..x_hi {
+                            let tx = x / dx;
+                            let l = ci.wrapping_sub(tx);
+                            if l > 3 {
+                                continue;
+                            }
+                            let w = (wzy * lx.at(x % dx)[l]) as f64;
+                            let i = row + x;
+                            ax += w * voxel_grad.x[i] as f64;
+                            ay += w * voxel_grad.y[i] as f64;
+                            az += w * voxel_grad.z[i] as f64;
+                        }
+                    }
+                }
+                let o = cj * cp_dims.nx + ci;
+                gx[o] = ax as f32;
+                gy[o] = ay as f32;
+                gz[o] = az as f32;
+            }
+        }
+    });
+    out
+}
+
+/// Separable three-pass adjoint: reduce x, then y, then z. The B-spline
+/// weight tensor factorizes (`w = wx·wy·wz`), so the 64-term scatter per
+/// voxel becomes three 4-term reductions:
+///
+///   pass1: r1[(tx,l), y, z]  = Σ_{a∈tile} wx[a][l] · g(x, y, z)
+///   pass2: r2[(tx,l), (ty,m), z] = Σ_b wy[b][m] · r1
+///   pass3: cp[tx+l, ty+m, tz+n] += Σ_c wz[c][n] · r2
+///
+/// 12 weighted accumulations per voxel instead of 64 (EXPERIMENTS.md §Perf).
+pub fn voxel_to_cp_gradient_separable(grid: &ControlGrid, voxel_grad: &VectorField) -> ControlGrid {
+    let [dx, dy, dz] = grid.tile;
+    let lx = WeightLut::new(dx);
+    let ly = WeightLut::new(dy);
+    let lz = WeightLut::new(dz);
+    let vd = voxel_grad.dims;
+    let cp_dims = grid.dims;
+    // Number of (tile, support-offset) columns per axis = CP lattice size.
+    let cx = cp_dims.nx;
+    let cy = cp_dims.ny;
+
+    // Pass 1: reduce x. r1 layout: [(z*ny + y)*cx + cxi] per component.
+    let r1_len = vd.nz * vd.ny * cx;
+    let mut r1 = vec![0.0f32; 3 * r1_len];
+    {
+        let (r1x, rest) = r1.split_at_mut(r1_len);
+        let (r1y, r1z) = rest.split_at_mut(r1_len);
+        for z in 0..vd.nz {
+            for y in 0..vd.ny {
+                let row_in = (z * vd.ny + y) * vd.nx;
+                let row_out = (z * vd.ny + y) * cx;
+                for x in 0..vd.nx {
+                    let tx = x / dx;
+                    let w = lx.at(x % dx);
+                    let gx = voxel_grad.x[row_in + x];
+                    let gy = voxel_grad.y[row_in + x];
+                    let gz = voxel_grad.z[row_in + x];
+                    for l in 0..4 {
+                        let o = row_out + tx + l;
+                        r1x[o] += w[l] * gx;
+                        r1y[o] += w[l] * gy;
+                        r1z[o] += w[l] * gz;
+                    }
+                }
+            }
+        }
+    }
+
+    // Pass 2: reduce y. r2 layout: [(z*cy + cyi)*cx + cxi].
+    let r2_len = vd.nz * cy * cx;
+    let mut r2 = vec![0.0f32; 3 * r2_len];
+    {
+        let (r1x, rest) = r1.split_at(r1_len);
+        let (r1y, r1z) = rest.split_at(r1_len);
+        let (r2x, rest2) = r2.split_at_mut(r2_len);
+        let (r2y, r2z) = rest2.split_at_mut(r2_len);
+        for z in 0..vd.nz {
+            for y in 0..vd.ny {
+                let ty = y / dy;
+                let w = ly.at(y % dy);
+                let row_in = (z * vd.ny + y) * cx;
+                for m in 0..4 {
+                    let row_out = (z * cy + ty + m) * cx;
+                    let wm = w[m];
+                    for xi in 0..cx {
+                        r2x[row_out + xi] += wm * r1x[row_in + xi];
+                        r2y[row_out + xi] += wm * r1y[row_in + xi];
+                        r2z[row_out + xi] += wm * r1z[row_in + xi];
+                    }
+                }
+            }
+        }
+    }
+
+    // Pass 3: reduce z straight into the CP lattice.
+    let mut out = ControlGrid {
+        tile: grid.tile,
+        tiles: grid.tiles,
+        dims: cp_dims,
+        x: vec![0.0; grid.len()],
+        y: vec![0.0; grid.len()],
+        z: vec![0.0; grid.len()],
+    };
+    {
+        let (r2x, rest2) = r2.split_at(r2_len);
+        let (r2y, r2z) = rest2.split_at(r2_len);
+        let plane = cy * cx;
+        for z in 0..vd.nz {
+            let tz = z / dz;
+            let w = lz.at(z % dz);
+            let row_in = z * plane;
+            for n in 0..4 {
+                let wn = w[n];
+                let row_out = (tz + n) * plane;
+                for yi in 0..plane {
+                    out.x[row_out + yi] += wn * r2x[row_in + yi];
+                    out.y[row_out + yi] += wn * r2y[row_in + yi];
+                    out.z[row_out + yi] += wn * r2z[row_in + yi];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// L∞ norm of a control-point gradient (used to normalize the ascent step,
+/// NiftyReg style).
+pub fn max_norm(g: &ControlGrid) -> f32 {
+    let mut m = 0.0f32;
+    for i in 0..g.len() {
+        m = m.max(g.x[i].abs()).max(g.y[i].abs()).max(g.z[i].abs());
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::Method;
+    use crate::volume::Dims;
+
+    /// The adjoint test: <interp(φ), v> == <φ, adjoint(v)> for arbitrary φ, v.
+    #[test]
+    fn adjoint_identity_holds() {
+        use crate::util::rng::Pcg32;
+        let vd = Dims::new(12, 10, 8);
+        let tile = [4usize, 5, 4];
+        let mut grid = ControlGrid::zeros(vd, tile);
+        grid.randomize(5, 1.0);
+
+        let mut rng = Pcg32::seeded(99);
+        let mut v = VectorField::zeros(vd);
+        for i in 0..v.x.len() {
+            v.x[i] = rng.normal();
+            v.y[i] = rng.normal();
+            v.z[i] = rng.normal();
+        }
+
+        // <interp(φ), v>
+        let field = Method::Reference.instance().interpolate(&grid, vd);
+        let mut lhs = 0.0f64;
+        for i in 0..v.x.len() {
+            lhs += (field.x[i] * v.x[i] + field.y[i] * v.y[i] + field.z[i] * v.z[i]) as f64;
+        }
+
+        // <φ, adjoint(v)>
+        let adj = voxel_to_cp_gradient(&grid, &v);
+        let mut rhs = 0.0f64;
+        for i in 0..grid.len() {
+            rhs += (grid.x[i] * adj.x[i] + grid.y[i] * adj.y[i] + grid.z[i] * adj.z[i]) as f64;
+        }
+
+        let denom = lhs.abs().max(rhs.abs()).max(1e-9);
+        assert!(
+            ((lhs - rhs) / denom).abs() < 1e-4,
+            "adjoint identity violated: {lhs} vs {rhs}"
+        );
+    }
+
+    #[test]
+    fn separable_matches_direct_gather() {
+        use crate::util::rng::Pcg32;
+        let vd = Dims::new(17, 14, 11); // partial border tiles included
+        let grid = ControlGrid::zeros(vd, [5, 4, 3]);
+        let mut rng = Pcg32::seeded(42);
+        let mut v = VectorField::zeros(vd);
+        for i in 0..v.x.len() {
+            v.x[i] = rng.normal();
+            v.y[i] = rng.normal();
+            v.z[i] = rng.normal();
+        }
+        let a = voxel_to_cp_gradient_direct(&grid, &v);
+        let b = voxel_to_cp_gradient_separable(&grid, &v);
+        for i in 0..a.len() {
+            assert!(
+                (a.x[i] - b.x[i]).abs() < 1e-4
+                    && (a.y[i] - b.y[i]).abs() < 1e-4
+                    && (a.z[i] - b.z[i]).abs() < 1e-4,
+                "cp {i}: ({},{},{}) vs ({},{},{})",
+                a.x[i],
+                a.y[i],
+                a.z[i],
+                b.x[i],
+                b.y[i],
+                b.z[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_zero_for_zero_voxel_gradient() {
+        let vd = Dims::new(10, 10, 10);
+        let grid = ControlGrid::zeros(vd, [5, 5, 5]);
+        let v = VectorField::zeros(vd);
+        let g = voxel_to_cp_gradient(&grid, &v);
+        assert!(g.x.iter().all(|&x| x == 0.0));
+        assert_eq!(max_norm(&g), 0.0);
+    }
+
+    #[test]
+    fn interior_cp_collects_from_full_support() {
+        // A unit impulse at one voxel must contribute to exactly the 64 CPs
+        // whose support covers it, with partition-of-unity total weight 1.
+        let vd = Dims::new(20, 20, 20);
+        let grid = ControlGrid::zeros(vd, [5, 5, 5]);
+        let mut v = VectorField::zeros(vd);
+        let vi = vd.idx(7, 8, 9);
+        v.x[vi] = 1.0;
+        let g = voxel_to_cp_gradient(&grid, &v);
+        let nonzero = g.x.iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nonzero, 64);
+        let total: f64 = g.x.iter().map(|&x| x as f64).sum();
+        assert!((total - 1.0).abs() < 1e-6, "total weight {total}");
+    }
+}

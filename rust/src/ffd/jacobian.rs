@@ -1,0 +1,157 @@
+//! Jacobian analysis of the B-spline deformation — the standard check that
+//! an FFD transform is diffeomorphic (no folding). The paper's FFD promises
+//! a "smooth and C² continuous transform"; the Jacobian determinant of
+//! x ↦ x + T(x) quantifies local volume change (det < 0 = folding).
+//! Derivatives are analytic through the B-spline basis derivative
+//! (`coeffs::basis_deriv_f64`), as NiftyReg's `reg_jacobian` computes them.
+
+use crate::bspline::coeffs::{basis_deriv_f64, basis_f64};
+use crate::bspline::ControlGrid;
+use crate::volume::{Dims, Volume};
+
+/// 3×3 Jacobian of the *displacement* T at a voxel (∂T_i/∂x_j, in voxel
+/// units).
+pub fn displacement_jacobian_at(grid: &ControlGrid, x: usize, y: usize, z: usize) -> [[f64; 3]; 3] {
+    let [dx, dy, dz] = grid.tile;
+    let (tx, ty, tz) = (x / dx, y / dy, z / dz);
+    let u = (x % dx) as f64 / dx as f64;
+    let v = (y % dy) as f64 / dy as f64;
+    let w = (z % dz) as f64 / dz as f64;
+    let bx = basis_f64(u);
+    let by = basis_f64(v);
+    let bz = basis_f64(w);
+    // Chain rule: d/dx = (1/δx) dB/du.
+    let dbx: [f64; 4] = basis_deriv_f64(u).map(|d| d / dx as f64);
+    let dby: [f64; 4] = basis_deriv_f64(v).map(|d| d / dy as f64);
+    let dbz: [f64; 4] = basis_deriv_f64(w).map(|d| d / dz as f64);
+
+    let mut j = [[0.0f64; 3]; 3];
+    for n in 0..4 {
+        for m in 0..4 {
+            let base = grid.idx(tx, ty + m, tz + n);
+            for l in 0..4 {
+                let phi = [
+                    grid.x[base + l] as f64,
+                    grid.y[base + l] as f64,
+                    grid.z[base + l] as f64,
+                ];
+                let wx = dbx[l] * by[m] * bz[n];
+                let wy = bx[l] * dby[m] * bz[n];
+                let wz = bx[l] * by[m] * dbz[n];
+                for (i, p) in phi.iter().enumerate() {
+                    j[i][0] += wx * p;
+                    j[i][1] += wy * p;
+                    j[i][2] += wz * p;
+                }
+            }
+        }
+    }
+    j
+}
+
+/// Determinant of the full mapping's Jacobian `I + ∂T/∂x` at a voxel.
+pub fn jacobian_det_at(grid: &ControlGrid, x: usize, y: usize, z: usize) -> f64 {
+    let t = displacement_jacobian_at(grid, x, y, z);
+    let a = [
+        [1.0 + t[0][0], t[0][1], t[0][2]],
+        [t[1][0], 1.0 + t[1][1], t[1][2]],
+        [t[2][0], t[2][1], 1.0 + t[2][2]],
+    ];
+    a[0][0] * (a[1][1] * a[2][2] - a[1][2] * a[2][1])
+        - a[0][1] * (a[1][0] * a[2][2] - a[1][2] * a[2][0])
+        + a[0][2] * (a[1][0] * a[2][1] - a[1][1] * a[2][0])
+}
+
+/// Jacobian-determinant map over a volume extent.
+pub fn jacobian_map(grid: &ControlGrid, dims: Dims) -> Volume {
+    let mut out = Volume::zeros(dims, [1.0; 3]);
+    crate::util::threadpool::par_chunks_mut(&mut out.data, dims.nx, |ci, row| {
+        let y = ci % dims.ny;
+        let z = ci / dims.ny;
+        for (x, o) in row.iter_mut().enumerate() {
+            *o = jacobian_det_at(grid, x, y, z) as f32;
+        }
+    });
+    out
+}
+
+/// Summary statistics of a Jacobian map: (min, mean, folded-voxel count).
+pub fn jacobian_stats(map: &Volume) -> (f64, f64, usize) {
+    let mut min = f64::INFINITY;
+    let mut sum = 0.0f64;
+    let mut folded = 0usize;
+    for &v in &map.data {
+        let v = v as f64;
+        min = min.min(v);
+        sum += v;
+        if v <= 0.0 {
+            folded += 1;
+        }
+    }
+    (min, sum / map.data.len() as f64, folded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_deformation_has_unit_jacobian() {
+        let vd = Dims::new(15, 15, 15);
+        let grid = ControlGrid::zeros(vd, [5, 5, 5]);
+        let map = jacobian_map(&grid, vd);
+        for &v in &map.data {
+            assert!((v - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn uniform_dilation_scales_determinant() {
+        // φ_x = s·px ⇒ T(x) = s·x ⇒ det = (1+s)³ everywhere.
+        let vd = Dims::new(20, 20, 20);
+        let tile = [5usize, 5, 5];
+        let s = 0.1f32;
+        let mut grid = ControlGrid::zeros(vd, tile);
+        for ck in 0..grid.dims.nz {
+            for cj in 0..grid.dims.ny {
+                for ci in 0..grid.dims.nx {
+                    let i = grid.idx(ci, cj, ck);
+                    grid.x[i] = s * (ci as f32 - 1.0) * tile[0] as f32;
+                    grid.y[i] = s * (cj as f32 - 1.0) * tile[1] as f32;
+                    grid.z[i] = s * (ck as f32 - 1.0) * tile[2] as f32;
+                }
+            }
+        }
+        let det = jacobian_det_at(&grid, 10, 10, 10);
+        let want = (1.0 + s as f64).powi(3);
+        assert!((det - want).abs() < 1e-4, "{det} vs {want}");
+    }
+
+    #[test]
+    fn jacobian_matches_finite_difference_of_field() {
+        use crate::bspline::Method;
+        let vd = Dims::new(20, 20, 20);
+        let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
+        grid.randomize(5, 1.5);
+        let f = Method::Reference.instance().interpolate(&grid, vd);
+        let j = displacement_jacobian_at(&grid, 10, 10, 10);
+        // FD of T_x along x.
+        let i_p = vd.idx(11, 10, 10);
+        let i_m = vd.idx(9, 10, 10);
+        let fd = (f.x[i_p] - f.x[i_m]) as f64 / 2.0;
+        // FD over the smooth spline is 2nd-order accurate; tolerance loose.
+        assert!((j[0][0] - fd).abs() < 0.02, "{} vs {fd}", j[0][0]);
+    }
+
+    #[test]
+    fn smooth_registration_grid_does_not_fold() {
+        // A pneumoperitoneum-scale deformation stays diffeomorphic.
+        let vd = Dims::new(30, 30, 30);
+        let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
+        grid.randomize(3, 1.0); // small displacements
+        let map = jacobian_map(&grid, vd);
+        let (min, mean, folded) = jacobian_stats(&map);
+        assert!(folded == 0, "small smooth fields must not fold (min {min})");
+        assert!((mean - 1.0).abs() < 0.2, "mean {mean}");
+    }
+}

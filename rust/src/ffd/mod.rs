@@ -1,0 +1,95 @@
+//! Free-Form-Deformation non-rigid registration (NiftyReg `reg_f3d` analog,
+//! DESIGN.md S10): the application the paper accelerates. The deformation
+//! model is the cubic B-spline control grid of [`crate::bspline`]; the
+//! similarity is SSD with an optional bending-energy regularizer; the
+//! optimizer is gradient ascent with backtracking line search over a
+//! multi-resolution pyramid — NiftyReg's default scheme.
+//!
+//! The BSI method used for the dense deformation field is pluggable
+//! ([`crate::bspline::Method`]); Figures 8/9 compare registration wall time
+//! with the baseline TV interpolation vs the paper's TTLI.
+
+pub mod bending;
+pub mod conjugate;
+pub mod gradient;
+pub mod jacobian;
+pub mod multilevel;
+pub mod optimizer;
+pub mod nmi;
+pub mod similarity;
+
+use crate::bspline::{ControlGrid, Method};
+use crate::volume::{VectorField, Volume};
+
+/// Registration hyper-parameters (NiftyReg-flavored defaults).
+#[derive(Clone, Debug)]
+pub struct FfdConfig {
+    /// Pyramid levels (coarse→fine). NiftyReg default: 3.
+    pub levels: usize,
+    /// Max gradient-ascent iterations per level. NiftyReg default: 300 —
+    /// scaled down by default for the small synthetic volumes.
+    pub max_iter: usize,
+    /// Control-point spacing in voxels at every level (paper default 5³).
+    pub tile: [usize; 3],
+    /// Bending-energy weight λ (NiftyReg default 0.001).
+    pub bending_weight: f32,
+    /// BSI scheme used for the dense field.
+    pub method: Method,
+    /// Convergence: stop when the line-search step shrinks below
+    /// `initial_step * step_tolerance`.
+    pub step_tolerance: f32,
+}
+
+impl Default for FfdConfig {
+    fn default() -> Self {
+        FfdConfig {
+            levels: 3,
+            max_iter: 60,
+            tile: [5, 5, 5],
+            bending_weight: 0.001,
+            method: Method::Ttli,
+            step_tolerance: 0.01,
+        }
+    }
+}
+
+/// Wall-time breakdown of one registration run — the paper's Figure 8/9
+/// measurement ("BSI represents 27% of the total registration time").
+#[derive(Clone, Debug, Default)]
+pub struct FfdTiming {
+    pub total_s: f64,
+    pub bsi_s: f64,
+    pub warp_s: f64,
+    pub gradient_s: f64,
+    pub other_s: f64,
+    pub iterations: usize,
+}
+
+impl FfdTiming {
+    pub fn bsi_fraction(&self) -> f64 {
+        if self.total_s > 0.0 {
+            self.bsi_s / self.total_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Result of a registration run.
+pub struct FfdResult {
+    /// Final control grid (finest level).
+    pub grid: ControlGrid,
+    /// Dense deformation field at the finest level.
+    pub field: VectorField,
+    /// Floating image resampled into the reference frame.
+    pub warped: Volume,
+    /// Final SSD cost.
+    pub cost: f64,
+    pub timing: FfdTiming,
+}
+
+/// Register `floating` to `reference`; convenience wrapper over
+/// [`multilevel::register_multilevel`].
+pub fn register(reference: &Volume, floating: &Volume, cfg: &FfdConfig) -> FfdResult {
+    multilevel::register_multilevel(reference, floating, cfg)
+}

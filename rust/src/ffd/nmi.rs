@@ -1,0 +1,158 @@
+//! Normalized Mutual Information — NiftyReg's default similarity for
+//! multi-modal registration (the paper's §6 pipeline ultimately runs on
+//! NiftyReg's NMI). Implemented with a joint histogram and a Parzen-style
+//! triangular kernel; used here as an *evaluation* metric and as an
+//! alternative similarity for robustness experiments (SSD remains the
+//! optimized objective on the mono-modal synthetic data).
+
+use crate::volume::Volume;
+
+/// Joint histogram of two normalized volumes.
+pub struct JointHistogram {
+    pub bins: usize,
+    /// `p[a * bins + b]` — joint probability.
+    pub joint: Vec<f64>,
+    pub marg_a: Vec<f64>,
+    pub marg_b: Vec<f64>,
+}
+
+impl JointHistogram {
+    /// Build from two same-shaped volumes with `bins`² cells, linear
+    /// (triangular-kernel) binning for smoothness.
+    pub fn build(a: &Volume, b: &Volume, bins: usize) -> JointHistogram {
+        assert_eq!(a.dims, b.dims);
+        assert!(bins >= 2);
+        let an = a.normalized();
+        let bn = b.normalized();
+        let mut joint = vec![0.0f64; bins * bins];
+        let scale = (bins - 1) as f32;
+        for (&va, &vb) in an.data.iter().zip(&bn.data) {
+            let fa = va * scale;
+            let fb = vb * scale;
+            let ia = (fa as usize).min(bins - 2);
+            let ib = (fb as usize).min(bins - 2);
+            let wa = fa - ia as f32;
+            let wb = fb - ib as f32;
+            // Bilinear spread over the 2x2 neighborhood.
+            joint[ia * bins + ib] += ((1.0 - wa) * (1.0 - wb)) as f64;
+            joint[ia * bins + ib + 1] += ((1.0 - wa) * wb) as f64;
+            joint[(ia + 1) * bins + ib] += (wa * (1.0 - wb)) as f64;
+            joint[(ia + 1) * bins + ib + 1] += (wa * wb) as f64;
+        }
+        let total: f64 = joint.iter().sum();
+        for p in &mut joint {
+            *p /= total;
+        }
+        let mut marg_a = vec![0.0f64; bins];
+        let mut marg_b = vec![0.0f64; bins];
+        for ia in 0..bins {
+            for ib in 0..bins {
+                marg_a[ia] += joint[ia * bins + ib];
+                marg_b[ib] += joint[ia * bins + ib];
+            }
+        }
+        JointHistogram { bins, joint, marg_a, marg_b }
+    }
+
+    fn entropy(p: &[f64]) -> f64 {
+        -p.iter().filter(|&&v| v > 0.0).map(|&v| v * v.ln()).sum::<f64>()
+    }
+
+    pub fn entropy_a(&self) -> f64 {
+        Self::entropy(&self.marg_a)
+    }
+
+    pub fn entropy_b(&self) -> f64 {
+        Self::entropy(&self.marg_b)
+    }
+
+    pub fn joint_entropy(&self) -> f64 {
+        Self::entropy(&self.joint)
+    }
+
+    /// Studholme's normalized mutual information (H(A)+H(B))/H(A,B) ∈ [1,2].
+    pub fn nmi(&self) -> f64 {
+        let hj = self.joint_entropy();
+        if hj <= 0.0 {
+            // Degenerate (constant images): define as maximal similarity.
+            2.0
+        } else {
+            (self.entropy_a() + self.entropy_b()) / hj
+        }
+    }
+
+    /// Mutual information H(A)+H(B)−H(A,B).
+    pub fn mi(&self) -> f64 {
+        self.entropy_a() + self.entropy_b() - self.joint_entropy()
+    }
+}
+
+/// Convenience: NMI with NiftyReg's default 64 bins.
+pub fn nmi(a: &Volume, b: &Volume) -> f64 {
+    JointHistogram::build(a, b, 64).nmi()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::volume::Dims;
+
+    fn textured(seed: u64) -> Volume {
+        let mut rng = Pcg32::seeded(seed);
+        Volume::from_fn(Dims::new(16, 16, 16), [1.0; 3], |x, y, z| {
+            ((x as f32) * 0.4).sin() + ((y + z) as f32) * 0.05 + 0.1 * rng.uniform()
+        })
+    }
+
+    #[test]
+    fn nmi_maximal_for_identical_images() {
+        let v = textured(1);
+        let self_nmi = nmi(&v, &v);
+        let other = textured(2);
+        assert!(self_nmi > nmi(&v, &other), "{self_nmi}");
+        assert!(self_nmi > 1.5);
+    }
+
+    #[test]
+    fn nmi_invariant_to_monotone_intensity_mapping() {
+        // The reason NiftyReg uses NMI: contrast changes don't hurt.
+        let v = textured(3);
+        let mut remapped = v.clone();
+        for d in &mut remapped.data {
+            *d = (*d * 2.0 + 5.0).powi(2); // strictly monotone on positives
+        }
+        let n_self = nmi(&v, &v);
+        let n_remap = nmi(&v, &remapped);
+        assert!((n_self - n_remap).abs() < 0.12, "{n_self} vs {n_remap}");
+    }
+
+    #[test]
+    fn nmi_degrades_with_misalignment() {
+        let v = textured(4);
+        let shifted = Volume::from_fn(v.dims, [1.0; 3], |x, y, z| {
+            v.at_clamped(x as isize + 3, y as isize, z as isize)
+        });
+        let aligned = nmi(&v, &v);
+        let misaligned = nmi(&v, &shifted);
+        assert!(aligned > misaligned + 0.05, "{aligned} vs {misaligned}");
+    }
+
+    #[test]
+    fn histogram_probabilities_sum_to_one() {
+        let a = textured(5);
+        let b = textured(6);
+        let h = JointHistogram::build(&a, &b, 32);
+        let s: f64 = h.joint.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9);
+        assert!((h.marg_a.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(h.mi() >= -1e-12);
+    }
+
+    #[test]
+    fn constant_images_do_not_panic() {
+        let c = Volume::zeros(Dims::new(8, 8, 8), [1.0; 3]);
+        let n = nmi(&c, &c);
+        assert!(n.is_finite());
+    }
+}

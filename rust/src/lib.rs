@@ -1,0 +1,42 @@
+//! # ffdreg
+//!
+//! A three-layer (Rust coordinator + JAX model + Pallas kernel) reproduction
+//! of *"Accelerating B-spline Interpolation on GPUs: Application to Medical
+//! Image Registration"* (Zachariadis et al., CMPB 2020).
+//!
+//! The crate provides:
+//! - [`bspline`] — the paper's seven B-spline interpolation implementations
+//!   (TV, TV-tiling, TT, TTLI, VT, VV, texture-hardware simulation) plus a
+//!   double-precision reference;
+//! - [`ffd`] — free-form-deformation non-rigid registration (NiftyReg f3d
+//!   analog) built on top of the BSI kernels;
+//! - [`affine`] — block-matching affine registration (reg_aladin analog);
+//! - [`phantom`] — the synthetic pre-clinical dataset generator;
+//! - [`memmodel`] — the paper's Appendix A external-memory model and
+//!   Appendix B operation counts, plus an analytic GPU timing model;
+//! - [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas artifacts;
+//! - [`coordinator`] — the job scheduler / batcher / server that makes the
+//!   system deployable;
+//! - [`volume`], [`metrics`], [`util`] — imaging and infrastructure
+//!   substrates.
+//!
+//! See DESIGN.md for the system inventory and the experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod affine;
+pub mod bspline;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod ffd;
+pub mod phantom;
+pub mod memmodel;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+pub mod volume;
+
+/// Crate version (from Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,286 @@
+//! `ffdreg` — the launcher. Subcommands:
+//!
+//!   phantom      generate the synthetic pre-clinical dataset
+//!   interpolate  run one BSI job and report timing/accuracy
+//!   register     FFD non-rigid registration (optionally affine-first)
+//!   affine       affine registration only
+//!   serve        start the coordinator TCP server
+//!   artifacts    summarize the AOT artifact manifest
+//!   version      print the version
+//!
+//! Run `ffdreg <cmd> --help` conceptually via README; flags are parsed by
+//! the in-repo CLI substrate (rust/src/cli.rs).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::cli::Args;
+use ffdreg::config::Config;
+use ffdreg::coordinator::{InterpolationService, Scheduler, SchedulerConfig};
+use ffdreg::util::timer;
+use ffdreg::volume::{io, Dims};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "phantom" => cmd_phantom(&args),
+        "interpolate" => cmd_interpolate(&args),
+        "register" => cmd_register(&args),
+        "affine" => cmd_affine(&args),
+        "serve" => cmd_serve(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "version" => {
+            println!("ffdreg {}", ffdreg::version());
+            Ok(())
+        }
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+    .map_or_else(
+        |e| {
+            eprintln!("error: {e}");
+            1
+        },
+        |_| 0,
+    );
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "ffdreg {} — B-spline interpolation + FFD registration (Zachariadis et al. 2020 reproduction)
+
+USAGE: ffdreg <command> [flags]
+
+  phantom      --out DIR [--scale 0.25] [--seed 7]
+  interpolate  [--method ttli|tt|tv|tv-tiling|vt|vv|th|ref|pjrt] [--dims X,Y,Z]
+               [--tile 5] [--seed 1] [--check]
+  register     --reference A.vol --floating B.vol [--out warped.vol]
+               [--method M] [--levels 3] [--iters 60] [--tile 5] [--be 0.001]
+               [--no-affine] [--config cfg.json]
+  affine       --reference A.vol --floating B.vol [--out warped.vol]
+  serve        [--addr 127.0.0.1:7847] [--workers N] [--queue 256] [--batch 8]
+  artifacts    [--dir artifacts]
+  version",
+        ffdreg::version()
+    );
+}
+
+fn cmd_phantom(args: &Args) -> Result<(), String> {
+    let out = args.get("out").unwrap_or("data");
+    let scale = args.get_f64("scale", 0.25)?;
+    let seed = args.get_usize("seed", 7)? as u64;
+    println!("generating 5 registration pairs at scale {scale} (seed {seed})...");
+    let (pairs, secs) = timer::time_once(|| ffdreg::phantom::dataset::generate_dataset(scale, seed));
+    for p in &pairs {
+        println!(
+            "  {:<10} {:>4}x{:<4}x{:<4} ({:.2} Mvoxels)",
+            p.name,
+            p.pre.dims.nx,
+            p.pre.dims.ny,
+            p.pre.dims.nz,
+            p.pre.dims.count() as f64 / 1e6
+        );
+    }
+    ffdreg::phantom::dataset::save_dataset(&pairs, Path::new(out))
+        .map_err(|e| format!("saving dataset: {e}"))?;
+    println!("wrote {} volumes to {out}/ in {}", pairs.len() * 2, timer::fmt_secs(secs));
+    Ok(())
+}
+
+fn cmd_interpolate(args: &Args) -> Result<(), String> {
+    let dims = args.get_triple("dims", [64, 64, 64])?;
+    let tile = args.get_usize("tile", 5)?;
+    let seed = args.get_usize("seed", 1)? as u64;
+    let vd = Dims::new(dims[0], dims[1], dims[2]);
+    let mut grid = ControlGrid::zeros(vd, [tile, tile, tile]);
+    grid.randomize(seed, 5.0);
+
+    let engine = args.get("method").unwrap_or("ttli");
+    if engine == "pjrt" {
+        let rt = ffdreg::runtime::Runtime::open(&ffdreg::runtime::default_artifact_dir())
+            .map_err(|e| format!("{e:#}"))?;
+        let (field, secs) = timer::time_once(|| rt.bsi_field(&grid, vd));
+        field.map_err(|e| format!("{e:#}"))?;
+        println!(
+            "pjrt bsi_ttli: {} voxels in {} ({:.2} ns/voxel)",
+            vd.count(),
+            timer::fmt_secs(secs),
+            secs * 1e9 / vd.count() as f64
+        );
+        return Ok(());
+    }
+
+    let method = Method::parse(engine).ok_or_else(|| format!("unknown method '{engine}'"))?;
+    let imp = method.instance();
+    let stats = timer::time_adaptive(3, 20, 0.5, || {
+        std::hint::black_box(imp.interpolate(&grid, vd));
+    });
+    let per_voxel = stats.mean() / vd.count() as f64;
+    println!(
+        "{:<26} dims {}x{}x{} tile {tile}: {} ± {} per run, {:.3} ns/voxel",
+        imp.name(),
+        vd.nx,
+        vd.ny,
+        vd.nz,
+        timer::fmt_secs(stats.mean()),
+        timer::fmt_secs(stats.std()),
+        per_voxel * 1e9
+    );
+    if args.has("check") {
+        let f = imp.interpolate(&grid, vd);
+        let r = ffdreg::bspline::reference::interpolate_f64(&grid, vd);
+        println!(
+            "  mean abs error vs f64 reference: {:.3e}",
+            f.mean_abs_diff_f64(&r.x, &r.y, &r.z)
+        );
+    }
+    Ok(())
+}
+
+fn load_pair(args: &Args) -> Result<(ffdreg::volume::Volume, ffdreg::volume::Volume), String> {
+    let r = args.get("reference").ok_or("missing --reference")?;
+    let f = args.get("floating").ok_or("missing --floating")?;
+    let reference = io::load(Path::new(r)).map_err(|e| format!("{r}: {e}"))?;
+    let floating = io::load(Path::new(f)).map_err(|e| format!("{f}: {e}"))?;
+    Ok((reference, floating))
+}
+
+fn cmd_register(args: &Args) -> Result<(), String> {
+    let cfg = Config::resolve(args)?;
+    let (reference, floating) = load_pair(args)?;
+    println!(
+        "registering {}x{}x{} (method {}, levels {}, tile {:?}, be {})",
+        reference.dims.nx,
+        reference.dims.ny,
+        reference.dims.nz,
+        cfg.ffd.method.key(),
+        cfg.ffd.levels,
+        cfg.ffd.tile,
+        cfg.ffd.bending_weight
+    );
+
+    let floating = if cfg.affine_first {
+        let (res, secs) = timer::time_once(|| {
+            ffdreg::affine::register(&reference, &floating, &Default::default())
+        });
+        println!(
+            "  affine pre-alignment: {} matches, {} — SSIM {:.4}",
+            res.matches_used,
+            timer::fmt_secs(secs),
+            ffdreg::metrics::ssim(&reference, &res.warped)
+        );
+        res.warped
+    } else {
+        floating
+    };
+
+    let result = ffdreg::ffd::register(&reference, &floating, &cfg.ffd);
+    let t = &result.timing;
+    println!(
+        "  done: cost {:.6}, {} iterations, total {}",
+        result.cost,
+        t.iterations,
+        timer::fmt_secs(t.total_s)
+    );
+    println!(
+        "  breakdown: BSI {} ({:.1}%), warp {}, gradient {}, other {}",
+        timer::fmt_secs(t.bsi_s),
+        100.0 * t.bsi_fraction(),
+        timer::fmt_secs(t.warp_s),
+        timer::fmt_secs(t.gradient_s),
+        timer::fmt_secs(t.other_s)
+    );
+    println!(
+        "  quality: MAE {:.4}, SSIM {:.4}",
+        ffdreg::metrics::mae_normalized(&reference, &result.warped),
+        ffdreg::metrics::ssim(&reference, &result.warped)
+    );
+    if let Some(out) = args.get("out") {
+        io::save(&result.warped, Path::new(out)).map_err(|e| format!("{out}: {e}"))?;
+        println!("  wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_affine(args: &Args) -> Result<(), String> {
+    let (reference, floating) = load_pair(args)?;
+    let (res, secs) =
+        timer::time_once(|| ffdreg::affine::register(&reference, &floating, &Default::default()));
+    println!(
+        "affine: {} matches, {} — MAE {:.4}, SSIM {:.4}",
+        res.matches_used,
+        timer::fmt_secs(secs),
+        ffdreg::metrics::mae_normalized(&reference, &res.warped),
+        ffdreg::metrics::ssim(&reference, &res.warped)
+    );
+    if let Some(out) = args.get("out") {
+        io::save(&res.warped, Path::new(out)).map_err(|e| format!("{out}: {e}"))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let cfg = Config::resolve(args)?;
+    let service = InterpolationService::with_default_runtime();
+    println!(
+        "starting coordinator: {} workers, queue {}, batch {}, pjrt={}",
+        cfg.workers,
+        cfg.queue_capacity,
+        cfg.max_batch,
+        service.has_pjrt()
+    );
+    let sched = Arc::new(Scheduler::start(
+        service,
+        SchedulerConfig {
+            workers: cfg.workers,
+            queue_capacity: cfg.queue_capacity,
+            max_batch: cfg.max_batch,
+        },
+    ));
+    let server = ffdreg::coordinator::server::Server::start(&cfg.server_addr, sched)
+        .map_err(|e| format!("bind {}: {e}", cfg.server_addr))?;
+    println!("listening on {} — send {{\"op\":\"shutdown\"}} to stop", server.addr);
+    // Block until the shutdown op stops the listener: a connect probe fails
+    // once the accept loop has exited.
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if std::net::TcpStream::connect(server.addr).is_err() {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<(), String> {
+    let dir = args.get("dir").map(std::path::PathBuf::from).unwrap_or_else(
+        ffdreg::runtime::default_artifact_dir,
+    );
+    let manifest = ffdreg::runtime::artifacts::Manifest::load(&dir.join("manifest.json"))
+        .map_err(|e| format!("{e:#}"))?;
+    println!(
+        "manifest: format {}, jax {} — {} artifacts",
+        manifest.format,
+        manifest.jax_version,
+        manifest.artifacts.len()
+    );
+    for a in &manifest.artifacts {
+        println!(
+            "  {:<28} {:>3}x{:<3}x{:<3} tile {:<2} in:{} out:{} ({})",
+            a.name,
+            a.vol_dims[0],
+            a.vol_dims[1],
+            a.vol_dims[2],
+            a.tile,
+            a.inputs.len(),
+            a.outputs.len(),
+            a.file
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,212 @@
+//! Analytic GPU timing model — the substitution for the paper's GTX 1050 /
+//! RTX 2070 measurements (DESIGN.md §1). Per method and tile size it
+//! combines:
+//!
+//! * Appendix A DRAM traffic (input), plus the output writes with the
+//!   paper's observed coalescing penalty for the per-thread-tile stores
+//!   (§5.2.1: "the main bottleneck is the uncoalescence of the output");
+//! * Appendix B arithmetic per voxel with a compute-efficiency factor
+//!   (§5.2.1: TT observed at ~90% of peak compute; TTLI is no longer
+//!   compute-bound);
+//! * an L2-hit model for the untiled baseline (TV's repeated neighbor loads
+//!   mostly hit L2; only the miss share pays DRAM bandwidth);
+//! * empirical device rooflines — for the GTX 1050 the paper's own numbers
+//!   (2091 GFLOP/s, 95 GB/s).
+//!
+//! `time/voxel = max(compute, dram, on-chip)`. The model is calibrated by
+//! the paper's *stated* observations only (the utilization quotes above),
+//! not by its result figures; EXPERIMENTS.md compares the model output
+//! against Figures 5/6.
+
+use crate::bspline::Method;
+
+/// Device roofline parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Gpu {
+    pub name: &'static str,
+    /// Empirical peak FP32 rate (GFLOP/s).
+    pub gflops: f64,
+    /// Empirical DRAM bandwidth (GB/s).
+    pub dram_gbs: f64,
+    /// Aggregate on-chip (shared/L1) bandwidth (GB/s) — an order of
+    /// magnitude above DRAM on both architectures.
+    pub onchip_gbs: f64,
+}
+
+/// GTX 1050 (Pascal): the paper quotes the empirical roofline directly.
+pub const GTX1050: Gpu =
+    Gpu { name: "GTX 1050", gflops: 2091.0, dram_gbs: 95.0, onchip_gbs: 1900.0 };
+
+/// RTX 2070 (Turing): empirical ≈ 85% of datasheet (7465 GF/s, 448 GB/s).
+pub const RTX2070: Gpu =
+    Gpu { name: "RTX 2070", gflops: 6500.0, dram_gbs: 380.0, onchip_gbs: 7600.0 };
+
+/// Fraction of the untiled baseline's repeated control-point loads served
+/// by L2 (neighboring voxels share 63/64 of their support).
+const TV_L2_HIT: f64 = 0.80;
+
+/// Output coalescing penalty for thread-per-tile stores (§5.2.1).
+const TT_OUTPUT_PENALTY: f64 = 2.0;
+
+/// Texture-path effective input words per voxel: 8 fetches × 3 components,
+/// tex-cache keeps the halo, but fetches are voxel-addressed (no tile
+/// aggregation — Appendix A case b).
+const TH_INPUT_WORDS: f64 = 24.0;
+
+/// Per-method per-voxel cost inputs for the model.
+struct Profile {
+    flops: f64,
+    dram_words: f64,
+    onchip_words: f64,
+    compute_eff: f64,
+}
+
+fn profile(method: Method, delta: f64) -> Profile {
+    let t = delta * delta * delta;
+    // All methods write 3 output words per voxel.
+    let out = 3.0;
+    match method {
+        Method::Tv => Profile {
+            flops: 3.0 * super::OPS_TT,
+            // 3·64 input words per voxel, (1−hit) of them from DRAM.
+            dram_words: 3.0 * 64.0 * (1.0 - TV_L2_HIT) + out,
+            onchip_words: 3.0 * 64.0 * TV_L2_HIT,
+            compute_eff: 0.9,
+        },
+        Method::TvTiling => Profile {
+            flops: 3.0 * super::OPS_TT,
+            // Appendix A case (c) per voxel + coalesced output.
+            dram_words: 3.0 * 64.0 / t + out,
+            // Every voxel re-reads the staged 64 CPs from shared memory.
+            onchip_words: 3.0 * 64.0,
+            compute_eff: 0.85,
+        },
+        Method::Tt => Profile {
+            flops: 3.0 * super::OPS_TT,
+            // Appendix A case (d), 4×4×4 blocks of tiles; uncoalesced output.
+            dram_words: 3.0 * 343.0 / (64.0 * t) + out * TT_OUTPUT_PENALTY,
+            onchip_words: 0.0, // register tiling
+            compute_eff: 0.9,  // §5.2.1: ~90% of peak
+        },
+        Method::Ttli => Profile {
+            flops: 3.0 * super::OPS_TTLI,
+            dram_words: 3.0 * 343.0 / (64.0 * t) + out * TT_OUTPUT_PENALTY,
+            onchip_words: 0.0,
+            compute_eff: 0.75, // low occupancy, FMA chains
+        },
+        Method::Texture => Profile {
+            flops: 3.0 * super::OPS_TH,
+            dram_words: TH_INPUT_WORDS + out,
+            onchip_words: 0.0,
+            compute_eff: 0.9,
+        },
+        // CPU / reference methods have no GPU model.
+        _ => Profile { flops: f64::NAN, dram_words: f64::NAN, onchip_words: 0.0, compute_eff: 1.0 },
+    }
+}
+
+/// Modeled execution components (seconds per voxel).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelledTime {
+    pub compute_s: f64,
+    pub dram_s: f64,
+    pub onchip_s: f64,
+}
+
+impl ModelledTime {
+    /// Roofline: the binding bottleneck.
+    pub fn per_voxel(&self) -> f64 {
+        self.compute_s.max(self.dram_s).max(self.onchip_s)
+    }
+
+    /// Which resource binds ("compute" / "dram" / "onchip").
+    pub fn bottleneck(&self) -> &'static str {
+        if self.compute_s >= self.dram_s && self.compute_s >= self.onchip_s {
+            "compute"
+        } else if self.dram_s >= self.onchip_s {
+            "dram"
+        } else {
+            "onchip"
+        }
+    }
+}
+
+/// Estimate the time per voxel of `method` on `gpu` with cubic tiles of
+/// edge `delta`.
+pub fn time_per_voxel(gpu: &Gpu, method: Method, delta: f64) -> ModelledTime {
+    let p = profile(method, delta);
+    ModelledTime {
+        compute_s: p.flops / (gpu.gflops * 1e9 * p.compute_eff),
+        dram_s: p.dram_words * 4.0 / (gpu.dram_gbs * 1e9),
+        onchip_s: p.onchip_words * 4.0 / (gpu.onchip_gbs * 1e9),
+    }
+}
+
+/// Modeled speedup of `method` over the NiftyReg (TV) baseline.
+pub fn speedup_over_tv(gpu: &Gpu, method: Method, delta: f64) -> f64 {
+    time_per_voxel(gpu, Method::Tv, delta).per_voxel()
+        / time_per_voxel(gpu, method, delta).per_voxel()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttli_speedup_lands_in_papers_band() {
+        // Paper: 6.5× average, up to 7×, similar on both GPUs.
+        for gpu in [&GTX1050, &RTX2070] {
+            let s = speedup_over_tv(gpu, Method::Ttli, 5.0);
+            assert!((5.0..9.0).contains(&s), "{}: TTLI speedup {s}", gpu.name);
+        }
+    }
+
+    #[test]
+    fn ttli_beats_tt_by_1_3_to_2x() {
+        // Paper §5.2: TTLI outperforms TT by 1.77× (1050) / 1.5× (2070).
+        for gpu in [&GTX1050, &RTX2070] {
+            let tt = time_per_voxel(gpu, Method::Tt, 5.0).per_voxel();
+            let ttli = time_per_voxel(gpu, Method::Ttli, 5.0).per_voxel();
+            let r = tt / ttli;
+            assert!((1.2..2.2).contains(&r), "{}: TTLI/TT {r}", gpu.name);
+        }
+    }
+
+    #[test]
+    fn tt_close_to_tv_tiling() {
+        // §5.2.1: "TT does not provide significant speedup over TV-tiling".
+        let tt = time_per_voxel(&GTX1050, Method::Tt, 5.0).per_voxel();
+        let tvt = time_per_voxel(&GTX1050, Method::TvTiling, 5.0).per_voxel();
+        let r = tvt / tt;
+        assert!((0.8..1.4).contains(&r), "TV-tiling/TT = {r}");
+    }
+
+    #[test]
+    fn method_ordering_matches_figure5() {
+        // Fastest → slowest: TTLI < TT ≲ TV-tiling < TH < TV.
+        let t = |m| time_per_voxel(&GTX1050, m, 5.0).per_voxel();
+        assert!(t(Method::Ttli) < t(Method::Tt));
+        assert!(t(Method::Tt) <= t(Method::TvTiling) * 1.2);
+        assert!(t(Method::TvTiling) < t(Method::Texture));
+        assert!(t(Method::Texture) < t(Method::Tv));
+    }
+
+    #[test]
+    fn ttli_nearly_flat_across_tile_sizes() {
+        // Fig 5: time per voxel almost independent of tile size for TT/TTLI.
+        let times: Vec<f64> = [3.0, 4.0, 5.0, 6.0, 7.0]
+            .iter()
+            .map(|&d| time_per_voxel(&GTX1050, Method::Ttli, d).per_voxel())
+            .collect();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min < 1.25, "variation {}", max / min);
+    }
+
+    #[test]
+    fn ttli_is_bandwidth_bound_tt_is_compute_bound() {
+        // §5.2.1's diagnosis.
+        assert_eq!(time_per_voxel(&GTX1050, Method::Tt, 5.0).bottleneck(), "compute");
+        assert_eq!(time_per_voxel(&GTX1050, Method::Ttli, 5.0).bottleneck(), "dram");
+    }
+}

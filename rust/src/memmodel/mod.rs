@@ -1,0 +1,126 @@
+//! The paper's analytical models: Appendix A's external-memory transfer
+//! counts and Appendix B's per-voxel operation counts. These are the
+//! *mechanism* behind the measured speedups, and — in this GPU-less
+//! environment — the basis of the analytic GPU timing model
+//! ([`gpumodel`]) that regenerates the shape of Figures 5/6.
+
+pub mod gpumodel;
+
+/// Number of control points affecting a voxel in 3D (4³), the paper's `N`.
+pub const N_CONTROL_POINTS: f64 = 64.0;
+
+/// Cache transaction size in 32-bit words, the paper's `L`. The exact value
+/// cancels in every ratio the paper reports; 32 words = 128 B, a GPU cache
+/// line.
+pub const L_WORDS: f64 = 32.0;
+
+/// Appendix A, case (a) — *no tiles*: every voxel re-transfers its 64
+/// control points. Returns transfers for `m` voxels.
+pub fn transfers_no_tiles(m: f64) -> f64 {
+    N_CONTROL_POINTS * m / L_WORDS
+}
+
+/// Appendix A, case (b) — *hardware trilinear interpolation* (TH): 2³
+/// fetches per voxel.
+pub fn transfers_texture(m: f64) -> f64 {
+    8.0 * m / L_WORDS
+}
+
+/// Appendix A, case (c) — *a block per tile* (TV-tiling): 64 control points
+/// once per tile of `t` voxels.
+pub fn transfers_block_per_tile(m: f64, t: f64) -> f64 {
+    N_CONTROL_POINTS * m / (t * L_WORDS)
+}
+
+/// Appendix A, case (d) — *blocks of tiles* (TT/TTLI with an l×m×n tile
+/// block): the overlapped `(4+l−1)(4+m−1)(4+n−1)` region once per block.
+pub fn transfers_blocks_of_tiles(m_voxels: f64, t: f64, l: f64, m: f64, n: f64) -> f64 {
+    (4.0 + l - 1.0) * (4.0 + m - 1.0) * (4.0 + n - 1.0) * m_voxels / (l * m * n * t * L_WORDS)
+}
+
+/// Appendix B — operations per voxel (per vector component):
+/// direct weighted sum: 64 summands × (3 mul + 1 acc) − 1 = 255.
+pub const OPS_TT: f64 = 255.0;
+
+/// Appendix B — TTLI: 9 trilinear interpolations × 7 lerps × 2 ops = 126.
+pub const OPS_TTLI: f64 = 126.0;
+
+/// Appendix B — one-weight variant (LUT of 64 products): 127 ops but 64
+/// weight loads; rejected by the paper for register pressure.
+pub const OPS_ONE_WEIGHT: f64 = 127.0;
+
+/// Texture hardware: the 8 trilerp fetches are free (hardware); software
+/// combines them with the 9th trilerp plus weight computation ≈ 14 lerps
+/// × 2 + address math ≈ 40.
+pub const OPS_TH: f64 = 40.0;
+
+/// The paper's §3.2.1 headline ratios for a 5×5×5 tile and 4×4×4 blocks.
+pub struct TransferRatios {
+    /// TV(-tiling) transfers / TT transfers (paper: ≈ 12×).
+    pub tv_over_tt: f64,
+    /// TH transfers / TT transfers (paper: ≈ 187×).
+    pub th_over_tt: f64,
+}
+
+/// Compute the §3.2.1 ratios for a cubic tile of edge `delta` and a block
+/// of `block_edge`³ tiles.
+pub fn headline_ratios(delta: f64, block_edge: f64) -> TransferRatios {
+    let m = 1.0; // per-voxel basis; cancels
+    let t = delta * delta * delta;
+    let tt = transfers_blocks_of_tiles(m, t, block_edge, block_edge, block_edge);
+    TransferRatios {
+        tv_over_tt: transfers_block_per_tile(m, t) / tt,
+        th_over_tt: transfers_texture(m) / tt,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_headline_ratios_reproduced() {
+        // §3.2.1: "TT requires about 12× and about 187× (for 5×5×5 tiles)
+        // fewer memory transfers in comparison to TV and TH".
+        let r = headline_ratios(5.0, 4.0);
+        assert!((r.tv_over_tt - 11.95).abs() < 0.1, "TV/TT = {}", r.tv_over_tt);
+        assert!((r.th_over_tt - 186.6).abs() < 1.0, "TH/TT = {}", r.th_over_tt);
+    }
+
+    #[test]
+    fn appendix_a_orderings_hold() {
+        let m = 1e6;
+        let t = 125.0;
+        // (a) > (b) because 8 < 64.
+        assert!(transfers_no_tiles(m) > transfers_texture(m));
+        // (b) > (c) when T > 8 (the common case; T=125 by default).
+        assert!(transfers_texture(m) > transfers_block_per_tile(m, t));
+        // (c) > (d) whenever a block holds more than one tile.
+        assert!(
+            transfers_block_per_tile(m, t) > transfers_blocks_of_tiles(m, t, 4.0, 4.0, 4.0)
+        );
+        // l=m=n=1 degenerates (d) to (c) with the overlap halo.
+        let d1 = transfers_blocks_of_tiles(m, t, 1.0, 1.0, 1.0);
+        assert!((d1 - N_CONTROL_POINTS * m / (t * L_WORDS)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn op_counts_match_appendix_b() {
+        assert_eq!(OPS_TT, 255.0);
+        assert_eq!(OPS_TTLI, 126.0);
+        // TTLI cuts computation roughly in half.
+        assert!((OPS_TT / OPS_TTLI - 2.02).abs() < 0.02);
+    }
+
+    #[test]
+    fn cpu_case_is_a_special_case_of_blocks_of_tiles() {
+        // Appendix A observation 4: CPU threads process contiguous tiles in
+        // x: l = m = 1, n = row length.
+        let m = 1e6;
+        let t = 125.0;
+        let row = transfers_blocks_of_tiles(m, t, 8.0, 1.0, 1.0);
+        let block = transfers_blocks_of_tiles(m, t, 2.0, 2.0, 2.0);
+        // A cube overlaps better than a row of the same tile count (8).
+        assert!(block < row);
+    }
+}

@@ -1,0 +1,68 @@
+//! Checkerboard fusion and difference images — the paper's qualitative
+//! (§7, Figures 10/11) and quantitative (Figures 12/13) assessment
+//! artifacts, reproduced as data products (savable as .vol).
+
+use crate::volume::Volume;
+
+/// Checkerboard fusion: alternating `block`-sized cubes from `a` and `b`
+/// (Pluim et al.'s validation pattern the paper cites).
+pub fn checkerboard(a: &Volume, b: &Volume, block: usize) -> Volume {
+    assert_eq!(a.dims, b.dims);
+    assert!(block >= 1);
+    let d = a.dims;
+    Volume::from_fn(d, a.spacing, |x, y, z| {
+        let parity = (x / block + y / block + z / block) % 2;
+        if parity == 0 {
+            a.at(x, y, z)
+        } else {
+            b.at(x, y, z)
+        }
+    })
+}
+
+/// Normalized difference image |A − B| on [0,1]-normalized inputs
+/// (Figures 12/13's per-voxel mismatch maps).
+pub fn difference_image(a: &Volume, b: &Volume) -> Volume {
+    assert_eq!(a.dims, b.dims);
+    let an = a.normalized();
+    let bn = b.normalized();
+    let mut out = an.clone();
+    for (o, (&x, &y)) in out.data.iter_mut().zip(an.data.iter().zip(&bn.data)) {
+        *o = (x - y).abs();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::Dims;
+
+    #[test]
+    fn checkerboard_alternates_sources() {
+        let a = Volume::from_fn(Dims::new(8, 8, 8), [1.0; 3], |_, _, _| 1.0);
+        let b = Volume::from_fn(Dims::new(8, 8, 8), [1.0; 3], |_, _, _| 2.0);
+        let c = checkerboard(&a, &b, 4);
+        assert_eq!(c.at(0, 0, 0), 1.0);
+        assert_eq!(c.at(4, 0, 0), 2.0);
+        assert_eq!(c.at(4, 4, 0), 1.0);
+        assert_eq!(c.at(4, 4, 4), 2.0);
+    }
+
+    #[test]
+    fn difference_image_zero_for_identical() {
+        let v = Volume::from_fn(Dims::new(6, 6, 6), [1.0; 3], |x, y, z| (x * y + z) as f32);
+        let d = difference_image(&v, &v);
+        assert!(d.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn difference_image_normalized_range() {
+        let a = Volume::from_fn(Dims::new(6, 6, 6), [1.0; 3], |x, _, _| x as f32);
+        let b = Volume::from_fn(Dims::new(6, 6, 6), [1.0; 3], |x, _, _| 5.0 - x as f32);
+        let d = difference_image(&a, &b);
+        let (lo, hi) = d.intensity_range();
+        assert!(lo >= 0.0 && hi <= 1.0);
+        assert!(hi > 0.5, "opposite ramps must differ strongly");
+    }
+}

@@ -1,0 +1,143 @@
+//! Synthetic deformations: the ground-truth warps applied to the phantom to
+//! produce "intra-operative" images. Two families:
+//!
+//! 1. [`pneumoperitoneum`] — the paper's clinical scenario (§4): abdominal
+//!    insufflation pushes the liver posteriorly and compresses it
+//!    anteriorly; modeled as a smooth anterior-weighted displacement bump
+//!    expressed on a coarse B-spline control grid (so the ground truth lives
+//!    in the same model family FFD recovers, as in the real anatomy where
+//!    the deformation is smooth).
+//! 2. [`random_smooth`] — seeded random coarse-grid displacements for
+//!    robustness/property tests.
+
+use crate::bspline::{ControlGrid, Method};
+use crate::util::rng::Pcg32;
+use crate::volume::resample::warp;
+use crate::volume::{VectorField, Volume};
+
+/// Parameters of the insufflation-style deformation.
+#[derive(Clone, Debug)]
+pub struct PneumoParams {
+    /// Peak displacement (voxels) along −y (posterior push).
+    pub amplitude: f32,
+    /// Lateral spread of the bump as a fraction of the x extent.
+    pub spread: f32,
+    /// Mild global compression factor along y (1.0 = none).
+    pub compression: f32,
+    pub seed: u64,
+}
+
+impl Default for PneumoParams {
+    fn default() -> Self {
+        PneumoParams { amplitude: 4.0, spread: 0.45, compression: 0.97, seed: 11 }
+    }
+}
+
+/// Build the pneumoperitoneum displacement as a control grid over `vol`
+/// dims with tile size `tile`; returns grid + dense field.
+pub fn pneumoperitoneum(
+    vol: &Volume,
+    tile: [usize; 3],
+    p: &PneumoParams,
+) -> (ControlGrid, VectorField) {
+    let dims = vol.dims;
+    let mut grid = ControlGrid::zeros(dims, tile);
+    let mut rng = Pcg32::seeded(p.seed);
+    let (cx, cz) = (dims.nx as f32 / 2.0, dims.nz as f32 / 2.0);
+    let sigma2 = (p.spread * dims.nx as f32).powi(2);
+    for ck in 0..grid.dims.nz {
+        for cj in 0..grid.dims.ny {
+            for ci in 0..grid.dims.nx {
+                // Control point position in voxel coords.
+                let px = (ci as f32 - 1.0) * tile[0] as f32;
+                let py = (cj as f32 - 1.0) * tile[1] as f32;
+                let pz = (ck as f32 - 1.0) * tile[2] as f32;
+                // Anterior weighting: the bump acts mostly on high-y tissue.
+                let anterior = (py / dims.ny as f32).clamp(0.0, 1.0);
+                let bump = (-((px - cx).powi(2) + (pz - cz).powi(2)) / sigma2).exp();
+                let i = grid.idx(ci, cj, ck);
+                // Posterior push + compression toward the center plane.
+                grid.y[i] = -p.amplitude * bump * anterior
+                    + (1.0 - p.compression) * (py - dims.ny as f32 / 2.0);
+                // Small lateral jitter so the field is not axis-separable.
+                grid.x[i] = 0.15 * p.amplitude * bump * (2.0 * rng.uniform() - 1.0);
+                grid.z[i] = 0.15 * p.amplitude * bump * (2.0 * rng.uniform() - 1.0);
+            }
+        }
+    }
+    let field = Method::Ttli.instance().interpolate(&grid, dims);
+    (grid, field)
+}
+
+/// Random smooth deformation of bounded magnitude on a coarse grid.
+pub fn random_smooth(vol: &Volume, tile: [usize; 3], seed: u64, amp: f32) -> VectorField {
+    let mut grid = ControlGrid::zeros(vol.dims, tile);
+    grid.randomize(seed, amp);
+    Method::Ttli.instance().interpolate(&grid, vol.dims)
+}
+
+/// Apply a deformation to a volume, add acquisition noise and a small
+/// intensity shift (intra-op scans differ in gain/contrast), producing the
+/// "intra-operative" image.
+pub fn acquire_intraop(preop: &Volume, field: &VectorField, seed: u64, noise: f32) -> Volume {
+    let mut out = warp(preop, field);
+    let mut rng = Pcg32::seeded(seed ^ 0xACC);
+    let gain = 1.0 + 0.03 * (2.0 * rng.uniform() - 1.0);
+    let bias = 0.01 * (2.0 * rng.uniform() - 1.0);
+    for v in &mut out.data {
+        *v = (*v * gain + bias + noise * rng.normal()).max(0.0);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phantom::{generate, PhantomSpec};
+    use crate::volume::Dims;
+
+    #[test]
+    fn pneumo_field_is_smooth_and_bounded() {
+        let spec = PhantomSpec { dims: Dims::new(40, 32, 36), ..Default::default() };
+        let vol = generate(&spec);
+        let p = PneumoParams::default();
+        let (_, field) = pneumoperitoneum(&vol, [5, 5, 5], &p);
+        let max = field
+            .y
+            .iter()
+            .fold(0.0f32, |m, &v| m.max(v.abs()));
+        assert!(max > 0.5, "deformation should be non-trivial, max {max}");
+        assert!(max <= p.amplitude * 1.5, "bounded by amplitude, max {max}");
+        // Smoothness: neighbor difference below half a voxel.
+        let d = field.dims;
+        for z in 0..d.nz {
+            for y in 0..d.ny {
+                for x in 1..d.nx {
+                    let i = d.idx(x, y, z);
+                    let j = d.idx(x - 1, y, z);
+                    assert!((field.y[i] - field.y[j]).abs() < 0.5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn intraop_differs_but_correlates() {
+        let spec = PhantomSpec { dims: Dims::new(36, 28, 30), ..Default::default() };
+        let vol = generate(&spec);
+        let (_, field) = pneumoperitoneum(&vol, [5, 5, 5], &PneumoParams::default());
+        let intra = acquire_intraop(&vol, &field, 3, 0.01);
+        assert_ne!(intra.data, vol.data);
+        let c = crate::ffd::similarity::ncc(&vol, &intra);
+        assert!(c > 0.5, "still the same anatomy, ncc {c}");
+        assert!(c < 0.9999, "but visibly deformed, ncc {c}");
+    }
+
+    #[test]
+    fn random_smooth_is_deterministic() {
+        let vol = Volume::zeros(Dims::new(20, 20, 20), [1.0; 3]);
+        let a = random_smooth(&vol, [5, 5, 5], 4, 2.0);
+        let b = random_smooth(&vol, [5, 5, 5], 4, 2.0);
+        assert_eq!(a.x, b.x);
+    }
+}

@@ -1,0 +1,236 @@
+//! Synthetic pre-clinical dataset generator (DESIGN.md S12) — the stand-in
+//! for the paper's liver-phantom DynaCT and porcine MRI scans (§4, Table 2),
+//! which are hardware/data gated in this environment. The generator builds
+//! a liver-like volume (superellipsoid parenchyma + five tumors + a
+//! bifurcating vessel tree, the structures Figure 10/11 assess), then
+//! deforms it with a pneumoperitoneum-style inflation to create the
+//! intra-operative counterpart. The substitution argument is recorded in
+//! DESIGN.md §1.
+
+pub mod dataset;
+pub mod deform;
+
+use crate::util::rng::Pcg32;
+use crate::volume::{Dims, Volume};
+
+/// Anatomy parameters for one phantom.
+#[derive(Clone, Debug)]
+pub struct PhantomSpec {
+    pub dims: Dims,
+    pub spacing: [f32; 3],
+    /// Number of tumors (the paper's phantom has five).
+    pub tumors: usize,
+    /// Vessel tree bifurcation depth.
+    pub vessel_depth: usize,
+    /// Intensity noise amplitude.
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl Default for PhantomSpec {
+    fn default() -> Self {
+        PhantomSpec {
+            dims: Dims::new(96, 64, 72),
+            spacing: [1.0, 1.0, 1.0],
+            tumors: 5,
+            vessel_depth: 4,
+            noise: 0.02,
+            seed: 7,
+        }
+    }
+}
+
+/// A capsule (cylinder with spherical caps) — one vessel segment.
+#[derive(Clone, Copy, Debug)]
+struct Capsule {
+    a: [f32; 3],
+    b: [f32; 3],
+    r: f32,
+}
+
+impl Capsule {
+    /// Squared distance from point p to segment ab.
+    fn dist2(&self, p: [f32; 3]) -> f32 {
+        let ab = [self.b[0] - self.a[0], self.b[1] - self.a[1], self.b[2] - self.a[2]];
+        let ap = [p[0] - self.a[0], p[1] - self.a[1], p[2] - self.a[2]];
+        let len2 = ab[0] * ab[0] + ab[1] * ab[1] + ab[2] * ab[2];
+        let t = if len2 > 0.0 {
+            ((ap[0] * ab[0] + ap[1] * ab[1] + ap[2] * ab[2]) / len2).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        let q = [self.a[0] + t * ab[0], self.a[1] + t * ab[1], self.a[2] + t * ab[2]];
+        (p[0] - q[0]).powi(2) + (p[1] - q[1]).powi(2) + (p[2] - q[2]).powi(2)
+    }
+}
+
+/// Generate the vessel tree as capsules by recursive bifurcation.
+fn vessel_tree(spec: &PhantomSpec, rng: &mut Pcg32) -> Vec<Capsule> {
+    let d = spec.dims;
+    let mut caps = Vec::new();
+    // Root enters from the posterior face toward the center.
+    let root_a = [d.nx as f32 * 0.5, d.ny as f32 * 0.15, d.nz as f32 * 0.5];
+    let root_b = [d.nx as f32 * 0.5, d.ny as f32 * 0.45, d.nz as f32 * 0.5];
+    let root_r = d.nx.min(d.ny).min(d.nz) as f32 * 0.035;
+
+    fn grow(
+        caps: &mut Vec<Capsule>,
+        a: [f32; 3],
+        b: [f32; 3],
+        r: f32,
+        depth: usize,
+        rng: &mut Pcg32,
+        dims: Dims,
+    ) {
+        caps.push(Capsule { a, b, r });
+        if depth == 0 || r < 0.6 {
+            return;
+        }
+        let dir = [b[0] - a[0], b[1] - a[1], b[2] - a[2]];
+        let len = (dir[0] * dir[0] + dir[1] * dir[1] + dir[2] * dir[2]).sqrt().max(1e-3);
+        for _ in 0..2 {
+            // Child direction: parent direction + random deviation.
+            let dev = 0.7;
+            let nd = [
+                dir[0] / len + dev * (rng.uniform() - 0.5),
+                dir[1] / len + dev * (rng.uniform() - 0.5),
+                dir[2] / len + dev * (rng.uniform() - 0.5),
+            ];
+            let nlen = (nd[0] * nd[0] + nd[1] * nd[1] + nd[2] * nd[2]).sqrt().max(1e-3);
+            let child_len = len * 0.75;
+            let c = [
+                (b[0] + nd[0] / nlen * child_len).clamp(2.0, dims.nx as f32 - 3.0),
+                (b[1] + nd[1] / nlen * child_len).clamp(2.0, dims.ny as f32 - 3.0),
+                (b[2] + nd[2] / nlen * child_len).clamp(2.0, dims.nz as f32 - 3.0),
+            ];
+            grow(caps, b, c, r * 0.7, depth - 1, rng, dims);
+        }
+    }
+
+    grow(&mut caps, root_a, root_b, root_r, spec.vessel_depth, rng, d);
+    caps
+}
+
+/// Tumor centers + radii for a spec (deterministic — drawn first from the
+/// spec's seed, so they can be re-derived independently as ground-truth
+/// landmarks for TRE evaluation).
+pub fn tumor_spec(spec: &PhantomSpec) -> Vec<([f32; 3], f32)> {
+    let d = spec.dims;
+    let mut rng = Pcg32::seeded(spec.seed);
+    let (cx, cy, cz) = (d.nx as f32 / 2.0, d.ny as f32 / 2.0, d.nz as f32 / 2.0);
+    let (ax, ay, az) = (d.nx as f32 * 0.42, d.ny as f32 * 0.38, d.nz as f32 * 0.40);
+    (0..spec.tumors)
+        .map(|_| {
+            let p = [
+                cx + ax * 0.55 * (2.0 * rng.uniform() - 1.0),
+                cy + ay * 0.55 * (2.0 * rng.uniform() - 1.0),
+                cz + az * 0.55 * (2.0 * rng.uniform() - 1.0),
+            ];
+            let r = d.nx.min(d.ny).min(d.nz) as f32 * rng.range(0.035, 0.07);
+            (p, r)
+        })
+        .collect()
+}
+
+/// Ground-truth landmarks (tumor centers) for a spec.
+pub fn landmarks(spec: &PhantomSpec) -> Vec<[f32; 3]> {
+    tumor_spec(spec).into_iter().map(|(p, _)| p).collect()
+}
+
+/// Generate the pre-operative phantom volume.
+pub fn generate(spec: &PhantomSpec) -> Volume {
+    let d = spec.dims;
+    let mut rng = Pcg32::seeded(spec.seed);
+    let (cx, cy, cz) = (d.nx as f32 / 2.0, d.ny as f32 / 2.0, d.nz as f32 / 2.0);
+    // Liver-ish superellipsoid semi-axes.
+    let (ax, ay, az) = (d.nx as f32 * 0.42, d.ny as f32 * 0.38, d.nz as f32 * 0.40);
+    let exponent = 2.6f32;
+
+    // Tumors: spheres inside the parenchyma at deterministic positions
+    // (consume the same RNG draws as tumor_spec so vessels stay aligned).
+    let tumors: Vec<([f32; 3], f32)> = tumor_spec(spec);
+    for _ in 0..spec.tumors {
+        // Advance this RNG identically to the draws tumor_spec made.
+        rng.uniform();
+        rng.uniform();
+        rng.uniform();
+        rng.uniform();
+    }
+
+    let vessels = vessel_tree(spec, &mut rng);
+    let mut noise_rng = rng.fork(2);
+
+    Volume::from_fn(d, spec.spacing, |x, y, z| {
+        let p = [x as f32, y as f32, z as f32];
+        // Superellipsoid inside test with a soft edge.
+        let q = ((p[0] - cx).abs() / ax).powf(exponent)
+            + ((p[1] - cy).abs() / ay).powf(exponent)
+            + ((p[2] - cz).abs() / az).powf(exponent);
+        let body = 1.0 / (1.0 + ((q - 1.0) * 14.0).exp()); // sigmoid edge
+        if body < 0.005 {
+            // Background: faint noise floor (air / couch).
+            return 0.02 * noise_rng.uniform();
+        }
+        // Parenchyma texture: smooth low-frequency modulation.
+        let tex = 0.06
+            * ((p[0] * 0.21).sin() * (p[1] * 0.17).cos()
+                + (p[2] * 0.13).sin() * (p[0] * 0.11).cos());
+        let mut v = 0.58 + tex;
+        // Tumors darker, smooth boundary.
+        for &(tp, tr) in &tumors {
+            let d2 = (p[0] - tp[0]).powi(2) + (p[1] - tp[1]).powi(2) + (p[2] - tp[2]).powi(2);
+            let w = 1.0 / (1.0 + ((d2.sqrt() - tr) * 2.5).exp());
+            v = v * (1.0 - w) + 0.30 * w;
+        }
+        // Vessels brighter (contrast-enhanced).
+        for c in &vessels {
+            if c.dist2(p) < (c.r * 2.5).powi(2) {
+                let w = 1.0 / (1.0 + ((c.dist2(p).sqrt() - c.r) * 3.0).exp());
+                v = v * (1.0 - w) + 0.92 * w;
+            }
+        }
+        (v * body + spec.noise * noise_rng.normal()).max(0.0)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phantom_is_deterministic() {
+        let spec = PhantomSpec { dims: Dims::new(32, 24, 28), ..Default::default() };
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn phantom_has_liver_structure() {
+        let spec = PhantomSpec { dims: Dims::new(48, 36, 40), ..Default::default() };
+        let v = generate(&spec);
+        // Center is parenchyma-bright, corners are background-dark.
+        let center = v.at(24, 18, 20);
+        let corner = v.at(1, 1, 1);
+        assert!(center > 0.3, "center {center}");
+        assert!(corner < 0.1, "corner {corner}");
+        // Intensity histogram spans tumors and vessels.
+        let (lo, hi) = v.intensity_range();
+        assert!(lo >= 0.0 && hi > 0.7, "range {lo}..{hi}");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(&PhantomSpec { dims: Dims::new(24, 24, 24), seed: 1, ..Default::default() });
+        let b = generate(&PhantomSpec { dims: Dims::new(24, 24, 24), seed: 2, ..Default::default() });
+        assert_ne!(a.data, b.data);
+    }
+
+    #[test]
+    fn capsule_distance_is_correct() {
+        let c = Capsule { a: [0.0, 0.0, 0.0], b: [10.0, 0.0, 0.0], r: 1.0 };
+        assert_eq!(c.dist2([5.0, 3.0, 0.0]), 9.0);
+        assert_eq!(c.dist2([-2.0, 0.0, 0.0]), 4.0); // beyond cap a
+        assert_eq!(c.dist2([12.0, 0.0, 0.0]), 4.0); // beyond cap b
+    }
+}

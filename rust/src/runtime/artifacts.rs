@@ -1,0 +1,196 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. Parsed with the in-repo JSON substrate.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::json::Json;
+
+/// IO slot description (name + shape).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Slot {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One lowered entry point at one static configuration.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Unique name, `<entry>_<nz>x<ny>x<nx>_t<tile>`.
+    pub name: String,
+    /// Entry point (`bsi_ttli`, `bsi_tt`, `warp`, `ssd_grad`, `ffd_step`).
+    pub entry: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+    /// Volume dims as `[nz, ny, nx]`.
+    pub vol_dims: [usize; 3],
+    /// Cubic tile edge.
+    pub tile: usize,
+    pub inputs: Vec<Slot>,
+    pub outputs: Vec<Slot>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format: String,
+    pub jax_version: String,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn parse_slot(j: &Json) -> Result<Slot> {
+    let name = j
+        .get("name")
+        .as_str()
+        .ok_or_else(|| anyhow!("slot missing name"))?
+        .to_string();
+    let shape = j
+        .get("shape")
+        .as_arr()
+        .ok_or_else(|| anyhow!("slot {name} missing shape"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape in {name}")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Slot { name, shape })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let format = j.get("format").as_str().unwrap_or("").to_string();
+        if format != "hlo-text" {
+            bail!("unsupported manifest format '{format}' (want hlo-text)");
+        }
+        let arts = j
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            let vd = a
+                .get("vol_dims")
+                .as_arr()
+                .ok_or_else(|| anyhow!("artifact missing vol_dims"))?;
+            if vd.len() != 3 {
+                bail!("vol_dims must have 3 entries");
+            }
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact missing name"))?
+                    .to_string(),
+                entry: a
+                    .get("entry")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact missing entry"))?
+                    .to_string(),
+                file: a
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("artifact missing file"))?
+                    .to_string(),
+                vol_dims: [
+                    vd[0].as_usize().ok_or_else(|| anyhow!("bad vol_dims"))?,
+                    vd[1].as_usize().ok_or_else(|| anyhow!("bad vol_dims"))?,
+                    vd[2].as_usize().ok_or_else(|| anyhow!("bad vol_dims"))?,
+                ],
+                tile: a.get("tile").as_usize().ok_or_else(|| anyhow!("bad tile"))?,
+                inputs: a
+                    .get("inputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_slot)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .get("outputs")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(parse_slot)
+                    .collect::<Result<Vec<_>>>()?,
+            });
+        }
+        Ok(Manifest {
+            format,
+            jax_version: j.get("jax_version").as_str().unwrap_or("?").to_string(),
+            artifacts,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    /// All (vol_dims, tile) configurations present for an entry.
+    pub fn configs_for(&self, entry: &str) -> Vec<([usize; 3], usize)> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.entry == entry)
+            .map(|a| (a.vol_dims, a.tile))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "jax_version": "0.8.2",
+      "artifacts": [
+        {"name": "bsi_ttli_20x20x20_t5", "entry": "bsi_ttli",
+         "file": "bsi_ttli_20x20x20_t5.hlo.txt",
+         "vol_dims": [20, 20, 20], "tile": 5,
+         "inputs": [{"name": "cp", "shape": [3, 7, 7, 7]}],
+         "outputs": [{"name": "field", "shape": [3, 20, 20, 20]}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.entry, "bsi_ttli");
+        assert_eq!(a.vol_dims, [20, 20, 20]);
+        assert_eq!(a.tile, 5);
+        assert_eq!(a.inputs[0].shape, vec![3, 7, 7, 7]);
+        assert_eq!(m.configs_for("bsi_ttli"), vec![([20, 20, 20], 5)]);
+        assert!(m.configs_for("nope").is_empty());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_artifacts() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"format":"hlo-text","artifacts":[{"entry":"x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // Integration hook: when `make artifacts` has run, the real manifest
+        // must parse and contain every entry point.
+        let path = std::path::Path::new("artifacts/manifest.json");
+        if !path.exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(path).unwrap();
+        for entry in ["bsi_ttli", "bsi_tt", "warp", "ssd_grad", "ffd_step"] {
+            assert!(
+                m.artifacts.iter().any(|a| a.entry == entry),
+                "missing entry {entry}"
+            );
+        }
+    }
+}

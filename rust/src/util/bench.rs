@@ -1,0 +1,176 @@
+//! Bench-report harness (criterion substitute, DESIGN.md §1).
+//!
+//! Every bench binary under `rust/benches/` builds a [`Report`] of named rows
+//! — mirroring a specific table or figure from the paper — and renders it as
+//! an aligned text table plus a JSON blob under `target/bench-reports/`, so
+//! EXPERIMENTS.md can quote machine-generated numbers.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use super::json::Json;
+
+/// One labelled measurement series (e.g. a figure line: method × tile size).
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    /// Ordered (column name, value) pairs.
+    pub cells: Vec<(String, f64)>,
+}
+
+/// A bench report: the reproduction of one paper table/figure.
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub rows: Vec<Row>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Self {
+        Report { id: id.to_string(), title: title.to_string(), rows: vec![], notes: vec![] }
+    }
+
+    pub fn row(&mut self, label: &str) -> &mut Row {
+        self.rows.push(Row { label: label.to_string(), cells: vec![] });
+        self.rows.last_mut().unwrap()
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Render the aligned table to stdout and persist JSON.
+    pub fn finish(&self) {
+        println!("\n== {} — {} ==", self.id, self.title);
+        // Column set = union over rows, in first-seen order.
+        let mut cols: Vec<String> = vec![];
+        for r in &self.rows {
+            for (c, _) in &r.cells {
+                if !cols.contains(c) {
+                    cols.push(c.clone());
+                }
+            }
+        }
+        let label_w = self
+            .rows
+            .iter()
+            .map(|r| r.label.len())
+            .chain(std::iter::once(6))
+            .max()
+            .unwrap();
+        let col_w: Vec<usize> = cols.iter().map(|c| c.len().max(12)).collect();
+        print!("{:label_w$}", "series");
+        for (c, w) in cols.iter().zip(&col_w) {
+            print!("  {c:>w$}");
+        }
+        println!();
+        for r in &self.rows {
+            print!("{:label_w$}", r.label);
+            let map: BTreeMap<&str, f64> =
+                r.cells.iter().map(|(c, v)| (c.as_str(), *v)).collect();
+            for (c, w) in cols.iter().zip(&col_w) {
+                match map.get(c.as_str()) {
+                    Some(v) => print!("  {:>w$}", format_cell(*v)),
+                    None => print!("  {:>w$}", "-"),
+                }
+            }
+            println!();
+        }
+        for n in &self.notes {
+            println!("  note: {n}");
+        }
+        if let Err(e) = self.write_json() {
+            eprintln!("  (could not persist report json: {e})");
+        }
+    }
+
+    fn write_json(&self) -> std::io::Result<()> {
+        let dir = report_dir();
+        std::fs::create_dir_all(&dir)?;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("label", Json::Str(r.label.clone())),
+                    (
+                        "cells",
+                        Json::Obj(
+                            r.cells
+                                .iter()
+                                .map(|(c, v)| (c.clone(), Json::Num(*v)))
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("title", Json::Str(self.title.clone())),
+            ("rows", Json::Arr(rows)),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+            ),
+        ]);
+        std::fs::write(dir.join(format!("{}.json", self.id)), doc.to_string_pretty())
+    }
+}
+
+impl Row {
+    pub fn cell(&mut self, col: &str, v: f64) -> &mut Self {
+        self.cells.push((col.to_string(), v));
+        self
+    }
+}
+
+fn format_cell(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1e5 || v.abs() < 1e-3 {
+        format!("{v:.3e}")
+    } else if v.fract() == 0.0 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Where bench JSON reports land.
+pub fn report_dir() -> PathBuf {
+    PathBuf::from(
+        std::env::var("FFDREG_REPORT_DIR").unwrap_or_else(|_| "target/bench-reports".into()),
+    )
+}
+
+/// Quick/full switch: benches honor FFDREG_BENCH_FULL=1 for paper-scale runs
+/// and default to reduced problem sizes so `cargo bench` stays tractable on
+/// small machines.
+pub fn full_scale() -> bool {
+    std::env::var("FFDREG_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_builds_rows_and_cells() {
+        let mut rep = Report::new("t", "test");
+        rep.row("a").cell("x", 1.0).cell("y", 2.0);
+        rep.row("b").cell("x", 3.0);
+        assert_eq!(rep.rows.len(), 2);
+        assert_eq!(rep.rows[0].cells.len(), 2);
+    }
+
+    #[test]
+    fn cell_formatting() {
+        assert_eq!(format_cell(0.0), "0");
+        assert_eq!(format_cell(3.0), "3");
+        assert_eq!(format_cell(0.5), "0.5000");
+        assert!(format_cell(1.0e-9).contains('e'));
+        assert!(format_cell(1.0e9).contains('e'));
+    }
+}

@@ -1,0 +1,12 @@
+//! Infrastructure substrates built in-repo because the offline environment
+//! vendors only the `xla` crate closure (see DESIGN.md §1): deterministic
+//! PRNG, minimal JSON, timing/statistics, a scoped thread pool, a property
+//! testing harness, and the bench-report harness used by `rust/benches/`.
+
+pub mod bench;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,114 @@
+//! Minimal property-testing harness (proptest substitute, DESIGN.md §1).
+//!
+//! A property is a closure over a [`Gen`] (a seeded value source). The runner
+//! executes it for `cases` deterministic seeds; on failure it reports the
+//! failing seed so the case can be replayed exactly. There is no structural
+//! shrinking — generators are encouraged to draw sizes first and keep them
+//! small — but the failing seed plus deterministic generation gives the same
+//! debuggability in practice.
+
+use super::rng::Pcg32;
+
+/// A seeded generation context handed to properties.
+pub struct Gen {
+    pub rng: Pcg32,
+    /// Size hint: generators should scale collection sizes by this.
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u32) as usize
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` for `cases` deterministic cases derived from `seed`.
+/// Panics with the failing case's seed and message on the first failure.
+pub fn check(name: &str, seed: u64, cases: usize, prop: impl Fn(&mut Gen) -> CaseResult) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9e3779b97f4a7c15);
+        let mut g = Gen { rng: Pcg32::seeded(case_seed), size: 1 + case % 17 };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> CaseResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        // Interior mutability via Cell to count invocations.
+        let counter = std::cell::Cell::new(0usize);
+        check("always-ok", 1, 25, |g| {
+            counter.set(counter.get() + 1);
+            let n = g.usize_in(0, 10);
+            if n <= 10 { Ok(()) } else { Err("impossible".into()) }
+        });
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 2, 10, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn assert_close_detects_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-7], 1e-6, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(assert_close(&[1.0, 2.0], &[1.0], 0.1, 0.0).is_err());
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check("gen-ranges", 3, 50, |g| {
+            let n = g.usize_in(2, 5);
+            if !(2..=5).contains(&n) {
+                return Err(format!("usize_in out of range: {n}"));
+            }
+            let x = g.f32_in(-1.0, 1.0);
+            if !(-1.0..1.0).contains(&x) {
+                return Err(format!("f32_in out of range: {x}"));
+            }
+            Ok(())
+        });
+    }
+}

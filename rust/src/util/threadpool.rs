@@ -1,0 +1,207 @@
+//! Scoped data-parallel helpers over std threads.
+//!
+//! The BSI kernels and the FFD gradient are embarrassingly parallel over
+//! tiles/voxels. The vendored crate set has no rayon, so we provide
+//! `par_chunks_mut` (split a mutable slice into contiguous chunks, one thread
+//! each) and `par_for` (index-range fan-out). Thread count defaults to the
+//! machine parallelism and is overridable via FFDREG_THREADS for experiments.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (cached; env override FFDREG_THREADS).
+pub fn num_threads() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let v = CACHED.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let n = std::env::var("FFDREG_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Apply `f(chunk_index, chunk)` to contiguous chunks of `data` in parallel.
+/// `chunk_len` is the number of elements per chunk (last chunk may be short).
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let n_chunks = data.len().div_ceil(chunk_len);
+    if n_chunks <= 1 || num_threads() == 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    // Work-stealing over a shared queue of (index, chunk) pairs: each chunk
+    // is popped by exactly one worker, so mutable access stays unique.
+    let queue: std::sync::Mutex<Vec<(usize, &mut [T])>> =
+        std::sync::Mutex::new(data.chunks_mut(chunk_len).enumerate().collect());
+    let workers = num_threads().min(n_chunks);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = &queue;
+            let f = &f;
+            scope.spawn(move || loop {
+                let item = queue.lock().unwrap().pop();
+                match item {
+                    Some((i, chunk)) => f(i, chunk),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Parallel traversal of three equally-long mutable slices in lockstep
+/// chunks — used for structure-of-arrays vector fields (x/y/z component
+/// planes of a deformation field). `f(chunk_index, xs, ys, zs)`.
+pub fn par_chunks_mut3<T: Send, F>(
+    a: &mut [T],
+    b: &mut [T],
+    c: &mut [T],
+    chunk_len: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [T], &mut [T], &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0);
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), c.len());
+    let triples: Vec<(usize, (&mut [T], &mut [T], &mut [T]))> = a
+        .chunks_mut(chunk_len)
+        .zip(b.chunks_mut(chunk_len))
+        .zip(c.chunks_mut(chunk_len))
+        .map(|((x, y), z)| (x, y, z))
+        .enumerate()
+        .collect();
+    if triples.len() <= 1 || num_threads() == 1 {
+        for (i, (x, y, z)) in triples {
+            f(i, x, y, z);
+        }
+        return;
+    }
+    let queue = std::sync::Mutex::new(triples);
+    let workers = num_threads();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let queue = &queue;
+            let f = &f;
+            scope.spawn(move || loop {
+                let item = queue.lock().unwrap().pop();
+                match item {
+                    Some((i, (x, y, z))) => f(i, x, y, z),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Parallel for over `0..n`: calls `f(i)` once per index.
+pub fn par_for<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = num_threads().min(n);
+    if workers == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Map over `0..n` in parallel collecting results in order.
+pub fn par_map<T: Send + Sync + Default + Clone, F>(n: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    // Chunk the output buffer; each worker fills its own contiguous span.
+    let chunk = 1usize.max(n.div_ceil(num_threads() * 4));
+    par_chunks_mut(&mut out, chunk, |ci, slice| {
+        let base = ci * chunk;
+        for (j, slot) in slice.iter_mut().enumerate() {
+            *slot = f(base + j);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_mut_touches_every_element_once() {
+        let mut v = vec![0u32; 1000];
+        par_chunks_mut(&mut v, 7, |_, c| {
+            for x in c {
+                *x += 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn par_chunks_mut_chunk_indices_are_correct() {
+        let mut v = vec![0usize; 100];
+        par_chunks_mut(&mut v, 10, |ci, c| {
+            for x in c {
+                *x = ci;
+            }
+        });
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i / 10);
+        }
+    }
+
+    #[test]
+    fn par_for_covers_range() {
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        par_for(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(500, |i| i * i);
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        par_for(0, |_| panic!("must not be called"));
+        let out: Vec<usize> = par_map(0, |i| i);
+        assert!(out.is_empty());
+        let mut v: Vec<u8> = vec![];
+        par_chunks_mut(&mut v, 4, |_, _| panic!("must not be called"));
+    }
+}

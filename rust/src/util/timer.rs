@@ -1,0 +1,93 @@
+//! Wall-clock timing helpers (the paper uses CUDA events; we use the
+//! monotonic clock). `time_samples` runs a closure repeatedly and feeds a
+//! [`crate::util::stats::Summary`], with warmup iterations excluded, which is
+//! the measurement protocol used by every bench in `rust/benches/`.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Time a single invocation, returning (result, seconds).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` for `warmup` untimed iterations then `samples` timed ones.
+pub fn time_samples(warmup: usize, samples: usize, mut f: impl FnMut()) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// Adaptive variant: keeps sampling until `min_samples` are collected AND at
+/// least `min_total` seconds have been spent (bounded by `max_samples`), so
+/// fast kernels get enough repetitions for a stable mean.
+pub fn time_adaptive(min_samples: usize, max_samples: usize, min_total: f64, mut f: impl FnMut()) -> Summary {
+    f(); // warmup
+    let mut s = Summary::new();
+    let mut total = 0.0;
+    while s.count() < max_samples && (s.count() < min_samples || total < min_total) {
+        let t0 = Instant::now();
+        f();
+        let dt = t0.elapsed().as_secs_f64();
+        total += dt;
+        s.push(dt);
+    }
+    s
+}
+
+/// Format seconds with an appropriate unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.3} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_returns_result_and_positive_time() {
+        let (v, t) = time_once(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499500);
+        assert!(t >= 0.0);
+    }
+
+    #[test]
+    fn time_samples_counts() {
+        let mut calls = 0;
+        let s = time_samples(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.count(), 5);
+    }
+
+    #[test]
+    fn adaptive_respects_bounds() {
+        let s = time_adaptive(3, 10, 0.0, || {});
+        assert!(s.count() >= 3 && s.count() <= 10);
+    }
+
+    #[test]
+    fn formats_units() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,165 @@
+//! Volume persistence: a minimal `.vol` container (little-endian f32 raw data
+//! + JSON header) standing in for NIfTI, which the offline environment has no
+//! reader for. The format is intentionally trivial so the synthetic dataset
+//! (DESIGN.md S12) can be shared between the rust pipeline, python tests and
+//! external tools.
+//!
+//! Layout of `<name>.vol`:
+//!   magic  b"FFDVOL1\n"  (8 bytes)
+//!   header_len: u32 LE
+//!   header: JSON  {"dims":[nx,ny,nz],"spacing":[sx,sy,sz]}
+//!   data: nx*ny*nz f32 LE, x fastest
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::{Dims, Volume};
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"FFDVOL1\n";
+
+/// Errors from volume IO.
+#[derive(Debug)]
+pub enum VolError {
+    Io(std::io::Error),
+    Format(String),
+}
+
+impl std::fmt::Display for VolError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VolError::Io(e) => write!(f, "io error: {e}"),
+            VolError::Format(m) => write!(f, "format error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for VolError {}
+
+impl From<std::io::Error> for VolError {
+    fn from(e: std::io::Error) -> Self {
+        VolError::Io(e)
+    }
+}
+
+/// Write a volume to `path`.
+pub fn save(vol: &Volume, path: &Path) -> Result<(), VolError> {
+    let header = Json::obj(vec![
+        ("dims", Json::arr_usize(&vol.dims.as_array())),
+        (
+            "spacing",
+            Json::arr_f64(&[
+                vol.spacing[0] as f64,
+                vol.spacing[1] as f64,
+                vol.spacing[2] as f64,
+            ]),
+        ),
+    ])
+    .to_string();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(header.len() as u32).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    // Bulk-convert to bytes.
+    let mut bytes = Vec::with_capacity(vol.data.len() * 4);
+    for &v in &vol.data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Read a volume from `path`.
+pub fn load(path: &Path) -> Result<Volume, VolError> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(VolError::Format("bad magic — not a .vol file".into()));
+    }
+    let mut len4 = [0u8; 4];
+    f.read_exact(&mut len4)?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    if hlen > 1 << 20 {
+        return Err(VolError::Format("unreasonable header length".into()));
+    }
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let htxt = String::from_utf8(hbuf).map_err(|_| VolError::Format("header not utf-8".into()))?;
+    let h = Json::parse(&htxt).map_err(|e| VolError::Format(format!("header json: {e}")))?;
+    let dims_arr = h.get("dims").as_arr().ok_or_else(|| VolError::Format("missing dims".into()))?;
+    if dims_arr.len() != 3 {
+        return Err(VolError::Format("dims must have 3 entries".into()));
+    }
+    let dims = Dims::new(
+        dims_arr[0].as_usize().ok_or_else(|| VolError::Format("bad dims".into()))?,
+        dims_arr[1].as_usize().ok_or_else(|| VolError::Format("bad dims".into()))?,
+        dims_arr[2].as_usize().ok_or_else(|| VolError::Format("bad dims".into()))?,
+    );
+    let sp = h.get("spacing").as_arr().ok_or_else(|| VolError::Format("missing spacing".into()))?;
+    if sp.len() != 3 {
+        return Err(VolError::Format("spacing must have 3 entries".into()));
+    }
+    let spacing = [
+        sp[0].as_f64().unwrap_or(1.0) as f32,
+        sp[1].as_f64().unwrap_or(1.0) as f32,
+        sp[2].as_f64().unwrap_or(1.0) as f32,
+    ];
+    let n = dims.count();
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)?;
+    let mut data = Vec::with_capacity(n);
+    for c in bytes.chunks_exact(4) {
+        data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(Volume { dims, spacing, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ffdreg-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let v = Volume::from_fn(Dims::new(5, 4, 3), [0.5, 1.0, 2.0], |x, y, z| {
+            (x as f32) * 0.1 - (y as f32) + (z as f32) * 7.0
+        });
+        let p = tmp("rt.vol");
+        save(&v, &p).unwrap();
+        let r = load(&p).unwrap();
+        assert_eq!(r.dims, v.dims);
+        assert_eq!(r.spacing, v.spacing);
+        assert_eq!(r.data, v.data);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad.vol");
+        std::fs::write(&p, b"NOTAVOL!xxxxxxxxxxxx").unwrap();
+        assert!(matches!(load(&p), Err(VolError::Format(_))));
+    }
+
+    #[test]
+    fn rejects_truncated_data() {
+        let v = Volume::zeros(Dims::new(4, 4, 4), [1.0; 3]);
+        let p = tmp("trunc.vol");
+        save(&v, &p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 8]).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(matches!(
+            load(Path::new("/nonexistent/nope.vol")),
+            Err(VolError::Io(_))
+        ));
+    }
+}

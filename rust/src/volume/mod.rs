@@ -1,0 +1,237 @@
+//! 3D volume substrate (DESIGN.md S9): the in-memory representation of
+//! CT/MRI-like scalar volumes and of dense vector fields (deformation
+//! fields), plus IO, pyramid downsampling and trilinear resampling.
+
+pub mod io;
+pub mod pyramid;
+pub mod resample;
+
+/// Dimensions of a 3D lattice, in voxels. Axis order is (x, y, z) with x the
+/// fastest-varying axis in memory (NIfTI / NiftyReg convention).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dims {
+    pub nx: usize,
+    pub ny: usize,
+    pub nz: usize,
+}
+
+impl Dims {
+    pub fn new(nx: usize, ny: usize, nz: usize) -> Self {
+        Dims { nx, ny, nz }
+    }
+
+    pub fn count(&self) -> usize {
+        self.nx * self.ny * self.nz
+    }
+
+    /// Flat index of (x, y, z).
+    #[inline(always)]
+    pub fn idx(&self, x: usize, y: usize, z: usize) -> usize {
+        (z * self.ny + y) * self.nx + x
+    }
+
+    pub fn as_array(&self) -> [usize; 3] {
+        [self.nx, self.ny, self.nz]
+    }
+}
+
+/// A dense scalar volume with isotropic-or-not voxel spacing in mm.
+#[derive(Clone, Debug)]
+pub struct Volume {
+    pub dims: Dims,
+    /// Voxel spacing (mm) per axis — Table 2's "Voxel Spacing".
+    pub spacing: [f32; 3],
+    pub data: Vec<f32>,
+}
+
+impl Volume {
+    pub fn zeros(dims: Dims, spacing: [f32; 3]) -> Self {
+        Volume { dims, spacing, data: vec![0.0; dims.count()] }
+    }
+
+    pub fn from_fn(dims: Dims, spacing: [f32; 3], mut f: impl FnMut(usize, usize, usize) -> f32) -> Self {
+        let mut v = Volume::zeros(dims, spacing);
+        let mut i = 0;
+        for z in 0..dims.nz {
+            for y in 0..dims.ny {
+                for x in 0..dims.nx {
+                    v.data[i] = f(x, y, z);
+                    i += 1;
+                }
+            }
+        }
+        v
+    }
+
+    #[inline(always)]
+    pub fn at(&self, x: usize, y: usize, z: usize) -> f32 {
+        self.data[self.dims.idx(x, y, z)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, x: usize, y: usize, z: usize, v: f32) {
+        let i = self.dims.idx(x, y, z);
+        self.data[i] = v;
+    }
+
+    /// Clamped lookup (border replication) — used by samplers and gradients.
+    #[inline(always)]
+    pub fn at_clamped(&self, x: isize, y: isize, z: isize) -> f32 {
+        let cx = x.clamp(0, self.dims.nx as isize - 1) as usize;
+        let cy = y.clamp(0, self.dims.ny as isize - 1) as usize;
+        let cz = z.clamp(0, self.dims.nz as isize - 1) as usize;
+        self.at(cx, cy, cz)
+    }
+
+    /// Min/max intensity.
+    pub fn intensity_range(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo, hi)
+    }
+
+    /// Normalize intensities to [0, 1] (paper §7 uses normalized outputs).
+    pub fn normalized(&self) -> Volume {
+        let (lo, hi) = self.intensity_range();
+        let scale = if hi > lo { 1.0 / (hi - lo) } else { 0.0 };
+        let mut out = self.clone();
+        for v in &mut out.data {
+            *v = (*v - lo) * scale;
+        }
+        out
+    }
+
+    /// Mean absolute difference against another volume of identical dims.
+    pub fn mean_abs_diff(&self, other: &Volume) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        let mut acc = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            acc += (a - b).abs() as f64;
+        }
+        acc / self.data.len() as f64
+    }
+}
+
+/// A dense 3-component vector field over a voxel lattice — deformation
+/// fields T(x,y,z) (Eq. 1), stored as structure-of-arrays for vectorization.
+#[derive(Clone, Debug)]
+pub struct VectorField {
+    pub dims: Dims,
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub z: Vec<f32>,
+}
+
+impl VectorField {
+    pub fn zeros(dims: Dims) -> Self {
+        let n = dims.count();
+        VectorField { dims, x: vec![0.0; n], y: vec![0.0; n], z: vec![0.0; n] }
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize) -> [f32; 3] {
+        [self.x[i], self.y[i], self.z[i]]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, v: [f32; 3]) {
+        self.x[i] = v[0];
+        self.y[i] = v[1];
+        self.z[i] = v[2];
+    }
+
+    /// Max per-component absolute difference vs another field (accuracy
+    /// comparisons, paper §5.4).
+    pub fn max_abs_diff(&self, other: &VectorField) -> f32 {
+        assert_eq!(self.dims, other.dims);
+        let mut m = 0.0f32;
+        for i in 0..self.x.len() {
+            m = m
+                .max((self.x[i] - other.x[i]).abs())
+                .max((self.y[i] - other.y[i]).abs())
+                .max((self.z[i] - other.z[i]).abs());
+        }
+        m
+    }
+
+    /// Mean per-component absolute difference (Table 3/4's "average absolute
+    /// error").
+    pub fn mean_abs_diff(&self, other: &VectorField) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        let mut acc = 0.0f64;
+        for i in 0..self.x.len() {
+            acc += (self.x[i] - other.x[i]).abs() as f64;
+            acc += (self.y[i] - other.y[i]).abs() as f64;
+            acc += (self.z[i] - other.z[i]).abs() as f64;
+        }
+        acc / (3.0 * self.x.len() as f64)
+    }
+
+    /// Same, but against an f64-precision reference field.
+    pub fn mean_abs_diff_f64(&self, rx: &[f64], ry: &[f64], rz: &[f64]) -> f64 {
+        assert_eq!(self.x.len(), rx.len());
+        let mut acc = 0.0f64;
+        for i in 0..self.x.len() {
+            acc += (self.x[i] as f64 - rx[i]).abs();
+            acc += (self.y[i] as f64 - ry[i]).abs();
+            acc += (self.z[i] as f64 - rz[i]).abs();
+        }
+        acc / (3.0 * self.x.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idx_is_x_fastest() {
+        let d = Dims::new(4, 3, 2);
+        assert_eq!(d.idx(0, 0, 0), 0);
+        assert_eq!(d.idx(1, 0, 0), 1);
+        assert_eq!(d.idx(0, 1, 0), 4);
+        assert_eq!(d.idx(0, 0, 1), 12);
+        assert_eq!(d.count(), 24);
+    }
+
+    #[test]
+    fn from_fn_layout() {
+        let v = Volume::from_fn(Dims::new(3, 2, 2), [1.0; 3], |x, y, z| {
+            (x + 10 * y + 100 * z) as f32
+        });
+        assert_eq!(v.at(2, 1, 1), 112.0);
+        assert_eq!(v.at(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn clamped_access_replicates_border() {
+        let v = Volume::from_fn(Dims::new(2, 2, 2), [1.0; 3], |x, _, _| x as f32);
+        assert_eq!(v.at_clamped(-5, 0, 0), 0.0);
+        assert_eq!(v.at_clamped(9, 1, 1), 1.0);
+    }
+
+    #[test]
+    fn normalization_hits_unit_range() {
+        let v = Volume::from_fn(Dims::new(4, 4, 4), [1.0; 3], |x, y, z| {
+            (x + y + z) as f32 - 3.0
+        });
+        let n = v.normalized();
+        let (lo, hi) = n.intensity_range();
+        assert_eq!((lo, hi), (0.0, 1.0));
+    }
+
+    #[test]
+    fn vector_field_diffs() {
+        let d = Dims::new(2, 2, 2);
+        let mut a = VectorField::zeros(d);
+        let b = VectorField::zeros(d);
+        a.x[3] = 0.5;
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+        let expect = 0.5 / (3.0 * 8.0);
+        assert!((a.mean_abs_diff(&b) - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,113 @@
+//! Multi-resolution image pyramid (NiftyReg's `reg_createImagePyramid`
+//! analog). Each level halves every axis after a small smoothing kernel, so
+//! coarse levels drive large deformations and fine levels refine them
+//! (paper §6: NiftyReg registers over a pyramid; default 3 levels).
+
+use super::{Dims, Volume};
+
+/// Separable 1-2-1 binomial smoothing along one axis (cheap Gaussian proxy).
+fn smooth_axis(vol: &Volume, axis: usize) -> Volume {
+    let dims = vol.dims;
+    let mut out = Volume::zeros(dims, vol.spacing);
+    let step: [isize; 3] = [1, 0, 0];
+    let _ = step;
+    for z in 0..dims.nz {
+        for y in 0..dims.ny {
+            for x in 0..dims.nx {
+                let (xi, yi, zi) = (x as isize, y as isize, z as isize);
+                let (dm, dp) = match axis {
+                    0 => ((-1, 0, 0), (1, 0, 0)),
+                    1 => ((0, -1, 0), (0, 1, 0)),
+                    _ => ((0, 0, -1), (0, 0, 1)),
+                };
+                let c = vol.at(x, y, z);
+                let m = vol.at_clamped(xi + dm.0, yi + dm.1, zi + dm.2);
+                let p = vol.at_clamped(xi + dp.0, yi + dp.1, zi + dp.2);
+                out.set(x, y, z, 0.25 * m + 0.5 * c + 0.25 * p);
+            }
+        }
+    }
+    out
+}
+
+/// Smooth with the separable 1-2-1 kernel along all three axes.
+pub fn smooth(vol: &Volume) -> Volume {
+    smooth_axis(&smooth_axis(&smooth_axis(vol, 0), 1), 2)
+}
+
+/// One pyramid reduction: smooth then take every second voxel.
+pub fn downsample(vol: &Volume) -> Volume {
+    let s = smooth(vol);
+    let dims = Dims::new(
+        (vol.dims.nx + 1) / 2,
+        (vol.dims.ny + 1) / 2,
+        (vol.dims.nz + 1) / 2,
+    );
+    let spacing = [vol.spacing[0] * 2.0, vol.spacing[1] * 2.0, vol.spacing[2] * 2.0];
+    Volume::from_fn(dims, spacing, |x, y, z| s.at(2 * x, 2 * y, 2 * z))
+}
+
+/// Build an n-level pyramid, finest (original) last — index 0 is coarsest,
+/// matching the registration iteration order.
+pub fn build(vol: &Volume, levels: usize) -> Vec<Volume> {
+    assert!(levels >= 1);
+    let mut pyr = vec![vol.clone()];
+    for _ in 1..levels {
+        let next = downsample(pyr.last().unwrap());
+        // Stop early if a dimension gets degenerate.
+        if next.dims.nx < 8 || next.dims.ny < 8 || next.dims.nz < 8 {
+            break;
+        }
+        pyr.push(next);
+    }
+    pyr.reverse();
+    pyr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downsample_halves_dims_and_doubles_spacing() {
+        let v = Volume::zeros(Dims::new(16, 12, 10), [1.0, 2.0, 3.0]);
+        let d = downsample(&v);
+        assert_eq!(d.dims, Dims::new(8, 6, 5));
+        assert_eq!(d.spacing, [2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn smoothing_preserves_constant_volumes() {
+        let v = Volume::from_fn(Dims::new(6, 6, 6), [1.0; 3], |_, _, _| 3.5);
+        let s = smooth(&v);
+        for &x in &s.data {
+            assert!((x - 3.5).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn smoothing_reduces_variance_of_noise() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(3);
+        let v = Volume::from_fn(Dims::new(12, 12, 12), [1.0; 3], |_, _, _| rng.normal());
+        let s = smooth(&v);
+        let var = |vol: &Volume| {
+            let m: f32 = vol.data.iter().sum::<f32>() / vol.data.len() as f32;
+            vol.data.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / vol.data.len() as f32
+        };
+        assert!(var(&s) < 0.5 * var(&v));
+    }
+
+    #[test]
+    fn build_orders_coarse_to_fine_and_stops_at_min_size() {
+        let v = Volume::zeros(Dims::new(64, 64, 64), [1.0; 3]);
+        let pyr = build(&v, 3);
+        assert_eq!(pyr.len(), 3);
+        assert_eq!(pyr[0].dims, Dims::new(16, 16, 16));
+        assert_eq!(pyr[2].dims, Dims::new(64, 64, 64));
+        // Small volume stops early rather than degenerate.
+        let small = Volume::zeros(Dims::new(10, 10, 10), [1.0; 3]);
+        let pyr = build(&small, 4);
+        assert_eq!(pyr.len(), 1);
+    }
+}

@@ -1,0 +1,216 @@
+//! Trilinear sampling and warping of volumes.
+//!
+//! FFD registration applies the dense deformation field T(x,y,z) produced by
+//! BSI to resample the floating image into the reference frame (NiftyReg's
+//! `reg_resampleImage` analog). The deformation field here is a *displacement*
+//! field in voxel units: sample position = (x,y,z) + T(x,y,z).
+
+use super::{Dims, VectorField, Volume};
+use crate::util::threadpool::par_chunks_mut;
+
+/// Trilinear sample at a continuous voxel coordinate, border-replicated.
+#[inline]
+pub fn sample_trilinear(vol: &Volume, px: f32, py: f32, pz: f32) -> f32 {
+    let x0 = px.floor();
+    let y0 = py.floor();
+    let z0 = pz.floor();
+    let fx = px - x0;
+    let fy = py - y0;
+    let fz = pz - z0;
+    let xi = x0 as isize;
+    let yi = y0 as isize;
+    let zi = z0 as isize;
+
+    let mut c = [0.0f32; 8];
+    let mut k = 0;
+    for dz in 0..2 {
+        for dy in 0..2 {
+            for dx in 0..2 {
+                c[k] = vol.at_clamped(xi + dx, yi + dy, zi + dz);
+                k += 1;
+            }
+        }
+    }
+    let lerp = |a: f32, b: f32, t: f32| t.mul_add(b - a, a);
+    let x00 = lerp(c[0], c[1], fx);
+    let x10 = lerp(c[2], c[3], fx);
+    let x01 = lerp(c[4], c[5], fx);
+    let x11 = lerp(c[6], c[7], fx);
+    let y0v = lerp(x00, x10, fy);
+    let y1v = lerp(x01, x11, fy);
+    lerp(y0v, y1v, fz)
+}
+
+/// Interior trilinear sample: caller guarantees `0 ≤ ⌊p⌋` and `⌊p⌋+1 <
+/// dim` on every axis, so the eight corners need no clamping (the hot path
+/// of [`warp`]; see EXPERIMENTS.md §Perf).
+#[inline(always)]
+fn sample_trilinear_interior(vol: &Volume, px: f32, py: f32, pz: f32) -> f32 {
+    let x0 = px.floor();
+    let y0 = py.floor();
+    let z0 = pz.floor();
+    let fx = px - x0;
+    let fy = py - y0;
+    let fz = pz - z0;
+    let i000 = vol.dims.idx(x0 as usize, y0 as usize, z0 as usize);
+    let sy = vol.dims.nx;
+    let sz = vol.dims.nx * vol.dims.ny;
+    let d = &vol.data;
+    let lerp = |a: f32, b: f32, t: f32| t.mul_add(b - a, a);
+    let x00 = lerp(d[i000], d[i000 + 1], fx);
+    let x10 = lerp(d[i000 + sy], d[i000 + sy + 1], fx);
+    let x01 = lerp(d[i000 + sz], d[i000 + sz + 1], fx);
+    let x11 = lerp(d[i000 + sy + sz], d[i000 + sy + sz + 1], fx);
+    lerp(lerp(x00, x10, fy), lerp(x01, x11, fy), fz)
+}
+
+/// Warp `floating` by the displacement field `def` (defined on the reference
+/// lattice): out(v) = floating(v + def(v)).
+pub fn warp(floating: &Volume, def: &VectorField) -> Volume {
+    let dims = def.dims;
+    let fd = floating.dims;
+    let mut out = Volume::zeros(dims, floating.spacing);
+    let row = dims.nx;
+    // Interior guard: a sample at p is clamp-free iff 0 ≤ p and p+1 ≤ dim−1.
+    let (hx, hy, hz) = (fd.nx as f32 - 2.0, fd.ny as f32 - 2.0, fd.nz as f32 - 2.0);
+    par_chunks_mut(&mut out.data, row, |chunk_i, slice| {
+        let y = chunk_i % dims.ny;
+        let z = chunk_i / dims.ny;
+        let base = dims.idx(0, y, z);
+        for (x, o) in slice.iter_mut().enumerate() {
+            let i = base + x;
+            let px = x as f32 + def.x[i];
+            let py = y as f32 + def.y[i];
+            let pz = z as f32 + def.z[i];
+            *o = if px >= 0.0 && px <= hx && py >= 0.0 && py <= hy && pz >= 0.0 && pz <= hz
+            {
+                sample_trilinear_interior(floating, px, py, pz)
+            } else {
+                sample_trilinear(floating, px, py, pz)
+            };
+        }
+    });
+    out
+}
+
+/// Central-difference spatial gradient of a volume (per-axis), used by the
+/// FFD similarity gradient.
+pub fn gradient(vol: &Volume) -> VectorField {
+    let dims = vol.dims;
+    let mut g = VectorField::zeros(dims);
+    for z in 0..dims.nz {
+        for y in 0..dims.ny {
+            for x in 0..dims.nx {
+                let i = dims.idx(x, y, z);
+                let (xi, yi, zi) = (x as isize, y as isize, z as isize);
+                g.x[i] = 0.5 * (vol.at_clamped(xi + 1, yi, zi) - vol.at_clamped(xi - 1, yi, zi));
+                g.y[i] = 0.5 * (vol.at_clamped(xi, yi + 1, zi) - vol.at_clamped(xi, yi - 1, zi));
+                g.z[i] = 0.5 * (vol.at_clamped(xi, yi, zi + 1) - vol.at_clamped(xi, yi, zi - 1));
+            }
+        }
+    }
+    g
+}
+
+/// Resize a volume to new dims with trilinear interpolation (used by the
+/// pyramid and by affine pre-alignment).
+pub fn resize(vol: &Volume, dims: Dims) -> Volume {
+    let sx = vol.dims.nx as f32 / dims.nx as f32;
+    let sy = vol.dims.ny as f32 / dims.ny as f32;
+    let sz = vol.dims.nz as f32 / dims.nz as f32;
+    let spacing = [vol.spacing[0] * sx, vol.spacing[1] * sy, vol.spacing[2] * sz];
+    let mut out = Volume::zeros(dims, spacing);
+    let row = dims.nx;
+    par_chunks_mut(&mut out.data, row, |chunk_i, slice| {
+        let y = chunk_i % dims.ny;
+        let z = chunk_i / dims.ny;
+        for (x, o) in slice.iter_mut().enumerate() {
+            // Sample at the center-aligned source coordinate.
+            let px = (x as f32 + 0.5) * sx - 0.5;
+            let py = (y as f32 + 0.5) * sy - 0.5;
+            let pz = (z as f32 + 0.5) * sz - 0.5;
+            *o = sample_trilinear(vol, px, py, pz);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear_vol() -> Volume {
+        Volume::from_fn(Dims::new(8, 8, 8), [1.0; 3], |x, y, z| {
+            2.0 * x as f32 + 3.0 * y as f32 - z as f32 + 1.0
+        })
+    }
+
+    #[test]
+    fn trilinear_is_exact_on_linear_functions() {
+        let v = linear_vol();
+        for &(px, py, pz) in &[(1.5f32, 2.25f32, 3.75f32), (0.0, 0.0, 0.0), (6.9, 6.1, 6.5)] {
+            let got = sample_trilinear(&v, px, py, pz);
+            let want = 2.0 * px + 3.0 * py - pz + 1.0;
+            assert!((got - want).abs() < 1e-4, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn trilinear_clamps_outside() {
+        let v = linear_vol();
+        assert_eq!(sample_trilinear(&v, -10.0, 0.0, 0.0), v.at(0, 0, 0));
+        assert_eq!(sample_trilinear(&v, 20.0, 7.0, 7.0), v.at(7, 7, 7));
+    }
+
+    #[test]
+    fn zero_displacement_warp_is_identity() {
+        let v = linear_vol();
+        let def = VectorField::zeros(v.dims);
+        let w = warp(&v, &def);
+        for (a, b) in w.data.iter().zip(&v.data) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn integer_shift_warp_translates() {
+        let v = linear_vol();
+        let mut def = VectorField::zeros(v.dims);
+        for i in 0..def.x.len() {
+            def.x[i] = 1.0;
+        }
+        let w = warp(&v, &def);
+        // interior voxels: w(x,y,z) = v(x+1,y,z)
+        for z in 0..8 {
+            for y in 0..8 {
+                for x in 0..7 {
+                    assert!((w.at(x, y, z) - v.at(x + 1, y, z)).abs() < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_of_linear_volume_is_constant() {
+        let v = linear_vol();
+        let g = gradient(&v);
+        // interior points (border uses one-sided-ish clamped diff)
+        let i = v.dims.idx(4, 4, 4);
+        assert!((g.x[i] - 2.0).abs() < 1e-5);
+        assert!((g.y[i] - 3.0).abs() < 1e-5);
+        assert!((g.z[i] + 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn resize_preserves_linear_ramp_interior() {
+        let v = linear_vol();
+        let r = resize(&v, Dims::new(4, 4, 4));
+        assert_eq!(r.dims, Dims::new(4, 4, 4));
+        // Center-aligned downsample of a linear ramp stays linear: check the
+        // difference between neighbors is the doubled slope along x.
+        let d = r.at(2, 2, 2) - r.at(1, 2, 2);
+        assert!((d - 4.0).abs() < 1e-3, "d={d}");
+        // spacing doubles
+        assert!((r.spacing[0] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,86 @@
+//! Cross-method BSI integration: every implementation against the f64
+//! reference on realistic deformation grids (registration-produced and
+//! synthetic), across the paper's tile-size sweep.
+
+use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::phantom::deform::{pneumoperitoneum, PneumoParams};
+use ffdreg::phantom::{generate, PhantomSpec};
+use ffdreg::volume::Dims;
+
+/// Table 3/4's experimental setup: average absolute error vs f64 reference.
+fn error_vs_reference(m: Method, grid: &ControlGrid, vd: Dims) -> f64 {
+    let f = m.instance().interpolate(grid, vd);
+    let r = ffdreg::bspline::reference::interpolate_f64(grid, vd);
+    f.mean_abs_diff_f64(&r.x, &r.y, &r.z)
+}
+
+#[test]
+fn accuracy_ordering_matches_table3() {
+    // TTLI (FMA) ≲ half the error of the weighted-sum methods; TH orders of
+    // magnitude worse. Same workload for everyone.
+    let vd = Dims::new(40, 40, 40);
+    let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
+    grid.randomize(2024, 10.0);
+
+    let e_ttli = error_vs_reference(Method::Ttli, &grid, vd);
+    let e_tt = error_vs_reference(Method::Tt, &grid, vd);
+    let e_tv = error_vs_reference(Method::Tv, &grid, vd);
+    let e_th = error_vs_reference(Method::Texture, &grid, vd);
+
+    assert!(e_ttli < e_tt, "TTLI {e_ttli} should beat TT {e_tt}");
+    assert!((e_tt / e_tv - 1.0).abs() < 1e-6, "TT and TV share arithmetic");
+    assert!(e_th > 100.0 * e_ttli, "TH {e_th} must be far worse than TTLI {e_ttli}");
+}
+
+#[test]
+fn all_methods_agree_on_registration_like_grids() {
+    // A pneumoperitoneum grid (the registration workload) rather than white
+    // noise: smooth, anisotropic, clinically-shaped.
+    let spec = PhantomSpec { dims: Dims::new(40, 32, 36), ..Default::default() };
+    let vol = generate(&spec);
+    let (grid, _) = pneumoperitoneum(&vol, [5, 5, 5], &PneumoParams::default());
+    let vd = vol.dims;
+    let reference = Method::Reference.instance().interpolate(&grid, vd);
+    for m in Method::ALL {
+        let f = m.instance().interpolate(&grid, vd);
+        let tol = if m == Method::Texture { 0.05 } else { 5e-4 };
+        let d = f.max_abs_diff(&reference);
+        assert!(d < tol, "{m:?} deviates by {d}");
+    }
+}
+
+#[test]
+fn tile_sweep_consistency() {
+    // The Figure 5/6/7 sweep: every paper tile size, every method, odd
+    // volume dims that leave partial border tiles.
+    for &t in &[3usize, 4, 5, 6, 7] {
+        let vd = Dims::new(2 * t + 3, 3 * t + 1, t + 2);
+        let mut grid = ControlGrid::zeros(vd, [t, t, t]);
+        grid.randomize(t as u64 * 7, 4.0);
+        let reference = Method::Reference.instance().interpolate(&grid, vd);
+        for m in [Method::Tv, Method::TvTiling, Method::Tt, Method::Ttli, Method::Vt, Method::Vv]
+        {
+            let f = m.instance().interpolate(&grid, vd);
+            let d = f.max_abs_diff(&reference);
+            assert!(d < 5e-4, "{m:?} tile {t}: {d}");
+        }
+    }
+}
+
+#[test]
+fn deformation_field_drives_warp_consistently() {
+    // BSI output must compose with the warp: warping by the field recovered
+    // from the ground-truth grid reproduces the intra-op image closely.
+    use ffdreg::phantom::deform::acquire_intraop;
+    use ffdreg::volume::resample::warp;
+    let spec = PhantomSpec { dims: Dims::new(36, 30, 32), ..Default::default() };
+    let vol = generate(&spec);
+    let (grid, field_truth) = pneumoperitoneum(&vol, [5, 5, 5], &PneumoParams::default());
+    let intra = acquire_intraop(&vol, &field_truth, 5, 0.0);
+
+    let field = Method::Ttli.instance().interpolate(&grid, vol.dims);
+    let rewarp = warp(&vol, &field);
+    // No noise was added, gain/bias only => high structural similarity.
+    let s = ffdreg::metrics::ssim(&rewarp, &intra);
+    assert!(s > 0.98, "ssim {s}");
+}

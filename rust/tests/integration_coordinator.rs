@@ -1,0 +1,200 @@
+//! Coordinator integration: scheduler + server over a real TCP socket,
+//! including batching behavior, backpressure and malformed-input handling.
+
+use std::sync::Arc;
+
+use ffdreg::coordinator::server::{Client, Server};
+use ffdreg::coordinator::{InterpolationService, Scheduler, SchedulerConfig};
+use ffdreg::util::json::Json;
+
+fn start_stack(workers: usize, queue: usize, batch: usize) -> (Server, Arc<Scheduler>) {
+    let sched = Arc::new(Scheduler::start(
+        InterpolationService::new(None),
+        SchedulerConfig { workers, queue_capacity: queue, max_batch: batch },
+    ));
+    let server = Server::start("127.0.0.1:0", sched.clone()).expect("bind");
+    (server, sched)
+}
+
+fn interpolate_req(dims: [usize; 3], seed: usize, engine: &str) -> Json {
+    Json::obj(vec![
+        ("op", Json::Str("interpolate".into())),
+        ("dims", Json::arr_usize(&dims)),
+        ("tile", Json::Num(5.0)),
+        ("seed", Json::Num(seed as f64)),
+        ("engine", Json::Str(engine.into())),
+    ])
+}
+
+#[test]
+fn ping_and_stats_round_trip() {
+    let (server, _sched) = start_stack(1, 8, 2);
+    let mut c = Client::connect(&server.addr).unwrap();
+    let pong = c.call(&Json::obj(vec![("op", Json::Str("ping".into()))])).unwrap();
+    assert_eq!(pong.get("ok").as_bool(), Some(true));
+    assert_eq!(pong.get("pong").as_bool(), Some(true));
+
+    let stats = c.call(&Json::obj(vec![("op", Json::Str("stats".into()))])).unwrap();
+    assert_eq!(stats.get("ok").as_bool(), Some(true));
+    assert!(stats.get("stats").as_obj().is_some());
+    server.stop();
+}
+
+#[test]
+fn interpolate_jobs_return_deterministic_checksums() {
+    let (server, _sched) = start_stack(2, 32, 4);
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r1 = c.call(&interpolate_req([16, 16, 16], 42, "cpu:ttli")).unwrap();
+    let r2 = c.call(&interpolate_req([16, 16, 16], 42, "cpu:ttli")).unwrap();
+    assert_eq!(r1.get("ok").as_bool(), Some(true), "{r1:?}");
+    assert_eq!(
+        r1.get("checksum").as_f64(),
+        r2.get("checksum").as_f64(),
+        "same seed must give identical fields"
+    );
+    assert_eq!(r1.get("voxels").as_usize(), Some(16 * 16 * 16));
+
+    // Different engine, same math: checksum must agree closely.
+    let r3 = c.call(&interpolate_req([16, 16, 16], 42, "cpu:tv")).unwrap();
+    let a = r1.get("checksum").as_f64().unwrap();
+    let b = r3.get("checksum").as_f64().unwrap();
+    assert!((a - b).abs() < 1e-2 * a.abs().max(1.0), "{a} vs {b}");
+    server.stop();
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let (server, sched) = start_stack(2, 64, 4);
+    let addr = server.addr;
+    let handles: Vec<_> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let mut oks = 0;
+                for k in 0..5 {
+                    let r = c.call(&interpolate_req([12, 12, 12], i * 10 + k, "cpu:tt")).unwrap();
+                    if r.get("ok").as_bool() == Some(true) {
+                        oks += 1;
+                    }
+                }
+                oks
+            })
+        })
+        .collect();
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 30);
+    assert_eq!(
+        sched.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
+        30
+    );
+    server.stop();
+}
+
+#[test]
+fn malformed_requests_get_clean_errors() {
+    let (server, _sched) = start_stack(1, 8, 2);
+    let mut c = Client::connect(&server.addr).unwrap();
+    for (req, needle) in [
+        ("{not json", "bad json"),
+        (r#"{"op":"frobnicate"}"#, "unknown op"),
+        (r#"{"op":"interpolate"}"#, "dims"),
+        (r#"{"op":"interpolate","dims":[0,4,4]}"#, "range"),
+        (r#"{"op":"interpolate","dims":[8,8,8],"tile":99}"#, "tile"),
+        (r#"{"op":"interpolate","dims":[8,8,8],"engine":"gpu:magic"}"#, "engine"),
+        (r#"{"nope":1}"#, "missing op"),
+    ] {
+        let resp = c.call(&Json::Str(String::new())).err().map(|_| ());
+        let _ = resp; // client sends proper json only; use raw writes below
+        use std::io::{BufRead, BufReader, Write};
+        let mut s = std::net::TcpStream::connect(server.addr).unwrap();
+        s.write_all(req.as_bytes()).unwrap();
+        s.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(s).read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").as_bool(), Some(false), "{req}");
+        let err = j.get("error").as_str().unwrap_or("");
+        assert!(err.contains(needle), "for {req}: '{err}' lacks '{needle}'");
+    }
+    server.stop();
+}
+
+#[test]
+fn pjrt_engine_without_artifacts_reports_unavailable() {
+    let (server, _sched) = start_stack(1, 8, 2);
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r = c.call(&interpolate_req([16, 16, 16], 1, "pjrt")).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false));
+    assert!(r.get("error").as_str().unwrap_or("").contains("unavailable"));
+    server.stop();
+}
+
+#[test]
+fn register_op_runs_full_ffd_over_the_wire() {
+    use ffdreg::phantom::{generate, PhantomSpec};
+    use ffdreg::phantom::deform::{acquire_intraop, pneumoperitoneum, PneumoParams};
+    use ffdreg::volume::{io, Dims};
+
+    let dir = std::env::temp_dir().join("ffdreg-server-reg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = PhantomSpec { dims: Dims::new(32, 28, 30), ..Default::default() };
+    let pre = generate(&spec);
+    let (_, field) = pneumoperitoneum(&pre, [5, 5, 5], &PneumoParams::default());
+    let intra = acquire_intraop(&pre, &field, 3, 0.01);
+    let ref_path = dir.join("intra.vol");
+    let flo_path = dir.join("pre.vol");
+    let out_path = dir.join("warped.vol");
+    io::save(&intra, &ref_path).unwrap();
+    io::save(&pre, &flo_path).unwrap();
+
+    let (server, _sched) = start_stack(1, 8, 2);
+    let mut c = Client::connect(&server.addr).unwrap();
+    let req = Json::obj(vec![
+        ("op", Json::Str("register".into())),
+        ("reference", Json::Str(ref_path.to_str().unwrap().into())),
+        ("floating", Json::Str(flo_path.to_str().unwrap().into())),
+        ("method", Json::Str("ttli".into())),
+        ("levels", Json::Num(1.0)),
+        ("iters", Json::Num(8.0)),
+        ("out", Json::Str(out_path.to_str().unwrap().into())),
+    ]);
+    let r = c.call(&req).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{r:?}");
+    assert!(r.get("ssim").as_f64().unwrap() > 0.8);
+    assert!(r.get("total_s").as_f64().unwrap() > 0.0);
+    // Warped output landed on disk and is loadable.
+    let warped = io::load(&out_path).unwrap();
+    assert_eq!(warped.dims, intra.dims);
+    // Registration improved over the un-registered pair.
+    let before = ffdreg::metrics::mae_normalized(&intra, &pre);
+    assert!(r.get("mae").as_f64().unwrap() < before);
+    server.stop();
+}
+
+#[test]
+fn register_op_rejects_bad_inputs() {
+    let (server, _sched) = start_stack(1, 8, 2);
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r = c
+        .call(&Json::obj(vec![
+            ("op", Json::Str("register".into())),
+            ("reference", Json::Str("/nonexistent.vol".into())),
+            ("floating", Json::Str("/nonexistent.vol".into())),
+        ]))
+        .unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(false));
+    server.stop();
+}
+
+#[test]
+fn shutdown_op_stops_the_listener() {
+    let (server, _sched) = start_stack(1, 8, 2);
+    let addr = server.addr;
+    let mut c = Client::connect(&addr).unwrap();
+    let bye = c.call(&Json::obj(vec![("op", Json::Str("shutdown".into()))])).unwrap();
+    assert_eq!(bye.get("bye").as_bool(), Some(true));
+    server.stop();
+    // Listener gone: new connections must fail (give the OS a moment).
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    assert!(std::net::TcpStream::connect(addr).is_err());
+}

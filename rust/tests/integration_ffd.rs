@@ -1,0 +1,137 @@
+//! Full-pipeline FFD integration: affine → FFD on a phantom pair, the
+//! Table 5 ordering (affine ≪ non-rigid; TTLI ≈ TV quality), and timing
+//! bookkeeping consistency.
+
+use ffdreg::bspline::Method;
+use ffdreg::ffd::{register, FfdConfig};
+use ffdreg::metrics::{mae_normalized, ssim};
+use ffdreg::phantom::dataset::generate_dataset;
+
+fn small_pair() -> (ffdreg::volume::Volume, ffdreg::volume::Volume) {
+    // One scaled-down dataset pair (deterministic).
+    let ds = generate_dataset(0.12, 7);
+    let p = ds.into_iter().next().unwrap();
+    (p.intra, p.pre)
+}
+
+#[test]
+fn nonrigid_beats_affine_beats_identity() {
+    let (reference, floating) = small_pair();
+
+    // Identity baseline.
+    let mae_id = mae_normalized(&reference, &floating);
+
+    // Affine.
+    let aff = ffdreg::affine::register(&reference, &floating, &Default::default());
+    let mae_aff = mae_normalized(&reference, &aff.warped);
+    let ssim_aff = ssim(&reference, &aff.warped);
+
+    // Non-rigid on top of affine (the paper's pipeline).
+    let cfg = FfdConfig { levels: 2, max_iter: 20, ..Default::default() };
+    let ffd = register(&reference, &aff.warped, &cfg);
+    let mae_ffd = mae_normalized(&reference, &ffd.warped);
+    let ssim_ffd = ssim(&reference, &ffd.warped);
+
+    // Table 5 ordering.
+    assert!(mae_ffd < mae_aff, "FFD MAE {mae_ffd} must beat affine {mae_aff}");
+    assert!(ssim_ffd > ssim_aff, "FFD SSIM {ssim_ffd} must beat affine {ssim_aff}");
+    assert!(mae_aff <= mae_id * 1.05, "affine should not hurt: {mae_aff} vs {mae_id}");
+}
+
+#[test]
+fn ttli_and_tv_registrations_reach_equal_quality() {
+    // §7: "The two non-rigid registration approaches perform almost
+    // equally" — same optimizer, different BSI arithmetic.
+    let (reference, floating) = small_pair();
+    let cfg = FfdConfig { levels: 2, max_iter: 15, ..Default::default() };
+    let a = ffdreg::ffd::multilevel::register_with_method(
+        &reference, &floating, Method::Ttli, &cfg,
+    );
+    let b = ffdreg::ffd::multilevel::register_with_method(&reference, &floating, Method::Tv, &cfg);
+    let ssim_a = ssim(&reference, &a.warped);
+    let ssim_b = ssim(&reference, &b.warped);
+    assert!(
+        (ssim_a - ssim_b).abs() < 0.02,
+        "quality must match: TTLI {ssim_a} vs TV {ssim_b}"
+    );
+}
+
+#[test]
+fn timing_breakdown_adds_up_and_bsi_fraction_sane() {
+    let (reference, floating) = small_pair();
+    let cfg = FfdConfig { levels: 2, max_iter: 10, ..Default::default() };
+    let res = register(&reference, &floating, &cfg);
+    let t = &res.timing;
+    assert!(t.total_s > 0.0);
+    assert!(t.bsi_s > 0.0 && t.warp_s > 0.0 && t.gradient_s > 0.0);
+    // Components must not exceed the total.
+    assert!(t.bsi_s + t.warp_s + t.gradient_s <= t.total_s * 1.01);
+    // The paper reports BSI at 15–27% of registration; our port stays in a
+    // plausible band (BSI is one of several equal-order stages).
+    let frac = t.bsi_fraction();
+    assert!(frac > 0.01 && frac < 0.9, "bsi fraction {frac}");
+}
+
+#[test]
+fn registration_reduces_landmark_tre() {
+    // Clinical accuracy view (IGS motivation): tumor-center landmarks
+    // mapped through the ground-truth deformation vs the recovered one.
+    use ffdreg::metrics::landmarks::{transform_landmark, tre};
+    use ffdreg::phantom::deform::{acquire_intraop, pneumoperitoneum, PneumoParams};
+    use ffdreg::phantom::{generate, landmarks, PhantomSpec};
+    use ffdreg::volume::Dims;
+
+    let spec = PhantomSpec { dims: Dims::new(40, 32, 36), ..Default::default() };
+    let pre = generate(&spec);
+    let lms = landmarks(&spec);
+    assert_eq!(lms.len(), 5);
+    let (_, truth_field) = pneumoperitoneum(&pre, [5, 5, 5], &PneumoParams::default());
+    let intra = acquire_intraop(&pre, &truth_field, 3, 0.005);
+
+    // True intra-op landmark positions: p + T_truth(p)... the intra image
+    // is pre warped by pulling (out(v) = pre(v + T(v))), so a structure at
+    // p in pre appears at q where q + T(q) = p. For small smooth fields,
+    // q ≈ p − T(p) (first-order inverse).
+    let truth_pos: Vec<[f32; 3]> = lms
+        .iter()
+        .map(|&p| {
+            let t = transform_landmark(&truth_field, p);
+            [2.0 * p[0] - t[0], 2.0 * p[1] - t[1], 2.0 * p[2] - t[2]]
+        })
+        .collect();
+
+    // TRE before registration: pre-op landmarks vs their intra-op truth.
+    let tre_before = tre(&lms, &truth_pos, spec.spacing);
+
+    // Register pre -> intra; the recovered field maps intra coords to pre,
+    // so recovered landmark q satisfies q + T_rec(q) ≈ p. Evaluate at the
+    // truth positions and compare round-trip against the pre-op landmark.
+    let cfg = FfdConfig { levels: 2, max_iter: 25, ..Default::default() };
+    let res = register(&intra, &pre, &cfg);
+    let mapped: Vec<[f32; 3]> = truth_pos
+        .iter()
+        .map(|&q| transform_landmark(&res.field, q))
+        .collect();
+    let tre_after = tre(&mapped, &lms, spec.spacing);
+
+    assert!(
+        tre_after < 0.7 * tre_before,
+        "registration must reduce TRE: {tre_before:.3} -> {tre_after:.3} (voxel units)"
+    );
+}
+
+#[test]
+fn registration_improves_monotonically_with_iterations() {
+    let (reference, floating) = small_pair();
+    let mut prev_cost = f64::INFINITY;
+    for iters in [2usize, 8, 24] {
+        let cfg = FfdConfig { levels: 1, max_iter: iters, ..Default::default() };
+        let res = register(&reference, &floating, &cfg);
+        assert!(
+            res.cost <= prev_cost * 1.001,
+            "more iterations should not worsen cost: {prev_cost} -> {}",
+            res.cost
+        );
+        prev_cost = res.cost;
+    }
+}

@@ -1,0 +1,110 @@
+//! End-to-end runtime integration: load the AOT artifacts through PJRT and
+//! validate their numerics against the in-process rust kernels. Skips (with
+//! a message) when `make artifacts` has not been run.
+
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
+use ffdreg::runtime::{default_artifact_dir, Runtime};
+use ffdreg::volume::{resample, Dims, Volume};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::open(&dir).expect("artifacts present but runtime failed to open"))
+}
+
+#[test]
+fn pjrt_bsi_ttli_matches_rust_ttli() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let vd = Dims::new(20, 20, 20);
+    let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
+    grid.randomize(42, 5.0);
+
+    let pjrt = rt.bsi_field(&grid, vd).expect("pjrt bsi execution");
+    let rust = Method::Ttli.instance().interpolate(&grid, vd);
+
+    let err = pjrt.max_abs_diff(&rust);
+    assert!(err < 1e-4, "pjrt vs rust TTLI deviates by {err}");
+}
+
+#[test]
+fn pjrt_bsi_matches_f64_reference_accuracy_band() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let vd = Dims::new(20, 20, 20);
+    let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
+    grid.randomize(7, 10.0);
+    let pjrt = rt.bsi_field(&grid, vd).expect("pjrt bsi execution");
+    let r = ffdreg::bspline::reference::interpolate_f64(&grid, vd);
+    let err = pjrt.mean_abs_diff_f64(&r.x, &r.y, &r.z);
+    assert!(err < 1e-5, "pjrt TTLI error vs f64 reference: {err}");
+}
+
+#[test]
+fn pjrt_warp_matches_rust_warp() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let vd = Dims::new(20, 20, 20);
+    let vol = Volume::from_fn(vd, [1.0; 3], |x, y, z| {
+        ((x as f32) * 0.3).sin() + (y as f32) * 0.1 - ((z as f32) * 0.2).cos()
+    });
+    let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
+    grid.randomize(3, 2.0);
+    let field = Method::Ttli.instance().interpolate(&grid, vd);
+
+    let pjrt = rt.warp(&vol, &field, 5).expect("pjrt warp");
+    let rust = resample::warp(&vol, &field);
+
+    let mut max = 0.0f32;
+    for (a, b) in pjrt.data.iter().zip(&rust.data) {
+        max = max.max((a - b).abs());
+    }
+    assert!(max < 1e-4, "pjrt vs rust warp deviates by {max}");
+}
+
+#[test]
+fn pjrt_ffd_step_reduces_loss() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let vd = Dims::new(20, 20, 20);
+    let blob = |cx: f32| {
+        Volume::from_fn(vd, [1.0; 3], move |x, y, z| {
+            let d2 = (x as f32 - cx).powi(2)
+                + (y as f32 - 10.0).powi(2)
+                + (z as f32 - 10.0).powi(2);
+            (-d2 / 30.0).exp()
+        })
+    };
+    let reference = blob(10.0);
+    let floating = blob(12.0);
+    let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let (g, loss) = rt
+            .ffd_step(&reference, &floating, &grid, 0.5)
+            .expect("pjrt ffd_step");
+        grid = g;
+        losses.push(loss);
+    }
+    assert!(
+        losses.last().unwrap() < &(0.7 * losses[0]),
+        "AOT gradient steps should descend: {losses:?}"
+    );
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let a = rt.executable("bsi_ttli_20x20x20_t5").expect("compile");
+    let b = rt.executable("bsi_ttli_20x20x20_t5").expect("cached");
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "second lookup must hit the cache");
+}
+
+#[test]
+fn unknown_artifact_is_a_clean_error() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let err = match rt.executable("nope_999") {
+        Ok(_) => panic!("lookup of unknown artifact must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("unknown artifact"), "{err}");
+}

@@ -1,0 +1,176 @@
+//! Property-based tests over the BSI implementations and coordinator
+//! invariants, using the in-repo quickcheck harness (proptest substitute —
+//! DESIGN.md §1).
+
+use std::sync::Arc;
+
+use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::util::quickcheck::{assert_close, check, Gen};
+use ffdreg::volume::Dims;
+
+/// Random grid + dims drawn from a Gen.
+fn arbitrary_case(g: &mut Gen) -> (ControlGrid, Dims) {
+    let t = [g.usize_in(2, 7), g.usize_in(2, 7), g.usize_in(2, 7)];
+    let vd = Dims::new(
+        g.usize_in(1, 3) * t[0] + g.usize_in(0, t[0] - 1),
+        g.usize_in(1, 3) * t[1] + g.usize_in(0, t[1] - 1),
+        g.usize_in(1, 3) * t[2] + g.usize_in(0, t[2] - 1),
+    );
+    let mut grid = ControlGrid::zeros(vd, t);
+    let amp = g.f32_in(0.1, 20.0);
+    grid.randomize(g.rng.next_u64(), amp);
+    (grid, vd)
+}
+
+#[test]
+fn prop_partition_of_unity_every_method() {
+    // Constant grids interpolate to the constant, any tile, any dims.
+    check("partition-of-unity", 0xA11CE, 40, |g| {
+        let (mut grid, vd) = arbitrary_case(g);
+        let c = g.f32_in(-50.0, 50.0);
+        for i in 0..grid.len() {
+            grid.x[i] = c;
+            grid.y[i] = -c;
+            grid.z[i] = 0.5 * c;
+        }
+        for m in [Method::Tv, Method::Tt, Method::Ttli, Method::Vt, Method::Vv] {
+            let f = m.instance().interpolate(&grid, vd);
+            let tol = 1e-4 * c.abs().max(1.0);
+            for (i, &v) in f.x.iter().enumerate() {
+                if (v - c).abs() > tol {
+                    return Err(format!("{m:?} x[{i}]={v} expected {c}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_methods_agree_with_reference() {
+    check("methods-vs-reference", 0xBEEF, 30, |g| {
+        let (grid, vd) = arbitrary_case(g);
+        let r = Method::Reference.instance().interpolate(&grid, vd);
+        for m in [Method::Tv, Method::TvTiling, Method::Tt, Method::Ttli, Method::Vt, Method::Vv]
+        {
+            let f = m.instance().interpolate(&grid, vd);
+            assert_close(&f.x, &r.x, 1e-3, 1e-4).map_err(|e| format!("{m:?} x: {e}"))?;
+            assert_close(&f.y, &r.y, 1e-3, 1e-4).map_err(|e| format!("{m:?} y: {e}"))?;
+            assert_close(&f.z, &r.z, 1e-3, 1e-4).map_err(|e| format!("{m:?} z: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_linearity_of_interpolation() {
+    // BSI is linear in the control points: interp(a·φ1 + b·φ2) =
+    // a·interp(φ1) + b·interp(φ2).
+    check("linearity", 0x11EAF, 25, |g| {
+        let (g1, vd) = arbitrary_case(g);
+        let mut g2 = g1.clone();
+        g2.randomize(g.rng.next_u64(), 5.0);
+        let (a, b) = (g.f32_in(-2.0, 2.0), g.f32_in(-2.0, 2.0));
+        let mut combo = g1.clone();
+        for i in 0..combo.len() {
+            combo.x[i] = a * g1.x[i] + b * g2.x[i];
+            combo.y[i] = a * g1.y[i] + b * g2.y[i];
+            combo.z[i] = a * g1.z[i] + b * g2.z[i];
+        }
+        let m = Method::Ttli.instance();
+        let f1 = m.interpolate(&g1, vd);
+        let f2 = m.interpolate(&g2, vd);
+        let fc = m.interpolate(&combo, vd);
+        for i in 0..fc.x.len() {
+            let want = a * f1.x[i] + b * f2.x[i];
+            if (fc.x[i] - want).abs() > 1e-3 {
+                return Err(format!("x[{i}]: {} vs {want}", fc.x[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_translation_equivariance_along_tiles() {
+    // Shifting the control lattice by one tile shifts the field by δ:
+    // field(x+δ) computed from grid == field(x) from grid shifted by one CP.
+    check("tile-translation", 0x517AF7, 20, |g| {
+        let t = g.usize_in(2, 6);
+        let tiles = g.usize_in(3, 4);
+        let vd = Dims::new(t * tiles, t * 2, t * 2);
+        let mut grid = ControlGrid::zeros(vd, [t, t, t]);
+        grid.randomize(g.rng.next_u64(), 3.0);
+        let f = Method::Ttli.instance().interpolate(&grid, vd);
+
+        // Build the shifted grid: storage x-index s' = s+1 (drop last col).
+        let mut shifted = grid.clone();
+        for ck in 0..grid.dims.nz {
+            for cj in 0..grid.dims.ny {
+                for ci in 0..grid.dims.nx - 1 {
+                    let dst = shifted.idx(ci, cj, ck);
+                    let src = grid.idx(ci + 1, cj, ck);
+                    shifted.x[dst] = grid.x[src];
+                    shifted.y[dst] = grid.y[src];
+                    shifted.z[dst] = grid.z[src];
+                }
+            }
+        }
+        let fs = Method::Ttli.instance().interpolate(&shifted, vd);
+        // Compare voxel (x, y, z) of shifted vs (x+δ, y, z) of original,
+        // away from the far-x border (where the shifted grid lost a column).
+        for z in 0..vd.nz {
+            for y in 0..vd.ny {
+                for x in 0..vd.nx - 2 * t {
+                    let a = fs.x[vd.idx(x, y, z)];
+                    let b = f.x[vd.idx(x + t, y, z)];
+                    if (a - b).abs() > 1e-4 {
+                        return Err(format!("({x},{y},{z}): {a} vs {b}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_serves_arbitrary_job_mixes() {
+    use ffdreg::coordinator::{
+        Engine, InterpolateJob, InterpolationService, Scheduler, SchedulerConfig,
+    };
+    check("scheduler-mixed-jobs", 0x5C4ED, 10, |g| {
+        let sched = Scheduler::start(
+            InterpolationService::new(None),
+            SchedulerConfig {
+                workers: g.usize_in(1, 3),
+                queue_capacity: 64,
+                max_batch: g.usize_in(1, 8),
+            },
+        );
+        let n = g.usize_in(1, 12);
+        let mut receivers = Vec::new();
+        for i in 0..n {
+            let t = g.usize_in(2, 6);
+            let vd = Dims::new(t * g.usize_in(1, 2), t, t);
+            let mut grid = ControlGrid::zeros(vd, [t, t, t]);
+            grid.randomize(i as u64, 2.0);
+            let method = [Method::Tv, Method::Tt, Method::Ttli, Method::Vv][g.usize_in(0, 3)];
+            let job = InterpolateJob {
+                id: i as u64,
+                grid: Arc::new(grid),
+                vol_dims: vd,
+                engine: Engine::Cpu(method),
+            };
+            receivers.push(sched.submit(job).map_err(|e| format!("{e:?}"))?);
+        }
+        for rx in receivers {
+            let out = rx.recv().map_err(|e| e.to_string())?;
+            let f = out.result.map_err(|e| e)?;
+            if !f.x.iter().all(|v| v.is_finite()) {
+                return Err("non-finite field".into());
+            }
+        }
+        Ok(())
+    });
+}
