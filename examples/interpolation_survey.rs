@@ -5,7 +5,7 @@
 //!
 //!     cargo run --release --example interpolation_survey -- [--dims X,Y,Z] [--tile N]
 
-use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::cli::Args;
 use ffdreg::util::timer;
 use ffdreg::volume::Dims;

@@ -24,7 +24,7 @@ fn main() {
     );
     let sched = Arc::new(Scheduler::start(
         service,
-        SchedulerConfig { workers: 2, queue_capacity: 128, max_batch: 8 },
+        SchedulerConfig { workers: 2, queue_capacity: 128, max_batch: 8, intra_threads: 0 },
     ));
     let server = Server::start("127.0.0.1:0", sched.clone()).expect("bind");
     println!("listening on {}", server.addr);

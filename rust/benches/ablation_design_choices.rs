@@ -11,7 +11,7 @@
 //!
 //! Run: cargo bench --bench ablation_design_choices
 
-use ffdreg::bspline::{scattered, ControlGrid, Method};
+use ffdreg::bspline::{scattered, ControlGrid, Interpolator, Method};
 use ffdreg::memmodel::transfers_blocks_of_tiles;
 use ffdreg::util::bench::Report;
 use ffdreg::util::timer;

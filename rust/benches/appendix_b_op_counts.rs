@@ -6,7 +6,7 @@
 //!
 //! Run: cargo bench --bench appendix_b_op_counts
 
-use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::memmodel::{OPS_ONE_WEIGHT, OPS_TT, OPS_TTLI};
 use ffdreg::util::bench::Report;
 use ffdreg::util::timer;

@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::coordinator::{
     Engine, InterpolateJob, InterpolationService, Scheduler, SchedulerConfig,
 };
@@ -42,7 +42,7 @@ fn main() {
     for (workers, max_batch) in [(1usize, 1usize), (1, 8), (2, 1), (2, 8)] {
         let sched = Scheduler::start(
             InterpolationService::new(None),
-            SchedulerConfig { workers, queue_capacity: 256, max_batch },
+            SchedulerConfig { workers, queue_capacity: 256, max_batch, intra_threads: 0 },
         );
         let grids: Vec<Arc<ControlGrid>> = (0..jobs)
             .map(|i| {

@@ -10,51 +10,64 @@
 //!
 //! Run: cargo bench --bench fig5_gpu_time_per_voxel
 //! (FFDREG_BENCH_FULL=1 for paper-scale volumes)
+//!
+//! Thread scaling: pass `-- --threads 1,2,4` (comma list) to sweep the
+//! chunked execution engine's per-instance worker count; `0` means the
+//! process-default pool. One measured row is emitted per (method, threads).
 
-use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
+use ffdreg::cli::Args;
 use ffdreg::memmodel::gpumodel::{time_per_voxel, GTX1050, RTX2070};
 use ffdreg::phantom::dataset::{scaled_dims, TABLE2};
-use ffdreg::util::bench::{full_scale, Report};
+use ffdreg::util::bench::{full_scale, parse_thread_axis, Report};
 use ffdreg::util::stats::Summary;
 use ffdreg::util::timer;
 
 fn main() {
+    let args = Args::from_env();
     let tiles = [3usize, 4, 5, 6, 7];
     let scale = if full_scale() { 0.5 } else { 0.12 };
+    let threads_axis = parse_thread_axis(args.get("threads"));
 
     let mut rep = Report::new(
         "fig5_time_per_voxel",
         "GPU-set time per voxel vs tile size (measured CPU ports + modeled GPUs)",
     );
 
-    for m in Method::GPU_SET {
-        let imp = m.instance();
-        let row_label = format!("measured {}", imp.name());
-        let mut cells = Vec::new();
-        for &t in &tiles {
-            // Mean over the 5 dataset workload shapes (paper: 5 pairs).
-            let mut per_pair = Summary::new();
-            for (pi, &(_, res, _)) in TABLE2.iter().enumerate() {
-                let vd = scaled_dims(res, scale);
-                let mut grid = ControlGrid::zeros(vd, [t, t, t]);
-                grid.randomize(pi as u64 + 1, 5.0);
-                let stats = timer::time_adaptive(1, 5, 0.1, || {
-                    std::hint::black_box(imp.interpolate(&grid, vd));
-                });
-                per_pair.push(stats.min() * 1e9 / vd.count() as f64);
+    for &threads in &threads_axis {
+        for m in Method::GPU_SET {
+            let imp = if threads > 0 { m.par_instance(threads) } else { m.instance() };
+            let row_label = if threads > 0 {
+                format!("measured {} t{threads}", imp.name())
+            } else {
+                format!("measured {}", imp.name())
+            };
+            let mut cells = Vec::new();
+            for &t in &tiles {
+                // Mean over the 5 dataset workload shapes (paper: 5 pairs).
+                let mut per_pair = Summary::new();
+                for (pi, &(_, res, _)) in TABLE2.iter().enumerate() {
+                    let vd = scaled_dims(res, scale);
+                    let mut grid = ControlGrid::zeros(vd, [t, t, t]);
+                    grid.randomize(pi as u64 + 1, 5.0);
+                    let stats = timer::time_adaptive(1, 5, 0.1, || {
+                        std::hint::black_box(imp.interpolate(&grid, vd));
+                    });
+                    per_pair.push(stats.min() * 1e9 / vd.count() as f64);
+                }
+                cells.push((format!("{t}³ ns/vox"), per_pair.mean()));
+                if t == 5 && per_pair.cv() > 0.25 {
+                    eprintln!(
+                        "note: {} CV across pairs = {:.1}% (paper reports <3% on GPU)",
+                        imp.name(),
+                        per_pair.cv() * 100.0
+                    );
+                }
             }
-            cells.push((format!("{t}³ ns/vox"), per_pair.mean()));
-            if t == 5 && per_pair.cv() > 0.25 {
-                eprintln!(
-                    "note: {} CV across pairs = {:.1}% (paper reports <3% on GPU)",
-                    imp.name(),
-                    per_pair.cv() * 100.0
-                );
+            let r = rep.row(&row_label);
+            for (c, v) in cells {
+                r.cell(&c, v);
             }
-        }
-        let r = rep.row(&row_label);
-        for (c, v) in cells {
-            r.cell(&c, v);
         }
     }
 
@@ -71,5 +84,10 @@ fn main() {
     }
 
     rep.note("paper Fig 5: TTLI fastest at every tile size; time/voxel ~flat vs tile size except TV-tiling");
+    if threads_axis != [0] {
+        rep.note(format!(
+            "thread axis {threads_axis:?}: chunked z-slab engine, bit-identical across counts"
+        ));
+    }
     rep.finish();
 }

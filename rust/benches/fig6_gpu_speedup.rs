@@ -5,7 +5,7 @@
 //!
 //! Run: cargo bench --bench fig6_gpu_speedup
 
-use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::memmodel::gpumodel::{speedup_over_tv, GTX1050, RTX2070};
 use ffdreg::util::bench::{full_scale, Report};
 use ffdreg::util::timer;

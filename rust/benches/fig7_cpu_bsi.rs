@@ -4,52 +4,92 @@
 //! as SIMD slots fill); VV 3.30× avg, the best choice only at 3³.
 //!
 //! Run: cargo bench --bench fig7_cpu_bsi
+//!
+//! Thread scaling: pass `-- --threads 1,2,4` to sweep the chunked execution
+//! engine's per-instance worker count (`0` = process-default pool). Each
+//! speedup row compares against the TV baseline *at the same thread count*,
+//! so the figure isolates SIMD gains from multi-core gains; the extra
+//! `TV tN vs t1` rows expose the multi-core scaling curve itself.
 
-use ffdreg::bspline::{ControlGrid, Method};
-use ffdreg::util::bench::{full_scale, Report};
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
+use ffdreg::cli::Args;
+use ffdreg::util::bench::{full_scale, parse_thread_axis, Report};
 use ffdreg::util::timer;
 use ffdreg::volume::Dims;
 
 fn main() {
+    let args = Args::from_env();
     let tiles = [3usize, 4, 5, 6, 7];
     let edge = if full_scale() { 160 } else { 96 };
     let vd = Dims::new(edge, edge, edge);
+    let threads_axis = parse_thread_axis(args.get("threads"));
 
     let mut time_rep = Report::new("fig7a_cpu_time_per_voxel", "CPU time per voxel vs tile size");
     let mut speed_rep = Report::new("fig7b_cpu_speedup", "CPU speedup over NiftyReg (TV) baseline");
 
-    let mut ns_table: Vec<Vec<f64>> = Vec::new();
     let methods = [Method::Tv, Method::Vt, Method::Vv];
-    for &m in &methods {
-        let imp = m.instance();
-        let mut per_tile = Vec::new();
-        for &t in &tiles {
-            let mut grid = ControlGrid::zeros(vd, [t, t, t]);
-            grid.randomize(3, 5.0);
-            let s = timer::time_adaptive(1, 5, 0.2, || {
-                std::hint::black_box(imp.interpolate(&grid, vd));
-            });
-            per_tile.push(s.min() * 1e9 / vd.count() as f64);
+    // ns_table[threads index][method index][tile index]
+    let mut ns_table: Vec<Vec<Vec<f64>>> = Vec::new();
+    for &threads in &threads_axis {
+        let mut per_method = Vec::new();
+        for &m in &methods {
+            let imp = if threads > 0 { m.par_instance(threads) } else { m.instance() };
+            let mut per_tile = Vec::new();
+            for &t in &tiles {
+                let mut grid = ControlGrid::zeros(vd, [t, t, t]);
+                grid.randomize(3, 5.0);
+                let s = timer::time_adaptive(1, 5, 0.2, || {
+                    std::hint::black_box(imp.interpolate(&grid, vd));
+                });
+                per_tile.push(s.min() * 1e9 / vd.count() as f64);
+            }
+            per_method.push(per_tile);
         }
-        ns_table.push(per_tile);
+        ns_table.push(per_method);
     }
 
-    for (mi, &m) in methods.iter().enumerate() {
-        let name = if m == Method::Tv { "NiftyReg (TV) CPU".to_string() } else { m.paper_name().to_string() };
-        let r = time_rep.row(&name);
-        for (ti, &t) in tiles.iter().enumerate() {
-            r.cell(&format!("{t}³ ns/vox"), ns_table[mi][ti]);
+    let suffix = |threads: usize| if threads > 0 { format!(" t{threads}") } else { String::new() };
+
+    for (thi, &threads) in threads_axis.iter().enumerate() {
+        for (mi, &m) in methods.iter().enumerate() {
+            let base = if m == Method::Tv {
+                "NiftyReg (TV) CPU".to_string()
+            } else {
+                m.paper_name().to_string()
+            };
+            let r = time_rep.row(&format!("{base}{}", suffix(threads)));
+            for (ti, &t) in tiles.iter().enumerate() {
+                r.cell(&format!("{t}³ ns/vox"), ns_table[thi][mi][ti]);
+            }
+        }
+        for (mi, &m) in methods.iter().enumerate().skip(1) {
+            let r = speed_rep.row(&format!("{}{}", m.paper_name(), suffix(threads)));
+            for (ti, &t) in tiles.iter().enumerate() {
+                r.cell(&format!("{t}³"), ns_table[thi][0][ti] / ns_table[thi][mi][ti]);
+            }
         }
     }
-    for (mi, &m) in methods.iter().enumerate().skip(1) {
-        let r = speed_rep.row(m.paper_name());
-        for (ti, &t) in tiles.iter().enumerate() {
-            r.cell(&format!("{t}³"), ns_table[0][ti] / ns_table[mi][ti]);
+    // Multi-core scaling rows: TV at each thread count vs the axis' first
+    // entry (the speedup curve the chunked engine adds).
+    if threads_axis.len() > 1 {
+        for thi in 1..threads_axis.len() {
+            let r = speed_rep.row(&format!(
+                "TV t{} vs t{}",
+                threads_axis[thi], threads_axis[0]
+            ));
+            for (ti, &t) in tiles.iter().enumerate() {
+                r.cell(&format!("{t}³"), ns_table[0][0][ti] / ns_table[thi][0][ti]);
+            }
         }
     }
 
     time_rep.note("paper Fig 7a: time/voxel falls with tile size for every CPU method");
     time_rep.finish();
     speed_rep.note("paper Fig 7b: VT 4.12x avg (≈5x at 7³, rising with tile size); VV 3.30x avg, best only at 3³");
+    if threads_axis.len() > 1 {
+        speed_rep.note(format!(
+            "thread axis {threads_axis:?}: per-count baselines isolate SIMD vs multi-core gains"
+        ));
+    }
     speed_rep.finish();
 }

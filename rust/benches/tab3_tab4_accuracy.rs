@@ -9,7 +9,7 @@
 //!
 //! Run: cargo bench --bench tab3_tab4_accuracy
 
-use ffdreg::bspline::{reference::interpolate_f64, ControlGrid, Method};
+use ffdreg::bspline::{reference::interpolate_f64, ControlGrid, Interpolator, Method};
 use ffdreg::util::bench::Report;
 use ffdreg::volume::Dims;
 

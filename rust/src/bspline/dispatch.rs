@@ -2,7 +2,7 @@
 //! used by the CLI (`--method`), the coordinator's engine routing and the
 //! bench harnesses.
 
-use super::{reference, texture, tt, ttli, tv, tv_tiling, vt, vv, Interpolator};
+use super::{exec, reference, texture, tt, ttli, tv, tv_tiling, vt, vv, Interpolator};
 
 /// All BSI schemes, in the order the paper's figures present them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -87,6 +87,14 @@ impl Method {
             Method::Vv => Box::new(vv::Vv),
             Method::Reference => Box::new(reference::Reference),
         }
+    }
+
+    /// Instantiate the implementation bound to its own worker pool of
+    /// `threads` workers: `interpolate` fans z-slab chunks across that pool
+    /// (`threads == 1` gives a strictly serial instance). The chunked
+    /// output is bit-identical to the default instance's.
+    pub fn par_instance(&self, threads: usize) -> Box<dyn Interpolator + Send + Sync> {
+        Box::new(exec::Pooled::new(self.instance(), threads))
     }
 
     /// The paper's display name.

@@ -1,0 +1,636 @@
+//! Parallel chunked execution engine for the BSI layer.
+//!
+//! The paper's GPU schemes are embarrassingly parallel over output voxels;
+//! this module is the CPU-side analog of the grid launch: the output volume
+//! is partitioned into contiguous **z-slabs** ([`ZChunk`]) that are fanned
+//! across a reusable [`WorkerPool`] of `std::thread` workers. Every scheme
+//! exposes a *serial* slab kernel ([`super::Interpolator::interpolate_into`]);
+//! the engine owns all threading policy, so:
+//!
+//! * chunked output is **bit-identical** to the whole-volume output — the
+//!   per-voxel arithmetic never depends on the partition;
+//! * one pool instance can be shared by many concurrent jobs (the
+//!   coordinator's intra-job parallelism rides alongside its inter-job
+//!   worker pool);
+//! * thread count is a per-call/per-instance knob (`--threads`) instead of
+//!   a process-global only.
+//!
+//! The pool accepts borrowed (non-`'static`) tasks through the classic
+//! scoped-pool latch pattern: [`WorkerPool::run`] enqueues the wave, helps
+//! drain the queue, and blocks on a completion latch before returning, so
+//! every borrow outlives every task. Nested `run` calls cannot deadlock —
+//! the submitting thread always helps execute queued tasks.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use super::{ControlGrid, Interpolator};
+use crate::volume::{Dims, VectorField};
+
+/// Oversubscription factor: more chunks than workers so a slow slab (e.g.
+/// one with expensive border tiles) does not straggle the whole launch.
+const CHUNKS_PER_THREAD: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Chunk geometry
+
+/// A half-open z-slab `[z0, z1)` of the output volume — the engine's unit
+/// of work (the paper's "blocks of tiles" along the slowest axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ZChunk {
+    pub z0: usize,
+    pub z1: usize,
+}
+
+impl ZChunk {
+    /// The whole volume as one chunk.
+    pub fn full(vol_dims: Dims) -> ZChunk {
+        ZChunk { z0: 0, z1: vol_dims.nz }
+    }
+
+    /// Number of z-slices covered.
+    pub fn len(&self) -> usize {
+        self.z1 - self.z0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.z1 <= self.z0
+    }
+
+    /// Number of voxels covered for a volume of `vol_dims`.
+    pub fn voxels(&self, vol_dims: Dims) -> usize {
+        self.len() * vol_dims.nx * vol_dims.ny
+    }
+}
+
+/// Mutable structure-of-arrays view of the output rows covered by one
+/// chunk. Index 0 is voxel `(0, 0, chunk.z0)`; the slices are exactly
+/// `chunk.voxels(vol_dims)` long.
+pub struct FieldSlabMut<'a> {
+    pub x: &'a mut [f32],
+    pub y: &'a mut [f32],
+    pub z: &'a mut [f32],
+}
+
+impl<'a> FieldSlabMut<'a> {
+    /// View over a whole field (the single-chunk case).
+    pub fn whole(f: &'a mut VectorField) -> FieldSlabMut<'a> {
+        FieldSlabMut { x: &mut f.x, y: &mut f.y, z: &mut f.z }
+    }
+}
+
+/// Split `nz` slices into at most `parts` contiguous chunks of near-equal
+/// height (earlier chunks take the remainder).
+pub fn partition_z(nz: usize, parts: usize) -> Vec<ZChunk> {
+    partition_z_granular(nz, parts, 1)
+}
+
+/// Like [`partition_z`], but chunk boundaries land on multiples of `gran`
+/// (the grid's tile height): the tile-based kernels gather each 4×4×4
+/// control cube once per chunk-intersected tile layer, so splitting inside
+/// a layer repeats those gathers. Results stay bit-identical regardless of
+/// the partition — alignment is purely a data-movement optimization.
+pub fn partition_z_granular(nz: usize, parts: usize, gran: usize) -> Vec<ZChunk> {
+    if nz == 0 {
+        return Vec::new();
+    }
+    let gran = gran.max(1);
+    let blocks = nz.div_ceil(gran); // gran-high layers; last may be partial
+    let parts = parts.clamp(1, blocks);
+    let base = blocks / parts;
+    let extra = blocks % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut b0 = 0;
+    for i in 0..parts {
+        let nb = base + usize::from(i < extra);
+        let z0 = b0 * gran;
+        let z1 = ((b0 + nb) * gran).min(nz);
+        out.push(ZChunk { z0, z1 });
+        b0 += nb;
+    }
+    debug_assert_eq!(out.last().map(|c| c.z1), Some(nz));
+    out
+}
+
+/// Flat index of voxel `(x, y, z)` (global coordinates) inside the output
+/// slab of `chunk` — the slab-relative addressing shared by every kernel's
+/// `interpolate_into`.
+#[inline(always)]
+pub fn slab_index(vol_dims: Dims, chunk: ZChunk, x: usize, y: usize, z: usize) -> usize {
+    debug_assert!((chunk.z0..chunk.z1).contains(&z));
+    ((z - chunk.z0) * vol_dims.ny + y) * vol_dims.nx + x
+}
+
+/// Iterate the tile z-layers intersecting `chunk` for a tile height of
+/// `dz`: calls `f(tz, lz_lo, lz_hi)` with the tile-layer index and the
+/// intra-tile z range `[lz_lo, lz_hi)` the chunk covers — the boundary walk
+/// shared by every tile-based scheme (TT, TTLI, TV-tiling, VT, VV).
+pub fn for_each_tile_layer(chunk: ZChunk, dz: usize, mut f: impl FnMut(usize, usize, usize)) {
+    let mut zb = chunk.z0;
+    while zb < chunk.z1 {
+        let tz = zb / dz;
+        let zt = ((tz + 1) * dz).min(chunk.z1);
+        f(tz, zb - tz * dz, zt - tz * dz);
+        zb = zt;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool
+
+/// A borrowed task: the pool erases the lifetime internally and the latch
+/// protocol guarantees completion before the borrow ends.
+type Task<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Task<'static>>>,
+    work: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Per-wave completion latch: counts outstanding tasks of one `run` call.
+struct Latch {
+    state: Mutex<LatchState>,
+    done: Condvar,
+}
+
+struct LatchState {
+    remaining: usize,
+    panicked: bool,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch { state: Mutex::new(LatchState { remaining: n, panicked: false }), done: Condvar::new() }
+    }
+
+    fn complete(&self, panicked: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.remaining -= 1;
+        if panicked {
+            s.panicked = true;
+        }
+        if s.remaining == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut s = self.state.lock().unwrap();
+        while s.remaining > 0 {
+            s = self.done.wait(s).unwrap();
+        }
+        if s.panicked {
+            panic!("a chunked-interpolation worker task panicked");
+        }
+    }
+}
+
+/// Reusable fixed-size pool of `std::thread` workers executing borrowed
+/// task waves (see module docs for the safety protocol).
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let workers = (0..threads)
+            .map(|_| {
+                let shared = shared.clone();
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        WorkerPool { shared, workers, threads }
+    }
+
+    /// Pool sized from machine parallelism / `FFDREG_THREADS`.
+    pub fn with_default_threads() -> WorkerPool {
+        WorkerPool::new(crate::util::threadpool::num_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute one wave of borrowed tasks to completion. The calling thread
+    /// helps drain the queue (so nested waves and saturated pools make
+    /// progress), then blocks until every task of *this* wave has finished.
+    /// Panics if any task panicked.
+    pub fn run<'scope>(&self, tasks: Vec<Task<'scope>>) {
+        let n = tasks.len();
+        if n == 0 {
+            return;
+        }
+        let latch = Arc::new(Latch::new(n));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for t in tasks {
+                let l = latch.clone();
+                let wrapped: Task<'scope> = Box::new(move || {
+                    let r = catch_unwind(AssertUnwindSafe(t));
+                    l.complete(r.is_err());
+                });
+                // SAFETY: `wrapped` borrows data live for 'scope. It is only
+                // ever executed (a) by a worker before `latch.wait()` returns
+                // or (b) by the helping loop below — both strictly inside
+                // this call, which outlives neither 'scope nor the borrows.
+                let erased: Task<'static> = unsafe { std::mem::transmute(wrapped) };
+                q.push_back(erased);
+            }
+        }
+        self.shared.work.notify_all();
+        // Help: drain whatever is queued (possibly other waves' tasks — they
+        // are independent and their latches account for us).
+        loop {
+            let task = self.shared.queue.lock().unwrap().pop_front();
+            match task {
+                Some(t) => t(),
+                None => break,
+            }
+        }
+        latch.wait();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Set the flag while holding the queue mutex: a worker checks
+        // `shutdown` only with the lock held, so it either sees the flag or
+        // is already waiting when notify_all fires — storing without the
+        // lock could slip between a worker's check and its wait() and strand
+        // it forever (missed wakeup).
+        {
+            let _guard = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::Release);
+        }
+        self.shared.work.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        // Panics are caught by the wave wrapper; the bare task can't unwind.
+        task();
+    }
+}
+
+/// The process-wide default pool (sized by `FFDREG_THREADS` / machine
+/// parallelism), lazily created on first parallel interpolation.
+pub fn global_pool() -> &'static WorkerPool {
+    static POOL: OnceLock<WorkerPool> = OnceLock::new();
+    POOL.get_or_init(WorkerPool::with_default_threads)
+}
+
+// ---------------------------------------------------------------------------
+// Engine entry points
+
+/// Whole-volume interpolation on the calling thread only (single chunk).
+/// This is the bit-exactness baseline the chunked path is tested against.
+pub fn interpolate_serial<I>(imp: &I, grid: &ControlGrid, vol_dims: Dims) -> VectorField
+where
+    I: Interpolator + ?Sized,
+{
+    let mut out = VectorField::zeros(vol_dims);
+    if vol_dims.count() > 0 {
+        imp.interpolate_into(grid, vol_dims, ZChunk::full(vol_dims), FieldSlabMut::whole(&mut out));
+    }
+    out
+}
+
+/// Fill `out` by fanning z-slab chunks of the volume across `pool`.
+/// Bit-identical to [`interpolate_serial`] for every scheme.
+pub fn fill_chunked<I>(
+    imp: &I,
+    grid: &ControlGrid,
+    vol_dims: Dims,
+    pool: &WorkerPool,
+    out: &mut VectorField,
+) where
+    I: Interpolator + ?Sized,
+{
+    assert_eq!(out.dims, vol_dims, "output field dims mismatch");
+    if vol_dims.count() == 0 {
+        return;
+    }
+    // Tile-aligned chunks: splitting inside a tile layer would make the
+    // tile-based kernels re-gather that layer's control cubes per chunk.
+    let chunks =
+        partition_z_granular(vol_dims.nz, pool.threads() * CHUNKS_PER_THREAD, grid.tile[2]);
+    if chunks.len() <= 1 || pool.threads() <= 1 {
+        imp.interpolate_into(grid, vol_dims, ZChunk::full(vol_dims), FieldSlabMut::whole(out));
+        return;
+    }
+    let nxny = vol_dims.nx * vol_dims.ny;
+    let mut rx = out.x.as_mut_slice();
+    let mut ry = out.y.as_mut_slice();
+    let mut rz = out.z.as_mut_slice();
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+    for ch in chunks {
+        let n = ch.len() * nxny;
+        let (sx, rest) = std::mem::take(&mut rx).split_at_mut(n);
+        rx = rest;
+        let (sy, rest) = std::mem::take(&mut ry).split_at_mut(n);
+        ry = rest;
+        let (sz, rest) = std::mem::take(&mut rz).split_at_mut(n);
+        rz = rest;
+        tasks.push(Box::new(move || {
+            imp.interpolate_into(grid, vol_dims, ch, FieldSlabMut { x: sx, y: sy, z: sz });
+        }));
+    }
+    pool.run(tasks);
+}
+
+/// Allocate and fill a field through `pool` (the coordinator's job path).
+pub fn interpolate_with_pool<I>(
+    imp: &I,
+    grid: &ControlGrid,
+    vol_dims: Dims,
+    pool: &WorkerPool,
+) -> VectorField
+where
+    I: Interpolator + ?Sized,
+{
+    let mut out = VectorField::zeros(vol_dims);
+    fill_chunked(imp, grid, vol_dims, pool, &mut out);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Pool-bound interpolator
+
+/// An interpolator bound to its own worker pool: `interpolate` fans chunks
+/// across that pool regardless of the process-global default. Produced by
+/// [`super::Method::par_instance`].
+pub struct Pooled {
+    inner: Box<dyn Interpolator + Send + Sync>,
+    pool: Arc<WorkerPool>,
+}
+
+impl Pooled {
+    /// Bind `inner` to a fresh pool of `threads` workers.
+    pub fn new(inner: Box<dyn Interpolator + Send + Sync>, threads: usize) -> Pooled {
+        Pooled { inner, pool: Arc::new(WorkerPool::new(threads)) }
+    }
+
+    /// Bind `inner` to an existing (shared) pool.
+    pub fn with_pool(inner: Box<dyn Interpolator + Send + Sync>, pool: Arc<WorkerPool>) -> Pooled {
+        Pooled { inner, pool }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+}
+
+impl Interpolator for Pooled {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn interpolate_into(
+        &self,
+        grid: &ControlGrid,
+        vol_dims: Dims,
+        chunk: ZChunk,
+        out: FieldSlabMut<'_>,
+    ) {
+        // Slab fills stay serial: the engine above decides the fan-out.
+        self.inner.interpolate_into(grid, vol_dims, chunk, out);
+    }
+
+    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+        interpolate_with_pool(&*self.inner, grid, vol_dims, &self.pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bspline::Method;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn partition_covers_exactly_once() {
+        for (nz, parts) in [(1usize, 1usize), (7, 3), (16, 4), (5, 9), (100, 7)] {
+            let chunks = partition_z(nz, parts);
+            assert!(chunks.len() <= parts.max(1));
+            assert_eq!(chunks[0].z0, 0);
+            assert_eq!(chunks.last().unwrap().z1, nz);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].z1, w[1].z0, "contiguous: {chunks:?}");
+            }
+            let total: usize = chunks.iter().map(|c| c.len()).sum();
+            assert_eq!(total, nz);
+            assert!(chunks.iter().all(|c| !c.is_empty()));
+        }
+        assert!(partition_z(0, 4).is_empty());
+    }
+
+    #[test]
+    fn granular_partition_aligns_to_tile_layers() {
+        for (nz, parts, gran) in [(64usize, 64usize, 7usize), (20, 3, 5), (10, 8, 3), (6, 2, 10)] {
+            let chunks = partition_z_granular(nz, parts, gran);
+            assert_eq!(chunks[0].z0, 0);
+            assert_eq!(chunks.last().unwrap().z1, nz);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].z1, w[1].z0);
+                // Interior boundaries sit on tile-layer edges.
+                assert_eq!(w[0].z1 % gran, 0, "nz={nz} parts={parts} gran={gran}: {chunks:?}");
+            }
+            assert!(chunks.iter().all(|c| !c.is_empty()), "{chunks:?}");
+        }
+        assert!(partition_z_granular(0, 4, 5).is_empty());
+    }
+
+    #[test]
+    fn tile_layer_walk_covers_chunk_exactly() {
+        for (chunk, dz) in [
+            (ZChunk { z0: 0, z1: 20 }, 5usize),
+            (ZChunk { z0: 3, z1: 17 }, 5),
+            (ZChunk { z0: 7, z1: 8 }, 4),
+            (ZChunk { z0: 6, z1: 6 }, 3),
+        ] {
+            let mut covered = Vec::new();
+            for_each_tile_layer(chunk, dz, |tz, lo, hi| {
+                assert!(lo < hi && hi <= dz, "tz={tz} {lo}..{hi}");
+                for lz in lo..hi {
+                    covered.push(tz * dz + lz);
+                }
+            });
+            let want: Vec<usize> = (chunk.z0..chunk.z1).collect();
+            assert_eq!(covered, want, "chunk {chunk:?} dz={dz}");
+        }
+    }
+
+    #[test]
+    fn pool_runs_every_task_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        let tasks: Vec<Task<'_>> = hits
+            .iter()
+            .map(|h| {
+                Box::new(move || {
+                    h.fetch_add(1, Ordering::Relaxed);
+                }) as Task<'_>
+            })
+            .collect();
+        pool.run(tasks);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn pool_waves_are_reusable() {
+        let pool = WorkerPool::new(2);
+        for round in 0..10 {
+            let counter = AtomicUsize::new(0);
+            let tasks: Vec<Task<'_>> = (0..8)
+                .map(|_| {
+                    let c = &counter;
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }) as Task<'_>
+                })
+                .collect();
+            pool.run(tasks);
+            assert_eq!(counter.load(Ordering::Relaxed), 8, "round {round}");
+        }
+    }
+
+    #[test]
+    fn nested_run_does_not_deadlock() {
+        // One worker + a task that launches a sub-wave: the helping loop in
+        // `run` must execute the nested tasks on the submitting thread.
+        let pool = WorkerPool::new(1);
+        let outer_done = AtomicUsize::new(0);
+        let pool_ref = &pool;
+        let outer_ref = &outer_done;
+        let tasks: Vec<Task<'_>> = vec![Box::new(move || {
+            let inner = AtomicUsize::new(0);
+            let sub: Vec<Task<'_>> = (0..4)
+                .map(|_| {
+                    let c = &inner;
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }) as Task<'_>
+                })
+                .collect();
+            // Same single-threaded pool: only the helping loop can run these.
+            pool_ref.run(sub);
+            assert_eq!(inner.load(Ordering::Relaxed), 4);
+            outer_ref.fetch_add(1, Ordering::Relaxed);
+        })];
+        pool.run(tasks);
+        assert_eq!(outer_done.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_waves_on_one_pool_complete_independently() {
+        // The coordinator shares one intra-job pool across worker threads;
+        // interleaved waves must not corrupt each other's latches.
+        let pool = Arc::new(WorkerPool::new(3));
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let pool = pool.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..5 {
+                        let counter = AtomicUsize::new(0);
+                        let tasks: Vec<Task<'_>> = (0..16)
+                            .map(|_| {
+                                let c = &counter;
+                                Box::new(move || {
+                                    c.fetch_add(1, Ordering::Relaxed);
+                                }) as Task<'_>
+                            })
+                            .collect();
+                        pool.run(tasks);
+                        assert_eq!(counter.load(Ordering::Relaxed), 16);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "worker task panicked")]
+    fn task_panic_propagates_to_submitter() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<Task<'_>> = vec![
+            Box::new(|| {}),
+            Box::new(|| panic!("kernel blew up")),
+            Box::new(|| {}),
+        ];
+        pool.run(tasks);
+    }
+
+    #[test]
+    fn chunked_equals_serial_bitwise_for_every_method() {
+        use crate::bspline::ControlGrid;
+        let vd = Dims::new(17, 11, 13); // odd dims: partial border tiles
+        let mut g = ControlGrid::zeros(vd, [5, 4, 3]);
+        g.randomize(77, 6.0);
+        let pool = WorkerPool::new(3);
+        for m in Method::ALL {
+            let imp = m.instance();
+            let serial = interpolate_serial(&*imp, &g, vd);
+            let chunked = interpolate_with_pool(&*imp, &g, vd, &pool);
+            assert_eq!(serial.x, chunked.x, "{m:?} x differs");
+            assert_eq!(serial.y, chunked.y, "{m:?} y differs");
+            assert_eq!(serial.z, chunked.z, "{m:?} z differs");
+        }
+    }
+
+    #[test]
+    fn pooled_instance_matches_default_instance() {
+        use crate::bspline::ControlGrid;
+        let vd = Dims::new(20, 15, 10);
+        let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
+        g.randomize(3, 4.0);
+        for threads in [1usize, 2, 7] {
+            let pooled = Method::Ttli.par_instance(threads);
+            let a = pooled.interpolate(&g, vd);
+            let b = Method::Ttli.instance().interpolate(&g, vd);
+            assert_eq!(a.x, b.x, "threads={threads}");
+            assert_eq!(a.y, b.y);
+            assert_eq!(a.z, b.z);
+        }
+    }
+
+    #[test]
+    fn empty_volume_is_a_noop() {
+        use crate::bspline::ControlGrid;
+        let vd = Dims::new(0, 4, 4);
+        let g = ControlGrid::zeros(Dims::new(4, 4, 4), [4, 4, 4]);
+        let f = interpolate_with_pool(&*Method::Ttli.instance(), &g, vd, &WorkerPool::new(2));
+        assert_eq!(f.dims, vd);
+        assert!(f.x.is_empty());
+    }
+}

@@ -15,6 +15,7 @@
 
 pub mod coeffs;
 pub mod dispatch;
+pub mod exec;
 pub mod prefilter;
 pub mod scattered;
 pub mod reference;
@@ -138,12 +139,37 @@ impl ControlGrid {
 
 /// Common interface implemented by every BSI scheme: produce the dense
 /// deformation field `T(x,y,z)` (Eq. 1) over `vol_dims` from `grid`.
-pub trait Interpolator {
+///
+/// Schemes implement the *serial* slab kernel [`Interpolator::interpolate_into`];
+/// all threading policy lives in [`exec`], which partitions the volume into
+/// z-slab chunks and fans them across a reusable worker pool. Chunked output
+/// is bit-identical to whole-volume output — per-voxel arithmetic never
+/// depends on the partition.
+pub trait Interpolator: Sync {
     /// Human-readable method name (matches the paper's terminology).
     fn name(&self) -> &'static str;
 
-    /// Compute the deformation field.
-    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField;
+    /// Serially fill the z-slab `chunk` of the output field. `out`'s slices
+    /// cover exactly the slab's voxels, with index 0 at voxel
+    /// `(0, 0, chunk.z0)`; implementations must write every covered voxel
+    /// with the same arithmetic as the whole-volume path.
+    fn interpolate_into(
+        &self,
+        grid: &ControlGrid,
+        vol_dims: Dims,
+        chunk: exec::ZChunk,
+        out: exec::FieldSlabMut<'_>,
+    );
+
+    /// Compute the deformation field, fanning z-slab chunks across the
+    /// process-default worker pool (`FFDREG_THREADS` / machine parallelism;
+    /// see [`Method::par_instance`](dispatch::Method::par_instance) for a
+    /// per-instance thread count).
+    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+        let mut out = VectorField::zeros(vol_dims);
+        exec::fill_chunked(self, grid, vol_dims, exec::global_pool(), &mut out);
+        out
+    }
 }
 
 /// Validate that `vol_dims` is coverable by `grid` (defensive check shared

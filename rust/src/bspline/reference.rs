@@ -3,8 +3,9 @@
 //! Tables 3/4 is an average absolute error against this implementation.
 
 use super::coeffs::basis_f64;
+use super::exec::{FieldSlabMut, ZChunk};
 use super::{check_extent, ControlGrid, Interpolator};
-use crate::volume::{Dims, VectorField};
+use crate::volume::Dims;
 
 /// f64 deformation field, kept at full precision for error measurement.
 pub struct RefField {
@@ -14,14 +15,21 @@ pub struct RefField {
     pub z: Vec<f64>,
 }
 
-/// Compute the reference field in f64.
-pub fn interpolate_f64(grid: &ControlGrid, vol_dims: Dims) -> RefField {
+/// Shared f64 core: evaluate every voxel of `chunk` in x-fastest order,
+/// emitting `(slab-relative index, Tx, Ty, Tz)`. Both the full-precision
+/// oracle ([`interpolate_f64`]) and the f32 trait adapter below call this,
+/// so the Tables 3/4 accuracy baseline and the `Reference` scheme cannot
+/// silently diverge.
+fn eval_chunk_f64(
+    grid: &ControlGrid,
+    vol_dims: Dims,
+    chunk: ZChunk,
+    mut emit: impl FnMut(usize, f64, f64, f64),
+) {
     check_extent(grid, vol_dims);
-    let n = vol_dims.count();
-    let mut out = RefField { dims: vol_dims, x: vec![0.0; n], y: vec![0.0; n], z: vec![0.0; n] };
     let [dx, dy, dz] = grid.tile;
     let mut i = 0;
-    for z in 0..vol_dims.nz {
+    for z in chunk.z0..chunk.z1 {
         let tz = z / dz;
         let wz = basis_f64((z % dz) as f64 / dz as f64);
         for y in 0..vol_dims.ny {
@@ -43,13 +51,22 @@ pub fn interpolate_f64(grid: &ControlGrid, vol_dims: Dims) -> RefField {
                         }
                     }
                 }
-                out.x[i] = ax;
-                out.y[i] = ay;
-                out.z[i] = az;
+                emit(i, ax, ay, az);
                 i += 1;
             }
         }
     }
+}
+
+/// Compute the reference field in f64.
+pub fn interpolate_f64(grid: &ControlGrid, vol_dims: Dims) -> RefField {
+    let n = vol_dims.count();
+    let mut out = RefField { dims: vol_dims, x: vec![0.0; n], y: vec![0.0; n], z: vec![0.0; n] };
+    eval_chunk_f64(grid, vol_dims, ZChunk::full(vol_dims), |i, ax, ay, az| {
+        out.x[i] = ax;
+        out.y[i] = ay;
+        out.z[i] = az;
+    });
     out
 }
 
@@ -61,15 +78,19 @@ impl Interpolator for Reference {
         "Reference (f64)"
     }
 
-    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
-        let r = interpolate_f64(grid, vol_dims);
-        let mut f = VectorField::zeros(vol_dims);
-        for i in 0..f.x.len() {
-            f.x[i] = r.x[i] as f32;
-            f.y[i] = r.y[i] as f32;
-            f.z[i] = r.z[i] as f32;
-        }
-        f
+    fn interpolate_into(
+        &self,
+        grid: &ControlGrid,
+        vol_dims: Dims,
+        chunk: ZChunk,
+        out: FieldSlabMut<'_>,
+    ) {
+        debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
+        eval_chunk_f64(grid, vol_dims, chunk, |i, ax, ay, az| {
+            out.x[i] = ax as f32;
+            out.y[i] = ay as f32;
+            out.z[i] = az as f32;
+        });
     }
 }
 

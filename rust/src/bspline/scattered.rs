@@ -100,7 +100,7 @@ pub fn eval_batch(grid: &ControlGrid, points: &[Point]) -> Vec<[f32; 3]> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bspline::Method;
+    use crate::bspline::{Interpolator, Method};
     use crate::util::rng::Pcg32;
     use crate::volume::Dims;
 

@@ -12,10 +12,10 @@
 //! vs TTLI is driven by exactly this quantization.
 
 use super::coeffs::LerpLut;
+use super::exec::{FieldSlabMut, ZChunk};
 use super::ttli::lerp;
 use super::{check_extent, ControlGrid, Interpolator};
-use crate::util::threadpool::par_chunks_mut3;
-use crate::volume::{Dims, VectorField};
+use crate::volume::Dims;
 
 pub struct TextureSim;
 
@@ -57,19 +57,24 @@ impl Interpolator for TextureSim {
         "Texture Hardware"
     }
 
-    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+    fn interpolate_into(
+        &self,
+        grid: &ControlGrid,
+        vol_dims: Dims,
+        chunk: ZChunk,
+        out: FieldSlabMut<'_>,
+    ) {
         check_extent(grid, vol_dims);
+        debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
         let [dx, dy, dz] = grid.tile;
         let lx = LerpLut::new(dx);
         let ly = LerpLut::new(dy);
         let lz = LerpLut::new(dz);
-        let mut out = VectorField::zeros(vol_dims);
-        let slice = vol_dims.nx * vol_dims.ny;
-        par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, slice, |z, ox, oy, oz| {
+        let mut i = 0;
+        for z in chunk.z0..chunk.z1 {
             let tz = z / dz;
             let [gz0, gz1, sz] = lz.at(z % dz);
             let (qz0, qz1) = (quantize8(gz0), quantize8(gz1));
-            let mut i = 0;
             for y in 0..vol_dims.ny {
                 let ty = y / dy;
                 let [gy0, gy1, sy] = ly.at(y % dy);
@@ -104,14 +109,13 @@ impl Interpolator for TextureSim {
                         let a3 = lerp(t[6], t[7], sx);
                         res[ci] = lerp(lerp(a0, a1, sy), lerp(a2, a3, sy), sz);
                     }
-                    ox[i] = res[0];
-                    oy[i] = res[1];
-                    oz[i] = res[2];
+                    out.x[i] = res[0];
+                    out.y[i] = res[1];
+                    out.z[i] = res[2];
                     i += 1;
                 }
             }
-        });
-        out
+        }
     }
 }
 

@@ -9,9 +9,9 @@
 //! (§3.2.1's blocks-of-tiles effect).
 
 use super::coeffs::WeightLut;
+use super::exec::{for_each_tile_layer, slab_index, FieldSlabMut, ZChunk};
 use super::{check_extent, ControlGrid, Interpolator};
-use crate::util::threadpool::par_chunks_mut3;
-use crate::volume::{Dims, VectorField};
+use crate::volume::Dims;
 
 pub struct Tt;
 
@@ -48,16 +48,22 @@ impl Interpolator for Tt {
         "Thread per Tile"
     }
 
-    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+    fn interpolate_into(
+        &self,
+        grid: &ControlGrid,
+        vol_dims: Dims,
+        chunk: ZChunk,
+        out: FieldSlabMut<'_>,
+    ) {
         check_extent(grid, vol_dims);
+        debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
         let [dx, dy, dz] = grid.tile;
         let lx = WeightLut::new(dx);
         let ly = WeightLut::new(dy);
         let lz = WeightLut::new(dz);
-        let mut out = VectorField::zeros(vol_dims);
-        let chunk = vol_dims.nx * vol_dims.ny * dz;
-        par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, chunk, |tz, ox, oy, oz| {
-            let z_lim = (vol_dims.nz - tz * dz).min(dz);
+        // Walk the tile z-layers intersecting the slab; a chunk boundary
+        // inside a tile just re-gathers that tile's cube (same arithmetic).
+        for_each_tile_layer(chunk, dz, |tz, lz_lo, lz_hi| {
             for ty in 0..grid.tiles[1] {
                 let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
                 if y_lim == 0 {
@@ -72,24 +78,28 @@ impl Interpolator for Tt {
                     // whole tile (paper Figure 3, Step 2 right).
                     let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
                     grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
-                    for lz_ in 0..z_lim {
+                    for lz_ in lz_lo..lz_hi {
                         let wz = lz.at(lz_);
                         for ly_ in 0..y_lim {
                             let wy = ly.at(ly_);
-                            let row = ((lz_ * vol_dims.ny) + (ty * dy + ly_)) * vol_dims.nx
-                                + tx * dx;
+                            let row = slab_index(
+                                vol_dims,
+                                chunk,
+                                tx * dx,
+                                ty * dy + ly_,
+                                tz * dz + lz_,
+                            );
                             for lx_ in 0..x_lim {
                                 let v = weighted_sum_cube(&cx, &cy, &cz, lx.at(lx_), wy, wz);
-                                ox[row + lx_] = v[0];
-                                oy[row + lx_] = v[1];
-                                oz[row + lx_] = v[2];
+                                out.x[row + lx_] = v[0];
+                                out.y[row + lx_] = v[1];
+                                out.z[row + lx_] = v[2];
                             }
                         }
                     }
                 }
             }
         });
-        out
     }
 }
 

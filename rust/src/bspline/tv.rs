@@ -5,9 +5,9 @@
 //! of Figures 5/6.
 
 use super::coeffs::WeightLut;
+use super::exec::{FieldSlabMut, ZChunk};
 use super::{check_extent, ControlGrid, Interpolator};
-use crate::util::threadpool::par_chunks_mut3;
-use crate::volume::{Dims, VectorField};
+use crate::volume::Dims;
 
 pub struct Tv;
 
@@ -45,31 +45,35 @@ impl Interpolator for Tv {
         "NiftyReg (TV)"
     }
 
-    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+    fn interpolate_into(
+        &self,
+        grid: &ControlGrid,
+        vol_dims: Dims,
+        chunk: ZChunk,
+        out: FieldSlabMut<'_>,
+    ) {
         check_extent(grid, vol_dims);
+        debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
         let [dx, dy, dz] = grid.tile;
         let lx = WeightLut::new(dx);
         let ly = WeightLut::new(dy);
         let lz = WeightLut::new(dz);
-        let mut out = VectorField::zeros(vol_dims);
-        let slice = vol_dims.nx * vol_dims.ny;
-        par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, slice, |z, ox, oy, oz| {
+        let mut i = 0;
+        for z in chunk.z0..chunk.z1 {
             let tz = z / dz;
             let wz = lz.at(z % dz);
-            let mut i = 0;
             for y in 0..vol_dims.ny {
                 let ty = y / dy;
                 let wy = ly.at(y % dy);
                 for x in 0..vol_dims.nx {
                     let v = weighted_sum_direct(grid, x / dx, ty, tz, lx.at(x % dx), wy, wz);
-                    ox[i] = v[0];
-                    oy[i] = v[1];
-                    oz[i] = v[2];
+                    out.x[i] = v[0];
+                    out.y[i] = v[1];
+                    out.z[i] = v[2];
                     i += 1;
                 }
             }
-        });
-        out
+        }
     }
 }
 

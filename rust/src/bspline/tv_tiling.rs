@@ -7,9 +7,9 @@
 //! re-read per voxel (the paper's Figure 3, Step 2 left).
 
 use super::coeffs::WeightLut;
+use super::exec::{for_each_tile_layer, slab_index, FieldSlabMut, ZChunk};
 use super::{check_extent, ControlGrid, Interpolator};
-use crate::util::threadpool::par_chunks_mut3;
-use crate::volume::{Dims, VectorField};
+use crate::volume::Dims;
 
 pub struct TvTiling;
 
@@ -18,19 +18,22 @@ impl Interpolator for TvTiling {
         "Thread per Voxel (Tiling)"
     }
 
-    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+    fn interpolate_into(
+        &self,
+        grid: &ControlGrid,
+        vol_dims: Dims,
+        chunk: ZChunk,
+        out: FieldSlabMut<'_>,
+    ) {
         check_extent(grid, vol_dims);
+        debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
         let [dx, dy, dz] = grid.tile;
         let lx = WeightLut::new(dx);
         let ly = WeightLut::new(dy);
         let lz = WeightLut::new(dz);
-        let mut out = VectorField::zeros(vol_dims);
-        // One task per z-layer of tiles; output chunk covers dz voxel slices.
-        let chunk = vol_dims.nx * vol_dims.ny * dz;
-        par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, chunk, |tz, ox, oy, oz| {
-            let z_lim = (vol_dims.nz - tz * dz).min(dz);
-            // "Shared memory" staging buffer, reused across the layer's tiles.
-            let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
+        // "Shared memory" staging buffer, reused across the slab's tiles.
+        let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
+        for_each_tile_layer(chunk, dz, |tz, lz_lo, lz_hi| {
             for ty in 0..grid.tiles[1] {
                 let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
                 if y_lim == 0 {
@@ -44,12 +47,17 @@ impl Interpolator for TvTiling {
                     // Step 1: global -> shared, once per tile (64 CPs).
                     grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
                     // Step 2: every voxel re-reads the staged cube.
-                    for lz_ in 0..z_lim {
+                    for lz_ in lz_lo..lz_hi {
                         let wz = lz.at(lz_);
                         for ly_ in 0..y_lim {
                             let wy = ly.at(ly_);
-                            let row = ((lz_ * vol_dims.ny) + (ty * dy + ly_)) * vol_dims.nx
-                                + tx * dx;
+                            let row = slab_index(
+                                vol_dims,
+                                chunk,
+                                tx * dx,
+                                ty * dy + ly_,
+                                tz * dz + lz_,
+                            );
                             for lx_ in 0..x_lim {
                                 let wx = lx.at(lx_);
                                 let (mut ax, mut ay, mut az) = (0.0f32, 0.0f32, 0.0f32);
@@ -67,16 +75,15 @@ impl Interpolator for TvTiling {
                                     }
                                 }
                                 let o = row + lx_;
-                                ox[o] = ax;
-                                oy[o] = ay;
-                                oz[o] = az;
+                                out.x[o] = ax;
+                                out.y[o] = ay;
+                                out.z[o] = az;
                             }
                         }
                     }
                 }
             }
         });
-        out
     }
 }
 

@@ -9,10 +9,10 @@
 //! the Figure 7 trend.
 
 use super::coeffs::LerpLut;
+use super::exec::{for_each_tile_layer, slab_index, FieldSlabMut, ZChunk};
 use super::ttli::lerp;
 use super::{check_extent, ControlGrid, Interpolator};
-use crate::util::threadpool::par_chunks_mut3;
-use crate::volume::{Dims, VectorField};
+use crate::volume::Dims;
 
 pub struct Vt;
 
@@ -43,8 +43,15 @@ impl Interpolator for Vt {
         "Vector per Tile"
     }
 
-    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+    fn interpolate_into(
+        &self,
+        grid: &ControlGrid,
+        vol_dims: Dims,
+        chunk: ZChunk,
+        out: FieldSlabMut<'_>,
+    ) {
         check_extent(grid, vol_dims);
+        debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
         let [dx, dy, dz] = grid.tile;
         let lx = LerpLut::new(dx);
         let ly = LerpLut::new(dy);
@@ -54,10 +61,7 @@ impl Interpolator for Vt {
         let gx0: Vec<f32> = (0..dx).map(|a| lx.at(a)[0]).collect();
         let gx1: Vec<f32> = (0..dx).map(|a| lx.at(a)[1]).collect();
         let sx: Vec<f32> = (0..dx).map(|a| lx.at(a)[2]).collect();
-        let mut out = VectorField::zeros(vol_dims);
-        let chunk = vol_dims.nx * vol_dims.ny * dz;
-        par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, chunk, |tz, ox, oy, oz| {
-            let z_lim = (vol_dims.nz - tz * dz).min(dz);
+        for_each_tile_layer(chunk, dz, |tz, lz_lo, lz_hi| {
             for ty in 0..grid.tiles[1] {
                 let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
                 if y_lim == 0 {
@@ -70,7 +74,7 @@ impl Interpolator for Vt {
                     }
                     let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
                     grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
-                    for lz_ in 0..z_lim {
+                    for lz_ in lz_lo..lz_hi {
                         let gz = lz.at(lz_);
                         for ly_ in 0..y_lim {
                             let gy = ly.at(ly_);
@@ -81,8 +85,13 @@ impl Interpolator for Vt {
                                 std::array::from_fn(|l| reduce_yz(&cy, l, gy, gz));
                             let colz: [f32; 4] =
                                 std::array::from_fn(|l| reduce_yz(&cz, l, gy, gz));
-                            let row = ((lz_ * vol_dims.ny) + (ty * dy + ly_)) * vol_dims.nx
-                                + tx * dx;
+                            let row = slab_index(
+                                vol_dims,
+                                chunk,
+                                tx * dx,
+                                ty * dy + ly_,
+                                tz * dz + lz_,
+                            );
                             // Vector loop over the tile row: 3 lerps per
                             // component, no cross-iteration dependency.
                             for a in 0..x_lim {
@@ -93,16 +102,15 @@ impl Interpolator for Vt {
                                     lerp(lerp(coly[0], coly[1], g0), lerp(coly[2], coly[3], g1), s);
                                 let vz =
                                     lerp(lerp(colz[0], colz[1], g0), lerp(colz[2], colz[3], g1), s);
-                                ox[row + a] = vx;
-                                oy[row + a] = vy;
-                                oz[row + a] = vz;
+                                out.x[row + a] = vx;
+                                out.y[row + a] = vy;
+                                out.z[row + a] = vz;
                             }
                         }
                     }
                 }
             }
         });
-        out
     }
 }
 

@@ -7,10 +7,10 @@
 //! voxel performs 7 *vector* lerps of width 8 plus the scalar 9th trilerp.
 
 use super::coeffs::LerpLut;
+use super::exec::{for_each_tile_layer, slab_index, FieldSlabMut, ZChunk};
 use super::ttli::lerp;
 use super::{check_extent, ControlGrid, Interpolator};
-use crate::util::threadpool::par_chunks_mut3;
-use crate::volume::{Dims, VectorField};
+use crate::volume::Dims;
 
 pub struct Vv;
 
@@ -63,16 +63,20 @@ impl Interpolator for Vv {
         "Vector per Voxel"
     }
 
-    fn interpolate(&self, grid: &ControlGrid, vol_dims: Dims) -> VectorField {
+    fn interpolate_into(
+        &self,
+        grid: &ControlGrid,
+        vol_dims: Dims,
+        chunk: ZChunk,
+        out: FieldSlabMut<'_>,
+    ) {
         check_extent(grid, vol_dims);
+        debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
         let [dx, dy, dz] = grid.tile;
         let lx = LerpLut::new(dx);
         let ly = LerpLut::new(dy);
         let lz = LerpLut::new(dz);
-        let mut out = VectorField::zeros(vol_dims);
-        let chunk = vol_dims.nx * vol_dims.ny * dz;
-        par_chunks_mut3(&mut out.x, &mut out.y, &mut out.z, chunk, |tz, ox, oy, oz| {
-            let z_lim = (vol_dims.nz - tz * dz).min(dz);
+        for_each_tile_layer(chunk, dz, |tz, lz_lo, lz_hi| {
             for ty in 0..grid.tiles[1] {
                 let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
                 if y_lim == 0 {
@@ -88,7 +92,7 @@ impl Interpolator for Vv {
                     let lnx = lanes(&cx);
                     let lny = lanes(&cy);
                     let lnz = lanes(&cz);
-                    for lz_ in 0..z_lim {
+                    for lz_ in lz_lo..lz_hi {
                         let [gz0, gz1, sz] = lz.at(lz_);
                         // fz per lane: lane q uses gz0 if its c-bit is 0.
                         let fz: [f32; 8] =
@@ -97,23 +101,27 @@ impl Interpolator for Vv {
                             let [gy0, gy1, sy] = ly.at(ly_);
                             let fy: [f32; 8] =
                                 std::array::from_fn(|q| if q & 2 == 0 { gy0 } else { gy1 });
-                            let row = ((lz_ * vol_dims.ny) + (ty * dy + ly_)) * vol_dims.nx
-                                + tx * dx;
+                            let row = slab_index(
+                                vol_dims,
+                                chunk,
+                                tx * dx,
+                                ty * dy + ly_,
+                                tz * dz + lz_,
+                            );
                             for lx_ in 0..x_lim {
                                 let [gx0, gx1, sx] = lx.at(lx_);
                                 let fx: [f32; 8] =
                                     std::array::from_fn(|q| if q & 1 == 0 { gx0 } else { gx1 });
                                 let s = [sx, sy, sz];
-                                ox[row + lx_] = vv_component(&lnx, &fx, &fy, &fz, s);
-                                oy[row + lx_] = vv_component(&lny, &fx, &fy, &fz, s);
-                                oz[row + lx_] = vv_component(&lnz, &fx, &fy, &fz, s);
+                                out.x[row + lx_] = vv_component(&lnx, &fx, &fy, &fz, s);
+                                out.y[row + lx_] = vv_component(&lny, &fx, &fy, &fz, s);
+                                out.z[row + lx_] = vv_component(&lnz, &fx, &fy, &fz, s);
                             }
                         }
                     }
                 }
             }
         });
-        out
     }
 }
 

@@ -19,6 +19,10 @@ pub struct Config {
     pub workers: usize,
     pub queue_capacity: usize,
     pub max_batch: usize,
+    /// Threads per interpolation job (chunked z-slab execution). 0 = use
+    /// the process-default pool; >= 1 = a dedicated pool of exactly that
+    /// size (1 = strictly serial jobs).
+    pub intra_threads: usize,
 }
 
 impl Default for Config {
@@ -30,6 +34,7 @@ impl Default for Config {
             workers: crate::util::threadpool::num_threads(),
             queue_capacity: 256,
             max_batch: 8,
+            intra_threads: 0,
         }
     }
 }
@@ -70,6 +75,9 @@ impl Config {
         if let Some(v) = j.get("max_batch").as_usize() {
             c.max_batch = v;
         }
+        if let Some(v) = j.get("intra_threads").as_usize() {
+            c.intra_threads = v;
+        }
         Ok(c)
     }
 
@@ -98,6 +106,7 @@ impl Config {
         self.workers = args.get_usize("workers", self.workers)?;
         self.queue_capacity = args.get_usize("queue", self.queue_capacity)?;
         self.max_batch = args.get_usize("batch", self.max_batch)?;
+        self.intra_threads = args.get_usize("threads", self.intra_threads)?;
         Ok(self)
     }
 
@@ -127,7 +136,7 @@ mod tests {
     fn json_overrides() {
         let j = Json::parse(
             r#"{"ffd":{"levels":2,"method":"tv","tile":4,"bending_weight":0.01},
-                "affine_first":false,"workers":3}"#,
+                "affine_first":false,"workers":3,"intra_threads":4}"#,
         )
         .unwrap();
         let c = Config::from_json(&j).unwrap();
@@ -136,6 +145,17 @@ mod tests {
         assert_eq!(c.ffd.tile, [4, 4, 4]);
         assert!(!c.affine_first);
         assert_eq!(c.workers, 3);
+        assert_eq!(c.intra_threads, 4);
+    }
+
+    #[test]
+    fn threads_flag_overrides_intra_threads() {
+        let args = crate::cli::Args::parse(
+            ["--threads", "8"].iter().map(|s| s.to_string()),
+        );
+        let c = Config::default().apply_args(&args).unwrap();
+        assert_eq!(c.intra_threads, 8);
+        assert_eq!(Config::default().intra_threads, 0, "default = process pool");
     }
 
     #[test]

@@ -22,6 +22,12 @@ pub struct SchedulerConfig {
     pub queue_capacity: usize,
     /// Max jobs fused into one batch.
     pub max_batch: usize,
+    /// Threads *per job*: >= 1 attaches a dedicated shared chunk-execution
+    /// pool of exactly that size, bounding each CPU job's fan-out alongside
+    /// the inter-job worker pool (1 = strictly serial jobs). 0 = no
+    /// dedicated pool; jobs then run on the process-default pool (machine
+    /// parallelism / FFDREG_THREADS), matching the pre-engine behavior.
+    pub intra_threads: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -30,6 +36,7 @@ impl Default for SchedulerConfig {
             workers: crate::util::threadpool::num_threads(),
             queue_capacity: 256,
             max_batch: 8,
+            intra_threads: 0,
         }
     }
 }
@@ -64,6 +71,17 @@ pub struct Scheduler {
 
 impl Scheduler {
     pub fn start(service: InterpolationService, cfg: SchedulerConfig) -> Scheduler {
+        // An explicit per-job thread count gets a dedicated pool (one pool
+        // for the whole scheduler, so the total CPU footprint stays bounded
+        // regardless of worker count); 0 leaves jobs on the process-default
+        // pool.
+        let service = if cfg.intra_threads >= 1 {
+            service.with_exec_pool(Arc::new(crate::bspline::exec::WorkerPool::new(
+                cfg.intra_threads,
+            )))
+        } else {
+            service
+        };
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
@@ -209,7 +227,7 @@ mod tests {
     fn jobs_complete_with_results() {
         let sched = Scheduler::start(
             InterpolationService::new(None),
-            SchedulerConfig { workers: 2, queue_capacity: 16, max_batch: 4 },
+            SchedulerConfig { workers: 2, queue_capacity: 16, max_batch: 4, intra_threads: 2 },
         );
         let outcome = sched
             .submit_and_wait(mk_job(1, Engine::Cpu(Method::Ttli)))
@@ -226,7 +244,7 @@ mod tests {
         // Single worker + tiny queue: flood with jobs, expect rejections.
         let sched = Scheduler::start(
             InterpolationService::new(None),
-            SchedulerConfig { workers: 1, queue_capacity: 2, max_batch: 1 },
+            SchedulerConfig { workers: 1, queue_capacity: 2, max_batch: 1, intra_threads: 1 },
         );
         let mut rejected = 0;
         let mut receivers = vec![];
@@ -248,7 +266,7 @@ mod tests {
     fn failed_jobs_report_errors_not_panics() {
         let sched = Scheduler::start(
             InterpolationService::new(None), // no PJRT runtime
-            SchedulerConfig { workers: 1, queue_capacity: 8, max_batch: 2 },
+            SchedulerConfig { workers: 1, queue_capacity: 8, max_batch: 2, intra_threads: 1 },
         );
         let outcome = sched.submit_and_wait(mk_job(9, Engine::Pjrt)).unwrap();
         assert!(outcome.result.is_err());
@@ -269,7 +287,7 @@ mod tests {
     fn many_concurrent_jobs_all_complete() {
         let sched = Scheduler::start(
             InterpolationService::new(None),
-            SchedulerConfig { workers: 3, queue_capacity: 128, max_batch: 8 },
+            SchedulerConfig { workers: 3, queue_capacity: 128, max_batch: 8, intra_threads: 2 },
         );
         let receivers: Vec<_> = (0..40)
             .map(|i| sched.submit(mk_job(i, Engine::Cpu(Method::Ttli))).unwrap())

@@ -2,22 +2,35 @@
 //! kernels or on the AOT PJRT artifacts. The PJRT runtime is optional — a
 //! coordinator without artifacts serves CPU engines and cleanly rejects
 //! `pjrt` requests.
+//!
+//! CPU jobs can additionally carry **intra-job parallelism**: when the
+//! service holds a shared [`WorkerPool`], each job's output volume is
+//! chunked into z-slabs and fanned across that pool (`bspline::exec`), so
+//! one large request uses many cores while the scheduler's own worker pool
+//! keeps many requests in flight. Chunked results are bit-identical to the
+//! whole-volume path.
+
+use std::sync::Arc;
 
 use super::job::{Engine, InterpolateJob};
+use crate::bspline::exec::{self, WorkerPool};
 use crate::runtime::PjrtHandle;
 use crate::volume::VectorField;
 
 /// Stateless-per-request execution service (cheap to clone across workers).
 /// PJRT jobs are forwarded to the single accelerator-owner thread behind
-/// [`PjrtHandle`]; CPU jobs run on the calling worker.
+/// [`PjrtHandle`]; CPU jobs run on the calling worker, optionally fanned
+/// across the shared intra-job pool.
 #[derive(Clone)]
 pub struct InterpolationService {
     pjrt: Option<PjrtHandle>,
+    /// Shared chunk-execution pool; `None` = serial per-job execution.
+    exec_pool: Option<Arc<WorkerPool>>,
 }
 
 impl InterpolationService {
     pub fn new(pjrt: Option<PjrtHandle>) -> Self {
-        InterpolationService { pjrt }
+        InterpolationService { pjrt, exec_pool: None }
     }
 
     /// Open the default artifact dir if present (best-effort PJRT support).
@@ -28,18 +41,43 @@ impl InterpolationService {
         } else {
             None
         };
-        InterpolationService { pjrt }
+        InterpolationService { pjrt, exec_pool: None }
+    }
+
+    /// Attach a shared worker pool for intra-job chunked execution.
+    pub fn with_exec_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.exec_pool = Some(pool);
+        self
     }
 
     pub fn has_pjrt(&self) -> bool {
         self.pjrt.is_some()
     }
 
+    /// Threads used per CPU job: the dedicated pool's size, or the
+    /// process-default pool size when none is attached (reported without
+    /// lazily spawning that pool).
+    pub fn intra_threads(&self) -> usize {
+        self.exec_pool
+            .as_ref()
+            .map_or_else(crate::util::threadpool::num_threads, |p| p.threads())
+    }
+
     /// Execute one job.
     pub fn execute(&self, job: &InterpolateJob) -> Result<VectorField, String> {
         match job.engine {
             Engine::Cpu(method) => {
-                Ok(method.instance().interpolate(&job.grid, job.vol_dims))
+                let imp = method.instance();
+                match &self.exec_pool {
+                    Some(pool) => {
+                        Ok(exec::interpolate_with_pool(&*imp, &job.grid, job.vol_dims, pool))
+                    }
+                    // No dedicated pool: the default `interpolate` path fans
+                    // chunks across the process-default pool — each job uses
+                    // the whole machine, matching the pre-engine behavior
+                    // (cap it with FFDREG_THREADS or `intra_threads`).
+                    None => Ok(imp.interpolate(&job.grid, job.vol_dims)),
+                }
             }
             Engine::Pjrt => match &self.pjrt {
                 None => Err("pjrt engine unavailable: no artifacts loaded".to_string()),
@@ -85,5 +123,22 @@ mod tests {
         let a = svc.execute(&job(Engine::Cpu(Method::Ttli))).unwrap();
         let b = svc.execute(&job(Engine::Cpu(Method::Tv))).unwrap();
         assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn pooled_execution_is_bit_identical_to_default() {
+        let default_svc = InterpolationService::new(None);
+        let pooled =
+            InterpolationService::new(None).with_exec_pool(Arc::new(WorkerPool::new(3)));
+        assert_eq!(pooled.intra_threads(), 3);
+        assert!(default_svc.intra_threads() >= 1, "default = process pool size");
+        for m in Method::ALL {
+            let j = job(Engine::Cpu(m));
+            let a = default_svc.execute(&j).unwrap();
+            let b = pooled.execute(&j).unwrap();
+            assert_eq!(a.x, b.x, "{m:?}");
+            assert_eq!(a.y, b.y, "{m:?}");
+            assert_eq!(a.z, b.z, "{m:?}");
+        }
     }
 }

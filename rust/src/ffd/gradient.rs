@@ -211,7 +211,7 @@ pub fn max_norm(g: &ControlGrid) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::bspline::Method;
+    use crate::bspline::{Interpolator, Method};
     use crate::volume::Dims;
 
     /// The adjoint test: <interp(φ), v> == <φ, adjoint(v)> for arbitrary φ, v.

@@ -129,7 +129,7 @@ mod tests {
 
     #[test]
     fn jacobian_matches_finite_difference_of_field() {
-        use crate::bspline::Method;
+        use crate::bspline::{Interpolator, Method};
         let vd = Dims::new(20, 20, 20);
         let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
         grid.randomize(5, 1.5);

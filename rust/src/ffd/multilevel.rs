@@ -9,7 +9,7 @@ use std::time::Instant;
 
 use super::optimizer::optimize_level;
 use super::{FfdConfig, FfdResult, FfdTiming};
-use crate::bspline::{ControlGrid, Method};
+use crate::bspline::{ControlGrid, Interpolator, Method};
 use crate::volume::pyramid;
 use crate::volume::resample::warp;
 use crate::volume::{Dims, Volume};

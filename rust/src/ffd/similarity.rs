@@ -106,7 +106,7 @@ mod tests {
         // Perturb the deformation along x at one interior voxel and compare
         // the analytic gradient against the finite difference of the cost.
         use crate::bspline::ControlGrid;
-        use crate::bspline::Method;
+        use crate::bspline::{Interpolator, Method};
         use crate::volume::resample::warp;
 
         let reference = ramp();

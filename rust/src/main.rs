@@ -14,7 +14,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::cli::Args;
 use ffdreg::config::Config;
 use ffdreg::coordinator::{InterpolationService, Scheduler, SchedulerConfig};
@@ -58,12 +58,13 @@ USAGE: ffdreg <command> [flags]
 
   phantom      --out DIR [--scale 0.25] [--seed 7]
   interpolate  [--method ttli|tt|tv|tv-tiling|vt|vv|th|ref|pjrt] [--dims X,Y,Z]
-               [--tile 5] [--seed 1] [--check]
+               [--tile 5] [--seed 1] [--check] [--threads N]
   register     --reference A.vol --floating B.vol [--out warped.vol]
                [--method M] [--levels 3] [--iters 60] [--tile 5] [--be 0.001]
                [--no-affine] [--config cfg.json]
   affine       --reference A.vol --floating B.vol [--out warped.vol]
   serve        [--addr 127.0.0.1:7847] [--workers N] [--queue 256] [--batch 8]
+               [--threads N]
   artifacts    [--dir artifacts]
   version",
         ffdreg::version()
@@ -96,6 +97,8 @@ fn cmd_interpolate(args: &Args) -> Result<(), String> {
     let dims = args.get_triple("dims", [64, 64, 64])?;
     let tile = args.get_usize("tile", 5)?;
     let seed = args.get_usize("seed", 1)? as u64;
+    // 0 = process default pool (FFDREG_THREADS / machine parallelism).
+    let threads = args.get_usize("threads", 0)?;
     let vd = Dims::new(dims[0], dims[1], dims[2]);
     let mut grid = ControlGrid::zeros(vd, [tile, tile, tile]);
     grid.randomize(seed, 5.0);
@@ -116,13 +119,18 @@ fn cmd_interpolate(args: &Args) -> Result<(), String> {
     }
 
     let method = Method::parse(engine).ok_or_else(|| format!("unknown method '{engine}'"))?;
-    let imp = method.instance();
+    let imp = if threads > 0 { method.par_instance(threads) } else { method.instance() };
     let stats = timer::time_adaptive(3, 20, 0.5, || {
         std::hint::black_box(imp.interpolate(&grid, vd));
     });
     let per_voxel = stats.mean() / vd.count() as f64;
+    let threads_label = if threads > 0 {
+        format!(" threads {threads}")
+    } else {
+        String::new()
+    };
     println!(
-        "{:<26} dims {}x{}x{} tile {tile}: {} ± {} per run, {:.3} ns/voxel",
+        "{:<26} dims {}x{}x{} tile {tile}{threads_label}: {} ± {} per run, {:.3} ns/voxel",
         imp.name(),
         vd.nx,
         vd.ny,
@@ -228,8 +236,13 @@ fn cmd_affine(args: &Args) -> Result<(), String> {
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let cfg = Config::resolve(args)?;
     let service = InterpolationService::with_default_runtime();
+    let per_job = if cfg.intra_threads == 0 {
+        format!("default ({})", ffdreg::util::threadpool::num_threads())
+    } else {
+        cfg.intra_threads.to_string()
+    };
     println!(
-        "starting coordinator: {} workers, queue {}, batch {}, pjrt={}",
+        "starting coordinator: {} workers, queue {}, batch {}, {per_job} thread(s)/job, pjrt={}",
         cfg.workers,
         cfg.queue_capacity,
         cfg.max_batch,
@@ -241,6 +254,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             workers: cfg.workers,
             queue_capacity: cfg.queue_capacity,
             max_batch: cfg.max_batch,
+            intra_threads: cfg.intra_threads,
         },
     ));
     let server = ffdreg::coordinator::server::Server::start(&cfg.server_addr, sched)

@@ -99,7 +99,7 @@ mod tests {
 
     #[test]
     fn spline_and_dense_transform_agree() {
-        use crate::bspline::Method;
+        use crate::bspline::{Interpolator, Method};
         let vd = Dims::new(20, 20, 20);
         let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
         g.randomize(8, 2.0);

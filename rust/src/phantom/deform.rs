@@ -10,7 +10,7 @@
 //! 2. [`random_smooth`] — seeded random coarse-grid displacements for
 //!    robustness/property tests.
 
-use crate::bspline::{ControlGrid, Method};
+use crate::bspline::{ControlGrid, Interpolator, Method};
 use crate::util::rng::Pcg32;
 use crate::volume::resample::warp;
 use crate::volume::{VectorField, Volume};

@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 use crate::util::json::Json;
 

@@ -1,0 +1,269 @@
+//! PJRT-backed runtime (requires the vendored `xla` crate closure; built
+//! only with `--features xla`): loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::error::{anyhow, bail, Context, Result};
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use crate::bspline::ControlGrid;
+use crate::volume::{Dims, VectorField, Volume};
+
+/// A compiled-artifact cache over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    /// name → compiled executable (compile-once, then reuse).
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Find the artifact for an entry point and configuration.
+    pub fn find(&self, entry: &str, vol_dims: Dims, tile: usize) -> Option<&ArtifactSpec> {
+        self.manifest.artifacts.iter().find(|a| {
+            a.entry == entry
+                && a.vol_dims == [vol_dims.nz, vol_dims.ny, vol_dims.nx]
+                && a.tile == tile
+        })
+    }
+
+    /// Compile (or fetch the cached) executable for artifact `name`.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let arc = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Execute artifact `name` with input literals; returns the flattened
+    /// tuple outputs.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling result of {name}: {e:?}"))
+    }
+
+    // ---- typed convenience wrappers ------------------------------------
+
+    /// Control grid → (3, gz, gy, gx) literal in the artifact layout.
+    pub fn grid_literal(grid: &ControlGrid) -> Result<xla::Literal> {
+        let d = grid.dims;
+        let mut flat = Vec::with_capacity(3 * grid.len());
+        flat.extend_from_slice(&grid.x);
+        flat.extend_from_slice(&grid.y);
+        flat.extend_from_slice(&grid.z);
+        xla::Literal::vec1(&flat)
+            .reshape(&[3, d.nz as i64, d.ny as i64, d.nx as i64])
+            .map_err(|e| anyhow!("reshaping grid literal: {e:?}"))
+    }
+
+    /// Volume → (nz, ny, nx) literal.
+    pub fn volume_literal(vol: &Volume) -> Result<xla::Literal> {
+        xla::Literal::vec1(&vol.data)
+            .reshape(&[vol.dims.nz as i64, vol.dims.ny as i64, vol.dims.nx as i64])
+            .map_err(|e| anyhow!("reshaping volume literal: {e:?}"))
+    }
+
+    /// (3, nz, ny, nx) literal → VectorField.
+    pub fn field_from_literal(lit: &xla::Literal, dims: Dims) -> Result<VectorField> {
+        let flat: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("reading field: {e:?}"))?;
+        let n = dims.count();
+        if flat.len() != 3 * n {
+            bail!("field literal has {} elements, want {}", flat.len(), 3 * n);
+        }
+        let mut f = VectorField::zeros(dims);
+        f.x.copy_from_slice(&flat[..n]);
+        f.y.copy_from_slice(&flat[n..2 * n]);
+        f.z.copy_from_slice(&flat[2 * n..]);
+        Ok(f)
+    }
+
+    /// Run the Pallas-TTLI BSI artifact: grid → dense deformation field.
+    pub fn bsi_field(&self, grid: &ControlGrid, vol_dims: Dims) -> Result<VectorField> {
+        let tile = grid.tile[0];
+        let spec = self
+            .find("bsi_ttli", vol_dims, tile)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no bsi_ttli artifact for dims {vol_dims:?} tile {tile} — \
+                     regenerate with `make artifacts` or adjust STANDARD_CONFIGS"
+                )
+            })?
+            .name
+            .clone();
+        let out = self.execute(&spec, &[Self::grid_literal(grid)?])?;
+        Self::field_from_literal(&out[0], vol_dims)
+    }
+
+    /// Run the warp artifact: (volume, field) → warped volume.
+    pub fn warp(&self, vol: &Volume, field: &VectorField, tile: usize) -> Result<Volume> {
+        let spec = self
+            .find("warp", vol.dims, tile)
+            .ok_or_else(|| anyhow!("no warp artifact for dims {:?}", vol.dims))?
+            .name
+            .clone();
+        let field_lit = {
+            let mut flat = Vec::with_capacity(3 * field.x.len());
+            flat.extend_from_slice(&field.x);
+            flat.extend_from_slice(&field.y);
+            flat.extend_from_slice(&field.z);
+            xla::Literal::vec1(&flat)
+                .reshape(&[
+                    3,
+                    vol.dims.nz as i64,
+                    vol.dims.ny as i64,
+                    vol.dims.nx as i64,
+                ])
+                .map_err(|e| anyhow!("reshape field: {e:?}"))?
+        };
+        let out = self.execute(&spec, &[Self::volume_literal(vol)?, field_lit])?;
+        let data: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("read warp: {e:?}"))?;
+        Ok(Volume { dims: vol.dims, spacing: vol.spacing, data })
+    }
+
+    /// Run one AOT `ffd_step`: returns (new grid values, loss).
+    pub fn ffd_step(
+        &self,
+        reference: &Volume,
+        floating: &Volume,
+        grid: &ControlGrid,
+        step: f32,
+    ) -> Result<(ControlGrid, f32)> {
+        let tile = grid.tile[0];
+        let spec = self
+            .find("ffd_step", reference.dims, tile)
+            .ok_or_else(|| anyhow!("no ffd_step artifact for dims {:?}", reference.dims))?
+            .name
+            .clone();
+        let out = self.execute(
+            &spec,
+            &[
+                Self::volume_literal(reference)?,
+                Self::volume_literal(floating)?,
+                Self::grid_literal(grid)?,
+                xla::Literal::scalar(step),
+            ],
+        )?;
+        let flat: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("read cp: {e:?}"))?;
+        let n = grid.len();
+        let mut new_grid = grid.clone();
+        new_grid.x.copy_from_slice(&flat[..n]);
+        new_grid.y.copy_from_slice(&flat[n..2 * n]);
+        new_grid.z.copy_from_slice(&flat[2 * n..]);
+        let loss: f32 = out[1]
+            .get_first_element()
+            .map_err(|e| anyhow!("read loss: {e:?}"))?;
+        Ok((new_grid, loss))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor thread: the xla crate's PJRT client is Rc-based (not Send), so the
+// coordinator confines it to one dedicated thread and talks to it over a
+// channel — the standard accelerator-owner-thread pattern.
+
+enum PjrtRequest {
+    BsiField {
+        grid: ControlGrid,
+        vol_dims: Dims,
+        reply: std::sync::mpsc::Sender<Result<VectorField>>,
+    },
+}
+
+/// Cloneable, thread-safe handle to the PJRT executor thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: std::sync::mpsc::Sender<PjrtRequest>,
+}
+
+impl PjrtHandle {
+    /// Spawn the executor thread over the artifact dir. Fails fast if the
+    /// manifest is unreadable (the thread validates before serving).
+    pub fn spawn(dir: &Path) -> Result<PjrtHandle> {
+        // Validate the manifest on the caller's thread for a fast error.
+        Manifest::load(&dir.join("manifest.json"))?;
+        let dir = dir.to_path_buf();
+        let (tx, rx) = std::sync::mpsc::channel::<PjrtRequest>();
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+        std::thread::spawn(move || {
+            let rt = match Runtime::open(&dir) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(req) = rx.recv() {
+                match req {
+                    PjrtRequest::BsiField { grid, vol_dims, reply } => {
+                        let _ = reply.send(rt.bsi_field(&grid, vol_dims));
+                    }
+                }
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt executor thread died during startup"))??;
+        Ok(PjrtHandle { tx })
+    }
+
+    /// Synchronous BSI through the executor thread.
+    pub fn bsi_field(&self, grid: &ControlGrid, vol_dims: Dims) -> Result<VectorField> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .send(PjrtRequest::BsiField { grid: grid.clone(), vol_dims, reply })
+            .map_err(|_| anyhow!("pjrt executor thread is gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt executor dropped the request"))?
+    }
+}

@@ -1,0 +1,104 @@
+//! No-op PJRT runtime used when the crate is built without the `xla`
+//! feature (the default, offline-capable configuration). Every entry point
+//! keeps the real runtime's signature and returns a clean "unavailable"
+//! error, so callers — the coordinator, the CLI, the integration tests —
+//! compile and degrade gracefully instead of needing their own cfg gates.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use crate::bspline::ControlGrid;
+use crate::util::error::{anyhow, Result};
+use crate::volume::{Dims, VectorField, Volume};
+
+fn unavailable(what: &str) -> crate::util::error::Error {
+    anyhow!("{what} unavailable: ffdreg was built without the `xla` feature (PJRT disabled)")
+}
+
+/// Stand-in for a compiled PJRT executable (never actually constructed).
+pub struct StubExecutable;
+
+/// Artifact runtime stub: `open` always fails, so no instance ever exists;
+/// the methods exist purely to keep call sites compiling.
+pub struct Runtime {
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Always fails: PJRT execution needs the `xla` feature.
+    pub fn open(_dir: &Path) -> Result<Runtime> {
+        Err(unavailable("pjrt runtime"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        "disabled".to_string()
+    }
+
+    /// No instance ever exists, so there is never an artifact to find — no
+    /// need to mirror the real runtime's matching logic here.
+    pub fn find(&self, _entry: &str, _vol_dims: Dims, _tile: usize) -> Option<&ArtifactSpec> {
+        None
+    }
+
+    pub fn executable(&self, _name: &str) -> Result<Arc<StubExecutable>> {
+        Err(unavailable("pjrt executable"))
+    }
+
+    pub fn bsi_field(&self, _grid: &ControlGrid, _vol_dims: Dims) -> Result<VectorField> {
+        Err(unavailable("pjrt bsi"))
+    }
+
+    pub fn warp(&self, _vol: &Volume, _field: &VectorField, _tile: usize) -> Result<Volume> {
+        Err(unavailable("pjrt warp"))
+    }
+
+    pub fn ffd_step(
+        &self,
+        _reference: &Volume,
+        _floating: &Volume,
+        _grid: &ControlGrid,
+        _step: f32,
+    ) -> Result<(ControlGrid, f32)> {
+        Err(unavailable("pjrt ffd_step"))
+    }
+}
+
+/// Executor-thread handle stub: `spawn` always fails, so the coordinator's
+/// best-effort PJRT discovery simply yields `None`.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    _private: (),
+}
+
+impl PjrtHandle {
+    pub fn spawn(_dir: &Path) -> Result<PjrtHandle> {
+        Err(unavailable("pjrt executor"))
+    }
+
+    pub fn bsi_field(&self, _grid: &ControlGrid, _vol_dims: Dims) -> Result<VectorField> {
+        Err(unavailable("pjrt bsi"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_open_reports_feature_gate() {
+        let err = Runtime::open(Path::new("/nowhere")).unwrap_err();
+        assert!(err.to_string().contains("unavailable"), "{err}");
+        assert!(err.to_string().contains("xla"), "{err}");
+    }
+
+    #[test]
+    fn stub_spawn_reports_feature_gate() {
+        let err = PjrtHandle::spawn(Path::new("/nowhere")).unwrap_err();
+        assert!(err.to_string().contains("unavailable"), "{err}");
+    }
+}

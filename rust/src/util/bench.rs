@@ -152,6 +152,26 @@ pub fn full_scale() -> bool {
     std::env::var("FFDREG_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Parse a `--threads` comma list for the chunked-execution axis shared by
+/// the figure benches. `None` (flag absent) means one run on the process
+/// default pool (`[0]`); a malformed entry aborts loudly rather than being
+/// silently dropped (an empty axis would skip every measured row).
+pub fn parse_thread_axis(flag: Option<&str>) -> Vec<usize> {
+    let Some(list) = flag else {
+        return vec![0];
+    };
+    let axis: Vec<usize> = list
+        .split(',')
+        .map(|s| {
+            s.trim().parse::<usize>().unwrap_or_else(|_| {
+                panic!("--threads expects a comma list of integers, got '{s}' in '{list}'")
+            })
+        })
+        .collect();
+    assert!(!axis.is_empty(), "--threads list is empty");
+    axis
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

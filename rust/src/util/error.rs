@@ -1,0 +1,168 @@
+//! Minimal error substrate (anyhow substitute, DESIGN.md §1): a boxed
+//! message-chain error with context layering, so the runtime/artifact code
+//! keeps `?`-based flow and `{e:#}` chain rendering without pulling an
+//! external crate into the offline build.
+
+use std::fmt;
+
+/// A chained error: the innermost message plus the context frames wrapped
+/// around it (outermost last).
+pub struct Error {
+    /// Innermost cause first; contexts are pushed on top.
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// New leaf error.
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { frames: vec![m.into()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context(mut self, c: impl Into<String>) -> Error {
+        self.frames.push(c.into());
+        self
+    }
+
+    /// The outermost message (what `Display` without `#` prints).
+    pub fn outer(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}` — the anyhow-style "outer: ...: root cause" chain.
+            for (i, frame) in self.frames.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{frame}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.outer())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug mirrors the full chain (what `.unwrap()` prints).
+        write!(f, "{self:#}")
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error::msg(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error::msg(s)
+    }
+}
+
+/// Result alias defaulting to [`Error`] (anyhow::Result analog).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazy context to a `Result` (anyhow::Context analog).
+pub trait Context<T> {
+    fn context(self, c: impl Into<String>) -> Result<T>;
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, c: impl Into<String>) -> Result<T> {
+        // `{:#}` preserves the chain when E is itself an [`Error`].
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(c))
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, c: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<S: Into<String>>(self, f: impl FnOnce() -> S) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format-string error constructor (anyhow::anyhow! analog).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted error (anyhow::bail! analog).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+// Make `use crate::util::error::{anyhow, bail}` work like the anyhow prelude.
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("root cause {}", 42))
+    }
+
+    #[test]
+    fn chain_renders_outermost_first() {
+        let e = fails().with_context(|| "loading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: root cause 42");
+    }
+
+    #[test]
+    fn bail_short_circuits() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")?;
+            Ok(s)
+        }
+        assert!(read().is_err());
+    }
+}

@@ -4,6 +4,7 @@
 //! testing harness, and the bench-report harness used by `rust/benches/`.
 
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

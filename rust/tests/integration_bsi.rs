@@ -2,7 +2,7 @@
 //! reference on realistic deformation grids (registration-produced and
 //! synthetic), across the paper's tile-size sweep.
 
-use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::phantom::deform::{pneumoperitoneum, PneumoParams};
 use ffdreg::phantom::{generate, PhantomSpec};
 use ffdreg::volume::Dims;

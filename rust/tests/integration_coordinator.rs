@@ -10,7 +10,7 @@ use ffdreg::util::json::Json;
 fn start_stack(workers: usize, queue: usize, batch: usize) -> (Server, Arc<Scheduler>) {
     let sched = Arc::new(Scheduler::start(
         InterpolationService::new(None),
-        SchedulerConfig { workers, queue_capacity: queue, max_batch: batch },
+        SchedulerConfig { workers, queue_capacity: queue, max_batch: batch, intra_threads: 0 },
     ));
     let server = Server::start("127.0.0.1:0", sched.clone()).expect("bind");
     (server, sched)

@@ -1,10 +1,15 @@
 //! Property-based tests over the BSI implementations and coordinator
 //! invariants, using the in-repo quickcheck harness (proptest substitute —
 //! DESIGN.md §1).
+//!
+//! Every structural property runs across **all eight** `Method::ALL`
+//! schemes, including the chunked z-slab execution path (`bspline::exec`),
+//! which must be bit-identical to whole-volume evaluation.
 
 use std::sync::Arc;
 
-use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::bspline::exec;
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::util::quickcheck::{assert_close, check, Gen};
 use ffdreg::volume::Dims;
 
@@ -24,8 +29,10 @@ fn arbitrary_case(g: &mut Gen) -> (ControlGrid, Dims) {
 
 #[test]
 fn prop_partition_of_unity_every_method() {
-    // Constant grids interpolate to the constant, any tile, any dims.
-    check("partition-of-unity", 0xA11CE, 40, |g| {
+    // Constant grids interpolate to the constant, any tile, any dims — for
+    // all eight schemes (the texture path's quantized fractions still lerp
+    // equal endpoints exactly; the f64 reference rounds once to f32).
+    check("partition-of-unity", 0xA11CE, 30, |g| {
         let (mut grid, vd) = arbitrary_case(g);
         let c = g.f32_in(-50.0, 50.0);
         for i in 0..grid.len() {
@@ -33,12 +40,17 @@ fn prop_partition_of_unity_every_method() {
             grid.y[i] = -c;
             grid.z[i] = 0.5 * c;
         }
-        for m in [Method::Tv, Method::Tt, Method::Ttli, Method::Vt, Method::Vv] {
+        for m in Method::ALL {
             let f = m.instance().interpolate(&grid, vd);
             let tol = 1e-4 * c.abs().max(1.0);
             for (i, &v) in f.x.iter().enumerate() {
                 if (v - c).abs() > tol {
                     return Err(format!("{m:?} x[{i}]={v} expected {c}"));
+                }
+            }
+            for (i, &v) in f.y.iter().enumerate() {
+                if (v + c).abs() > tol {
+                    return Err(format!("{m:?} y[{i}]={v} expected {}", -c));
                 }
             }
         }
@@ -57,6 +69,32 @@ fn prop_all_methods_agree_with_reference() {
             assert_close(&f.x, &r.x, 1e-3, 1e-4).map_err(|e| format!("{m:?} x: {e}"))?;
             assert_close(&f.y, &r.y, 1e-3, 1e-4).map_err(|e| format!("{m:?} y: {e}"))?;
             assert_close(&f.z, &r.z, 1e-3, 1e-4).map_err(|e| format!("{m:?} z: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_chunked_execution_is_bit_identical() {
+    // The tentpole invariant: fanning z-slab chunks across a worker pool
+    // must reproduce the whole-volume output *bit for bit*, for every
+    // scheme, every tile shape, every (partial-tile) volume extent.
+    check("chunked-bit-identical", 0xC4A2, 12, |g| {
+        let (grid, vd) = arbitrary_case(g);
+        let threads = g.usize_in(2, 5);
+        for m in Method::ALL {
+            let imp = m.instance();
+            let whole = exec::interpolate_serial(&*imp, &grid, vd);
+            let chunked = m.par_instance(threads).interpolate(&grid, vd);
+            if whole.x != chunked.x || whole.y != chunked.y || whole.z != chunked.z {
+                return Err(format!("{m:?} chunked (threads={threads}) deviates from whole"));
+            }
+            // The default instance routes through the same engine on the
+            // process-global pool — also bit-identical.
+            let default_path = imp.interpolate(&grid, vd);
+            if whole.x != default_path.x {
+                return Err(format!("{m:?} default-pool path deviates from whole"));
+            }
         }
         Ok(())
     });
@@ -95,13 +133,15 @@ fn prop_linearity_of_interpolation() {
 fn prop_translation_equivariance_along_tiles() {
     // Shifting the control lattice by one tile shifts the field by δ:
     // field(x+δ) computed from grid == field(x) from grid shifted by one CP.
-    check("tile-translation", 0x517AF7, 20, |g| {
+    // Holds for every scheme (including chunked instances): the shifted
+    // evaluation reads a shifted copy of the same neighborhoods with the
+    // same intra-tile fractions.
+    check("tile-translation", 0x517AF7, 10, |g| {
         let t = g.usize_in(2, 6);
         let tiles = g.usize_in(3, 4);
         let vd = Dims::new(t * tiles, t * 2, t * 2);
         let mut grid = ControlGrid::zeros(vd, [t, t, t]);
         grid.randomize(g.rng.next_u64(), 3.0);
-        let f = Method::Ttli.instance().interpolate(&grid, vd);
 
         // Build the shifted grid: storage x-index s' = s+1 (drop last col).
         let mut shifted = grid.clone();
@@ -116,16 +156,24 @@ fn prop_translation_equivariance_along_tiles() {
                 }
             }
         }
-        let fs = Method::Ttli.instance().interpolate(&shifted, vd);
-        // Compare voxel (x, y, z) of shifted vs (x+δ, y, z) of original,
-        // away from the far-x border (where the shifted grid lost a column).
-        for z in 0..vd.nz {
-            for y in 0..vd.ny {
-                for x in 0..vd.nx - 2 * t {
-                    let a = fs.x[vd.idx(x, y, z)];
-                    let b = f.x[vd.idx(x + t, y, z)];
-                    if (a - b).abs() > 1e-4 {
-                        return Err(format!("({x},{y},{z}): {a} vs {b}"));
+        let threads = g.usize_in(2, 4);
+        for m in Method::ALL {
+            // Exercise the chunked path on a per-method pool for half the
+            // schemes, the default path for the rest.
+            let imp = if m as usize % 2 == 0 { m.par_instance(threads) } else { m.instance() };
+            let f = imp.interpolate(&grid, vd);
+            let fs = imp.interpolate(&shifted, vd);
+            // Compare voxel (x, y, z) of shifted vs (x+δ, y, z) of original,
+            // away from the far-x border (where the shifted grid lost a
+            // column).
+            for z in 0..vd.nz {
+                for y in 0..vd.ny {
+                    for x in 0..vd.nx - 2 * t {
+                        let a = fs.x[vd.idx(x, y, z)];
+                        let b = f.x[vd.idx(x + t, y, z)];
+                        if (a - b).abs() > 1e-4 {
+                            return Err(format!("{m:?} ({x},{y},{z}): {a} vs {b}"));
+                        }
                     }
                 }
             }
@@ -146,6 +194,7 @@ fn prop_scheduler_serves_arbitrary_job_mixes() {
                 workers: g.usize_in(1, 3),
                 queue_capacity: 64,
                 max_batch: g.usize_in(1, 8),
+                intra_threads: g.usize_in(1, 3),
             },
         );
         let n = g.usize_in(1, 12);
