@@ -10,12 +10,125 @@
 //! speedup row compares against the TV baseline *at the same thread count*,
 //! so the figure isolates SIMD gains from multi-core gains; the extra
 //! `TV tN vs t1` rows expose the multi-core scaling curve itself.
+//!
+//! Explicit-SIMD axis: pass `-- --simd scalar,sse2,avx2` to pin each
+//! vectorized scheme (TTLI/VT/VV) to explicit ISA paths and measure the
+//! scalar-vs-SIMD speedup directly (entries are clamped to what the
+//! hardware supports; `FFDREG_SIMD` provides the same override for the
+//! default run). With `--threads N,...` the sweep uses the first entry as
+//! the per-instance worker count.
 
+use ffdreg::bspline::exec::Pooled;
 use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::cli::Args;
 use ffdreg::util::bench::{full_scale, parse_thread_axis, Report};
+use ffdreg::util::simd::{self, Isa};
 use ffdreg::util::timer;
 use ffdreg::volume::Dims;
+
+fn time_ns_per_voxel(imp: &dyn Interpolator, vd: Dims, tile: usize) -> f64 {
+    let mut grid = ControlGrid::zeros(vd, [tile, tile, tile]);
+    grid.randomize(3, 5.0);
+    let s = timer::time_adaptive(1, 5, 0.2, || {
+        std::hint::black_box(imp.interpolate(&grid, vd));
+    });
+    s.min() * 1e9 / vd.count() as f64
+}
+
+/// The `--simd` sweep: every vectorized method on every requested ISA path,
+/// with the per-method scalar path as the speedup baseline.
+fn run_simd_sweep(spec: &str, vd: Dims, tiles: &[usize], threads: usize) {
+    let mut isas: Vec<Isa> = Vec::new();
+    for entry in spec.split(',') {
+        match Isa::parse(entry) {
+            Some(isa) => {
+                let isa = isa.clamp_to_hw();
+                if !isas.contains(&isa) {
+                    isas.push(isa);
+                }
+            }
+            None => eprintln!("warning: unknown --simd entry '{entry}' (want scalar|sse2|avx2)"),
+        }
+    }
+    if isas.is_empty() {
+        eprintln!("--simd given but no usable ISA entries; nothing to measure");
+        return;
+    }
+
+    let make = |m: Method, isa: Isa| -> Box<dyn Interpolator + Send + Sync> {
+        let inner = m.instance_with_isa(isa);
+        if threads > 0 {
+            Box::new(Pooled::new(inner, threads))
+        } else {
+            inner
+        }
+    };
+
+    let mut time_rep =
+        Report::new("fig7a_simd_time_per_voxel", "CPU time per voxel: explicit-SIMD ISA paths");
+    let mut speed_rep = Report::new(
+        "fig7b_simd_speedup",
+        "Explicit-SIMD speedup per ISA path (vs each method's scalar path)",
+    );
+
+    // TV baseline (no explicit-SIMD path) for the classic Fig 7 rows.
+    let tv: Box<dyn Interpolator + Send + Sync> =
+        if threads > 0 { Method::Tv.par_instance(threads) } else { Method::Tv.instance() };
+    let tv_ns: Vec<f64> = tiles.iter().map(|&t| time_ns_per_voxel(&*tv, vd, t)).collect();
+    let r = time_rep.row("NiftyReg (TV) CPU [scalar]");
+    for (ti, &t) in tiles.iter().enumerate() {
+        r.cell(&format!("{t}³ ns/vox"), tv_ns[ti]);
+    }
+
+    // ns[method][isa][tile]
+    let methods = Method::SIMD_SET;
+    let mut ns: Vec<Vec<Vec<f64>>> = Vec::new();
+    for &m in &methods {
+        let mut per_isa = Vec::new();
+        for &isa in &isas {
+            let imp = make(m, isa);
+            let per_tile: Vec<f64> =
+                tiles.iter().map(|&t| time_ns_per_voxel(&*imp, vd, t)).collect();
+            let r = time_rep.row(&format!("{} [{isa}]", m.paper_name()));
+            for (ti, &t) in tiles.iter().enumerate() {
+                r.cell(&format!("{t}³ ns/vox"), per_tile[ti]);
+            }
+            per_isa.push(per_tile);
+        }
+        ns.push(per_isa);
+    }
+
+    for (mi, &m) in methods.iter().enumerate() {
+        // SIMD-vs-scalar speedup: each ISA against the first entry of the
+        // sweep (put `scalar` first for the Fig 7 SIMD axis).
+        for (ii, &isa) in isas.iter().enumerate().skip(1) {
+            let r = speed_rep.row(&format!("{} [{isa}] vs [{}]", m.paper_name(), isas[0]));
+            for (ti, &t) in tiles.iter().enumerate() {
+                r.cell(&format!("{t}³"), ns[mi][0][ti] / ns[mi][ii][ti]);
+            }
+        }
+        // Classic Fig 7 framing: each ISA path against the TV baseline.
+        for (ii, &isa) in isas.iter().enumerate() {
+            let r = speed_rep.row(&format!("{} [{isa}] vs TV", m.paper_name()));
+            for (ti, &t) in tiles.iter().enumerate() {
+                r.cell(&format!("{t}³"), tv_ns[ti] / ns[mi][ii][ti]);
+            }
+        }
+    }
+
+    let hw = format!(
+        "hardware best {}, active {}, sweep {:?}, threads {}",
+        simd::detect(),
+        simd::active(),
+        isas.iter().map(|i| i.name()).collect::<Vec<_>>(),
+        threads
+    );
+    time_rep.note(hw.clone());
+    time_rep.finish();
+    speed_rep.note(hw);
+    speed_rep.note("paper Fig 7 SIMD claim: explicit vectorization, not autovectorization, carries VT/VV");
+    speed_rep.finish();
+}
 
 fn main() {
     let args = Args::from_env();
@@ -23,6 +136,16 @@ fn main() {
     let edge = if full_scale() { 160 } else { 96 };
     let vd = Dims::new(edge, edge, edge);
     let threads_axis = parse_thread_axis(args.get("threads"));
+
+    if let Some(spec) = args.get("simd") {
+        // The SIMD axis extends past the paper's 3–7 tile range: 8/12/16
+        // are the tiles where the 8-wide AVX2 rows run full vector steps
+        // (below that the masked-remainder path carries the speedup) —
+        // the "larger tiles fill more SIMD slots" trend of §3.5.
+        let simd_tiles = [3usize, 4, 5, 6, 7, 8, 12, 16];
+        run_simd_sweep(spec, vd, &simd_tiles, threads_axis.first().copied().unwrap_or(0));
+        return;
+    }
 
     let mut time_rep = Report::new("fig7a_cpu_time_per_voxel", "CPU time per voxel vs tile size");
     let mut speed_rep = Report::new("fig7b_cpu_speedup", "CPU speedup over NiftyReg (TV) baseline");
@@ -36,12 +159,7 @@ fn main() {
             let imp = if threads > 0 { m.par_instance(threads) } else { m.instance() };
             let mut per_tile = Vec::new();
             for &t in &tiles {
-                let mut grid = ControlGrid::zeros(vd, [t, t, t]);
-                grid.randomize(3, 5.0);
-                let s = timer::time_adaptive(1, 5, 0.2, || {
-                    std::hint::black_box(imp.interpolate(&grid, vd));
-                });
-                per_tile.push(s.min() * 1e9 / vd.count() as f64);
+                per_tile.push(time_ns_per_voxel(&*imp, vd, t));
             }
             per_method.push(per_tile);
         }
@@ -85,7 +203,10 @@ fn main() {
 
     time_rep.note("paper Fig 7a: time/voxel falls with tile size for every CPU method");
     time_rep.finish();
-    speed_rep.note("paper Fig 7b: VT 4.12x avg (≈5x at 7³, rising with tile size); VV 3.30x avg, best only at 3³");
+    speed_rep.note(format!(
+        "paper Fig 7b: VT 4.12x avg (≈5x at 7³); VV 3.30x avg. Vector kernels ran on [{}] (FFDREG_SIMD to override; `-- --simd scalar,avx2` for the explicit sweep)",
+        simd::active()
+    ));
     if threads_axis.len() > 1 {
         speed_rep.note(format!(
             "thread axis {threads_axis:?}: per-count baselines isolate SIMD vs multi-core gains"

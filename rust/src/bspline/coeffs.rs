@@ -6,6 +6,9 @@
 //! by the intra-tile voxel offset, exactly as the paper stores the scalar
 //! coefficients in constant-memory LUTs.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
 /// The four cubic B-spline basis values at parameter `u ∈ [0,1)`.
 ///
 /// B0(u) = (1−u)³/6, B1(u) = (3u³−6u²+4)/6,
@@ -64,6 +67,17 @@ impl WeightLut {
         WeightLut { delta, w }
     }
 
+    /// Process-wide cached LUT for tile size `delta`. A whole-volume
+    /// interpolation is chunked into many slab calls and a fused batch
+    /// repeats the same δ across jobs, so the table is built once and
+    /// shared instead of rebuilt per slab/job.
+    pub fn shared(delta: usize) -> Arc<WeightLut> {
+        static CACHE: OnceLock<Mutex<HashMap<usize, Arc<WeightLut>>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = cache.lock().unwrap();
+        map.entry(delta).or_insert_with(|| Arc::new(WeightLut::new(delta))).clone()
+    }
+
     #[inline(always)]
     pub fn at(&self, a: usize) -> &[f32] {
         &self.w[a * 4..a * 4 + 4]
@@ -80,21 +94,54 @@ pub struct LerpLut {
     pub delta: usize,
     /// `[g0, g1, s1]` per offset, flattened as `a*3 + k`.
     pub g: Vec<f32>,
+    /// De-interleaved columns of `g` (`g0[a]`, `g1[a]`, `s1[a]` each
+    /// contiguous over the offsets) — the unit-stride layout the
+    /// row-vectorized kernels load `WIDTH` lanes from directly. Each
+    /// column carries [`LerpLut::COL_PAD`] trailing copies of its last
+    /// entry so a masked-remainder vector load at any offset `a < delta`
+    /// stays in bounds for lanes up to 8 wide (padded lanes are computed
+    /// and then discarded by the partial store).
+    pub g0: Vec<f32>,
+    pub g1: Vec<f32>,
+    pub s1: Vec<f32>,
 }
 
 impl LerpLut {
+    /// Trailing padding of the de-interleaved columns (max lane width − 1).
+    pub const COL_PAD: usize = 7;
+
     pub fn new(delta: usize) -> Self {
         assert!(delta >= 1);
         let mut g = Vec::with_capacity(delta * 3);
+        let mut g0 = Vec::with_capacity(delta + Self::COL_PAD);
+        let mut g1 = Vec::with_capacity(delta + Self::COL_PAD);
+        let mut s1v = Vec::with_capacity(delta + Self::COL_PAD);
         for a in 0..delta {
             let b = basis_f64(a as f64 / delta as f64);
             let s0 = b[0] + b[1];
             let s1 = b[2] + b[3];
-            g.push((b[1] / s0) as f32);
-            g.push((b[3] / s1) as f32);
-            g.push(s1 as f32);
+            let (v0, v1, v2) = ((b[1] / s0) as f32, (b[3] / s1) as f32, s1 as f32);
+            g.extend_from_slice(&[v0, v1, v2]);
+            g0.push(v0);
+            g1.push(v1);
+            s1v.push(v2);
         }
-        LerpLut { delta, g }
+        let (l0, l1, l2) = (g0[delta - 1], g1[delta - 1], s1v[delta - 1]);
+        for _ in 0..Self::COL_PAD {
+            g0.push(l0);
+            g1.push(l1);
+            s1v.push(l2);
+        }
+        LerpLut { delta, g, g0, g1, s1: s1v }
+    }
+
+    /// Process-wide cached LUT for tile size `delta` (see
+    /// [`WeightLut::shared`] for why).
+    pub fn shared(delta: usize) -> Arc<LerpLut> {
+        static CACHE: OnceLock<Mutex<HashMap<usize, Arc<LerpLut>>>> = OnceLock::new();
+        let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = cache.lock().unwrap();
+        map.entry(delta).or_insert_with(|| Arc::new(LerpLut::new(delta))).clone()
     }
 
     #[inline(always)]
@@ -171,6 +218,37 @@ mod tests {
                 assert!((lut.at(a)[l] as f64 - b[l]).abs() < 1e-7);
             }
         }
+    }
+
+    #[test]
+    fn lerp_lut_columns_mirror_interleaved_layout() {
+        let lut = LerpLut::new(6);
+        for a in 0..6 {
+            let [g0, g1, s1] = lut.at(a);
+            assert_eq!(lut.g0[a], g0);
+            assert_eq!(lut.g1[a], g1);
+            assert_eq!(lut.s1[a], s1);
+        }
+        // Padding: COL_PAD trailing copies of the last entry, so any
+        // 8-wide load starting below `delta` stays in bounds.
+        assert_eq!(lut.g0.len(), 6 + LerpLut::COL_PAD);
+        for k in 6..lut.g0.len() {
+            assert_eq!(lut.g0[k], lut.g0[5]);
+            assert_eq!(lut.g1[k], lut.g1[5]);
+            assert_eq!(lut.s1[k], lut.s1[5]);
+        }
+    }
+
+    #[test]
+    fn shared_luts_are_cached_and_identical_to_fresh() {
+        let a = LerpLut::shared(5);
+        let b = LerpLut::shared(5);
+        assert!(std::sync::Arc::ptr_eq(&a, &b), "same δ must hit the cache");
+        assert_eq!(a.g, LerpLut::new(5).g);
+        let w1 = WeightLut::shared(7);
+        let w2 = WeightLut::shared(7);
+        assert!(std::sync::Arc::ptr_eq(&w1, &w2));
+        assert_eq!(w1.w, WeightLut::new(7).w);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! bench harnesses.
 
 use super::{exec, reference, texture, tt, ttli, tv, tv_tiling, vt, vv, Interpolator};
+use crate::util::simd::{self, Isa};
 
 /// All BSI schemes, in the order the paper's figures present them.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -45,6 +46,9 @@ impl Method {
     /// The CPU-side comparison set of Figure 7 (plus the NiftyReg CPU
     /// baseline, which our Tv port stands in for).
     pub const CPU_SET: [Method; 3] = [Method::Tv, Method::Vt, Method::Vv];
+
+    /// Methods with an explicit-SIMD kernel (the fig7 scalar-vs-SIMD axis).
+    pub const SIMD_SET: [Method; 3] = [Method::Ttli, Method::Vt, Method::Vv];
 
     /// Stable CLI key.
     pub fn key(&self) -> &'static str {
@@ -101,6 +105,62 @@ impl Method {
     pub fn paper_name(&self) -> &'static str {
         self.instance().name()
     }
+
+    /// The ISA path this method's kernels select at runtime (hardware
+    /// detection clamped by `FFDREG_SIMD`); `None` for methods without an
+    /// explicit-SIMD kernel.
+    pub fn simd_isa(&self) -> Option<Isa> {
+        match self {
+            Method::Ttli | Method::Vt | Method::Vv => Some(simd::active()),
+            _ => None,
+        }
+    }
+
+    /// Instance pinned to a specific ISA path (clamped to what the
+    /// hardware supports) — the A/B axis of the fig7 scalar-vs-SIMD sweep
+    /// and the ISA-agreement tests. Methods without an explicit-SIMD
+    /// kernel ignore `isa` and return the default instance.
+    pub fn instance_with_isa(&self, isa: Isa) -> Box<dyn Interpolator + Send + Sync> {
+        match self {
+            Method::Ttli | Method::Vt | Method::Vv => {
+                Box::new(ForcedIsa { method: *self, isa: isa.clamp_to_hw() })
+            }
+            _ => self.instance(),
+        }
+    }
+}
+
+/// An interpolator pinned to one ISA path instead of `simd::active()`.
+struct ForcedIsa {
+    method: Method,
+    isa: Isa,
+}
+
+impl Interpolator for ForcedIsa {
+    fn name(&self) -> &'static str {
+        self.method.paper_name()
+    }
+
+    fn simd_isa(&self) -> Isa {
+        self.isa
+    }
+
+    fn interpolate_into(
+        &self,
+        grid: &super::ControlGrid,
+        vol_dims: crate::volume::Dims,
+        chunk: exec::ZChunk,
+        out: exec::FieldSlabMut<'_>,
+    ) {
+        match self.method {
+            Method::Ttli => ttli::fill(self.isa, grid, vol_dims, chunk, out),
+            Method::Vt => vt::fill(self.isa, grid, vol_dims, chunk, out),
+            Method::Vv => vv::fill(self.isa, grid, vol_dims, chunk, out),
+            // Unreachable by construction (instance_with_isa only builds
+            // ForcedIsa for the SIMD set); fall back to the default kernel.
+            _ => self.method.instance().interpolate_into(grid, vol_dims, chunk, out),
+        }
+    }
 }
 
 impl std::fmt::Display for Method {
@@ -134,6 +194,45 @@ mod tests {
             assert_eq!(f.dims, vd, "{m:?}");
             assert!(f.x.iter().all(|v| v.is_finite()), "{m:?} produced non-finite");
         }
+    }
+
+    #[test]
+    fn simd_methods_report_an_isa_and_accept_pins() {
+        for m in Method::SIMD_SET {
+            let reported = m.simd_isa().expect("SIMD methods report a path");
+            assert_eq!(reported, simd::active(), "{m:?}");
+            assert_eq!(m.instance().simd_isa(), reported, "{m:?} instance");
+            // A pinned instance reports its pin (clamped to hardware).
+            let pinned = m.instance_with_isa(Isa::Scalar);
+            assert_eq!(pinned.simd_isa(), Isa::Scalar, "{m:?} pinned");
+            // par_instance forwards the inner instance's report.
+            assert_eq!(m.par_instance(2).simd_isa(), reported, "{m:?} pooled");
+        }
+        assert_eq!(Method::Tv.simd_isa(), None);
+        assert_eq!(Method::Reference.instance().simd_isa(), Isa::Scalar);
+    }
+
+    #[test]
+    fn forced_isa_instances_agree_with_default_within_tolerance() {
+        let vd = Dims::new(17, 12, 9);
+        let mut g = ControlGrid::zeros(vd, [5, 4, 3]);
+        g.randomize(7, 5.0);
+        for m in Method::SIMD_SET {
+            let default = m.instance().interpolate(&g, vd);
+            for isa in simd::supported() {
+                let f = m.instance_with_isa(isa).interpolate(&g, vd);
+                assert_eq!(f.dims, vd);
+                assert!(
+                    f.max_abs_diff(&default) < 1e-4,
+                    "{m:?}/{isa:?} deviates by {}",
+                    f.max_abs_diff(&default)
+                );
+            }
+        }
+        // Non-SIMD methods ignore the pin entirely.
+        let a = Method::Tt.instance_with_isa(Isa::Scalar).interpolate(&g, vd);
+        let b = Method::Tt.instance().interpolate(&g, vd);
+        assert_eq!(a.x, b.x);
     }
 
     #[test]

@@ -413,6 +413,10 @@ impl Interpolator for Pooled {
         self.inner.name()
     }
 
+    fn simd_isa(&self) -> crate::util::simd::Isa {
+        self.inner.simd_isa()
+    }
+
     fn interpolate_into(
         &self,
         grid: &ControlGrid,

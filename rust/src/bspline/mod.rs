@@ -74,9 +74,17 @@ impl ControlGrid {
     }
 
     /// Flat index of control point (ci, cj, ck) in *storage* coordinates
-    /// (already offset by +1 relative to Eq. 1's i).
+    /// (already offset by +1 relative to Eq. 1's i). Debug builds assert
+    /// the indices are in range — `Dims::idx` is raw row-major arithmetic,
+    /// so an out-of-range `cj`/`ck` would otherwise silently alias a
+    /// neighboring row (the far-edge hazard of unclamped tile math).
     #[inline(always)]
     pub fn idx(&self, ci: usize, cj: usize, ck: usize) -> usize {
+        debug_assert!(
+            ci < self.dims.nx && cj < self.dims.ny && ck < self.dims.nz,
+            "control-point index ({ci},{cj},{ck}) outside grid dims {:?}",
+            self.dims
+        );
         self.dims.idx(ci, cj, ck)
     }
 
@@ -148,6 +156,14 @@ impl ControlGrid {
 pub trait Interpolator: Sync {
     /// Human-readable method name (matches the paper's terminology).
     fn name(&self) -> &'static str;
+
+    /// The explicit-SIMD ISA path this instance's kernels execute on —
+    /// `Isa::Scalar` for schemes without a vectorized kernel. The vector
+    /// schemes (TTLI/VT/VV) report the runtime-detected path (clamped by
+    /// the `FFDREG_SIMD` override); forced-ISA instances report their pin.
+    fn simd_isa(&self) -> crate::util::simd::Isa {
+        crate::util::simd::Isa::Scalar
+    }
 
     /// Serially fill the z-slab `chunk` of the output field. `out`'s slices
     /// cover exactly the slab's voxels, with index 0 at voxel

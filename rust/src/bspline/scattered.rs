@@ -5,6 +5,16 @@
 //! positions instead of the aligned voxel lattice: basis weights computed
 //! per query, tile-cube gathers batched by sorting queries by tile for the
 //! same register-reuse the aligned TTLI path gets.
+//!
+//! Boundary semantics (shared by both entry points): the owning tile index
+//! is clamped into the grid and the fractional offset is taken relative to
+//! the *clamped* tile. In-domain queries get the standard spline; queries
+//! at/past the volume edge evaluate the boundary tile's polynomial piece
+//! at `u` outside `[0,1)` — a C²-smooth extrapolation that preserves the
+//! partition of unity (the four cubic basis polynomials sum to 1
+//! identically in `u`). `eval_at` and `eval_batch` share the helper and
+//! the accumulation order verbatim, so they agree bit-for-bit everywhere,
+//! including out-of-domain points.
 
 use super::coeffs::basis_f64;
 use super::ControlGrid;
@@ -12,87 +22,83 @@ use super::ControlGrid;
 /// One evaluation query in continuous voxel coordinates.
 pub type Point = [f32; 3];
 
-/// Evaluate at one point (weights on the fly, f64 accumulation).
-pub fn eval_at(grid: &ControlGrid, p: Point) -> [f32; 3] {
-    let [dx, dy, dz] = grid.tile;
-    let qx = (p[0] / dx as f32) as f64;
-    let qy = (p[1] / dy as f32) as f64;
-    let qz = (p[2] / dz as f32) as f64;
-    let (tx, ty, tz) = (qx.floor(), qy.floor(), qz.floor());
-    let wx = basis_f64(qx - tx);
-    let wy = basis_f64(qy - ty);
-    let wz = basis_f64(qz - tz);
-    let cx = (tx as isize).clamp(0, grid.tiles[0] as isize - 1) as usize;
-    let cy = (ty as isize).clamp(0, grid.tiles[1] as isize - 1) as usize;
-    let cz = (tz as isize).clamp(0, grid.tiles[2] as isize - 1) as usize;
-    let mut out = [0.0f64; 3];
+/// Owning (clamped) tile index and per-axis f64 basis weights for a query
+/// point — the single clamping semantic both entry points use. The clamped
+/// tile guarantees the 4×4×4 gather below stays inside the control lattice
+/// (`tile[k] + 3 <= tiles[k] + 2 = dims[k] - 1`).
+#[inline]
+fn tile_and_weights(grid: &ControlGrid, p: Point) -> ([usize; 3], [[f64; 4]; 3]) {
+    let mut tile = [0usize; 3];
+    let mut w = [[0.0f64; 4]; 3];
+    for k in 0..3 {
+        let q = p[k] as f64 / grid.tile[k] as f64;
+        let hi = grid.tiles[k].max(1) as isize - 1;
+        let t = (q.floor() as isize).clamp(0, hi) as usize;
+        w[k] = basis_f64(q - t as f64);
+        tile[k] = t;
+    }
+    (tile, w)
+}
+
+/// 64-term weighted sum over a gathered tile cube, f64 accumulation —
+/// shared verbatim by `eval_at` and `eval_batch` so the two entry points
+/// cannot drift apart numerically.
+#[inline]
+fn weighted_sum(
+    cube_x: &[f32; 64],
+    cube_y: &[f32; 64],
+    cube_z: &[f32; 64],
+    w: &[[f64; 4]; 3],
+) -> [f32; 3] {
+    let mut acc = [0.0f64; 3];
+    let mut k = 0;
     for n in 0..4 {
         for m in 0..4 {
-            let base = grid.idx(cx, cy + m, cz + n);
-            let wzy = wz[n] * wy[m];
+            let wzy = w[2][n] * w[1][m];
             for l in 0..4 {
-                let w = wzy * wx[l];
-                out[0] += w * grid.x[base + l] as f64;
-                out[1] += w * grid.y[base + l] as f64;
-                out[2] += w * grid.z[base + l] as f64;
+                let wv = wzy * w[0][l];
+                acc[0] += wv * cube_x[k] as f64;
+                acc[1] += wv * cube_y[k] as f64;
+                acc[2] += wv * cube_z[k] as f64;
+                k += 1;
             }
         }
     }
-    [out[0] as f32, out[1] as f32, out[2] as f32]
+    [acc[0] as f32, acc[1] as f32, acc[2] as f32]
+}
+
+/// Evaluate at one point (weights on the fly, f64 accumulation).
+pub fn eval_at(grid: &ControlGrid, p: Point) -> [f32; 3] {
+    let (tile, w) = tile_and_weights(grid, p);
+    let (mut cube_x, mut cube_y, mut cube_z) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
+    grid.gather_tile_cube(tile[0], tile[1], tile[2], &mut cube_x, &mut cube_y, &mut cube_z);
+    weighted_sum(&cube_x, &cube_y, &cube_z, &w)
 }
 
 /// Batch evaluation with tile-sorted processing: queries are grouped by
-/// their owning tile so each 4³ cube is gathered once per group (the
-/// thread-per-tile idea applied to scattered queries).
+/// their owning (clamped) tile so each 4³ cube is gathered once per group
+/// (the thread-per-tile idea applied to scattered queries).
 pub fn eval_batch(grid: &ControlGrid, points: &[Point]) -> Vec<[f32; 3]> {
-    let [dx, dy, dz] = grid.tile;
-    // Order of tiles; stable sort keeps deterministic output mapping.
+    let flat = |t: &[usize; 3]| (t[2] * grid.tiles[1] + t[1]) * grid.tiles[0] + t[0];
+    // One tile/weight computation per point, reused by both the sort key
+    // and the evaluation loop; stable sort keeps the output mapping
+    // deterministic.
+    let tw: Vec<([usize; 3], [[f64; 4]; 3])> =
+        points.iter().map(|&p| tile_and_weights(grid, p)).collect();
     let mut order: Vec<usize> = (0..points.len()).collect();
-    let tile_of = |p: &Point| {
-        let tx = ((p[0] / dx as f32).floor() as isize).clamp(0, grid.tiles[0] as isize - 1);
-        let ty = ((p[1] / dy as f32).floor() as isize).clamp(0, grid.tiles[1] as isize - 1);
-        let tz = ((p[2] / dz as f32).floor() as isize).clamp(0, grid.tiles[2] as isize - 1);
-        ((tz * grid.tiles[1] as isize + ty) * grid.tiles[0] as isize + tx) as usize
-    };
-    order.sort_by_key(|&i| tile_of(&points[i]));
+    order.sort_by_key(|&i| flat(&tw[i].0));
 
     let mut out = vec![[0.0f32; 3]; points.len()];
-    let mut cube_x = [0.0f32; 64];
-    let mut cube_y = [0.0f32; 64];
-    let mut cube_z = [0.0f32; 64];
+    let (mut cube_x, mut cube_y, mut cube_z) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
     let mut current_tile = usize::MAX;
     for &i in &order {
-        let p = points[i];
-        let t = tile_of(&p);
+        let (tile, w) = &tw[i];
+        let t = flat(tile);
         if t != current_tile {
-            let tx = t % grid.tiles[0];
-            let ty = (t / grid.tiles[0]) % grid.tiles[1];
-            let tz = t / (grid.tiles[0] * grid.tiles[1]);
-            grid.gather_tile_cube(tx, ty, tz, &mut cube_x, &mut cube_y, &mut cube_z);
+            grid.gather_tile_cube(tile[0], tile[1], tile[2], &mut cube_x, &mut cube_y, &mut cube_z);
             current_tile = t;
         }
-        // Weights relative to the (clamped) owning tile.
-        let tx = (t % grid.tiles[0]) as f64;
-        let ty = ((t / grid.tiles[0]) % grid.tiles[1]) as f64;
-        let tz = (t / (grid.tiles[0] * grid.tiles[1])) as f64;
-        let wx = basis_f64(p[0] as f64 / dx as f64 - tx);
-        let wy = basis_f64(p[1] as f64 / dy as f64 - ty);
-        let wz = basis_f64(p[2] as f64 / dz as f64 - tz);
-        let mut acc = [0.0f64; 3];
-        let mut k = 0;
-        for n in 0..4 {
-            for m in 0..4 {
-                let wzy = wz[n] * wy[m];
-                for l in 0..4 {
-                    let w = wzy * wx[l];
-                    acc[0] += w * cube_x[k] as f64;
-                    acc[1] += w * cube_y[k] as f64;
-                    acc[2] += w * cube_z[k] as f64;
-                    k += 1;
-                }
-            }
-        }
-        out[i] = [acc[0] as f32, acc[1] as f32, acc[2] as f32];
+        out[i] = weighted_sum(&cube_x, &cube_y, &cube_z, w);
     }
     out
 }
@@ -134,9 +140,73 @@ mod tests {
         let batch = eval_batch(&g, &pts);
         for (p, b) in pts.iter().zip(&batch) {
             let single = eval_at(&g, *p);
+            assert_eq!(single, *b, "entry points must agree bitwise at {p:?}");
+        }
+    }
+
+    #[test]
+    fn batch_equals_pointwise_at_and_past_boundaries() {
+        // The regression for the clamping-mismatch bug: the old eval_at
+        // mixed weights from the unclamped tile with control points from
+        // the clamped tile, so boundary/out-of-domain queries disagreed
+        // with eval_batch. Both entry points now share one semantic.
+        let (g, vd) = grid();
+        let (ex, ey, ez) = (vd.nx as f32, vd.ny as f32, vd.nz as f32);
+        let pts: Vec<Point> = vec![
+            [0.0, 0.0, 0.0],
+            [ex - 1.0, ey - 1.0, ez - 1.0],
+            [ex - 0.5, ey - 0.5, ez - 0.5], // inside the last voxel
+            [ex, ey, ez],                   // exactly at the far edge
+            [ex + 3.0, 2.0, 5.0],           // past the edge on one axis
+            [-2.5, ey + 1.25, ez / 2.0],    // below and above
+            [-10.0, -10.0, -10.0],          // far out of domain
+            [ex + 20.0, ey + 20.0, ez + 20.0],
+        ];
+        let batch = eval_batch(&g, &pts);
+        for (p, b) in pts.iter().zip(&batch) {
+            let single = eval_at(&g, *p);
+            assert_eq!(single, *b, "boundary point {p:?}");
+            assert!(single.iter().all(|v| v.is_finite()), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn partition_of_unity_holds_out_of_domain() {
+        // Constant control grids must interpolate to the constant even for
+        // extrapolated queries: the four cubic basis polynomials sum to 1
+        // identically, so the clamped-tile polynomial extension keeps the
+        // partition of unity.
+        let (mut g, vd) = grid();
+        for i in 0..g.len() {
+            g.x[i] = 2.5;
+            g.y[i] = -7.0;
+            g.z[i] = 0.375;
+        }
+        for p in [
+            [-5.0f32, -3.0, -1.0],
+            [vd.nx as f32 + 4.0, vd.ny as f32, vd.nz as f32 + 9.0],
+            [vd.nx as f32 / 2.0, -8.0, vd.nz as f32 + 2.0],
+        ] {
+            let v = eval_at(&g, p);
+            assert!((v[0] - 2.5).abs() < 1e-4, "{p:?} -> {v:?}");
+            assert!((v[1] + 7.0).abs() < 1e-4, "{p:?} -> {v:?}");
+            assert!((v[2] - 0.375).abs() < 1e-4, "{p:?} -> {v:?}");
+        }
+    }
+
+    #[test]
+    fn extrapolation_is_continuous_across_the_far_edge() {
+        // Walking through the boundary must not jump: the boundary tile's
+        // polynomial piece extends smoothly past the edge.
+        let (g, vd) = grid();
+        let mut prev = eval_at(&g, [vd.nx as f32 - 2.0, 7.0, 11.0]);
+        for i in 1..=40 {
+            let p = [vd.nx as f32 - 2.0 + i as f32 * 0.1, 7.0, 11.0];
+            let v = eval_at(&g, p);
             for k in 0..3 {
-                assert!((single[k] - b[k]).abs() < 1e-4, "{p:?}");
+                assert!((v[k] - prev[k]).abs() < 0.5, "jump at {p:?}");
             }
+            prev = v;
         }
     }
 

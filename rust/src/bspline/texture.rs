@@ -67,9 +67,9 @@ impl Interpolator for TextureSim {
         check_extent(grid, vol_dims);
         debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
         let [dx, dy, dz] = grid.tile;
-        let lx = LerpLut::new(dx);
-        let ly = LerpLut::new(dy);
-        let lz = LerpLut::new(dz);
+        let lx = LerpLut::shared(dx);
+        let ly = LerpLut::shared(dy);
+        let lz = LerpLut::shared(dz);
         let mut i = 0;
         for z in chunk.z0..chunk.z1 {
             let tz = z / dz;

@@ -58,9 +58,9 @@ impl Interpolator for Tt {
         check_extent(grid, vol_dims);
         debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
         let [dx, dy, dz] = grid.tile;
-        let lx = WeightLut::new(dx);
-        let ly = WeightLut::new(dy);
-        let lz = WeightLut::new(dz);
+        let lx = WeightLut::shared(dx);
+        let ly = WeightLut::shared(dy);
+        let lz = WeightLut::shared(dz);
         // Walk the tile z-layers intersecting the slab; a chunk boundary
         // inside a tile just re-gathers that tile's cube (same arithmetic).
         for_each_tile_layer(chunk, dz, |tz, lz_lo, lz_hi| {

@@ -55,9 +55,9 @@ impl Interpolator for Tv {
         check_extent(grid, vol_dims);
         debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
         let [dx, dy, dz] = grid.tile;
-        let lx = WeightLut::new(dx);
-        let ly = WeightLut::new(dy);
-        let lz = WeightLut::new(dz);
+        let lx = WeightLut::shared(dx);
+        let ly = WeightLut::shared(dy);
+        let lz = WeightLut::shared(dz);
         let mut i = 0;
         for z in chunk.z0..chunk.z1 {
             let tz = z / dz;

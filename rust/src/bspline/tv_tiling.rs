@@ -28,9 +28,9 @@ impl Interpolator for TvTiling {
         check_extent(grid, vol_dims);
         debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
         let [dx, dy, dz] = grid.tile;
-        let lx = WeightLut::new(dx);
-        let ly = WeightLut::new(dy);
-        let lz = WeightLut::new(dz);
+        let lx = WeightLut::shared(dx);
+        let ly = WeightLut::shared(dy);
+        let lz = WeightLut::shared(dz);
         // "Shared memory" staging buffer, reused across the slab's tiles.
         let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
         for_each_tile_layer(chunk, dz, |tz, lz_lo, lz_hi| {

@@ -4,14 +4,23 @@
 //! TT) and processes the `δx` voxels of each tile row *simultaneously*: the
 //! y/z part of the interpolation is shared by the whole row, so it is
 //! reduced first (per 4 x-columns), leaving a 4-point 1D interpolation per
-//! output voxel whose inner loop over the row is straight-line vectorizable
-//! (the paper's SIMD vector across x). Larger tiles fill more SIMD slots —
-//! the Figure 7 trend.
+//! output voxel whose inner loop over the row runs on explicit SIMD lanes
+//! (`util::simd` — the paper's SIMD vector across x). Larger tiles fill
+//! more SIMD slots — the Figure 7 trend.
+//!
+//! The shared y/z reduction is scalar per-row work (identical for every
+//! voxel of the row); only the per-voxel 3-lerp stage is lane-parallel, so
+//! that stage is the one written against the [`Simd`] API, with the LUT's
+//! de-interleaved `g0`/`g1`/`s1` columns loaded `WIDTH` lanes at a time.
+//! Rows narrower than the vector (tile sizes 3–7 on AVX2, and border
+//! tiles) run as one masked-remainder vector step over the padded columns
+//! with a partial store, so the SIMD unit is engaged at every tile size.
 
 use super::coeffs::LerpLut;
-use super::exec::{for_each_tile_layer, slab_index, FieldSlabMut, ZChunk};
+use super::exec::{slab_index, FieldSlabMut, ZChunk};
 use super::ttli::lerp;
 use super::{check_extent, ControlGrid, Interpolator};
+use crate::util::simd::{self, Isa, ScalarIsa, Simd};
 use crate::volume::Dims;
 
 pub struct Vt;
@@ -38,9 +47,149 @@ fn reduce_yz(c: &[f32; 64], l: usize, gy: [f32; 3], gz: [f32; 3]) -> f32 {
     lerp(y0, y1, sz)
 }
 
+/// The slab kernel, generic over the ISA (tile-layer walk inlined so the
+/// whole body monomorphizes into the `#[target_feature]` wrappers).
+#[inline(always)]
+unsafe fn fill_generic<S: Simd>(
+    grid: &ControlGrid,
+    vol_dims: Dims,
+    chunk: ZChunk,
+    out: FieldSlabMut<'_>,
+) {
+    let FieldSlabMut { x: ox, y: oy, z: oz } = out;
+    let [dx, dy, dz] = grid.tile;
+    let lx = LerpLut::shared(dx);
+    let ly = LerpLut::shared(dy);
+    let lz = LerpLut::shared(dz);
+    let mut zb = chunk.z0;
+    while zb < chunk.z1 {
+        let tz = zb / dz;
+        let zt = ((tz + 1) * dz).min(chunk.z1);
+        let (lz_lo, lz_hi) = (zb - tz * dz, zt - tz * dz);
+        for ty in 0..grid.tiles[1] {
+            let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
+            if y_lim == 0 {
+                continue;
+            }
+            for tx in 0..grid.tiles[0] {
+                let x_lim = vol_dims.nx.saturating_sub(tx * dx).min(dx);
+                if x_lim == 0 {
+                    continue;
+                }
+                let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
+                grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
+                for lz_ in lz_lo..lz_hi {
+                    let gz = lz.at(lz_);
+                    for ly_ in 0..y_lim {
+                        let gy = ly.at(ly_);
+                        // Shared y/z reduction: 4 x-columns per component.
+                        let colx: [f32; 4] = std::array::from_fn(|l| reduce_yz(&cx, l, gy, gz));
+                        let coly: [f32; 4] = std::array::from_fn(|l| reduce_yz(&cy, l, gy, gz));
+                        let colz: [f32; 4] = std::array::from_fn(|l| reduce_yz(&cz, l, gy, gz));
+                        let row =
+                            slab_index(vol_dims, chunk, tx * dx, ty * dy + ly_, tz * dz + lz_);
+                        // Vector loop over the tile row: 9 lane-parallel
+                        // lerps per WIDTH voxels, column values broadcast.
+                        let (c0x, c1x, c2x, c3x) = (
+                            S::splat(colx[0]),
+                            S::splat(colx[1]),
+                            S::splat(colx[2]),
+                            S::splat(colx[3]),
+                        );
+                        let (c0y, c1y, c2y, c3y) = (
+                            S::splat(coly[0]),
+                            S::splat(coly[1]),
+                            S::splat(coly[2]),
+                            S::splat(coly[3]),
+                        );
+                        let (c0z, c1z, c2z, c3z) = (
+                            S::splat(colz[0]),
+                            S::splat(colz[1]),
+                            S::splat(colz[2]),
+                            S::splat(colz[3]),
+                        );
+                        let mut a = 0;
+                        while a + S::WIDTH <= x_lim {
+                            let g0 = S::load(&lx.g0[a..]);
+                            let g1 = S::load(&lx.g1[a..]);
+                            let s = S::load(&lx.s1[a..]);
+                            let vx = S::lerp(S::lerp(c0x, c1x, g0), S::lerp(c2x, c3x, g1), s);
+                            let vy = S::lerp(S::lerp(c0y, c1y, g0), S::lerp(c2y, c3y, g1), s);
+                            let vz = S::lerp(S::lerp(c0z, c1z, g0), S::lerp(c2z, c3z, g1), s);
+                            S::store(&mut ox[row + a..], vx);
+                            S::store(&mut oy[row + a..], vy);
+                            S::store(&mut oz[row + a..], vz);
+                            a += S::WIDTH;
+                        }
+                        if a < x_lim {
+                            // Masked remainder: rows narrower than the
+                            // vector (δ < WIDTH, and every border tile)
+                            // still run in lanes — padded LUT columns
+                            // keep the loads in bounds; only live lanes
+                            // are stored.
+                            let g0 = S::load(&lx.g0[a..]);
+                            let g1 = S::load(&lx.g1[a..]);
+                            let s = S::load(&lx.s1[a..]);
+                            let live = x_lim - a;
+                            let mut buf = [0.0f32; 8];
+                            let vx = S::lerp(S::lerp(c0x, c1x, g0), S::lerp(c2x, c3x, g1), s);
+                            S::store(&mut buf, vx);
+                            ox[row + a..row + x_lim].copy_from_slice(&buf[..live]);
+                            let vy = S::lerp(S::lerp(c0y, c1y, g0), S::lerp(c2y, c3y, g1), s);
+                            S::store(&mut buf, vy);
+                            oy[row + a..row + x_lim].copy_from_slice(&buf[..live]);
+                            let vz = S::lerp(S::lerp(c0z, c1z, g0), S::lerp(c2z, c3z, g1), s);
+                            S::store(&mut buf, vz);
+                            oz[row + a..row + x_lim].copy_from_slice(&buf[..live]);
+                        }
+                    }
+                }
+            }
+        }
+        zb = zt;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn fill_avx2(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
+    fill_generic::<simd::Avx2Isa>(grid, vol_dims, chunk, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn fill_sse2(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
+    fill_generic::<simd::Sse2Isa>(grid, vol_dims, chunk, out)
+}
+
+/// Fill `out` on an explicit ISA path (clamped to the hardware).
+pub(crate) fn fill(
+    isa: Isa,
+    grid: &ControlGrid,
+    vol_dims: Dims,
+    chunk: ZChunk,
+    out: FieldSlabMut<'_>,
+) {
+    check_extent(grid, vol_dims);
+    debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
+    match isa.clamp_to_hw() {
+        // SAFETY: clamp_to_hw guarantees the CPU supports the chosen path.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { fill_avx2(grid, vol_dims, chunk, out) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { fill_sse2(grid, vol_dims, chunk, out) },
+        // SAFETY: the scalar path uses no intrinsics.
+        _ => unsafe { fill_generic::<ScalarIsa>(grid, vol_dims, chunk, out) },
+    }
+}
+
 impl Interpolator for Vt {
     fn name(&self) -> &'static str {
         "Vector per Tile"
+    }
+
+    fn simd_isa(&self) -> Isa {
+        simd::active()
     }
 
     fn interpolate_into(
@@ -50,67 +199,7 @@ impl Interpolator for Vt {
         chunk: ZChunk,
         out: FieldSlabMut<'_>,
     ) {
-        check_extent(grid, vol_dims);
-        debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
-        let [dx, dy, dz] = grid.tile;
-        let lx = LerpLut::new(dx);
-        let ly = LerpLut::new(dy);
-        let lz = LerpLut::new(dz);
-        // De-interleave the x-LUT into three contiguous per-offset arrays so
-        // the row loop vectorizes cleanly.
-        let gx0: Vec<f32> = (0..dx).map(|a| lx.at(a)[0]).collect();
-        let gx1: Vec<f32> = (0..dx).map(|a| lx.at(a)[1]).collect();
-        let sx: Vec<f32> = (0..dx).map(|a| lx.at(a)[2]).collect();
-        for_each_tile_layer(chunk, dz, |tz, lz_lo, lz_hi| {
-            for ty in 0..grid.tiles[1] {
-                let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
-                if y_lim == 0 {
-                    continue;
-                }
-                for tx in 0..grid.tiles[0] {
-                    let x_lim = vol_dims.nx.saturating_sub(tx * dx).min(dx);
-                    if x_lim == 0 {
-                        continue;
-                    }
-                    let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
-                    grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
-                    for lz_ in lz_lo..lz_hi {
-                        let gz = lz.at(lz_);
-                        for ly_ in 0..y_lim {
-                            let gy = ly.at(ly_);
-                            // Shared y/z reduction: 4 x-columns per component.
-                            let colx: [f32; 4] =
-                                std::array::from_fn(|l| reduce_yz(&cx, l, gy, gz));
-                            let coly: [f32; 4] =
-                                std::array::from_fn(|l| reduce_yz(&cy, l, gy, gz));
-                            let colz: [f32; 4] =
-                                std::array::from_fn(|l| reduce_yz(&cz, l, gy, gz));
-                            let row = slab_index(
-                                vol_dims,
-                                chunk,
-                                tx * dx,
-                                ty * dy + ly_,
-                                tz * dz + lz_,
-                            );
-                            // Vector loop over the tile row: 3 lerps per
-                            // component, no cross-iteration dependency.
-                            for a in 0..x_lim {
-                                let (g0, g1, s) = (gx0[a], gx1[a], sx[a]);
-                                let vx =
-                                    lerp(lerp(colx[0], colx[1], g0), lerp(colx[2], colx[3], g1), s);
-                                let vy =
-                                    lerp(lerp(coly[0], coly[1], g0), lerp(coly[2], coly[3], g1), s);
-                                let vz =
-                                    lerp(lerp(colz[0], colz[1], g0), lerp(colz[2], colz[3], g1), s);
-                                out.x[row + a] = vx;
-                                out.y[row + a] = vy;
-                                out.z[row + a] = vz;
-                            }
-                        }
-                    }
-                }
-            }
-        });
+        fill(simd::active(), grid, vol_dims, chunk, out);
     }
 }
 
@@ -149,5 +238,25 @@ mod tests {
         let f = Vt.interpolate(&g, vd);
         let r = interpolate_f64(&g, vd);
         assert!(f.mean_abs_diff_f64(&r.x, &r.y, &r.z) < 1e-5);
+    }
+
+    #[test]
+    fn every_isa_path_close_to_reference_and_scalar() {
+        use crate::volume::VectorField;
+        let vd = Dims::new(26, 13, 9); // partial border tiles
+        let mut g = ControlGrid::zeros(vd, [7, 5, 4]);
+        g.randomize(51, 5.0);
+        let r = interpolate_f64(&g, vd);
+        let mut scalar = VectorField::zeros(vd);
+        fill(Isa::Scalar, &g, vd, ZChunk::full(vd), FieldSlabMut::whole(&mut scalar));
+        for isa in simd::supported() {
+            let mut f = VectorField::zeros(vd);
+            fill(isa, &g, vd, ZChunk::full(vd), FieldSlabMut::whole(&mut f));
+            assert!(
+                f.mean_abs_diff_f64(&r.x, &r.y, &r.z) < 1e-5,
+                "{isa:?} vs f64 reference"
+            );
+            assert!(f.max_abs_diff(&scalar) < 1e-4, "{isa:?} vs scalar path");
+        }
     }
 }

@@ -5,11 +5,18 @@
 //! the gathered cube is transposed once per tile into eight corner lane
 //! arrays (`corner[dx+2dy+4dz][lane]`, lane = sub-cube index), then every
 //! voxel performs 7 *vector* lerps of width 8 plus the scalar 9th trilerp.
+//!
+//! On the explicit-SIMD layer (`util::simd`) the 8 sub-cube lanes map to
+//! one AVX2 register, two SSE2 registers, or eight scalar steps — the loop
+//! is written once over `8 / WIDTH` register chunks. The combining 9th
+//! trilerp uses the ISA-matched scalar lerp ([`Simd::lerp1`]), which keeps
+//! VV bit-identical to TTLI *within* each ISA path (they evaluate the same
+//! lerp tree).
 
 use super::coeffs::LerpLut;
-use super::exec::{for_each_tile_layer, slab_index, FieldSlabMut, ZChunk};
-use super::ttli::lerp;
+use super::exec::{slab_index, FieldSlabMut, ZChunk};
 use super::{check_extent, ControlGrid, Interpolator};
+use crate::util::simd::{self, Isa, ScalarIsa, Simd};
 use crate::volume::Dims;
 
 pub struct Vv;
@@ -30,37 +37,146 @@ fn lanes(cube: &[f32; 64]) -> [[f32; 8]; 8] {
     out
 }
 
-/// Vector lerp over the 8 lanes — compiles to a SIMD fma on AVX targets.
+/// Evaluate one component from the lane-transposed cube: 7 vector lerps
+/// over the 8 sub-cube lanes (in `8 / WIDTH` register chunks), then the
+/// scalar 9th trilerp combining the lane results.
 #[inline(always)]
-fn vlerp(a: &[f32; 8], b: &[f32; 8], t: &[f32; 8]) -> [f32; 8] {
-    std::array::from_fn(|q| t[q].mul_add(b[q] - a[q], a[q]))
+unsafe fn vv_component_v<S: Simd>(
+    ln: &[[f32; 8]; 8],
+    fx: &[f32; 8],
+    fy: &[f32; 8],
+    fz: &[f32; 8],
+    s: [f32; 3],
+) -> f32 {
+    let mut t = [0.0f32; 8];
+    let mut k = 0;
+    while k < 8 {
+        let vfx = S::load(&fx[k..]);
+        let vfy = S::load(&fy[k..]);
+        let vfz = S::load(&fz[k..]);
+        let x00 = S::lerp(S::load(&ln[0][k..]), S::load(&ln[1][k..]), vfx);
+        let x10 = S::lerp(S::load(&ln[2][k..]), S::load(&ln[3][k..]), vfx);
+        let x01 = S::lerp(S::load(&ln[4][k..]), S::load(&ln[5][k..]), vfx);
+        let x11 = S::lerp(S::load(&ln[6][k..]), S::load(&ln[7][k..]), vfx);
+        let y0 = S::lerp(x00, x10, vfy);
+        let y1 = S::lerp(x01, x11, vfy);
+        S::store(&mut t[k..], S::lerp(y0, y1, vfz));
+        k += S::WIDTH;
+    }
+    // 9th trilerp combining the 8 lane results (scalar, ISA-matched
+    // rounding so it agrees with TTLI's combine stage lane for lane).
+    let [sx, sy, sz] = s;
+    let a0 = S::lerp1(t[0], t[1], sx);
+    let a1 = S::lerp1(t[2], t[3], sx);
+    let a2 = S::lerp1(t[4], t[5], sx);
+    let a3 = S::lerp1(t[6], t[7], sx);
+    let b0 = S::lerp1(a0, a1, sy);
+    let b1 = S::lerp1(a2, a3, sy);
+    S::lerp1(b0, b1, sz)
 }
 
-/// Evaluate one component from the lane-transposed cube.
+/// The slab kernel, generic over the ISA (tile-layer walk inlined so the
+/// whole body monomorphizes into the `#[target_feature]` wrappers).
 #[inline(always)]
-fn vv_component(ln: &[[f32; 8]; 8], fx: &[f32; 8], fy: &[f32; 8], fz: &[f32; 8], s: [f32; 3]) -> f32 {
-    // 7 vector lerps: all 8 sub-cube trilerps at once.
-    let x00 = vlerp(&ln[0], &ln[1], fx);
-    let x10 = vlerp(&ln[2], &ln[3], fx);
-    let x01 = vlerp(&ln[4], &ln[5], fx);
-    let x11 = vlerp(&ln[6], &ln[7], fx);
-    let y0 = vlerp(&x00, &x10, fy);
-    let y1 = vlerp(&x01, &x11, fy);
-    let t = vlerp(&y0, &y1, fz);
-    // 9th trilerp combining the 8 lane results (scalar).
-    let [sx, sy, sz] = s;
-    let a0 = lerp(t[0], t[1], sx);
-    let a1 = lerp(t[2], t[3], sx);
-    let a2 = lerp(t[4], t[5], sx);
-    let a3 = lerp(t[6], t[7], sx);
-    let b0 = lerp(a0, a1, sy);
-    let b1 = lerp(a2, a3, sy);
-    lerp(b0, b1, sz)
+unsafe fn fill_generic<S: Simd>(
+    grid: &ControlGrid,
+    vol_dims: Dims,
+    chunk: ZChunk,
+    out: FieldSlabMut<'_>,
+) {
+    let FieldSlabMut { x: ox, y: oy, z: oz } = out;
+    let [dx, dy, dz] = grid.tile;
+    let lx = LerpLut::shared(dx);
+    let ly = LerpLut::shared(dy);
+    let lz = LerpLut::shared(dz);
+    let mut zb = chunk.z0;
+    while zb < chunk.z1 {
+        let tz = zb / dz;
+        let zt = ((tz + 1) * dz).min(chunk.z1);
+        let (lz_lo, lz_hi) = (zb - tz * dz, zt - tz * dz);
+        for ty in 0..grid.tiles[1] {
+            let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
+            if y_lim == 0 {
+                continue;
+            }
+            for tx in 0..grid.tiles[0] {
+                let x_lim = vol_dims.nx.saturating_sub(tx * dx).min(dx);
+                if x_lim == 0 {
+                    continue;
+                }
+                let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
+                grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
+                let lnx = lanes(&cx);
+                let lny = lanes(&cy);
+                let lnz = lanes(&cz);
+                for lz_ in lz_lo..lz_hi {
+                    let [gz0, gz1, sz] = lz.at(lz_);
+                    // fz per lane: lane q uses gz0 if its c-bit is 0.
+                    let fz: [f32; 8] =
+                        std::array::from_fn(|q| if q & 4 == 0 { gz0 } else { gz1 });
+                    for ly_ in 0..y_lim {
+                        let [gy0, gy1, sy] = ly.at(ly_);
+                        let fy: [f32; 8] =
+                            std::array::from_fn(|q| if q & 2 == 0 { gy0 } else { gy1 });
+                        let row =
+                            slab_index(vol_dims, chunk, tx * dx, ty * dy + ly_, tz * dz + lz_);
+                        for lx_ in 0..x_lim {
+                            let [gx0, gx1, sx] = lx.at(lx_);
+                            let fx: [f32; 8] =
+                                std::array::from_fn(|q| if q & 1 == 0 { gx0 } else { gx1 });
+                            let s = [sx, sy, sz];
+                            ox[row + lx_] = vv_component_v::<S>(&lnx, &fx, &fy, &fz, s);
+                            oy[row + lx_] = vv_component_v::<S>(&lny, &fx, &fy, &fz, s);
+                            oz[row + lx_] = vv_component_v::<S>(&lnz, &fx, &fy, &fz, s);
+                        }
+                    }
+                }
+            }
+        }
+        zb = zt;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn fill_avx2(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
+    fill_generic::<simd::Avx2Isa>(grid, vol_dims, chunk, out)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn fill_sse2(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
+    fill_generic::<simd::Sse2Isa>(grid, vol_dims, chunk, out)
+}
+
+/// Fill `out` on an explicit ISA path (clamped to the hardware).
+pub(crate) fn fill(
+    isa: Isa,
+    grid: &ControlGrid,
+    vol_dims: Dims,
+    chunk: ZChunk,
+    out: FieldSlabMut<'_>,
+) {
+    check_extent(grid, vol_dims);
+    debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
+    match isa.clamp_to_hw() {
+        // SAFETY: clamp_to_hw guarantees the CPU supports the chosen path.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { fill_avx2(grid, vol_dims, chunk, out) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { fill_sse2(grid, vol_dims, chunk, out) },
+        // SAFETY: the scalar path uses no intrinsics.
+        _ => unsafe { fill_generic::<ScalarIsa>(grid, vol_dims, chunk, out) },
+    }
 }
 
 impl Interpolator for Vv {
     fn name(&self) -> &'static str {
         "Vector per Voxel"
+    }
+
+    fn simd_isa(&self) -> Isa {
+        simd::active()
     }
 
     fn interpolate_into(
@@ -70,58 +186,7 @@ impl Interpolator for Vv {
         chunk: ZChunk,
         out: FieldSlabMut<'_>,
     ) {
-        check_extent(grid, vol_dims);
-        debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
-        let [dx, dy, dz] = grid.tile;
-        let lx = LerpLut::new(dx);
-        let ly = LerpLut::new(dy);
-        let lz = LerpLut::new(dz);
-        for_each_tile_layer(chunk, dz, |tz, lz_lo, lz_hi| {
-            for ty in 0..grid.tiles[1] {
-                let y_lim = vol_dims.ny.saturating_sub(ty * dy).min(dy);
-                if y_lim == 0 {
-                    continue;
-                }
-                for tx in 0..grid.tiles[0] {
-                    let x_lim = vol_dims.nx.saturating_sub(tx * dx).min(dx);
-                    if x_lim == 0 {
-                        continue;
-                    }
-                    let (mut cx, mut cy, mut cz) = ([0.0f32; 64], [0.0f32; 64], [0.0f32; 64]);
-                    grid.gather_tile_cube(tx, ty, tz, &mut cx, &mut cy, &mut cz);
-                    let lnx = lanes(&cx);
-                    let lny = lanes(&cy);
-                    let lnz = lanes(&cz);
-                    for lz_ in lz_lo..lz_hi {
-                        let [gz0, gz1, sz] = lz.at(lz_);
-                        // fz per lane: lane q uses gz0 if its c-bit is 0.
-                        let fz: [f32; 8] =
-                            std::array::from_fn(|q| if q & 4 == 0 { gz0 } else { gz1 });
-                        for ly_ in 0..y_lim {
-                            let [gy0, gy1, sy] = ly.at(ly_);
-                            let fy: [f32; 8] =
-                                std::array::from_fn(|q| if q & 2 == 0 { gy0 } else { gy1 });
-                            let row = slab_index(
-                                vol_dims,
-                                chunk,
-                                tx * dx,
-                                ty * dy + ly_,
-                                tz * dz + lz_,
-                            );
-                            for lx_ in 0..x_lim {
-                                let [gx0, gx1, sx] = lx.at(lx_);
-                                let fx: [f32; 8] =
-                                    std::array::from_fn(|q| if q & 1 == 0 { gx0 } else { gx1 });
-                                let s = [sx, sy, sz];
-                                out.x[row + lx_] = vv_component(&lnx, &fx, &fy, &fz, s);
-                                out.y[row + lx_] = vv_component(&lny, &fx, &fy, &fz, s);
-                                out.z[row + lx_] = vv_component(&lnz, &fx, &fy, &fz, s);
-                            }
-                        }
-                    }
-                }
-            }
-        });
+        fill(simd::active(), grid, vol_dims, chunk, out);
     }
 }
 
@@ -134,7 +199,8 @@ mod tests {
     #[test]
     fn identical_to_ttli_bitwise() {
         // VV evaluates exactly the same lerp tree as TTLI, just with the 8
-        // sub-cubes laid out as lanes — results must match bit for bit.
+        // sub-cubes laid out as lanes — results must match bit for bit on
+        // whichever ISA path is active (both dispatch through the same one).
         let vd = Dims::new(20, 15, 10);
         let mut g = ControlGrid::zeros(vd, [5, 5, 5]);
         g.randomize(17, 6.0);
@@ -143,6 +209,23 @@ mod tests {
         assert_eq!(a.x, b.x);
         assert_eq!(a.y, b.y);
         assert_eq!(a.z, b.z);
+    }
+
+    #[test]
+    fn identical_to_ttli_bitwise_on_every_isa() {
+        use crate::volume::VectorField;
+        let vd = Dims::new(13, 11, 9); // partial border tiles
+        let mut g = ControlGrid::zeros(vd, [4, 3, 5]);
+        g.randomize(29, 5.0);
+        for isa in simd::supported() {
+            let mut a = VectorField::zeros(vd);
+            fill(isa, &g, vd, ZChunk::full(vd), FieldSlabMut::whole(&mut a));
+            let mut b = VectorField::zeros(vd);
+            crate::bspline::ttli::fill(isa, &g, vd, ZChunk::full(vd), FieldSlabMut::whole(&mut b));
+            assert_eq!(a.x, b.x, "{isa:?}");
+            assert_eq!(a.y, b.y, "{isa:?}");
+            assert_eq!(a.z, b.z, "{isa:?}");
+        }
     }
 
     #[test]
@@ -158,7 +241,7 @@ mod tests {
     #[test]
     fn lane_transpose_is_involution_consistent() {
         // Sub-cube q, corner c of lanes() must equal the cube entry that
-        // subcube_trilerp reads.
+        // the TTLI sub-cube trilerp reads.
         let mut cube = [0.0f32; 64];
         for (i, v) in cube.iter_mut().enumerate() {
             *v = i as f32;

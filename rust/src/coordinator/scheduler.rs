@@ -278,6 +278,45 @@ mod tests {
     }
 
     #[test]
+    fn compatible_bursts_fuse_into_batches_that_share_one_instance() {
+        // One worker, one slow job to hold it busy, then a burst of
+        // identical-key jobs: the queue head fuses into batches (visible
+        // through the batched_jobs metric), and every job of a batch runs
+        // through the service's cached per-method instance + the per-δ
+        // shared LUTs — the "one executable lookup / LUT build" the
+        // batching docs promise.
+        let sched = Scheduler::start(
+            InterpolationService::new(None),
+            SchedulerConfig { workers: 1, queue_capacity: 64, max_batch: 8, intra_threads: 1 },
+        );
+        // Slow head-of-line job (larger volume) keeps the single worker
+        // busy while the burst queues up behind it.
+        let vd = Dims::new(48, 48, 48);
+        let mut grid = ControlGrid::zeros(vd, [5, 5, 5]);
+        grid.randomize(99, 1.0);
+        let slow = InterpolateJob {
+            id: 0,
+            grid: Arc::new(grid),
+            vol_dims: vd,
+            engine: Engine::Cpu(Method::Ttli),
+        };
+        let mut receivers = vec![sched.submit(slow).unwrap()];
+        for i in 1..=12 {
+            receivers.push(sched.submit(mk_job(i, Engine::Cpu(Method::Ttli))).unwrap());
+        }
+        for rx in receivers {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let batched = sched.metrics.batched_jobs.load(Ordering::Relaxed);
+        let batches = sched.metrics.batches.load(Ordering::Relaxed);
+        assert!(
+            batched >= 2 && batches >= 1,
+            "burst behind a busy worker must fuse (batched_jobs={batched}, batches={batches})"
+        );
+        sched.shutdown();
+    }
+
+    #[test]
     fn shutdown_is_idempotent_and_joins() {
         let sched = Scheduler::start(InterpolationService::new(None), SchedulerConfig::default());
         sched.shutdown();

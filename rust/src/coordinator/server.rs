@@ -107,7 +107,16 @@ fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<AtomicBool>) 
         // read_line appends, so a partial line survives a timeout and is
         // completed on the next pass.
         match reader.read_line(&mut line) {
-            Ok(0) => break, // EOF
+            Ok(0) => {
+                // EOF. A final request sent without a trailing newline
+                // (client closed its write half right after the bytes) is
+                // still sitting in `line` — process it instead of silently
+                // dropping it; the next pass reads 0 bytes again and the
+                // then-empty buffer ends the loop.
+                if line.trim().is_empty() {
+                    break;
+                }
+            }
             Ok(_) if line.ends_with('\n') => {}
             Ok(_) => continue, // partial line without newline yet
             Err(e)

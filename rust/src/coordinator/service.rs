@@ -10,10 +10,12 @@
 //! keeps many requests in flight. Chunked results are bit-identical to the
 //! whole-volume path.
 
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use super::job::{Engine, InterpolateJob};
 use crate::bspline::exec::{self, WorkerPool};
+use crate::bspline::{Interpolator, Method};
 use crate::runtime::PjrtHandle;
 use crate::volume::VectorField;
 
@@ -26,11 +28,18 @@ pub struct InterpolationService {
     pjrt: Option<PjrtHandle>,
     /// Shared chunk-execution pool; `None` = serial per-job execution.
     exec_pool: Option<Arc<WorkerPool>>,
+    /// Per-method interpolator cache shared across workers: a fused batch
+    /// (and every later job) reuses one instance instead of constructing a
+    /// fresh one per job. Together with the process-wide per-δ LUT caches
+    /// (`coeffs::{WeightLut,LerpLut}::shared`) this is the per-(method, δ)
+    /// amortization the scheduler's batching promises — one executable
+    /// lookup / LUT build per configuration, not per job.
+    instances: Arc<Mutex<HashMap<Method, Arc<dyn Interpolator + Send + Sync>>>>,
 }
 
 impl InterpolationService {
     pub fn new(pjrt: Option<PjrtHandle>) -> Self {
-        InterpolationService { pjrt, exec_pool: None }
+        InterpolationService { pjrt, exec_pool: None, instances: Arc::new(Mutex::new(HashMap::new())) }
     }
 
     /// Open the default artifact dir if present (best-effort PJRT support).
@@ -41,7 +50,13 @@ impl InterpolationService {
         } else {
             None
         };
-        InterpolationService { pjrt, exec_pool: None }
+        InterpolationService::new(pjrt)
+    }
+
+    /// The cached interpolator for `method` (built on first use).
+    fn cpu_instance(&self, method: Method) -> Arc<dyn Interpolator + Send + Sync> {
+        let mut map = self.instances.lock().unwrap();
+        map.entry(method).or_insert_with(|| Arc::from(method.instance())).clone()
     }
 
     /// Attach a shared worker pool for intra-job chunked execution.
@@ -67,7 +82,7 @@ impl InterpolationService {
     pub fn execute(&self, job: &InterpolateJob) -> Result<VectorField, String> {
         match job.engine {
             Engine::Cpu(method) => {
-                let imp = method.instance();
+                let imp = self.cpu_instance(method);
                 match &self.exec_pool {
                     Some(pool) => {
                         Ok(exec::interpolate_with_pool(&*imp, &job.grid, job.vol_dims, pool))
@@ -123,6 +138,26 @@ mod tests {
         let a = svc.execute(&job(Engine::Cpu(Method::Ttli))).unwrap();
         let b = svc.execute(&job(Engine::Cpu(Method::Tv))).unwrap();
         assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn cpu_instances_are_cached_per_method_and_shared_across_clones() {
+        fn same(
+            a: &Arc<dyn Interpolator + Send + Sync>,
+            b: &Arc<dyn Interpolator + Send + Sync>,
+        ) -> bool {
+            std::ptr::eq(Arc::as_ptr(a) as *const (), Arc::as_ptr(b) as *const ())
+        }
+        let svc = InterpolationService::new(None);
+        let a = svc.cpu_instance(Method::Ttli);
+        let b = svc.cpu_instance(Method::Ttli);
+        assert!(same(&a, &b), "repeat jobs must reuse one instance");
+        let c = svc.cpu_instance(Method::Tv);
+        assert!(!same(&a, &c), "distinct methods get distinct instances");
+        // Worker clones share the cache — a fused batch executed across
+        // clones still amortizes to one instance per method.
+        let svc2 = svc.clone();
+        assert!(same(&svc2.cpu_instance(Method::Ttli), &a));
     }
 
     #[test]

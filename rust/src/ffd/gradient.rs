@@ -24,9 +24,9 @@ pub fn voxel_to_cp_gradient(grid: &ControlGrid, voxel_grad: &VectorField) -> Con
 /// Direct gather form: one pass per control point over its 4δ³ support.
 pub fn voxel_to_cp_gradient_direct(grid: &ControlGrid, voxel_grad: &VectorField) -> ControlGrid {
     let [dx, dy, dz] = grid.tile;
-    let lx = WeightLut::new(dx);
-    let ly = WeightLut::new(dy);
-    let lz = WeightLut::new(dz);
+    let lx = WeightLut::shared(dx);
+    let ly = WeightLut::shared(dy);
+    let lz = WeightLut::shared(dz);
     let vd = voxel_grad.dims;
     let mut out = ControlGrid {
         tile: grid.tile,
@@ -105,9 +105,9 @@ pub fn voxel_to_cp_gradient_direct(grid: &ControlGrid, voxel_grad: &VectorField)
 /// 12 weighted accumulations per voxel instead of 64 (EXPERIMENTS.md §Perf).
 pub fn voxel_to_cp_gradient_separable(grid: &ControlGrid, voxel_grad: &VectorField) -> ControlGrid {
     let [dx, dy, dz] = grid.tile;
-    let lx = WeightLut::new(dx);
-    let ly = WeightLut::new(dy);
-    let lz = WeightLut::new(dz);
+    let lx = WeightLut::shared(dx);
+    let ly = WeightLut::shared(dy);
+    let lz = WeightLut::shared(dz);
     let vd = voxel_grad.dims;
     let cp_dims = grid.dims;
     // Number of (tile, support-offset) columns per axis = CP lattice size.

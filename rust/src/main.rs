@@ -129,8 +129,15 @@ fn cmd_interpolate(args: &Args) -> Result<(), String> {
     } else {
         String::new()
     };
+    // Which explicit-SIMD path the kernels selected (runtime-detected,
+    // overridable with FFDREG_SIMD=scalar|sse2|avx2 for A/B runs).
+    let simd_label = if method.simd_isa().is_some() {
+        format!(" simd {}", imp.simd_isa())
+    } else {
+        String::new()
+    };
     println!(
-        "{:<26} dims {}x{}x{} tile {tile}{threads_label}: {} ± {} per run, {:.3} ns/voxel",
+        "{:<26} dims {}x{}x{} tile {tile}{threads_label}{simd_label}: {} ± {} per run, {:.3} ns/voxel",
         imp.name(),
         vd.nx,
         vd.ny,

@@ -1,13 +1,16 @@
 //! Infrastructure substrates built in-repo because the offline environment
 //! vendors only the `xla` crate closure (see DESIGN.md §1): deterministic
 //! PRNG, minimal JSON, timing/statistics, a scoped thread pool, a property
-//! testing harness, and the bench-report harness used by `rust/benches/`.
+//! testing harness, the bench-report harness used by `rust/benches/`, and
+//! the explicit-SIMD substrate (`simd.rs`) the vectorized kernels dispatch
+//! through.
 
 pub mod bench;
 pub mod error;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod threadpool;
 pub mod timer;

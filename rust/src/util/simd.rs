@@ -1,0 +1,412 @@
+//! Dependency-free explicit-SIMD substrate for the BSI kernels.
+//!
+//! The paper's §3.5 CPU schemes (Vector-per-Tile, Vector-per-Voxel) are
+//! *vector* algorithms, but autovectorization of the scalar ports is at the
+//! compiler's mercy. This module provides the explicit layer: a small
+//! width-generic `f32` vector API ([`Simd`]) with three implementations —
+//!
+//! * [`ScalarIsa`] — one lane of plain Rust (`f32::mul_add`), the portable
+//!   fallback that keeps non-x86 targets and miri-style debugging working;
+//! * `Sse2Isa` — 4 lanes of SSE2 (`std::arch::x86_64`), the x86_64
+//!   baseline every 64-bit x86 CPU has; no FMA, so lerps round twice;
+//! * `Avx2Isa` — 8 lanes of AVX2 + FMA, fused single-rounding lerps.
+//!
+//! Kernels are written once as `#[inline(always)]` generics over [`Simd`]
+//! and monomorphized inside `#[target_feature]` wrappers (see
+//! `bspline/{ttli,vt,vv}.rs`), so the whole loop body — including the
+//! intrinsics — codegens with the wrapper's ISA enabled. Which wrapper runs
+//! is a *runtime* decision: [`detect`] probes the CPU once via
+//! `is_x86_feature_detected!`, and [`active`] applies the
+//! `FFDREG_SIMD=scalar|sse2|avx2` override (clamped to what the hardware
+//! supports) for A/B testing.
+//!
+//! Accuracy contract (tested in `proptest_bsi.rs`): every ISA path stays
+//! within the existing tolerance against the f64 reference. Paths are NOT
+//! bit-identical to each other — SSE2 has no FMA, so its lerps legitimately
+//! round differently — but *within* one ISA path, chunked output remains
+//! bit-identical to whole-volume output, and scalar tail voxels match what
+//! the vector lanes would have produced ([`Simd::lerp1`]).
+
+use std::sync::OnceLock;
+
+/// An instruction-set level for the vectorized kernels, ordered from
+/// narrowest to widest (so clamping a request to the hardware is `min`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+#[repr(u8)]
+pub enum Isa {
+    /// Plain Rust, one lane (`f32::mul_add` — fused like AVX2).
+    Scalar = 0,
+    /// SSE2, 4 lanes, unfused multiply-add (the x86_64 baseline).
+    Sse2 = 1,
+    /// AVX2 + FMA, 8 lanes, fused multiply-add.
+    Avx2 = 2,
+}
+
+impl Isa {
+    /// Stable lowercase key (CLI/env spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse an env/CLI spelling (case-insensitive).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" | "none" | "off" => Some(Isa::Scalar),
+            "sse2" | "sse" => Some(Isa::Sse2),
+            "avx2" | "avx" => Some(Isa::Avx2),
+            _ => None,
+        }
+    }
+
+    /// Clamp a requested ISA to what this machine can actually execute.
+    pub fn clamp_to_hw(self) -> Isa {
+        self.min(detect())
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_impl() -> Isa {
+    if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+        Isa::Avx2
+    } else {
+        // SSE2 is part of the x86_64 baseline — always available.
+        Isa::Sse2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_impl() -> Isa {
+    Isa::Scalar
+}
+
+/// Best ISA the running CPU supports (runtime feature detection; cached by
+/// the standard library).
+pub fn detect() -> Isa {
+    detect_impl()
+}
+
+/// Every ISA path this machine can execute, narrowest first — the sweep
+/// axis for ISA-agreement tests and scalar-vs-SIMD benches.
+pub fn supported() -> Vec<Isa> {
+    let best = detect();
+    let mut out = vec![Isa::Scalar];
+    if best >= Isa::Sse2 {
+        out.push(Isa::Sse2);
+    }
+    if best >= Isa::Avx2 {
+        out.push(Isa::Avx2);
+    }
+    out
+}
+
+/// The process-wide active ISA: hardware detection, overridden by
+/// `FFDREG_SIMD=scalar|sse2|avx2` (clamped to the hardware; unknown values
+/// are ignored with a warning). Cached at first use.
+pub fn active() -> Isa {
+    static ACTIVE: OnceLock<Isa> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("FFDREG_SIMD") {
+        Ok(v) => match Isa::parse(&v) {
+            Some(req) => req.clamp_to_hw(),
+            None => {
+                eprintln!("warning: FFDREG_SIMD='{v}' not one of scalar|sse2|avx2; ignoring");
+                detect()
+            }
+        },
+        Err(_) => detect(),
+    })
+}
+
+/// Width-generic `f32` vector operations. Implementations are zero-sized
+/// tokens; kernels written as `#[inline(always)]` generics over this trait
+/// collapse into straight-line SIMD when monomorphized inside a
+/// `#[target_feature]` wrapper.
+pub trait Simd {
+    /// Vector of [`Self::WIDTH`] `f32` lanes.
+    type V: Copy;
+    /// Number of lanes.
+    const WIDTH: usize;
+    /// The ISA this token stands for.
+    const ISA: Isa;
+
+    /// Broadcast `x` to every lane.
+    ///
+    /// # Safety
+    /// The CPU must support [`Self::ISA`] (guaranteed when dispatched
+    /// through [`active`] / [`detect`]).
+    unsafe fn splat(x: f32) -> Self::V;
+
+    /// Load [`Self::WIDTH`] consecutive lanes from the front of `p`
+    /// (unaligned).
+    ///
+    /// # Safety
+    /// `p.len() >= Self::WIDTH`, and the CPU must support [`Self::ISA`].
+    unsafe fn load(p: &[f32]) -> Self::V;
+
+    /// Store the lanes to the front of `p` (unaligned).
+    ///
+    /// # Safety
+    /// `p.len() >= Self::WIDTH`, and the CPU must support [`Self::ISA`].
+    unsafe fn store(p: &mut [f32], v: Self::V);
+
+    /// Lanewise `a - b`.
+    ///
+    /// # Safety
+    /// The CPU must support [`Self::ISA`].
+    unsafe fn sub(a: Self::V, b: Self::V) -> Self::V;
+
+    /// Lanewise `a*b + c` — fused (single rounding) when the ISA has FMA.
+    ///
+    /// # Safety
+    /// The CPU must support [`Self::ISA`].
+    unsafe fn mul_add(a: Self::V, b: Self::V, c: Self::V) -> Self::V;
+
+    /// Lanewise lerp `a + t·(b−a)`, matching [`Self::lerp1`] lane for lane.
+    ///
+    /// # Safety
+    /// The CPU must support [`Self::ISA`].
+    #[inline(always)]
+    unsafe fn lerp(a: Self::V, b: Self::V, t: Self::V) -> Self::V {
+        Self::mul_add(t, Self::sub(b, a), a)
+    }
+
+    /// Scalar lerp with the exact rounding behavior of one vector lane —
+    /// kernels use it for row tails and per-voxel combine steps so those
+    /// values are bit-identical to what the vector lanes would produce.
+    fn lerp1(a: f32, b: f32, t: f32) -> f32;
+}
+
+/// Plain-Rust fallback: one lane, fused `f32::mul_add` (same rounding as
+/// the AVX2 path and as the pre-SIMD scalar kernels).
+pub struct ScalarIsa;
+
+impl Simd for ScalarIsa {
+    type V = f32;
+    const WIDTH: usize = 1;
+    const ISA: Isa = Isa::Scalar;
+
+    #[inline(always)]
+    unsafe fn splat(x: f32) -> f32 {
+        x
+    }
+
+    #[inline(always)]
+    unsafe fn load(p: &[f32]) -> f32 {
+        p[0]
+    }
+
+    #[inline(always)]
+    unsafe fn store(p: &mut [f32], v: f32) {
+        p[0] = v;
+    }
+
+    #[inline(always)]
+    unsafe fn sub(a: f32, b: f32) -> f32 {
+        a - b
+    }
+
+    #[inline(always)]
+    unsafe fn mul_add(a: f32, b: f32, c: f32) -> f32 {
+        a.mul_add(b, c)
+    }
+
+    #[inline(always)]
+    fn lerp1(a: f32, b: f32, t: f32) -> f32 {
+        t.mul_add(b - a, a)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{Isa, Simd};
+    use std::arch::x86_64::*;
+
+    /// SSE2: 4 lanes. No FMA at this level, so `mul_add` is a multiply
+    /// followed by an add (two roundings) — `lerp1` matches that.
+    pub struct Sse2Isa;
+
+    impl Simd for Sse2Isa {
+        type V = __m128;
+        const WIDTH: usize = 4;
+        const ISA: Isa = Isa::Sse2;
+
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> __m128 {
+            _mm_set1_ps(x)
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: &[f32]) -> __m128 {
+            debug_assert!(p.len() >= 4);
+            _mm_loadu_ps(p.as_ptr())
+        }
+
+        #[inline(always)]
+        unsafe fn store(p: &mut [f32], v: __m128) {
+            debug_assert!(p.len() >= 4);
+            _mm_storeu_ps(p.as_mut_ptr(), v)
+        }
+
+        #[inline(always)]
+        unsafe fn sub(a: __m128, b: __m128) -> __m128 {
+            _mm_sub_ps(a, b)
+        }
+
+        #[inline(always)]
+        unsafe fn mul_add(a: __m128, b: __m128, c: __m128) -> __m128 {
+            _mm_add_ps(_mm_mul_ps(a, b), c)
+        }
+
+        #[inline(always)]
+        fn lerp1(a: f32, b: f32, t: f32) -> f32 {
+            t * (b - a) + a
+        }
+    }
+
+    /// AVX2 + FMA: 8 lanes, fused multiply-add (single rounding — the
+    /// same rounding as scalar `f32::mul_add`).
+    pub struct Avx2Isa;
+
+    impl Simd for Avx2Isa {
+        type V = __m256;
+        const WIDTH: usize = 8;
+        const ISA: Isa = Isa::Avx2;
+
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> __m256 {
+            _mm256_set1_ps(x)
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: &[f32]) -> __m256 {
+            debug_assert!(p.len() >= 8);
+            _mm256_loadu_ps(p.as_ptr())
+        }
+
+        #[inline(always)]
+        unsafe fn store(p: &mut [f32], v: __m256) {
+            debug_assert!(p.len() >= 8);
+            _mm256_storeu_ps(p.as_mut_ptr(), v)
+        }
+
+        #[inline(always)]
+        unsafe fn sub(a: __m256, b: __m256) -> __m256 {
+            _mm256_sub_ps(a, b)
+        }
+
+        #[inline(always)]
+        unsafe fn mul_add(a: __m256, b: __m256, c: __m256) -> __m256 {
+            _mm256_fmadd_ps(a, b, c)
+        }
+
+        #[inline(always)]
+        fn lerp1(a: f32, b: f32, t: f32) -> f32 {
+            t.mul_add(b - a, a)
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub use x86::{Avx2Isa, Sse2Isa};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2] {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("AVX2"), Some(Isa::Avx2));
+        assert_eq!(Isa::parse(" sse2 "), Some(Isa::Sse2));
+        assert_eq!(Isa::parse("neon"), None);
+    }
+
+    #[test]
+    fn ordering_matches_width_hierarchy() {
+        assert!(Isa::Scalar < Isa::Sse2);
+        assert!(Isa::Sse2 < Isa::Avx2);
+        assert_eq!(Isa::Avx2.min(Isa::Sse2), Isa::Sse2);
+    }
+
+    #[test]
+    fn clamp_never_exceeds_hardware() {
+        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2] {
+            assert!(isa.clamp_to_hw() <= detect());
+        }
+        assert_eq!(Isa::Scalar.clamp_to_hw(), Isa::Scalar);
+    }
+
+    #[test]
+    fn supported_is_prefix_of_hierarchy_and_contains_active() {
+        let sup = supported();
+        assert_eq!(sup[0], Isa::Scalar);
+        for w in sup.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert!(sup.contains(&detect()));
+        assert!(sup.contains(&active()));
+    }
+
+    /// Run one width of lerps through a `Simd` impl (test helper; callers
+    /// gate on `detect()` so the intrinsics are safe to execute).
+    fn lerp_via<S: Simd>(a: &[f32], b: &[f32], t: &[f32], out: &mut [f32]) {
+        unsafe {
+            let v = S::lerp(S::load(a), S::load(b), S::load(t));
+            S::store(out, v);
+        }
+    }
+
+    #[test]
+    fn scalar_lanes_match_fused_lerp() {
+        let (a, b, t) = ([1.5f32], [-2.25f32], [0.375f32]);
+        let mut out = [0.0f32];
+        lerp_via::<ScalarIsa>(&a, &b, &t, &mut out);
+        assert_eq!(out[0], 0.375f32.mul_add(-2.25 - 1.5, 1.5));
+        assert_eq!(out[0], ScalarIsa::lerp1(1.5, -2.25, 0.375));
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn x86_lanes_match_their_scalar_lerp1() {
+        let a: Vec<f32> = (0..8).map(|i| i as f32 * 0.7 - 2.0).collect();
+        let b: Vec<f32> = (0..8).map(|i| 3.0 - i as f32 * 0.35).collect();
+        let t: Vec<f32> = (0..8).map(|i| i as f32 / 8.0).collect();
+
+        if detect() >= Isa::Sse2 {
+            let mut out = [0.0f32; 4];
+            lerp_via::<Sse2Isa>(&a, &b, &t, &mut out);
+            for l in 0..4 {
+                assert_eq!(out[l], Sse2Isa::lerp1(a[l], b[l], t[l]), "sse2 lane {l}");
+            }
+        }
+        if detect() >= Isa::Avx2 {
+            let mut out = [0.0f32; 8];
+            lerp_via::<Avx2Isa>(&a, &b, &t, &mut out);
+            for l in 0..8 {
+                assert_eq!(out[l], Avx2Isa::lerp1(a[l], b[l], t[l]), "avx2 lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn isa_paths_agree_within_rounding() {
+        // Fused vs unfused lerp differ by at most one rounding step.
+        let cases = [(1.0f32, 2.0f32, 0.5f32), (-3.5, 7.25, 0.125), (100.0, -40.0, 0.9)];
+        for (a, b, t) in cases {
+            let fused = ScalarIsa::lerp1(a, b, t);
+            let unfused = t * (b - a) + a;
+            assert!((fused - unfused).abs() <= 1e-5 * fused.abs().max(1.0));
+        }
+    }
+}

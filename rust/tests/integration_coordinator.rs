@@ -120,6 +120,29 @@ fn malformed_requests_get_clean_errors() {
 }
 
 #[test]
+fn final_request_without_trailing_newline_is_served() {
+    // Regression: a request whose line is not newline-terminated before
+    // EOF used to be silently dropped (`Ok(_) => continue` then
+    // `Ok(0) => break`). The server must process the buffered partial
+    // line when the client closes its write half.
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::{Shutdown, TcpStream};
+
+    let (server, _sched) = start_stack(1, 8, 2);
+    let mut s = TcpStream::connect(server.addr).unwrap();
+    let req = interpolate_req([8, 8, 8], 3, "cpu:ttli").to_string();
+    s.write_all(req.as_bytes()).unwrap(); // note: no trailing '\n'
+    s.shutdown(Shutdown::Write).unwrap();
+
+    let mut line = String::new();
+    BufReader::new(s).read_line(&mut line).unwrap();
+    let j = Json::parse(&line).expect("newline-less request must still get a response");
+    assert_eq!(j.get("ok").as_bool(), Some(true), "{line}");
+    assert_eq!(j.get("voxels").as_usize(), Some(8 * 8 * 8));
+    server.stop();
+}
+
+#[test]
 fn pjrt_engine_without_artifacts_reports_unavailable() {
     let (server, _sched) = start_stack(1, 8, 2);
     let mut c = Client::connect(&server.addr).unwrap();

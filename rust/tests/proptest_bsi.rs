@@ -11,6 +11,7 @@ use std::sync::Arc;
 use ffdreg::bspline::exec;
 use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::util::quickcheck::{assert_close, check, Gen};
+use ffdreg::util::simd::{self, Isa};
 use ffdreg::volume::Dims;
 
 /// Random grid + dims drawn from a Gen.
@@ -94,6 +95,103 @@ fn prop_chunked_execution_is_bit_identical() {
             let default_path = imp.interpolate(&grid, vd);
             if whole.x != default_path.x {
                 return Err(format!("{m:?} default-pool path deviates from whole"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simd_isa_paths_agree() {
+    // The explicit-SIMD sweep: on every ISA path reachable on this
+    // machine, each vectorized scheme must (a) stay within the f64
+    // reference tolerance, (b) agree with its own scalar path at
+    // ulp-scale (FMA presence is the only legitimate rounding change),
+    // and (c) stay bit-identical between chunked and whole-volume
+    // execution *within* the path.
+    check("simd-isa-agreement", 0x51D0A, 10, |g| {
+        let (grid, vd) = arbitrary_case(g);
+        let r = Method::Reference.instance().interpolate(&grid, vd);
+        for m in Method::SIMD_SET {
+            let scalar = m.instance_with_isa(Isa::Scalar).interpolate(&grid, vd);
+            for isa in simd::supported() {
+                let imp = m.instance_with_isa(isa);
+                if imp.simd_isa() != isa {
+                    return Err(format!("{m:?} pinned to {isa:?} reports {:?}", imp.simd_isa()));
+                }
+                let f = imp.interpolate(&grid, vd);
+                assert_close(&f.x, &r.x, 1e-3, 1e-4)
+                    .map_err(|e| format!("{m:?}/{isa:?} vs reference x: {e}"))?;
+                assert_close(&f.y, &r.y, 1e-3, 1e-4)
+                    .map_err(|e| format!("{m:?}/{isa:?} vs reference y: {e}"))?;
+                assert_close(&f.z, &r.z, 1e-3, 1e-4)
+                    .map_err(|e| format!("{m:?}/{isa:?} vs reference z: {e}"))?;
+                assert_close(&f.x, &scalar.x, 1e-4, 1e-5)
+                    .map_err(|e| format!("{m:?}/{isa:?} vs scalar x: {e}"))?;
+                assert_close(&f.y, &scalar.y, 1e-4, 1e-5)
+                    .map_err(|e| format!("{m:?}/{isa:?} vs scalar y: {e}"))?;
+                assert_close(&f.z, &scalar.z, 1e-4, 1e-5)
+                    .map_err(|e| format!("{m:?}/{isa:?} vs scalar z: {e}"))?;
+                // Within one ISA path the chunked engine must still be
+                // bit-identical to whole-volume evaluation.
+                let chunked = exec::Pooled::new(m.instance_with_isa(isa), g.usize_in(2, 4))
+                    .interpolate(&grid, vd);
+                if chunked.x != f.x || chunked.y != f.y || chunked.z != f.z {
+                    return Err(format!("{m:?}/{isa:?} chunked deviates from whole-volume"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scattered_eval_entry_points_agree_at_boundaries() {
+    use ffdreg::bspline::scattered::{eval_at, eval_batch, Point};
+    check("scattered-boundary", 0x5CA77, 20, |g| {
+        let (grid, vd) = arbitrary_case(g);
+        let ext = [vd.nx as f32, vd.ny as f32, vd.nz as f32];
+        // Mix of in-domain, edge, just-past-edge, and far out-of-domain
+        // coordinates on every axis.
+        let mut pts: Vec<Point> = Vec::new();
+        for _ in 0..30 {
+            let mut p = [0.0f32; 3];
+            for (k, q) in p.iter_mut().enumerate() {
+                *q = match g.usize_in(0, 5) {
+                    0 => 0.0,
+                    1 => g.f32_in(0.0, ext[k] - 1.0),
+                    2 => ext[k] - 1.0,
+                    3 => ext[k] + g.f32_in(0.0, 1.0),
+                    4 => -g.f32_in(0.0, 4.0),
+                    _ => ext[k] + g.f32_in(1.0, 10.0),
+                };
+            }
+            pts.push(p);
+        }
+        let batch = eval_batch(&grid, &pts);
+        for (p, b) in pts.iter().zip(&batch) {
+            let single = eval_at(&grid, *p);
+            if single != *b {
+                return Err(format!("eval_at {single:?} != eval_batch {b:?} at {p:?}"));
+            }
+            if !single.iter().all(|v| v.is_finite()) {
+                return Err(format!("non-finite at {p:?}"));
+            }
+        }
+        // Partition of unity under the shared clamping semantic: constant
+        // grids evaluate to the constant even out of domain.
+        let c = g.f32_in(-20.0, 20.0);
+        let mut constant = grid.clone();
+        for i in 0..constant.len() {
+            constant.x[i] = c;
+            constant.y[i] = -c;
+            constant.z[i] = 0.25 * c;
+        }
+        for p in &pts {
+            let v = eval_at(&constant, *p);
+            let tol = 1e-4 * c.abs().max(1.0);
+            if (v[0] - c).abs() > tol || (v[1] + c).abs() > tol {
+                return Err(format!("partition of unity broken at {p:?}: {v:?} (c={c})"));
             }
         }
         Ok(())
