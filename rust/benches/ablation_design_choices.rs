@@ -13,11 +13,12 @@
 
 use ffdreg::bspline::{scattered, ControlGrid, Interpolator, Method};
 use ffdreg::memmodel::transfers_blocks_of_tiles;
-use ffdreg::util::bench::Report;
+use ffdreg::util::bench::{BenchJson, Report};
 use ffdreg::util::timer;
 use ffdreg::volume::Dims;
 
 fn main() {
+    let mut sink = BenchJson::from_env("ablation_design_choices");
     // A. Block-shape ablation (modeled transfers per voxel, 5³ tiles).
     let mut shape = Report::new(
         "ablation_block_shape",
@@ -67,6 +68,17 @@ fn main() {
         .cell("ns/voxel", t_lut.min() * 1e9 / vd.count() as f64);
     lut.row("scattered, weights on the fly")
         .cell("ns/voxel", t_fly.min() * 1e9 / vd.count() as f64);
+    sink.record_extra("ttli-lut", vd.as_array(), 0, "-", t_lut.min() * 1e9 / vd.count() as f64, &[
+        ("tile", 5.0),
+    ]);
+    sink.record_extra(
+        "scattered-onthefly",
+        vd.as_array(),
+        0,
+        "-",
+        t_fly.min() * 1e9 / vd.count() as f64,
+        &[("tile", 5.0)],
+    );
     lut.note("paper §3.4 stores the coefficients in LUTs because the grid is aligned & uniform");
     lut.finish();
 
@@ -90,7 +102,17 @@ fn main() {
             .cell("TT ns/vox", a.min() * 1e9 / vd.count() as f64)
             .cell("TV-tiling ns/vox", b.min() * 1e9 / vd.count() as f64)
             .cell("ratio", b.min() / a.min());
+        let nvox = vd.count() as f64;
+        sink.record_extra("tt", vd.as_array(), 0, "-", a.min() * 1e9 / nvox, &[(
+            "tile",
+            ts as f64,
+        )]);
+        sink.record_extra("tv-tiling", vd.as_array(), 0, "-", b.min() * 1e9 / nvox, &[(
+            "tile",
+            ts as f64,
+        )]);
     }
     reg.note("paper §5.2.1: 'TT does not provide significant speedup over TV-tiling' (compute-bound)");
     reg.finish();
+    sink.finish();
 }

@@ -8,9 +8,10 @@ use ffdreg::memmodel::{
     headline_ratios, transfers_block_per_tile, transfers_blocks_of_tiles, transfers_no_tiles,
     transfers_texture,
 };
-use ffdreg::util::bench::Report;
+use ffdreg::util::bench::{BenchJson, Report};
 
 fn main() {
+    let mut sink = BenchJson::from_env("appendix_a_memory_model");
     let m = 10.7e6; // Porcine1-scale voxel count (Table 2)
 
     let mut rep = Report::new(
@@ -38,6 +39,11 @@ fn main() {
             .row(&format!("tile {t}³"))
             .cell("TV / TT", r.tv_over_tt)
             .cell("TH / TT", r.th_over_tt);
+        sink.record_extra("tt-model", [0, 0, 0], 0, "-", f64::NAN, &[
+            ("tile", t as f64),
+            ("tv_over_tt", r.tv_over_tt),
+            ("th_over_tt", r.th_over_tt),
+        ]);
     }
     ratios.note("paper (5³): TT ≈12x fewer than TV, ≈187x fewer than TH");
     ratios.finish();
@@ -46,4 +52,5 @@ fn main() {
     assert!((r5.tv_over_tt - 12.0).abs() < 0.5);
     assert!((r5.th_over_tt - 187.0).abs() < 2.0);
     println!("\nAppendix A headline ratios reproduced exactly");
+    sink.finish();
 }

@@ -8,11 +8,12 @@
 
 use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::memmodel::{OPS_ONE_WEIGHT, OPS_TT, OPS_TTLI};
-use ffdreg::util::bench::Report;
+use ffdreg::util::bench::{BenchJson, Report};
 use ffdreg::util::timer;
 use ffdreg::volume::Dims;
 
 fn main() {
+    let mut sink = BenchJson::from_env("appendix_b_op_counts");
     let mut rep = Report::new("appendix_b_ops", "arithmetic operations per voxel per component");
     rep.row("TT (direct weighted sum)")
         .cell("ops/voxel", OPS_TT)
@@ -44,6 +45,13 @@ fn main() {
         "\nmeasured TT/TTLI time ratio: {measured:.2}x (analytic op ratio {analytic:.2}x, \
          paper GPU speedup 1.5-1.8x)"
     );
+    let nvox = vd.count() as f64;
+    sink.record("tt", vd.as_array(), 0, "-", t_tt.min() * 1e9 / nvox);
+    sink.record_extra("ttli", vd.as_array(), 0, "-", t_ttli.min() * 1e9 / nvox, &[
+        ("tt_over_ttli", measured),
+        ("analytic_op_ratio", analytic),
+    ]);
+    sink.finish();
     assert!(
         measured > 1.1,
         "TTLI must be measurably faster than TT on a compute-bound workload"

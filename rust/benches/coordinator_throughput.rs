@@ -12,7 +12,7 @@ use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::coordinator::{
     Engine, InterpolateJob, InterpolationService, Scheduler, SchedulerConfig,
 };
-use ffdreg::util::bench::{full_scale, Report};
+use ffdreg::util::bench::{full_scale, BenchJson, Report};
 use ffdreg::util::timer;
 use ffdreg::volume::Dims;
 
@@ -20,6 +20,7 @@ fn main() {
     let edge = if full_scale() { 96 } else { 48 };
     let vd = Dims::new(edge, edge, edge);
     let jobs = if full_scale() { 64 } else { 24 };
+    let mut sink = BenchJson::from_env("coordinator_throughput");
 
     // Raw kernel baseline (no coordinator).
     let mut grid0 = ControlGrid::zeros(vd, [5, 5, 5]);
@@ -38,6 +39,14 @@ fn main() {
         .cell("jobs/s", 1.0 / raw_per_job)
         .cell("per-job ms", raw_per_job * 1e3)
         .cell("overhead %", 0.0);
+    sink.record_extra(
+        "raw-ttli",
+        vd.as_array(),
+        0,
+        "-",
+        raw_per_job * 1e9 / vd.count() as f64,
+        &[("jobs_per_s", 1.0 / raw_per_job)],
+    );
 
     for (workers, max_batch) in [(1usize, 1usize), (1, 8), (2, 1), (2, 8)] {
         let sched = Scheduler::start(
@@ -83,8 +92,17 @@ fn main() {
             .cell("per-job ms", per_job * 1e3)
             .cell("overhead %", overhead)
             .cell("p99 exec s", sched.metrics.exec_percentile(99.0));
+        sink.record_extra(
+            &format!("coord-{workers}w-b{max_batch}"),
+            vd.as_array(),
+            workers,
+            "-",
+            per_job * 1e9 / vd.count() as f64,
+            &[("jobs_per_s", jobs as f64 / wall)],
+        );
         sched.shutdown();
     }
     rep.note("target: coordinator overhead <5% of kernel time at this job size");
     rep.finish();
+    sink.finish();
 }

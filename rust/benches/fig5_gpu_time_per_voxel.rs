@@ -19,7 +19,7 @@ use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::cli::Args;
 use ffdreg::memmodel::gpumodel::{time_per_voxel, GTX1050, RTX2070};
 use ffdreg::phantom::dataset::{scaled_dims, TABLE2};
-use ffdreg::util::bench::{full_scale, parse_thread_axis, Report};
+use ffdreg::util::bench::{full_scale, parse_thread_axis, BenchJson, Report};
 use ffdreg::util::stats::Summary;
 use ffdreg::util::timer;
 
@@ -28,6 +28,7 @@ fn main() {
     let tiles = [3usize, 4, 5, 6, 7];
     let scale = if full_scale() { 0.5 } else { 0.12 };
     let threads_axis = parse_thread_axis(args.get("threads"));
+    let mut sink = BenchJson::new("fig5_gpu_time_per_voxel", args.get("json"));
 
     let mut rep = Report::new(
         "fig5_time_per_voxel",
@@ -53,7 +54,18 @@ fn main() {
                     let stats = timer::time_adaptive(1, 5, 0.1, || {
                         std::hint::black_box(imp.interpolate(&grid, vd));
                     });
-                    per_pair.push(stats.min() * 1e9 / vd.count() as f64);
+                    let ns = stats.min() * 1e9 / vd.count() as f64;
+                    per_pair.push(ns);
+                    let simd =
+                        m.simd_isa().map(|i| i.name()).unwrap_or("-");
+                    sink.record_extra(
+                        imp.name(),
+                        vd.as_array(),
+                        threads,
+                        simd,
+                        ns,
+                        &[("tile", t as f64)],
+                    );
                 }
                 cells.push((format!("{t}³ ns/vox"), per_pair.mean()));
                 if t == 5 && per_pair.cv() > 0.25 {
@@ -90,4 +102,5 @@ fn main() {
         ));
     }
     rep.finish();
+    sink.finish();
 }

@@ -6,15 +6,18 @@
 //! Run: cargo bench --bench fig6_gpu_speedup
 
 use ffdreg::bspline::{ControlGrid, Interpolator, Method};
+use ffdreg::cli::Args;
 use ffdreg::memmodel::gpumodel::{speedup_over_tv, GTX1050, RTX2070};
-use ffdreg::util::bench::{full_scale, Report};
+use ffdreg::util::bench::{full_scale, BenchJson, Report};
 use ffdreg::util::timer;
 use ffdreg::volume::Dims;
 
 fn main() {
+    let args = Args::from_env();
     let tiles = [3usize, 4, 5, 6, 7];
     let edge = if full_scale() { 160 } else { 80 };
     let vd = Dims::new(edge, edge, edge);
+    let mut sink = BenchJson::new("fig6_gpu_speedup", args.get("json"));
 
     let mut rep = Report::new("fig6_speedup", "speedup over NiftyReg (TV) vs tile size");
 
@@ -28,6 +31,7 @@ fn main() {
             std::hint::black_box(imp.interpolate(&grid, vd));
         });
         tv_ns[ti] = s.min() * 1e9 / vd.count() as f64;
+        sink.record_extra(imp.name(), vd.as_array(), 0, "-", tv_ns[ti], &[("tile", t as f64)]);
     }
     for m in [Method::Texture, Method::TvTiling, Method::Tt, Method::Ttli] {
         let imp = m.instance();
@@ -40,6 +44,15 @@ fn main() {
             });
             let ns = s.min() * 1e9 / vd.count() as f64;
             r.cell(&format!("{t}³"), tv_ns[ti] / ns);
+            let simd = m.simd_isa().map(|i| i.name()).unwrap_or("-");
+            sink.record_extra(
+                imp.name(),
+                vd.as_array(),
+                0,
+                simd,
+                ns,
+                &[("tile", t as f64), ("speedup_vs_tv", tv_ns[ti] / ns)],
+            );
         }
     }
 
@@ -55,4 +68,5 @@ fn main() {
 
     rep.note("paper Fig 6: TTLI ≈6.5x avg (up to 7x); TTLI/TT ≈1.77x (1050) / 1.5x (2070); TT ≈ TV-tiling");
     rep.finish();
+    sink.finish();
 }

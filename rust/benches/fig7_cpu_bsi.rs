@@ -21,7 +21,7 @@
 use ffdreg::bspline::exec::Pooled;
 use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::cli::Args;
-use ffdreg::util::bench::{full_scale, parse_thread_axis, Report};
+use ffdreg::util::bench::{full_scale, parse_thread_axis, BenchJson, Report};
 use ffdreg::util::simd::{self, Isa};
 use ffdreg::util::timer;
 use ffdreg::volume::Dims;
@@ -37,7 +37,7 @@ fn time_ns_per_voxel(imp: &dyn Interpolator, vd: Dims, tile: usize) -> f64 {
 
 /// The `--simd` sweep: every vectorized method on every requested ISA path,
 /// with the per-method scalar path as the speedup baseline.
-fn run_simd_sweep(spec: &str, vd: Dims, tiles: &[usize], threads: usize) {
+fn run_simd_sweep(spec: &str, vd: Dims, tiles: &[usize], threads: usize, sink: &mut BenchJson) {
     let mut isas: Vec<Isa> = Vec::new();
     for entry in spec.split(',') {
         match Isa::parse(entry) {
@@ -92,6 +92,14 @@ fn run_simd_sweep(spec: &str, vd: Dims, tiles: &[usize], threads: usize) {
             let r = time_rep.row(&format!("{} [{isa}]", m.paper_name()));
             for (ti, &t) in tiles.iter().enumerate() {
                 r.cell(&format!("{t}³ ns/vox"), per_tile[ti]);
+                sink.record_extra(
+                    m.paper_name(),
+                    vd.as_array(),
+                    threads,
+                    isa.name(),
+                    per_tile[ti],
+                    &[("tile", t as f64)],
+                );
             }
             per_isa.push(per_tile);
         }
@@ -136,6 +144,7 @@ fn main() {
     let edge = if full_scale() { 160 } else { 96 };
     let vd = Dims::new(edge, edge, edge);
     let threads_axis = parse_thread_axis(args.get("threads"));
+    let mut sink = BenchJson::new("fig7_cpu_bsi", args.get("json"));
 
     if let Some(spec) = args.get("simd") {
         // The SIMD axis extends past the paper's 3–7 tile range: 8/12/16
@@ -143,7 +152,14 @@ fn main() {
         // (below that the masked-remainder path carries the speedup) —
         // the "larger tiles fill more SIMD slots" trend of §3.5.
         let simd_tiles = [3usize, 4, 5, 6, 7, 8, 12, 16];
-        run_simd_sweep(spec, vd, &simd_tiles, threads_axis.first().copied().unwrap_or(0));
+        run_simd_sweep(
+            spec,
+            vd,
+            &simd_tiles,
+            threads_axis.first().copied().unwrap_or(0),
+            &mut sink,
+        );
+        sink.finish();
         return;
     }
 
@@ -159,7 +175,13 @@ fn main() {
             let imp = if threads > 0 { m.par_instance(threads) } else { m.instance() };
             let mut per_tile = Vec::new();
             for &t in &tiles {
-                per_tile.push(time_ns_per_voxel(&*imp, vd, t));
+                let ns = time_ns_per_voxel(&*imp, vd, t);
+                let isa = m.simd_isa().map(|i| i.name()).unwrap_or("-");
+                sink.record_extra(m.paper_name(), vd.as_array(), threads, isa, ns, &[(
+                    "tile",
+                    t as f64,
+                )]);
+                per_tile.push(ns);
             }
             per_method.push(per_tile);
         }
@@ -213,4 +235,5 @@ fn main() {
         ));
     }
     speed_rep.finish();
+    sink.finish();
 }

@@ -14,13 +14,14 @@ use ffdreg::bspline::Method;
 use ffdreg::ffd::{multilevel::register_with_method, FfdConfig};
 use ffdreg::memmodel::gpumodel::{speedup_over_tv, GTX1050, RTX2070};
 use ffdreg::phantom::dataset::generate_dataset;
-use ffdreg::util::bench::{full_scale, Report};
+use ffdreg::util::bench::{full_scale, BenchJson, Report};
 
 fn main() {
     let scale = if full_scale() { 0.25 } else { 0.10 };
     let iters = if full_scale() { 30 } else { 12 };
     let pairs = generate_dataset(scale, 7);
     let cfg = FfdConfig { levels: 2, max_iter: iters, ..Default::default() };
+    let mut sink = BenchJson::from_env("fig8_fig9_registration");
 
     let mut rep = Report::new(
         "fig8_fig9_registration",
@@ -42,6 +43,14 @@ fn main() {
             .cell("speedup", speedup)
             .cell("BSI% (TV)", 100.0 * tv.timing.bsi_fraction())
             .cell("BSI% (TTLI)", 100.0 * ttli.timing.bsi_fraction());
+        let dims = pair.intra.dims.as_array();
+        let nvox = pair.intra.dims.count() as f64;
+        for (label, res) in [("ffd-tv", &tv), ("ffd-ttli", &ttli)] {
+            sink.record_extra(label, dims, 0, "-", res.timing.bsi_s * 1e9 / nvox, &[
+                ("total_s", res.timing.total_s),
+                ("bsi_fraction", res.timing.bsi_fraction()),
+            ]);
+        }
     }
     let n = pairs.len() as f64;
     let measured_frac = sum_bsi_frac / n;
@@ -67,4 +76,5 @@ fn main() {
 
     rep.note("paper Fig 8: 1.30x avg (GTX1050, BSI 27% of total); Fig 9: 1.14x (RTX2070, BSI 15%)");
     rep.finish();
+    sink.finish();
 }

@@ -10,10 +10,11 @@
 //! Run: cargo bench --bench tab3_tab4_accuracy
 
 use ffdreg::bspline::{reference::interpolate_f64, ControlGrid, Interpolator, Method};
-use ffdreg::util::bench::Report;
+use ffdreg::util::bench::{BenchJson, Report};
 use ffdreg::volume::Dims;
 
 fn main() {
+    let mut sink = BenchJson::from_env("tab3_tab4_accuracy");
     let vd = Dims::new(50, 40, 45);
     let seeds = [1u64, 2, 3, 4, 5]; // five workloads, Table 2 analog
     // Displacements ~10 voxels — the paper's registration-scale grids.
@@ -47,6 +48,11 @@ fn main() {
         if m == Method::Ttli {
             ttli_err = err;
         }
+        let isa = m.simd_isa().map(|i| i.name()).unwrap_or("-");
+        sink.record_extra(imp.name(), vd.as_array(), 0, isa, f64::NAN, &[(
+            "abs_error_vs_f64",
+            err,
+        )]);
         rows.push((imp.name().to_string(), err));
     }
 
@@ -70,4 +76,5 @@ fn main() {
         "TH must be orders of magnitude worse than TTLI"
     );
     println!("\nconclusions hold: FMA/trilerp methods are the most accurate; TH is orders worse");
+    sink.finish();
 }

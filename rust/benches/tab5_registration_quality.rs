@@ -10,13 +10,14 @@ use ffdreg::bspline::Method;
 use ffdreg::ffd::{multilevel::register_with_method, FfdConfig};
 use ffdreg::metrics::{mae_normalized, ssim};
 use ffdreg::phantom::dataset::generate_dataset;
-use ffdreg::util::bench::{full_scale, Report};
+use ffdreg::util::bench::{full_scale, BenchJson, Report};
 
 fn main() {
     let scale = if full_scale() { 0.25 } else { 0.10 };
     let iters = if full_scale() { 40 } else { 18 };
     let pairs = generate_dataset(scale, 7);
     let cfg = FfdConfig { levels: 2, max_iter: iters, ..Default::default() };
+    let mut sink = BenchJson::from_env("tab5_registration_quality");
 
     let mut rep = Report::new("tab5_quality", "MAE / SSIM: affine vs proposed vs NiftyReg");
     let mut avg = [0.0f64; 6];
@@ -45,6 +46,14 @@ fn main() {
             .cell("SSIM affine", vals[3])
             .cell("SSIM proposed", vals[4])
             .cell("SSIM NiftyReg", vals[5]);
+        let dims = reference.dims.as_array();
+        for (label, mae, ssim_v) in [
+            ("affine", vals[0], vals[3]),
+            ("ffd-ttli", vals[1], vals[4]),
+            ("ffd-tv", vals[2], vals[5]),
+        ] {
+            sink.record_extra(label, dims, 0, "-", f64::NAN, &[("mae", mae), ("ssim", ssim_v)]);
+        }
     }
     let n = pairs.len() as f64;
     rep.row("Average")
@@ -65,4 +74,5 @@ fn main() {
         "proposed and NiftyReg quality must be near-identical"
     );
     println!("\norderings hold: affine ≪ non-rigid; proposed ≈ NiftyReg");
+    sink.finish();
 }

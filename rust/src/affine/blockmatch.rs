@@ -140,7 +140,7 @@ mod tests {
         for v in &mut base {
             *v = rng.uniform();
         }
-        let noise = Volume { dims, spacing: [1.0; 3], data: base };
+        let noise = Volume { dims, spacing: [1.0; 3], origin: [0.0; 3], data: base };
         let smooth = crate::volume::pyramid::smooth(&noise);
         Volume::from_fn(dims, [1.0; 3], |x, y, z| {
             smooth.at_clamped(x as isize + shift[0], y as isize + shift[1], z as isize + shift[2])

@@ -77,7 +77,9 @@ pub fn register(reference: &Volume, floating: &Volume, cfg: &AffineConfig) -> Af
         }
     }
 
-    let warped = transform::apply(floating, &affine, reference.dims);
+    let mut warped = transform::apply(floating, &affine, reference.dims);
+    // Output lattice = reference frame: carry its world-space geometry.
+    warped.copy_geometry_from(reference);
     AffineResult { affine, warped, matches_used }
 }
 

@@ -85,8 +85,14 @@ impl Affine {
 }
 
 /// Resample `floating` through the affine into a lattice of `out_dims`.
+///
+/// Geometry contract: as with `resample::warp`, the output lattice is the
+/// caller's reference frame; `floating`'s spacing/origin are stamped as a
+/// placeholder and the registration driver re-stamps the reference's
+/// geometry (`affine::register`).
 pub fn apply(floating: &Volume, affine: &Affine, out_dims: Dims) -> Volume {
     let mut out = Volume::zeros(out_dims, floating.spacing);
+    out.origin = floating.origin;
     let row = out_dims.nx;
     par_chunks_mut(&mut out.data, row, |chunk_i, slice| {
         let y = chunk_i % out_dims.ny;

@@ -84,6 +84,7 @@ pub fn prefilter_volume(vol: &Volume) -> Volume {
     Volume {
         dims: d,
         spacing: vol.spacing,
+        origin: vol.origin,
         data: data.into_iter().map(|v| v as f32).collect(),
     }
 }
@@ -141,6 +142,7 @@ pub fn zoom(vol: &Volume, dims: Dims) -> Volume {
     let sz = vol.dims.nz as f32 / dims.nz as f32;
     let spacing = [vol.spacing[0] * sx, vol.spacing[1] * sy, vol.spacing[2] * sz];
     let mut out = Volume::zeros(dims, spacing);
+    out.origin = vol.center_aligned_origin([sx, sy, sz]);
     crate::util::threadpool::par_chunks_mut(&mut out.data, dims.nx, |ci, row| {
         let y = ci % dims.ny;
         let z = ci / dims.ny;

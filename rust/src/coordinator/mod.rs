@@ -13,4 +13,4 @@ pub mod service;
 
 pub use job::{Engine, InterpolateJob, JobOutcome};
 pub use scheduler::{Scheduler, SchedulerConfig, SubmitError};
-pub use service::InterpolationService;
+pub use service::{run_register, InterpolationService, OpError, RegisterOp, RegisterOutcome};

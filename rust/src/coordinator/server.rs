@@ -9,14 +9,21 @@
 //!     -> {"ok":true,"id":n,"checksum":c,"exec_s":t,"wait_s":w}
 //!        (the grid is generated server-side from the seed: the protocol
 //!         exercises scheduling/batching without shipping megabytes)
-//!   {"op":"register","reference":"a.vol","floating":"b.vol","method":"ttli",
-//!    "levels":2,"iters":20,"out":"warped.vol"(optional)}
+//!   {"op":"register","reference":"a.nii","floating":"b.mhd","method":"ttli",
+//!    "levels":2,"iters":20,"out":"warped.nii"(optional)}
 //!     -> {"ok":true,"cost":c,"ssim":s,"mae":m,"total_s":t,"bsi_s":b}
-//!        (volumes are read from server-local .vol paths — the IGS workflow
-//!         of submitting an intra-op scan for registration)
+//!        (volumes are read from server-local paths in any supported format
+//!         — .nii / .mhd / .mha / .vol — the IGS workflow of submitting an
+//!         intra-op scan for registration)
 //!   {"op":"stats"}
 //!     -> {"ok":true,"stats":{...}}
 //!   {"op":"shutdown"}   (stops the listener)
+//!
+//! Failures are structured: {"ok":false,"error":"<human text>","code":"<c>"}
+//! where code is one of bad_request / not_found / malformed / unsupported /
+//! io / backpressure / shutting_down / exec_failed — clients branch on the
+//! code, not the prose (file-not-found vs malformed-format vs
+//! unsupported-dtype are distinct).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -25,6 +32,7 @@ use std::sync::Arc;
 
 use super::job::{Engine, InterpolateJob};
 use super::scheduler::{Scheduler, SubmitError};
+use super::service::{run_register, OpError, RegisterOp};
 use crate::bspline::ControlGrid;
 use crate::util::json::Json;
 use crate::volume::Dims;
@@ -86,8 +94,14 @@ impl Drop for Server {
     }
 }
 
-fn err_line(msg: &str) -> String {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))]).to_string()
+/// Structured failure line: machine-readable `code` + human `error`.
+fn err_line(code: &str, msg: &str) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::Str(msg.into())),
+        ("code", Json::Str(code.into())),
+    ])
+    .to_string()
 }
 
 fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<AtomicBool>) {
@@ -149,7 +163,7 @@ fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<AtomicBool>) 
 fn handle_line(line: &str, sched: &Scheduler, stop: &AtomicBool) -> Option<String> {
     let req = match Json::parse(line) {
         Ok(j) => j,
-        Err(e) => return Some(err_line(&format!("bad json: {e}"))),
+        Err(e) => return Some(err_line("bad_request", &format!("bad json: {e}"))),
     };
     match req.get("op").as_str() {
         Some("ping") => Some(
@@ -166,84 +180,79 @@ fn handle_line(line: &str, sched: &Scheduler, stop: &AtomicBool) -> Option<Strin
         }
         Some("interpolate") => Some(handle_interpolate(&req, sched)),
         Some("register") => Some(handle_register(&req)),
-        Some(other) => Some(err_line(&format!("unknown op '{other}'"))),
-        None => Some(err_line("missing op")),
+        Some(other) => Some(err_line("bad_request", &format!("unknown op '{other}'"))),
+        None => Some(err_line("bad_request", "missing op")),
     }
 }
 
-/// Full FFD registration of two server-local volumes (runs inline on the
-/// connection thread: registration is long-running and stateful, unlike
-/// the batched interpolation jobs).
+/// Full FFD registration of two server-local volumes in any supported
+/// format (runs inline on the connection thread: registration is
+/// long-running and stateful, unlike the batched interpolation jobs). The
+/// op itself — load, register, save — lives in the service layer
+/// ([`run_register`]); this function only translates protocol JSON.
 fn handle_register(req: &Json) -> String {
     let Some(ref_path) = req.get("reference").as_str() else {
-        return err_line("missing reference path");
+        return err_line("bad_request", "missing reference path");
     };
     let Some(flo_path) = req.get("floating").as_str() else {
-        return err_line("missing floating path");
+        return err_line("bad_request", "missing floating path");
     };
-    let reference = match crate::volume::io::load(std::path::Path::new(ref_path)) {
-        Ok(v) => v,
-        Err(e) => return err_line(&format!("reference: {e}")),
+    let Some(method) = crate::bspline::Method::parse(req.get("method").as_str().unwrap_or("ttli"))
+    else {
+        return err_line("bad_request", "unknown method");
     };
-    let floating = match crate::volume::io::load(std::path::Path::new(flo_path)) {
-        Ok(v) => v,
-        Err(e) => return err_line(&format!("floating: {e}")),
-    };
-    if reference.dims != floating.dims {
-        return err_line("reference/floating dims mismatch");
-    }
-    let method = match crate::bspline::Method::parse(req.get("method").as_str().unwrap_or("ttli"))
-    {
-        Some(m) => m,
-        None => return err_line("unknown method"),
-    };
-    let cfg = crate::ffd::FfdConfig {
+    let op = RegisterOp {
+        reference: ref_path.into(),
+        floating: flo_path.into(),
         method,
-        levels: req.get("levels").as_usize().unwrap_or(2).clamp(1, 6),
-        max_iter: req.get("iters").as_usize().unwrap_or(20).clamp(1, 500),
-        ..Default::default()
+        levels: req.get("levels").as_usize().unwrap_or(2),
+        iters: req.get("iters").as_usize().unwrap_or(20),
+        out: req.get("out").as_str().map(std::path::PathBuf::from),
     };
-    let res = crate::ffd::register(&reference, &floating, &cfg);
-    if let Some(out) = req.get("out").as_str() {
-        if let Err(e) = crate::volume::io::save(&res.warped, std::path::Path::new(out)) {
-            return err_line(&format!("saving {out}: {e}"));
+    match run_register(&op) {
+        Err(OpError { code, message }) => err_line(code, &message),
+        Ok(outcome) => {
+            let res = &outcome.result;
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("cost", Json::Num(res.cost)),
+                ("ssim", Json::Num(outcome.ssim)),
+                ("mae", Json::Num(outcome.mae)),
+                ("total_s", Json::Num(res.timing.total_s)),
+                ("bsi_s", Json::Num(res.timing.bsi_s)),
+                ("iterations", Json::Num(res.timing.iterations as f64)),
+            ])
+            .to_string()
         }
     }
-    Json::obj(vec![
-        ("ok", Json::Bool(true)),
-        ("cost", Json::Num(res.cost)),
-        ("ssim", Json::Num(crate::metrics::ssim(&reference, &res.warped))),
-        ("mae", Json::Num(crate::metrics::mae_normalized(&reference, &res.warped))),
-        ("total_s", Json::Num(res.timing.total_s)),
-        ("bsi_s", Json::Num(res.timing.bsi_s)),
-        ("iterations", Json::Num(res.timing.iterations as f64)),
-    ])
-    .to_string()
 }
 
 fn handle_interpolate(req: &Json, sched: &Scheduler) -> String {
     let dims_arr = match req.get("dims").as_arr() {
         Some(a) if a.len() == 3 => a,
-        _ => return err_line("dims must be [nz,ny,nx]"),
+        _ => return err_line("bad_request", "dims must be [nz,ny,nx]"),
     };
     let (Some(nz), Some(ny), Some(nx)) = (
         dims_arr[0].as_usize(),
         dims_arr[1].as_usize(),
         dims_arr[2].as_usize(),
     ) else {
-        return err_line("dims entries must be non-negative integers");
+        return err_line("bad_request", "dims entries must be non-negative integers");
     };
-    if nx == 0 || ny == 0 || nz == 0 || nx * ny * nz > 1 << 27 {
-        return err_line("dims out of supported range");
+    // checked_mul: a wrapping product would let an absurd request through
+    // the cap and abort the server on allocation.
+    match nx.checked_mul(ny).and_then(|v| v.checked_mul(nz)) {
+        Some(v) if v > 0 && v <= 1 << 27 => {}
+        _ => return err_line("bad_request", "dims out of supported range"),
     }
     let tile = req.get("tile").as_usize().unwrap_or(5);
     if !(1..=16).contains(&tile) {
-        return err_line("tile out of supported range (1..=16)");
+        return err_line("bad_request", "tile out of supported range (1..=16)");
     }
     let seed = req.get("seed").as_usize().unwrap_or(0) as u64;
     let engine = match Engine::parse(req.get("engine").as_str().unwrap_or("cpu:ttli")) {
         Some(e) => e,
-        None => return err_line("unknown engine"),
+        None => return err_line("bad_request", "unknown engine"),
     };
     let vol_dims = Dims::new(nx, ny, nz);
     let mut grid = ControlGrid::zeros(vol_dims, [tile, tile, tile]);
@@ -256,10 +265,10 @@ fn handle_interpolate(req: &Json, sched: &Scheduler) -> String {
     };
     let id = job.id;
     match sched.submit_and_wait(job) {
-        Err(SubmitError::QueueFull) => err_line("backpressure: queue full"),
-        Err(SubmitError::ShuttingDown) => err_line("shutting down"),
+        Err(SubmitError::QueueFull) => err_line("backpressure", "backpressure: queue full"),
+        Err(SubmitError::ShuttingDown) => err_line("shutting_down", "shutting down"),
         Ok(outcome) => match outcome.result {
-            Err(e) => err_line(&e),
+            Err(e) => err_line("exec_failed", &e),
             Ok(field) => {
                 // Order-independent checksum so clients can verify numerics.
                 let sum: f64 = field.x.iter().chain(&field.y).chain(&field.z).map(|&v| v as f64).sum();

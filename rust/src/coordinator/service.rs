@@ -11,12 +11,14 @@
 //! whole-volume path.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use super::job::{Engine, InterpolateJob};
 use crate::bspline::exec::{self, WorkerPool};
 use crate::bspline::{Interpolator, Method};
 use crate::runtime::PjrtHandle;
+use crate::volume::formats::{self, VolError};
 use crate::volume::VectorField;
 
 /// Stateless-per-request execution service (cheap to clone across workers).
@@ -104,6 +106,100 @@ impl InterpolationService {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Server-side registration op
+
+/// A structured op failure: `code` is the stable machine-readable cause the
+/// line protocol returns verbatim (`not_found` / `malformed` /
+/// `unsupported` / `io` / `bad_request` / ...), `message` the human text.
+#[derive(Debug)]
+pub struct OpError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl OpError {
+    pub fn new(code: &'static str, message: impl Into<String>) -> OpError {
+        OpError { code, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> OpError {
+        OpError::new("bad_request", message)
+    }
+
+    /// Promote a volume-IO failure, keeping its distinct cause code.
+    pub fn from_vol(context: &str, e: VolError) -> OpError {
+        OpError { code: e.code(), message: format!("{context}: {e}") }
+    }
+}
+
+/// The coordinator's `register` op: server-side paths in any supported
+/// volume format (`.nii` / `.mhd` / `.mha` / `.vol`) — the IGS workflow of
+/// submitting an intra-op scan for registration against a stored pre-op.
+#[derive(Clone, Debug)]
+pub struct RegisterOp {
+    pub reference: PathBuf,
+    pub floating: PathBuf,
+    pub method: Method,
+    pub levels: usize,
+    pub iters: usize,
+    /// Optional output path; format inferred from its extension.
+    pub out: Option<PathBuf>,
+}
+
+/// Registration result plus the similarity summary the protocol reports.
+pub struct RegisterOutcome {
+    pub result: crate::ffd::FfdResult,
+    pub ssim: f64,
+    pub mae: f64,
+}
+
+/// Execute a registration op (runs inline on the calling thread:
+/// registration is long-running and stateful, unlike the batched
+/// interpolation jobs).
+pub fn run_register(op: &RegisterOp) -> Result<RegisterOutcome, OpError> {
+    // Validate the output destination BEFORE the minutes-long registration:
+    // a bad extension must fail in milliseconds, not discard the compute.
+    if let Some(out) = &op.out {
+        formats::writable_format(out)
+            .map_err(|e| OpError::from_vol(&format!("out {}", out.display()), e))?;
+    }
+    let reference = formats::load_any(&op.reference)
+        .map_err(|e| OpError::from_vol("reference", e))?;
+    let floating =
+        formats::load_any(&op.floating).map_err(|e| OpError::from_vol("floating", e))?;
+    if reference.dims != floating.dims {
+        return Err(OpError::bad_request(format!(
+            "reference/floating dims mismatch ({:?} vs {:?})",
+            reference.dims.as_array(),
+            floating.dims.as_array()
+        )));
+    }
+    // Registration runs in voxel space: with matching dims but different
+    // voxel spacing the result would be world-space-meaningless while still
+    // reporting ok:true — reject it.
+    if !reference.spacing_compatible(&floating) {
+        return Err(OpError::bad_request(format!(
+            "reference/floating voxel spacing mismatch ({:?} vs {:?} mm) — resample first",
+            reference.spacing, floating.spacing
+        )));
+    }
+    let cfg = crate::ffd::FfdConfig {
+        method: op.method,
+        levels: op.levels.clamp(1, 6),
+        max_iter: op.iters.clamp(1, 500),
+        ..Default::default()
+    };
+    let result = crate::ffd::register(&reference, &floating, &cfg);
+    if let Some(out) = &op.out {
+        formats::save_any(&result.warped, out)
+            .map_err(|e| OpError::from_vol(&format!("saving {}", out.display()), e))?;
+    }
+    let ssim = crate::metrics::ssim(&reference, &result.warped);
+    let mae = crate::metrics::mae_normalized(&reference, &result.warped);
+    Ok(RegisterOutcome { result, ssim, mae })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +254,62 @@ mod tests {
         // clones still amortizes to one instance per method.
         let svc2 = svc.clone();
         assert!(same(&svc2.cpu_instance(Method::Ttli), &a));
+    }
+
+    #[test]
+    fn run_register_maps_missing_files_to_not_found() {
+        let op = RegisterOp {
+            reference: "/nonexistent/a.nii".into(),
+            floating: "/nonexistent/b.nii".into(),
+            method: Method::Ttli,
+            levels: 1,
+            iters: 1,
+            out: None,
+        };
+        let e = run_register(&op).unwrap_err();
+        assert_eq!(e.code, "not_found");
+        assert!(e.message.contains("reference"), "{}", e.message);
+    }
+
+    #[test]
+    fn run_register_rejects_spacing_mismatch() {
+        use crate::volume::{formats, Dims, Volume};
+        let dir = std::env::temp_dir().join("ffdreg-service-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = dir.join("sp_a.nii");
+        let b = dir.join("sp_b.nii");
+        let va = Volume::zeros(Dims::new(8, 8, 8), [0.94, 0.94, 1.0]);
+        let vb = Volume::zeros(Dims::new(8, 8, 8), [2.0, 2.0, 2.0]);
+        formats::save_any(&va, &a).unwrap();
+        formats::save_any(&vb, &b).unwrap();
+        let op = RegisterOp {
+            reference: a,
+            floating: b,
+            method: Method::Ttli,
+            levels: 1,
+            iters: 1,
+            out: None,
+        };
+        let e = run_register(&op).unwrap_err();
+        assert_eq!(e.code, "bad_request");
+        assert!(e.message.contains("spacing"), "{}", e.message);
+    }
+
+    #[test]
+    fn run_register_maps_garbage_to_malformed() {
+        let dir = std::env::temp_dir().join("ffdreg-service-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("garbage.nii");
+        std::fs::write(&bad, b"this is not a nifti file at all................").unwrap();
+        let op = RegisterOp {
+            reference: bad.clone(),
+            floating: bad,
+            method: Method::Ttli,
+            levels: 1,
+            iters: 1,
+            out: None,
+        };
+        assert_eq!(run_register(&op).unwrap_err().code, "malformed");
     }
 
     #[test]

@@ -104,8 +104,11 @@ pub fn register_multilevel(reference: &Volume, floating: &Volume, cfg: &FfdConfi
     let field = interp.interpolate(&grid, reference.dims);
     timing.bsi_s += t0.elapsed().as_secs_f64();
     let t1 = Instant::now();
-    let warped = warp(floating, &field);
+    let mut warped = warp(floating, &field);
     timing.warp_s += t1.elapsed().as_secs_f64();
+    // The warped image lives on the reference lattice: stamp the reference's
+    // world-space geometry so saved outputs round-trip in scanner space.
+    warped.copy_geometry_from(reference);
 
     timing.total_s = t_start.elapsed().as_secs_f64();
     timing.other_s =
@@ -171,7 +174,9 @@ mod tests {
     #[test]
     fn multilevel_recovers_translation_better_than_identity() {
         let dims = Dims::new(32, 32, 32);
-        let reference = blob(dims, 16.0, 16.0, 16.0, 40.0);
+        let mut reference = blob(dims, 16.0, 16.0, 16.0, 40.0);
+        reference.spacing = [0.9, 0.9, 1.1];
+        reference.origin = [-14.0, 3.0, 25.0];
         let floating = blob(dims, 18.0, 15.0, 16.5, 40.0);
         let cfg = FfdConfig {
             levels: 2,
@@ -187,5 +192,8 @@ mod tests {
         assert!(after < 0.3 * before, "{before} -> {after}");
         assert!(res.timing.total_s > 0.0);
         assert!(res.timing.bsi_fraction() > 0.0 && res.timing.bsi_fraction() < 1.0);
+        // Warped output carries the reference's world-space geometry.
+        assert_eq!(res.warped.spacing, reference.spacing);
+        assert_eq!(res.warped.origin, reference.origin);
     }
 }

@@ -8,8 +8,11 @@
 //!   artifacts    summarize the AOT artifact manifest
 //!   version      print the version
 //!
-//! Run `ffdreg <cmd> --help` conceptually via README; flags are parsed by
-//! the in-repo CLI substrate (rust/src/cli.rs).
+//! Volume paths accept any supported format — NIfTI-1 (`.nii`), MetaImage
+//! (`.mhd`/`.mha`) or the legacy `.vol` container — detected by magic on
+//! input and by extension on output (volume::formats). Run
+//! `ffdreg <cmd> --help` conceptually via README; flags are parsed by the
+//! in-repo CLI substrate (rust/src/cli.rs).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -18,8 +21,9 @@ use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::cli::Args;
 use ffdreg::config::Config;
 use ffdreg::coordinator::{InterpolationService, Scheduler, SchedulerConfig};
+use ffdreg::util::error::{anyhow, Context, Error};
 use ffdreg::util::timer;
-use ffdreg::volume::{io, Dims};
+use ffdreg::volume::{formats, Dims, Volume};
 
 fn main() {
     let args = Args::from_env();
@@ -41,8 +45,8 @@ fn main() {
         }
     }
     .map_or_else(
-        |e| {
-            eprintln!("error: {e}");
+        |e: Error| {
+            eprintln!("error: {e:#}");
             1
         },
         |_| 0,
@@ -56,25 +60,33 @@ fn print_help() {
 
 USAGE: ffdreg <command> [flags]
 
-  phantom      --out DIR [--scale 0.25] [--seed 7]
+  phantom      --out DIR [--scale 0.25] [--seed 7] [--format vol|nii|mhd|mha]
   interpolate  [--method ttli|tt|tv|tv-tiling|vt|vv|th|ref|pjrt] [--dims X,Y,Z]
                [--tile 5] [--seed 1] [--check] [--threads N]
-  register     --reference A.vol --floating B.vol [--out warped.vol]
+               [--input VOLUME] [--out WARPED]
+  register     --reference A --floating B [--out warped.nii]
                [--method M] [--levels 3] [--iters 60] [--tile 5] [--be 0.001]
                [--no-affine] [--config cfg.json]
-  affine       --reference A.vol --floating B.vol [--out warped.vol]
+  affine       --reference A --floating B [--out warped.nii]
   serve        [--addr 127.0.0.1:7847] [--workers N] [--queue 256] [--batch 8]
                [--threads N]
   artifacts    [--dir artifacts]
-  version",
+  version
+
+Volume paths accept .nii (NIfTI-1), .mhd/.mha (MetaImage) and .vol; output
+format is inferred from the --out extension.",
         ffdreg::version()
     );
 }
 
-fn cmd_phantom(args: &Args) -> Result<(), String> {
+fn cmd_phantom(args: &Args) -> Result<(), Error> {
     let out = args.get("out").unwrap_or("data");
     let scale = args.get_f64("scale", 0.25)?;
     let seed = args.get_usize("seed", 7)? as u64;
+    let format = args.get("format").unwrap_or("vol");
+    if !["vol", "nii", "mhd", "mha"].contains(&format) {
+        return Err(anyhow!("--format must be one of vol|nii|mhd|mha, got '{format}'"));
+    }
     println!("generating 5 registration pairs at scale {scale} (seed {seed})...");
     let (pairs, secs) = timer::time_once(|| ffdreg::phantom::dataset::generate_dataset(scale, seed));
     for p in &pairs {
@@ -87,28 +99,61 @@ fn cmd_phantom(args: &Args) -> Result<(), String> {
             p.pre.dims.count() as f64 / 1e6
         );
     }
-    ffdreg::phantom::dataset::save_dataset(&pairs, Path::new(out))
-        .map_err(|e| format!("saving dataset: {e}"))?;
-    println!("wrote {} volumes to {out}/ in {}", pairs.len() * 2, timer::fmt_secs(secs));
+    ffdreg::phantom::dataset::save_dataset_as(&pairs, Path::new(out), format)
+        .context("saving dataset")?;
+    println!(
+        "wrote {} .{format} volumes to {out}/ in {}",
+        pairs.len() * 2,
+        timer::fmt_secs(secs)
+    );
     Ok(())
 }
 
-fn cmd_interpolate(args: &Args) -> Result<(), String> {
-    let dims = args.get_triple("dims", [64, 64, 64])?;
+fn cmd_interpolate(args: &Args) -> Result<(), Error> {
     let tile = args.get_usize("tile", 5)?;
     let seed = args.get_usize("seed", 1)? as u64;
     // 0 = process default pool (FFDREG_THREADS / machine parallelism).
     let threads = args.get_usize("threads", 0)?;
-    let vd = Dims::new(dims[0], dims[1], dims[2]);
+    // With --input, the deformation is evaluated on a real volume's lattice
+    // (and the warped result can be saved); otherwise --dims picks a
+    // synthetic lattice.
+    let input: Option<Volume> = match args.get("input") {
+        Some(p) => Some(
+            formats::load_any(Path::new(p)).with_context(|| format!("loading --input {p}"))?,
+        ),
+        None => None,
+    };
+    let vd = match &input {
+        Some(v) => {
+            println!(
+                "input volume: {}x{}x{} spacing [{:.3}, {:.3}, {:.3}] mm origin [{:.1}, {:.1}, {:.1}] mm",
+                v.dims.nx, v.dims.ny, v.dims.nz,
+                v.spacing[0], v.spacing[1], v.spacing[2],
+                v.origin[0], v.origin[1], v.origin[2]
+            );
+            v.dims
+        }
+        None => {
+            let dims = args.get_triple("dims", [64, 64, 64])?;
+            Dims::new(dims[0], dims[1], dims[2])
+        }
+    };
     let mut grid = ControlGrid::zeros(vd, [tile, tile, tile]);
     grid.randomize(seed, 5.0);
 
     let engine = args.get("method").unwrap_or("ttli");
     if engine == "pjrt" {
+        // The PJRT path times the AOT kernel only; it has no warp/save
+        // stage, so silently accepting these flags would drop the output.
+        if input.is_some() || args.has("out") {
+            return Err(anyhow!(
+                "--input/--out are not supported with --method pjrt (no warp stage on that path)"
+            ));
+        }
         let rt = ffdreg::runtime::Runtime::open(&ffdreg::runtime::default_artifact_dir())
-            .map_err(|e| format!("{e:#}"))?;
+            .map_err(|e| anyhow!("{e:#}"))?;
         let (field, secs) = timer::time_once(|| rt.bsi_field(&grid, vd));
-        field.map_err(|e| format!("{e:#}"))?;
+        field.map_err(|e| anyhow!("{e:#}"))?;
         println!(
             "pjrt bsi_ttli: {} voxels in {} ({:.2} ns/voxel)",
             vd.count(),
@@ -118,7 +163,13 @@ fn cmd_interpolate(args: &Args) -> Result<(), String> {
         return Ok(());
     }
 
-    let method = Method::parse(engine).ok_or_else(|| format!("unknown method '{engine}'"))?;
+    // --out only makes sense with --input (it saves the warped input);
+    // silently ignoring it would drop the user's expected output.
+    if args.has("out") && input.is_none() {
+        return Err(anyhow!("--out requires --input (it saves the warped input volume)"));
+    }
+    check_out(args)?;
+    let method = Method::parse(engine).ok_or_else(|| anyhow!("unknown method '{engine}'"))?;
     let imp = if threads > 0 { method.par_instance(threads) } else { method.instance() };
     let stats = timer::time_adaptive(3, 20, 0.5, || {
         std::hint::black_box(imp.interpolate(&grid, vd));
@@ -154,19 +205,63 @@ fn cmd_interpolate(args: &Args) -> Result<(), String> {
             f.mean_abs_diff_f64(&r.x, &r.y, &r.z)
         );
     }
+    if let Some(vol) = &input {
+        let field = imp.interpolate(&grid, vd);
+        // warp() stamps the input's spacing/origin onto the output.
+        let warped = ffdreg::volume::resample::warp(vol, &field);
+        if let Some(out) = args.get("out") {
+            formats::save_any(&warped, Path::new(out))
+                .with_context(|| format!("saving {out}"))?;
+            println!("  wrote warped input to {out}");
+        } else {
+            println!(
+                "  warped input (not saved; pass --out): MAE vs input {:.4}",
+                ffdreg::metrics::mae_normalized(vol, &warped)
+            );
+        }
+    }
     Ok(())
 }
 
-fn load_pair(args: &Args) -> Result<(ffdreg::volume::Volume, ffdreg::volume::Volume), String> {
-    let r = args.get("reference").ok_or("missing --reference")?;
-    let f = args.get("floating").ok_or("missing --floating")?;
-    let reference = io::load(Path::new(r)).map_err(|e| format!("{r}: {e}"))?;
-    let floating = io::load(Path::new(f)).map_err(|e| format!("{f}: {e}"))?;
+fn load_pair(args: &Args) -> Result<(Volume, Volume), Error> {
+    let r = args.get("reference").context("missing --reference")?;
+    let f = args.get("floating").context("missing --floating")?;
+    let reference = formats::load_any(Path::new(r)).with_context(|| r.to_string())?;
+    let floating = formats::load_any(Path::new(f)).with_context(|| f.to_string())?;
+    // Voxel-space registration of different-spacing grids is world-space
+    // questionable; the affine stage can absorb a scale, so this is a loud
+    // warning here (the server's register op, which runs FFD directly,
+    // rejects it outright).
+    if !reference.spacing_compatible(&floating) {
+        eprintln!(
+            "warning: reference/floating voxel spacing differ ({:?} vs {:?} mm) — \
+             world-space metrics of the result are unreliable",
+            reference.spacing, floating.spacing
+        );
+    }
     Ok((reference, floating))
 }
 
-fn cmd_register(args: &Args) -> Result<(), String> {
+/// Fail fast on an unwritable `--out` destination — before the expensive
+/// registration, not after it.
+fn check_out(args: &Args) -> Result<(), Error> {
+    if let Some(out) = args.get("out") {
+        formats::writable_format(Path::new(out)).with_context(|| out.to_string())?;
+    }
+    Ok(())
+}
+
+fn save_out(args: &Args, warped: &Volume) -> Result<(), Error> {
+    if let Some(out) = args.get("out") {
+        formats::save_any(warped, Path::new(out)).with_context(|| out.to_string())?;
+        println!("  wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_register(args: &Args) -> Result<(), Error> {
     let cfg = Config::resolve(args)?;
+    check_out(args)?;
     let (reference, floating) = load_pair(args)?;
     println!(
         "registering {}x{}x{} (method {}, levels {}, tile {:?}, be {})",
@@ -180,6 +275,8 @@ fn cmd_register(args: &Args) -> Result<(), String> {
     );
 
     let floating = if cfg.affine_first {
+        // The affine stage resamples onto the reference lattice, so
+        // mismatched input dims are fine here.
         let (res, secs) = timer::time_once(|| {
             ffdreg::affine::register(&reference, &floating, &Default::default())
         });
@@ -191,6 +288,14 @@ fn cmd_register(args: &Args) -> Result<(), String> {
         );
         res.warped
     } else {
+        // Without it, FFD runs directly on the pair and needs one lattice.
+        if reference.dims != floating.dims {
+            return Err(anyhow!(
+                "reference/floating dims mismatch ({:?} vs {:?}) — drop --no-affine or resample",
+                reference.dims.as_array(),
+                floating.dims.as_array()
+            ));
+        }
         floating
     };
 
@@ -215,14 +320,12 @@ fn cmd_register(args: &Args) -> Result<(), String> {
         ffdreg::metrics::mae_normalized(&reference, &result.warped),
         ffdreg::metrics::ssim(&reference, &result.warped)
     );
-    if let Some(out) = args.get("out") {
-        io::save(&result.warped, Path::new(out)).map_err(|e| format!("{out}: {e}"))?;
-        println!("  wrote {out}");
-    }
+    save_out(args, &result.warped)?;
     Ok(())
 }
 
-fn cmd_affine(args: &Args) -> Result<(), String> {
+fn cmd_affine(args: &Args) -> Result<(), Error> {
+    check_out(args)?;
     let (reference, floating) = load_pair(args)?;
     let (res, secs) =
         timer::time_once(|| ffdreg::affine::register(&reference, &floating, &Default::default()));
@@ -233,14 +336,11 @@ fn cmd_affine(args: &Args) -> Result<(), String> {
         ffdreg::metrics::mae_normalized(&reference, &res.warped),
         ffdreg::metrics::ssim(&reference, &res.warped)
     );
-    if let Some(out) = args.get("out") {
-        io::save(&res.warped, Path::new(out)).map_err(|e| format!("{out}: {e}"))?;
-        println!("wrote {out}");
-    }
+    save_out(args, &res.warped)?;
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<(), String> {
+fn cmd_serve(args: &Args) -> Result<(), Error> {
     let cfg = Config::resolve(args)?;
     let service = InterpolationService::with_default_runtime();
     let per_job = if cfg.intra_threads == 0 {
@@ -265,7 +365,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         },
     ));
     let server = ffdreg::coordinator::server::Server::start(&cfg.server_addr, sched)
-        .map_err(|e| format!("bind {}: {e}", cfg.server_addr))?;
+        .with_context(|| format!("bind {}", cfg.server_addr))?;
     println!("listening on {} — send {{\"op\":\"shutdown\"}} to stop", server.addr);
     // Block until the shutdown op stops the listener: a connect probe fails
     // once the accept loop has exited.
@@ -278,12 +378,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-fn cmd_artifacts(args: &Args) -> Result<(), String> {
+fn cmd_artifacts(args: &Args) -> Result<(), Error> {
     let dir = args.get("dir").map(std::path::PathBuf::from).unwrap_or_else(
         ffdreg::runtime::default_artifact_dir,
     );
     let manifest = ffdreg::runtime::artifacts::Manifest::load(&dir.join("manifest.json"))
-        .map_err(|e| format!("{e:#}"))?;
+        .map_err(|e| anyhow!("{e:#}"))?;
     println!(
         "manifest: format {}, jax {} — {} artifacts",
         manifest.format,

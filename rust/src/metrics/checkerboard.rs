@@ -10,14 +10,16 @@ pub fn checkerboard(a: &Volume, b: &Volume, block: usize) -> Volume {
     assert_eq!(a.dims, b.dims);
     assert!(block >= 1);
     let d = a.dims;
-    Volume::from_fn(d, a.spacing, |x, y, z| {
+    let mut out = Volume::from_fn(d, a.spacing, |x, y, z| {
         let parity = (x / block + y / block + z / block) % 2;
         if parity == 0 {
             a.at(x, y, z)
         } else {
             b.at(x, y, z)
         }
-    })
+    });
+    out.origin = a.origin;
+    out
 }
 
 /// Normalized difference image |A − B| on [0,1]-normalized inputs

@@ -74,12 +74,21 @@ pub fn generate_dataset(scale: f64, seed: u64) -> Vec<RegistrationPair> {
 
 /// Persist a dataset as `<dir>/<name>_{pre,intra}.vol`.
 pub fn save_dataset(pairs: &[RegistrationPair], dir: &Path) -> std::io::Result<()> {
+    save_dataset_as(pairs, dir, "vol").map_err(|e| std::io::Error::other(e.to_string()))
+}
+
+/// Persist a dataset as `<dir>/<name>_{pre,intra}.<ext>` in any supported
+/// format (`vol` / `nii` / `mhd` / `mha`), via the format-agnostic writer.
+pub fn save_dataset_as(
+    pairs: &[RegistrationPair],
+    dir: &Path,
+    ext: &str,
+) -> Result<(), crate::volume::formats::VolError> {
+    use crate::volume::formats::save_any;
     std::fs::create_dir_all(dir)?;
     for p in pairs {
-        io::save(&p.pre, &dir.join(format!("{}_pre.vol", p.name)))
-            .map_err(|e| std::io::Error::other(e.to_string()))?;
-        io::save(&p.intra, &dir.join(format!("{}_intra.vol", p.name)))
-            .map_err(|e| std::io::Error::other(e.to_string()))?;
+        save_any(&p.pre, &dir.join(format!("{}_pre.{ext}", p.name)))?;
+        save_any(&p.intra, &dir.join(format!("{}_intra.{ext}", p.name)))?;
     }
     Ok(())
 }
@@ -131,5 +140,17 @@ mod tests {
         assert_eq!(back.len(), 5);
         assert_eq!(back[1].pre.data, ds[1].pre.data);
         assert_eq!(back[3].intra.dims, ds[3].intra.dims);
+    }
+
+    #[test]
+    fn save_dataset_as_nii_round_trips_through_load_any() {
+        use crate::volume::formats::load_any;
+        let dir = std::env::temp_dir().join("ffdreg-dataset-nii-test");
+        let ds = generate_dataset(0.055, 9);
+        save_dataset_as(&ds, &dir, "nii").unwrap();
+        let back = load_any(&dir.join("Phantom1_pre.nii")).unwrap();
+        assert_eq!(back.dims, ds[0].pre.dims);
+        assert_eq!(back.spacing, ds[0].pre.spacing);
+        assert_eq!(back.data, ds[0].pre.data);
     }
 }

@@ -166,7 +166,7 @@ impl Runtime {
         };
         let out = self.execute(&spec, &[Self::volume_literal(vol)?, field_lit])?;
         let data: Vec<f32> = out[0].to_vec().map_err(|e| anyhow!("read warp: {e:?}"))?;
-        Ok(Volume { dims: vol.dims, spacing: vol.spacing, data })
+        Ok(Volume { dims: vol.dims, spacing: vol.spacing, origin: vol.origin, data })
     }
 
     /// Run one AOT `ffd_step`: returns (new grid values, loss).

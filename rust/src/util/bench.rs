@@ -138,6 +138,123 @@ fn format_cell(v: f64) -> String {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Machine-readable bench records (`--json`)
+
+/// The shared `--json <path>` sink every bench harness carries: a flat list
+/// of per-measurement records written as `BENCH_<name>.json`, so CI and the
+/// perf-trajectory tooling consume benches without scraping the text
+/// tables. Each record is
+/// `{method, dims:[x,y,z], threads, simd, ns_per_voxel, ...extras}`.
+///
+/// `<path>` is a directory (the file lands inside it as
+/// `BENCH_<name>.json`) unless it already ends in `.json`, in which case it
+/// is used verbatim. Without the flag the sink is inert.
+pub struct BenchJson {
+    name: String,
+    dest: Option<PathBuf>,
+    records: Vec<Json>,
+}
+
+impl BenchJson {
+    /// Build from an explicit flag value (`args.get("json")`).
+    pub fn new(name: &str, dest: Option<&str>) -> BenchJson {
+        BenchJson {
+            name: name.to_string(),
+            dest: dest.map(PathBuf::from),
+            records: Vec::new(),
+        }
+    }
+
+    /// Scan the process arguments for `--json <path>` / `--json=<path>` —
+    /// for harnesses that don't otherwise parse flags.
+    pub fn from_env(name: &str) -> BenchJson {
+        let args = crate::cli::Args::from_env();
+        BenchJson::new(name, args.get("json"))
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.dest.is_some()
+    }
+
+    /// Add one measurement record. `threads == 0` means the process-default
+    /// pool; `simd` is the active ISA label (or "-" where not applicable);
+    /// `ns_per_voxel` uses NaN→omitted semantics via `f64::NAN` filtering.
+    pub fn record(
+        &mut self,
+        method: &str,
+        dims: [usize; 3],
+        threads: usize,
+        simd: &str,
+        ns_per_voxel: f64,
+    ) {
+        self.record_extra(method, dims, threads, simd, ns_per_voxel, &[]);
+    }
+
+    /// [`record`](Self::record) plus bench-specific extra columns.
+    pub fn record_extra(
+        &mut self,
+        method: &str,
+        dims: [usize; 3],
+        threads: usize,
+        simd: &str,
+        ns_per_voxel: f64,
+        extra: &[(&str, f64)],
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let mut fields = vec![
+            ("method", Json::Str(method.to_string())),
+            ("dims", Json::arr_usize(&dims)),
+            ("threads", Json::Num(threads as f64)),
+            ("simd", Json::Str(simd.to_string())),
+        ];
+        if ns_per_voxel.is_finite() {
+            fields.push(("ns_per_voxel", Json::Num(ns_per_voxel)));
+        }
+        for &(k, v) in extra {
+            fields.push((k, Json::Num(v)));
+        }
+        self.records.push(Json::obj(fields));
+    }
+
+    /// Write `BENCH_<name>.json`; returns the path on success. Inert (and
+    /// `None`) when `--json` was not given.
+    pub fn finish(&self) -> Option<PathBuf> {
+        let dest = self.dest.as_ref()?;
+        let path = if dest.extension().map(|e| e == "json").unwrap_or(false) {
+            if let Some(parent) = dest.parent().filter(|p| !p.as_os_str().is_empty()) {
+                if let Err(e) = std::fs::create_dir_all(parent) {
+                    eprintln!("  (could not create bench-json dir {}: {e})", parent.display());
+                    return None;
+                }
+            }
+            dest.clone()
+        } else {
+            if let Err(e) = std::fs::create_dir_all(dest) {
+                eprintln!("  (could not create bench-json dir {}: {e})", dest.display());
+                return None;
+            }
+            dest.join(format!("BENCH_{}.json", self.name))
+        };
+        let doc = Json::obj(vec![
+            ("bench", Json::Str(self.name.clone())),
+            ("records", Json::Arr(self.records.clone())),
+        ]);
+        match std::fs::write(&path, doc.to_string_pretty()) {
+            Ok(()) => {
+                println!("  bench-json: wrote {} records to {}", self.records.len(), path.display());
+                Some(path)
+            }
+            Err(e) => {
+                eprintln!("  (could not write {}: {e})", path.display());
+                None
+            }
+        }
+    }
+}
+
 /// Where bench JSON reports land.
 pub fn report_dir() -> PathBuf {
     PathBuf::from(
@@ -183,6 +300,43 @@ mod tests {
         rep.row("b").cell("x", 3.0);
         assert_eq!(rep.rows.len(), 2);
         assert_eq!(rep.rows[0].cells.len(), 2);
+    }
+
+    #[test]
+    fn bench_json_is_inert_without_flag_and_writes_with_it() {
+        let mut off = BenchJson::new("unit_off", None);
+        off.record("ttli", [8, 8, 8], 1, "avx2", 1.25);
+        assert!(!off.enabled());
+        assert!(off.finish().is_none());
+
+        let dir = std::env::temp_dir().join("ffdreg-benchjson-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut on = BenchJson::new("unit_on", dir.to_str());
+        on.record("ttli", [8, 8, 8], 1, "avx2", 1.25);
+        on.record_extra("vt", [16, 8, 8], 4, "sse2", f64::NAN, &[("speedup", 3.5)]);
+        let path = on.finish().expect("written");
+        assert_eq!(path, dir.join("BENCH_unit_on.json"));
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let recs = doc.get("records").as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("method").as_str(), Some("ttli"));
+        assert_eq!(recs[0].get("ns_per_voxel").as_f64(), Some(1.25));
+        // NaN timing omitted, extras kept.
+        assert!(recs[1].get("ns_per_voxel").as_f64().is_none());
+        assert_eq!(recs[1].get("speedup").as_f64(), Some(3.5));
+        assert_eq!(recs[1].get("threads").as_usize(), Some(4));
+    }
+
+    #[test]
+    fn bench_json_explicit_file_destination_creates_parent_dirs() {
+        let dir = std::env::temp_dir().join("ffdreg-benchjson-test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        // Parent does not exist yet — finish() must create it.
+        let file = dir.join("nested").join("custom.json");
+        let mut b = BenchJson::new("whatever", file.to_str());
+        b.record("tv", [4, 4, 4], 0, "-", 9.0);
+        assert_eq!(b.finish().unwrap(), file);
+        assert!(file.exists());
     }
 
     #[test]

@@ -1,0 +1,576 @@
+//! MetaImage (`.mhd`/`.mha`) reader/writer — the ITK/Elastix text-header
+//! format the registration literature ships volumes in.
+//!
+//! A `.mhd` file is a `Key = Value` text header whose `ElementDataFile`
+//! names a sibling raw payload; `.mha` inlines the payload after the
+//! `ElementDataFile = LOCAL` line. Supported keys: `NDims` (must be 3),
+//! `DimSize`, `ElementType` (the six [`Dtype`]s), `ElementSpacing`/
+//! `ElementSize`, `Offset`/`Origin`/`Position`, `ElementByteOrderMSB`/
+//! `BinaryDataByteOrderMSB`, `HeaderSize`, `CompressedData` (rejected when
+//! true). The header is parsed byte-line-wise so an inline binary payload
+//! is never run through UTF-8 validation.
+
+use std::io::{BufRead, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use super::{validate_shape, validate_spacing, Dtype, VolError};
+use crate::volume::Volume;
+
+/// Where the voxel payload lives.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DataFile {
+    /// Inline, immediately after the header (`.mha`).
+    Local,
+    /// A sibling file, resolved relative to the header's directory (`.mhd`).
+    External(String),
+}
+
+/// The decoded subset of a MetaImage header this crate consumes.
+#[derive(Clone, Debug)]
+pub struct MetaHeader {
+    pub dims: crate::volume::Dims,
+    pub spacing: [f32; 3],
+    pub origin: [f32; 3],
+    pub dtype: Dtype,
+    pub big_endian: bool,
+    pub data_file: DataFile,
+    /// Byte offset into the external payload file (`HeaderSize`).
+    pub header_size: u64,
+}
+
+fn met_name(dt: Dtype) -> &'static str {
+    match dt {
+        Dtype::U8 => "MET_UCHAR",
+        Dtype::I16 => "MET_SHORT",
+        Dtype::U16 => "MET_USHORT",
+        Dtype::I32 => "MET_INT",
+        Dtype::F32 => "MET_FLOAT",
+        Dtype::F64 => "MET_DOUBLE",
+    }
+}
+
+fn name_dtype(name: &str) -> Result<Dtype, VolError> {
+    match name {
+        "MET_UCHAR" => Ok(Dtype::U8),
+        "MET_SHORT" => Ok(Dtype::I16),
+        "MET_USHORT" => Ok(Dtype::U16),
+        "MET_INT" => Ok(Dtype::I32),
+        "MET_FLOAT" => Ok(Dtype::F32),
+        "MET_DOUBLE" => Ok(Dtype::F64),
+        other => Err(VolError::Unsupported(format!(
+            "MetaImage ElementType {other} is not supported"
+        ))),
+    }
+}
+
+fn parse_triplet<T: std::str::FromStr>(key: &str, value: &str) -> Result<[T; 3], VolError> {
+    let parts: Vec<&str> = value.split_whitespace().collect();
+    if parts.len() != 3 {
+        return Err(VolError::Format(format!("{key} wants 3 entries, got '{value}'")));
+    }
+    let mut out: Vec<T> = Vec::with_capacity(3);
+    for p in parts {
+        out.push(
+            p.parse::<T>()
+                .map_err(|_| VolError::Format(format!("{key}: cannot parse '{p}'")))?,
+        );
+    }
+    out.try_into().map_err(|_| VolError::Format(format!("{key}: bad triplet")))
+}
+
+fn parse_bool(key: &str, value: &str) -> Result<bool, VolError> {
+    match value.to_ascii_lowercase().as_str() {
+        "true" | "1" => Ok(true),
+        "false" | "0" => Ok(false),
+        _ => Err(VolError::Format(format!("{key} wants True/False, got '{value}'"))),
+    }
+}
+
+/// A printf-style multi-slice pattern (`img%03d.raw`, `slice%d.raw`)?
+/// A bare '%' in an ordinary file name (e.g. `coverage_50%.raw`,
+/// `scan_50%2.raw`) is legal and must not be mistaken for one: only a
+/// `%<digits>d` conversion counts.
+fn is_file_pattern(value: &str) -> bool {
+    let b = value.as_bytes();
+    (0..b.len()).any(|i| {
+        if b[i] != b'%' {
+            return false;
+        }
+        let mut j = i + 1;
+        while j < b.len() && b[j].is_ascii_digit() {
+            j += 1;
+        }
+        j < b.len() && b[j] == b'd'
+    })
+}
+
+/// Parse a MetaImage header from a byte stream, stopping right after the
+/// `ElementDataFile` line — for `.mha` the reader is then positioned at the
+/// first payload byte.
+pub fn read_header<R: BufRead>(r: &mut R) -> Result<MetaHeader, VolError> {
+    let mut dims: Option<[usize; 3]> = None;
+    let mut spacing = [1.0f32; 3];
+    let mut origin = [0.0f32; 3];
+    let mut dtype: Option<Dtype> = None;
+    let mut big_endian = false;
+    let mut data_file: Option<DataFile> = None;
+    let mut header_size: u64 = 0;
+    let mut binary_data: Option<bool> = None;
+    let mut have_spacing = false;
+
+    let mut line = Vec::new();
+    let mut consumed = 0usize;
+    while data_file.is_none() {
+        line.clear();
+        let n = r.read_until(b'\n', &mut line)?;
+        if n == 0 {
+            return Err(VolError::Format(
+                "MetaImage header ended before ElementDataFile".into(),
+            ));
+        }
+        consumed += n;
+        if consumed > 1 << 20 {
+            return Err(VolError::Format("unreasonable MetaImage header length".into()));
+        }
+        let text = std::str::from_utf8(&line)
+            .map_err(|_| VolError::Format("MetaImage header is not UTF-8 text".into()))?;
+        let text = text.trim();
+        if text.is_empty() || text.starts_with('#') {
+            continue;
+        }
+        let (key, value) = text
+            .split_once('=')
+            .ok_or_else(|| VolError::Format(format!("malformed header line '{text}'")))?;
+        let key = key.trim();
+        let value = value.trim();
+        match key {
+            "ObjectType" => {
+                if !value.eq_ignore_ascii_case("image") {
+                    return Err(VolError::Unsupported(format!(
+                        "MetaImage ObjectType {value} (only Image)"
+                    )));
+                }
+            }
+            "NDims" => {
+                if value != "3" {
+                    return Err(VolError::Unsupported(format!(
+                        "NDims = {value} (only 3D volumes)"
+                    )));
+                }
+            }
+            "DimSize" => dims = Some(parse_triplet::<usize>(key, value)?),
+            "ElementSpacing" => {
+                spacing = parse_triplet::<f32>(key, value)?;
+                have_spacing = true;
+            }
+            // MetaIO gives ElementSpacing priority when both keys appear.
+            "ElementSize" => {
+                if !have_spacing {
+                    spacing = parse_triplet::<f32>(key, value)?;
+                }
+            }
+            "Offset" | "Origin" | "Position" => origin = parse_triplet::<f32>(key, value)?,
+            "ElementType" => dtype = Some(name_dtype(value)?),
+            "ElementByteOrderMSB" | "BinaryDataByteOrderMSB" => {
+                big_endian = parse_bool(key, value)?
+            }
+            "CompressedData" => {
+                if parse_bool(key, value)? {
+                    return Err(VolError::Unsupported(
+                        "compressed MetaImage payloads are not supported".into(),
+                    ));
+                }
+            }
+            "BinaryData" => {
+                let b = parse_bool(key, value)?;
+                if !b {
+                    return Err(VolError::Unsupported(
+                        "ASCII MetaImage payloads are not supported".into(),
+                    ));
+                }
+                binary_data = Some(b);
+            }
+            "ElementNumberOfChannels" => {
+                if value != "1" {
+                    return Err(VolError::Unsupported(format!(
+                        "{value}-channel MetaImage volumes are not supported"
+                    )));
+                }
+            }
+            "HeaderSize" => {
+                let v: i64 = value
+                    .parse()
+                    .map_err(|_| VolError::Format(format!("HeaderSize: bad value '{value}'")))?;
+                if v < 0 {
+                    return Err(VolError::Unsupported(
+                        "HeaderSize = -1 (tail-computed offsets) is not supported".into(),
+                    ));
+                }
+                header_size = v as u64;
+            }
+            "ElementDataFile" => {
+                data_file = Some(if value.eq_ignore_ascii_case("local") {
+                    DataFile::Local
+                } else if value.eq_ignore_ascii_case("list") || is_file_pattern(value) {
+                    return Err(VolError::Unsupported(
+                        "multi-file MetaImage payloads (LIST/patterns) are not supported".into(),
+                    ));
+                } else {
+                    DataFile::External(value.to_string())
+                });
+            }
+            // Tolerated metadata (TransformMatrix, AnatomicalOrientation,
+            // CenterOfRotation, Modality, ...): geometry beyond the
+            // axis-aligned spacing+origin model is out of scope.
+            _ => {}
+        }
+    }
+
+    let dims_raw = dims.ok_or_else(|| VolError::Format("missing DimSize".into()))?;
+    let dtype = dtype.ok_or_else(|| VolError::Format("missing ElementType".into()))?;
+    let dims = validate_shape(dims_raw, dtype.size())?;
+    let spacing = validate_spacing(spacing)?;
+    // MetaIO's documented default for an absent BinaryData key is False
+    // (ASCII) — decoding an ASCII payload as raw bytes would produce
+    // silent garbage, so absence is rejected as loudly as an explicit
+    // `BinaryData = False`.
+    if binary_data != Some(true) {
+        return Err(VolError::Unsupported(
+            "ASCII MetaImage payloads are not supported (header needs 'BinaryData = True')"
+                .into(),
+        ));
+    }
+    Ok(MetaHeader {
+        dims,
+        spacing,
+        origin,
+        dtype,
+        big_endian,
+        data_file: data_file.unwrap(),
+        header_size,
+    })
+}
+
+/// Resolve the payload path of an external-data header.
+pub(crate) fn resolve_external(header_path: &Path, raw_name: &str) -> std::path::PathBuf {
+    let raw = Path::new(raw_name);
+    if raw.is_absolute() {
+        raw.to_path_buf()
+    } else {
+        header_path.parent().unwrap_or_else(|| Path::new(".")).join(raw)
+    }
+}
+
+fn read_payload<R: Read>(r: &mut R, h: &MetaHeader) -> Result<Vec<f32>, VolError> {
+    let n = h.dims.count();
+    let mut bytes = vec![0u8; n * h.dtype.size()];
+    r.read_exact(&mut bytes).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            VolError::Format(format!("truncated MetaImage payload (wanted {n} voxels)"))
+        } else {
+            VolError::Io(e)
+        }
+    })?;
+    let mut data = vec![0.0f32; n];
+    // MetaImage has no intensity rescale — decode is identity-affine.
+    h.dtype.decode_into(&bytes, h.big_endian, 1.0, 0.0, &mut data);
+    Ok(data)
+}
+
+/// Load a `.mhd`/`.mha` volume.
+pub fn load(path: &Path) -> Result<Volume, VolError> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let h = read_header(&mut f)?;
+    let data = match &h.data_file {
+        DataFile::Local => read_payload(&mut f, &h)?,
+        DataFile::External(name) => {
+            let raw_path = resolve_external(path, name);
+            let mut rf = std::io::BufReader::new(std::fs::File::open(&raw_path)?);
+            rf.seek(SeekFrom::Start(h.header_size))?;
+            read_payload(&mut rf, &h)?
+        }
+    };
+    Ok(Volume { dims: h.dims, spacing: h.spacing, origin: h.origin, data })
+}
+
+/// Render the text header. `data_file_line` is the literal `ElementDataFile`
+/// value (`LOCAL` or a raw file name).
+fn render_header(vol: &Volume, dtype: Dtype, big_endian: bool, data_file_line: &str) -> String {
+    format!(
+        "ObjectType = Image\n\
+         NDims = 3\n\
+         BinaryData = True\n\
+         BinaryDataByteOrderMSB = {}\n\
+         CompressedData = False\n\
+         TransformMatrix = 1 0 0 0 1 0 0 0 1\n\
+         Offset = {} {} {}\n\
+         ElementSpacing = {} {} {}\n\
+         DimSize = {} {} {}\n\
+         ElementType = {}\n\
+         ElementDataFile = {}\n",
+        if big_endian { "True" } else { "False" },
+        vol.origin[0],
+        vol.origin[1],
+        vol.origin[2],
+        vol.spacing[0],
+        vol.spacing[1],
+        vol.spacing[2],
+        vol.dims.nx,
+        vol.dims.ny,
+        vol.dims.nz,
+        met_name(dtype),
+        data_file_line,
+    )
+}
+
+/// Save as little-endian f32: `.mha` inlines the payload, anything else
+/// writes a `.mhd` header plus a sibling `<stem>.raw`.
+pub fn save(vol: &Volume, path: &Path) -> Result<(), VolError> {
+    save_with(vol, path, Dtype::F32, false)
+}
+
+/// Save with an explicit stored dtype and byte order.
+pub fn save_with(vol: &Volume, path: &Path, dtype: Dtype, big_endian: bool) -> Result<(), VolError> {
+    validate_spacing(vol.spacing)?;
+    let is_mha = path
+        .extension()
+        .and_then(|e| e.to_str())
+        .map(|e| e.eq_ignore_ascii_case("mha"))
+        .unwrap_or(false);
+    // Slab-wise encode (super::write_encoded): no whole-payload byte
+    // buffer; flushes surface ENOSPC-style failures instead of losing them
+    // in BufWriter's silent drop.
+    if is_mha {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(render_header(vol, dtype, big_endian, "LOCAL").as_bytes())?;
+        super::write_encoded(&mut f, &vol.data, dtype, big_endian, 1.0, 0.0)?;
+        f.flush()?;
+    } else {
+        let stem = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| VolError::Format(format!("bad output path {}", path.display())))?;
+        let raw_name = format!("{stem}.raw");
+        // Never emit a header this module's own reader (and ITK) would
+        // parse as a printf-style multi-slice pattern.
+        if is_file_pattern(&raw_name) {
+            return Err(VolError::Unsupported(format!(
+                "output stem '{stem}' looks like a printf multi-file pattern — rename the output"
+            )));
+        }
+        let raw_path = resolve_external(path, &raw_name);
+        // A '<x>.raw' output path would make the sibling payload resolve to
+        // the header file itself and silently truncate it.
+        if raw_path.as_path() == path {
+            return Err(VolError::Unsupported(format!(
+                "output path {} collides with its raw payload — use a .mhd or .mha extension",
+                path.display()
+            )));
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(render_header(vol, dtype, big_endian, &raw_name).as_bytes())?;
+        f.flush()?;
+        let mut rf = std::io::BufWriter::new(std::fs::File::create(&raw_path)?);
+        super::write_encoded(&mut rf, &vol.data, dtype, big_endian, 1.0, 0.0)?;
+        rf.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::Dims;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ffdreg-meta-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> Volume {
+        let mut v = Volume::from_fn(Dims::new(6, 4, 3), [0.9, 0.9, 1.1], |x, y, z| {
+            x as f32 - 2.0 * y as f32 + 0.5 * z as f32
+        });
+        v.origin = [10.0, -20.0, 30.5];
+        v
+    }
+
+    #[test]
+    fn mhd_raw_round_trip_is_bit_exact() {
+        let v = sample();
+        let p = tmp("rt.mhd");
+        save(&v, &p).unwrap();
+        assert!(tmp("rt.raw").exists(), "sibling raw payload");
+        let r = load(&p).unwrap();
+        assert_eq!(r.dims, v.dims);
+        assert_eq!(r.spacing, v.spacing);
+        assert_eq!(r.origin, v.origin);
+        assert_eq!(r.data, v.data);
+    }
+
+    #[test]
+    fn mha_local_round_trip_is_bit_exact() {
+        let v = sample();
+        let p = tmp("rt.mha");
+        save(&v, &p).unwrap();
+        let r = load(&p).unwrap();
+        assert_eq!(r.data, v.data);
+        assert_eq!(r.origin, v.origin);
+    }
+
+    #[test]
+    fn typed_big_endian_round_trip() {
+        let v = sample();
+        for &dt in &[Dtype::I16, Dtype::F64] {
+            let p = tmp(&format!("rt_{}.mha", dt.name()));
+            save_with(&v, &p, dt, true).unwrap();
+            let r = load(&p).unwrap();
+            for (a, b) in v.data.iter().zip(&r.data) {
+                assert!((a - b).abs() <= 0.5, "{dt:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn percent_in_stem_round_trips_but_patterns_are_rejected() {
+        // A literal '%' in the file name is not a multi-file pattern.
+        let v = sample();
+        let p = tmp("coverage_50%.mhd");
+        save(&v, &p).unwrap();
+        assert_eq!(load(&p).unwrap().data, v.data);
+        // printf-style patterns are.
+        assert!(is_file_pattern("img%03d.raw"));
+        assert!(is_file_pattern("slice%d.raw"));
+        assert!(!is_file_pattern("coverage_50%.raw"));
+        let pp = tmp("pattern.mhd");
+        std::fs::write(
+            &pp,
+            "ObjectType = Image\nNDims = 3\nDimSize = 2 2 2\nElementType = MET_FLOAT\nElementDataFile = img%03d.raw\n",
+        )
+        .unwrap();
+        assert_eq!(load(&pp).unwrap_err().code(), "unsupported");
+        // The writer refuses pattern-looking stems outright.
+        assert_eq!(save(&v, &tmp("img%03d.mhd")).unwrap_err().code(), "unsupported");
+        // A literal %<digit> with no 'd' conversion is NOT a pattern.
+        assert!(!is_file_pattern("scan_50%2.raw"));
+        let pn = tmp("scan_50%2.mhd");
+        save(&v, &pn).unwrap();
+        assert_eq!(load(&pn).unwrap().data, v.data);
+    }
+
+    #[test]
+    fn raw_output_path_cannot_clobber_its_own_header() {
+        // '<x>.raw' would make the sibling payload path resolve to the
+        // header file itself.
+        let e = save(&sample(), &tmp("clobber.raw")).unwrap_err();
+        assert_eq!(e.code(), "unsupported");
+        assert!(e.to_string().contains("collides"), "{e}");
+    }
+
+    #[test]
+    fn element_spacing_wins_over_element_size() {
+        let p = tmp("both_spacing.mha");
+        let text = "ObjectType = Image\nNDims = 3\nBinaryData = True\nElementSpacing = 0.9 0.9 1.1\nElementSize = 1 1 1\nDimSize = 1 1 1\nElementType = MET_UCHAR\nElementDataFile = LOCAL\n";
+        let mut bytes = text.as_bytes().to_vec();
+        bytes.push(5u8);
+        std::fs::write(&p, &bytes).unwrap();
+        let v = load(&p).unwrap();
+        assert_eq!(v.spacing, [0.9, 0.9, 1.1]);
+        // Reversed order: ElementSpacing still wins.
+        let p2 = tmp("both_spacing2.mha");
+        let text2 = "ObjectType = Image\nNDims = 3\nBinaryData = True\nElementSize = 1 1 1\nElementSpacing = 0.9 0.9 1.1\nDimSize = 1 1 1\nElementType = MET_UCHAR\nElementDataFile = LOCAL\n";
+        let mut bytes2 = text2.as_bytes().to_vec();
+        bytes2.push(5u8);
+        std::fs::write(&p2, &bytes2).unwrap();
+        assert_eq!(load(&p2).unwrap().spacing, [0.9, 0.9, 1.1]);
+    }
+
+    #[test]
+    fn absent_binary_data_key_is_rejected_as_ascii() {
+        // MetaIO defaults BinaryData to False — absence must not be read
+        // as a raw binary payload.
+        let p = tmp("nobinary.mhd");
+        std::fs::write(
+            &p,
+            "ObjectType = Image\nNDims = 3\nDimSize = 2 2 2\nElementType = MET_FLOAT\nElementDataFile = x.raw\n",
+        )
+        .unwrap();
+        let e = load(&p).unwrap_err();
+        assert_eq!(e.code(), "unsupported");
+        assert!(e.to_string().contains("BinaryData"), "{e}");
+    }
+
+    #[test]
+    fn rejects_compressed_and_ascii() {
+        for (name, line) in [
+            ("comp.mhd", "CompressedData = True"),
+            ("ascii.mhd", "BinaryData = False"),
+        ] {
+            let p = tmp(name);
+            std::fs::write(
+                &p,
+                format!(
+                    "ObjectType = Image\nNDims = 3\nDimSize = 2 2 2\n{line}\nElementType = MET_FLOAT\nElementDataFile = x.raw\n"
+                ),
+            )
+            .unwrap();
+            assert_eq!(load(&p).unwrap_err().code(), "unsupported", "{name}");
+        }
+    }
+
+    #[test]
+    fn missing_required_keys_is_malformed() {
+        let p = tmp("nokeys.mhd");
+        std::fs::write(&p, "ObjectType = Image\nNDims = 3\nElementDataFile = x.raw\n").unwrap();
+        assert_eq!(load(&p).unwrap_err().code(), "malformed");
+        let p2 = tmp("noeof.mhd");
+        std::fs::write(&p2, "ObjectType = Image\nNDims = 3\nDimSize = 2 2 2\n").unwrap();
+        let e = load(&p2).unwrap_err();
+        assert_eq!(e.code(), "malformed");
+        assert!(e.to_string().contains("ElementDataFile"), "{e}");
+    }
+
+    #[test]
+    fn missing_raw_payload_is_not_found() {
+        let p = tmp("noraw.mhd");
+        std::fs::write(
+            &p,
+            "ObjectType = Image\nNDims = 3\nBinaryData = True\nDimSize = 2 2 2\nElementType = MET_FLOAT\nElementDataFile = definitely_missing.raw\n",
+        )
+        .unwrap();
+        assert_eq!(load(&p).unwrap_err().code(), "not_found");
+    }
+
+    #[test]
+    fn header_size_skips_external_prefix() {
+        let p = tmp("hs.mhd");
+        let raw = tmp("hs.raw");
+        let vals = [1.5f32, -2.5, 3.5, 4.5, 5.5, 6.5, 7.5, 8.5];
+        let mut bytes = vec![0xAB; 16]; // 16-byte junk prefix
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&raw, &bytes).unwrap();
+        std::fs::write(
+            &p,
+            "ObjectType = Image\nNDims = 3\nBinaryData = True\nDimSize = 2 2 2\nHeaderSize = 16\nElementType = MET_FLOAT\nElementDataFile = hs.raw\n",
+        )
+        .unwrap();
+        let v = load(&p).unwrap();
+        assert_eq!(v.data, vals);
+        assert_eq!(v.spacing, [1.0; 3], "ElementSpacing defaults to 1");
+    }
+
+    #[test]
+    fn comments_and_blank_lines_are_tolerated() {
+        let p = tmp("cmt.mha");
+        let text = "# exported by ffdreg tests\n\nObjectType = Image\nNDims = 3\nBinaryData = True\nDimSize = 1 1 2\nOffset = 1 2 3\nElementType = MET_UCHAR\nElementDataFile = LOCAL\n";
+        let mut bytes = text.as_bytes().to_vec();
+        bytes.extend_from_slice(&[7u8, 9u8]);
+        std::fs::write(&p, &bytes).unwrap();
+        let v = load(&p).unwrap();
+        assert_eq!(v.data, vec![7.0, 9.0]);
+        assert_eq!(v.origin, [1.0, 2.0, 3.0]);
+    }
+}

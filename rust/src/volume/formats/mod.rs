@@ -1,0 +1,529 @@
+//! Medical image I/O subsystem (DESIGN.md §10): dependency-free readers and
+//! writers for the standard volume formats the paper's clinical workloads
+//! ship in, behind one format-agnostic entry point.
+//!
+//! Formats:
+//! - **NIfTI-1** (`.nii`, [`nifti`]) — 348-byte binary header, both
+//!   endiannesses, six voxel dtypes, `scl_slope`/`scl_inter` rescaling;
+//! - **MetaImage** (`.mhd` + `.raw`, or single-file `.mha`, [`metaimage`])
+//!   — ITK/Elastix text header + raw payload;
+//! - **`.vol`** ([`super::io`]) — the repo's legacy toy container.
+//!
+//! [`load_any`] sniffs the format from the file's leading bytes (falling
+//! back to the extension), [`save_any`] infers it from the extension, and
+//! [`stream::VolumeStream`] decodes any of them slab-by-slab into the
+//! `ZChunk` execution layout without materializing an intermediate buffer.
+//!
+//! All readers decode to the crate's canonical in-memory form (`f32`,
+//! x-fastest) and carry world-space geometry (spacing mm + origin mm) onto
+//! [`Volume`]; writers emit that geometry back out, so a
+//! load → register → save round trip preserves scanner coordinates.
+
+pub mod metaimage;
+pub mod nifti;
+pub mod stream;
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::{io as volio, Volume};
+pub use super::io::VolError;
+pub use stream::{load_streamed, VolumeStream};
+
+/// A supported on-disk volume format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// Legacy `.vol` container.
+    Vol,
+    /// NIfTI-1 single-file `.nii`.
+    Nifti,
+    /// MetaImage `.mhd`/`.mha`.
+    MetaImage,
+}
+
+impl Format {
+    /// Infer a format from a path's extension (the `save_any` rule; also the
+    /// read-side fallback when magic sniffing is inconclusive).
+    pub fn from_extension(path: &Path) -> Option<Format> {
+        let name = path.file_name()?.to_str()?.to_ascii_lowercase();
+        if name.ends_with(".vol") {
+            Some(Format::Vol)
+        } else if name.ends_with(".nii") || name.ends_with(".nii.gz") {
+            Some(Format::Nifti)
+        } else if name.ends_with(".mhd") || name.ends_with(".mha") {
+            Some(Format::MetaImage)
+        } else {
+            None
+        }
+    }
+
+    /// Sniff a format from a file's leading bytes. `Ok(None)` means the
+    /// bytes match no known magic (the caller may fall back to the
+    /// extension); gzip-compressed input is a hard `Unsupported` error.
+    pub fn sniff(path: &Path) -> Result<Option<Format>, VolError> {
+        let mut f = std::fs::File::open(path)?;
+        let (head, got) = read_probe(&mut f)?;
+        sniff_bytes(&head[..got])
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Format::Vol => "vol",
+            Format::Nifti => "nifti-1",
+            Format::MetaImage => "metaimage",
+        }
+    }
+}
+
+/// Read up to one probe's worth (352 bytes — enough for a NIfTI header's
+/// magic field) of leading bytes, tolerating short reads. Shared by
+/// [`Format::sniff`] and the streaming reader's single-open probe.
+pub(crate) fn read_probe<R: Read>(r: &mut R) -> Result<([u8; 352], usize), VolError> {
+    let mut head = [0u8; 352];
+    let mut got = 0usize;
+    loop {
+        let n = r.read(&mut head[got..])?;
+        if n == 0 {
+            break;
+        }
+        got += n;
+        if got == head.len() {
+            break;
+        }
+    }
+    Ok((head, got))
+}
+
+/// Magic-based detection over a leading-bytes probe (shared with the
+/// streaming reader, which sniffs from its already-open file handle).
+pub(crate) fn sniff_bytes(head: &[u8]) -> Result<Option<Format>, VolError> {
+    if head.starts_with(volio::MAGIC) {
+        return Ok(Some(Format::Vol));
+    }
+    if head.len() >= 2 && head[0] == 0x1f && head[1] == 0x8b {
+        return Err(VolError::Unsupported(
+            "gzip-compressed input (.nii.gz?) — decompress first, this build has no zlib".into(),
+        ));
+    }
+    if head.len() >= 4 {
+        let le = i32::from_le_bytes([head[0], head[1], head[2], head[3]]);
+        let be = i32::from_be_bytes([head[0], head[1], head[2], head[3]]);
+        if le == 348 || be == 348 {
+            return Ok(Some(Format::Nifti));
+        }
+    }
+    // MetaImage headers are plain text starting with key = value lines;
+    // `ObjectType` is mandatory and conventionally first.
+    if let Ok(text) = std::str::from_utf8(head) {
+        if text.lines().take(4).any(|l| l.trim_start().starts_with("ObjectType")) {
+            return Ok(Some(Format::MetaImage));
+        }
+    }
+    Ok(None)
+}
+
+/// Magic-first detection with extension fallback over an already-read
+/// probe — shared by [`detect`] and the streaming reader's single-open
+/// path. Errors if neither identifies the format.
+pub(crate) fn detect_from_probe(head: &[u8], path: &Path) -> Result<Format, VolError> {
+    match sniff_bytes(head)? {
+        Some(f) => Ok(f),
+        None => Format::from_extension(path).ok_or_else(|| {
+            VolError::Format(format!(
+                "unrecognized volume format: {} (expected .vol, .nii, .mhd or .mha)",
+                path.display()
+            ))
+        }),
+    }
+}
+
+/// Detect the on-disk format of `path`: magic first, extension as the
+/// tie-breaker. Errors if neither identifies it.
+pub fn detect(path: &Path) -> Result<Format, VolError> {
+    let mut f = std::fs::File::open(path)?;
+    let (head, got) = read_probe(&mut f)?;
+    detect_from_probe(&head[..got], path)
+}
+
+/// Load a volume in any supported format (the CLI/server ingest point).
+///
+/// Ingest is slab-streamed ([`stream`]): one slab of raw bytes in flight
+/// instead of the whole payload, halving peak ingest memory on large
+/// scans. Output is bit-identical to the per-format whole-file loaders
+/// (`io::load` / [`nifti::load`] / [`metaimage::load`]), which remain the
+/// test oracle.
+pub fn load_any(path: &Path) -> Result<Volume, VolError> {
+    stream::load_streamed(path, stream::DEFAULT_SLAB_NZ)
+}
+
+/// The format `save_any` would write for `path`, or the error it would
+/// fail with — callable *before* an expensive pipeline so a bad `--out`
+/// extension fails in milliseconds, not after minutes of registration.
+pub fn writable_format(path: &Path) -> Result<Format, VolError> {
+    let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+    if name.to_ascii_lowercase().ends_with(".nii.gz") {
+        return Err(VolError::Unsupported(
+            "cannot write .nii.gz (no zlib in this build) — use plain .nii".into(),
+        ));
+    }
+    Format::from_extension(path).ok_or_else(|| {
+        VolError::Unsupported(format!(
+            "cannot infer output format from '{}' — use a .vol, .nii, .mhd or .mha extension",
+            path.display()
+        ))
+    })
+}
+
+/// Save a volume, inferring the format from `path`'s extension
+/// (`.vol` / `.nii` / `.mhd` / `.mha`).
+pub fn save_any(vol: &Volume, path: &Path) -> Result<(), VolError> {
+    match writable_format(path)? {
+        Format::Vol => volio::save(vol, path),
+        Format::Nifti => nifti::save(vol, path),
+        Format::MetaImage => metaimage::save(vol, path),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed voxel decode/encode
+
+/// On-disk voxel element type shared by the NIfTI and MetaImage codecs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    U8,
+    I16,
+    U16,
+    I32,
+    F32,
+    F64,
+}
+
+impl Dtype {
+    /// Bytes per stored voxel.
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::U8 => 1,
+            Dtype::I16 | Dtype::U16 => 2,
+            Dtype::I32 | Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::U8 => "u8",
+            Dtype::I16 => "i16",
+            Dtype::U16 => "u16",
+            Dtype::I32 => "i32",
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+        }
+    }
+
+    /// Every supported dtype (test sweeps).
+    pub const ALL: [Dtype; 6] = [Dtype::U8, Dtype::I16, Dtype::U16, Dtype::I32, Dtype::F32, Dtype::F64];
+
+    /// Decode `out.len()` stored voxels from `bytes` into f32, applying the
+    /// affine intensity rescale `v = raw * slope + inter`. The identity
+    /// rescale (slope 1, inter 0) is applied as a bit-exact passthrough for
+    /// f32 data so an f32 round trip preserves every payload (incl. -0.0).
+    ///
+    /// Panics if `bytes.len() != out.len() * self.size()` — callers size the
+    /// slab buffers from the header before decoding.
+    pub fn decode_into(
+        self,
+        bytes: &[u8],
+        big_endian: bool,
+        slope: f32,
+        inter: f32,
+        out: &mut [f32],
+    ) {
+        assert_eq!(bytes.len(), out.len() * self.size(), "slab byte-count mismatch");
+        let identity = slope == 1.0 && inter == 0.0;
+        let (s, i) = (slope as f64, inter as f64);
+        match self {
+            Dtype::U8 => {
+                for (o, &b) in out.iter_mut().zip(bytes) {
+                    *o = if identity { b as f32 } else { (b as f64 * s + i) as f32 };
+                }
+            }
+            Dtype::I16 => {
+                for (o, c) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                    let raw = if big_endian {
+                        i16::from_be_bytes([c[0], c[1]])
+                    } else {
+                        i16::from_le_bytes([c[0], c[1]])
+                    };
+                    *o = if identity { raw as f32 } else { (raw as f64 * s + i) as f32 };
+                }
+            }
+            Dtype::U16 => {
+                for (o, c) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                    let raw = if big_endian {
+                        u16::from_be_bytes([c[0], c[1]])
+                    } else {
+                        u16::from_le_bytes([c[0], c[1]])
+                    };
+                    *o = if identity { raw as f32 } else { (raw as f64 * s + i) as f32 };
+                }
+            }
+            Dtype::I32 => {
+                for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+                    let b = [c[0], c[1], c[2], c[3]];
+                    let raw = if big_endian { i32::from_be_bytes(b) } else { i32::from_le_bytes(b) };
+                    *o = if identity { raw as f32 } else { (raw as f64 * s + i) as f32 };
+                }
+            }
+            Dtype::F32 => {
+                for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+                    let b = [c[0], c[1], c[2], c[3]];
+                    let raw = if big_endian { f32::from_be_bytes(b) } else { f32::from_le_bytes(b) };
+                    *o = if identity { raw } else { (raw as f64 * s + i) as f32 };
+                }
+            }
+            Dtype::F64 => {
+                for (o, c) in out.iter_mut().zip(bytes.chunks_exact(8)) {
+                    let b = [c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]];
+                    let raw = if big_endian { f64::from_be_bytes(b) } else { f64::from_le_bytes(b) };
+                    *o = if identity { raw as f32 } else { (raw * s + i) as f32 };
+                }
+            }
+        }
+    }
+
+    /// Encode f32 voxels to this dtype's on-disk bytes, inverting the
+    /// rescale: `raw = (v - inter) / slope` (rounded and saturated for
+    /// integer dtypes). `slope` must be non-zero.
+    pub fn encode(self, values: &[f32], big_endian: bool, slope: f32, inter: f32) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(values, big_endian, slope, inter, &mut out);
+        out
+    }
+
+    /// [`encode`](Self::encode) into a caller-owned scratch buffer
+    /// (cleared first) — the write-side mirror of
+    /// [`decode_into`](Self::decode_into), so slab-wise savers reuse one
+    /// allocation.
+    pub fn encode_into(
+        self,
+        values: &[f32],
+        big_endian: bool,
+        slope: f32,
+        inter: f32,
+        out: &mut Vec<u8>,
+    ) {
+        assert!(slope != 0.0, "encode slope must be non-zero");
+        let identity = slope == 1.0 && inter == 0.0;
+        let (s, i) = (slope as f64, inter as f64);
+        out.clear();
+        out.reserve(values.len() * self.size());
+        // Stored (pre-rescale) value for v, in f64 to keep i32 exact.
+        let stored = |v: f32| -> f64 {
+            if identity {
+                v as f64
+            } else {
+                (v as f64 - i) / s
+            }
+        };
+        for &v in values {
+            match self {
+                Dtype::U8 => out.push(stored(v).round().clamp(0.0, u8::MAX as f64) as u8),
+                Dtype::I16 => {
+                    let raw = stored(v).round().clamp(i16::MIN as f64, i16::MAX as f64) as i16;
+                    out.extend_from_slice(&if big_endian { raw.to_be_bytes() } else { raw.to_le_bytes() });
+                }
+                Dtype::U16 => {
+                    let raw = stored(v).round().clamp(0.0, u16::MAX as f64) as u16;
+                    out.extend_from_slice(&if big_endian { raw.to_be_bytes() } else { raw.to_le_bytes() });
+                }
+                Dtype::I32 => {
+                    let raw = stored(v).round().clamp(i32::MIN as f64, i32::MAX as f64) as i32;
+                    out.extend_from_slice(&if big_endian { raw.to_be_bytes() } else { raw.to_le_bytes() });
+                }
+                Dtype::F32 => {
+                    // Identity path is a bit-exact passthrough.
+                    let raw = if identity { v } else { stored(v) as f32 };
+                    out.extend_from_slice(&if big_endian { raw.to_be_bytes() } else { raw.to_le_bytes() });
+                }
+                Dtype::F64 => {
+                    let raw = stored(v);
+                    out.extend_from_slice(&if big_endian { raw.to_be_bytes() } else { raw.to_le_bytes() });
+                }
+            }
+        }
+    }
+}
+
+/// Encode and write a voxel payload in bounded slabs — the save-side
+/// mirror of the streaming reader: peak extra memory is one encode slab,
+/// not a second whole-payload byte buffer.
+pub(crate) fn write_encoded<W: Write>(
+    w: &mut W,
+    data: &[f32],
+    dtype: Dtype,
+    big_endian: bool,
+    slope: f32,
+    inter: f32,
+) -> Result<(), VolError> {
+    const CHUNK_VOXELS: usize = 1 << 16;
+    let mut scratch = Vec::new();
+    for chunk in data.chunks(CHUNK_VOXELS) {
+        dtype.encode_into(chunk, big_endian, slope, inter, &mut scratch);
+        w.write_all(&scratch)?;
+    }
+    Ok(())
+}
+
+/// Validate a header-declared shape: three positive dims whose voxel count
+/// (times the element size) fits in memory arithmetic without overflow.
+pub(crate) fn validate_shape(dims: [usize; 3], elem_size: usize) -> Result<super::Dims, VolError> {
+    if dims.iter().any(|&d| d == 0) {
+        return Err(VolError::Format(format!("degenerate dims {dims:?}")));
+    }
+    let count = dims[0]
+        .checked_mul(dims[1])
+        .and_then(|n| n.checked_mul(dims[2]))
+        .ok_or_else(|| VolError::Format(format!("dim overflow: {dims:?}")))?;
+    let bytes = count
+        .checked_mul(elem_size)
+        .ok_or_else(|| VolError::Format(format!("dim overflow: {dims:?}")))?;
+    // A hard sanity cap (64 Gvoxel payload) against absurd headers driving
+    // allocation: real scanner volumes sit 3–5 orders of magnitude below.
+    if bytes > 1usize << 39 {
+        return Err(VolError::Format(format!(
+            "volume of {count} voxels ({bytes} bytes) exceeds the sanity cap"
+        )));
+    }
+    Ok(super::Dims::new(dims[0], dims[1], dims[2]))
+}
+
+/// Validate header-declared voxel spacing: finite and strictly positive.
+pub(crate) fn validate_spacing(spacing: [f32; 3]) -> Result<[f32; 3], VolError> {
+    for (axis, &s) in spacing.iter().enumerate() {
+        if !s.is_finite() || s <= 0.0 {
+            return Err(VolError::Format(format!(
+                "pixdim/spacing must be finite and > 0, got {s} on axis {axis}"
+            )));
+        }
+    }
+    Ok(spacing)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::Dims;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ffdreg-formats-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn extension_mapping() {
+        use std::path::Path;
+        assert_eq!(Format::from_extension(Path::new("a.vol")), Some(Format::Vol));
+        assert_eq!(Format::from_extension(Path::new("b.NII")), Some(Format::Nifti));
+        assert_eq!(Format::from_extension(Path::new("c.nii.gz")), Some(Format::Nifti));
+        assert_eq!(Format::from_extension(Path::new("d.mhd")), Some(Format::MetaImage));
+        assert_eq!(Format::from_extension(Path::new("e.mha")), Some(Format::MetaImage));
+        assert_eq!(Format::from_extension(Path::new("f.raw")), None);
+    }
+
+    #[test]
+    fn sniff_identifies_all_magics() {
+        let v = Volume::from_fn(Dims::new(4, 3, 2), [1.0; 3], |x, _, _| x as f32);
+        let pv = tmp("sniff.vol");
+        crate::volume::io::save(&v, &pv).unwrap();
+        assert_eq!(Format::sniff(&pv).unwrap(), Some(Format::Vol));
+        let pn = tmp("sniff.nii");
+        nifti::save(&v, &pn).unwrap();
+        assert_eq!(Format::sniff(&pn).unwrap(), Some(Format::Nifti));
+        let pm = tmp("sniff.mha");
+        metaimage::save(&v, &pm).unwrap();
+        assert_eq!(Format::sniff(&pm).unwrap(), Some(Format::MetaImage));
+        let px = tmp("sniff.bin");
+        std::fs::write(&px, b"random junk that matches nothing").unwrap();
+        assert_eq!(Format::sniff(&px).unwrap(), None);
+    }
+
+    #[test]
+    fn gzip_magic_is_a_clear_unsupported_error() {
+        let p = tmp("vol.nii.gz");
+        std::fs::write(&p, [0x1f, 0x8b, 0x08, 0x00, 0x00]).unwrap();
+        let e = load_any(&p).unwrap_err();
+        assert_eq!(e.code(), "unsupported");
+        assert!(e.to_string().contains("gzip"), "{e}");
+    }
+
+    #[test]
+    fn save_any_rejects_unknown_extension() {
+        let v = Volume::zeros(Dims::new(2, 2, 2), [1.0; 3]);
+        let e = save_any(&v, &tmp("out.xyz")).unwrap_err();
+        assert_eq!(e.code(), "unsupported");
+    }
+
+    #[test]
+    fn load_any_subsumes_legacy_vol() {
+        let mut v = Volume::from_fn(Dims::new(3, 3, 3), [2.0; 3], |x, y, z| (x + y + z) as f32);
+        v.origin = [1.0, 2.0, 3.0];
+        let p = tmp("legacy_entry.vol");
+        save_any(&v, &p).unwrap();
+        let r = load_any(&p).unwrap();
+        assert_eq!(r.data, v.data);
+        assert_eq!(r.origin, v.origin);
+    }
+
+    #[test]
+    fn dtype_decode_encode_round_trip_integers() {
+        for &dt in &[Dtype::U8, Dtype::I16, Dtype::U16, Dtype::I32] {
+            for &be in &[false, true] {
+                let vals: Vec<f32> = (0..32).map(|i| i as f32).collect();
+                let bytes = dt.encode(&vals, be, 1.0, 0.0);
+                assert_eq!(bytes.len(), vals.len() * dt.size());
+                let mut back = vec![0.0f32; vals.len()];
+                dt.decode_into(&bytes, be, 1.0, 0.0, &mut back);
+                assert_eq!(back, vals, "{dt:?} be={be}");
+            }
+        }
+    }
+
+    #[test]
+    fn dtype_rescale_inverts_within_quantization() {
+        let vals: Vec<f32> = (0..64).map(|i| -3.0 + 0.11 * i as f32).collect();
+        let (slope, inter) = (0.01f32, -3.5f32);
+        let bytes = Dtype::I16.encode(&vals, false, slope, inter);
+        let mut back = vec![0.0f32; vals.len()];
+        Dtype::I16.decode_into(&bytes, false, slope, inter, &mut back);
+        for (a, b) in vals.iter().zip(&back) {
+            // Quantization step is `slope`; round-trip error ≤ slope/2.
+            assert!((a - b).abs() <= slope * 0.5 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn f32_identity_decode_is_bit_exact() {
+        let vals = [0.0f32, -0.0, 1.5, f32::MIN_POSITIVE, -7.25e-20, 3.4e38];
+        for &be in &[false, true] {
+            let bytes = Dtype::F32.encode(&vals, be, 1.0, 0.0);
+            let mut back = vec![0.0f32; vals.len()];
+            Dtype::F32.decode_into(&bytes, be, 1.0, 0.0, &mut back);
+            for (a, b) in vals.iter().zip(&back) {
+                assert_eq!(a.to_bits(), b.to_bits(), "be={be}");
+            }
+        }
+    }
+
+    #[test]
+    fn shape_validation_catches_overflow_and_zeros() {
+        assert!(validate_shape([0, 4, 4], 4).is_err());
+        assert!(validate_shape([usize::MAX / 2, 3, 3], 4).is_err());
+        assert!(validate_shape([1 << 20, 1 << 20, 1 << 20], 8).is_err());
+        assert!(validate_shape([64, 64, 64], 4).is_ok());
+        assert!(validate_spacing([1.0, 0.5, 2.0]).is_ok());
+        assert!(validate_spacing([0.0, 1.0, 1.0]).is_err());
+        assert!(validate_spacing([1.0, f32::NAN, 1.0]).is_err());
+        assert!(validate_spacing([1.0, 1.0, -2.0]).is_err());
+    }
+}

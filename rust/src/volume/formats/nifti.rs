@@ -1,0 +1,578 @@
+//! NIfTI-1 single-file (`.nii`) reader/writer.
+//!
+//! Implements the fixed 348-byte NIfTI-1 header (nifti1.h layout) without
+//! external dependencies: both endiannesses (detected from `sizeof_hdr`),
+//! the six voxel dtypes of [`Dtype`], `scl_slope`/`scl_inter` intensity
+//! rescaling, and dim/pixdim validation. Geometry is carried as the crate's
+//! axis-aligned spacing+origin model: on write the sform encodes
+//! `diag(spacing)` + origin translation; on read the origin is taken from
+//! the sform translation (or `qoffset_*` when only a qform is present) and
+//! the spacing from `pixdim`.
+//!
+//! Detached `.hdr`/`.img` pairs (magic `ni1\0`) and gzip-compressed
+//! `.nii.gz` are detected and rejected with a clear `Unsupported` error.
+
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use super::{validate_shape, validate_spacing, Dtype, VolError};
+use crate::volume::{Dims, Volume};
+
+/// Header length and the default single-file data offset (348 + 4 bytes of
+/// empty extension indicator).
+pub const HEADER_LEN: usize = 348;
+pub const DEFAULT_VOX_OFFSET: u64 = 352;
+
+/// NIfTI-1 datatype codes for the supported [`Dtype`]s.
+fn dtype_code(dt: Dtype) -> i16 {
+    match dt {
+        Dtype::U8 => 2,    // DT_UNSIGNED_CHAR
+        Dtype::I16 => 4,   // DT_SIGNED_SHORT
+        Dtype::I32 => 8,   // DT_SIGNED_INT
+        Dtype::F32 => 16,  // DT_FLOAT
+        Dtype::F64 => 64,  // DT_DOUBLE
+        Dtype::U16 => 512, // DT_UINT16
+    }
+}
+
+fn code_dtype(code: i16) -> Option<Dtype> {
+    match code {
+        2 => Some(Dtype::U8),
+        4 => Some(Dtype::I16),
+        8 => Some(Dtype::I32),
+        16 => Some(Dtype::F32),
+        64 => Some(Dtype::F64),
+        512 => Some(Dtype::U16),
+        _ => None,
+    }
+}
+
+/// The decoded subset of a NIfTI-1 header this crate consumes.
+#[derive(Clone, Debug)]
+pub struct NiftiHeader {
+    pub dims: Dims,
+    pub spacing: [f32; 3],
+    pub origin: [f32; 3],
+    pub dtype: Dtype,
+    pub big_endian: bool,
+    pub slope: f32,
+    pub inter: f32,
+    /// Byte offset of the voxel payload within the `.nii` file.
+    pub vox_offset: u64,
+}
+
+// -- field readers over the raw 348 bytes -----------------------------------
+
+fn i16_at(h: &[u8], off: usize, be: bool) -> i16 {
+    let b = [h[off], h[off + 1]];
+    if be { i16::from_be_bytes(b) } else { i16::from_le_bytes(b) }
+}
+
+fn i32_at(h: &[u8], off: usize, be: bool) -> i32 {
+    let b = [h[off], h[off + 1], h[off + 2], h[off + 3]];
+    if be { i32::from_be_bytes(b) } else { i32::from_le_bytes(b) }
+}
+
+fn f32_at(h: &[u8], off: usize, be: bool) -> f32 {
+    let b = [h[off], h[off + 1], h[off + 2], h[off + 3]];
+    if be { f32::from_be_bytes(b) } else { f32::from_le_bytes(b) }
+}
+
+/// Parse and validate a raw 348-byte header.
+pub fn parse_header(raw: &[u8; HEADER_LEN]) -> Result<NiftiHeader, VolError> {
+    // Endianness: sizeof_hdr must read 348 in exactly one byte order.
+    let big_endian = if i32_at(raw, 0, false) == 348 {
+        false
+    } else if i32_at(raw, 0, true) == 348 {
+        true
+    } else {
+        return Err(VolError::Format(format!(
+            "not a NIfTI-1 file: sizeof_hdr is {} (expected 348)",
+            i32_at(raw, 0, false)
+        )));
+    };
+    let be = big_endian;
+
+    // Magic at 344: "n+1\0" = single file, "ni1\0" = detached .hdr/.img.
+    let magic: [u8; 4] = [raw[344], raw[345], raw[346], raw[347]];
+    if &magic == b"ni1\0" {
+        return Err(VolError::Unsupported(
+            "detached .hdr/.img NIfTI pairs are not supported — use single-file .nii".into(),
+        ));
+    }
+    if &magic != b"n+1\0" {
+        return Err(VolError::Format(format!("bad NIfTI magic {magic:?}")));
+    }
+
+    let ndim = i16_at(raw, 40, be);
+    if !(1..=7).contains(&ndim) {
+        return Err(VolError::Format(format!("dim[0] = {ndim} out of range 1..=7")));
+    }
+    let ndim = ndim as usize;
+    let mut dim = [1usize; 7];
+    for (i, d) in dim.iter_mut().enumerate().take(ndim) {
+        let v = i16_at(raw, 40 + 2 * (i + 1), be);
+        if v <= 0 {
+            return Err(VolError::Format(format!("dim[{}] = {v} must be positive", i + 1)));
+        }
+        *d = v as usize;
+    }
+    // Only scalar 3D volumes (trailing axes of extent 1 are tolerated).
+    if dim[3..].iter().any(|&d| d != 1) {
+        return Err(VolError::Unsupported(format!(
+            "4D+ NIfTI volumes are not supported (dim = {dim:?})"
+        )));
+    }
+
+    let datatype = i16_at(raw, 70, be);
+    let dtype = code_dtype(datatype).ok_or_else(|| {
+        VolError::Unsupported(format!("NIfTI datatype code {datatype} is not supported"))
+    })?;
+    let bitpix = i16_at(raw, 72, be);
+    if bitpix as usize != dtype.size() * 8 {
+        return Err(VolError::Format(format!(
+            "bitpix {bitpix} inconsistent with datatype {} ({} bits)",
+            dtype.name(),
+            dtype.size() * 8
+        )));
+    }
+
+    let dims = validate_shape([dim[0], dim[1], dim[2]], dtype.size())?;
+
+    // Raw pixdim — validated only where it is actually the spacing source:
+    // when an sform is present, its diagonal is the authoritative mm scale
+    // and a stale/zeroed pixdim must not fail the load.
+    let mut pixdim = [0.0f32; 3];
+    for (i, s) in pixdim.iter_mut().enumerate() {
+        let p = f32_at(raw, 76 + 4 * (i + 1), be);
+        // Axes beyond dim[0] are unused; their pixdim is conventionally 0.
+        *s = if i + 1 > ndim && p == 0.0 { 1.0 } else { p };
+    }
+
+    let vox_offset_f = f32_at(raw, 108, be);
+    // Single-file .nii payload starts at ≥ 352 (348-byte header + 4-byte
+    // extension indicator); anything lower would decode header bytes as
+    // voxels.
+    if !vox_offset_f.is_finite() || vox_offset_f < DEFAULT_VOX_OFFSET as f32 {
+        return Err(VolError::Format(format!(
+            "vox_offset {vox_offset_f} must be ≥ {DEFAULT_VOX_OFFSET} for single-file .nii"
+        )));
+    }
+    let vox_offset = vox_offset_f as u64;
+
+    let mut slope = f32_at(raw, 112, be);
+    let mut inter = f32_at(raw, 116, be);
+    if slope == 0.0 {
+        // Spec: scl_slope == 0 means "no rescale stored".
+        slope = 1.0;
+        inter = 0.0;
+    }
+    if !slope.is_finite() || !inter.is_finite() {
+        return Err(VolError::Format(format!(
+            "non-finite scl_slope/scl_inter ({slope}/{inter})"
+        )));
+    }
+
+    // Origin: sform translation wins, then qform offsets, else zero. This
+    // crate's geometry model is axis-aligned spacing+origin only, so a
+    // transform that encodes a rotation, shear or axis flip (negative
+    // direction cosine) is rejected loudly — silently dropping it would
+    // rewrite the world frame on a load→save round trip.
+    let sform_code = i16_at(raw, 254, be);
+    let qform_code = i16_at(raw, 252, be);
+    let mut origin = [0.0f32; 3];
+    let spacing;
+    if sform_code > 0 {
+        let mut diag = [0.0f32; 3];
+        for (axis, base) in [280usize, 296, 312].into_iter().enumerate() {
+            for col in 0..3 {
+                let v = f32_at(raw, base + 4 * col, be);
+                if col == axis {
+                    if !v.is_finite() || v <= 0.0 {
+                        return Err(VolError::Unsupported(format!(
+                            "sform direction cosine on axis {axis} is {v}: rotated/flipped \
+                             orientations are not supported (axis-aligned geometry only)"
+                        )));
+                    }
+                    diag[axis] = v;
+                } else if !v.is_finite() || v.abs() > 1e-3 * pixdim[axis].abs().max(1.0) {
+                    return Err(VolError::Unsupported(
+                        "sform encodes a rotation/shear — only axis-aligned geometry is supported"
+                            .into(),
+                    ));
+                }
+            }
+        }
+        // The sform is the authoritative voxel-to-world map when present:
+        // its diagonal is the mm scale even if pixdim was not kept in sync
+        // (common after resampling tools rewrite only the sform).
+        spacing = validate_spacing(diag)?;
+        origin = [f32_at(raw, 280 + 12, be), f32_at(raw, 296 + 12, be), f32_at(raw, 312 + 12, be)];
+    } else if qform_code > 0 {
+        let (qb, qc, qd) = (f32_at(raw, 256, be), f32_at(raw, 260, be), f32_at(raw, 264, be));
+        let qfac = f32_at(raw, 76, be); // pixdim[0]
+        if ![qb, qc, qd].iter().all(|q| q.is_finite() && q.abs() <= 1e-3) || qfac < 0.0 {
+            return Err(VolError::Unsupported(format!(
+                "qform quaternion ({qb}, {qc}, {qd}) / qfac {qfac} encodes a rotation or z-flip \
+                 — only axis-aligned geometry is supported"
+            )));
+        }
+        spacing = validate_spacing(pixdim)?;
+        origin = [f32_at(raw, 268, be), f32_at(raw, 272, be), f32_at(raw, 276, be)];
+    } else {
+        spacing = validate_spacing(pixdim)?;
+    }
+    if origin.iter().any(|o| !o.is_finite()) {
+        origin = [0.0; 3];
+    }
+
+    Ok(NiftiHeader { dims, spacing, origin, dtype, big_endian, slope, inter, vox_offset })
+}
+
+/// Read and parse a header from a stream (positioned at byte 0). A short
+/// read is reported as a malformed file, not an I/O failure.
+pub fn read_header<R: Read>(r: &mut R) -> Result<NiftiHeader, VolError> {
+    let mut raw = [0u8; HEADER_LEN];
+    r.read_exact(&mut raw).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            VolError::Format("truncated NIfTI header (< 348 bytes)".into())
+        } else {
+            VolError::Io(e)
+        }
+    })?;
+    parse_header(&raw)
+}
+
+/// Load a `.nii` volume.
+pub fn load(path: &Path) -> Result<Volume, VolError> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let h = read_header(&mut f)?;
+    f.seek(SeekFrom::Start(h.vox_offset))?;
+    let n = h.dims.count();
+    let mut bytes = vec![0u8; n * h.dtype.size()];
+    f.read_exact(&mut bytes).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            VolError::Format(format!("truncated NIfTI payload (wanted {n} voxels)"))
+        } else {
+            VolError::Io(e)
+        }
+    })?;
+    let mut data = vec![0.0f32; n];
+    h.dtype.decode_into(&bytes, h.big_endian, h.slope, h.inter, &mut data);
+    Ok(Volume { dims: h.dims, spacing: h.spacing, origin: h.origin, data })
+}
+
+/// Writer knobs: stored dtype, byte order and intensity rescale.
+#[derive(Clone, Copy, Debug)]
+pub struct SaveOptions {
+    pub dtype: Dtype,
+    pub big_endian: bool,
+    /// Stored-to-real rescale `real = stored * slope + inter`; the writer
+    /// inverts it when quantizing. Must be non-zero.
+    pub slope: f32,
+    pub inter: f32,
+}
+
+impl Default for SaveOptions {
+    fn default() -> Self {
+        SaveOptions { dtype: Dtype::F32, big_endian: false, slope: 1.0, inter: 0.0 }
+    }
+}
+
+/// Save as little-endian f32 (lossless for this crate's volumes).
+pub fn save(vol: &Volume, path: &Path) -> Result<(), VolError> {
+    save_with(vol, path, SaveOptions::default())
+}
+
+/// Serialize the 348-byte header for `vol` under `opts`.
+fn build_header(vol: &Volume, opts: &SaveOptions) -> Result<[u8; HEADER_LEN], VolError> {
+    if opts.slope == 0.0 || !opts.slope.is_finite() || !opts.inter.is_finite() {
+        return Err(VolError::Format(format!(
+            "invalid save rescale slope/inter {}/{}",
+            opts.slope, opts.inter
+        )));
+    }
+    let [nx, ny, nz] = vol.dims.as_array();
+    if [nx, ny, nz].iter().any(|&d| d == 0 || d > i16::MAX as usize) {
+        return Err(VolError::Unsupported(format!(
+            "dims {nx}x{ny}x{nz} do not fit NIfTI-1's signed 16-bit dim fields"
+        )));
+    }
+    let be = opts.big_endian;
+    let mut h = [0u8; HEADER_LEN];
+    let put_i16 = |h: &mut [u8], off: usize, v: i16| {
+        h[off..off + 2].copy_from_slice(&if be { v.to_be_bytes() } else { v.to_le_bytes() });
+    };
+    let put_i32 = |h: &mut [u8], off: usize, v: i32| {
+        h[off..off + 4].copy_from_slice(&if be { v.to_be_bytes() } else { v.to_le_bytes() });
+    };
+    let put_f32 = |h: &mut [u8], off: usize, v: f32| {
+        h[off..off + 4].copy_from_slice(&if be { v.to_be_bytes() } else { v.to_le_bytes() });
+    };
+
+    put_i32(&mut h, 0, 348);
+    h[38] = b'r'; // `regular` — conventional
+    put_i16(&mut h, 40, 3); // dim[0]
+    put_i16(&mut h, 42, nx as i16);
+    put_i16(&mut h, 44, ny as i16);
+    put_i16(&mut h, 46, nz as i16);
+    for i in 4..8 {
+        put_i16(&mut h, 40 + 2 * i, 1);
+    }
+    put_i16(&mut h, 70, dtype_code(opts.dtype));
+    put_i16(&mut h, 72, (opts.dtype.size() * 8) as i16);
+    put_f32(&mut h, 76, 1.0); // pixdim[0] = qfac
+    put_f32(&mut h, 80, vol.spacing[0]);
+    put_f32(&mut h, 84, vol.spacing[1]);
+    put_f32(&mut h, 88, vol.spacing[2]);
+    put_f32(&mut h, 108, DEFAULT_VOX_OFFSET as f32);
+    put_f32(&mut h, 112, opts.slope);
+    put_f32(&mut h, 116, opts.inter);
+    h[123] = 2; // xyzt_units: NIFTI_UNITS_MM
+    let descrip = b"ffdreg medical image I/O";
+    h[148..148 + descrip.len()].copy_from_slice(descrip);
+    put_i16(&mut h, 252, 0); // qform_code: none
+    put_i16(&mut h, 254, 1); // sform_code: NIFTI_XFORM_SCANNER_ANAT
+    // sform = diag(spacing) with origin translation.
+    put_f32(&mut h, 280, vol.spacing[0]);
+    put_f32(&mut h, 292, vol.origin[0]);
+    put_f32(&mut h, 300, vol.spacing[1]);
+    put_f32(&mut h, 308, vol.origin[1]);
+    put_f32(&mut h, 320, vol.spacing[2]);
+    put_f32(&mut h, 324, vol.origin[2]);
+    h[344..348].copy_from_slice(b"n+1\0");
+    Ok(h)
+}
+
+/// Save with explicit dtype/endianness/rescale.
+pub fn save_with(vol: &Volume, path: &Path, opts: SaveOptions) -> Result<(), VolError> {
+    validate_spacing(vol.spacing)?;
+    let header = build_header(vol, &opts)?;
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(&header)?;
+    // 4-byte extension indicator (all zero: no extensions) pads to 352.
+    f.write_all(&[0u8; 4])?;
+    // Slab-wise encode: no whole-payload intermediate byte buffer.
+    super::write_encoded(&mut f, &vol.data, opts.dtype, opts.big_endian, opts.slope, opts.inter)?;
+    // Surface flush failures (ENOSPC, ...) instead of losing them in
+    // BufWriter's silent drop.
+    f.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("ffdreg-nifti-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn sample() -> Volume {
+        let mut v = Volume::from_fn(Dims::new(7, 5, 4), [0.49, 0.9, 1.2], |x, y, z| {
+            (x as f32) * 0.25 - (y as f32) * 1.5 + (z as f32) * 7.0 - 3.0
+        });
+        v.origin = [-120.5, 33.0, 4.75];
+        v
+    }
+
+    #[test]
+    fn f32_round_trip_is_bit_exact_both_endiannesses() {
+        let v = sample();
+        for &be in &[false, true] {
+            let p = tmp(if be { "rt_be.nii" } else { "rt_le.nii" });
+            save_with(&v, &p, SaveOptions { big_endian: be, ..Default::default() }).unwrap();
+            let r = load(&p).unwrap();
+            assert_eq!(r.dims, v.dims);
+            assert_eq!(r.spacing, v.spacing);
+            assert_eq!(r.origin, v.origin);
+            assert_eq!(r.data, v.data, "be={be}");
+        }
+    }
+
+    #[test]
+    fn rescaled_i16_round_trip_within_quantization() {
+        let v = sample();
+        let opts = SaveOptions { dtype: Dtype::I16, slope: 0.01, inter: -4.0, ..Default::default() };
+        let p = tmp("rt_i16.nii");
+        save_with(&v, &p, opts).unwrap();
+        let r = load(&p).unwrap();
+        for (a, b) in v.data.iter().zip(&r.data) {
+            assert!((a - b).abs() <= 0.005 + 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn header_fields_survive_byte_level_reparse() {
+        let v = sample();
+        let p = tmp("hdr.nii");
+        save(&v, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(bytes.len(), 352 + v.dims.count() * 4);
+        let mut raw = [0u8; HEADER_LEN];
+        raw.copy_from_slice(&bytes[..HEADER_LEN]);
+        let h = parse_header(&raw).unwrap();
+        assert_eq!(h.dims, v.dims);
+        assert!(!h.big_endian);
+        assert_eq!(h.dtype, Dtype::F32);
+        assert_eq!(h.vox_offset, DEFAULT_VOX_OFFSET);
+        assert_eq!(h.slope, 1.0);
+    }
+
+    fn patched(name: &str, patch: impl FnOnce(&mut Vec<u8>)) -> Result<Volume, VolError> {
+        let p = tmp(name);
+        save(&sample(), &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        patch(&mut bytes);
+        std::fs::write(&p, &bytes).unwrap();
+        load(&p)
+    }
+
+    #[test]
+    fn truncated_header_is_malformed() {
+        let p = tmp("trunc.nii");
+        save(&sample(), &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..200]).unwrap();
+        let e = load(&p).unwrap_err();
+        assert_eq!(e.code(), "malformed");
+        assert!(e.to_string().contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn bad_magic_is_malformed() {
+        let e = patched("badmagic.nii", |b| b[344..348].copy_from_slice(b"XXX\0")).unwrap_err();
+        assert_eq!(e.code(), "malformed");
+    }
+
+    #[test]
+    fn detached_pair_magic_is_unsupported() {
+        let e = patched("ni1.nii", |b| b[344..348].copy_from_slice(b"ni1\0")).unwrap_err();
+        assert_eq!(e.code(), "unsupported");
+    }
+
+    #[test]
+    fn unknown_datatype_is_unsupported() {
+        let e = patched("rgb.nii", |b| {
+            b[70..72].copy_from_slice(&128i16.to_le_bytes()); // DT_RGB24
+            b[72..74].copy_from_slice(&24i16.to_le_bytes());
+        })
+        .unwrap_err();
+        assert_eq!(e.code(), "unsupported");
+    }
+
+    #[test]
+    fn zero_pixdim_is_malformed_when_pixdim_is_the_spacing_source() {
+        // No sform/qform: pixdim is the only scale, so zero is malformed.
+        let e = patched("zpix.nii", |b| {
+            b[254..256].copy_from_slice(&0i16.to_le_bytes()); // sform off
+            b[80..84].copy_from_slice(&0.0f32.to_le_bytes());
+        })
+        .unwrap_err();
+        assert_eq!(e.code(), "malformed");
+        assert!(e.to_string().contains("spacing"), "{e}");
+        // With a valid sform present the same zeroed pixdim still loads
+        // (the sform diagonal is authoritative).
+        let v = patched("zpix_sform.nii", |b| {
+            b[80..84].copy_from_slice(&0.0f32.to_le_bytes());
+        })
+        .unwrap();
+        assert_eq!(v.spacing, sample().spacing);
+    }
+
+    #[test]
+    fn dim_overflow_is_malformed() {
+        let e = patched("overflow.nii", |b| {
+            for off in [42usize, 44, 46] {
+                b[off..off + 2].copy_from_slice(&i16::MAX.to_le_bytes());
+            }
+        })
+        .unwrap_err();
+        assert_eq!(e.code(), "malformed");
+    }
+
+    #[test]
+    fn negative_dim_is_malformed() {
+        let e = patched("negdim.nii", |b| b[44..46].copy_from_slice(&(-5i16).to_le_bytes()))
+            .unwrap_err();
+        assert_eq!(e.code(), "malformed");
+    }
+
+    #[test]
+    fn truncated_payload_is_malformed() {
+        let p = tmp("shortpay.nii");
+        save(&sample(), &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 16]).unwrap();
+        let e = load(&p).unwrap_err();
+        assert_eq!(e.code(), "malformed");
+    }
+
+    #[test]
+    fn slope_zero_reads_as_identity() {
+        // scl_slope = 0 means "no rescale" per the spec.
+        let v = patched("slope0.nii", |b| {
+            b[112..116].copy_from_slice(&0.0f32.to_le_bytes());
+            b[116..120].copy_from_slice(&99.0f32.to_le_bytes());
+        })
+        .unwrap();
+        assert_eq!(v.data, sample().data);
+    }
+
+    #[test]
+    fn flipped_or_rotated_sform_is_rejected_loudly() {
+        // Axis flip: srow_x[0] negated (the RAS/LPS mirror common in
+        // scanner exports) must not be silently dropped.
+        let e = patched("flip.nii", |b| {
+            b[280..284].copy_from_slice(&(-0.49f32).to_le_bytes());
+        })
+        .unwrap_err();
+        assert_eq!(e.code(), "unsupported");
+        assert!(e.to_string().contains("flipped") || e.to_string().contains("axis"), "{e}");
+        // Rotation: a significant off-diagonal term.
+        let e = patched("rot.nii", |b| {
+            b[284..288].copy_from_slice(&0.3f32.to_le_bytes()); // srow_x[1]
+        })
+        .unwrap_err();
+        assert_eq!(e.code(), "unsupported");
+    }
+
+    #[test]
+    fn sform_diagonal_overrides_stale_pixdim() {
+        // pixdim rewritten to 1s while the sform keeps the true mm scale —
+        // the sform is authoritative.
+        let v = patched("stale_pixdim.nii", |b| {
+            for off in [80usize, 84, 88] {
+                b[off..off + 4].copy_from_slice(&1.0f32.to_le_bytes());
+            }
+        })
+        .unwrap();
+        assert_eq!(v.spacing, sample().spacing, "spacing comes from the sform diagonal");
+    }
+
+    #[test]
+    fn rotated_qform_is_rejected_loudly() {
+        let e = patched("qrot.nii", |b| {
+            b[254..256].copy_from_slice(&0i16.to_le_bytes()); // sform off
+            b[252..254].copy_from_slice(&1i16.to_le_bytes()); // qform on
+            b[256..260].copy_from_slice(&0.7071f32.to_le_bytes()); // quatern_b
+        })
+        .unwrap_err();
+        assert_eq!(e.code(), "unsupported");
+    }
+
+    #[test]
+    fn qform_origin_is_used_when_sform_absent() {
+        let v = patched("qform.nii", |b| {
+            b[254..256].copy_from_slice(&0i16.to_le_bytes()); // sform off
+            b[252..254].copy_from_slice(&1i16.to_le_bytes()); // qform on
+            b[268..272].copy_from_slice(&5.0f32.to_le_bytes());
+            b[272..276].copy_from_slice(&6.0f32.to_le_bytes());
+            b[276..280].copy_from_slice(&7.0f32.to_le_bytes());
+        })
+        .unwrap();
+        assert_eq!(v.origin, [5.0, 6.0, 7.0]);
+    }
+}

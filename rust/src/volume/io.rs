@@ -1,28 +1,49 @@
-//! Volume persistence: a minimal `.vol` container (little-endian f32 raw data
-//! + JSON header) standing in for NIfTI, which the offline environment has no
-//! reader for. The format is intentionally trivial so the synthetic dataset
-//! (DESIGN.md S12) can be shared between the rust pipeline, python tests and
-//! external tools.
+//! Legacy `.vol` container (little-endian f32 raw data + JSON header): the
+//! repo's original toy format, kept for compatibility with the synthetic
+//! dataset tooling and the python tests. Real medical formats (NIfTI-1,
+//! MetaImage) live in [`super::formats`]; [`super::formats::load_any`] /
+//! [`save_any`](super::formats::save_any) subsume this module.
 //!
 //! Layout of `<name>.vol`:
 //!   magic  b"FFDVOL1\n"  (8 bytes)
 //!   header_len: u32 LE
-//!   header: JSON  {"dims":[nx,ny,nz],"spacing":[sx,sy,sz]}
+//!   header: JSON  {"dims":[nx,ny,nz],"spacing":[sx,sy,sz],"origin":[ox,oy,oz]}
 //!   data: nx*ny*nz f32 LE, x fastest
+//!
+//! `origin` is optional on read (older files predate world-space geometry).
 
-use std::io::{Read, Write};
+use std::io::{BufRead, Read, Write};
 use std::path::Path;
 
 use super::{Dims, Volume};
 use crate::util::json::Json;
 
-const MAGIC: &[u8; 8] = b"FFDVOL1\n";
+pub(crate) const MAGIC: &[u8; 8] = b"FFDVOL1\n";
 
-/// Errors from volume IO.
+/// Errors from volume IO — shared by every on-disk format.
 #[derive(Debug)]
 pub enum VolError {
+    /// The underlying filesystem/stream operation failed.
     Io(std::io::Error),
+    /// The bytes do not form a valid file of the claimed format.
     Format(String),
+    /// Valid file, but uses a feature this reader does not implement
+    /// (e.g. an exotic NIfTI datatype, gzip compression).
+    Unsupported(String),
+}
+
+impl VolError {
+    /// Stable machine-readable code for protocol surfaces (the coordinator
+    /// server returns this verbatim so clients can branch without parsing
+    /// prose): `not_found` / `io` / `malformed` / `unsupported`.
+    pub fn code(&self) -> &'static str {
+        match self {
+            VolError::Io(e) if e.kind() == std::io::ErrorKind::NotFound => "not_found",
+            VolError::Io(_) => "io",
+            VolError::Format(_) => "malformed",
+            VolError::Unsupported(_) => "unsupported",
+        }
+    }
 }
 
 impl std::fmt::Display for VolError {
@@ -30,6 +51,7 @@ impl std::fmt::Display for VolError {
         match self {
             VolError::Io(e) => write!(f, "io error: {e}"),
             VolError::Format(m) => write!(f, "format error: {m}"),
+            VolError::Unsupported(m) => write!(f, "unsupported: {m}"),
         }
     }
 }
@@ -42,8 +64,99 @@ impl From<std::io::Error> for VolError {
     }
 }
 
+// Unification with the anyhow-shim (util/error.rs): `?` promotes a VolError
+// into the message-chain error used by the CLI and runtime layers, keeping
+// `.context(...)` flow without ad-hoc `format!` stringification.
+impl From<VolError> for crate::util::error::Error {
+    fn from(e: VolError) -> Self {
+        crate::util::error::Error::msg(e.to_string())
+    }
+}
+
+/// `read_exact` that reports a short read as a malformed file (code
+/// `malformed`), matching the NIfTI/MetaImage readers — truncation is a
+/// file problem, not an I/O-layer one.
+fn read_exact_or_malformed<R: Read>(f: &mut R, buf: &mut [u8], what: &str) -> Result<(), VolError> {
+    f.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            VolError::Format(format!("truncated .vol: {what}"))
+        } else {
+            VolError::Io(e)
+        }
+    })
+}
+
+/// Parsed `.vol` header (geometry + where the payload starts). Used by both
+/// the whole-file loader below and the slab-streaming reader
+/// ([`super::formats::stream`]); after a successful call the reader is
+/// positioned at the first data byte.
+pub(crate) fn read_vol_header<R: BufRead>(f: &mut R) -> Result<(Dims, [f32; 3], [f32; 3]), VolError> {
+    let mut magic = [0u8; 8];
+    read_exact_or_malformed(f, &mut magic, "missing magic")?;
+    if &magic != MAGIC {
+        return Err(VolError::Format("bad magic — not a .vol file".into()));
+    }
+    let mut len4 = [0u8; 4];
+    read_exact_or_malformed(f, &mut len4, "missing header length")?;
+    let hlen = u32::from_le_bytes(len4) as usize;
+    if hlen > 1 << 20 {
+        return Err(VolError::Format("unreasonable header length".into()));
+    }
+    let mut hbuf = vec![0u8; hlen];
+    read_exact_or_malformed(f, &mut hbuf, "incomplete header")?;
+    let htxt = String::from_utf8(hbuf).map_err(|_| VolError::Format("header not utf-8".into()))?;
+    let h = Json::parse(&htxt).map_err(|e| VolError::Format(format!("header json: {e}")))?;
+    let dims_arr = h.get("dims").as_arr().ok_or_else(|| VolError::Format("missing dims".into()))?;
+    if dims_arr.len() != 3 {
+        return Err(VolError::Format("dims must have 3 entries".into()));
+    }
+    // Shared shape validation (positive dims, overflow/sanity cap) so a
+    // corrupt header cannot drive an absurd allocation.
+    let dims = super::formats::validate_shape(
+        [
+            dims_arr[0].as_usize().ok_or_else(|| VolError::Format("bad dims".into()))?,
+            dims_arr[1].as_usize().ok_or_else(|| VolError::Format("bad dims".into()))?,
+            dims_arr[2].as_usize().ok_or_else(|| VolError::Format("bad dims".into()))?,
+        ],
+        4,
+    )?;
+    let sp = h.get("spacing").as_arr().ok_or_else(|| VolError::Format("missing spacing".into()))?;
+    if sp.len() != 3 {
+        return Err(VolError::Format("spacing must have 3 entries".into()));
+    }
+    let mut spacing = [0.0f32; 3];
+    for (i, s) in spacing.iter_mut().enumerate() {
+        *s = sp[i].as_f64().ok_or_else(|| VolError::Format("non-numeric spacing".into()))? as f32;
+    }
+    // Same finite-and-positive rule every other format enforces.
+    let spacing = super::formats::validate_spacing(spacing)?;
+    // Optional key (files written before world-space geometry default to
+    // 0) — but when present it must be well-formed, same rule as spacing.
+    let origin = match h.get("origin") {
+        Json::Null => [0.0; 3],
+        j => {
+            let o = j.as_arr().ok_or_else(|| VolError::Format("origin must be an array".into()))?;
+            if o.len() != 3 {
+                return Err(VolError::Format("origin must have 3 entries".into()));
+            }
+            let mut origin = [0.0f32; 3];
+            for (i, dst) in origin.iter_mut().enumerate() {
+                *dst = o[i]
+                    .as_f64()
+                    .ok_or_else(|| VolError::Format("non-numeric origin".into()))?
+                    as f32;
+            }
+            origin
+        }
+    };
+    Ok((dims, spacing, origin))
+}
+
 /// Write a volume to `path`.
 pub fn save(vol: &Volume, path: &Path) -> Result<(), VolError> {
+    // Never emit a file the reader would reject (same rule as the
+    // NIfTI/MetaImage writers).
+    super::formats::validate_spacing(vol.spacing)?;
     let header = Json::obj(vec![
         ("dims", Json::arr_usize(&vol.dims.as_array())),
         (
@@ -54,65 +167,41 @@ pub fn save(vol: &Volume, path: &Path) -> Result<(), VolError> {
                 vol.spacing[2] as f64,
             ]),
         ),
+        (
+            "origin",
+            Json::arr_f64(&[
+                vol.origin[0] as f64,
+                vol.origin[1] as f64,
+                vol.origin[2] as f64,
+            ]),
+        ),
     ])
     .to_string();
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
     f.write_all(MAGIC)?;
     f.write_all(&(header.len() as u32).to_le_bytes())?;
     f.write_all(header.as_bytes())?;
-    // Bulk-convert to bytes.
-    let mut bytes = Vec::with_capacity(vol.data.len() * 4);
-    for &v in &vol.data {
-        bytes.extend_from_slice(&v.to_le_bytes());
-    }
-    f.write_all(&bytes)?;
+    // Slab-wise f32-LE encode through the shared codec (identity path is
+    // bit-exact): no whole-payload intermediate byte buffer.
+    super::formats::write_encoded(&mut f, &vol.data, super::formats::Dtype::F32, false, 1.0, 0.0)?;
+    // Surface flush failures (ENOSPC, ...) instead of losing them in
+    // BufWriter's silent drop.
+    f.flush()?;
     Ok(())
 }
 
 /// Read a volume from `path`.
 pub fn load(path: &Path) -> Result<Volume, VolError> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(VolError::Format("bad magic — not a .vol file".into()));
-    }
-    let mut len4 = [0u8; 4];
-    f.read_exact(&mut len4)?;
-    let hlen = u32::from_le_bytes(len4) as usize;
-    if hlen > 1 << 20 {
-        return Err(VolError::Format("unreasonable header length".into()));
-    }
-    let mut hbuf = vec![0u8; hlen];
-    f.read_exact(&mut hbuf)?;
-    let htxt = String::from_utf8(hbuf).map_err(|_| VolError::Format("header not utf-8".into()))?;
-    let h = Json::parse(&htxt).map_err(|e| VolError::Format(format!("header json: {e}")))?;
-    let dims_arr = h.get("dims").as_arr().ok_or_else(|| VolError::Format("missing dims".into()))?;
-    if dims_arr.len() != 3 {
-        return Err(VolError::Format("dims must have 3 entries".into()));
-    }
-    let dims = Dims::new(
-        dims_arr[0].as_usize().ok_or_else(|| VolError::Format("bad dims".into()))?,
-        dims_arr[1].as_usize().ok_or_else(|| VolError::Format("bad dims".into()))?,
-        dims_arr[2].as_usize().ok_or_else(|| VolError::Format("bad dims".into()))?,
-    );
-    let sp = h.get("spacing").as_arr().ok_or_else(|| VolError::Format("missing spacing".into()))?;
-    if sp.len() != 3 {
-        return Err(VolError::Format("spacing must have 3 entries".into()));
-    }
-    let spacing = [
-        sp[0].as_f64().unwrap_or(1.0) as f32,
-        sp[1].as_f64().unwrap_or(1.0) as f32,
-        sp[2].as_f64().unwrap_or(1.0) as f32,
-    ];
+    let (dims, spacing, origin) = read_vol_header(&mut f)?;
     let n = dims.count();
     let mut bytes = vec![0u8; n * 4];
-    f.read_exact(&mut bytes)?;
+    read_exact_or_malformed(&mut f, &mut bytes, "incomplete voxel payload")?;
     let mut data = Vec::with_capacity(n);
     for c in bytes.chunks_exact(4) {
         data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
     }
-    Ok(Volume { dims, spacing, data })
+    Ok(Volume { dims, spacing, origin, data })
 }
 
 #[cfg(test)]
@@ -127,39 +216,109 @@ mod tests {
 
     #[test]
     fn round_trip_preserves_everything() {
-        let v = Volume::from_fn(Dims::new(5, 4, 3), [0.5, 1.0, 2.0], |x, y, z| {
+        let mut v = Volume::from_fn(Dims::new(5, 4, 3), [0.5, 1.0, 2.0], |x, y, z| {
             (x as f32) * 0.1 - (y as f32) + (z as f32) * 7.0
         });
+        v.origin = [-12.5, 3.0, 40.0];
         let p = tmp("rt.vol");
         save(&v, &p).unwrap();
         let r = load(&p).unwrap();
         assert_eq!(r.dims, v.dims);
         assert_eq!(r.spacing, v.spacing);
+        assert_eq!(r.origin, v.origin);
         assert_eq!(r.data, v.data);
+    }
+
+    #[test]
+    fn legacy_header_without_origin_still_loads() {
+        // Hand-build a header omitting "origin" — what pre-geometry files
+        // on disk look like.
+        let p = tmp("legacy.vol");
+        let header = r#"{"dims":[2,2,2],"spacing":[1.0,1.0,1.0]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for i in 0..8 {
+            bytes.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        std::fs::write(&p, &bytes).unwrap();
+        let v = load(&p).unwrap();
+        assert_eq!(v.origin, [0.0; 3]);
+        assert_eq!(v.at(1, 1, 1), 7.0);
+    }
+
+    #[test]
+    fn rejects_invalid_spacing_as_malformed() {
+        // Zero/negative/non-numeric spacing: same rule as NIfTI/MetaImage.
+        for spacing in [r#"[0.0,1.0,1.0]"#, r#"[1.0,-2.0,1.0]"#, r#"[1.0,"x",1.0]"#] {
+            let p = tmp("badspacing.vol");
+            let header = format!(r#"{{"dims":[1,1,1],"spacing":{spacing}}}"#);
+            let mut bytes = Vec::new();
+            bytes.extend_from_slice(MAGIC);
+            bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+            bytes.extend_from_slice(header.as_bytes());
+            bytes.extend_from_slice(&1.0f32.to_le_bytes());
+            std::fs::write(&p, &bytes).unwrap();
+            let e = load(&p).unwrap_err();
+            assert_eq!(e.code(), "malformed", "{spacing}: {e}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_origin_as_malformed() {
+        // Origin is optional, but when present it must be numeric.
+        let p = tmp("badorigin.vol");
+        let header = r#"{"dims":[1,1,1],"spacing":[1.0,1.0,1.0],"origin":["x",2.0,3.0]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let e = load(&p).unwrap_err();
+        assert_eq!(e.code(), "malformed");
+        assert!(e.to_string().contains("origin"), "{e}");
     }
 
     #[test]
     fn rejects_bad_magic() {
         let p = tmp("bad.vol");
         std::fs::write(&p, b"NOTAVOL!xxxxxxxxxxxx").unwrap();
-        assert!(matches!(load(&p), Err(VolError::Format(_))));
+        let err = load(&p).unwrap_err();
+        assert!(matches!(err, VolError::Format(_)));
+        assert_eq!(err.code(), "malformed");
     }
 
     #[test]
-    fn rejects_truncated_data() {
+    fn rejects_truncated_data_as_malformed() {
         let v = Volume::zeros(Dims::new(4, 4, 4), [1.0; 3]);
         let p = tmp("trunc.vol");
         save(&v, &p).unwrap();
         let full = std::fs::read(&p).unwrap();
         std::fs::write(&p, &full[..full.len() - 8]).unwrap();
-        assert!(load(&p).is_err());
+        let e = load(&p).unwrap_err();
+        // Same code as a truncated .nii/.mhd: clients branch on one code
+        // for "the file is cut short", regardless of format.
+        assert_eq!(e.code(), "malformed");
     }
 
     #[test]
-    fn missing_file_is_io_error() {
-        assert!(matches!(
-            load(Path::new("/nonexistent/nope.vol")),
-            Err(VolError::Io(_))
-        ));
+    fn missing_file_is_io_error_with_not_found_code() {
+        let err = load(Path::new("/nonexistent/nope.vol")).unwrap_err();
+        assert!(matches!(err, VolError::Io(_)));
+        assert_eq!(err.code(), "not_found");
+    }
+
+    #[test]
+    fn vol_error_promotes_into_anyhow_shim() {
+        use crate::util::error::{Context, Error};
+        fn open() -> Result<Volume, Error> {
+            let v = load(Path::new("/nonexistent/nope.vol")).context("loading reference")?;
+            Ok(v)
+        }
+        let e = open().unwrap_err();
+        assert_eq!(e.to_string(), "loading reference");
+        assert!(format!("{e:#}").contains("io error"), "{e:#}");
     }
 }

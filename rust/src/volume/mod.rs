@@ -2,6 +2,7 @@
 //! CT/MRI-like scalar volumes and of dense vector fields (deformation
 //! fields), plus IO, pyramid downsampling and trilinear resampling.
 
+pub mod formats;
 pub mod io;
 pub mod pyramid;
 pub mod resample;
@@ -41,12 +42,17 @@ pub struct Volume {
     pub dims: Dims,
     /// Voxel spacing (mm) per axis — Table 2's "Voxel Spacing".
     pub spacing: [f32; 3],
+    /// World-space position (mm) of the center of voxel (0, 0, 0) — the
+    /// NIfTI sform / MetaImage `Offset` translation. Carried through the
+    /// pyramid, resampling and registration so warped outputs round-trip
+    /// with correct scanner geometry.
+    pub origin: [f32; 3],
     pub data: Vec<f32>,
 }
 
 impl Volume {
     pub fn zeros(dims: Dims, spacing: [f32; 3]) -> Self {
-        Volume { dims, spacing, data: vec![0.0; dims.count()] }
+        Volume { dims, spacing, origin: [0.0; 3], data: vec![0.0; dims.count()] }
     }
 
     pub fn from_fn(dims: Dims, spacing: [f32; 3], mut f: impl FnMut(usize, usize, usize) -> f32) -> Self {
@@ -72,6 +78,48 @@ impl Volume {
     pub fn set(&mut self, x: usize, y: usize, z: usize, v: f32) {
         let i = self.dims.idx(x, y, z);
         self.data[i] = v;
+    }
+
+    /// Adopt another volume's world-space geometry (spacing + origin) —
+    /// used where an output lattice inherits an input's frame (warping,
+    /// smoothing, registration output).
+    pub fn copy_geometry_from(&mut self, other: &Volume) {
+        self.spacing = other.spacing;
+        self.origin = other.origin;
+    }
+
+    /// Same voxel spacing as `other` within 0.1% — the precondition for a
+    /// voxel-space registration of the pair to be world-space meaningful.
+    /// (Origin offsets are deliberately NOT part of this check: the
+    /// deformation is expected to absorb patient/scanner repositioning.)
+    pub fn spacing_compatible(&self, other: &Volume) -> bool {
+        self.spacing
+            .iter()
+            .zip(&other.spacing)
+            .all(|(&a, &b)| (a - b).abs() <= 1e-3 * a.abs().max(b.abs()).max(1.0))
+    }
+
+    /// World origin of a center-aligned resample of this volume by the
+    /// per-axis scale `s` (= in_dim / out_dim): output voxel 0 samples
+    /// source coordinate `0.5·s − 0.5`, so the origin shifts by that many
+    /// source voxels in mm. Shared by `resample::resize` and
+    /// `bspline::prefilter::zoom` so the alignment convention has one home.
+    pub fn center_aligned_origin(&self, s: [f32; 3]) -> [f32; 3] {
+        [
+            self.origin[0] + (0.5 * s[0] - 0.5) * self.spacing[0],
+            self.origin[1] + (0.5 * s[1] - 0.5) * self.spacing[1],
+            self.origin[2] + (0.5 * s[2] - 0.5) * self.spacing[2],
+        ]
+    }
+
+    /// World-space (mm) position of the center of voxel (x, y, z) under the
+    /// axis-aligned spacing+origin geometry this crate carries.
+    pub fn world_at(&self, x: usize, y: usize, z: usize) -> [f32; 3] {
+        [
+            self.origin[0] + x as f32 * self.spacing[0],
+            self.origin[1] + y as f32 * self.spacing[1],
+            self.origin[2] + z as f32 * self.spacing[2],
+        ]
     }
 
     /// Clamped lookup (border replication) — used by samplers and gradients.
@@ -222,6 +270,19 @@ mod tests {
         let n = v.normalized();
         let (lo, hi) = n.intensity_range();
         assert_eq!((lo, hi), (0.0, 1.0));
+    }
+
+    #[test]
+    fn world_geometry_is_origin_plus_spacing() {
+        let mut v = Volume::zeros(Dims::new(4, 4, 4), [0.5, 1.0, 2.0]);
+        assert_eq!(v.origin, [0.0; 3]);
+        v.origin = [-10.0, 5.0, 0.0];
+        assert_eq!(v.world_at(0, 0, 0), [-10.0, 5.0, 0.0]);
+        assert_eq!(v.world_at(2, 1, 3), [-9.0, 6.0, 6.0]);
+        let mut w = Volume::zeros(Dims::new(4, 4, 4), [1.0; 3]);
+        w.copy_geometry_from(&v);
+        assert_eq!(w.spacing, v.spacing);
+        assert_eq!(w.origin, v.origin);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use super::{Dims, Volume};
 fn smooth_axis(vol: &Volume, axis: usize) -> Volume {
     let dims = vol.dims;
     let mut out = Volume::zeros(dims, vol.spacing);
+    out.origin = vol.origin;
     let step: [isize; 3] = [1, 0, 0];
     let _ = step;
     for z in 0..dims.nz {
@@ -44,7 +45,11 @@ pub fn downsample(vol: &Volume) -> Volume {
         (vol.dims.nz + 1) / 2,
     );
     let spacing = [vol.spacing[0] * 2.0, vol.spacing[1] * 2.0, vol.spacing[2] * 2.0];
-    Volume::from_fn(dims, spacing, |x, y, z| s.at(2 * x, 2 * y, 2 * z))
+    let mut out = Volume::from_fn(dims, spacing, |x, y, z| s.at(2 * x, 2 * y, 2 * z));
+    // Voxel (0,0,0) of the coarse level samples voxel (0,0,0) of the fine
+    // level, so the world origin is unchanged (spacing alone doubles).
+    out.origin = vol.origin;
+    out
 }
 
 /// Build an n-level pyramid, finest (original) last — index 0 is coarsest,
@@ -70,10 +75,12 @@ mod tests {
 
     #[test]
     fn downsample_halves_dims_and_doubles_spacing() {
-        let v = Volume::zeros(Dims::new(16, 12, 10), [1.0, 2.0, 3.0]);
+        let mut v = Volume::zeros(Dims::new(16, 12, 10), [1.0, 2.0, 3.0]);
+        v.origin = [-5.0, 7.0, 11.0];
         let d = downsample(&v);
         assert_eq!(d.dims, Dims::new(8, 6, 5));
         assert_eq!(d.spacing, [2.0, 4.0, 6.0]);
+        assert_eq!(d.origin, v.origin, "voxel (0,0,0) stays put");
     }
 
     #[test]

@@ -66,10 +66,20 @@ fn sample_trilinear_interior(vol: &Volume, px: f32, py: f32, pz: f32) -> f32 {
 
 /// Warp `floating` by the displacement field `def` (defined on the reference
 /// lattice): out(v) = floating(v + def(v)).
+///
+/// Geometry contract: the output lattice is the *reference* frame `def`
+/// lives on, but this function only sees `floating`, so it stamps
+/// `floating`'s spacing/origin as a placeholder. Callers that know the
+/// reference frame (registration drivers) MUST re-stamp it with
+/// [`Volume::copy_geometry_from`] — see `ffd::multilevel` and
+/// `affine::register`.
 pub fn warp(floating: &Volume, def: &VectorField) -> Volume {
     let dims = def.dims;
     let fd = floating.dims;
     let mut out = Volume::zeros(dims, floating.spacing);
+    // The output lattice is the reference frame the field is defined on;
+    // callers that know that frame (registration) re-stamp its geometry.
+    out.origin = floating.origin;
     let row = dims.nx;
     // Interior guard: a sample at p is clamp-free iff 0 ≤ p and p+1 ≤ dim−1.
     let (hx, hy, hz) = (fd.nx as f32 - 2.0, fd.ny as f32 - 2.0, fd.nz as f32 - 2.0);
@@ -120,6 +130,7 @@ pub fn resize(vol: &Volume, dims: Dims) -> Volume {
     let sz = vol.dims.nz as f32 / dims.nz as f32;
     let spacing = [vol.spacing[0] * sx, vol.spacing[1] * sy, vol.spacing[2] * sz];
     let mut out = Volume::zeros(dims, spacing);
+    out.origin = vol.center_aligned_origin([sx, sy, sz]);
     let row = dims.nx;
     par_chunks_mut(&mut out.data, row, |chunk_i, slice| {
         let y = chunk_i % dims.ny;
@@ -212,5 +223,20 @@ mod tests {
         assert!((d - 4.0).abs() < 1e-3, "d={d}");
         // spacing doubles
         assert!((r.spacing[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn resize_shifts_origin_by_center_alignment() {
+        let mut v = linear_vol();
+        v.origin = [10.0, 20.0, 30.0];
+        // Halving resolution: s = 2, origin shifts by (0.5·2 − 0.5)·1 mm.
+        let r = resize(&v, Dims::new(4, 4, 4));
+        for a in 0..3 {
+            assert!((r.origin[a] - (v.origin[a] + 0.5)).abs() < 1e-5, "axis {a}");
+        }
+        // Same dims => same geometry.
+        let same = resize(&v, v.dims);
+        assert_eq!(same.origin, v.origin);
+        assert_eq!(same.spacing, v.spacing);
     }
 }

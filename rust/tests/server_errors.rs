@@ -1,0 +1,168 @@
+//! Structured server error codes: the line protocol returns
+//! {"ok":false,"error":...,"code":...} with a distinct, stable code per
+//! failure cause — one regression test per code.
+
+use std::sync::Arc;
+
+use ffdreg::coordinator::server::{Client, Server};
+use ffdreg::coordinator::{InterpolationService, Scheduler, SchedulerConfig};
+use ffdreg::util::json::Json;
+use ffdreg::volume::formats::nifti;
+use ffdreg::volume::{Dims, Volume};
+
+fn start_stack() -> (Server, Arc<Scheduler>) {
+    let sched = Arc::new(Scheduler::start(
+        InterpolationService::new(None),
+        SchedulerConfig { workers: 1, queue_capacity: 8, max_batch: 2, intra_threads: 0 },
+    ));
+    let server = Server::start("127.0.0.1:0", sched.clone()).expect("bind");
+    (server, sched)
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("ffdreg-server-errors");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn register_req(reference: &std::path::Path, floating: &std::path::Path) -> Json {
+    Json::obj(vec![
+        ("op", Json::Str("register".into())),
+        ("reference", Json::Str(reference.to_str().unwrap().into())),
+        ("floating", Json::Str(floating.to_str().unwrap().into())),
+        ("levels", Json::Num(1.0)),
+        ("iters", Json::Num(1.0)),
+    ])
+}
+
+fn expect_code(r: &Json, code: &str) {
+    assert_eq!(r.get("ok").as_bool(), Some(false), "{r:?}");
+    assert_eq!(r.get("code").as_str(), Some(code), "{r:?}");
+    assert!(!r.get("error").as_str().unwrap_or("").is_empty(), "{r:?}");
+}
+
+/// A tiny valid volume saved as .nii for patch-based malformed/unsupported
+/// fixtures.
+fn small_nii(name: &str) -> std::path::PathBuf {
+    let v = Volume::from_fn(Dims::new(8, 8, 8), [1.0; 3], |x, y, z| (x + y + z) as f32);
+    let p = tmp(name);
+    nifti::save(&v, &p).unwrap();
+    p
+}
+
+#[test]
+fn register_missing_file_is_not_found() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let missing = std::path::Path::new("/nonexistent/dir/scan.nii");
+    let r = c.call(&register_req(missing, missing)).unwrap();
+    expect_code(&r, "not_found");
+    assert!(r.get("error").as_str().unwrap().contains("reference"));
+    server.stop();
+}
+
+#[test]
+fn register_garbage_file_is_malformed() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let bad = tmp("garbage.nii");
+    std::fs::write(&bad, b"these bytes are in no way a nifti header........").unwrap();
+    let good = small_nii("good_for_malformed.nii");
+    let r = c.call(&register_req(&bad, &good)).unwrap();
+    expect_code(&r, "malformed");
+    server.stop();
+}
+
+#[test]
+fn register_unsupported_dtype_is_unsupported() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    // Valid .nii, then patch datatype to DT_RGB24 (code 128, bitpix 24):
+    // structurally sound, but a voxel type this engine cannot decode.
+    let p = small_nii("rgb.nii");
+    let mut bytes = std::fs::read(&p).unwrap();
+    bytes[70..72].copy_from_slice(&128i16.to_le_bytes());
+    bytes[72..74].copy_from_slice(&24i16.to_le_bytes());
+    std::fs::write(&p, &bytes).unwrap();
+    let good = small_nii("good_for_unsupported.nii");
+    let r = c.call(&register_req(&p, &good)).unwrap();
+    expect_code(&r, "unsupported");
+    server.stop();
+}
+
+#[test]
+fn register_dims_mismatch_is_bad_request() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let a = small_nii("dims_a.nii");
+    let b = tmp("dims_b.nii");
+    let vb = Volume::zeros(Dims::new(6, 6, 6), [1.0; 3]);
+    nifti::save(&vb, &b).unwrap();
+    let r = c.call(&register_req(&a, &b)).unwrap();
+    expect_code(&r, "bad_request");
+    server.stop();
+}
+
+#[test]
+fn protocol_level_failures_are_bad_request() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    // Unknown op.
+    let r = c.call(&Json::obj(vec![("op", Json::Str("frobnicate".into()))])).unwrap();
+    expect_code(&r, "bad_request");
+    // Register without paths.
+    let r = c.call(&Json::obj(vec![("op", Json::Str("register".into()))])).unwrap();
+    expect_code(&r, "bad_request");
+    // Interpolate with out-of-range dims.
+    let r = c
+        .call(&Json::obj(vec![
+            ("op", Json::Str("interpolate".into())),
+            ("dims", Json::arr_usize(&[0, 4, 4])),
+        ]))
+        .unwrap();
+    expect_code(&r, "bad_request");
+    server.stop();
+}
+
+#[test]
+fn exec_failures_carry_exec_code() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    // PJRT engine with no artifacts loaded: the job reaches execution and
+    // fails there (not a protocol error).
+    let r = c
+        .call(&Json::obj(vec![
+            ("op", Json::Str("interpolate".into())),
+            ("dims", Json::arr_usize(&[8, 8, 8])),
+            ("engine", Json::Str("pjrt".into())),
+        ]))
+        .unwrap();
+    expect_code(&r, "exec_failed");
+    server.stop();
+}
+
+#[test]
+fn register_accepts_mixed_formats_on_success_path() {
+    use ffdreg::volume::formats::{metaimage, save_any};
+    let v = Volume::from_fn(Dims::new(12, 10, 8), [1.0; 3], |x, y, z| {
+        ((x * 3 + y * 5 + z * 7) % 13) as f32
+    });
+    let ref_p = tmp("mixed_ref.nii");
+    let flo_p = tmp("mixed_flo.mhd");
+    let out_p = tmp("mixed_out.mha");
+    save_any(&v, &ref_p).unwrap();
+    metaimage::save(&v, &flo_p).unwrap();
+
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let mut req = register_req(&ref_p, &flo_p);
+    if let Json::Obj(map) = &mut req {
+        map.insert("out".into(), Json::Str(out_p.to_str().unwrap().into()));
+    }
+    let r = c.call(&req).unwrap();
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{r:?}");
+    // Warped result landed as .mha and reloads through the same subsystem.
+    let warped = ffdreg::volume::formats::load_any(&out_p).unwrap();
+    assert_eq!(warped.dims, v.dims);
+    server.stop();
+}
