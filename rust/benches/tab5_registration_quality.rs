@@ -7,16 +7,19 @@
 //! Run: cargo bench --bench tab5_registration_quality
 
 use ffdreg::bspline::Method;
+use ffdreg::cli::Args;
 use ffdreg::ffd::{multilevel::register_with_method, FfdConfig};
 use ffdreg::metrics::{mae_normalized, ssim};
 use ffdreg::phantom::dataset::generate_dataset;
 use ffdreg::util::bench::{full_scale, BenchJson, Report};
 
 fn main() {
+    let args = Args::from_env();
+    let threads = args.get_usize("threads", 0).expect("--threads expects an integer");
     let scale = if full_scale() { 0.25 } else { 0.10 };
     let iters = if full_scale() { 40 } else { 18 };
     let pairs = generate_dataset(scale, 7);
-    let cfg = FfdConfig { levels: 2, max_iter: iters, ..Default::default() };
+    let cfg = FfdConfig { levels: 2, max_iter: iters, threads, ..Default::default() };
     let mut sink = BenchJson::from_env("tab5_registration_quality");
 
     let mut rep = Report::new("tab5_quality", "MAE / SSIM: affine vs proposed vs NiftyReg");
@@ -52,7 +55,7 @@ fn main() {
             ("ffd-ttli", vals[1], vals[4]),
             ("ffd-tv", vals[2], vals[5]),
         ] {
-            sink.record_extra(label, dims, 0, "-", f64::NAN, &[("mae", mae), ("ssim", ssim_v)]);
+            sink.record_extra(label, dims, threads, "-", f64::NAN, &[("mae", mae), ("ssim", ssim_v)]);
         }
     }
     let n = pairs.len() as f64;

@@ -300,11 +300,22 @@ fn worker_loop(shared: &PoolShared) {
     }
 }
 
+fn global_pool_cell() -> &'static Arc<WorkerPool> {
+    static POOL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+    POOL.get_or_init(|| Arc::new(WorkerPool::with_default_threads()))
+}
+
 /// The process-wide default pool (sized by `FFDREG_THREADS` / machine
 /// parallelism), lazily created on first parallel interpolation.
 pub fn global_pool() -> &'static WorkerPool {
-    static POOL: OnceLock<WorkerPool> = OnceLock::new();
-    POOL.get_or_init(WorkerPool::with_default_threads)
+    &**global_pool_cell()
+}
+
+/// A shared handle to the process-wide pool, for binding [`Pooled`]
+/// instances (or an FFD [`crate::ffd::LevelWorkspace`]) to it without
+/// spawning a second pool.
+pub fn global_pool_arc() -> Arc<WorkerPool> {
+    global_pool_cell().clone()
 }
 
 // ---------------------------------------------------------------------------
@@ -379,6 +390,167 @@ where
     let mut out = VectorField::zeros(vol_dims);
     fill_chunked(imp, grid, vol_dims, pool, &mut out);
     out
+}
+
+// ---------------------------------------------------------------------------
+// Generic fused z-slab passes (the FFD hot loop's execution substrate)
+
+/// One fused z-slab pass over three SoA `f32` output buffers plus a
+/// per-z-slice `f64` accumulator: `f(chunk, xs, ys, zs, acc)` receives the
+/// chunk's output slabs (slab-relative index 0 = voxel `(0, 0, chunk.z0)`)
+/// and the chunk's span of the per-slice buffer (`acc[lz]` belongs to
+/// global slice `chunk.z0 + lz`). Chunks are unions of whole z-slices and
+/// tile-aligned (`gran`), so per-voxel arithmetic is partition-independent
+/// and callers that fold `acc` in slice order get bit-identical reductions
+/// at every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn run_slab_pass3<F>(
+    pool: &WorkerPool,
+    vol_dims: Dims,
+    gran: usize,
+    x: &mut [f32],
+    y: &mut [f32],
+    z: &mut [f32],
+    aux: &mut [f64],
+    f: F,
+) where
+    F: Fn(ZChunk, &mut [f32], &mut [f32], &mut [f32], &mut [f64]) + Sync,
+{
+    assert_eq!(x.len(), vol_dims.count());
+    assert_eq!(y.len(), vol_dims.count());
+    assert_eq!(z.len(), vol_dims.count());
+    assert_eq!(aux.len(), vol_dims.nz);
+    if vol_dims.count() == 0 {
+        return;
+    }
+    let chunks = partition_z_granular(vol_dims.nz, pool.threads() * CHUNKS_PER_THREAD, gran);
+    if chunks.len() <= 1 || pool.threads() <= 1 {
+        f(ZChunk::full(vol_dims), x, y, z, aux);
+        return;
+    }
+    let nxny = vol_dims.nx * vol_dims.ny;
+    let mut rx = x;
+    let mut ry = y;
+    let mut rz = z;
+    let mut ra = aux;
+    let fr = &f;
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+    for ch in chunks {
+        let n = ch.len() * nxny;
+        let (sx, rest) = std::mem::take(&mut rx).split_at_mut(n);
+        rx = rest;
+        let (sy, rest) = std::mem::take(&mut ry).split_at_mut(n);
+        ry = rest;
+        let (sz, rest) = std::mem::take(&mut rz).split_at_mut(n);
+        rz = rest;
+        let (sa, rest) = std::mem::take(&mut ra).split_at_mut(ch.len());
+        ra = rest;
+        tasks.push(Box::new(move || fr(ch, sx, sy, sz, sa)));
+    }
+    pool.run(tasks);
+}
+
+/// [`run_slab_pass3`] with a fourth SoA `f32` output buffer (the FFD
+/// gradient step's field + warped-volume fill).
+///
+/// NOTE: deliberately a structural twin of [`run_slab_pass3`] — generic
+/// buffer-count machinery costs more than the duplication here. Any change
+/// to the partition/split/fan logic must be applied to BOTH functions.
+#[allow(clippy::too_many_arguments)]
+pub fn run_slab_pass4<F>(
+    pool: &WorkerPool,
+    vol_dims: Dims,
+    gran: usize,
+    x: &mut [f32],
+    y: &mut [f32],
+    z: &mut [f32],
+    w: &mut [f32],
+    aux: &mut [f64],
+    f: F,
+) where
+    F: Fn(ZChunk, &mut [f32], &mut [f32], &mut [f32], &mut [f32], &mut [f64]) + Sync,
+{
+    assert_eq!(x.len(), vol_dims.count());
+    assert_eq!(y.len(), vol_dims.count());
+    assert_eq!(z.len(), vol_dims.count());
+    assert_eq!(w.len(), vol_dims.count());
+    assert_eq!(aux.len(), vol_dims.nz);
+    if vol_dims.count() == 0 {
+        return;
+    }
+    let chunks = partition_z_granular(vol_dims.nz, pool.threads() * CHUNKS_PER_THREAD, gran);
+    if chunks.len() <= 1 || pool.threads() <= 1 {
+        f(ZChunk::full(vol_dims), x, y, z, w, aux);
+        return;
+    }
+    let nxny = vol_dims.nx * vol_dims.ny;
+    let mut rx = x;
+    let mut ry = y;
+    let mut rz = z;
+    let mut rw = w;
+    let mut ra = aux;
+    let fr = &f;
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+    for ch in chunks {
+        let n = ch.len() * nxny;
+        let (sx, rest) = std::mem::take(&mut rx).split_at_mut(n);
+        rx = rest;
+        let (sy, rest) = std::mem::take(&mut ry).split_at_mut(n);
+        ry = rest;
+        let (sz, rest) = std::mem::take(&mut rz).split_at_mut(n);
+        rz = rest;
+        let (sw, rest) = std::mem::take(&mut rw).split_at_mut(n);
+        rw = rest;
+        let (sa, rest) = std::mem::take(&mut ra).split_at_mut(ch.len());
+        ra = rest;
+        tasks.push(Box::new(move || fr(ch, sx, sy, sz, sw, sa)));
+    }
+    pool.run(tasks);
+}
+
+/// [`crate::util::threadpool::par_chunks_mut3`], but fanned across an
+/// explicit [`WorkerPool`] instead of the process-global thread count — the
+/// sized-by-`FfdConfig::threads` machinery of the FFD hot loop. `f` gets
+/// the chunk index (`chunk_len` elements per chunk, last may be short).
+pub fn pool_chunks_mut3<F>(
+    pool: &WorkerPool,
+    a: &mut [f32],
+    b: &mut [f32],
+    c: &mut [f32],
+    chunk_len: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), c.len());
+    if a.is_empty() {
+        return;
+    }
+    let n_chunks = a.len().div_ceil(chunk_len);
+    if n_chunks <= 1 || pool.threads() <= 1 {
+        for (i, ((ca, cb), cc)) in a
+            .chunks_mut(chunk_len)
+            .zip(b.chunks_mut(chunk_len))
+            .zip(c.chunks_mut(chunk_len))
+            .enumerate()
+        {
+            f(i, ca, cb, cc);
+        }
+        return;
+    }
+    let fr = &f;
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(n_chunks);
+    for (i, ((ca, cb), cc)) in a
+        .chunks_mut(chunk_len)
+        .zip(b.chunks_mut(chunk_len))
+        .zip(c.chunks_mut(chunk_len))
+        .enumerate()
+    {
+        tasks.push(Box::new(move || fr(i, ca, cb, cc)));
+    }
+    pool.run(tasks);
 }
 
 // ---------------------------------------------------------------------------
@@ -625,6 +797,75 @@ mod tests {
             assert_eq!(a.x, b.x, "threads={threads}");
             assert_eq!(a.y, b.y);
             assert_eq!(a.z, b.z);
+        }
+    }
+
+    #[test]
+    fn slab_pass3_covers_every_voxel_and_slice_once() {
+        let vd = Dims::new(7, 5, 13); // odd nz: uneven tile-aligned chunks
+        let n = vd.count();
+        for threads in [1usize, 3] {
+            let pool = WorkerPool::new(threads);
+            let mut x = vec![0.0f32; n];
+            let mut y = vec![0.0f32; n];
+            let mut z = vec![0.0f32; n];
+            let mut aux = vec![0.0f64; vd.nz];
+            run_slab_pass3(&pool, vd, 4, &mut x, &mut y, &mut z, &mut aux, |ch, sx, sy, sz, sa| {
+                assert_eq!(sx.len(), ch.voxels(vd));
+                assert_eq!(sa.len(), ch.len());
+                for v in sx.iter_mut().chain(sy.iter_mut()).chain(sz.iter_mut()) {
+                    *v += 1.0;
+                }
+                for (lz, a) in sa.iter_mut().enumerate() {
+                    *a += (ch.z0 + lz) as f64;
+                }
+            });
+            assert!(x.iter().chain(&y).chain(&z).all(|&v| v == 1.0), "threads={threads}");
+            for (zi, a) in aux.iter().enumerate() {
+                assert_eq!(*a, zi as f64, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn slab_pass4_fills_fourth_buffer() {
+        let vd = Dims::new(4, 3, 9);
+        let n = vd.count();
+        let pool = WorkerPool::new(2);
+        let (mut x, mut y, mut z, mut w) =
+            (vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n], vec![0.0f32; n]);
+        let mut aux = vec![0.0f64; vd.nz];
+        run_slab_pass4(&pool, vd, 2, &mut x, &mut y, &mut z, &mut w, &mut aux, |ch, _, _, _, sw, _| {
+            for (i, v) in sw.iter_mut().enumerate() {
+                *v = (ch.z0 * vd.nx * vd.ny + i) as f32;
+            }
+        });
+        for (i, v) in w.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn pool_chunks_mut3_matches_serial_indexing() {
+        for threads in [1usize, 4] {
+            let pool = WorkerPool::new(threads);
+            let mut a = vec![0.0f32; 103];
+            let mut b = vec![0.0f32; 103];
+            let mut c = vec![0.0f32; 103];
+            pool_chunks_mut3(&pool, &mut a, &mut b, &mut c, 10, |ci, ca, cb, cc| {
+                for (k, v) in ca.iter_mut().enumerate() {
+                    *v = (ci * 10 + k) as f32;
+                }
+                for v in cb.iter_mut().chain(cc.iter_mut()) {
+                    *v = ci as f32;
+                }
+            });
+            for (i, v) in a.iter().enumerate() {
+                assert_eq!(*v, i as f32, "threads={threads}");
+            }
+            for (i, v) in b.iter().enumerate() {
+                assert_eq!(*v, (i / 10) as f32);
+            }
         }
     }
 

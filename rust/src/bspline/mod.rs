@@ -106,6 +106,22 @@ impl ControlGrid {
         }
     }
 
+    /// Reshape to `other`'s lattice (reusing this grid's allocations) and
+    /// zero every component — the buffer-recycling step of the FFD hot
+    /// loop's gradient/trial buffers.
+    pub fn reshape_zeroed_like(&mut self, other: &ControlGrid) {
+        self.tile = other.tile;
+        self.tiles = other.tiles;
+        self.dims = other.dims;
+        let n = other.len();
+        self.x.clear();
+        self.x.resize(n, 0.0);
+        self.y.clear();
+        self.y.resize(n, 0.0);
+        self.z.clear();
+        self.z.resize(n, 0.0);
+    }
+
     /// The volume extent this grid serves (tiles × tile size; callers may
     /// interpolate any sub-extent, benches use the full one).
     pub fn full_extent(&self) -> Dims {

@@ -60,6 +60,9 @@ impl Config {
             c.ffd.method =
                 Method::parse(m).ok_or_else(|| format!("unknown method '{m}'"))?;
         }
+        if let Some(v) = ffd.get("threads").as_usize() {
+            c.ffd.threads = v;
+        }
         if let Some(v) = j.get("affine_first").as_bool() {
             c.affine_first = v;
         }
@@ -106,7 +109,12 @@ impl Config {
         self.workers = args.get_usize("workers", self.workers)?;
         self.queue_capacity = args.get_usize("queue", self.queue_capacity)?;
         self.max_batch = args.get_usize("batch", self.max_batch)?;
+        // `--threads` drives both knobs: per-job chunked execution on the
+        // server (`serve --threads`), and the CLI registration hot loop
+        // (`register --threads`). Server-side register ops take a
+        // per-request "threads" protocol field instead of this config.
         self.intra_threads = args.get_usize("threads", self.intra_threads)?;
+        self.ffd.threads = args.get_usize("threads", self.ffd.threads)?;
         Ok(self)
     }
 
@@ -155,7 +163,9 @@ mod tests {
         );
         let c = Config::default().apply_args(&args).unwrap();
         assert_eq!(c.intra_threads, 8);
+        assert_eq!(c.ffd.threads, 8, "--threads also drives the FFD hot loop");
         assert_eq!(Config::default().intra_threads, 0, "default = process pool");
+        assert_eq!(Config::default().ffd.threads, 0);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!        (the grid is generated server-side from the seed: the protocol
 //!         exercises scheduling/batching without shipping megabytes)
 //!   {"op":"register","reference":"a.nii","floating":"b.mhd","method":"ttli",
-//!    "levels":2,"iters":20,"out":"warped.nii"(optional)}
+//!    "levels":2,"iters":20,"threads":4(optional),"out":"warped.nii"(optional)}
 //!     -> {"ok":true,"cost":c,"ssim":s,"mae":m,"total_s":t,"bsi_s":b}
 //!        (volumes are read from server-local paths in any supported format
 //!         — .nii / .mhd / .mha / .vol — the IGS workflow of submitting an
@@ -27,7 +27,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use super::job::{Engine, InterpolateJob};
@@ -42,6 +42,23 @@ pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
+    /// Live connection-handler threads, updated after each accept-loop
+    /// reap — observability for the handle-leak regression tests.
+    conn_gauge: Arc<AtomicUsize>,
+}
+
+/// Join every finished connection handler and drop its handle. Without
+/// this, a long-lived server grows one `JoinHandle` (plus the exited
+/// thread's bookkeeping) per connection it ever served, unboundedly.
+fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
+    let mut i = 0;
+    while i < conns.len() {
+        if conns[i].is_finished() {
+            let _ = conns.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
 }
 
 impl Server {
@@ -51,11 +68,18 @@ impl Server {
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let conn_gauge = Arc::new(AtomicUsize::new(0));
+        let gauge2 = conn_gauge.clone();
         let handle = std::thread::spawn(move || {
             // Poll-accept with a timeout so the stop flag is honored.
             listener.set_nonblocking(true).ok();
             let mut conns: Vec<std::thread::JoinHandle<()>> = vec![];
             while !stop2.load(Ordering::Acquire) {
+                // Reap completed handlers every tick (accepts and idle
+                // WouldBlock passes alike), so memory stays bounded by the
+                // number of *live* connections, not the all-time total.
+                reap_finished(&mut conns);
+                gauge2.store(conns.len(), Ordering::Relaxed);
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let sched = scheduler.clone();
@@ -63,6 +87,7 @@ impl Server {
                         conns.push(std::thread::spawn(move || {
                             handle_conn(stream, sched, stop3)
                         }));
+                        gauge2.store(conns.len(), Ordering::Relaxed);
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -73,8 +98,15 @@ impl Server {
             for c in conns {
                 let _ = c.join();
             }
+            gauge2.store(0, Ordering::Relaxed);
         });
-        Ok(Server { addr: local, stop, handle: Some(handle) })
+        Ok(Server { addr: local, stop, handle: Some(handle), conn_gauge })
+    }
+
+    /// Connection-handler threads currently tracked by the accept loop
+    /// (finished handlers are reaped every loop tick).
+    pub fn active_connections(&self) -> usize {
+        self.conn_gauge.load(Ordering::Relaxed)
     }
 
     pub fn stop(mut self) {
@@ -207,6 +239,7 @@ fn handle_register(req: &Json) -> String {
         method,
         levels: req.get("levels").as_usize().unwrap_or(2),
         iters: req.get("iters").as_usize().unwrap_or(20),
+        threads: req.get("threads").as_usize().unwrap_or(0),
         out: req.get("out").as_str().map(std::path::PathBuf::from),
     };
     match run_register(&op) {

@@ -143,6 +143,9 @@ pub struct RegisterOp {
     pub method: Method,
     pub levels: usize,
     pub iters: usize,
+    /// Worker threads for the registration hot loop (0 = process default).
+    /// Results are bitwise identical at every thread count.
+    pub threads: usize,
     /// Optional output path; format inferred from its extension.
     pub out: Option<PathBuf>,
 }
@@ -188,6 +191,10 @@ pub fn run_register(op: &RegisterOp) -> Result<RegisterOutcome, OpError> {
         method: op.method,
         levels: op.levels.clamp(1, 6),
         max_iter: op.iters.clamp(1, 500),
+        // The threads field is remote-controlled (protocol "threads"):
+        // clamp to machine parallelism so a hostile client cannot make the
+        // server spawn unbounded OS threads per request.
+        threads: op.threads.min(crate::util::threadpool::num_threads()),
         ..Default::default()
     };
     let result = crate::ffd::register(&reference, &floating, &cfg);
@@ -264,6 +271,7 @@ mod tests {
             method: Method::Ttli,
             levels: 1,
             iters: 1,
+            threads: 0,
             out: None,
         };
         let e = run_register(&op).unwrap_err();
@@ -288,6 +296,7 @@ mod tests {
             method: Method::Ttli,
             levels: 1,
             iters: 1,
+            threads: 0,
             out: None,
         };
         let e = run_register(&op).unwrap_err();
@@ -307,6 +316,7 @@ mod tests {
             method: Method::Ttli,
             levels: 1,
             iters: 1,
+            threads: 0,
             out: None,
         };
         assert_eq!(run_register(&op).unwrap_err().code, "malformed");

@@ -57,17 +57,27 @@ pub fn bending_energy(grid: &ControlGrid) -> f64 {
 /// (computed by accumulating each stencil's contributions to its
 /// participating CPs).
 pub fn bending_gradient(grid: &ControlGrid) -> ControlGrid {
-    let d = grid.dims;
+    // Empty buffers: bending_gradient_into reshapes + zero-fills.
     let mut out = ControlGrid {
         tile: grid.tile,
         tiles: grid.tiles,
-        dims: d,
-        x: vec![0.0; grid.len()],
-        y: vec![0.0; grid.len()],
-        z: vec![0.0; grid.len()],
+        dims: grid.dims,
+        x: Vec::new(),
+        y: Vec::new(),
+        z: Vec::new(),
     };
+    bending_gradient_into(grid, &mut out);
+    out
+}
+
+/// [`bending_gradient`] into a caller-provided buffer (reshaped and
+/// zero-filled here) — the allocation-free path of the registration hot
+/// loop.
+pub fn bending_gradient_into(grid: &ControlGrid, out: &mut ControlGrid) {
+    let d = grid.dims;
+    out.reshape_zeroed_like(grid);
     if d.nx < 3 || d.ny < 3 || d.nz < 3 {
-        return out;
+        return;
     }
     let count = ((d.nx - 2) * (d.ny - 2) * (d.nz - 2) * 3) as f64;
     let scale = 2.0 / count;
@@ -146,7 +156,6 @@ pub fn bending_gradient(grid: &ControlGrid) -> ControlGrid {
             }
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -2,46 +2,16 @@
 //! Polak–Ribière directions over the control-point gradient with the same
 //! backtracking line search as the plain gradient-descent optimizer. Often
 //! converges in fewer cost evaluations on the smooth SSD+bending objective.
+//!
+//! Like [`super::optimizer`], the hot loop runs on a [`LevelWorkspace`]:
+//! fused cost probes and gradient passes, no per-iteration allocation
+//! beyond the CG direction/previous-gradient buffers (allocated once per
+//! level).
 
-use std::time::Instant;
-
-use super::bending::{bending_energy, bending_gradient};
-use super::gradient::voxel_to_cp_gradient;
-use super::similarity::{ssd, ssd_voxel_gradient};
+use super::workspace::LevelWorkspace;
 use super::{FfdConfig, FfdTiming};
-use crate::bspline::{ControlGrid, Interpolator};
-use crate::volume::resample::warp;
+use crate::bspline::ControlGrid;
 use crate::volume::Volume;
-
-fn full_gradient(
-    reference: &Volume,
-    floating: &Volume,
-    grid: &ControlGrid,
-    interp: &dyn Interpolator,
-    lambda: f32,
-    timing: &mut FfdTiming,
-) -> (ControlGrid, f64) {
-    let t0 = Instant::now();
-    let field = interp.interpolate(grid, reference.dims);
-    timing.bsi_s += t0.elapsed().as_secs_f64();
-    let t1 = Instant::now();
-    let warped = warp(floating, &field);
-    timing.warp_s += t1.elapsed().as_secs_f64();
-    let cost = ssd(reference, &warped) + lambda as f64 * bending_energy(grid);
-    let t2 = Instant::now();
-    let vg = ssd_voxel_gradient(reference, &warped);
-    let mut cg = voxel_to_cp_gradient(grid, &vg);
-    if lambda > 0.0 {
-        let bg = bending_gradient(grid);
-        for i in 0..cg.len() {
-            cg.x[i] += lambda * bg.x[i];
-            cg.y[i] += lambda * bg.y[i];
-            cg.z[i] += lambda * bg.z[i];
-        }
-    }
-    timing.gradient_s += t2.elapsed().as_secs_f64();
-    (cg, cost)
-}
 
 fn dot(a: &ControlGrid, b: &ControlGrid) -> f64 {
     let mut s = 0.0f64;
@@ -60,13 +30,29 @@ pub fn optimize_level_cg(
     cfg: &FfdConfig,
     timing: &mut FfdTiming,
 ) -> f64 {
+    let mut ws = LevelWorkspace::new(cfg);
+    optimize_level_cg_ws(reference, floating, grid, cfg, timing, &mut ws)
+}
+
+/// Workspace-threaded core of [`optimize_level_cg`].
+pub fn optimize_level_cg_ws(
+    reference: &Volume,
+    floating: &Volume,
+    grid: &mut ControlGrid,
+    cfg: &FfdConfig,
+    timing: &mut FfdTiming,
+    ws: &mut LevelWorkspace,
+) -> f64 {
     let interp = cfg.method.instance();
+    let imp = interp.as_ref();
     let lambda = cfg.bending_weight;
     let init_step = 0.5 * grid.tile[0].max(grid.tile[1]).max(grid.tile[2]) as f32;
     let mut step = init_step;
 
-    let (mut g_prev, mut current) =
-        full_gradient(reference, floating, grid, interp.as_ref(), lambda, timing);
+    // Initial gradient; the fused pass yields the objective value for free.
+    let mut current =
+        ws.objective_gradient(reference, floating, imp, grid, lambda, timing, false);
+    let mut g_prev = ws.cg().clone();
     let mut dir = g_prev.clone(); // steepest descent to start
 
     for _ in 0..cfg.max_iter {
@@ -82,22 +68,13 @@ pub fn optimize_level_cg(
         let inv = 1.0 / norm;
         let mut improved = false;
         while step > init_step * cfg.step_tolerance {
-            let mut trial = grid.clone();
-            for i in 0..trial.len() {
-                trial.x[i] -= step * inv * dir.x[i];
-                trial.y[i] -= step * inv * dir.y[i];
-                trial.z[i] -= step * inv * dir.z[i];
-            }
-            // Cost only (cheaper than gradient) for the line search.
-            let t0 = Instant::now();
-            let field = interp.interpolate(&trial, reference.dims);
-            timing.bsi_s += t0.elapsed().as_secs_f64();
-            let t1 = Instant::now();
-            let warped = warp(floating, &field);
-            timing.warp_s += t1.elapsed().as_secs_f64();
-            let c = ssd(reference, &warped) + lambda as f64 * bending_energy(&trial);
+            ws.make_trial_along(grid, &dir, step * inv);
+            // Cost only (fused single pass) for the line search.
+            let c = ws.trial_cost(reference, floating, imp, lambda, timing);
             if c < current {
-                *grid = trial;
+                grid.x.copy_from_slice(&ws.trial().x);
+                grid.y.copy_from_slice(&ws.trial().y);
+                grid.z.copy_from_slice(&ws.trial().z);
                 current = c;
                 improved = true;
                 break;
@@ -107,8 +84,14 @@ pub fn optimize_level_cg(
         if !improved {
             break;
         }
-        // New gradient and Polak–Ribière update.
-        let (g_new, _) = full_gradient(reference, floating, grid, interp.as_ref(), lambda, timing);
+        // Re-expand after success (see optimizer.rs) — an early backtrack
+        // must not permanently cap the step.
+        step = (step * 2.0).min(init_step);
+        // New gradient and Polak–Ribière update. The accepted trial's fused
+        // pass was the last to fill ws.field and `grid` is now that trial,
+        // so the gradient skips its interpolation stage.
+        ws.objective_gradient(reference, floating, imp, grid, lambda, timing, true);
+        let g_new = ws.cg();
         let denom = dot(&g_prev, &g_prev);
         let mut beta = if denom > 0.0 {
             let mut num = 0.0f64;
@@ -129,7 +112,9 @@ pub fn optimize_level_cg(
             dir.y[i] = g_new.y[i] + beta * dir.y[i];
             dir.z[i] = g_new.z[i] + beta * dir.z[i];
         }
-        g_prev = g_new;
+        g_prev.x.copy_from_slice(&g_new.x);
+        g_prev.y.copy_from_slice(&g_new.y);
+        g_prev.z.copy_from_slice(&g_new.z);
     }
     current
 }
@@ -138,6 +123,7 @@ pub fn optimize_level_cg(
 mod tests {
     use super::*;
     use crate::bspline::Method;
+    use crate::ffd::similarity::ssd;
     use crate::volume::{Dims, Volume};
 
     fn blob(dims: Dims, cx: f32) -> Volume {
@@ -162,6 +148,7 @@ mod tests {
             bending_weight: 0.0005,
             method: Method::Ttli,
             step_tolerance: 0.001,
+            ..Default::default()
         };
         let mut timing = FfdTiming::default();
         let before = ssd(&reference, &floating);
@@ -181,6 +168,7 @@ mod tests {
             bending_weight: 0.0005,
             method: Method::Ttli,
             step_tolerance: 0.001,
+            ..Default::default()
         };
         let mut t1 = FfdTiming::default();
         let mut t2 = FfdTiming::default();

@@ -7,6 +7,7 @@
 //! `reg_voxelCentric2NodeCentric`.
 
 use crate::bspline::coeffs::WeightLut;
+use crate::bspline::exec::{self, WorkerPool};
 use crate::bspline::ControlGrid;
 use crate::util::threadpool::par_chunks_mut3;
 use crate::volume::VectorField;
@@ -94,6 +95,126 @@ pub fn voxel_to_cp_gradient_direct(grid: &ControlGrid, voxel_grad: &VectorField)
     out
 }
 
+/// Reusable intermediate buffers for the separable adjoint — lets the
+/// registration hot loop run [`voxel_to_cp_gradient_into`] without
+/// allocating per iteration.
+#[derive(Default)]
+pub struct AdjointScratch {
+    r1: Vec<f32>,
+    r2: Vec<f32>,
+}
+
+impl AdjointScratch {
+    fn ensure(&mut self, r1_len: usize, r2_len: usize) {
+        self.r1.clear();
+        self.r1.resize(3 * r1_len, 0.0);
+        self.r2.clear();
+        self.r2.resize(3 * r2_len, 0.0);
+    }
+}
+
+/// Pass 1 for one voxel row `(z, y)`: reduce x into the row's `cx`-wide
+/// output columns (zero-initialized by the caller).
+#[allow(clippy::too_many_arguments)]
+fn pass1_row(
+    row: usize,
+    vd: crate::volume::Dims,
+    dx: usize,
+    lx: &WeightLut,
+    voxel_grad: &VectorField,
+    ox: &mut [f32],
+    oy: &mut [f32],
+    oz: &mut [f32],
+) {
+    let row_in = row * vd.nx;
+    for x in 0..vd.nx {
+        let tx = x / dx;
+        let w = lx.at(x % dx);
+        let gx = voxel_grad.x[row_in + x];
+        let gy = voxel_grad.y[row_in + x];
+        let gz = voxel_grad.z[row_in + x];
+        for l in 0..4 {
+            let o = tx + l;
+            ox[o] += w[l] * gx;
+            oy[o] += w[l] * gy;
+            oz[o] += w[l] * gz;
+        }
+    }
+}
+
+/// Pass 2 for one voxel slice `z`: reduce y from the slice's r1 rows into
+/// the slice's `cy·cx` r2 plane (zero-initialized by the caller).
+#[allow(clippy::too_many_arguments)]
+fn pass2_plane(
+    z: usize,
+    ny: usize,
+    dy: usize,
+    ly: &WeightLut,
+    cx: usize,
+    r1x: &[f32],
+    r1y: &[f32],
+    r1z: &[f32],
+    ox: &mut [f32],
+    oy: &mut [f32],
+    oz: &mut [f32],
+) {
+    for y in 0..ny {
+        let ty = y / dy;
+        let w = ly.at(y % dy);
+        let row_in = (z * ny + y) * cx;
+        for m in 0..4 {
+            let row_out = (ty + m) * cx;
+            let wm = w[m];
+            for xi in 0..cx {
+                ox[row_out + xi] += wm * r1x[row_in + xi];
+                oy[row_out + xi] += wm * r1y[row_in + xi];
+                oz[row_out + xi] += wm * r1z[row_in + xi];
+            }
+        }
+    }
+}
+
+/// Pass 3 gather for one CP z-plane `ko`: sum the contributing r2 planes in
+/// ascending-z order — the same per-element accumulation sequence as a
+/// serial z sweep, so serial and pool-parallel execution are bitwise
+/// identical.
+#[allow(clippy::too_many_arguments)]
+fn pass3_plane(
+    ko: usize,
+    nz: usize,
+    dz: usize,
+    lz: &WeightLut,
+    plane: usize,
+    r2x: &[f32],
+    r2y: &[f32],
+    r2z: &[f32],
+    ox: &mut [f32],
+    oy: &mut [f32],
+    oz: &mut [f32],
+) {
+    // Contributing voxel slices: z with tile layer tz = z/dz in [ko−3, ko].
+    let z_lo = (ko as isize - 3).max(0) as usize * dz;
+    let z_hi = ((ko + 1) * dz).min(nz);
+    for yi in 0..plane {
+        let (mut ax, mut ay, mut az) = (0.0f32, 0.0f32, 0.0f32);
+        for z in z_lo..z_hi {
+            let tz = z / dz;
+            let n = ko.wrapping_sub(tz);
+            if n > 3 {
+                continue;
+            }
+            let wn = lz.at(z % dz)[n];
+            let i = z * plane + yi;
+            ax += wn * r2x[i];
+            ay += wn * r2y[i];
+            az += wn * r2z[i];
+        }
+        ox[yi] = ax;
+        oy[yi] = ay;
+        oz[yi] = az;
+    }
+}
+
 /// Separable three-pass adjoint: reduce x, then y, then z. The B-spline
 /// weight tensor factorizes (`w = wx·wy·wz`), so the 64-term scatter per
 /// voxel becomes three 4-term reductions:
@@ -104,98 +225,148 @@ pub fn voxel_to_cp_gradient_direct(grid: &ControlGrid, voxel_grad: &VectorField)
 ///
 /// 12 weighted accumulations per voxel instead of 64 (EXPERIMENTS.md §Perf).
 pub fn voxel_to_cp_gradient_separable(grid: &ControlGrid, voxel_grad: &VectorField) -> ControlGrid {
+    // Empty buffers: voxel_to_cp_gradient_into reshapes + zero-fills.
+    let mut out = ControlGrid {
+        tile: grid.tile,
+        tiles: grid.tiles,
+        dims: grid.dims,
+        x: Vec::new(),
+        y: Vec::new(),
+        z: Vec::new(),
+    };
+    let mut scratch = AdjointScratch::default();
+    voxel_to_cp_gradient_into(grid, voxel_grad, None, &mut out, &mut scratch);
+    out
+}
+
+/// [`voxel_to_cp_gradient_separable`] into caller-provided output and
+/// scratch buffers — the allocation-free hot-loop path. With `Some(pool)`
+/// the three passes fan across that pool; results are bitwise identical to
+/// the serial path at every thread count (each pass partitions work on
+/// disjoint output rows/planes and keeps the per-element accumulation
+/// order of the serial sweep).
+pub fn voxel_to_cp_gradient_into(
+    grid: &ControlGrid,
+    voxel_grad: &VectorField,
+    pool: Option<&WorkerPool>,
+    out: &mut ControlGrid,
+    scratch: &mut AdjointScratch,
+) {
     let [dx, dy, dz] = grid.tile;
     let lx = WeightLut::shared(dx);
     let ly = WeightLut::shared(dy);
     let lz = WeightLut::shared(dz);
     let vd = voxel_grad.dims;
     let cp_dims = grid.dims;
+    out.reshape_zeroed_like(grid);
     // Number of (tile, support-offset) columns per axis = CP lattice size.
     let cx = cp_dims.nx;
     let cy = cp_dims.ny;
+    let r1_len = vd.nz * vd.ny * cx;
+    let r2_len = vd.nz * cy * cx;
+    scratch.ensure(r1_len, r2_len);
+    let parts = pool.map_or(1, |p| p.threads() * 4);
 
     // Pass 1: reduce x. r1 layout: [(z*ny + y)*cx + cxi] per component.
-    let r1_len = vd.nz * vd.ny * cx;
-    let mut r1 = vec![0.0f32; 3 * r1_len];
     {
-        let (r1x, rest) = r1.split_at_mut(r1_len);
+        let (r1x, rest) = scratch.r1.split_at_mut(r1_len);
         let (r1y, r1z) = rest.split_at_mut(r1_len);
-        for z in 0..vd.nz {
-            for y in 0..vd.ny {
-                let row_in = (z * vd.ny + y) * vd.nx;
-                let row_out = (z * vd.ny + y) * cx;
-                for x in 0..vd.nx {
-                    let tx = x / dx;
-                    let w = lx.at(x % dx);
-                    let gx = voxel_grad.x[row_in + x];
-                    let gy = voxel_grad.y[row_in + x];
-                    let gz = voxel_grad.z[row_in + x];
-                    for l in 0..4 {
-                        let o = row_out + tx + l;
-                        r1x[o] += w[l] * gx;
-                        r1y[o] += w[l] * gy;
-                        r1z[o] += w[l] * gz;
-                    }
+        let rows = vd.nz * vd.ny;
+        if rows > 0 {
+            let rows_per = rows.div_ceil(parts).max(1);
+            let run = |ci: usize, ox: &mut [f32], oy: &mut [f32], oz: &mut [f32]| {
+                let base_row = ci * rows_per;
+                for k in 0..ox.len() / cx {
+                    let s = k * cx;
+                    pass1_row(
+                        base_row + k,
+                        vd,
+                        dx,
+                        &lx,
+                        voxel_grad,
+                        &mut ox[s..s + cx],
+                        &mut oy[s..s + cx],
+                        &mut oz[s..s + cx],
+                    );
                 }
+            };
+            match pool {
+                Some(p) => exec::pool_chunks_mut3(p, r1x, r1y, r1z, rows_per * cx, run),
+                None => run(0, r1x, r1y, r1z),
             }
         }
     }
 
     // Pass 2: reduce y. r2 layout: [(z*cy + cyi)*cx + cxi].
-    let r2_len = vd.nz * cy * cx;
-    let mut r2 = vec![0.0f32; 3 * r2_len];
     {
-        let (r1x, rest) = r1.split_at(r1_len);
+        let (r1x, rest) = scratch.r1.split_at(r1_len);
         let (r1y, r1z) = rest.split_at(r1_len);
-        let (r2x, rest2) = r2.split_at_mut(r2_len);
+        let (r2x, rest2) = scratch.r2.split_at_mut(r2_len);
         let (r2y, r2z) = rest2.split_at_mut(r2_len);
-        for z in 0..vd.nz {
-            for y in 0..vd.ny {
-                let ty = y / dy;
-                let w = ly.at(y % dy);
-                let row_in = (z * vd.ny + y) * cx;
-                for m in 0..4 {
-                    let row_out = (z * cy + ty + m) * cx;
-                    let wm = w[m];
-                    for xi in 0..cx {
-                        r2x[row_out + xi] += wm * r1x[row_in + xi];
-                        r2y[row_out + xi] += wm * r1y[row_in + xi];
-                        r2z[row_out + xi] += wm * r1z[row_in + xi];
-                    }
+        let plane2 = cy * cx;
+        if vd.nz > 0 && plane2 > 0 {
+            let zs_per = vd.nz.div_ceil(parts).max(1);
+            let run = |ci: usize, ox: &mut [f32], oy: &mut [f32], oz: &mut [f32]| {
+                let base_z = ci * zs_per;
+                for k in 0..ox.len() / plane2 {
+                    let s = k * plane2;
+                    pass2_plane(
+                        base_z + k,
+                        vd.ny,
+                        dy,
+                        &ly,
+                        cx,
+                        r1x,
+                        r1y,
+                        r1z,
+                        &mut ox[s..s + plane2],
+                        &mut oy[s..s + plane2],
+                        &mut oz[s..s + plane2],
+                    );
                 }
+            };
+            match pool {
+                Some(p) => exec::pool_chunks_mut3(p, r2x, r2y, r2z, zs_per * plane2, run),
+                None => run(0, r2x, r2y, r2z),
             }
         }
     }
 
-    // Pass 3: reduce z straight into the CP lattice.
-    let mut out = ControlGrid {
-        tile: grid.tile,
-        tiles: grid.tiles,
-        dims: cp_dims,
-        x: vec![0.0; grid.len()],
-        y: vec![0.0; grid.len()],
-        z: vec![0.0; grid.len()],
-    };
+    // Pass 3: reduce z straight into the CP lattice (gather form — every
+    // output plane sums its contributing r2 planes in ascending z).
     {
-        let (r2x, rest2) = r2.split_at(r2_len);
+        let (r2x, rest2) = scratch.r2.split_at(r2_len);
         let (r2y, r2z) = rest2.split_at(r2_len);
         let plane = cy * cx;
-        for z in 0..vd.nz {
-            let tz = z / dz;
-            let w = lz.at(z % dz);
-            let row_in = z * plane;
-            for n in 0..4 {
-                let wn = w[n];
-                let row_out = (tz + n) * plane;
-                for yi in 0..plane {
-                    out.x[row_out + yi] += wn * r2x[row_in + yi];
-                    out.y[row_out + yi] += wn * r2y[row_in + yi];
-                    out.z[row_out + yi] += wn * r2z[row_in + yi];
+        if plane > 0 && cp_dims.nz > 0 {
+            let kos_per = cp_dims.nz.div_ceil(parts).max(1);
+            let run = |ci: usize, ox: &mut [f32], oy: &mut [f32], oz: &mut [f32]| {
+                let base_ko = ci * kos_per;
+                for k in 0..ox.len() / plane {
+                    let s = k * plane;
+                    pass3_plane(
+                        base_ko + k,
+                        vd.nz,
+                        dz,
+                        &lz,
+                        plane,
+                        r2x,
+                        r2y,
+                        r2z,
+                        &mut ox[s..s + plane],
+                        &mut oy[s..s + plane],
+                        &mut oz[s..s + plane],
+                    );
                 }
+            };
+            match pool {
+                Some(p) => {
+                    exec::pool_chunks_mut3(p, &mut out.x, &mut out.y, &mut out.z, kos_per * plane, run)
+                }
+                None => run(0, &mut out.x, &mut out.y, &mut out.z),
             }
         }
     }
-    out
 }
 
 /// L∞ norm of a control-point gradient (used to normalize the ascent step,
@@ -279,6 +450,30 @@ mod tests {
                 b.y[i],
                 b.z[i]
             );
+        }
+    }
+
+    #[test]
+    fn pooled_adjoint_is_bitwise_equal_to_serial_at_every_thread_count() {
+        use crate::util::rng::Pcg32;
+        let vd = Dims::new(19, 13, 11); // partial border tiles
+        let grid = ControlGrid::zeros(vd, [5, 4, 3]);
+        let mut rng = Pcg32::seeded(7);
+        let mut v = VectorField::zeros(vd);
+        for i in 0..v.x.len() {
+            v.x[i] = rng.normal();
+            v.y[i] = rng.normal();
+            v.z[i] = rng.normal();
+        }
+        let serial = voxel_to_cp_gradient_separable(&grid, &v);
+        for threads in [1usize, 2, 5] {
+            let pool = WorkerPool::new(threads);
+            let mut out = ControlGrid::zeros(vd, [5, 4, 3]);
+            let mut scratch = AdjointScratch::default();
+            voxel_to_cp_gradient_into(&grid, &v, Some(&pool), &mut out, &mut scratch);
+            assert_eq!(serial.x, out.x, "threads={threads}");
+            assert_eq!(serial.y, out.y, "threads={threads}");
+            assert_eq!(serial.z, out.z, "threads={threads}");
         }
     }
 

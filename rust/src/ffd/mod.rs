@@ -17,6 +17,9 @@ pub mod multilevel;
 pub mod optimizer;
 pub mod nmi;
 pub mod similarity;
+pub mod workspace;
+
+pub use workspace::LevelWorkspace;
 
 use crate::bspline::{ControlGrid, Method};
 use crate::volume::{VectorField, Volume};
@@ -38,6 +41,11 @@ pub struct FfdConfig {
     /// Convergence: stop when the line-search step shrinks below
     /// `initial_step * step_tolerance`.
     pub step_tolerance: f32,
+    /// Worker threads for the fused hot-loop passes and the dense-field
+    /// interpolation ([`Method::par_instance`]). 0 = the process-default
+    /// pool (`FFDREG_THREADS` / machine parallelism). Results are bitwise
+    /// identical at every thread count.
+    pub threads: usize,
 }
 
 impl Default for FfdConfig {
@@ -49,9 +57,11 @@ impl Default for FfdConfig {
             bending_weight: 0.001,
             method: Method::Ttli,
             step_tolerance: 0.01,
+            threads: 0,
         }
     }
 }
+
 
 /// Wall-time breakdown of one registration run — the paper's Figure 8/9
 /// measurement ("BSI represents 27% of the total registration time").
@@ -61,6 +71,10 @@ pub struct FfdTiming {
     pub bsi_s: f64,
     pub warp_s: f64,
     pub gradient_s: f64,
+    /// Time spent on the bending-energy regularizer (energy + gradient).
+    /// Exactly 0.0 when `bending_weight == 0` — λ=0 runs must not pay for
+    /// regularization (see `ffd::workspace`).
+    pub reg_s: f64,
     pub other_s: f64,
     pub iterations: usize,
 }

@@ -7,7 +7,8 @@
 
 use std::time::Instant;
 
-use super::optimizer::optimize_level;
+use super::optimizer::optimize_level_ws;
+use super::workspace::LevelWorkspace;
 use super::{FfdConfig, FfdResult, FfdTiming};
 use crate::bspline::{ControlGrid, Interpolator, Method};
 use crate::volume::pyramid;
@@ -76,7 +77,10 @@ pub fn eval_spline_at(grid: &ControlGrid, px: f32, py: f32, pz: f32) -> [f32; 3]
     out
 }
 
-/// Full multi-level registration (see [`super::register`]).
+/// Full multi-level registration (see [`super::register`]). One
+/// [`LevelWorkspace`] (pool sized by `cfg.threads`) is shared across every
+/// level, so the whole run performs a handful of per-level allocations and
+/// none inside the iteration loops.
 pub fn register_multilevel(reference: &Volume, floating: &Volume, cfg: &FfdConfig) -> FfdResult {
     let t_start = Instant::now();
     let mut timing = FfdTiming::default();
@@ -85,6 +89,7 @@ pub fn register_multilevel(reference: &Volume, floating: &Volume, cfg: &FfdConfi
     let flo_pyr = pyramid::build(floating, cfg.levels);
     let n_levels = ref_pyr.len().min(flo_pyr.len());
 
+    let mut ws = LevelWorkspace::new(cfg);
     let mut grid: Option<ControlGrid> = None;
     let mut final_cost = f64::INFINITY;
     for level in 0..n_levels {
@@ -94,12 +99,14 @@ pub fn register_multilevel(reference: &Volume, floating: &Volume, cfg: &FfdConfi
             Some(coarse) => promote_grid(&coarse, r.dims, cfg.tile),
             None => ControlGrid::zeros(r.dims, cfg.tile),
         };
-        final_cost = optimize_level(r, f, &mut g, cfg, &mut timing);
+        final_cost = optimize_level_ws(r, f, &mut g, cfg, &mut timing, &mut ws);
         grid = Some(g);
     }
 
     let grid = grid.expect("at least one pyramid level");
-    let interp = cfg.method.instance();
+    // Final dense field through the workspace's pool — the
+    // `FfdConfig::threads` → `Method::par_instance` wiring.
+    let interp = ws.interpolator(cfg.method);
     let t0 = Instant::now();
     let field = interp.interpolate(&grid, reference.dims);
     timing.bsi_s += t0.elapsed().as_secs_f64();
@@ -111,8 +118,12 @@ pub fn register_multilevel(reference: &Volume, floating: &Volume, cfg: &FfdConfi
     warped.copy_geometry_from(reference);
 
     timing.total_s = t_start.elapsed().as_secs_f64();
-    timing.other_s =
-        (timing.total_s - timing.bsi_s - timing.warp_s - timing.gradient_s).max(0.0);
+    timing.other_s = (timing.total_s
+        - timing.bsi_s
+        - timing.warp_s
+        - timing.gradient_s
+        - timing.reg_s)
+        .max(0.0);
 
     FfdResult { grid, field, warped, cost: final_cost, timing }
 }
@@ -172,6 +183,106 @@ mod tests {
     }
 
     #[test]
+    fn promoted_affine_field_doubles_everywhere_with_loose_boundary() {
+        // An affine coarse CP field u(p) = A·p + b is reproduced exactly by
+        // the cubic B-spline (partition of unity + linear precision), so
+        // the promoted fine grid's dense field must equal the affine field
+        // 2·u(p/2) = A·p + 2b: near-exactly in the interior, and within a
+        // loose band at the boundary where the promotion's sampling clamp
+        // and the lattice edge interact.
+        let coarse_vol = Dims::new(17, 15, 13); // partial border tiles
+        let tile = [4usize, 4, 4];
+        let a = [[0.04f32, -0.02, 0.01], [0.02, 0.03, -0.01], [-0.03, 0.01, 0.05]];
+        let b = [1.2f32, -0.8, 0.5];
+        let mut coarse = ControlGrid::zeros(coarse_vol, tile);
+        for ck in 0..coarse.dims.nz {
+            for cj in 0..coarse.dims.ny {
+                for ci in 0..coarse.dims.nx {
+                    // CP (ci,cj,ck) sits at coarse-voxel position (ci−1)·δ.
+                    let px = (ci as f32 - 1.0) * tile[0] as f32;
+                    let py = (cj as f32 - 1.0) * tile[1] as f32;
+                    let pz = (ck as f32 - 1.0) * tile[2] as f32;
+                    let i = coarse.idx(ci, cj, ck);
+                    coarse.x[i] = a[0][0] * px + a[0][1] * py + a[0][2] * pz + b[0];
+                    coarse.y[i] = a[1][0] * px + a[1][1] * py + a[1][2] * pz + b[1];
+                    coarse.z[i] = a[2][0] * px + a[2][1] * py + a[2][2] * pz + b[2];
+                }
+            }
+        }
+        let fine_vol = Dims::new(34, 30, 26);
+        let fine = promote_grid(&coarse, fine_vol, tile);
+        let dense = Method::Reference.instance().interpolate(&fine, fine_vol);
+        let margin = 2 * tile[0]; // clamp-affected shell
+        for z in 0..fine_vol.nz {
+            for y in 0..fine_vol.ny {
+                for x in 0..fine_vol.nx {
+                    let want = [
+                        a[0][0] * x as f32 + a[0][1] * y as f32 + a[0][2] * z as f32 + 2.0 * b[0],
+                        a[1][0] * x as f32 + a[1][1] * y as f32 + a[1][2] * z as f32 + 2.0 * b[1],
+                        a[2][0] * x as f32 + a[2][1] * y as f32 + a[2][2] * z as f32 + 2.0 * b[2],
+                    ];
+                    let i = fine_vol.idx(x, y, z);
+                    let got = [dense.x[i], dense.y[i], dense.z[i]];
+                    let interior = x >= margin
+                        && y >= margin
+                        && z >= margin
+                        && x + margin < fine_vol.nx
+                        && y + margin < fine_vol.ny
+                        && z + margin < fine_vol.nz;
+                    let tol = if interior { 2e-3 } else { 1.0 };
+                    for c in 0..3 {
+                        assert!(
+                            (got[c] - want[c]).abs() < tol,
+                            "({x},{y},{z}) comp {c}: {} vs {} (interior={interior})",
+                            got[c],
+                            want[c]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_spline_at_consistent_with_dense_field_at_lattice_edges() {
+        // The tile-index clamp in eval_spline_at at lattice edges: sweep
+        // the volume's corners, edges and last-partial-tile region on
+        // random grids and require agreement with the dense interpolation.
+        for seed in [3u64, 19, 41] {
+            let vd = Dims::new(23, 18, 14); // non-multiples of the tile
+            let mut g = ControlGrid::zeros(vd, [5, 4, 3]);
+            g.randomize(seed, 3.0);
+            let dense = Method::Reference.instance().interpolate(&g, vd);
+            let xs = [0usize, 1, vd.nx / 2, vd.nx - 2, vd.nx - 1];
+            let ys = [0usize, 1, vd.ny / 2, vd.ny - 2, vd.ny - 1];
+            let zs = [0usize, 1, vd.nz / 2, vd.nz - 2, vd.nz - 1];
+            for &z in &zs {
+                for &y in &ys {
+                    for &x in &xs {
+                        let v = eval_spline_at(&g, x as f32, y as f32, z as f32);
+                        let i = vd.idx(x, y, z);
+                        assert!(
+                            (v[0] - dense.x[i]).abs() < 1e-3
+                                && (v[1] - dense.y[i]).abs() < 1e-3
+                                && (v[2] - dense.z[i]).abs() < 1e-3,
+                            "seed {seed} at ({x},{y},{z}): {v:?} vs ({}, {}, {})",
+                            dense.x[i],
+                            dense.y[i],
+                            dense.z[i]
+                        );
+                    }
+                }
+            }
+            // Beyond the volume (inside the grid's full extent, where the
+            // clamp keeps the 4³ support in range): must stay finite and
+            // continuous with the edge value.
+            let ext = g.full_extent();
+            let v_edge = eval_spline_at(&g, (ext.nx - 1) as f32, (ext.ny - 1) as f32, (ext.nz - 1) as f32);
+            assert!(v_edge.iter().all(|c| c.is_finite()));
+        }
+    }
+
+    #[test]
     fn multilevel_recovers_translation_better_than_identity() {
         let dims = Dims::new(32, 32, 32);
         let mut reference = blob(dims, 16.0, 16.0, 16.0, 40.0);
@@ -185,6 +296,7 @@ mod tests {
             bending_weight: 0.0005,
             method: Method::Ttli,
             step_tolerance: 0.001,
+            ..Default::default()
         };
         let res = register_multilevel(&reference, &floating, &cfg);
         let before = super::super::similarity::ssd(&reference, &floating);

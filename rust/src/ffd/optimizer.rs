@@ -2,37 +2,23 @@
 //! search (NiftyReg's conjugate-gradient-free default scheme). The step is
 //! normalized by the L∞ norm of the control-point gradient so `step` is in
 //! voxels of control-point motion.
+//!
+//! The hot loop runs on a [`LevelWorkspace`]: one fused
+//! interpolate+warp+SSD pass per line-search probe (no warped volume, no
+//! allocation) and a fused two-pass gradient step, all fanned across the
+//! workspace's worker pool (`FfdConfig::threads`). See `ffd::workspace`
+//! for the bit-identity contract against the composed pipeline.
 
-use std::time::Instant;
-
-use super::bending::{bending_energy, bending_gradient};
-use super::gradient::{max_norm, voxel_to_cp_gradient};
-use super::similarity::{ssd, ssd_voxel_gradient};
+use super::gradient::max_norm;
+use super::workspace::LevelWorkspace;
 use super::{FfdConfig, FfdTiming};
-use crate::bspline::{ControlGrid, Interpolator};
-use crate::volume::resample::warp;
+use crate::bspline::ControlGrid;
 use crate::volume::Volume;
 
-/// Cost = SSD + λ·BendingEnergy for the current grid.
-fn cost(
-    reference: &Volume,
-    floating: &Volume,
-    grid: &ControlGrid,
-    interp: &dyn Interpolator,
-    lambda: f32,
-    timing: &mut FfdTiming,
-) -> f64 {
-    let t0 = Instant::now();
-    let field = interp.interpolate(grid, reference.dims);
-    timing.bsi_s += t0.elapsed().as_secs_f64();
-    let t1 = Instant::now();
-    let warped = warp(floating, &field);
-    timing.warp_s += t1.elapsed().as_secs_f64();
-    ssd(reference, &warped) + lambda as f64 * bending_energy(grid)
-}
-
 /// Optimize `grid` in place for up to `cfg.max_iter` iterations at one
-/// pyramid level. Returns the final cost.
+/// pyramid level. Returns the final cost. Allocates one workspace; the
+/// multilevel driver uses [`optimize_level_ws`] to share a workspace
+/// across levels.
 pub fn optimize_level(
     reference: &Volume,
     floating: &Volume,
@@ -40,37 +26,46 @@ pub fn optimize_level(
     cfg: &FfdConfig,
     timing: &mut FfdTiming,
 ) -> f64 {
+    let mut ws = LevelWorkspace::new(cfg);
+    optimize_level_ws(reference, floating, grid, cfg, timing, &mut ws)
+}
+
+/// Workspace-threaded core of [`optimize_level`]: iterations and
+/// line-search trials allocate nothing.
+pub fn optimize_level_ws(
+    reference: &Volume,
+    floating: &Volume,
+    grid: &mut ControlGrid,
+    cfg: &FfdConfig,
+    timing: &mut FfdTiming,
+    ws: &mut LevelWorkspace,
+) -> f64 {
     let interp = cfg.method.instance();
+    let imp = interp.as_ref();
     let lambda = cfg.bending_weight;
     // Initial step: a fraction of the control-point spacing (NiftyReg uses
     // half the grid spacing as the largest trusted step).
     let init_step = 0.5 * grid.tile[0].max(grid.tile[1]).max(grid.tile[2]) as f32;
     let mut step = init_step;
-    let mut current = cost(reference, floating, grid, interp.as_ref(), lambda, timing);
+    if cfg.max_iter == 0 {
+        return ws.cost(reference, floating, imp, grid, lambda, timing);
+    }
 
+    let mut current = f64::INFINITY;
+    // Whether ws.field already holds grid's dense field: true right after
+    // an accepted trial (its fused pass was the last field writer), letting
+    // the gradient skip one full BSI pass per iteration.
+    let mut field_current = false;
     for _ in 0..cfg.max_iter {
         timing.iterations += 1;
-        // Gradient of the full objective.
-        let t0 = Instant::now();
-        let field = interp.interpolate(grid, reference.dims);
-        timing.bsi_s += t0.elapsed().as_secs_f64();
-        let t1 = Instant::now();
-        let warped = warp(floating, &field);
-        timing.warp_s += t1.elapsed().as_secs_f64();
-        let t2 = Instant::now();
-        let vg = ssd_voxel_gradient(reference, &warped);
-        let mut cg = voxel_to_cp_gradient(grid, &vg);
-        if lambda > 0.0 {
-            let bg = bending_gradient(grid);
-            for i in 0..cg.len() {
-                cg.x[i] += lambda * bg.x[i];
-                cg.y[i] += lambda * bg.y[i];
-                cg.z[i] += lambda * bg.z[i];
-            }
-        }
-        timing.gradient_s += t2.elapsed().as_secs_f64();
-
-        let norm = max_norm(&cg);
+        // Gradient of the full objective (fused passes, fills ws.cg()).
+        // The pass also yields the objective at `grid` for free — after an
+        // accepted trial this recomputes the accepted cost bit-identically,
+        // and on the first iteration it doubles as the initial cost, so no
+        // separate cost() pass is ever needed.
+        current =
+            ws.objective_gradient(reference, floating, imp, grid, lambda, timing, field_current);
+        let norm = max_norm(ws.cg());
         if norm <= 0.0 {
             break;
         }
@@ -79,15 +74,12 @@ pub fn optimize_level(
         // Backtracking line search along −g.
         let mut improved = false;
         while step > init_step * cfg.step_tolerance {
-            let mut trial = grid.clone();
-            for i in 0..trial.len() {
-                trial.x[i] -= step * inv * cg.x[i];
-                trial.y[i] -= step * inv * cg.y[i];
-                trial.z[i] -= step * inv * cg.z[i];
-            }
-            let c = cost(reference, floating, &trial, interp.as_ref(), lambda, timing);
+            ws.make_trial(grid, step * inv);
+            let c = ws.trial_cost(reference, floating, imp, lambda, timing);
             if c < current {
-                *grid = trial;
+                grid.x.copy_from_slice(&ws.trial().x);
+                grid.y.copy_from_slice(&ws.trial().y);
+                grid.z.copy_from_slice(&ws.trial().z);
                 current = c;
                 improved = true;
                 break;
@@ -97,6 +89,13 @@ pub fn optimize_level(
         if !improved {
             break;
         }
+        // The accepted trial's fused pass was the last to fill ws.field,
+        // and `grid` is now that trial: the next gradient can reuse it.
+        field_current = true;
+        // Re-expand after a successful iteration (NiftyReg-style): a single
+        // early backtrack must not pin every later iteration to a tiny
+        // step, or the optimizer crawls once the descent direction changes.
+        step = (step * 2.0).min(init_step);
     }
     current
 }
@@ -129,9 +128,10 @@ mod tests {
             bending_weight: 0.0005,
             method: Method::Ttli,
             step_tolerance: 0.001,
+            ..Default::default()
         };
         let mut timing = FfdTiming::default();
-        let before = ssd(&reference, &floating);
+        let before = super::super::similarity::ssd(&reference, &floating);
         let after = optimize_level(&reference, &floating, &mut grid, &cfg, &mut timing);
         assert!(
             after < 0.35 * before,
@@ -139,6 +139,7 @@ mod tests {
         );
         assert!(timing.iterations > 0);
         assert!(timing.bsi_s > 0.0);
+        assert!(timing.reg_s > 0.0, "λ>0 runs must account regularization time");
     }
 
     #[test]
@@ -152,5 +153,39 @@ mod tests {
         assert!(c < 1e-10);
         // Grid must stay (near) identity.
         assert!(grid.x.iter().all(|&x| x.abs() < 1e-3));
+    }
+
+    #[test]
+    fn explicit_thread_counts_give_identical_results() {
+        let dims = Dims::new(20, 20, 20);
+        let blob = |cx: f32| {
+            Volume::from_fn(dims, [1.0; 3], move |x, y, z| {
+                let d2 = (x as f32 - cx).powi(2)
+                    + (y as f32 - 10.0).powi(2)
+                    + (z as f32 - 10.0).powi(2);
+                (-d2 / 14.0).exp()
+            })
+        };
+        let reference = blob(10.0);
+        let floating = blob(11.0);
+        let run = |threads: usize| {
+            let cfg = FfdConfig {
+                levels: 1,
+                max_iter: 6,
+                tile: [5, 5, 5],
+                threads,
+                ..Default::default()
+            };
+            let mut grid = ControlGrid::zeros(dims, [5, 5, 5]);
+            let mut timing = FfdTiming::default();
+            let c = optimize_level(&reference, &floating, &mut grid, &cfg, &mut timing);
+            (c, grid)
+        };
+        let (c1, g1) = run(1);
+        let (c4, g4) = run(4);
+        assert_eq!(c1.to_bits(), c4.to_bits());
+        assert_eq!(g1.x, g4.x);
+        assert_eq!(g1.y, g4.y);
+        assert_eq!(g1.z, g4.z);
     }
 }

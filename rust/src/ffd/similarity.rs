@@ -5,36 +5,90 @@
 //! analytic gradient, so SSD is the primary metric (NCC provided for
 //! robustness experiments).
 
+use crate::util::threadpool::{par_chunks_mut3, par_map};
 use crate::volume::{VectorField, Volume};
 
-/// Mean squared difference: `Σ (R−W)² / N`.
-pub fn ssd(reference: &Volume, warped: &Volume) -> f64 {
-    assert_eq!(reference.dims, warped.dims);
+/// Sum per-z-slice `f64` partials computed in parallel, folded serially in
+/// slice order — the deterministic-reduction scheme shared by every
+/// similarity kernel and by the fused registration passes
+/// (`ffd::workspace`): the result is independent of the thread count and
+/// of how slices were grouped into chunks.
+fn slice_reduce(nz: usize, per_slice: impl Fn(usize) -> f64 + Sync) -> f64 {
+    let partials = par_map(nz, per_slice);
     let mut acc = 0.0f64;
-    for (r, w) in reference.data.iter().zip(&warped.data) {
-        let d = (r - w) as f64;
-        acc += d * d;
+    for p in &partials {
+        acc += *p;
     }
-    acc / reference.data.len() as f64
+    acc
 }
 
-/// Normalized cross-correlation (global).
+/// Per-slice partial of `Σ (R−W)²` over slice `z` — the exact accumulation
+/// the fused cost pass replicates (see `ffd::workspace`).
+pub(crate) fn ssd_slice_partial(reference: &Volume, warped: &Volume, z: usize) -> f64 {
+    let plane = reference.dims.nx * reference.dims.ny;
+    let base = z * plane;
+    let mut acc = 0.0f64;
+    for i in base..base + plane {
+        let d = (reference.data[i] - warped.data[i]) as f64;
+        acc += d * d;
+    }
+    acc
+}
+
+/// Mean squared difference: `Σ (R−W)² / N`. Parallel over z-slices with a
+/// serial in-order fold, so the value is thread-count independent.
+pub fn ssd(reference: &Volume, warped: &Volume) -> f64 {
+    assert_eq!(reference.dims, warped.dims);
+    let n = reference.data.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let total = slice_reduce(reference.dims.nz, |z| ssd_slice_partial(reference, warped, z));
+    total / n as f64
+}
+
+/// Normalized cross-correlation (global). Same deterministic per-slice
+/// reduction scheme as [`ssd`].
 pub fn ncc(reference: &Volume, warped: &Volume) -> f64 {
     assert_eq!(reference.dims, warped.dims);
+    if reference.data.is_empty() {
+        return 0.0;
+    }
     let n = reference.data.len() as f64;
+    let dims = reference.dims;
+    let plane = dims.nx * dims.ny;
+    let sums = par_map(dims.nz, |z| {
+        let base = z * plane;
+        let (mut sr, mut sw) = (0.0f64, 0.0f64);
+        for i in base..base + plane {
+            sr += reference.data[i] as f64;
+            sw += warped.data[i] as f64;
+        }
+        [sr, sw]
+    });
     let (mut sr, mut sw) = (0.0f64, 0.0f64);
-    for (r, w) in reference.data.iter().zip(&warped.data) {
-        sr += *r as f64;
-        sw += *w as f64;
+    for s in &sums {
+        sr += s[0];
+        sw += s[1];
     }
     let (mr, mw) = (sr / n, sw / n);
+    let moments = par_map(dims.nz, |z| {
+        let base = z * plane;
+        let (mut cov, mut vr, mut vw) = (0.0f64, 0.0f64, 0.0f64);
+        for i in base..base + plane {
+            let dr = reference.data[i] as f64 - mr;
+            let dw = warped.data[i] as f64 - mw;
+            cov += dr * dw;
+            vr += dr * dr;
+            vw += dw * dw;
+        }
+        [cov, vr, vw]
+    });
     let (mut cov, mut vr, mut vw) = (0.0f64, 0.0f64, 0.0f64);
-    for (r, w) in reference.data.iter().zip(&warped.data) {
-        let dr = *r as f64 - mr;
-        let dw = *w as f64 - mw;
-        cov += dr * dw;
-        vr += dr * dr;
-        vw += dw * dw;
+    for m in &moments {
+        cov += m[0];
+        vr += m[1];
+        vw += m[2];
     }
     if vr <= 0.0 || vw <= 0.0 {
         return 0.0;
@@ -44,18 +98,29 @@ pub fn ncc(reference: &Volume, warped: &Volume) -> f64 {
 
 /// Voxelwise SSD gradient with respect to the deformation field:
 /// `∂SSD/∂T(v) = −2/N · (R(v) − W(v)) · ∇W(v)`, with ∇W the spatial
-/// gradient of the warped image (NiftyReg's approximation).
+/// gradient of the warped image (NiftyReg's approximation). Parallel over
+/// z-planes; per-voxel values are independent, so the result is identical
+/// at every thread count. The fused registration pass (`ffd::workspace`)
+/// computes the same values without materializing `∇W`.
 pub fn ssd_voxel_gradient(reference: &Volume, warped: &Volume) -> VectorField {
     assert_eq!(reference.dims, warped.dims);
     let grad_w = crate::volume::resample::gradient(warped);
     let mut g = VectorField::zeros(reference.dims);
-    let scale = -2.0 / reference.data.len() as f32;
-    for i in 0..g.x.len() {
-        let diff = scale * (reference.data[i] - warped.data[i]);
-        g.x[i] = diff * grad_w.x[i];
-        g.y[i] = diff * grad_w.y[i];
-        g.z[i] = diff * grad_w.z[i];
+    if reference.data.is_empty() {
+        return g;
     }
+    let scale = -2.0 / reference.data.len() as f32;
+    let plane = reference.dims.nx * reference.dims.ny;
+    par_chunks_mut3(&mut g.x, &mut g.y, &mut g.z, plane, |ci, gx, gy, gz| {
+        let base = ci * plane;
+        for o in 0..gx.len() {
+            let i = base + o;
+            let diff = scale * (reference.data[i] - warped.data[i]);
+            gx[o] = diff * grad_w.x[i];
+            gy[o] = diff * grad_w.y[i];
+            gz[o] = diff * grad_w.z[i];
+        }
+    });
     g
 }
 

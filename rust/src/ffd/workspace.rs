@@ -1,0 +1,567 @@
+//! Reusable per-level buffers + fused, pool-parallel kernels for the FFD
+//! registration hot loop (DESIGN.md §"Registration hot loop").
+//!
+//! The seed optimizer materialized a fresh dense deformation field, a
+//! warped volume and (per iteration) a full spatial-gradient field for
+//! every cost probe, all single-threaded. This module threads one
+//! [`LevelWorkspace`] through the optimizers so iterations and line-search
+//! trials allocate nothing, and fuses
+//!
+//! * interpolate → warp → SSD into **one** chunked pass for cost probes —
+//!   a line-search trial only needs a scalar, so the warped volume is
+//!   never materialized; and
+//! * interpolate → warp (pass 1) and ∇W → SSD-voxel-gradient (pass 2)
+//!   for the gradient step — the spatial-gradient field is never
+//!   materialized, and the SSD objective falls out of pass 1 for free.
+//!
+//! **Bit-identity contract**: every fused kernel replicates the per-voxel
+//! arithmetic of the composed `interpolate` → [`warp`] → [`ssd`] /
+//! [`ssd_voxel_gradient`] oracle exactly, and every reduction is
+//! accumulated per z-slice and folded in slice order — so results are
+//! bitwise identical to the composed path at every thread count
+//! (property-tested in `tests/ffd_fused.rs`).
+//!
+//! Threading: the workspace owns one [`WorkerPool`] sized by
+//! [`FfdConfig::threads`] (0 = the process-default pool) and every fused
+//! pass, the separable adjoint and the final dense-field interpolation fan
+//! across it.
+//!
+//! [`warp`]: crate::volume::resample::warp
+//! [`ssd`]: super::similarity::ssd
+//! [`ssd_voxel_gradient`]: super::similarity::ssd_voxel_gradient
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::bending::{bending_energy, bending_gradient_into};
+use super::gradient::{voxel_to_cp_gradient_into, AdjointScratch};
+use super::{FfdConfig, FfdTiming};
+use crate::bspline::exec::{self, WorkerPool};
+use crate::bspline::{ControlGrid, Interpolator, Method};
+use crate::volume::resample::{central_diff, warp_sample};
+use crate::volume::{Dims, VectorField, Volume};
+
+/// Per-level scratch state of the registration hot loop. Create once per
+/// registration ([`LevelWorkspace::new`]) and reuse across pyramid levels;
+/// buffers are (re)sized lazily per level and never reallocated inside the
+/// iteration loop.
+pub struct LevelWorkspace {
+    pool: Arc<WorkerPool>,
+    /// Dense deformation field scratch (reference lattice).
+    field: VectorField,
+    /// Warped floating image scratch (gradient step only).
+    warped: Volume,
+    /// Voxelwise SSD gradient scratch.
+    vg: VectorField,
+    /// Line-search trial grid.
+    trial: ControlGrid,
+    /// Control-point gradient of the full objective.
+    cg: ControlGrid,
+    /// Bending-energy gradient scratch.
+    bg: ControlGrid,
+    adj: AdjointScratch,
+    /// Per-z-slice reduction slots (SSD partials).
+    slice_acc: Vec<f64>,
+}
+
+impl LevelWorkspace {
+    /// Workspace for one registration run, pool sized by `cfg.threads`.
+    pub fn new(cfg: &FfdConfig) -> LevelWorkspace {
+        LevelWorkspace::for_threads(cfg.threads)
+    }
+
+    /// Workspace whose fused passes fan across `threads` workers (0 = the
+    /// process-default pool).
+    pub fn for_threads(threads: usize) -> LevelWorkspace {
+        let pool = if threads > 0 {
+            Arc::new(WorkerPool::new(threads))
+        } else {
+            exec::global_pool_arc()
+        };
+        LevelWorkspace {
+            pool,
+            field: VectorField::zeros(Dims::new(0, 0, 0)),
+            warped: Volume::zeros(Dims::new(0, 0, 0), [1.0; 3]),
+            vg: VectorField::zeros(Dims::new(0, 0, 0)),
+            trial: ControlGrid::zeros(Dims::new(1, 1, 1), [1, 1, 1]),
+            cg: ControlGrid::zeros(Dims::new(1, 1, 1), [1, 1, 1]),
+            bg: ControlGrid::zeros(Dims::new(1, 1, 1), [1, 1, 1]),
+            adj: AdjointScratch::default(),
+            slice_acc: Vec::new(),
+        }
+    }
+
+    /// Workers the fused passes fan across.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// An interpolator bound to this workspace's pool — the
+    /// `FfdConfig::threads` → [`Method::par_instance`] wiring without
+    /// spawning a second pool (used for the final dense field).
+    pub fn interpolator(&self, method: Method) -> Box<dyn Interpolator + Send + Sync> {
+        Box::new(exec::Pooled::with_pool(method.instance(), self.pool.clone()))
+    }
+
+    /// The most recent control-point gradient ([`Self::objective_gradient`]).
+    pub fn cg(&self) -> &ControlGrid {
+        &self.cg
+    }
+
+    /// The current line-search trial grid ([`Self::make_trial`]).
+    pub fn trial(&self) -> &ControlGrid {
+        &self.trial
+    }
+
+    /// Size every buffer for one pyramid level (idempotent: reuses
+    /// allocations when shapes already match).
+    fn ensure_level(&mut self, vol_dims: Dims, grid: &ControlGrid) {
+        if self.field.dims != vol_dims {
+            resize_field(&mut self.field, vol_dims);
+            resize_field(&mut self.vg, vol_dims);
+            self.warped.dims = vol_dims;
+            self.warped.data.clear();
+            self.warped.data.resize(vol_dims.count(), 0.0);
+        }
+        if self.slice_acc.len() != vol_dims.nz {
+            self.slice_acc.clear();
+            self.slice_acc.resize(vol_dims.nz, 0.0);
+        }
+        if self.trial.dims != grid.dims || self.trial.tile != grid.tile {
+            self.trial.reshape_zeroed_like(grid);
+            self.cg.reshape_zeroed_like(grid);
+            self.bg.reshape_zeroed_like(grid);
+        }
+    }
+
+    /// trial = grid − s·cg (the backtracking probe, built in place from the
+    /// last [`Self::objective_gradient`]).
+    pub fn make_trial(&mut self, grid: &ControlGrid, s: f32) {
+        debug_assert_eq!(self.cg.len(), grid.len(), "gradient not computed for this level");
+        let Self { trial, cg, .. } = self;
+        for i in 0..grid.len() {
+            trial.x[i] = grid.x[i] - s * cg.x[i];
+            trial.y[i] = grid.y[i] - s * cg.y[i];
+            trial.z[i] = grid.z[i] - s * cg.z[i];
+        }
+    }
+
+    /// trial = grid − s·dir for an externally held direction (conjugate
+    /// gradient).
+    pub fn make_trial_along(&mut self, grid: &ControlGrid, dir: &ControlGrid, s: f32) {
+        debug_assert_eq!(dir.len(), grid.len());
+        debug_assert_eq!(self.trial.len(), grid.len());
+        let trial = &mut self.trial;
+        for i in 0..grid.len() {
+            trial.x[i] = grid.x[i] - s * dir.x[i];
+            trial.y[i] = grid.y[i] - s * dir.y[i];
+            trial.z[i] = grid.z[i] - s * dir.z[i];
+        }
+    }
+
+    /// Fused objective evaluation for `grid`: SSD via one
+    /// interpolate+warp+reduce pass, plus λ·bending when λ ≠ 0.
+    pub fn cost(
+        &mut self,
+        reference: &Volume,
+        floating: &Volume,
+        imp: &dyn Interpolator,
+        grid: &ControlGrid,
+        lambda: f32,
+        timing: &mut FfdTiming,
+    ) -> f64 {
+        self.ensure_level(reference.dims, grid);
+        let Self { pool, field, slice_acc, .. } = self;
+        let ssd = fused_ssd_pass(pool, imp, grid, reference, floating, field, slice_acc, timing);
+        ssd + regularization_energy(grid, lambda, timing)
+    }
+
+    /// [`Self::cost`] for the in-place trial grid from [`Self::make_trial`] /
+    /// [`Self::make_trial_along`] — the line-search probe: one fused pass,
+    /// no warped volume, no allocation.
+    pub fn trial_cost(
+        &mut self,
+        reference: &Volume,
+        floating: &Volume,
+        imp: &dyn Interpolator,
+        lambda: f32,
+        timing: &mut FfdTiming,
+    ) -> f64 {
+        debug_assert_eq!(self.field.dims, reference.dims, "cost()/gradient first sizes the level");
+        let Self { pool, field, trial, slice_acc, .. } = self;
+        let ssd = fused_ssd_pass(pool, imp, trial, reference, floating, field, slice_acc, timing);
+        let reg = regularization_energy(trial, lambda, timing);
+        ssd + reg
+    }
+
+    /// Fused objective gradient for `grid` into the workspace's CP-gradient
+    /// buffer ([`Self::cg`]): interpolate+warp (pass 1, which also yields
+    /// the SSD objective for free), fused ∇W·SSD-residual (pass 2, no
+    /// spatial-gradient field), separable adjoint (pass 3), plus
+    /// λ·bending. Returns the objective value at `grid`.
+    ///
+    /// `reuse_field`: caller-asserted invariant that [`Self::cost`] /
+    /// [`Self::trial_cost`] already filled the workspace field for this
+    /// exact `grid` (the optimizers set it after an accepted trial, whose
+    /// fused pass was the last field writer). Pass 1 then skips the dense
+    /// interpolation — the stored values are bit-identical, so the result
+    /// is unchanged; only one full BSI pass per iteration is saved.
+    #[allow(clippy::too_many_arguments)]
+    pub fn objective_gradient(
+        &mut self,
+        reference: &Volume,
+        floating: &Volume,
+        imp: &dyn Interpolator,
+        grid: &ControlGrid,
+        lambda: f32,
+        timing: &mut FfdTiming,
+        reuse_field: bool,
+    ) -> f64 {
+        // A level change reallocates the field buffer — the reuse invariant
+        // cannot hold across it, whatever the caller believes.
+        let reuse_field = reuse_field && self.field.dims == reference.dims;
+        self.ensure_level(reference.dims, grid);
+        let dims = reference.dims;
+        let n = dims.count();
+        let nx = dims.nx;
+        let ny = dims.ny;
+
+        // Pass 1: dense field + warped volume (+ per-slice SSD partials).
+        let t_pass = Instant::now();
+        let bsi_ns = AtomicU64::new(0);
+        let rest_ns = AtomicU64::new(0);
+        {
+            let Self { pool, field, warped, slice_acc, .. } = self;
+            exec::run_slab_pass4(
+                pool,
+                dims,
+                grid.tile[2],
+                &mut field.x,
+                &mut field.y,
+                &mut field.z,
+                &mut warped.data,
+                slice_acc,
+                |chunk, sx, sy, sz, sw, acc| {
+                    if !reuse_field {
+                        let t0 = Instant::now();
+                        imp.interpolate_into(
+                            grid,
+                            dims,
+                            chunk,
+                            exec::FieldSlabMut { x: &mut *sx, y: &mut *sy, z: &mut *sz },
+                        );
+                        bsi_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    }
+                    let t1 = Instant::now();
+                    for lz in 0..chunk.len() {
+                        let z = chunk.z0 + lz;
+                        acc[lz] = warp_ssd_slice(
+                            reference,
+                            floating,
+                            nx,
+                            ny,
+                            lz,
+                            z,
+                            sx,
+                            sy,
+                            sz,
+                            |i, w| sw[i] = w,
+                        );
+                    }
+                    rest_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                },
+            );
+        }
+        attribute_pass(
+            timing,
+            t_pass.elapsed().as_secs_f64(),
+            bsi_ns.load(Ordering::Relaxed),
+            rest_ns.load(Ordering::Relaxed),
+        );
+        let mut ssd_total = 0.0f64;
+        for v in &self.slice_acc {
+            ssd_total += *v;
+        }
+        let ssd = if n > 0 { ssd_total / n as f64 } else { 0.0 };
+
+        // Pass 2: fused ∇W + SSD voxel gradient (the composed
+        // `gradient(warped)` → multiply oracle, without the intermediate
+        // field). Reads the complete warped buffer filled by pass 1.
+        let t2 = Instant::now();
+        {
+            let Self { pool, warped, vg, slice_acc, .. } = self;
+            let warped_ref: &Volume = warped;
+            let scale = -2.0 / n as f32;
+            exec::run_slab_pass3(
+                pool,
+                dims,
+                grid.tile[2],
+                &mut vg.x,
+                &mut vg.y,
+                &mut vg.z,
+                slice_acc,
+                |chunk, gx, gy, gz, _acc| {
+                    for lz in 0..chunk.len() {
+                        let z = chunk.z0 + lz;
+                        let zi = z as isize;
+                        for y in 0..ny {
+                            let yi = y as isize;
+                            let si = (lz * ny + y) * nx;
+                            let gi = (z * ny + y) * nx;
+                            for x in 0..nx {
+                                // Same per-voxel arithmetic as the composed
+                                // `gradient(warped)` → residual-multiply
+                                // oracle (shared central_diff kernel).
+                                let d = central_diff(warped_ref, x as isize, yi, zi);
+                                let diff = scale
+                                    * (reference.data[gi + x] - warped_ref.data[gi + x]);
+                                gx[si + x] = diff * d[0];
+                                gy[si + x] = diff * d[1];
+                                gz[si + x] = diff * d[2];
+                            }
+                        }
+                    }
+                },
+            );
+        }
+
+        // Pass 3: separable adjoint onto the control points.
+        {
+            let Self { pool, vg, cg, adj, .. } = self;
+            voxel_to_cp_gradient_into(grid, vg, Some(&**pool), cg, adj);
+        }
+        timing.gradient_s += t2.elapsed().as_secs_f64();
+
+        // λ-regularization: energy for the returned objective, gradient
+        // axpy'd onto cg. Skipped entirely when λ == 0.
+        let mut obj = ssd;
+        if lambda != 0.0 {
+            let t3 = Instant::now();
+            obj += lambda as f64 * bending_energy(grid);
+            {
+                let Self { cg, bg, .. } = self;
+                bending_gradient_into(grid, bg);
+                for i in 0..cg.len() {
+                    cg.x[i] += lambda * bg.x[i];
+                    cg.y[i] += lambda * bg.y[i];
+                    cg.z[i] += lambda * bg.z[i];
+                }
+            }
+            timing.reg_s += t3.elapsed().as_secs_f64();
+        }
+        obj
+    }
+}
+
+fn resize_field(f: &mut VectorField, dims: Dims) {
+    f.dims = dims;
+    let n = dims.count();
+    f.x.clear();
+    f.x.resize(n, 0.0);
+    f.y.clear();
+    f.y.resize(n, 0.0);
+    f.z.clear();
+    f.z.resize(n, 0.0);
+}
+
+/// Warp + SSD for one z-slice of a field slab: samples the floating image
+/// at every displaced voxel, feeds the warped value to `store` (the
+/// gradient pass persists it, cost probes discard it), and returns the
+/// slice's `Σ(R−W)²` partial. This is THE single definition of the fused
+/// per-voxel arithmetic the bit-identity contract lives in — both fused
+/// passes call it, so they cannot diverge from each other or (by
+/// construction) from the composed `warp`→`ssd` oracle.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn warp_ssd_slice(
+    reference: &Volume,
+    floating: &Volume,
+    nx: usize,
+    ny: usize,
+    lz: usize,
+    z: usize,
+    sx: &[f32],
+    sy: &[f32],
+    sz: &[f32],
+    mut store: impl FnMut(usize, f32),
+) -> f64 {
+    let mut s = 0.0f64;
+    for y in 0..ny {
+        let si = (lz * ny + y) * nx;
+        let gi = (z * ny + y) * nx;
+        for x in 0..nx {
+            let px = x as f32 + sx[si + x];
+            let py = y as f32 + sy[si + x];
+            let pz = z as f32 + sz[si + x];
+            let w = warp_sample(floating, px, py, pz);
+            store(si + x, w);
+            let d = (reference.data[gi + x] - w) as f64;
+            s += d * d;
+        }
+    }
+    s
+}
+
+/// λ·bending_energy(grid) — skipped entirely when λ == 0 (the seed paid a
+/// full lattice pass per line-search probe even at λ=0). Time lands in
+/// `timing.reg_s`, so λ=0 runs provably spend no regularization time.
+fn regularization_energy(grid: &ControlGrid, lambda: f32, timing: &mut FfdTiming) -> f64 {
+    if lambda == 0.0 {
+        return 0.0;
+    }
+    let t = Instant::now();
+    let e = lambda as f64 * bending_energy(grid);
+    timing.reg_s += t.elapsed().as_secs_f64();
+    e
+}
+
+/// One fused interpolate+warp+SSD pass: fills `field` (scratch) and the
+/// per-slice SSD partials, returns `Σ(R−W)²/N`. Bitwise equal to the
+/// composed `interpolate` → `warp` → `ssd` oracle at every thread count.
+#[allow(clippy::too_many_arguments)]
+fn fused_ssd_pass(
+    pool: &WorkerPool,
+    imp: &dyn Interpolator,
+    grid: &ControlGrid,
+    reference: &Volume,
+    floating: &Volume,
+    field: &mut VectorField,
+    slice_acc: &mut [f64],
+    timing: &mut FfdTiming,
+) -> f64 {
+    let dims = reference.dims;
+    debug_assert_eq!(field.dims, dims);
+    let n = dims.count();
+    if n == 0 {
+        return 0.0;
+    }
+    let nx = dims.nx;
+    let ny = dims.ny;
+    let t_pass = Instant::now();
+    let bsi_ns = AtomicU64::new(0);
+    let rest_ns = AtomicU64::new(0);
+    exec::run_slab_pass3(
+        pool,
+        dims,
+        grid.tile[2],
+        &mut field.x,
+        &mut field.y,
+        &mut field.z,
+        slice_acc,
+        |chunk, sx, sy, sz, acc| {
+            let t0 = Instant::now();
+            imp.interpolate_into(
+                grid,
+                dims,
+                chunk,
+                exec::FieldSlabMut { x: &mut *sx, y: &mut *sy, z: &mut *sz },
+            );
+            bsi_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let t1 = Instant::now();
+            for lz in 0..chunk.len() {
+                let z = chunk.z0 + lz;
+                // Cost probes discard the warped values — scalar SSD only.
+                acc[lz] =
+                    warp_ssd_slice(reference, floating, nx, ny, lz, z, sx, sy, sz, |_, _| {});
+            }
+            rest_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        },
+    );
+    attribute_pass(
+        timing,
+        t_pass.elapsed().as_secs_f64(),
+        bsi_ns.load(Ordering::Relaxed),
+        rest_ns.load(Ordering::Relaxed),
+    );
+    let mut total = 0.0f64;
+    for v in slice_acc.iter() {
+        total += *v;
+    }
+    total / n as f64
+}
+
+/// Split a fused pass's wall time between BSI and warp/reduce by the
+/// measured busy-share of its chunks. `FfdTiming`'s contract is wall
+/// clock, so the per-chunk CPU nanos are only used as the split ratio —
+/// `bsi_s + warp_s` still sums to the pass's elapsed time and
+/// `bsi_fraction` keeps its Figure 8/9 meaning under parallel execution.
+fn attribute_pass(timing: &mut FfdTiming, wall_s: f64, bsi_ns: u64, rest_ns: u64) {
+    let b = bsi_ns as f64;
+    let r = rest_ns as f64;
+    let busy = b + r;
+    if busy > 0.0 {
+        timing.bsi_s += wall_s * (b / busy);
+        timing.warp_s += wall_s * (r / busy);
+    } else {
+        timing.warp_s += wall_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ffd::similarity::{ssd, ssd_voxel_gradient};
+    use crate::volume::resample::warp;
+
+    fn blob(dims: Dims, cx: f32) -> Volume {
+        Volume::from_fn(dims, [1.0; 3], move |x, y, z| {
+            let d2 = (x as f32 - cx).powi(2)
+                + (y as f32 - 10.0).powi(2)
+                + (z as f32 - 10.0).powi(2);
+            (-d2 / 16.0).exp()
+        })
+    }
+
+    #[test]
+    fn fused_cost_matches_composed_pipeline() {
+        let dims = Dims::new(21, 20, 19); // odd dims: partial border tiles
+        let reference = blob(dims, 10.0);
+        let floating = blob(dims, 11.5);
+        let mut grid = ControlGrid::zeros(dims, [5, 5, 5]);
+        grid.randomize(3, 1.5);
+        let imp = Method::Ttli.instance();
+        let oracle = {
+            let f = imp.interpolate(&grid, dims);
+            let w = warp(&floating, &f);
+            ssd(&reference, &w)
+        };
+        for threads in [1usize, 3] {
+            let mut ws = LevelWorkspace::for_threads(threads);
+            let mut timing = FfdTiming::default();
+            let c = ws.cost(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing);
+            assert_eq!(c.to_bits(), oracle.to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_gradient_matches_composed_pipeline() {
+        let dims = Dims::new(18, 17, 16);
+        let reference = blob(dims, 8.0);
+        let floating = blob(dims, 9.0);
+        let mut grid = ControlGrid::zeros(dims, [4, 4, 4]);
+        grid.randomize(11, 1.0);
+        let imp = Method::Ttli.instance();
+        let oracle = {
+            let f = imp.interpolate(&grid, dims);
+            let w = warp(&floating, &f);
+            let vg = ssd_voxel_gradient(&reference, &w);
+            super::super::gradient::voxel_to_cp_gradient(&grid, &vg)
+        };
+        for threads in [1usize, 2] {
+            let mut ws = LevelWorkspace::for_threads(threads);
+            let mut timing = FfdTiming::default();
+            ws.objective_gradient(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing, false);
+            assert_eq!(ws.cg().x, oracle.x, "threads={threads}");
+            assert_eq!(ws.cg().y, oracle.y, "threads={threads}");
+            assert_eq!(ws.cg().z, oracle.z, "threads={threads}");
+            // Field-reuse path: the previous pass left ws.field holding
+            // grid's field, so skipping the interpolation stage must be
+            // bitwise neutral.
+            ws.objective_gradient(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing, true);
+            assert_eq!(ws.cg().x, oracle.x, "reuse threads={threads}");
+            assert_eq!(ws.cg().y, oracle.y, "reuse threads={threads}");
+            assert_eq!(ws.cg().z, oracle.z, "reuse threads={threads}");
+        }
+    }
+}

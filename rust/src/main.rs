@@ -66,7 +66,7 @@ USAGE: ffdreg <command> [flags]
                [--input VOLUME] [--out WARPED]
   register     --reference A --floating B [--out warped.nii]
                [--method M] [--levels 3] [--iters 60] [--tile 5] [--be 0.001]
-               [--no-affine] [--config cfg.json]
+               [--threads N] [--no-affine] [--config cfg.json]
   affine       --reference A --floating B [--out warped.nii]
   serve        [--addr 127.0.0.1:7847] [--workers N] [--queue 256] [--batch 8]
                [--threads N]
@@ -263,8 +263,13 @@ fn cmd_register(args: &Args) -> Result<(), Error> {
     let cfg = Config::resolve(args)?;
     check_out(args)?;
     let (reference, floating) = load_pair(args)?;
+    let threads_label = if cfg.ffd.threads == 0 {
+        format!("default ({})", ffdreg::util::threadpool::num_threads())
+    } else {
+        cfg.ffd.threads.to_string()
+    };
     println!(
-        "registering {}x{}x{} (method {}, levels {}, tile {:?}, be {})",
+        "registering {}x{}x{} (method {}, levels {}, tile {:?}, be {}, threads {threads_label})",
         reference.dims.nx,
         reference.dims.ny,
         reference.dims.nz,
@@ -308,11 +313,12 @@ fn cmd_register(args: &Args) -> Result<(), Error> {
         timer::fmt_secs(t.total_s)
     );
     println!(
-        "  breakdown: BSI {} ({:.1}%), warp {}, gradient {}, other {}",
+        "  breakdown: BSI {} ({:.1}%), warp {}, gradient {}, regularization {}, other {}",
         timer::fmt_secs(t.bsi_s),
         100.0 * t.bsi_fraction(),
         timer::fmt_secs(t.warp_s),
         timer::fmt_secs(t.gradient_s),
+        timer::fmt_secs(t.reg_s),
         timer::fmt_secs(t.other_s)
     );
     println!(

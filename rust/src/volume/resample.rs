@@ -6,7 +6,7 @@
 //! field in voxel units: sample position = (x,y,z) + T(x,y,z).
 
 use super::{Dims, VectorField, Volume};
-use crate::util::threadpool::par_chunks_mut;
+use crate::util::threadpool::{par_chunks_mut, par_chunks_mut3};
 
 /// Trilinear sample at a continuous voxel coordinate, border-replicated.
 #[inline]
@@ -64,6 +64,23 @@ fn sample_trilinear_interior(vol: &Volume, px: f32, py: f32, pz: f32) -> f32 {
     lerp(lerp(x00, x10, fy), lerp(x01, x11, fy), fz)
 }
 
+/// The per-voxel warp kernel shared by [`warp`] and the fused registration
+/// passes (`ffd::workspace`): sample `floating` at a displaced position,
+/// taking the clamp-free interior fast path when the whole 2×2×2
+/// neighborhood is in bounds (`0 ≤ ⌊p⌋` and `⌊p⌋+1 ≤ dim−1` per axis).
+/// Keeping this in one place is what makes the fused passes bit-identical
+/// to the composed `warp` oracle.
+#[inline(always)]
+pub fn warp_sample(floating: &Volume, px: f32, py: f32, pz: f32) -> f32 {
+    let fd = floating.dims;
+    let (hx, hy, hz) = (fd.nx as f32 - 2.0, fd.ny as f32 - 2.0, fd.nz as f32 - 2.0);
+    if px >= 0.0 && px <= hx && py >= 0.0 && py <= hy && pz >= 0.0 && pz <= hz {
+        sample_trilinear_interior(floating, px, py, pz)
+    } else {
+        sample_trilinear(floating, px, py, pz)
+    }
+}
+
 /// Warp `floating` by the displacement field `def` (defined on the reference
 /// lattice): out(v) = floating(v + def(v)).
 ///
@@ -75,14 +92,11 @@ fn sample_trilinear_interior(vol: &Volume, px: f32, py: f32, pz: f32) -> f32 {
 /// `affine::register`.
 pub fn warp(floating: &Volume, def: &VectorField) -> Volume {
     let dims = def.dims;
-    let fd = floating.dims;
     let mut out = Volume::zeros(dims, floating.spacing);
     // The output lattice is the reference frame the field is defined on;
     // callers that know that frame (registration) re-stamp its geometry.
     out.origin = floating.origin;
     let row = dims.nx;
-    // Interior guard: a sample at p is clamp-free iff 0 ≤ p and p+1 ≤ dim−1.
-    let (hx, hy, hz) = (fd.nx as f32 - 2.0, fd.ny as f32 - 2.0, fd.nz as f32 - 2.0);
     par_chunks_mut(&mut out.data, row, |chunk_i, slice| {
         let y = chunk_i % dims.ny;
         let z = chunk_i / dims.ny;
@@ -92,33 +106,49 @@ pub fn warp(floating: &Volume, def: &VectorField) -> Volume {
             let px = x as f32 + def.x[i];
             let py = y as f32 + def.y[i];
             let pz = z as f32 + def.z[i];
-            *o = if px >= 0.0 && px <= hx && py >= 0.0 && py <= hy && pz >= 0.0 && pz <= hz
-            {
-                sample_trilinear_interior(floating, px, py, pz)
-            } else {
-                sample_trilinear(floating, px, py, pz)
-            };
+            *o = warp_sample(floating, px, py, pz);
         }
     });
     out
 }
 
+/// Central-difference spatial gradient at one voxel (per-axis,
+/// border-replicated) — the single definition shared by [`gradient`] and
+/// the fused registration passes (`ffd::workspace`), so the fused path
+/// cannot silently diverge from the composed oracle if the differencing
+/// scheme ever changes.
+#[inline(always)]
+pub fn central_diff(vol: &Volume, xi: isize, yi: isize, zi: isize) -> [f32; 3] {
+    [
+        0.5 * (vol.at_clamped(xi + 1, yi, zi) - vol.at_clamped(xi - 1, yi, zi)),
+        0.5 * (vol.at_clamped(xi, yi + 1, zi) - vol.at_clamped(xi, yi - 1, zi)),
+        0.5 * (vol.at_clamped(xi, yi, zi + 1) - vol.at_clamped(xi, yi, zi - 1)),
+    ]
+}
+
 /// Central-difference spatial gradient of a volume (per-axis), used by the
-/// FFD similarity gradient.
+/// FFD similarity gradient. Parallel over z-planes; per-voxel values are
+/// independent, so the result is identical at every thread count.
 pub fn gradient(vol: &Volume) -> VectorField {
     let dims = vol.dims;
     let mut g = VectorField::zeros(dims);
-    for z in 0..dims.nz {
+    let plane = dims.nx * dims.ny;
+    if plane == 0 {
+        return g;
+    }
+    par_chunks_mut3(&mut g.x, &mut g.y, &mut g.z, plane, |z, gx, gy, gz| {
+        let zi = z as isize;
         for y in 0..dims.ny {
+            let yi = y as isize;
             for x in 0..dims.nx {
-                let i = dims.idx(x, y, z);
-                let (xi, yi, zi) = (x as isize, y as isize, z as isize);
-                g.x[i] = 0.5 * (vol.at_clamped(xi + 1, yi, zi) - vol.at_clamped(xi - 1, yi, zi));
-                g.y[i] = 0.5 * (vol.at_clamped(xi, yi + 1, zi) - vol.at_clamped(xi, yi - 1, zi));
-                g.z[i] = 0.5 * (vol.at_clamped(xi, yi, zi + 1) - vol.at_clamped(xi, yi, zi - 1));
+                let o = y * dims.nx + x;
+                let d = central_diff(vol, x as isize, yi, zi);
+                gx[o] = d[0];
+                gy[o] = d[1];
+                gz[o] = d[2];
             }
         }
-    }
+    });
     g
 }
 

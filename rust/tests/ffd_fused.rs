@@ -1,0 +1,328 @@
+//! Fused registration hot loop: bit-identity against the composed
+//! pipeline, thread-count invariance of full registrations, the
+//! line-search step-regrowth regression, λ=0 regularization accounting,
+//! and determinism of the parallelized similarity kernels.
+
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
+use ffdreg::ffd::bending::{bending_energy, bending_gradient};
+use ffdreg::ffd::gradient::voxel_to_cp_gradient;
+use ffdreg::ffd::similarity::{ncc, ssd, ssd_voxel_gradient};
+use ffdreg::ffd::workspace::LevelWorkspace;
+use ffdreg::ffd::{optimizer, register, FfdConfig, FfdTiming};
+use ffdreg::volume::resample::{gradient, warp};
+use ffdreg::volume::{Dims, Volume};
+
+fn blob_pair(dims: Dims, offset: f32) -> (Volume, Volume) {
+    let c = dims.nx as f32 / 2.0;
+    let mk = |cx: f32| {
+        Volume::from_fn(dims, [1.0; 3], move |x, y, z| {
+            let d2 = (x as f32 - cx).powi(2)
+                + (y as f32 - c).powi(2)
+                + (z as f32 - c).powi(2);
+            (-d2 / 18.0).exp()
+        })
+    };
+    (mk(c), mk(c + offset))
+}
+
+// ---------------------------------------------------------------------------
+// Fused-vs-composed bit-identity (λ > 0, several thread counts)
+
+#[test]
+fn fused_cost_is_bitwise_equal_to_composed_oracle() {
+    let dims = Dims::new(23, 19, 17); // partial border tiles everywhere
+    let (reference, floating) = blob_pair(dims, 1.7);
+    let mut grid = ControlGrid::zeros(dims, [5, 4, 3]);
+    grid.randomize(21, 2.0);
+    let lambda = 0.002f32;
+    for method in [Method::Ttli, Method::Tv] {
+        let imp = method.instance();
+        let oracle = {
+            let field = imp.interpolate(&grid, dims);
+            let warped = warp(&floating, &field);
+            ssd(&reference, &warped) + lambda as f64 * bending_energy(&grid)
+        };
+        for threads in [1usize, 2, 5] {
+            let mut ws = LevelWorkspace::for_threads(threads);
+            let mut timing = FfdTiming::default();
+            let fused =
+                ws.cost(&reference, &floating, imp.as_ref(), &grid, lambda, &mut timing);
+            assert_eq!(
+                fused.to_bits(),
+                oracle.to_bits(),
+                "{method:?} threads={threads}: {fused} vs {oracle}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_gradient_is_bitwise_equal_to_composed_oracle() {
+    let dims = Dims::new(21, 18, 15);
+    let (reference, floating) = blob_pair(dims, 1.3);
+    let mut grid = ControlGrid::zeros(dims, [5, 5, 5]);
+    grid.randomize(5, 1.2);
+    let lambda = 0.001f32;
+    let imp = Method::Ttli.instance();
+    let oracle = {
+        let field = imp.interpolate(&grid, dims);
+        let warped = warp(&floating, &field);
+        let vg = ssd_voxel_gradient(&reference, &warped);
+        let mut cg = voxel_to_cp_gradient(&grid, &vg);
+        let bg = bending_gradient(&grid);
+        for i in 0..cg.len() {
+            cg.x[i] += lambda * bg.x[i];
+            cg.y[i] += lambda * bg.y[i];
+            cg.z[i] += lambda * bg.z[i];
+        }
+        cg
+    };
+    let oracle_cost = {
+        let field = imp.interpolate(&grid, dims);
+        let warped = warp(&floating, &field);
+        ssd(&reference, &warped) + lambda as f64 * bending_energy(&grid)
+    };
+    for threads in [1usize, 2, 5] {
+        let mut ws = LevelWorkspace::for_threads(threads);
+        let mut timing = FfdTiming::default();
+        let obj = ws.objective_gradient(
+            &reference, &floating, imp.as_ref(), &grid, lambda, &mut timing, false,
+        );
+        assert_eq!(obj.to_bits(), oracle_cost.to_bits(), "threads={threads}");
+        assert_eq!(ws.cg().x, oracle.x, "threads={threads}");
+        assert_eq!(ws.cg().y, oracle.y, "threads={threads}");
+        assert_eq!(ws.cg().z, oracle.z, "threads={threads}");
+        // Field-reuse path (cost() filled ws.field for this grid): skipping
+        // the interpolation stage must be bitwise neutral.
+        let c = ws.cost(&reference, &floating, imp.as_ref(), &grid, lambda, &mut timing);
+        assert_eq!(c.to_bits(), oracle_cost.to_bits());
+        let obj2 = ws.objective_gradient(
+            &reference, &floating, imp.as_ref(), &grid, lambda, &mut timing, true,
+        );
+        assert_eq!(obj2.to_bits(), oracle_cost.to_bits(), "reuse threads={threads}");
+        assert_eq!(ws.cg().x, oracle.x, "reuse threads={threads}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Whole-registration thread-count invariance (the CI rust-baseline check)
+
+#[test]
+fn registration_thread_count_bit_identity() {
+    let dims = Dims::new(30, 30, 30);
+    let (reference, floating) = blob_pair(dims, 2.2);
+    let base = FfdConfig {
+        levels: 2,
+        max_iter: 8,
+        tile: [5, 5, 5],
+        bending_weight: 0.001,
+        method: Method::Ttli,
+        step_tolerance: 0.01,
+        threads: 1,
+    };
+    let a = register(&reference, &floating, &base);
+    for threads in [2usize, 4] {
+        let cfg = FfdConfig { threads, ..base.clone() };
+        let b = register(&reference, &floating, &cfg);
+        assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "threads={threads}");
+        assert_eq!(a.grid.x, b.grid.x, "threads={threads}");
+        assert_eq!(a.grid.y, b.grid.y, "threads={threads}");
+        assert_eq!(a.grid.z, b.grid.z, "threads={threads}");
+        assert_eq!(a.field.x, b.field.x, "threads={threads}");
+        assert_eq!(a.warped.data, b.warped.data, "threads={threads}");
+        assert_eq!(a.timing.iterations, b.timing.iterations);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Line-search step regrowth (regression for the decay-only bug)
+
+/// Two blobs: a strong one barely misaligned (forces an early backtrack to
+/// a small step) and a weak one far away (needs large steps afterwards).
+/// With decay-only line search the accepted step sequence is monotonically
+/// nonincreasing, so it can never climb back for the far blob; with
+/// re-expansion it must grow again at some iteration.
+#[test]
+fn step_regrows_after_early_backtrack() {
+    let dims = Dims::new(30, 28, 28);
+    let two_blobs = |x1: f32, x2: f32| {
+        Volume::from_fn(dims, [1.0; 3], move |x, y, z| {
+            let dy = (y as f32 - 14.0).powi(2) + (z as f32 - 14.0).powi(2);
+            let b1 = (-((x as f32 - x1).powi(2) + dy) / 12.0).exp();
+            let b2 = 0.35 * (-((x as f32 - x2).powi(2) + dy) / 25.0).exp();
+            b1 + b2
+        })
+    };
+    let reference = two_blobs(8.0, 20.0);
+    let floating = two_blobs(8.5, 24.0);
+    let cfg = FfdConfig {
+        levels: 1,
+        max_iter: 0, // set per run below
+        tile: [6, 6, 6],
+        bending_weight: 0.0,
+        method: Method::Ttli,
+        step_tolerance: 1e-4,
+        threads: 0,
+    };
+    // Accepted step of iteration k = L∞ difference between the grids after
+    // k and k−1 iterations (the step is L∞-normalized, so the largest CP
+    // motion IS the accepted step size).
+    let grid_after = |iters: usize| {
+        let mut grid = ControlGrid::zeros(dims, [6, 6, 6]);
+        let run_cfg = FfdConfig { max_iter: iters, ..cfg.clone() };
+        let mut timing = FfdTiming::default();
+        optimizer::optimize_level(&reference, &floating, &mut grid, &run_cfg, &mut timing);
+        grid
+    };
+    let linf = |a: &ControlGrid, b: &ControlGrid| {
+        let mut m = 0.0f32;
+        for i in 0..a.len() {
+            m = m
+                .max((a.x[i] - b.x[i]).abs())
+                .max((a.y[i] - b.y[i]).abs())
+                .max((a.z[i] - b.z[i]).abs());
+        }
+        m
+    };
+    let mut prev = grid_after(0);
+    let mut steps = Vec::new();
+    for k in 1..=12 {
+        let g = grid_after(k);
+        steps.push(linf(&g, &prev));
+        prev = g;
+    }
+    // Drop trailing zero steps (converged / no further improvement).
+    while steps.last() == Some(&0.0) {
+        steps.pop();
+    }
+    assert!(steps.len() >= 2, "optimizer made too little progress: {steps:?}");
+    let grew = steps
+        .windows(2)
+        .any(|w| w[0] > 0.0 && w[1] > w[0] * 1.1);
+    assert!(
+        grew,
+        "accepted step never re-grew (decay-only behavior): {steps:?}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// λ=0 must spend no regularization time
+
+#[test]
+fn lambda_zero_spends_no_regularization_time() {
+    let dims = Dims::new(22, 22, 22);
+    let (reference, floating) = blob_pair(dims, 1.5);
+    let run = |lambda: f32| {
+        let cfg = FfdConfig {
+            levels: 1,
+            max_iter: 6,
+            tile: [5, 5, 5],
+            bending_weight: lambda,
+            method: Method::Ttli,
+            step_tolerance: 0.001,
+            threads: 0,
+        };
+        let mut grid = ControlGrid::zeros(dims, [5, 5, 5]);
+        let mut timing = FfdTiming::default();
+        optimizer::optimize_level(&reference, &floating, &mut grid, &cfg, &mut timing);
+        timing
+    };
+    let t0 = run(0.0);
+    assert_eq!(t0.reg_s, 0.0, "λ=0 must not pay for bending energy");
+    assert!(t0.iterations > 0);
+    let t1 = run(0.001);
+    assert!(t1.reg_s > 0.0, "λ>0 must account its regularization time");
+}
+
+// ---------------------------------------------------------------------------
+// Parallelized similarity kernels stay deterministic and correct
+
+#[test]
+fn parallel_similarity_kernels_match_serial_references() {
+    let dims = Dims::new(19, 17, 13);
+    let a = Volume::from_fn(dims, [1.0; 3], |x, y, z| {
+        ((x * 7 + y * 3 + z * 11) % 17) as f32 * 0.25 - 1.0
+    });
+    let b = Volume::from_fn(dims, [1.0; 3], |x, y, z| {
+        ((x * 5 + y * 13 + z * 2) % 19) as f32 * 0.2 - 0.7
+    });
+
+    // ssd vs a straight serial accumulation (regrouping tolerance only).
+    let mut acc = 0.0f64;
+    for (r, w) in a.data.iter().zip(&b.data) {
+        let d = (r - w) as f64;
+        acc += d * d;
+    }
+    let serial_ssd = acc / a.data.len() as f64;
+    let par_ssd = ssd(&a, &b);
+    assert!(
+        (par_ssd - serial_ssd).abs() <= 1e-12 * serial_ssd.abs().max(1.0),
+        "{par_ssd} vs {serial_ssd}"
+    );
+
+    // ncc: affine relation still gives exactly-ish 1.
+    let mut b2 = a.clone();
+    for v in &mut b2.data {
+        *v = 2.5 * *v - 1.0;
+    }
+    assert!((ncc(&a, &b2) - 1.0).abs() < 1e-9);
+
+    // Spatial gradient: bitwise equal to the per-voxel formula.
+    let g = gradient(&a);
+    for z in 0..dims.nz {
+        for y in 0..dims.ny {
+            for x in 0..dims.nx {
+                let i = dims.idx(x, y, z);
+                let (xi, yi, zi) = (x as isize, y as isize, z as isize);
+                let want =
+                    0.5 * (a.at_clamped(xi + 1, yi, zi) - a.at_clamped(xi - 1, yi, zi));
+                assert_eq!(g.x[i].to_bits(), want.to_bits(), "({x},{y},{z})");
+            }
+        }
+    }
+
+    // ssd_voxel_gradient: bitwise equal to gradient + multiply.
+    let vg = ssd_voxel_gradient(&a, &b);
+    let gb = gradient(&b);
+    let scale = -2.0 / a.data.len() as f32;
+    for i in 0..vg.x.len() {
+        let diff = scale * (a.data[i] - b.data[i]);
+        assert_eq!(vg.x[i].to_bits(), (diff * gb.x[i]).to_bits());
+        assert_eq!(vg.y[i].to_bits(), (diff * gb.y[i]).to_bits());
+        assert_eq!(vg.z[i].to_bits(), (diff * gb.z[i]).to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: a registration through the coordinator op honors `threads`
+
+#[test]
+fn register_op_threads_field_is_bitwise_neutral() {
+    use ffdreg::coordinator::service::{run_register, RegisterOp};
+    use ffdreg::volume::formats::save_any;
+
+    let dir = std::env::temp_dir().join("ffdreg-fused-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let dims = Dims::new(20, 20, 20);
+    let (reference, floating) = blob_pair(dims, 1.8);
+    let rp = dir.join("ref.nii");
+    let fp = dir.join("flo.nii");
+    save_any(&reference, &rp).unwrap();
+    save_any(&floating, &fp).unwrap();
+    let run = |threads: usize| {
+        let op = RegisterOp {
+            reference: rp.clone(),
+            floating: fp.clone(),
+            method: Method::Ttli,
+            levels: 1,
+            iters: 4,
+            threads,
+            out: None,
+        };
+        run_register(&op).unwrap()
+    };
+    let a = run(1);
+    let b = run(3);
+    assert_eq!(a.result.cost.to_bits(), b.result.cost.to_bits());
+    assert_eq!(a.result.warped.data, b.result.warped.data);
+}

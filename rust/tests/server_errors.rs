@@ -166,3 +166,34 @@ fn register_accepts_mixed_formats_on_success_path() {
     assert_eq!(warped.dims, v.dims);
     server.stop();
 }
+
+#[test]
+fn many_short_connections_do_not_accumulate_handles() {
+    // Regression: the accept loop used to push every connection's
+    // JoinHandle into a vec and never reap it until shutdown, so a
+    // long-lived server grew memory per connection forever. The loop now
+    // reaps finished handlers each tick; after a burst of short-lived
+    // connections the tracked-handle gauge must return to zero.
+    let (server, _sched) = start_stack();
+    for _ in 0..40 {
+        let mut c = Client::connect(&server.addr).unwrap();
+        let r = c.call(&Json::obj(vec![("op", Json::Str("ping".into()))])).unwrap();
+        assert_eq!(r.get("pong").as_bool(), Some(true));
+        // Client drops here; the handler sees EOF and exits.
+    }
+    // Handlers exit asynchronously and the accept loop reaps on its next
+    // ticks; poll briefly instead of assuming instant teardown.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        if server.active_connections() == 0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "handles were not reaped: {} still tracked",
+            server.active_connections()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    server.stop();
+}
