@@ -23,10 +23,19 @@ pub struct Config {
     /// the process-default pool; >= 1 = a dedicated pool of exactly that
     /// size (1 = strictly serial jobs).
     pub intra_threads: usize,
+    /// Volume-store byte budget (`--store-bytes`, config `store_bytes`).
+    pub store_bytes: usize,
+    /// Registration worker threads (`--reg-workers`, config `reg_workers`).
+    pub reg_workers: usize,
+    /// Registration queue capacity (`--reg-queue`, config `reg_queue`).
+    pub reg_queue: usize,
 }
 
 impl Default for Config {
     fn default() -> Self {
+        // Store/jobs sizing has one source of truth: the server layer's
+        // own defaults.
+        let server = crate::coordinator::server::ServerConfig::default();
         Config {
             ffd: FfdConfig::default(),
             affine_first: true,
@@ -35,6 +44,9 @@ impl Default for Config {
             queue_capacity: 256,
             max_batch: 8,
             intra_threads: 0,
+            store_bytes: server.store_bytes,
+            reg_workers: server.reg_workers,
+            reg_queue: server.reg_queue,
         }
     }
 }
@@ -81,6 +93,15 @@ impl Config {
         if let Some(v) = j.get("intra_threads").as_usize() {
             c.intra_threads = v;
         }
+        if let Some(v) = j.get("store_bytes").as_usize() {
+            c.store_bytes = v;
+        }
+        if let Some(v) = j.get("reg_workers").as_usize() {
+            c.reg_workers = v;
+        }
+        if let Some(v) = j.get("reg_queue").as_usize() {
+            c.reg_queue = v;
+        }
         Ok(c)
     }
 
@@ -115,6 +136,9 @@ impl Config {
         // per-request "threads" protocol field instead of this config.
         self.intra_threads = args.get_usize("threads", self.intra_threads)?;
         self.ffd.threads = args.get_usize("threads", self.ffd.threads)?;
+        self.store_bytes = args.get_usize("store-bytes", self.store_bytes)?;
+        self.reg_workers = args.get_usize("reg-workers", self.reg_workers)?;
+        self.reg_queue = args.get_usize("reg-queue", self.reg_queue)?;
         Ok(self)
     }
 
@@ -144,7 +168,8 @@ mod tests {
     fn json_overrides() {
         let j = Json::parse(
             r#"{"ffd":{"levels":2,"method":"tv","tile":4,"bending_weight":0.01},
-                "affine_first":false,"workers":3,"intra_threads":4}"#,
+                "affine_first":false,"workers":3,"intra_threads":4,
+                "store_bytes":1048576,"reg_workers":2,"reg_queue":5}"#,
         )
         .unwrap();
         let c = Config::from_json(&j).unwrap();
@@ -154,6 +179,25 @@ mod tests {
         assert!(!c.affine_first);
         assert_eq!(c.workers, 3);
         assert_eq!(c.intra_threads, 4);
+        assert_eq!(c.store_bytes, 1 << 20);
+        assert_eq!(c.reg_workers, 2);
+        assert_eq!(c.reg_queue, 5);
+    }
+
+    #[test]
+    fn store_and_jobs_flags_override() {
+        let args = crate::cli::Args::parse(
+            ["--store-bytes", "4096", "--reg-workers", "3", "--reg-queue", "9"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = Config::default().apply_args(&args).unwrap();
+        assert_eq!(c.store_bytes, 4096);
+        assert_eq!(c.reg_workers, 3);
+        assert_eq!(c.reg_queue, 9);
+        let d = Config::default();
+        assert_eq!(d.store_bytes, crate::coordinator::store::DEFAULT_STORE_BYTES);
+        assert_eq!((d.reg_workers, d.reg_queue), (1, 16));
     }
 
     #[test]

@@ -7,6 +7,19 @@
 use std::collections::VecDeque;
 
 /// Extract a batch from the queue front. `key_of` projects the batch key.
+///
+/// ```
+/// use std::collections::VecDeque;
+/// use ffdreg::coordinator::batch::form_batch;
+///
+/// // Three 'a'-shaped jobs ahead of a 'b': the batch takes the 'a' run
+/// // (up to the cap) and never reorders past the incompatible job.
+/// let mut q: VecDeque<(u32, char)> =
+///     [(1, 'a'), (2, 'a'), (3, 'a'), (4, 'b'), (5, 'a')].into();
+/// let batch = form_batch(&mut q, 8, |job| job.1);
+/// assert_eq!(batch, vec![(1, 'a'), (2, 'a'), (3, 'a')]);
+/// assert_eq!(q.front(), Some(&(4, 'b')), "FIFO order preserved");
+/// ```
 pub fn form_batch<T, K: PartialEq>(
     queue: &mut VecDeque<T>,
     max_batch: usize,

@@ -15,6 +15,8 @@ pub enum Engine {
 }
 
 impl Engine {
+    /// Parse a protocol engine string: `cpu:<method>`, a bare method
+    /// name, or `pjrt`.
     pub fn parse(s: &str) -> Option<Engine> {
         if let Some(rest) = s.strip_prefix("cpu:") {
             return Method::parse(rest).map(Engine::Cpu);
@@ -25,6 +27,7 @@ impl Engine {
         }
     }
 
+    /// Canonical string form (inverse of [`parse`](Self::parse)).
     pub fn key(&self) -> String {
         match self {
             Engine::Cpu(m) => format!("cpu:{}", m.key()),
@@ -36,9 +39,13 @@ impl Engine {
 /// A dense-deformation-field request: the coordinator's unit of work.
 #[derive(Clone, Debug)]
 pub struct InterpolateJob {
+    /// Scheduler-assigned job id.
     pub id: u64,
+    /// The control grid to evaluate (shared, not copied per batch).
     pub grid: Arc<ControlGrid>,
+    /// Output lattice shape.
     pub vol_dims: Dims,
+    /// Which execution engine serves the job.
     pub engine: Engine,
 }
 
@@ -53,10 +60,13 @@ impl InterpolateJob {
 /// Completed-job result.
 #[derive(Debug)]
 pub struct JobOutcome {
+    /// The job's scheduler id.
     pub id: u64,
+    /// The computed field, or the execution error.
     pub result: Result<VectorField, String>,
-    /// Queue wait (s) and execution time (s), for latency accounting.
+    /// Queue wait (s), for latency accounting.
     pub wait_s: f64,
+    /// Execution time (s), for latency accounting.
     pub exec_s: f64,
 }
 

@@ -1,0 +1,612 @@
+//! Async registration jobs: a bounded queue + dedicated worker threads
+//! that take multi-second FFD registrations off the connection threads.
+//!
+//! The serving shape follows the intra-operative loop of Budelmann et al.
+//! ("Fully-deformable 3D image registration in two seconds"): a client
+//! submits `{"op":"register","async":true}`, immediately gets a job id
+//! back, polls `{"op":"job"}` for queued → running (with per-level
+//! optimizer progress from the [`crate::ffd::RegistrationHooks`] threaded
+//! into the hot loop) → done/failed, and may `{"op":"cancel"}` a job at
+//! any time (cooperative, honored at iteration boundaries).
+//!
+//! Synchronous `register` requests run **on the same queue** — the
+//! connection thread submits and blocks on its own job — so sync and
+//! async execution share one code path and produce bit-identical results;
+//! the queue is what bounds concurrent registrations either way.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::service::{run_register, OpError, RegisterOp};
+use super::store::VolumeStore;
+use crate::ffd::{ProgressEvent, RegistrationHooks};
+use crate::util::json::Json;
+
+/// Registration-queue tuning knobs.
+#[derive(Clone, Debug)]
+pub struct JobsConfig {
+    /// Dedicated registration worker threads (≥ 1). Registrations are
+    /// long-running; more workers trade per-job latency for throughput.
+    pub workers: usize,
+    /// Bounded queue capacity; submissions beyond it are rejected with
+    /// backpressure.
+    pub queue_capacity: usize,
+    /// Terminal jobs retained for polling before the oldest are forgotten.
+    pub history: usize,
+}
+
+impl Default for JobsConfig {
+    fn default() -> Self {
+        JobsConfig { workers: 1, queue_capacity: 16, history: 256 }
+    }
+}
+
+/// Success payload of a completed registration job — the fields the
+/// protocol reports for both sync responses and `job` polls.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// Final objective value.
+    pub cost: f64,
+    /// SSIM between reference and warped output.
+    pub ssim: f64,
+    /// Normalized MAE between reference and warped output.
+    pub mae: f64,
+    /// Total wall time (s).
+    pub total_s: f64,
+    /// Time in BSI kernels (s).
+    pub bsi_s: f64,
+    /// Optimizer iterations across all levels.
+    pub iterations: usize,
+    /// `vol:` handle of the stored warped output (when requested).
+    pub warped: Option<String>,
+}
+
+/// Life-cycle state of a registration job.
+#[derive(Clone, Debug)]
+pub enum JobState {
+    /// Waiting in the bounded queue.
+    Queued,
+    /// Executing; carries the latest optimizer heartbeat.
+    Running {
+        /// Pyramid level being optimized (0 = coarsest).
+        level: usize,
+        /// Total pyramid levels.
+        levels: usize,
+        /// Iterations completed at this level.
+        iteration: usize,
+        /// Objective after the latest iteration (+∞ until the first).
+        cost: f64,
+    },
+    /// Finished successfully.
+    Done(JobResult),
+    /// Finished with a structured error.
+    Failed {
+        /// Stable machine-readable cause (the protocol's error codes).
+        code: String,
+        /// Human-readable message.
+        message: String,
+    },
+    /// Cancelled before or during execution.
+    Cancelled,
+}
+
+impl JobState {
+    /// Protocol name of this state.
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running { .. } => "running",
+            JobState::Done(_) => "done",
+            JobState::Failed { .. } => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// True once the job can no longer change state.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done(_) | JobState::Failed { .. } | JobState::Cancelled)
+    }
+}
+
+/// Why a submission was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum JobSubmitError {
+    /// The bounded registration queue is full.
+    QueueFull,
+    /// The engine is shutting down.
+    ShuttingDown,
+}
+
+struct JobEntry {
+    /// Present while queued; taken by the worker that executes the job.
+    op: Option<RegisterOp>,
+    state: JobState,
+    cancel: Arc<AtomicBool>,
+    /// Threads blocked in [`JobEngine::wait`] on this job. History pruning
+    /// defers removal while > 0, so a completed sync register can never be
+    /// pruned into a spurious `not_found` before its waiter wakes.
+    waiters: u32,
+}
+
+struct Inner {
+    queue: VecDeque<u64>,
+    jobs: HashMap<u64, JobEntry>,
+    /// Terminal job ids in completion order (history pruning).
+    finished: VecDeque<u64>,
+}
+
+struct Shared {
+    inner: Mutex<Inner>,
+    /// Signals workers (new work) and waiters (state transitions).
+    changed: Condvar,
+    shutdown: AtomicBool,
+    cfg: JobsConfig,
+    store: Arc<VolumeStore>,
+}
+
+/// The registration job engine: bounded queue, worker pool, and the
+/// pollable job registry behind the `register`/`job`/`cancel` ops.
+pub struct JobEngine {
+    shared: Arc<Shared>,
+    next_id: AtomicU64,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl JobEngine {
+    /// Start `cfg.workers` registration workers sharing `store`.
+    pub fn start(store: Arc<VolumeStore>, cfg: JobsConfig) -> JobEngine {
+        let shared = Arc::new(Shared {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                jobs: HashMap::new(),
+                finished: VecDeque::new(),
+            }),
+            changed: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            cfg: cfg.clone(),
+            store,
+        });
+        let mut workers = Vec::with_capacity(cfg.workers.max(1));
+        for _ in 0..cfg.workers.max(1) {
+            let shared = shared.clone();
+            workers.push(std::thread::spawn(move || worker_loop(shared)));
+        }
+        JobEngine { shared, next_id: AtomicU64::new(1), workers: Mutex::new(workers) }
+    }
+
+    /// Enqueue a registration; returns the job id to poll.
+    pub fn submit(&self, op: RegisterOp) -> Result<u64, JobSubmitError> {
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            return Err(JobSubmitError::ShuttingDown);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut inner = self.shared.inner.lock().unwrap();
+            if inner.queue.len() >= self.shared.cfg.queue_capacity {
+                return Err(JobSubmitError::QueueFull);
+            }
+            inner.jobs.insert(
+                id,
+                JobEntry {
+                    op: Some(op),
+                    state: JobState::Queued,
+                    cancel: Arc::new(AtomicBool::new(false)),
+                    waiters: 0,
+                },
+            );
+            inner.queue.push_back(id);
+        }
+        self.shared.changed.notify_all();
+        Ok(id)
+    }
+
+    /// Current state of a job (`None` = unknown or pruned id).
+    pub fn state(&self, id: u64) -> Option<JobState> {
+        self.shared.inner.lock().unwrap().jobs.get(&id).map(|e| e.state.clone())
+    }
+
+    /// Block until the job reaches a terminal state and return it. Returns
+    /// a `shutting_down` failure if the engine stops first. Registered
+    /// waiters pin the job against history pruning, so a terminal state is
+    /// never pruned out from under a blocked waiter.
+    pub fn wait(&self, id: u64) -> JobState {
+        let mut inner = self.shared.inner.lock().unwrap();
+        match inner.jobs.get_mut(&id) {
+            None => {
+                return JobState::Failed {
+                    code: "not_found".into(),
+                    message: format!("unknown job {id}"),
+                }
+            }
+            Some(e) => e.waiters += 1,
+        }
+        let result = loop {
+            match inner.jobs.get(&id) {
+                // Defensive: waiters pin entries, so this cannot happen.
+                None => {
+                    break JobState::Failed {
+                        code: "not_found".into(),
+                        message: format!("unknown job {id}"),
+                    }
+                }
+                Some(e) if e.state.is_terminal() => break e.state.clone(),
+                Some(_) => {}
+            }
+            if self.shared.shutdown.load(Ordering::Acquire) {
+                break JobState::Failed {
+                    code: "shutting_down".into(),
+                    message: "job engine shutting down".into(),
+                };
+            }
+            inner = self.shared.changed.wait(inner).unwrap();
+        };
+        if let Some(e) = inner.jobs.get_mut(&id) {
+            e.waiters = e.waiters.saturating_sub(1);
+        }
+        result
+    }
+
+    /// Request cancellation. Queued jobs become `Cancelled` immediately;
+    /// running jobs get their cooperative flag raised and transition once
+    /// the optimizer observes it; terminal jobs are left untouched. The
+    /// state *after* the request is returned (`None` = unknown id).
+    pub fn cancel(&self, id: u64) -> Option<JobState> {
+        let mut guard = self.shared.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let Some(entry) = inner.jobs.get_mut(&id) else { return None };
+        match &entry.state {
+            JobState::Queued => {
+                entry.cancel.store(true, Ordering::Release);
+                entry.state = JobState::Cancelled;
+                inner.queue.retain(|&q| q != id);
+                Self::record_terminal(inner, &self.shared.cfg, id);
+                drop(guard);
+                self.shared.changed.notify_all();
+                Some(JobState::Cancelled)
+            }
+            JobState::Running { .. } => {
+                entry.cancel.store(true, Ordering::Release);
+                Some(entry.state.clone())
+            }
+            terminal => Some(terminal.clone()),
+        }
+    }
+
+    /// Jobs currently waiting in the queue.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.inner.lock().unwrap().queue.len()
+    }
+
+    /// Per-state job counts + queue depth, as the `stats` op reports them.
+    pub fn stats_json(&self) -> Json {
+        let inner = self.shared.inner.lock().unwrap();
+        let mut queued = 0usize;
+        let mut running = 0usize;
+        let mut done = 0usize;
+        let mut failed = 0usize;
+        let mut cancelled = 0usize;
+        for e in inner.jobs.values() {
+            match e.state {
+                JobState::Queued => queued += 1,
+                JobState::Running { .. } => running += 1,
+                JobState::Done(_) => done += 1,
+                JobState::Failed { .. } => failed += 1,
+                JobState::Cancelled => cancelled += 1,
+            }
+        }
+        Json::obj(vec![
+            ("queued", Json::Num(queued as f64)),
+            ("running", Json::Num(running as f64)),
+            ("done", Json::Num(done as f64)),
+            ("failed", Json::Num(failed as f64)),
+            ("cancelled", Json::Num(cancelled as f64)),
+            ("queue_depth", Json::Num(inner.queue.len() as f64)),
+        ])
+    }
+
+    /// Begin shutdown without joining: stop accepting work, raise every
+    /// cancel flag (a long registration exits at its next iteration
+    /// boundary), abandon queued work, and wake all waiters so they
+    /// return `shutting_down`. Callable from a connection handler (the
+    /// wire `shutdown` op) — it never blocks on registration work.
+    pub fn initiate_shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let inner = self.shared.inner.lock().unwrap();
+            for e in inner.jobs.values() {
+                e.cancel.store(true, Ordering::Release);
+            }
+        }
+        self.shared.changed.notify_all();
+    }
+
+    /// [`initiate_shutdown`](Self::initiate_shutdown), then join the
+    /// workers.
+    pub fn shutdown(&self) {
+        self.initiate_shutdown();
+        let mut workers = self.workers.lock().unwrap();
+        for w in workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    /// Record a terminal transition and prune history beyond the cap.
+    /// Entries with blocked waiters are deferred (re-queued at the back)
+    /// rather than removed; the scan is bounded so a history full of
+    /// waited-on jobs cannot loop.
+    fn record_terminal(inner: &mut Inner, cfg: &JobsConfig, id: u64) {
+        inner.finished.push_back(id);
+        let mut deferred = 0;
+        while inner.finished.len() > cfg.history && deferred < inner.finished.len() {
+            let Some(old) = inner.finished.pop_front() else { break };
+            if inner.jobs.get(&old).is_some_and(|e| e.waiters > 0) {
+                inner.finished.push_back(old);
+                deferred += 1;
+            } else {
+                inner.jobs.remove(&old);
+            }
+        }
+    }
+}
+
+impl Drop for JobEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        // Claim the next queued job. The shutdown check comes FIRST so a
+        // stopping engine abandons queued work instead of draining it
+        // (waiters are unblocked by wait()'s own shutdown check).
+        let (id, op, cancel) = {
+            let mut guard = shared.inner.lock().unwrap();
+            'claim: loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                let inner = &mut *guard;
+                while let Some(id) = inner.queue.pop_front() {
+                    let entry = inner.jobs.get_mut(&id).expect("queued job has an entry");
+                    // A cancel that raced the claim: honor it without
+                    // paying for volume loads / pyramids / the final warp.
+                    if entry.cancel.load(Ordering::Acquire) {
+                        entry.state = JobState::Cancelled;
+                        entry.op = None;
+                        JobEngine::record_terminal(inner, &shared.cfg, id);
+                        continue;
+                    }
+                    let op = entry.op.take().expect("queued job carries its op");
+                    entry.state = JobState::Running {
+                        level: 0,
+                        levels: op.levels.clamp(1, 6),
+                        iteration: 0,
+                        cost: f64::INFINITY,
+                    };
+                    break 'claim (id, op, entry.cancel.clone());
+                }
+                guard = shared.changed.wait(guard).unwrap();
+            }
+        };
+        shared.changed.notify_all();
+
+        // Execute with progress + cancellation threaded into the hot loop.
+        let progress_shared = shared.clone();
+        let hooks = RegistrationHooks {
+            progress: Some(Arc::new(move |ev: ProgressEvent| {
+                let mut inner = progress_shared.inner.lock().unwrap();
+                if let Some(e) = inner.jobs.get_mut(&id) {
+                    if !e.state.is_terminal() {
+                        e.state = JobState::Running {
+                            level: ev.level,
+                            levels: ev.levels,
+                            iteration: ev.iteration,
+                            cost: ev.cost,
+                        };
+                    }
+                }
+            })),
+            cancel: Some(cancel.clone()),
+        };
+        let outcome = run_register(&op, Some(&shared.store), &hooks);
+
+        // Cancellation is cooperative: the job is Cancelled exactly when
+        // the run observed the flag before publishing results (a cancel
+        // arriving after the job already finished leaves it Done).
+        let terminal = match outcome {
+            Ok(o) => JobState::Done(JobResult {
+                cost: o.result.cost,
+                ssim: o.ssim,
+                mae: o.mae,
+                total_s: o.result.timing.total_s,
+                bsi_s: o.result.timing.bsi_s,
+                iterations: o.result.timing.iterations,
+                warped: o.warped_handle,
+            }),
+            Err(OpError { code: "cancelled", .. }) => JobState::Cancelled,
+            Err(OpError { code, message }) => {
+                JobState::Failed { code: code.to_string(), message }
+            }
+        };
+        let mut guard = shared.inner.lock().unwrap();
+        let inner = &mut *guard;
+        if let Some(e) = inner.jobs.get_mut(&id) {
+            e.state = terminal;
+            JobEngine::record_terminal(inner, &shared.cfg, id);
+        }
+        drop(guard);
+        shared.changed.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::VolumeRef;
+    use crate::volume::{Dims, Volume};
+
+    fn blob(cx: f32) -> Volume {
+        Volume::from_fn(Dims::new(12, 12, 12), [1.0; 3], move |x, y, z| {
+            let d2 = (x as f32 - cx).powi(2)
+                + (y as f32 - 6.0).powi(2)
+                + (z as f32 - 6.0).powi(2);
+            (-d2 / 9.0).exp()
+        })
+    }
+
+    fn op(reference: &str, floating: &str, iters: usize) -> RegisterOp {
+        RegisterOp {
+            reference: VolumeRef::parse(reference),
+            floating: VolumeRef::parse(floating),
+            method: crate::bspline::Method::Ttli,
+            levels: 1,
+            iters,
+            threads: 1,
+            out: None,
+            store_warped: false,
+        }
+    }
+
+    #[test]
+    fn async_job_runs_to_done_with_progress() {
+        let store = Arc::new(VolumeStore::new(16 << 20));
+        let (a, _) = store.put(blob(6.0)).unwrap();
+        let (b, _) = store.put(blob(7.0)).unwrap();
+        let engine = JobEngine::start(store, JobsConfig::default());
+        let mut o = op(&a, &b, 5);
+        o.store_warped = true;
+        let id = engine.submit(o).unwrap();
+        match engine.wait(id) {
+            JobState::Done(r) => {
+                assert!(r.cost.is_finite());
+                assert!(r.iterations >= 1);
+                assert!(r.warped.as_deref().unwrap_or("").starts_with("vol:"));
+            }
+            other => panic!("expected done, got {other:?}"),
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn failed_jobs_carry_the_op_error_code() {
+        let store = Arc::new(VolumeStore::new(1 << 20));
+        let engine = JobEngine::start(store, JobsConfig::default());
+        let id = engine.submit(op("vol:nope", "vol:nope", 1)).unwrap();
+        match engine.wait(id) {
+            JobState::Failed { code, .. } => assert_eq!(code, "not_found"),
+            other => panic!("expected failed, got {other:?}"),
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn queued_jobs_cancel_immediately_and_never_run() {
+        let store = Arc::new(VolumeStore::new(16 << 20));
+        let (a, _) = store.put(blob(6.0)).unwrap();
+        let (b, _) = store.put(blob(7.0)).unwrap();
+        // One worker busy on a long job; the second job sits queued.
+        let engine = JobEngine::start(store, JobsConfig { workers: 1, ..Default::default() });
+        let busy = engine.submit(op(&a, &b, 200)).unwrap();
+        let queued = engine.submit(op(&a, &b, 200)).unwrap();
+        let state = engine.cancel(queued).expect("known job");
+        assert!(matches!(state, JobState::Cancelled), "{state:?}");
+        assert_eq!(engine.queue_depth(), 0);
+        assert!(matches!(engine.wait(queued), JobState::Cancelled));
+        // Cancel the busy one too so shutdown is prompt (it may have
+        // already finished — either terminal state is legitimate).
+        let _ = engine.cancel(busy);
+        assert!(engine.wait(busy).is_terminal());
+        engine.shutdown();
+    }
+
+    #[test]
+    fn running_jobs_cancel_at_an_iteration_boundary() {
+        // A deliberately long registration (28³, 400 iters): observe it
+        // Running, cancel, and require the cooperative flag to land.
+        let store = Arc::new(VolumeStore::new(64 << 20));
+        let big = |cx: f32| {
+            Volume::from_fn(Dims::new(28, 28, 28), [1.0; 3], move |x, y, z| {
+                let d2 = (x as f32 - cx).powi(2)
+                    + (y as f32 - 14.0).powi(2)
+                    + (z as f32 - 14.0).powi(2);
+                (-d2 / 30.0).exp()
+            })
+        };
+        let (a, _) = store.put(big(13.0)).unwrap();
+        let (b, _) = store.put(big(15.0)).unwrap();
+        let engine = JobEngine::start(store, JobsConfig::default());
+        let id = engine.submit(op(&a, &b, 400)).unwrap();
+        // Wait until it is actually running (with at least one heartbeat).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        loop {
+            match engine.state(id) {
+                Some(JobState::Running { iteration, .. }) if iteration >= 1 => break,
+                Some(s) if s.is_terminal() => {
+                    panic!("job finished before it could be cancelled: {s:?}")
+                }
+                _ => {
+                    assert!(std::time::Instant::now() < deadline, "job never started");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            }
+        }
+        let _ = engine.cancel(id);
+        let done = engine.wait(id);
+        assert!(
+            matches!(done, JobState::Cancelled),
+            "cooperative cancel must land mid-run: {done:?}"
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn bounded_queue_rejects_overflow() {
+        let store = Arc::new(VolumeStore::new(16 << 20));
+        let (a, _) = store.put(blob(6.0)).unwrap();
+        let (b, _) = store.put(blob(7.0)).unwrap();
+        let engine = JobEngine::start(
+            store,
+            JobsConfig { workers: 1, queue_capacity: 2, history: 16 },
+        );
+        // Saturate: one running (eventually) + two queued; further
+        // submissions must bounce.
+        let mut ids = vec![];
+        let mut rejected = 0;
+        for _ in 0..10 {
+            match engine.submit(op(&a, &b, 300)) {
+                Ok(id) => ids.push(id),
+                Err(JobSubmitError::QueueFull) => rejected += 1,
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(rejected > 0, "bounded queue must reject under flood");
+        for id in &ids {
+            let _ = engine.cancel(*id);
+        }
+        for id in ids {
+            assert!(engine.wait(id).is_terminal());
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn stats_track_states() {
+        let store = Arc::new(VolumeStore::new(16 << 20));
+        let engine = JobEngine::start(store, JobsConfig::default());
+        let id = engine.submit(op("vol:none", "vol:none", 1)).unwrap();
+        engine.wait(id);
+        let j = engine.stats_json();
+        assert_eq!(j.get("failed").as_usize(), Some(1));
+        assert_eq!(j.get("queue_depth").as_usize(), Some(0));
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent() {
+        let engine = JobEngine::start(Arc::new(VolumeStore::new(1 << 20)), Default::default());
+        engine.shutdown();
+        engine.shutdown();
+    }
+}

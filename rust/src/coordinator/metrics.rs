@@ -6,13 +6,20 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Histogram over latencies with 1µs–~1000s log2 buckets.
 const BUCKETS: usize = 32;
 
+/// Lock-free scheduler counters + execution-latency histogram.
 #[derive(Default)]
 pub struct Metrics {
+    /// Jobs accepted into the queue.
     pub submitted: AtomicU64,
+    /// Jobs rejected with backpressure.
     pub rejected: AtomicU64,
+    /// Jobs that executed successfully.
     pub completed: AtomicU64,
+    /// Jobs that reached execution and failed.
     pub failed: AtomicU64,
+    /// Multi-job batches formed.
     pub batches: AtomicU64,
+    /// Jobs that ran as part of a multi-job batch.
     pub batched_jobs: AtomicU64,
     /// Voxels interpolated (throughput numerator).
     pub voxels: AtomicU64,
@@ -20,6 +27,7 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
@@ -29,6 +37,7 @@ impl Metrics {
         (micros.log2() as usize).min(BUCKETS - 1)
     }
 
+    /// Record one execution's wall time into the histogram.
     pub fn record_exec(&self, seconds: f64) {
         self.exec_hist[Self::bucket(seconds)].fetch_add(1, Ordering::Relaxed);
     }

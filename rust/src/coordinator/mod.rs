@@ -1,16 +1,24 @@
-//! L3 coordinator (DESIGN.md S17): the service layer that turns the BSI /
+//! L3 coordinator (DESIGN.md §17): the service layer that turns the BSI /
 //! FFD kernels into a deployable system — job types, a bounded-queue worker
 //! pool with backpressure, a shape-keyed request batcher, engine routing
-//! (in-process rust kernels or AOT PJRT artifacts), service metrics, and a
-//! TCP line-protocol server.
+//! (in-process rust kernels or AOT PJRT artifacts), a content-addressed
+//! volume store with LRU eviction ([`store`]), an async registration-job
+//! engine with progress and cooperative cancellation ([`jobs`]), service
+//! metrics, and a TCP line-protocol server (wire reference: PROTOCOL.md).
 
 pub mod batch;
 pub mod job;
+pub mod jobs;
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
 pub mod service;
+pub mod store;
 
 pub use job::{Engine, InterpolateJob, JobOutcome};
+pub use jobs::{JobEngine, JobResult, JobState, JobsConfig};
 pub use scheduler::{Scheduler, SchedulerConfig, SubmitError};
-pub use service::{run_register, InterpolationService, OpError, RegisterOp, RegisterOutcome};
+pub use service::{
+    run_register, InterpolationService, OpError, RegisterOp, RegisterOutcome, VolumeRef,
+};
+pub use store::VolumeStore;

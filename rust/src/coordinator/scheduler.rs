@@ -17,6 +17,7 @@ use super::service::InterpolationService;
 /// Scheduler tuning knobs.
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
+    /// Inter-job worker threads draining the queue.
     pub workers: usize,
     /// Queue capacity; submissions beyond it are rejected (backpressure).
     pub queue_capacity: usize,
@@ -44,7 +45,9 @@ impl Default for SchedulerConfig {
 /// Submission failure.
 #[derive(Debug, PartialEq, Eq)]
 pub enum SubmitError {
+    /// The bounded queue is at capacity (backpressure).
     QueueFull,
+    /// The scheduler no longer accepts work.
     ShuttingDown,
 }
 
@@ -64,12 +67,14 @@ struct Shared {
 pub struct Scheduler {
     shared: Arc<Shared>,
     cfg: SchedulerConfig,
+    /// Service counters + latency histogram (the `stats` op's `stats` object).
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Scheduler {
+    /// Start `cfg.workers` worker threads around `service`.
     pub fn start(service: InterpolationService, cfg: SchedulerConfig) -> Scheduler {
         // An explicit per-job thread count gets a dedicated pool (one pool
         // for the whole scheduler, so the total CPU footprint stays bounded
@@ -134,6 +139,7 @@ impl Scheduler {
         rx.recv().map_err(|_| SubmitError::ShuttingDown)
     }
 
+    /// Jobs currently waiting in the queue.
     pub fn queue_depth(&self) -> usize {
         self.shared.queue.lock().unwrap().len()
     }

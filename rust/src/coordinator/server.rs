@@ -1,29 +1,31 @@
 //! TCP line-protocol server: one JSON object per line in, one per line out.
 //! Built on std::net (the offline environment has no tokio); each
-//! connection gets a handler thread, all sharing the scheduler.
+//! connection gets a handler thread, all sharing the scheduler, the
+//! content-addressed volume store and the async registration-job engine.
 //!
-//! Ops:
-//!   {"op":"ping"}
-//!     -> {"ok":true,"pong":true}
-//!   {"op":"interpolate","dims":[nz,ny,nx],"tile":5,"seed":1,"engine":"cpu:ttli"}
-//!     -> {"ok":true,"id":n,"checksum":c,"exec_s":t,"wait_s":w}
-//!        (the grid is generated server-side from the seed: the protocol
-//!         exercises scheduling/batching without shipping megabytes)
-//!   {"op":"register","reference":"a.nii","floating":"b.mhd","method":"ttli",
-//!    "levels":2,"iters":20,"threads":4(optional),"out":"warped.nii"(optional)}
-//!     -> {"ok":true,"cost":c,"ssim":s,"mae":m,"total_s":t,"bsi_s":b}
-//!        (volumes are read from server-local paths in any supported format
-//!         — .nii / .mhd / .mha / .vol — the IGS workflow of submitting an
-//!         intra-op scan for registration)
-//!   {"op":"stats"}
-//!     -> {"ok":true,"stats":{...}}
-//!   {"op":"shutdown"}   (stops the listener)
+//! **The complete wire reference lives in PROTOCOL.md** (every op, every
+//! field, every error code, plus a worked upload → register → poll → fetch
+//! transcript); [`OPS`] and [`ERROR_CODES`] are the machine-checked
+//! inventory a doc-coverage test holds that file to. In brief:
 //!
-//! Failures are structured: {"ok":false,"error":"<human text>","code":"<c>"}
-//! where code is one of bad_request / not_found / malformed / unsupported /
-//! io / backpressure / shutting_down / exec_failed — clients branch on the
-//! code, not the prose (file-not-found vs malformed-format vs
-//! unsupported-dtype are distinct).
+//! - `ping`, `stats`, `shutdown` — liveness, observability, stop;
+//! - `interpolate` — batched BSI jobs through the scheduler, optionally
+//!   warping a stored volume (`input` handle) into a new stored volume;
+//! - `register` — FFD registration of two volumes given as server-local
+//!   paths or `vol:` store handles; synchronous by default, or
+//!   `"async":true` for an immediately-returned job id;
+//! - `upload` / `upload_chunk` / `upload_end` — stream a volume into the
+//!   store as chunked base64 frames (slab-decoded as it arrives; the
+//!   server never buffers the full encoded payload) for a `vol:` handle;
+//! - `fetch` / `fetch_chunk` — read a stored volume back out in bounded
+//!   flat voxel chunks;
+//! - `job` / `cancel` — poll or cooperatively cancel a registration job.
+//!
+//! Failures are structured: `{"ok":false,"error":"<human>","code":"<c>"}`
+//! with `code` drawn from [`ERROR_CODES`] — clients branch on the code,
+//! not the prose. Request lines are capped at [`MAX_REQUEST_LINE`] bytes;
+//! an oversized line is answered with `bad_request` and the connection is
+//! closed (one client must not be able to OOM the coordinator).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -31,20 +33,92 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use super::job::{Engine, InterpolateJob};
+use super::jobs::{JobEngine, JobResult, JobState, JobSubmitError, JobsConfig};
 use super::scheduler::{Scheduler, SubmitError};
-use super::service::{run_register, OpError, RegisterOp};
+use super::service::{RegisterOp, VolumeRef};
+use super::store::VolumeStore;
 use crate::bspline::ControlGrid;
+use crate::util::base64;
 use crate::util::json::Json;
-use crate::volume::Dims;
+use crate::volume::formats::{stream::DEFAULT_SLAB_NZ, Dtype, SlabDecoder};
+use crate::volume::{Dims, Volume};
+
+/// Every op the line protocol accepts (the doc-coverage test asserts each
+/// is documented in PROTOCOL.md and that `handle_line` dispatches no op
+/// outside this set).
+pub const OPS: &[&str] = &[
+    "ping",
+    "stats",
+    "shutdown",
+    "interpolate",
+    "register",
+    "upload",
+    "upload_chunk",
+    "upload_end",
+    "fetch",
+    "fetch_chunk",
+    "job",
+    "cancel",
+];
+
+/// Every structured error code the protocol can return.
+pub const ERROR_CODES: &[&str] = &[
+    "bad_request",
+    "not_found",
+    "malformed",
+    "unsupported",
+    "io",
+    "backpressure",
+    "shutting_down",
+    "exec_failed",
+    "cancelled",
+];
+
+/// Hard cap on one request line (JSON + base64 payload frame). Upload
+/// clients should keep raw chunks at ≤ 1 MiB (≈ 1.37 MiB base64) — well
+/// under this. Longer lines get `bad_request` and the connection closes.
+pub const MAX_REQUEST_LINE: usize = 4 << 20;
+
+/// Server construction knobs beyond the scheduler.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Volume-store byte budget (`serve --store-bytes`).
+    pub store_bytes: usize,
+    /// Registration worker threads (`serve --reg-workers`).
+    pub reg_workers: usize,
+    /// Registration queue capacity (`serve --reg-queue`).
+    pub reg_queue: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        // Single source of truth: the job engine's own defaults (and the
+        // store's byte budget) — `config::Config` derives from here too.
+        let jobs = JobsConfig::default();
+        ServerConfig {
+            store_bytes: super::store::DEFAULT_STORE_BYTES,
+            reg_workers: jobs.workers,
+            reg_queue: jobs.queue_capacity,
+        }
+    }
+}
+
+/// Shared server-side state handed to every connection handler.
+struct Ctx {
+    sched: Arc<Scheduler>,
+    store: Arc<VolumeStore>,
+    jobs: Arc<JobEngine>,
+    /// Live connection-handler threads (stats gauge; see `reap_finished`).
+    connections: Arc<AtomicUsize>,
+}
 
 /// A running server (owns the listener thread).
 pub struct Server {
+    /// Bound address (useful with port 0 for an ephemeral port).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<std::thread::JoinHandle<()>>,
-    /// Live connection-handler threads, updated after each accept-loop
-    /// reap — observability for the handle-leak regression tests.
-    conn_gauge: Arc<AtomicUsize>,
+    ctx: Arc<Ctx>,
 }
 
 /// Join every finished connection handler and drop its handle. Without
@@ -62,14 +136,38 @@ fn reap_finished(conns: &mut Vec<std::thread::JoinHandle<()>>) {
 }
 
 impl Server {
-    /// Bind and serve on `addr` (use port 0 for an ephemeral port).
+    /// Bind and serve on `addr` (use port 0 for an ephemeral port) with
+    /// default store/jobs sizing.
     pub fn start(addr: &str, scheduler: Arc<Scheduler>) -> std::io::Result<Server> {
+        Server::start_with(addr, scheduler, ServerConfig::default())
+    }
+
+    /// [`start`](Server::start) with explicit store/jobs sizing.
+    pub fn start_with(
+        addr: &str,
+        scheduler: Arc<Scheduler>,
+        cfg: ServerConfig,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let conn_gauge = Arc::new(AtomicUsize::new(0));
-        let gauge2 = conn_gauge.clone();
+        let store = Arc::new(VolumeStore::new(cfg.store_bytes));
+        let jobs = Arc::new(JobEngine::start(
+            store.clone(),
+            JobsConfig {
+                workers: cfg.reg_workers.max(1),
+                queue_capacity: cfg.reg_queue.max(1),
+                ..Default::default()
+            },
+        ));
+        let ctx = Arc::new(Ctx {
+            sched: scheduler,
+            store,
+            jobs,
+            connections: Arc::new(AtomicUsize::new(0)),
+        });
+        let ctx2 = ctx.clone();
         let handle = std::thread::spawn(move || {
             // Poll-accept with a timeout so the stop flag is honored.
             listener.set_nonblocking(true).ok();
@@ -79,15 +177,15 @@ impl Server {
                 // WouldBlock passes alike), so memory stays bounded by the
                 // number of *live* connections, not the all-time total.
                 reap_finished(&mut conns);
-                gauge2.store(conns.len(), Ordering::Relaxed);
+                ctx2.connections.store(conns.len(), Ordering::Relaxed);
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let sched = scheduler.clone();
+                        let ctx3 = ctx2.clone();
                         let stop3 = stop2.clone();
                         conns.push(std::thread::spawn(move || {
-                            handle_conn(stream, sched, stop3)
+                            handle_conn(stream, ctx3, stop3)
                         }));
-                        gauge2.store(conns.len(), Ordering::Relaxed);
+                        ctx2.connections.store(conns.len(), Ordering::Relaxed);
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(std::time::Duration::from_millis(5));
@@ -98,19 +196,41 @@ impl Server {
             for c in conns {
                 let _ = c.join();
             }
-            gauge2.store(0, Ordering::Relaxed);
+            ctx2.connections.store(0, Ordering::Relaxed);
         });
-        Ok(Server { addr: local, stop, handle: Some(handle), conn_gauge })
+        Ok(Server { addr: local, stop, handle: Some(handle), ctx })
     }
 
     /// Connection-handler threads currently tracked by the accept loop
     /// (finished handlers are reaped every loop tick).
     pub fn active_connections(&self) -> usize {
-        self.conn_gauge.load(Ordering::Relaxed)
+        self.ctx.connections.load(Ordering::Relaxed)
     }
 
+    /// The server's content-addressed volume store.
+    pub fn store(&self) -> &Arc<VolumeStore> {
+        &self.ctx.store
+    }
+
+    /// The server's registration-job engine.
+    pub fn jobs(&self) -> &Arc<JobEngine> {
+        &self.ctx.jobs
+    }
+
+    /// Stop the listener, join every connection handler, and shut the job
+    /// engine down (cancelling anything still running).
     pub fn stop(mut self) {
+        self.shutdown_in_order();
+    }
+
+    /// Shutdown ordering matters: the job engine goes down FIRST, so its
+    /// shutdown flag + cancel flags unblock connection handlers parked in
+    /// `jobs.wait()` (sync registers) — only then can the listener join
+    /// them. The reverse order would block a stop for the remaining
+    /// duration of the whole registration queue.
+    fn shutdown_in_order(&mut self) {
         self.stop.store(true, Ordering::Release);
+        self.ctx.jobs.shutdown();
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -119,15 +239,13 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Release);
-        if let Some(h) = self.handle.take() {
-            let _ = h.join();
-        }
+        self.shutdown_in_order();
     }
 }
 
 /// Structured failure line: machine-readable `code` + human `error`.
 fn err_line(code: &str, msg: &str) -> String {
+    debug_assert!(ERROR_CODES.contains(&code), "undeclared error code {code}");
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::Str(msg.into())),
@@ -136,7 +254,114 @@ fn err_line(code: &str, msg: &str) -> String {
     .to_string()
 }
 
-fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<AtomicBool>) {
+/// An in-flight chunked upload, bound to its connection. Payload bytes are
+/// slab-decoded as they arrive through the same [`SlabDecoder`] the file
+/// streaming path uses, so at most one undecoded slab (plus one wire
+/// chunk) is ever buffered — never the whole encoded payload. The decoded
+/// voxel buffer also grows only with bytes actually received: a begin
+/// frame declaring a huge volume pins (almost) no memory until the client
+/// really ships the payload.
+struct UploadSession {
+    dims: Dims,
+    spacing: [f32; 3],
+    origin: [f32; 3],
+    /// Decoded voxels so far, in z-slab order (grows slab by slab).
+    data: Vec<f32>,
+    decoder: SlabDecoder,
+    /// Raw (base64-decoded) bytes not yet forming a full slab.
+    pending: Vec<u8>,
+    /// Per-slab decode scratch, reused across slabs.
+    slab: Vec<f32>,
+    received: usize,
+    expected: usize,
+}
+
+impl UploadSession {
+    /// Absorb raw payload bytes, decoding every completed slab.
+    fn feed(&mut self, raw: &[u8]) -> Result<(), String> {
+        self.received += raw.len();
+        if self.received > self.expected {
+            return Err(format!(
+                "payload overruns the declared size ({} > {} bytes)",
+                self.received, self.expected
+            ));
+        }
+        self.pending.extend_from_slice(raw);
+        let row = self.dims.nx * self.dims.ny;
+        while let Some(nb) = self.decoder.slab_bytes() {
+            if self.pending.len() < nb {
+                break;
+            }
+            let chunk = self.decoder.peek_chunk().expect("slab_bytes implies a chunk");
+            let n = chunk.len() * row;
+            self.slab.resize(n, 0.0);
+            self.decoder.decode_next(&self.pending[..nb], &mut self.slab[..n]);
+            self.data.extend_from_slice(&self.slab[..n]);
+            self.pending.drain(..nb);
+        }
+        Ok(())
+    }
+
+    /// Assemble the completed upload into a [`Volume`].
+    fn into_volume(self) -> Volume {
+        debug_assert_eq!(self.data.len(), self.dims.count());
+        Volume {
+            dims: self.dims,
+            spacing: self.spacing,
+            origin: self.origin,
+            data: self.data,
+        }
+    }
+}
+
+/// Per-connection protocol state.
+#[derive(Default)]
+struct ConnState {
+    upload: Option<UploadSession>,
+}
+
+/// Outcome of one bounded line read.
+enum LineRead {
+    /// A full newline-terminated line is in the buffer.
+    Line,
+    /// The peer closed its write half (a partial line may remain).
+    Eof,
+    /// The line exceeded [`MAX_REQUEST_LINE`].
+    Overflow,
+}
+
+/// `BufRead::read_line` with a byte cap: appends raw bytes to `line`
+/// until a newline, EOF, or the cap. Unlike `read_line`, a hostile client
+/// cannot grow the buffer without bound — the overflow is reported
+/// instead of allocated. Bytes are accumulated un-decoded (the caller
+/// UTF-8-converts the complete line once), so a multi-byte character
+/// split across TCP segments or buffer refills survives intact.
+fn read_line_bounded(
+    r: &mut impl BufRead,
+    line: &mut Vec<u8>,
+    cap: usize,
+) -> std::io::Result<LineRead> {
+    loop {
+        let buf = r.fill_buf()?;
+        if buf.is_empty() {
+            return Ok(LineRead::Eof);
+        }
+        let (take, complete) = match buf.iter().position(|&b| b == b'\n') {
+            Some(i) => (i + 1, true),
+            None => (buf.len(), false),
+        };
+        line.extend_from_slice(&buf[..take]);
+        r.consume(take);
+        if line.len() > cap {
+            return Ok(LineRead::Overflow);
+        }
+        if complete {
+            return Ok(LineRead::Line);
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, ctx: Arc<Ctx>, stop: Arc<AtomicBool>) {
     // Read with a timeout so a stop request can't deadlock on an idle
     // client: Server::stop joins this thread.
     let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(50)));
@@ -145,26 +370,37 @@ fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<AtomicBool>) 
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    let mut line: Vec<u8> = Vec::new();
+    let mut conn = ConnState::default();
     loop {
         if stop.load(Ordering::Acquire) {
             break;
         }
-        // read_line appends, so a partial line survives a timeout and is
-        // completed on the next pass.
-        match reader.read_line(&mut line) {
-            Ok(0) => {
+        // The bounded reader appends, so a partial line survives a timeout
+        // and is completed on the next pass.
+        match read_line_bounded(&mut reader, &mut line, MAX_REQUEST_LINE) {
+            Ok(LineRead::Eof) => {
                 // EOF. A final request sent without a trailing newline
                 // (client closed its write half right after the bytes) is
                 // still sitting in `line` — process it instead of silently
                 // dropping it; the next pass reads 0 bytes again and the
                 // then-empty buffer ends the loop.
-                if line.trim().is_empty() {
+                if line.iter().all(|b| b.is_ascii_whitespace()) {
                     break;
                 }
             }
-            Ok(_) if line.ends_with('\n') => {}
-            Ok(_) => continue, // partial line without newline yet
+            Ok(LineRead::Line) => {}
+            Ok(LineRead::Overflow) => {
+                // The line can't be resynchronized (its tail is still on
+                // the wire): answer structurally, then close.
+                let msg = err_line(
+                    "bad_request",
+                    &format!("request line exceeds {MAX_REQUEST_LINE} bytes"),
+                );
+                let _ = writer.write_all(msg.as_bytes());
+                let _ = writer.write_all(b"\n");
+                break;
+            }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
@@ -173,11 +409,25 @@ fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<AtomicBool>) 
             }
             Err(_) => break,
         }
-        let request = std::mem::take(&mut line);
+        // One whole-line, STRICT UTF-8 conversion: invalid bytes are a
+        // structured error, never a silently-corrupted field value (lossy
+        // U+FFFD substitution inside a JSON string would mangle paths and
+        // handles while still parsing).
+        let request = match String::from_utf8(std::mem::take(&mut line)) {
+            Ok(s) => s,
+            Err(_) => {
+                let msg = err_line("bad_request", "request line is not valid UTF-8");
+                if writer.write_all(msg.as_bytes()).is_err() || writer.write_all(b"\n").is_err()
+                {
+                    break;
+                }
+                continue;
+            }
+        };
         if request.trim().is_empty() {
             continue;
         }
-        let response = handle_line(&request, &sched, &stop);
+        let response = handle_line(&request, &ctx, &mut conn, &stop);
         let closing = response.is_none();
         let msg = response.unwrap_or_else(|| {
             Json::obj(vec![("ok", Json::Bool(true)), ("bye", Json::Bool(true))]).to_string()
@@ -192,7 +442,12 @@ fn handle_conn(stream: TcpStream, sched: Arc<Scheduler>, stop: Arc<AtomicBool>) 
 }
 
 /// Process one request line; `None` means "respond bye and close".
-fn handle_line(line: &str, sched: &Scheduler, stop: &AtomicBool) -> Option<String> {
+fn handle_line(
+    line: &str,
+    ctx: &Ctx,
+    conn: &mut ConnState,
+    stop: &AtomicBool,
+) -> Option<String> {
     let req = match Json::parse(line) {
         Ok(j) => j,
         Err(e) => return Some(err_line("bad_request", &format!("bad json: {e}"))),
@@ -202,82 +457,435 @@ fn handle_line(line: &str, sched: &Scheduler, stop: &AtomicBool) -> Option<Strin
             Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string(),
         ),
         Some("stats") => Some(format!(
-            r#"{{"ok":true,"stats":{},"queue_depth":{}}}"#,
-            sched.metrics.snapshot_json(),
-            sched.queue_depth()
+            r#"{{"ok":true,"stats":{},"queue_depth":{},"connections":{},"store":{},"jobs":{}}}"#,
+            ctx.sched.metrics.snapshot_json(),
+            ctx.sched.queue_depth(),
+            ctx.connections.load(Ordering::Relaxed),
+            ctx.store.stats_json().to_string(),
+            ctx.jobs.stats_json().to_string()
         )),
         Some("shutdown") => {
+            // Begin the job engine's shutdown too (non-blocking): handler
+            // threads parked in jobs.wait() must unblock with
+            // shutting_down, or the accept loop's join — and so the whole
+            // server exit — would stall for the remaining queue.
+            ctx.jobs.initiate_shutdown();
             stop.store(true, Ordering::Release);
             None
         }
-        Some("interpolate") => Some(handle_interpolate(&req, sched)),
-        Some("register") => Some(handle_register(&req)),
+        Some("interpolate") => Some(handle_interpolate(&req, ctx)),
+        Some("register") => Some(handle_register(&req, ctx)),
+        Some("upload") => Some(handle_upload_begin(&req, ctx, conn)),
+        Some("upload_chunk") => Some(handle_upload_chunk(&req, conn)),
+        Some("upload_end") => Some(handle_upload_end(ctx, conn)),
+        Some("fetch") => Some(handle_fetch(&req, ctx)),
+        Some("fetch_chunk") => Some(handle_fetch_chunk(&req, ctx)),
+        Some("job") => Some(handle_job(&req, ctx)),
+        Some("cancel") => Some(handle_cancel(&req, ctx)),
         Some(other) => Some(err_line("bad_request", &format!("unknown op '{other}'"))),
         None => Some(err_line("bad_request", "missing op")),
     }
 }
 
-/// Full FFD registration of two server-local volumes in any supported
-/// format (runs inline on the connection thread: registration is
-/// long-running and stateful, unlike the batched interpolation jobs). The
-/// op itself — load, register, save — lives in the service layer
-/// ([`run_register`]); this function only translates protocol JSON.
-fn handle_register(req: &Json) -> String {
-    let Some(ref_path) = req.get("reference").as_str() else {
-        return err_line("bad_request", "missing reference path");
+// ---------------------------------------------------------------------------
+// register / job / cancel
+
+/// Success payload of a finished registration, rendered identically for a
+/// sync `register` response and a `job` poll that found `done`.
+fn register_result_pairs(r: &JobResult) -> Vec<(&'static str, Json)> {
+    let mut pairs = vec![
+        ("cost", Json::Num(r.cost)),
+        ("ssim", Json::Num(r.ssim)),
+        ("mae", Json::Num(r.mae)),
+        ("total_s", Json::Num(r.total_s)),
+        ("bsi_s", Json::Num(r.bsi_s)),
+        ("iterations", Json::Num(r.iterations as f64)),
+    ];
+    if let Some(w) = &r.warped {
+        pairs.push(("warped", Json::Str(w.clone())));
+    }
+    pairs
+}
+
+/// FFD registration of two volumes (server-local paths in any supported
+/// format, or `vol:` store handles). Synchronous requests run **on the
+/// registration queue** and block on their own job — one code path with
+/// async, bit-identical results; `"async":true` returns the job id
+/// immediately for `job`/`cancel` polling.
+fn handle_register(req: &Json, ctx: &Ctx) -> String {
+    let Some(ref_str) = req.get("reference").as_str() else {
+        return err_line("bad_request", "missing reference path or vol: handle");
     };
-    let Some(flo_path) = req.get("floating").as_str() else {
-        return err_line("bad_request", "missing floating path");
+    let Some(flo_str) = req.get("floating").as_str() else {
+        return err_line("bad_request", "missing floating path or vol: handle");
     };
     let Some(method) = crate::bspline::Method::parse(req.get("method").as_str().unwrap_or("ttli"))
     else {
         return err_line("bad_request", "unknown method");
     };
+    let out = match req.get("out").as_str() {
+        Some(o) if VolumeStore::is_handle(o) => {
+            return err_line(
+                "bad_request",
+                "out must be a server-local path; use \"store_warped\":true for a vol: handle",
+            );
+        }
+        Some(o) => Some(std::path::PathBuf::from(o)),
+        None => None,
+    };
     let op = RegisterOp {
-        reference: ref_path.into(),
-        floating: flo_path.into(),
+        reference: VolumeRef::parse(ref_str),
+        floating: VolumeRef::parse(flo_str),
         method,
         levels: req.get("levels").as_usize().unwrap_or(2),
         iters: req.get("iters").as_usize().unwrap_or(20),
         threads: req.get("threads").as_usize().unwrap_or(0),
-        out: req.get("out").as_str().map(std::path::PathBuf::from),
+        out,
+        store_warped: req.get("store_warped").as_bool().unwrap_or(false),
     };
-    match run_register(&op) {
-        Err(OpError { code, message }) => err_line(code, &message),
-        Ok(outcome) => {
-            let res = &outcome.result;
-            Json::obj(vec![
+    let id = match ctx.jobs.submit(op) {
+        Err(JobSubmitError::QueueFull) => {
+            return err_line("backpressure", "backpressure: registration queue full")
+        }
+        Err(JobSubmitError::ShuttingDown) => return err_line("shutting_down", "shutting down"),
+        Ok(id) => id,
+    };
+    if req.get("async").as_bool().unwrap_or(false) {
+        return Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("async", Json::Bool(true)),
+            ("job", Json::Num(id as f64)),
+            ("state", Json::Str("queued".into())),
+        ])
+        .to_string();
+    }
+    match ctx.jobs.wait(id) {
+        JobState::Done(r) => {
+            let mut pairs = vec![("ok", Json::Bool(true))];
+            pairs.extend(register_result_pairs(&r));
+            Json::obj(pairs).to_string()
+        }
+        JobState::Failed { code, message } => err_line(&code, &message),
+        JobState::Cancelled => err_line("cancelled", "registration cancelled"),
+        // Unreachable: wait() only returns terminal states.
+        other => err_line("exec_failed", &format!("job ended in state {}", other.name())),
+    }
+}
+
+/// Poll a registration job's state.
+fn handle_job(req: &Json, ctx: &Ctx) -> String {
+    let Some(id) = req.get("id").as_usize() else {
+        return err_line("bad_request", "job op needs a numeric id");
+    };
+    match ctx.jobs.state(id as u64) {
+        None => err_line("not_found", &format!("unknown job {id}")),
+        Some(state) => job_state_json(id as u64, &state),
+    }
+}
+
+/// Cooperatively cancel a registration job.
+fn handle_cancel(req: &Json, ctx: &Ctx) -> String {
+    let Some(id) = req.get("id").as_usize() else {
+        return err_line("bad_request", "cancel op needs a numeric id");
+    };
+    match ctx.jobs.cancel(id as u64) {
+        None => err_line("not_found", &format!("unknown job {id}")),
+        Some(state) => {
+            let mut pairs = vec![
                 ("ok", Json::Bool(true)),
-                ("cost", Json::Num(res.cost)),
-                ("ssim", Json::Num(outcome.ssim)),
-                ("mae", Json::Num(outcome.mae)),
-                ("total_s", Json::Num(res.timing.total_s)),
-                ("bsi_s", Json::Num(res.timing.bsi_s)),
-                ("iterations", Json::Num(res.timing.iterations as f64)),
-            ])
-            .to_string()
+                ("id", Json::Num(id as f64)),
+                ("cancel_requested", Json::Bool(true)),
+                ("state", Json::Str(state.name().into())),
+            ];
+            if matches!(state, JobState::Running { .. }) {
+                // Cooperative: the flag lands at the next iteration boundary.
+                pairs.push(("note", Json::Str("cancel lands at the next iteration".into())));
+            }
+            Json::obj(pairs).to_string()
         }
     }
 }
 
-fn handle_interpolate(req: &Json, sched: &Scheduler) -> String {
+/// Render a job state as the `job` op's response.
+fn job_state_json(id: u64, state: &JobState) -> String {
+    let mut pairs = vec![
+        ("ok", Json::Bool(true)),
+        ("id", Json::Num(id as f64)),
+        ("state", Json::Str(state.name().into())),
+    ];
+    match state {
+        JobState::Queued | JobState::Cancelled => {}
+        JobState::Running { level, levels, iteration, cost } => {
+            pairs.push(("level", Json::Num(*level as f64)));
+            pairs.push(("levels", Json::Num(*levels as f64)));
+            pairs.push(("iteration", Json::Num(*iteration as f64)));
+            if cost.is_finite() {
+                pairs.push(("cost", Json::Num(*cost)));
+            }
+        }
+        JobState::Done(r) => pairs.extend(register_result_pairs(r)),
+        JobState::Failed { code, message } => {
+            pairs.push(("code", Json::Str(code.clone())));
+            pairs.push(("error", Json::Str(message.clone())));
+        }
+    }
+    Json::obj(pairs).to_string()
+}
+
+// ---------------------------------------------------------------------------
+// upload / fetch
+
+/// Parse and validate the wire `dims` field (`[nz,ny,nx]`, positive,
+/// ≤ 2²⁷ voxels with overflow-checked product) — one validation shared by
+/// `upload` and `interpolate`.
+fn parse_wire_dims(req: &Json) -> Result<Dims, String> {
     let dims_arr = match req.get("dims").as_arr() {
         Some(a) if a.len() == 3 => a,
-        _ => return err_line("bad_request", "dims must be [nz,ny,nx]"),
+        _ => return Err("dims must be [nz,ny,nx]".into()),
     };
     let (Some(nz), Some(ny), Some(nx)) = (
         dims_arr[0].as_usize(),
         dims_arr[1].as_usize(),
         dims_arr[2].as_usize(),
     ) else {
-        return err_line("bad_request", "dims entries must be non-negative integers");
+        return Err("dims entries must be non-negative integers".into());
     };
     // checked_mul: a wrapping product would let an absurd request through
     // the cap and abort the server on allocation.
     match nx.checked_mul(ny).and_then(|v| v.checked_mul(nz)) {
-        Some(v) if v > 0 && v <= 1 << 27 => {}
-        _ => return err_line("bad_request", "dims out of supported range"),
+        Some(v) if v > 0 && v <= 1 << 27 => Ok(Dims::new(nx, ny, nz)),
+        _ => Err("dims out of supported range".into()),
     }
+}
+
+/// Begin a chunked upload (one per connection at a time). The begin frame
+/// declares geometry + encoding; payload follows in `upload_chunk` frames.
+fn handle_upload_begin(req: &Json, ctx: &Ctx, conn: &mut ConnState) -> String {
+    if conn.upload.is_some() {
+        return err_line("bad_request", "an upload is already in progress on this connection");
+    }
+    let dims = match parse_wire_dims(req) {
+        Ok(d) => d,
+        Err(e) => return err_line("bad_request", &e),
+    };
+    if dims.count() * std::mem::size_of::<f32>() > ctx.store.budget() {
+        return err_line(
+            "backpressure",
+            &format!("volume would exceed the store budget of {} bytes", ctx.store.budget()),
+        );
+    }
+    let mut spacing = [1.0f32; 3];
+    let mut origin = [0.0f32; 3];
+    for (field, dst) in [("spacing", &mut spacing), ("origin", &mut origin)] {
+        match req.get(field) {
+            Json::Null => {}
+            j => match j.as_arr() {
+                Some(a) if a.len() == 3 => {
+                    for (i, v) in a.iter().enumerate() {
+                        match v.as_f64() {
+                            Some(f) if f.is_finite() => dst[i] = f as f32,
+                            _ => {
+                                return err_line(
+                                    "bad_request",
+                                    &format!("{field} entries must be finite numbers"),
+                                )
+                            }
+                        }
+                    }
+                }
+                _ => return err_line("bad_request", &format!("{field} must be [x,y,z]")),
+            },
+        }
+    }
+    if spacing.iter().any(|&s| s <= 0.0) {
+        return err_line("bad_request", "spacing must be strictly positive");
+    }
+    let dtype = match Dtype::parse(req.get("dtype").as_str().unwrap_or("f32")) {
+        Some(d) => d,
+        None => return err_line("unsupported", "unknown dtype (u8|i16|u16|i32|f32|f64)"),
+    };
+    let big_endian = req.get("big_endian").as_bool().unwrap_or(false);
+    let slope = req.get("slope").as_f64().unwrap_or(1.0) as f32;
+    let inter = req.get("inter").as_f64().unwrap_or(0.0) as f32;
+    if slope == 0.0 || !slope.is_finite() || !inter.is_finite() {
+        return err_line("bad_request", "slope must be finite and non-zero, inter finite");
+    }
+    let expected = dims.count() * dtype.size();
+    conn.upload = Some(UploadSession {
+        dims,
+        spacing,
+        origin,
+        data: Vec::new(),
+        decoder: SlabDecoder::new(dims, dtype, big_endian, slope, inter, DEFAULT_SLAB_NZ),
+        pending: Vec::new(),
+        slab: Vec::new(),
+        received: 0,
+        expected,
+    });
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("upload", Json::Bool(true)),
+        ("bytes_expected", Json::Num(expected as f64)),
+    ])
+    .to_string()
+}
+
+/// One base64 payload frame of the connection's active upload.
+fn handle_upload_chunk(req: &Json, conn: &mut ConnState) -> String {
+    if conn.upload.is_none() {
+        return err_line("bad_request", "no upload in progress (send an upload frame first)");
+    }
+    let Some(data) = req.get("data").as_str() else {
+        return err_line("bad_request", "upload_chunk needs a base64 data field");
+    };
+    let session = conn.upload.as_mut().expect("checked above");
+    let outcome = match base64::decode(data) {
+        Ok(raw) => session.feed(&raw),
+        Err(e) => Err(format!("bad base64 payload: {e}")),
+    };
+    let (received, expected) = (session.received, session.expected);
+    if let Err(e) = outcome {
+        conn.upload = None; // the stream is corrupt; restart the upload
+        return err_line("bad_request", &e);
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("received", Json::Num(received as f64)),
+        ("remaining", Json::Num((expected - received) as f64)),
+    ])
+    .to_string()
+}
+
+/// Finalize the connection's upload: verify completeness, dedupe by
+/// content hash, admit to the store (LRU-evicting as needed), and return
+/// the `vol:` handle.
+fn handle_upload_end(ctx: &Ctx, conn: &mut ConnState) -> String {
+    let Some(session) = conn.upload.take() else {
+        return err_line("bad_request", "no upload in progress (send an upload frame first)");
+    };
+    if !session.decoder.is_complete() || session.received != session.expected {
+        return err_line(
+            "bad_request",
+            &format!(
+                "upload incomplete: {} of {} payload bytes received",
+                session.received, session.expected
+            ),
+        );
+    }
+    let bytes = session.data.len() * std::mem::size_of::<f32>();
+    match ctx.store.put(session.into_volume()) {
+        Err(e) => err_line("backpressure", &e.to_string()),
+        Ok((handle, dedup)) => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("volume", Json::Str(handle)),
+            ("bytes", Json::Num(bytes as f64)),
+            ("dedup", Json::Bool(dedup)),
+        ])
+        .to_string(),
+    }
+}
+
+/// Voxels per `fetch_chunk` frame: 256 Ki voxels = 1 MiB of raw f32
+/// (≈ 1.37 MiB base64), so a response line stays bounded for ANY volume
+/// geometry — the response-side mirror of [`MAX_REQUEST_LINE`]. Chunks
+/// are flat x-fastest voxel ranges, not z-slabs: a single z-slice of a
+/// wide volume can exceed any byte budget, a flat range cannot.
+pub const FETCH_CHUNK_VOXELS: usize = 1 << 18;
+
+/// Wire chunks needed for a volume of `voxels`.
+fn fetch_chunks(voxels: usize) -> usize {
+    voxels.div_ceil(FETCH_CHUNK_VOXELS)
+}
+
+/// Metadata of a stored volume, sized for chunked retrieval.
+fn handle_fetch(req: &Json, ctx: &Ctx) -> String {
+    let Some(handle) = req.get("volume").as_str() else {
+        return err_line("bad_request", "fetch needs a volume handle");
+    };
+    let Some(vol) = ctx.store.get(handle) else {
+        return err_line("not_found", &format!("unknown volume handle {handle}"));
+    };
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("volume", Json::Str(handle.into())),
+        ("dims", Json::arr_usize(&[vol.dims.nz, vol.dims.ny, vol.dims.nx])),
+        ("spacing", Json::arr_f64(&[vol.spacing[0] as f64, vol.spacing[1] as f64, vol.spacing[2] as f64])),
+        ("origin", Json::arr_f64(&[vol.origin[0] as f64, vol.origin[1] as f64, vol.origin[2] as f64])),
+        ("voxels", Json::Num(vol.dims.count() as f64)),
+        ("bytes", Json::Num((vol.dims.count() * 4) as f64)),
+        ("dtype", Json::Str("f32".into())),
+        ("chunk_voxels", Json::Num(FETCH_CHUNK_VOXELS as f64)),
+        ("chunks", Json::Num(fetch_chunks(vol.dims.count()) as f64)),
+    ])
+    .to_string()
+}
+
+/// One base64 chunk of a stored volume's flat voxel payload (stateless:
+/// any chunk, any order, any connection).
+fn handle_fetch_chunk(req: &Json, ctx: &Ctx) -> String {
+    let Some(handle) = req.get("volume").as_str() else {
+        return err_line("bad_request", "fetch_chunk needs a volume handle");
+    };
+    let Some(i) = req.get("chunk").as_usize() else {
+        return err_line("bad_request", "fetch_chunk needs a numeric chunk index");
+    };
+    let Some(vol) = ctx.store.get(handle) else {
+        return err_line("not_found", &format!("unknown volume handle {handle}"));
+    };
+    let chunks = fetch_chunks(vol.dims.count());
+    if i >= chunks {
+        return err_line(
+            "bad_request",
+            &format!("chunk {i} out of range (volume has {chunks} chunks)"),
+        );
+    }
+    let lo = i * FETCH_CHUNK_VOXELS;
+    let hi = (lo + FETCH_CHUNK_VOXELS).min(vol.dims.count());
+    let raw = Dtype::F32.encode(&vol.data[lo..hi], false, 1.0, 0.0);
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("chunk", Json::Num(i as f64)),
+        ("offset", Json::Num(lo as f64)),
+        ("voxels", Json::Num((hi - lo) as f64)),
+        ("last", Json::Bool(i + 1 == chunks)),
+        ("data", Json::Str(base64::encode(&raw))),
+    ])
+    .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// interpolate
+
+fn handle_interpolate(req: &Json, ctx: &Ctx) -> String {
+    let sched = &ctx.sched;
+    // With an `input` store handle, the deformation is evaluated on that
+    // volume's lattice and the warped result is stored back (handle in the
+    // response); otherwise `dims` picks a synthetic lattice.
+    let input: Option<Arc<Volume>> = match req.get("input").as_str() {
+        None => None,
+        Some(h) if !VolumeStore::is_handle(h) => {
+            return err_line(
+                "bad_request",
+                "interpolate input must be a vol: handle (upload the volume first)",
+            )
+        }
+        Some(h) => match ctx.store.get(h) {
+            None => return err_line("not_found", &format!("unknown volume handle {h}")),
+            some => some,
+        },
+    };
+    let vol_dims = match &input {
+        Some(v) => {
+            if !matches!(req.get("dims"), Json::Null) {
+                return err_line("bad_request", "give either dims or input, not both");
+            }
+            v.dims
+        }
+        None => match parse_wire_dims(req) {
+            Ok(d) => d,
+            Err(e) => return err_line("bad_request", &e),
+        },
+    };
     let tile = req.get("tile").as_usize().unwrap_or(5);
     if !(1..=16).contains(&tile) {
         return err_line("bad_request", "tile out of supported range (1..=16)");
@@ -287,7 +895,6 @@ fn handle_interpolate(req: &Json, sched: &Scheduler) -> String {
         Some(e) => e,
         None => return err_line("bad_request", "unknown engine"),
     };
-    let vol_dims = Dims::new(nx, ny, nz);
     let mut grid = ControlGrid::zeros(vol_dims, [tile, tile, tile]);
     grid.randomize(seed, 5.0);
     let job = InterpolateJob {
@@ -304,28 +911,40 @@ fn handle_interpolate(req: &Json, sched: &Scheduler) -> String {
             Err(e) => err_line("exec_failed", &e),
             Ok(field) => {
                 // Order-independent checksum so clients can verify numerics.
-                let sum: f64 = field.x.iter().chain(&field.y).chain(&field.z).map(|&v| v as f64).sum();
-                Json::obj(vec![
+                let sum: f64 =
+                    field.x.iter().chain(&field.y).chain(&field.z).map(|&v| v as f64).sum();
+                let mut pairs = vec![
                     ("ok", Json::Bool(true)),
                     ("id", Json::Num(id as f64)),
                     ("checksum", Json::Num(sum)),
                     ("voxels", Json::Num(field.dims.count() as f64)),
                     ("exec_s", Json::Num(outcome.exec_s)),
                     ("wait_s", Json::Num(outcome.wait_s)),
-                ])
-                .to_string()
+                ];
+                if let Some(vol) = &input {
+                    // Warp the stored input through the field and store the
+                    // result — `interpolate` accepts handles like `register`.
+                    let warped = crate::volume::resample::warp(vol, &field);
+                    match ctx.store.put(warped) {
+                        Err(e) => return err_line("backpressure", &e.to_string()),
+                        Ok((handle, _dedup)) => pairs.push(("warped", Json::Str(handle))),
+                    }
+                }
+                Json::obj(pairs).to_string()
             }
         },
     }
 }
 
-/// Minimal blocking client for tests/examples.
+/// Minimal blocking client for tests/examples and the `ffdreg client`
+/// subcommand.
 pub struct Client {
     stream: TcpStream,
     reader: BufReader<TcpStream>,
 }
 
 impl Client {
+    /// Connect to a running coordinator.
     pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let reader = BufReader::new(stream.try_clone()?);
@@ -340,5 +959,91 @@ impl Client {
         self.reader.read_line(&mut line)?;
         Json::parse(&line)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn declared_ops_and_codes_are_unique() {
+        for set in [OPS, ERROR_CODES] {
+            for (i, a) in set.iter().enumerate() {
+                assert!(!set[i + 1..].contains(a), "duplicate entry {a}");
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_line_reader_caps_and_preserves_lines() {
+        use std::io::Cursor;
+        let mut src = Cursor::new(b"hello\nworld".to_vec());
+        let mut line: Vec<u8> = Vec::new();
+        assert!(matches!(
+            read_line_bounded(&mut src, &mut line, 64).unwrap(),
+            LineRead::Line
+        ));
+        assert_eq!(line, b"hello\n");
+        line.clear();
+        assert!(matches!(
+            read_line_bounded(&mut src, &mut line, 64).unwrap(),
+            LineRead::Eof
+        ));
+        assert_eq!(line, b"world", "partial line survives EOF");
+
+        let big = vec![b'x'; 256];
+        let mut src = Cursor::new(big);
+        let mut line: Vec<u8> = Vec::new();
+        assert!(matches!(
+            read_line_bounded(&mut src, &mut line, 100).unwrap(),
+            LineRead::Overflow
+        ));
+        assert!(line.len() > 100 && line.len() <= 100 + 257, "bounded growth");
+    }
+
+    #[test]
+    fn multibyte_utf8_survives_buffer_refill_boundaries() {
+        // A 1-byte BufReader forces every fill_buf to return one byte, so
+        // the 2-byte 'ü' is always split across refills. The raw bytes
+        // must accumulate intact; only the final whole-line conversion
+        // decodes them.
+        use std::io::Cursor;
+        let payload = "{\"reference\":\"/data/müller.nii\"}\n".as_bytes().to_vec();
+        let mut src = BufReader::with_capacity(1, Cursor::new(payload.clone()));
+        let mut line: Vec<u8> = Vec::new();
+        assert!(matches!(
+            read_line_bounded(&mut src, &mut line, 1024).unwrap(),
+            LineRead::Line
+        ));
+        assert_eq!(line, payload);
+        let text = String::from_utf8_lossy(&line);
+        assert!(text.contains("müller"), "{text}");
+    }
+
+    #[test]
+    fn wire_dims_parse_shares_one_validation() {
+        let ok = Json::parse(r#"{"dims":[4,5,6]}"#).unwrap();
+        assert_eq!(parse_wire_dims(&ok).unwrap(), Dims::new(6, 5, 4));
+        for bad in [
+            r#"{}"#,
+            r#"{"dims":[4,5]}"#,
+            r#"{"dims":[0,4,4]}"#,
+            r#"{"dims":[4,-1,4]}"#,
+            r#"{"dims":[100000,100000,100000]}"#,
+        ] {
+            assert!(parse_wire_dims(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fetch_chunk_count_tiles_the_payload() {
+        assert_eq!(fetch_chunks(1), 1);
+        assert_eq!(fetch_chunks(FETCH_CHUNK_VOXELS), 1);
+        assert_eq!(fetch_chunks(FETCH_CHUNK_VOXELS + 1), 2);
+        assert_eq!(fetch_chunks(5 * FETCH_CHUNK_VOXELS), 5);
+        // Every chunk's base64 stays under the request-line cap, whatever
+        // the volume geometry.
+        assert!(FETCH_CHUNK_VOXELS * 4 * 4 / 3 + 4 < MAX_REQUEST_LINE);
     }
 }

@@ -15,11 +15,13 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
 use super::job::{Engine, InterpolateJob};
+use super::store::VolumeStore;
 use crate::bspline::exec::{self, WorkerPool};
 use crate::bspline::{Interpolator, Method};
+use crate::ffd::RegistrationHooks;
 use crate::runtime::PjrtHandle;
 use crate::volume::formats::{self, VolError};
-use crate::volume::VectorField;
+use crate::volume::{VectorField, Volume};
 
 /// Stateless-per-request execution service (cheap to clone across workers).
 /// PJRT jobs are forwarded to the single accelerator-owner thread behind
@@ -40,6 +42,7 @@ pub struct InterpolationService {
 }
 
 impl InterpolationService {
+    /// A service over the given (optional) PJRT runtime, no dedicated pool.
     pub fn new(pjrt: Option<PjrtHandle>) -> Self {
         InterpolationService { pjrt, exec_pool: None, instances: Arc::new(Mutex::new(HashMap::new())) }
     }
@@ -67,6 +70,7 @@ impl InterpolationService {
         self
     }
 
+    /// Whether a PJRT runtime is attached (the `pjrt` engine is servable).
     pub fn has_pjrt(&self) -> bool {
         self.pjrt.is_some()
     }
@@ -114,15 +118,19 @@ impl InterpolationService {
 /// `unsupported` / `io` / `bad_request` / ...), `message` the human text.
 #[derive(Debug)]
 pub struct OpError {
+    /// Stable machine-readable cause (one of the protocol's error codes).
     pub code: &'static str,
+    /// Human-readable detail.
     pub message: String,
 }
 
 impl OpError {
+    /// An op failure with an explicit code.
     pub fn new(code: &'static str, message: impl Into<String>) -> OpError {
         OpError { code, message: message.into() }
     }
 
+    /// A `bad_request`-coded failure.
     pub fn bad_request(message: impl Into<String>) -> OpError {
         OpError::new("bad_request", message)
     }
@@ -133,44 +141,138 @@ impl OpError {
     }
 }
 
-/// The coordinator's `register` op: server-side paths in any supported
-/// volume format (`.nii` / `.mhd` / `.mha` / `.vol`) — the IGS workflow of
-/// submitting an intra-op scan for registration against a stored pre-op.
+/// A volume input to a server-side op: either a server-local path in any
+/// supported format, or a `vol:<hash>` handle into the coordinator's
+/// content-addressed [`VolumeStore`] (populated by the `upload` op).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VolumeRef {
+    /// Server-local file path (`.nii` / `.mhd` / `.mha` / `.vol`).
+    Path(PathBuf),
+    /// Content handle into the server's volume store.
+    Handle(String),
+}
+
+impl VolumeRef {
+    /// Classify a protocol string: `vol:`-prefixed → store handle,
+    /// anything else → server-local path.
+    pub fn parse(s: &str) -> VolumeRef {
+        if VolumeStore::is_handle(s) {
+            VolumeRef::Handle(s.to_string())
+        } else {
+            VolumeRef::Path(PathBuf::from(s))
+        }
+    }
+}
+
+impl std::fmt::Display for VolumeRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VolumeRef::Path(p) => write!(f, "{}", p.display()),
+            VolumeRef::Handle(h) => write!(f, "{h}"),
+        }
+    }
+}
+
+/// The coordinator's `register` op: reference/floating volumes as
+/// server-side paths in any supported format (`.nii` / `.mhd` / `.mha` /
+/// `.vol`) or `vol:` store handles — the IGS workflow of submitting an
+/// intra-op scan for registration against a stored pre-op reference.
 #[derive(Clone, Debug)]
 pub struct RegisterOp {
-    pub reference: PathBuf,
-    pub floating: PathBuf,
+    /// Fixed/reference volume (path or `vol:` handle).
+    pub reference: VolumeRef,
+    /// Moving/floating volume (path or `vol:` handle).
+    pub floating: VolumeRef,
+    /// BSI scheme driving the dense deformation field.
     pub method: Method,
+    /// Pyramid levels (clamped to 1..=6).
     pub levels: usize,
+    /// Max optimizer iterations per level (clamped to 1..=500).
     pub iters: usize,
     /// Worker threads for the registration hot loop (0 = process default).
     /// Results are bitwise identical at every thread count.
     pub threads: usize,
     /// Optional output path; format inferred from its extension.
     pub out: Option<PathBuf>,
+    /// Store the warped output in the volume store and report its `vol:`
+    /// handle (requires a store).
+    pub store_warped: bool,
 }
 
 /// Registration result plus the similarity summary the protocol reports.
 pub struct RegisterOutcome {
+    /// The full registration result (grid, field, warped volume, timing).
     pub result: crate::ffd::FfdResult,
+    /// SSIM between reference and warped output.
     pub ssim: f64,
+    /// Normalized mean absolute error between reference and warped output.
     pub mae: f64,
+    /// `vol:` handle of the stored warped output
+    /// (when [`RegisterOp::store_warped`] was set).
+    pub warped_handle: Option<String>,
 }
 
-/// Execute a registration op (runs inline on the calling thread:
-/// registration is long-running and stateful, unlike the batched
-/// interpolation jobs).
-pub fn run_register(op: &RegisterOp) -> Result<RegisterOutcome, OpError> {
+/// Resolve a [`VolumeRef`] against the filesystem or the volume store.
+fn resolve_volume(
+    what: &str,
+    r: &VolumeRef,
+    store: Option<&VolumeStore>,
+) -> Result<std::sync::Arc<Volume>, OpError> {
+    match r {
+        VolumeRef::Path(p) => formats::load_any(p)
+            .map(std::sync::Arc::new)
+            .map_err(|e| OpError::from_vol(what, e)),
+        VolumeRef::Handle(h) => match store {
+            None => Err(OpError::bad_request(format!(
+                "{what}: volume handles need a store, but this server has none"
+            ))),
+            Some(s) => s.get(h).ok_or_else(|| {
+                OpError::new("not_found", format!("{what}: unknown volume handle {h}"))
+            }),
+        },
+    }
+}
+
+/// Execute a registration op. Runs on the calling thread — the async-job
+/// engine ([`super::jobs`]) is what takes it off the connection thread.
+/// `store` resolves `vol:` handles and receives the warped output when
+/// `store_warped` is set; `hooks` feeds per-iteration progress out and a
+/// cooperative cancel flag in (a cancelled run fails with code
+/// `cancelled` and stores/saves nothing).
+pub fn run_register(
+    op: &RegisterOp,
+    store: Option<&VolumeStore>,
+    hooks: &RegistrationHooks,
+) -> Result<RegisterOutcome, OpError> {
     // Validate the output destination BEFORE the minutes-long registration:
     // a bad extension must fail in milliseconds, not discard the compute.
     if let Some(out) = &op.out {
         formats::writable_format(out)
             .map_err(|e| OpError::from_vol(&format!("out {}", out.display()), e))?;
     }
-    let reference = formats::load_any(&op.reference)
-        .map_err(|e| OpError::from_vol("reference", e))?;
-    let floating =
-        formats::load_any(&op.floating).map_err(|e| OpError::from_vol("floating", e))?;
+    if op.store_warped && store.is_none() {
+        return Err(OpError::bad_request(
+            "store_warped requires a server with a volume store",
+        ));
+    }
+    let reference = resolve_volume("reference", &op.reference, store)?;
+    let floating = resolve_volume("floating", &op.floating, store)?;
+    if op.store_warped {
+        // Same fail-fast rationale as the `out` check above: the warped
+        // output has the reference's shape, so a store that can never
+        // admit it must reject before the compute, not after.
+        let store = store.expect("checked above");
+        let bytes = reference.dims.count() * std::mem::size_of::<f32>();
+        if bytes > store.budget() {
+            return Err(OpError::new(
+                "backpressure",
+                format!(
+                    "warped output of {bytes} bytes exceeds the store budget of {} bytes",
+                    store.budget()
+                ),
+            ));
+        }
+    }
     if reference.dims != floating.dims {
         return Err(OpError::bad_request(format!(
             "reference/floating dims mismatch ({:?} vs {:?})",
@@ -197,14 +299,28 @@ pub fn run_register(op: &RegisterOp) -> Result<RegisterOutcome, OpError> {
         threads: op.threads.min(crate::util::threadpool::num_threads()),
         ..Default::default()
     };
-    let result = crate::ffd::register(&reference, &floating, &cfg);
+    let result = crate::ffd::register_with_hooks(&reference, &floating, &cfg, hooks);
+    if hooks.cancelled() {
+        // Cooperative cancellation observed at an iteration boundary: the
+        // partial result is discarded, nothing is saved or stored.
+        return Err(OpError::new("cancelled", "registration cancelled"));
+    }
     if let Some(out) = &op.out {
         formats::save_any(&result.warped, out)
             .map_err(|e| OpError::from_vol(&format!("saving {}", out.display()), e))?;
     }
+    let warped_handle = if op.store_warped {
+        let store = store.expect("checked above");
+        let (handle, _dedup) = store
+            .put(result.warped.clone())
+            .map_err(|e| OpError::new("backpressure", e.to_string()))?;
+        Some(handle)
+    } else {
+        None
+    };
     let ssim = crate::metrics::ssim(&reference, &result.warped);
     let mae = crate::metrics::mae_normalized(&reference, &result.warped);
-    Ok(RegisterOutcome { result, ssim, mae })
+    Ok(RegisterOutcome { result, ssim, mae, warped_handle })
 }
 
 #[cfg(test)]
@@ -263,20 +379,95 @@ mod tests {
         assert!(same(&svc2.cpu_instance(Method::Ttli), &a));
     }
 
-    #[test]
-    fn run_register_maps_missing_files_to_not_found() {
-        let op = RegisterOp {
-            reference: "/nonexistent/a.nii".into(),
-            floating: "/nonexistent/b.nii".into(),
+    fn register_op(reference: &str, floating: &str) -> RegisterOp {
+        RegisterOp {
+            reference: VolumeRef::parse(reference),
+            floating: VolumeRef::parse(floating),
             method: Method::Ttli,
             levels: 1,
             iters: 1,
             threads: 0,
             out: None,
-        };
-        let e = run_register(&op).unwrap_err();
+            store_warped: false,
+        }
+    }
+
+    #[test]
+    fn run_register_maps_missing_files_to_not_found() {
+        let op = register_op("/nonexistent/a.nii", "/nonexistent/b.nii");
+        let e = run_register(&op, None, &Default::default()).unwrap_err();
         assert_eq!(e.code, "not_found");
         assert!(e.message.contains("reference"), "{}", e.message);
+    }
+
+    #[test]
+    fn volume_refs_classify_handles_and_paths() {
+        assert_eq!(
+            VolumeRef::parse("vol:abc123"),
+            VolumeRef::Handle("vol:abc123".into())
+        );
+        assert_eq!(
+            VolumeRef::parse("/data/a.nii"),
+            VolumeRef::Path(PathBuf::from("/data/a.nii"))
+        );
+        assert_eq!(VolumeRef::parse("vol:abc123").to_string(), "vol:abc123");
+    }
+
+    #[test]
+    fn handles_without_a_store_are_bad_requests() {
+        let op = register_op("vol:0000", "vol:0000");
+        let e = run_register(&op, None, &Default::default()).unwrap_err();
+        assert_eq!(e.code, "bad_request");
+        assert!(e.message.contains("store"), "{}", e.message);
+    }
+
+    #[test]
+    fn unknown_handles_with_a_store_are_not_found() {
+        let store = super::super::store::VolumeStore::new(1 << 20);
+        let op = register_op("vol:0000", "vol:0000");
+        let e = run_register(&op, Some(&store), &Default::default()).unwrap_err();
+        assert_eq!(e.code, "not_found");
+    }
+
+    #[test]
+    fn register_from_store_handles_stores_warped_output() {
+        use crate::volume::Dims;
+        let store = super::super::store::VolumeStore::new(1 << 20);
+        let blob = |cx: f32| {
+            Volume::from_fn(Dims::new(12, 12, 12), [1.0; 3], move |x, y, z| {
+                let d2 = (x as f32 - cx).powi(2)
+                    + (y as f32 - 6.0).powi(2)
+                    + (z as f32 - 6.0).powi(2);
+                (-d2 / 9.0).exp()
+            })
+        };
+        let (href, _) = store.put(blob(6.0)).unwrap();
+        let (hflo, _) = store.put(blob(7.0)).unwrap();
+        let mut op = register_op(&href, &hflo);
+        op.iters = 3;
+        op.store_warped = true;
+        let outcome = run_register(&op, Some(&store), &Default::default()).unwrap();
+        let handle = outcome.warped_handle.expect("warped stored");
+        let warped = store.get(&handle).expect("warped retrievable");
+        assert_eq!(warped.data, outcome.result.warped.data);
+    }
+
+    #[test]
+    fn cancelled_run_reports_cancelled_code() {
+        use std::sync::atomic::AtomicBool;
+        let store = super::super::store::VolumeStore::new(1 << 20);
+        let v = Volume::from_fn(crate::volume::Dims::new(10, 10, 10), [1.0; 3], |x, y, z| {
+            (x + y + z) as f32
+        });
+        let (h, _) = store.put(v).unwrap();
+        let mut op = register_op(&h, &h);
+        op.iters = 50;
+        let hooks = RegistrationHooks {
+            cancel: Some(Arc::new(AtomicBool::new(true))), // pre-cancelled
+            ..Default::default()
+        };
+        let e = run_register(&op, Some(&store), &hooks).unwrap_err();
+        assert_eq!(e.code, "cancelled");
     }
 
     #[test]
@@ -290,16 +481,8 @@ mod tests {
         let vb = Volume::zeros(Dims::new(8, 8, 8), [2.0, 2.0, 2.0]);
         formats::save_any(&va, &a).unwrap();
         formats::save_any(&vb, &b).unwrap();
-        let op = RegisterOp {
-            reference: a,
-            floating: b,
-            method: Method::Ttli,
-            levels: 1,
-            iters: 1,
-            threads: 0,
-            out: None,
-        };
-        let e = run_register(&op).unwrap_err();
+        let op = register_op(a.to_str().unwrap(), b.to_str().unwrap());
+        let e = run_register(&op, None, &Default::default()).unwrap_err();
         assert_eq!(e.code, "bad_request");
         assert!(e.message.contains("spacing"), "{}", e.message);
     }
@@ -310,16 +493,11 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let bad = dir.join("garbage.nii");
         std::fs::write(&bad, b"this is not a nifti file at all................").unwrap();
-        let op = RegisterOp {
-            reference: bad.clone(),
-            floating: bad,
-            method: Method::Ttli,
-            levels: 1,
-            iters: 1,
-            threads: 0,
-            out: None,
-        };
-        assert_eq!(run_register(&op).unwrap_err().code, "malformed");
+        let op = register_op(bad.to_str().unwrap(), bad.to_str().unwrap());
+        assert_eq!(
+            run_register(&op, None, &Default::default()).unwrap_err().code,
+            "malformed"
+        );
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Content-addressed in-memory volume store: the server-side cache behind
+//! the coordinator's `upload` / `fetch` ops and `vol:<hash>` handles.
+//!
+//! The IGS serving pattern the paper targets uploads one pre-operative
+//! reference scan and registers many intra-operative scans against it; the
+//! store is what makes "upload once, register many" work. Volumes are
+//! keyed by a SHA-256 over their geometry and voxel payload, so a repeat
+//! upload of identical content dedupes to the existing entry, and handles
+//! are stable across connections and time. Capacity is a byte budget with
+//! least-recently-used eviction; every access refreshes recency.
+//!
+//! ```
+//! use ffdreg::coordinator::store::VolumeStore;
+//! use ffdreg::volume::{Dims, Volume};
+//!
+//! let store = VolumeStore::new(64 << 20);
+//! let vol = Volume::zeros(Dims::new(8, 8, 8), [1.0; 3]);
+//! let (handle, dedup) = store.put(vol.clone()).unwrap();
+//! assert!(handle.starts_with("vol:") && !dedup);
+//! // Same content → same handle, no second copy.
+//! let (again, dedup) = store.put(vol).unwrap();
+//! assert!(dedup && again == handle);
+//! assert_eq!(store.get(&handle).unwrap().dims, Dims::new(8, 8, 8));
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::hash::Sha256;
+use crate::util::json::Json;
+use crate::volume::Volume;
+
+/// Prefix that marks a string as a store handle rather than a path.
+pub const HANDLE_PREFIX: &str = "vol:";
+
+/// Default store byte budget (the `serve --store-bytes` default): large
+/// enough for a pre-op reference plus several intra-op scans at the
+/// paper's clinical resolutions.
+pub const DEFAULT_STORE_BYTES: usize = 512 << 20;
+
+/// Why a [`VolumeStore::put`] was refused.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PutError {
+    /// The volume alone is larger than the whole byte budget; no amount of
+    /// eviction could admit it.
+    ExceedsBudget {
+        /// Payload size of the rejected volume.
+        bytes: usize,
+        /// The store's configured budget.
+        budget: usize,
+    },
+}
+
+impl std::fmt::Display for PutError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PutError::ExceedsBudget { bytes, budget } => write!(
+                f,
+                "volume of {bytes} bytes exceeds the store budget of {budget} bytes"
+            ),
+        }
+    }
+}
+
+struct Entry {
+    vol: Arc<Volume>,
+    bytes: usize,
+    /// Logical-clock stamp of the most recent access (LRU order).
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<String, Entry>,
+    bytes: usize,
+    clock: u64,
+}
+
+/// Thread-safe content-addressed volume cache with a byte budget and LRU
+/// eviction. See the [module docs](self) for the serving rationale.
+pub struct VolumeStore {
+    inner: Mutex<Inner>,
+    budget: usize,
+    /// `get` calls that found their handle.
+    pub hits: AtomicU64,
+    /// `get` calls that missed (unknown or evicted handle).
+    pub misses: AtomicU64,
+    /// `put` calls that stored new content.
+    pub insertions: AtomicU64,
+    /// `put` calls deduplicated onto existing content.
+    pub dedup_hits: AtomicU64,
+    /// Entries evicted to make room.
+    pub evictions: AtomicU64,
+}
+
+impl VolumeStore {
+    /// An empty store that will hold at most `budget_bytes` of voxel data.
+    pub fn new(budget_bytes: usize) -> VolumeStore {
+        VolumeStore {
+            inner: Mutex::new(Inner { map: HashMap::new(), bytes: 0, clock: 0 }),
+            budget: budget_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            dedup_hits: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// True when `s` is shaped like a store handle (`vol:<hex>`).
+    pub fn is_handle(s: &str) -> bool {
+        s.starts_with(HANDLE_PREFIX)
+    }
+
+    /// Content handle of a volume: `vol:` + the first 32 hex characters
+    /// (128 bits) of a SHA-256 over dims, spacing, origin and the voxel
+    /// payload (little-endian f32 bits). Identical content — geometry
+    /// included — always maps to the same handle.
+    pub fn handle_of(vol: &Volume) -> String {
+        let mut h = Sha256::new();
+        for d in vol.dims.as_array() {
+            h.update(&(d as u64).to_le_bytes());
+        }
+        for s in vol.spacing.iter().chain(&vol.origin) {
+            h.update(&s.to_bits().to_le_bytes());
+        }
+        // Hash the payload in bounded chunks (no whole-payload byte copy).
+        let mut word = [0u8; 4 * 1024];
+        for chunk in vol.data.chunks(1024) {
+            let mut n = 0;
+            for v in chunk {
+                word[n..n + 4].copy_from_slice(&v.to_bits().to_le_bytes());
+                n += 4;
+            }
+            h.update(&word[..n]);
+        }
+        format!("{HANDLE_PREFIX}{}", &h.finish_hex()[..32])
+    }
+
+    /// Payload bytes this volume occupies in the store's accounting.
+    fn vol_bytes(vol: &Volume) -> usize {
+        vol.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Insert a volume, returning its handle and whether it deduplicated
+    /// onto already-stored content. Evicts least-recently-used entries
+    /// until the budget holds; a volume bigger than the whole budget is
+    /// refused.
+    pub fn put(&self, vol: Volume) -> Result<(String, bool), PutError> {
+        let bytes = Self::vol_bytes(&vol);
+        if bytes > self.budget {
+            return Err(PutError::ExceedsBudget { bytes, budget: self.budget });
+        }
+        let handle = Self::handle_of(&vol);
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let now = inner.clock;
+        if let Some(e) = inner.map.get_mut(&handle) {
+            e.last_used = now;
+            self.dedup_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok((handle, true));
+        }
+        // Evict LRU entries until the newcomer fits.
+        while inner.bytes + bytes > self.budget {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("non-empty map while over budget");
+            if let Some(e) = inner.map.remove(&oldest) {
+                inner.bytes -= e.bytes;
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        inner.bytes += bytes;
+        inner.map.insert(handle.clone(), Entry { vol: Arc::new(vol), bytes, last_used: now });
+        self.insertions.fetch_add(1, Ordering::Relaxed);
+        Ok((handle, false))
+    }
+
+    /// Look up a handle, refreshing its LRU recency. `None` counts a miss
+    /// (never stored, or evicted since).
+    pub fn get(&self, handle: &str) -> Option<Arc<Volume>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.clock += 1;
+        let now = inner.clock;
+        match inner.map.get_mut(handle) {
+            Some(e) => {
+                e.last_used = now;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(e.vol.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Number of volumes currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// True when no volume is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Payload bytes currently resident.
+    pub fn bytes_used(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    /// The configured byte budget.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Occupancy + traffic counters, as the `stats` op reports them.
+    pub fn stats_json(&self) -> Json {
+        let inner = self.inner.lock().unwrap();
+        Json::obj(vec![
+            ("volumes", Json::Num(inner.map.len() as f64)),
+            ("bytes", Json::Num(inner.bytes as f64)),
+            ("budget_bytes", Json::Num(self.budget as f64)),
+            ("hits", Json::Num(self.hits.load(Ordering::Relaxed) as f64)),
+            ("misses", Json::Num(self.misses.load(Ordering::Relaxed) as f64)),
+            ("insertions", Json::Num(self.insertions.load(Ordering::Relaxed) as f64)),
+            ("dedup_hits", Json::Num(self.dedup_hits.load(Ordering::Relaxed) as f64)),
+            ("evictions", Json::Num(self.evictions.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::volume::Dims;
+
+    fn vol(seed: f32, n: usize) -> Volume {
+        Volume::from_fn(Dims::new(n, n, n), [1.0; 3], |x, y, z| {
+            seed + (x + 2 * y + 3 * z) as f32
+        })
+    }
+
+    #[test]
+    fn put_get_round_trip_and_dedup() {
+        let store = VolumeStore::new(1 << 20);
+        let v = vol(1.0, 8);
+        let (h, dedup) = store.put(v.clone()).unwrap();
+        assert!(h.starts_with("vol:") && h.len() == 4 + 32);
+        assert!(!dedup);
+        let (h2, dedup2) = store.put(v.clone()).unwrap();
+        assert_eq!(h, h2);
+        assert!(dedup2);
+        assert_eq!(store.len(), 1, "dedup must not store a second copy");
+        let got = store.get(&h).unwrap();
+        assert_eq!(got.data, v.data);
+        assert_eq!(store.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(store.dedup_hits.load(Ordering::Relaxed), 1);
+        assert!(store.get("vol:deadbeef").is_none());
+        assert_eq!(store.misses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn content_addressing_covers_geometry() {
+        let mut a = vol(0.0, 6);
+        let b = a.clone();
+        assert_eq!(VolumeStore::handle_of(&a), VolumeStore::handle_of(&b));
+        a.origin = [1.0, 0.0, 0.0];
+        assert_ne!(VolumeStore::handle_of(&a), VolumeStore::handle_of(&b));
+        let mut c = b.clone();
+        c.spacing = [2.0, 1.0, 1.0];
+        assert_ne!(VolumeStore::handle_of(&c), VolumeStore::handle_of(&b));
+        let mut d = b.clone();
+        d.data[0] += 1.0;
+        assert_ne!(VolumeStore::handle_of(&d), VolumeStore::handle_of(&b));
+    }
+
+    #[test]
+    fn lru_eviction_respects_recency() {
+        // Budget fits exactly two 6³ volumes (864 bytes each).
+        let one = 6 * 6 * 6 * 4;
+        let store = VolumeStore::new(2 * one);
+        let (ha, _) = store.put(vol(1.0, 6)).unwrap();
+        let (hb, _) = store.put(vol(2.0, 6)).unwrap();
+        // Touch A so B is the LRU entry, then insert C.
+        assert!(store.get(&ha).is_some());
+        let (hc, _) = store.put(vol(3.0, 6)).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.bytes_used(), 2 * one);
+        assert!(store.get(&ha).is_some(), "recently-used entry survives");
+        assert!(store.get(&hb).is_none(), "LRU entry was evicted");
+        assert!(store.get(&hc).is_some());
+        assert_eq!(store.evictions.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn oversized_volume_is_refused() {
+        let store = VolumeStore::new(100);
+        let e = store.put(vol(0.0, 6)).unwrap_err();
+        assert!(matches!(e, PutError::ExceedsBudget { .. }));
+        assert_eq!(store.len(), 0);
+    }
+
+    #[test]
+    fn stats_json_reports_occupancy() {
+        let store = VolumeStore::new(1 << 20);
+        store.put(vol(0.0, 5)).unwrap();
+        let j = store.stats_json();
+        assert_eq!(j.get("volumes").as_usize(), Some(1));
+        assert_eq!(j.get("bytes").as_usize(), Some(5 * 5 * 5 * 4));
+        assert_eq!(j.get("insertions").as_usize(), Some(1));
+    }
+}

@@ -219,9 +219,11 @@ fn pass3_plane(
 /// weight tensor factorizes (`w = wx·wy·wz`), so the 64-term scatter per
 /// voxel becomes three 4-term reductions:
 ///
-///   pass1: r1[(tx,l), y, z]  = Σ_{a∈tile} wx[a][l] · g(x, y, z)
-///   pass2: r2[(tx,l), (ty,m), z] = Σ_b wy[b][m] · r1
-///   pass3: cp[tx+l, ty+m, tz+n] += Σ_c wz[c][n] · r2
+/// ```text
+/// pass1: r1[(tx,l), y, z]  = Σ_{a∈tile} wx[a][l] · g(x, y, z)
+/// pass2: r2[(tx,l), (ty,m), z] = Σ_b wy[b][m] · r1
+/// pass3: cp[tx+l, ty+m, tz+n] += Σ_c wz[c][n] · r2
+/// ```
 ///
 /// 12 weighted accumulations per voxel instead of 64 (EXPERIMENTS.md §Perf).
 pub fn voxel_to_cp_gradient_separable(grid: &ControlGrid, voxel_grad: &VectorField) -> ControlGrid {

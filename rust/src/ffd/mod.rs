@@ -21,8 +21,54 @@ pub mod workspace;
 
 pub use workspace::LevelWorkspace;
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
 use crate::bspline::{ControlGrid, Method};
 use crate::volume::{VectorField, Volume};
+
+/// One optimizer heartbeat, emitted at every accepted-iteration boundary of
+/// [`optimizer::optimize_level_hooked`] — the progress feed behind the
+/// coordinator's async registration jobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ProgressEvent {
+    /// Pyramid level currently being optimized (0 = coarsest).
+    pub level: usize,
+    /// Total pyramid levels in this run.
+    pub levels: usize,
+    /// Iterations completed at this level so far.
+    pub iteration: usize,
+    /// Objective value after the iteration.
+    pub cost: f64,
+}
+
+/// Observation and cancellation hooks threaded through a registration run.
+///
+/// Both hooks act only at iteration boundaries: `progress` is a pure
+/// observer and `cancel` makes the optimizer return early with the grid as
+/// already optimized — neither perturbs any arithmetic, so a hooked run
+/// that is not cancelled is bitwise identical to an unhooked one.
+#[derive(Clone, Default)]
+pub struct RegistrationHooks {
+    /// Called after every optimizer iteration (any pyramid level).
+    pub progress: Option<Arc<dyn Fn(ProgressEvent) + Send + Sync>>,
+    /// Cooperative cancellation flag, checked before each iteration.
+    pub cancel: Option<Arc<AtomicBool>>,
+}
+
+impl RegistrationHooks {
+    /// True once the cancel flag (if any) has been raised.
+    pub fn cancelled(&self) -> bool {
+        self.cancel.as_ref().is_some_and(|c| c.load(Ordering::Acquire))
+    }
+
+    /// Emit one progress event (no-op without a progress hook).
+    pub fn report(&self, ev: ProgressEvent) {
+        if let Some(p) = &self.progress {
+            p(ev);
+        }
+    }
+}
 
 /// Registration hyper-parameters (NiftyReg-flavored defaults).
 #[derive(Clone, Debug)]
@@ -106,4 +152,18 @@ pub struct FfdResult {
 /// [`multilevel::register_multilevel`].
 pub fn register(reference: &Volume, floating: &Volume, cfg: &FfdConfig) -> FfdResult {
     multilevel::register_multilevel(reference, floating, cfg)
+}
+
+/// [`register`] with progress/cancellation hooks (async-job serving path).
+/// Without an observed cancellation the result is bitwise identical to
+/// [`register`]; after a cancellation the expensive finalization is
+/// skipped and the result's `field`/`warped` are placeholders (callers
+/// discard a cancelled run's result — see `coordinator::jobs`).
+pub fn register_with_hooks(
+    reference: &Volume,
+    floating: &Volume,
+    cfg: &FfdConfig,
+    hooks: &RegistrationHooks,
+) -> FfdResult {
+    multilevel::register_multilevel_hooked(reference, floating, cfg, hooks)
 }

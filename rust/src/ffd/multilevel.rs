@@ -7,9 +7,9 @@
 
 use std::time::Instant;
 
-use super::optimizer::optimize_level_ws;
+use super::optimizer::optimize_level_hooked;
 use super::workspace::LevelWorkspace;
-use super::{FfdConfig, FfdResult, FfdTiming};
+use super::{FfdConfig, FfdResult, FfdTiming, RegistrationHooks};
 use crate::bspline::{ControlGrid, Interpolator, Method};
 use crate::volume::pyramid;
 use crate::volume::resample::warp;
@@ -82,6 +82,20 @@ pub fn eval_spline_at(grid: &ControlGrid, px: f32, py: f32, pz: f32) -> [f32; 3]
 /// level, so the whole run performs a handful of per-level allocations and
 /// none inside the iteration loops.
 pub fn register_multilevel(reference: &Volume, floating: &Volume, cfg: &FfdConfig) -> FfdResult {
+    register_multilevel_hooked(reference, floating, cfg, &RegistrationHooks::default())
+}
+
+/// [`register_multilevel`] with progress/cancellation hooks (see
+/// [`super::register_with_hooks`]). A cancellation observed between
+/// iterations stops the optimization where it is, skips the remaining
+/// levels and the full-resolution field/warp finalization, and returns
+/// placeholder outputs (the caller discards a cancelled run's result).
+pub fn register_multilevel_hooked(
+    reference: &Volume,
+    floating: &Volume,
+    cfg: &FfdConfig,
+    hooks: &RegistrationHooks,
+) -> FfdResult {
     let t_start = Instant::now();
     let mut timing = FfdTiming::default();
 
@@ -99,11 +113,41 @@ pub fn register_multilevel(reference: &Volume, floating: &Volume, cfg: &FfdConfi
             Some(coarse) => promote_grid(&coarse, r.dims, cfg.tile),
             None => ControlGrid::zeros(r.dims, cfg.tile),
         };
-        final_cost = optimize_level_ws(r, f, &mut g, cfg, &mut timing, &mut ws);
+        final_cost = optimize_level_hooked(
+            r,
+            f,
+            &mut g,
+            cfg,
+            &mut timing,
+            &mut ws,
+            hooks,
+            (level, n_levels),
+        );
         grid = Some(g);
+        if hooks.cancelled() {
+            break;
+        }
     }
 
     let grid = grid.expect("at least one pyramid level");
+    if hooks.cancelled() {
+        // A cancelled run's result is discarded by the caller (the
+        // coordinator reports `cancelled`, never a payload): skip the most
+        // expensive passes of the whole run — the full-resolution dense
+        // field and warp — and return placeholders (identity field, the
+        // unwarped floating image) so cancel latency stays at one
+        // iteration boundary, not seconds of finalization.
+        timing.total_s = t_start.elapsed().as_secs_f64();
+        let mut warped = floating.clone();
+        warped.copy_geometry_from(reference);
+        return FfdResult {
+            grid,
+            field: crate::volume::VectorField::zeros(reference.dims),
+            warped,
+            cost: final_cost,
+            timing,
+        };
+    }
     // Final dense field through the workspace's pool — the
     // `FfdConfig::threads` → `Method::par_instance` wiring.
     let interp = ws.interpolator(cfg.method);

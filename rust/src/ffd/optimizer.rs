@@ -11,7 +11,7 @@
 
 use super::gradient::max_norm;
 use super::workspace::LevelWorkspace;
-use super::{FfdConfig, FfdTiming};
+use super::{FfdConfig, FfdTiming, ProgressEvent, RegistrationHooks};
 use crate::bspline::ControlGrid;
 use crate::volume::Volume;
 
@@ -40,6 +40,33 @@ pub fn optimize_level_ws(
     timing: &mut FfdTiming,
     ws: &mut LevelWorkspace,
 ) -> f64 {
+    optimize_level_hooked(
+        reference,
+        floating,
+        grid,
+        cfg,
+        timing,
+        ws,
+        &RegistrationHooks::default(),
+        (0, 1),
+    )
+}
+
+/// [`optimize_level_ws`] with progress/cancellation hooks. `level` is the
+/// `(index, total)` pyramid position stamped onto progress events. Hooks
+/// act only at iteration boundaries (observe after, cancel before), so an
+/// uncancelled hooked run is bitwise identical to the unhooked one.
+#[allow(clippy::too_many_arguments)]
+pub fn optimize_level_hooked(
+    reference: &Volume,
+    floating: &Volume,
+    grid: &mut ControlGrid,
+    cfg: &FfdConfig,
+    timing: &mut FfdTiming,
+    ws: &mut LevelWorkspace,
+    hooks: &RegistrationHooks,
+    level: (usize, usize),
+) -> f64 {
     let interp = cfg.method.instance();
     let imp = interp.as_ref();
     let lambda = cfg.bending_weight;
@@ -56,7 +83,12 @@ pub fn optimize_level_ws(
     // an accepted trial (its fused pass was the last field writer), letting
     // the gradient skip one full BSI pass per iteration.
     let mut field_current = false;
-    for _ in 0..cfg.max_iter {
+    for it in 0..cfg.max_iter {
+        // Cooperative cancellation: the only extra control flow hooks add,
+        // and it sits outside all arithmetic.
+        if hooks.cancelled() {
+            break;
+        }
         timing.iterations += 1;
         // Gradient of the full objective (fused passes, fills ws.cg()).
         // The pass also yields the objective at `grid` for free — after an
@@ -86,6 +118,12 @@ pub fn optimize_level_ws(
             }
             step *= 0.5;
         }
+        hooks.report(ProgressEvent {
+            level: level.0,
+            levels: level.1,
+            iteration: it + 1,
+            cost: current,
+        });
         if !improved {
             break;
         }

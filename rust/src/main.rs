@@ -5,6 +5,8 @@
 //!   register     FFD non-rigid registration (optionally affine-first)
 //!   affine       affine registration only
 //!   serve        start the coordinator TCP server
+//!   client       talk to a running coordinator (upload / register --async /
+//!                job / watch / cancel / fetch / stats) — see PROTOCOL.md
 //!   artifacts    summarize the AOT artifact manifest
 //!   version      print the version
 //!
@@ -34,6 +36,7 @@ fn main() {
         "register" => cmd_register(&args),
         "affine" => cmd_affine(&args),
         "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "artifacts" => cmd_artifacts(&args),
         "version" => {
             println!("ffdreg {}", ffdreg::version());
@@ -69,7 +72,14 @@ USAGE: ffdreg <command> [flags]
                [--threads N] [--no-affine] [--config cfg.json]
   affine       --reference A --floating B [--out warped.nii]
   serve        [--addr 127.0.0.1:7847] [--workers N] [--queue 256] [--batch 8]
-               [--threads N]
+               [--threads N] [--store-bytes B] [--reg-workers N] [--reg-queue N]
+  client       <upload|register|job|watch|cancel|fetch|stats> [--addr HOST:PORT]
+               upload   --input VOLUME
+               register --reference REF --floating FLO [--async] [--watch]
+                        [--store-warped] [--method M] [--levels N] [--iters N]
+                        [--threads N] [--out SERVER_PATH]
+               job/watch/cancel --id N    fetch --volume vol:HASH --out FILE
+               (REF/FLO are server paths or vol: handles; see PROTOCOL.md)
   artifacts    [--dir artifacts]
   version
 
@@ -355,10 +365,14 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
         cfg.intra_threads.to_string()
     };
     println!(
-        "starting coordinator: {} workers, queue {}, batch {}, {per_job} thread(s)/job, pjrt={}",
+        "starting coordinator: {} workers, queue {}, batch {}, {per_job} thread(s)/job, \
+         {} reg worker(s) (queue {}), store {} MiB, pjrt={}",
         cfg.workers,
         cfg.queue_capacity,
         cfg.max_batch,
+        cfg.reg_workers,
+        cfg.reg_queue,
+        cfg.store_bytes >> 20,
         service.has_pjrt()
     );
     let sched = Arc::new(Scheduler::start(
@@ -370,8 +384,16 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
             intra_threads: cfg.intra_threads,
         },
     ));
-    let server = ffdreg::coordinator::server::Server::start(&cfg.server_addr, sched)
-        .with_context(|| format!("bind {}", cfg.server_addr))?;
+    let server = ffdreg::coordinator::server::Server::start_with(
+        &cfg.server_addr,
+        sched,
+        ffdreg::coordinator::server::ServerConfig {
+            store_bytes: cfg.store_bytes,
+            reg_workers: cfg.reg_workers,
+            reg_queue: cfg.reg_queue,
+        },
+    )
+    .with_context(|| format!("bind {}", cfg.server_addr))?;
     println!("listening on {} — send {{\"op\":\"shutdown\"}} to stop", server.addr);
     // Block until the shutdown op stops the listener: a connect probe fails
     // once the accept loop has exited.
@@ -381,6 +403,285 @@ fn cmd_serve(args: &Args) -> Result<(), Error> {
             break;
         }
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// client — drive a running coordinator over the line protocol (PROTOCOL.md)
+
+/// Raw payload bytes per `upload_chunk` frame: 768 KiB encodes to ~1 MiB of
+/// base64, comfortably under the server's request-line cap.
+const CLIENT_CHUNK_BYTES: usize = 768 << 10;
+
+/// A transcript-printing protocol client: every request/response line is
+/// echoed (`>>` / `<<`) so a piped run doubles as a wire transcript.
+struct ProtoClient {
+    inner: ffdreg::coordinator::server::Client,
+    /// Echo payload-bearing frames truncated (upload/fetch chunk data).
+    quiet_data: bool,
+}
+
+impl ProtoClient {
+    fn connect(addr: &str) -> Result<ProtoClient, Error> {
+        use std::net::ToSocketAddrs;
+        let sock = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("{addr} resolves to no address"))?;
+        let inner = ffdreg::coordinator::server::Client::connect(&sock)
+            .with_context(|| format!("connecting to {sock}"))?;
+        Ok(ProtoClient { inner, quiet_data: true })
+    }
+
+    /// One request/response round trip, echoed to stdout.
+    fn call(&mut self, req: &ffdreg::util::json::Json) -> Result<ffdreg::util::json::Json, Error> {
+        println!(">> {}", self.render(req));
+        let resp = self.inner.call(req).context("server call")?;
+        println!("<< {}", self.render(&resp));
+        Ok(resp)
+    }
+
+    /// Like [`call`](Self::call), but a `{"ok":false}` response becomes an
+    /// error carrying the server's code and message.
+    fn call_ok(&mut self, req: &ffdreg::util::json::Json) -> Result<ffdreg::util::json::Json, Error> {
+        let resp = self.call(req)?;
+        if resp.get("ok").as_bool() != Some(true) {
+            return Err(anyhow!(
+                "server error [{}]: {}",
+                resp.get("code").as_str().unwrap_or("?"),
+                resp.get("error").as_str().unwrap_or("unknown")
+            ));
+        }
+        Ok(resp)
+    }
+
+    /// Render a frame for the transcript, eliding long base64 payloads.
+    fn render(&self, j: &ffdreg::util::json::Json) -> String {
+        use ffdreg::util::json::Json;
+        if self.quiet_data {
+            if let Some(data) = j.get("data").as_str() {
+                if data.len() > 48 {
+                    let mut map = j.as_obj().cloned().unwrap_or_default();
+                    map.insert(
+                        "data".into(),
+                        Json::Str(format!("<{} base64 bytes>", data.len())),
+                    );
+                    return Json::Obj(map).to_string();
+                }
+            }
+        }
+        j.to_string()
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<(), Error> {
+    use ffdreg::util::json::Json;
+    let action = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("client needs an action: upload|register|job|watch|cancel|fetch|stats"))?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7847");
+    let mut client = ProtoClient::connect(addr)?;
+    match action {
+        "upload" => {
+            let input = args.get("input").context("upload needs --input VOLUME")?;
+            let handle = client_upload(&mut client, Path::new(input))?;
+            println!("uploaded {input} -> {handle}");
+            Ok(())
+        }
+        "register" => {
+            let reference = args.get("reference").context("missing --reference")?;
+            let floating = args.get("floating").context("missing --floating")?;
+            let mut pairs = vec![
+                ("op", Json::Str("register".into())),
+                ("reference", Json::Str(reference.into())),
+                ("floating", Json::Str(floating.into())),
+                ("levels", Json::Num(args.get_usize("levels", 2)? as f64)),
+                ("iters", Json::Num(args.get_usize("iters", 20)? as f64)),
+                ("threads", Json::Num(args.get_usize("threads", 0)? as f64)),
+            ];
+            if let Some(m) = args.get("method") {
+                pairs.push(("method", Json::Str(m.into())));
+            }
+            if let Some(o) = args.get("out") {
+                pairs.push(("out", Json::Str(o.into())));
+            }
+            if args.has("store-warped") {
+                pairs.push(("store_warped", Json::Bool(true)));
+            }
+            let wants_async = args.has("async") || args.has("watch");
+            if wants_async {
+                pairs.push(("async", Json::Bool(true)));
+            }
+            let resp = client.call_ok(&Json::obj(pairs))?;
+            if wants_async {
+                let id = resp.get("job").as_usize().context("response carries no job id")?;
+                println!("job {id} queued");
+                if args.has("watch") {
+                    client_watch(&mut client, id, args.get_usize("interval-ms", 200)?)?;
+                }
+            }
+            Ok(())
+        }
+        "job" => {
+            let id = args.get_usize("id", 0)?;
+            client.call_ok(&Json::obj(vec![
+                ("op", Json::Str("job".into())),
+                ("id", Json::Num(id as f64)),
+            ]))?;
+            Ok(())
+        }
+        "watch" => {
+            let id = args.get_usize("id", 0)?;
+            client_watch(&mut client, id, args.get_usize("interval-ms", 200)?)
+        }
+        "cancel" => {
+            let id = args.get_usize("id", 0)?;
+            client.call_ok(&Json::obj(vec![
+                ("op", Json::Str("cancel".into())),
+                ("id", Json::Num(id as f64)),
+            ]))?;
+            Ok(())
+        }
+        "fetch" => {
+            let handle = args.get("volume").context("fetch needs --volume vol:HASH")?;
+            let out = args.get("out").context("fetch needs --out FILE")?;
+            client_fetch(&mut client, handle, Path::new(out))?;
+            println!("fetched {handle} -> {out}");
+            Ok(())
+        }
+        "stats" => {
+            client.call_ok(&Json::obj(vec![("op", Json::Str("stats".into()))]))?;
+            Ok(())
+        }
+        other => Err(anyhow!("unknown client action '{other}'")),
+    }
+}
+
+/// Stream a local volume file to the server's store in chunked base64
+/// frames. The file is read slab-by-slab (`VolumeStream`) and shipped as
+/// little-endian f32 — the server stores exactly the voxels a local
+/// `load_any` would produce, bit for bit.
+fn client_upload(client: &mut ProtoClient, path: &Path) -> Result<String, Error> {
+    use ffdreg::util::json::Json;
+    use ffdreg::volume::formats::{Dtype, VolumeStream};
+    let mut stream =
+        VolumeStream::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let dims = stream.dims;
+    let spacing = stream.spacing;
+    let origin = stream.origin;
+    client.call_ok(&Json::obj(vec![
+        ("op", Json::Str("upload".into())),
+        ("dims", Json::arr_usize(&[dims.nz, dims.ny, dims.nx])),
+        (
+            "spacing",
+            Json::arr_f64(&[spacing[0] as f64, spacing[1] as f64, spacing[2] as f64]),
+        ),
+        (
+            "origin",
+            Json::arr_f64(&[origin[0] as f64, origin[1] as f64, origin[2] as f64]),
+        ),
+        ("dtype", Json::Str("f32".into())),
+    ]))?;
+    let row = dims.nx * dims.ny;
+    let mut slab = vec![0.0f32; row * ffdreg::volume::formats::stream::DEFAULT_SLAB_NZ];
+    while let Some(chunk) = stream.peek_chunk() {
+        let n = chunk.len() * row;
+        stream
+            .next_slab_into(&mut slab[..n])
+            .with_context(|| format!("reading {}", path.display()))?;
+        let raw = Dtype::F32.encode(&slab[..n], false, 1.0, 0.0);
+        for piece in raw.chunks(CLIENT_CHUNK_BYTES) {
+            client.call_ok(&Json::obj(vec![
+                ("op", Json::Str("upload_chunk".into())),
+                ("data", Json::Str(ffdreg::util::base64::encode(piece))),
+            ]))?;
+        }
+    }
+    let done = client.call_ok(&Json::obj(vec![("op", Json::Str("upload_end".into()))]))?;
+    done.get("volume")
+        .as_str()
+        .map(String::from)
+        .ok_or_else(|| anyhow!("upload_end response carries no volume handle"))
+}
+
+/// Poll a job until it reaches a terminal state; errors if it failed.
+fn client_watch(client: &mut ProtoClient, id: usize, interval_ms: usize) -> Result<(), Error> {
+    use ffdreg::util::json::Json;
+    loop {
+        let resp = client.call_ok(&Json::obj(vec![
+            ("op", Json::Str("job".into())),
+            ("id", Json::Num(id as f64)),
+        ]))?;
+        match resp.get("state").as_str() {
+            Some("done") => return Ok(()),
+            Some("cancelled") => return Ok(()),
+            Some("failed") => {
+                return Err(anyhow!(
+                    "job {id} failed [{}]: {}",
+                    resp.get("code").as_str().unwrap_or("?"),
+                    resp.get("error").as_str().unwrap_or("unknown")
+                ))
+            }
+            _ => std::thread::sleep(std::time::Duration::from_millis(interval_ms as u64)),
+        }
+    }
+}
+
+/// Download a stored volume slab-by-slab and save it locally (format from
+/// the `--out` extension).
+fn client_fetch(client: &mut ProtoClient, handle: &str, out: &Path) -> Result<(), Error> {
+    use ffdreg::util::json::Json;
+    use ffdreg::volume::formats::{self, Dtype};
+    formats::writable_format(out).with_context(|| out.display().to_string())?;
+    let meta = client.call_ok(&Json::obj(vec![
+        ("op", Json::Str("fetch".into())),
+        ("volume", Json::Str(handle.into())),
+    ]))?;
+    let dims_arr = meta.get("dims").as_arr().context("fetch meta carries no dims")?;
+    let (Some(nz), Some(ny), Some(nx)) = (
+        dims_arr.first().and_then(|j| j.as_usize()),
+        dims_arr.get(1).and_then(|j| j.as_usize()),
+        dims_arr.get(2).and_then(|j| j.as_usize()),
+    ) else {
+        return Err(anyhow!("bad dims in fetch meta"));
+    };
+    let geom = |key: &str| -> Result<[f32; 3], Error> {
+        let a = meta.get(key).as_arr().with_context(|| format!("fetch meta missing {key}"))?;
+        let mut vals = [0.0f32; 3];
+        for (i, slot) in vals.iter_mut().enumerate() {
+            *slot = a
+                .get(i)
+                .and_then(|j| j.as_f64())
+                .with_context(|| format!("bad {key} in fetch meta"))? as f32;
+        }
+        Ok(vals)
+    };
+    let mut vol = Volume::zeros(Dims::new(nx, ny, nz), geom("spacing")?);
+    vol.origin = geom("origin")?;
+    let chunks = meta.get("chunks").as_usize().context("fetch meta carries no chunk count")?;
+    for i in 0..chunks {
+        let resp = client.call_ok(&Json::obj(vec![
+            ("op", Json::Str("fetch_chunk".into())),
+            ("volume", Json::Str(handle.into())),
+            ("chunk", Json::Num(i as f64)),
+        ]))?;
+        let (Some(lo), Some(n), Some(data)) = (
+            resp.get("offset").as_usize(),
+            resp.get("voxels").as_usize(),
+            resp.get("data").as_str(),
+        ) else {
+            return Err(anyhow!("bad fetch_chunk response for chunk {i}"));
+        };
+        let raw = ffdreg::util::base64::decode(data).map_err(|e| anyhow!("chunk {i}: {e}"))?;
+        if lo + n > vol.data.len() || n == 0 || raw.len() != n * 4 {
+            return Err(anyhow!("chunk {i} geometry/size mismatch"));
+        }
+        Dtype::F32.decode_into(&raw, false, 1.0, 0.0, &mut vol.data[lo..lo + n]);
+    }
+    formats::save_any(&vol, out).with_context(|| out.display().to_string())?;
     Ok(())
 }
 

@@ -1,0 +1,105 @@
+//! Standard base64 (RFC 4648, with padding) — the wire encoding for volume
+//! payload chunks on the coordinator's line protocol. Dependency-free like
+//! the rest of `util`; strict decoding (rejects bad characters, bad
+//! padding and trailing garbage) so a corrupted upload frame fails loudly
+//! instead of storing a silently-wrong volume.
+
+const ALPHABET: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Encode `data` as standard padded base64.
+pub fn encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let n = (b0 << 16) | (b1 << 8) | b2;
+        out.push(ALPHABET[(n >> 18) as usize & 63] as char);
+        out.push(ALPHABET[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { ALPHABET[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { ALPHABET[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+/// Decode standard (padded) base64. Rejects characters outside the
+/// alphabet, non-multiple-of-4 input, and misplaced padding.
+pub fn decode(text: &str) -> Result<Vec<u8>, String> {
+    let bytes = text.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(format!("base64 length {} is not a multiple of 4", bytes.len()));
+    }
+    fn val(c: u8) -> Result<u32, String> {
+        match c {
+            b'A'..=b'Z' => Ok((c - b'A') as u32),
+            b'a'..=b'z' => Ok((c - b'a' + 26) as u32),
+            b'0'..=b'9' => Ok((c - b'0' + 52) as u32),
+            b'+' => Ok(62),
+            b'/' => Ok(63),
+            _ => Err(format!("invalid base64 character {:?}", c as char)),
+        }
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (i, quad) in bytes.chunks(4).enumerate() {
+        let last = (i + 1) * 4 == bytes.len();
+        let pad = quad.iter().filter(|&&c| c == b'=').count();
+        if pad > 0 && !last {
+            return Err("padding only allowed in the final quantum".into());
+        }
+        if pad > 2 || (pad >= 1 && quad[3] != b'=') || (pad == 2 && quad[2] != b'=') {
+            return Err("malformed base64 padding".into());
+        }
+        let v0 = val(quad[0])?;
+        let v1 = val(quad[1])?;
+        let v2 = if pad >= 2 { 0 } else { val(quad[2])? };
+        let v3 = if pad >= 1 { 0 } else { val(quad[3])? };
+        let n = (v0 << 18) | (v1 << 12) | (v2 << 6) | v3;
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rfc4648_vectors() {
+        for (plain, enc) in [
+            ("", ""),
+            ("f", "Zg=="),
+            ("fo", "Zm8="),
+            ("foo", "Zm9v"),
+            ("foob", "Zm9vYg=="),
+            ("fooba", "Zm9vYmE="),
+            ("foobar", "Zm9vYmFy"),
+        ] {
+            assert_eq!(encode(plain.as_bytes()), enc);
+            assert_eq!(decode(enc).unwrap(), plain.as_bytes());
+        }
+    }
+
+    #[test]
+    fn binary_round_trips() {
+        let mut rng = crate::util::rng::Pcg32::seeded(42);
+        for len in [0usize, 1, 2, 3, 4, 255, 256, 1023, 4096] {
+            let data: Vec<u8> = (0..len).map(|_| (rng.next_u32() & 0xff) as u8).collect();
+            assert_eq!(decode(&encode(&data)).unwrap(), data, "len {len}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(decode("Zg=").is_err(), "bad length");
+        assert!(decode("Zg!=").is_err(), "bad character");
+        assert!(decode("Z===").is_err(), "over-padding");
+        assert!(decode("Zg==Zg==").is_err(), "padding mid-stream");
+        assert!(decode("Zm=v").is_err(), "pad before data");
+    }
+}

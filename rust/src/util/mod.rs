@@ -5,8 +5,10 @@
 //! the explicit-SIMD substrate (`simd.rs`) the vectorized kernels dispatch
 //! through.
 
+pub mod base64;
 pub mod bench;
 pub mod error;
+pub mod hash;
 pub mod json;
 pub mod quickcheck;
 pub mod rng;

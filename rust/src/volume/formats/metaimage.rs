@@ -28,11 +28,17 @@ pub enum DataFile {
 /// The decoded subset of a MetaImage header this crate consumes.
 #[derive(Clone, Debug)]
 pub struct MetaHeader {
+    /// Volume shape (`DimSize`).
     pub dims: crate::volume::Dims,
+    /// Voxel spacing in mm (`ElementSpacing`, falling back to `ElementSize`).
     pub spacing: [f32; 3],
+    /// World-space origin in mm (`Offset`).
     pub origin: [f32; 3],
+    /// Stored voxel element type (`ElementType`).
     pub dtype: Dtype,
+    /// Payload byte order (`BinaryDataByteOrderMSB`).
     pub big_endian: bool,
+    /// Where the payload lives (`ElementDataFile`).
     pub data_file: DataFile,
     /// Byte offset into the external payload file (`HeaderSize`).
     pub header_size: u64,

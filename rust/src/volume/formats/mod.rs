@@ -28,7 +28,7 @@ use std::path::Path;
 
 use super::{io as volio, Volume};
 pub use super::io::VolError;
-pub use stream::{load_streamed, VolumeStream};
+pub use stream::{load_streamed, SlabDecoder, VolumeStream};
 
 /// A supported on-disk volume format.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -66,6 +66,7 @@ impl Format {
         sniff_bytes(&head[..got])
     }
 
+    /// Human-readable format name (error messages, logs).
     pub fn name(&self) -> &'static str {
         match self {
             Format::Vol => "vol",
@@ -187,14 +188,36 @@ pub fn save_any(vol: &Volume, path: &Path) -> Result<(), VolError> {
 // ---------------------------------------------------------------------------
 // Typed voxel decode/encode
 
-/// On-disk voxel element type shared by the NIfTI and MetaImage codecs.
+/// On-disk voxel element type shared by the NIfTI and MetaImage codecs
+/// (and the coordinator's `upload` op).
+///
+/// One codec decodes any stored dtype to the canonical in-memory `f32`
+/// and encodes back; the f32 identity path is a bit-exact passthrough:
+///
+/// ```
+/// use ffdreg::volume::formats::Dtype;
+/// let vals = [0.5f32, -0.0, 3.25e-12];
+/// let bytes = Dtype::F32.encode(&vals, /*big_endian=*/ false, 1.0, 0.0);
+/// let mut back = [0.0f32; 3];
+/// Dtype::F32.decode_into(&bytes, false, 1.0, 0.0, &mut back);
+/// for (a, b) in vals.iter().zip(&back) {
+///     assert_eq!(a.to_bits(), b.to_bits()); // every payload bit survives
+/// }
+/// assert_eq!(Dtype::parse("f32"), Some(Dtype::F32));
+/// ```
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Dtype {
+    /// Unsigned 8-bit integer.
     U8,
+    /// Signed 16-bit integer.
     I16,
+    /// Unsigned 16-bit integer.
     U16,
+    /// Signed 32-bit integer.
     I32,
+    /// IEEE-754 single precision (the canonical in-memory type).
     F32,
+    /// IEEE-754 double precision.
     F64,
 }
 
@@ -209,6 +232,8 @@ impl Dtype {
         }
     }
 
+    /// Canonical short name (`u8` / `i16` / … — the [`parse`](Self::parse)
+    /// spelling).
     pub fn name(self) -> &'static str {
         match self {
             Dtype::U8 => "u8",
@@ -222,6 +247,12 @@ impl Dtype {
 
     /// Every supported dtype (test sweeps).
     pub const ALL: [Dtype; 6] = [Dtype::U8, Dtype::I16, Dtype::U16, Dtype::I32, Dtype::F32, Dtype::F64];
+
+    /// Parse a dtype from its [`name`](Self::name) (the protocol's
+    /// `upload` op takes this spelling).
+    pub fn parse(s: &str) -> Option<Dtype> {
+        Dtype::ALL.into_iter().find(|d| d.name() == s)
+    }
 
     /// Decode `out.len()` stored voxels from `bytes` into f32, applying the
     /// affine intensity rescale `v = raw * slope + inter`. The identity
@@ -473,6 +504,14 @@ mod tests {
         let r = load_any(&p).unwrap();
         assert_eq!(r.data, v.data);
         assert_eq!(r.origin, v.origin);
+    }
+
+    #[test]
+    fn dtype_names_round_trip_through_parse() {
+        for dt in Dtype::ALL {
+            assert_eq!(Dtype::parse(dt.name()), Some(dt));
+        }
+        assert_eq!(Dtype::parse("rgb24"), None);
     }
 
     #[test]

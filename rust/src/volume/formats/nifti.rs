@@ -18,9 +18,10 @@ use std::path::Path;
 use super::{validate_shape, validate_spacing, Dtype, VolError};
 use crate::volume::{Dims, Volume};
 
-/// Header length and the default single-file data offset (348 + 4 bytes of
-/// empty extension indicator).
+/// NIfTI-1 header length in bytes.
 pub const HEADER_LEN: usize = 348;
+/// Default single-file data offset (348-byte header + 4 bytes of empty
+/// extension indicator).
 pub const DEFAULT_VOX_OFFSET: u64 = 352;
 
 /// NIfTI-1 datatype codes for the supported [`Dtype`]s.
@@ -50,12 +51,19 @@ fn code_dtype(code: i16) -> Option<Dtype> {
 /// The decoded subset of a NIfTI-1 header this crate consumes.
 #[derive(Clone, Debug)]
 pub struct NiftiHeader {
+    /// Volume shape (`dim[1..=3]`).
     pub dims: Dims,
+    /// Voxel spacing in mm (sform diagonal, falling back to `pixdim`).
     pub spacing: [f32; 3],
+    /// World-space origin in mm (sform/qform translation).
     pub origin: [f32; 3],
+    /// Stored voxel element type (`datatype`).
     pub dtype: Dtype,
+    /// Header/payload byte order (from `sizeof_hdr`'s readable order).
     pub big_endian: bool,
+    /// Intensity rescale slope (`scl_slope`; 1.0 when absent).
     pub slope: f32,
+    /// Intensity rescale intercept (`scl_inter`; 0.0 when absent).
     pub inter: f32,
     /// Byte offset of the voxel payload within the `.nii` file.
     pub vox_offset: u64,
@@ -265,11 +273,14 @@ pub fn load(path: &Path) -> Result<Volume, VolError> {
 /// Writer knobs: stored dtype, byte order and intensity rescale.
 #[derive(Clone, Copy, Debug)]
 pub struct SaveOptions {
+    /// Stored voxel element type.
     pub dtype: Dtype,
+    /// Write the header and payload big-endian.
     pub big_endian: bool,
     /// Stored-to-real rescale `real = stored * slope + inter`; the writer
     /// inverts it when quantizing. Must be non-zero.
     pub slope: f32,
+    /// Rescale intercept (see [`slope`](Self::slope)).
     pub inter: f32,
 }
 

@@ -26,19 +26,98 @@ use crate::volume::{io as volio, Dims, Volume};
 /// small enough to keep the scratch resident in cache-friendly territory.
 pub const DEFAULT_SLAB_NZ: usize = 16;
 
-/// An open volume file positioned at its payload, yielding decoded z-slabs.
-pub struct VolumeStream {
-    src: BufReader<std::fs::File>,
-    pub dims: Dims,
-    pub spacing: [f32; 3],
-    pub origin: [f32; 3],
-    pub format: Format,
+/// The source-agnostic slab decode at the core of [`VolumeStream`]: given
+/// a volume's shape and storage encoding, it turns successive runs of raw
+/// payload bytes into decoded f32 z-slabs (endianness + dtype +
+/// `scl_slope`/`scl_inter` rescale via [`super::Dtype::decode_into`]).
+///
+/// It is *push*-based — the caller hands it exactly [`slab_bytes`] bytes
+/// per slab — so it serves both pull sources (a file behind
+/// [`VolumeStream`]) and push sources (the coordinator's chunked `upload`
+/// op, where payload arrives as base64 frames on a socket) with one code
+/// path and one bit-identity contract.
+///
+/// [`slab_bytes`]: SlabDecoder::slab_bytes
+pub struct SlabDecoder {
+    dims: Dims,
     dtype: super::Dtype,
     big_endian: bool,
     slope: f32,
     inter: f32,
     slab_nz: usize,
     next_z: usize,
+}
+
+impl SlabDecoder {
+    /// A decoder for a volume of `dims` stored as `dtype` with the given
+    /// byte order and rescale, yielding slabs of `slab_nz` z-slices
+    /// (clamped to ≥ 1).
+    pub fn new(
+        dims: Dims,
+        dtype: super::Dtype,
+        big_endian: bool,
+        slope: f32,
+        inter: f32,
+        slab_nz: usize,
+    ) -> SlabDecoder {
+        SlabDecoder { dims, dtype, big_endian, slope, inter, slab_nz: slab_nz.max(1), next_z: 0 }
+    }
+
+    /// Volume shape this decoder was built for.
+    pub fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    /// Voxels per z-slice.
+    fn slice_voxels(&self) -> usize {
+        self.dims.nx * self.dims.ny
+    }
+
+    /// The chunk the next [`decode_next`](SlabDecoder::decode_next) call
+    /// will fill, or `None` when the volume is complete.
+    pub fn peek_chunk(&self) -> Option<ZChunk> {
+        if self.next_z >= self.dims.nz {
+            return None;
+        }
+        Some(ZChunk { z0: self.next_z, z1: (self.next_z + self.slab_nz).min(self.dims.nz) })
+    }
+
+    /// Raw payload bytes of the next slab (`None` when complete).
+    pub fn slab_bytes(&self) -> Option<usize> {
+        self.peek_chunk().map(|c| c.len() * self.slice_voxels() * self.dtype.size())
+    }
+
+    /// True once every z-slice has been decoded.
+    pub fn is_complete(&self) -> bool {
+        self.next_z >= self.dims.nz
+    }
+
+    /// Decode one slab: `raw` must hold exactly
+    /// [`slab_bytes`](SlabDecoder::slab_bytes) bytes and `out` exactly the
+    /// chunk's voxel count. Returns the chunk covered.
+    pub fn decode_next(&mut self, raw: &[u8], out: &mut [f32]) -> ZChunk {
+        let chunk = self.peek_chunk().expect("decode_next past end of volume");
+        let n = chunk.len() * self.slice_voxels();
+        assert_eq!(raw.len(), n * self.dtype.size(), "raw slab byte count");
+        assert_eq!(out.len(), n, "output slab must match the chunk's voxel count");
+        self.dtype.decode_into(raw, self.big_endian, self.slope, self.inter, out);
+        self.next_z = chunk.z1;
+        chunk
+    }
+}
+
+/// An open volume file positioned at its payload, yielding decoded z-slabs.
+pub struct VolumeStream {
+    src: BufReader<std::fs::File>,
+    /// Volume shape from the parsed header.
+    pub dims: Dims,
+    /// Voxel spacing (mm) from the parsed header.
+    pub spacing: [f32; 3],
+    /// World-space origin (mm) from the parsed header.
+    pub origin: [f32; 3],
+    /// The detected on-disk format.
+    pub format: Format,
+    decoder: SlabDecoder,
     scratch: Vec<u8>,
 }
 
@@ -89,12 +168,7 @@ impl VolumeStream {
             spacing,
             origin,
             format,
-            dtype,
-            big_endian,
-            slope,
-            inter,
-            slab_nz: slab_nz.max(1),
-            next_z: 0,
+            decoder: SlabDecoder::new(dims, dtype, big_endian, slope, inter, slab_nz),
             scratch: Vec::new(),
         })
     }
@@ -107,10 +181,7 @@ impl VolumeStream {
     /// The chunk the next `next_slab_into` call will fill, or `None` when
     /// the volume is exhausted — lets a caller size the output slice first.
     pub fn peek_chunk(&self) -> Option<ZChunk> {
-        if self.next_z >= self.dims.nz {
-            return None;
-        }
-        Some(ZChunk { z0: self.next_z, z1: (self.next_z + self.slab_nz).min(self.dims.nz) })
+        self.decoder.peek_chunk()
     }
 
     /// Read and decode the next z-slab into `out` (which must hold exactly
@@ -118,12 +189,10 @@ impl VolumeStream {
     /// the covered chunk, or `Ok(None)` at end of volume.
     pub fn next_slab_into(&mut self, out: &mut [f32]) -> Result<Option<ZChunk>, VolError> {
         use std::io::Read;
-        let Some(chunk) = self.peek_chunk() else {
+        let Some(chunk) = self.decoder.peek_chunk() else {
             return Ok(None);
         };
-        let n = chunk.len() * self.slice_voxels();
-        assert_eq!(out.len(), n, "output slab must match the chunk's voxel count");
-        self.scratch.resize(n * self.dtype.size(), 0);
+        self.scratch.resize(self.decoder.slab_bytes().unwrap(), 0);
         self.src.read_exact(&mut self.scratch).map_err(|e| {
             if e.kind() == std::io::ErrorKind::UnexpectedEof {
                 VolError::Format(format!(
@@ -134,10 +203,7 @@ impl VolumeStream {
                 VolError::Io(e)
             }
         })?;
-        self.dtype
-            .decode_into(&self.scratch, self.big_endian, self.slope, self.inter, out);
-        self.next_z = chunk.z1;
-        Ok(Some(chunk))
+        Ok(Some(self.decoder.decode_next(&self.scratch, out)))
     }
 
     /// Drain the stream into a full [`Volume`], decoding each slab directly

@@ -3,24 +3,32 @@
 //! fields), plus IO, pyramid downsampling and trilinear resampling.
 
 pub mod formats;
+#[allow(missing_docs)]
 pub mod io;
+#[allow(missing_docs)]
 pub mod pyramid;
+#[allow(missing_docs)]
 pub mod resample;
 
 /// Dimensions of a 3D lattice, in voxels. Axis order is (x, y, z) with x the
 /// fastest-varying axis in memory (NIfTI / NiftyReg convention).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Dims {
+    /// Extent along x (fastest-varying in memory).
     pub nx: usize,
+    /// Extent along y.
     pub ny: usize,
+    /// Extent along z (slowest-varying; the slab/chunk axis).
     pub nz: usize,
 }
 
 impl Dims {
+    /// Lattice of `nx × ny × nz` voxels.
     pub fn new(nx: usize, ny: usize, nz: usize) -> Self {
         Dims { nx, ny, nz }
     }
 
+    /// Total voxel count.
     pub fn count(&self) -> usize {
         self.nx * self.ny * self.nz
     }
@@ -31,6 +39,7 @@ impl Dims {
         (z * self.ny + y) * self.nx + x
     }
 
+    /// The extents as `[nx, ny, nz]`.
     pub fn as_array(&self) -> [usize; 3] {
         [self.nx, self.ny, self.nz]
     }
@@ -39,6 +48,7 @@ impl Dims {
 /// A dense scalar volume with isotropic-or-not voxel spacing in mm.
 #[derive(Clone, Debug)]
 pub struct Volume {
+    /// Lattice shape.
     pub dims: Dims,
     /// Voxel spacing (mm) per axis — Table 2's "Voxel Spacing".
     pub spacing: [f32; 3],
@@ -47,14 +57,17 @@ pub struct Volume {
     /// pyramid, resampling and registration so warped outputs round-trip
     /// with correct scanner geometry.
     pub origin: [f32; 3],
+    /// Voxel intensities, x-fastest (`dims.idx` layout).
     pub data: Vec<f32>,
 }
 
 impl Volume {
+    /// An all-zero volume at the given shape/spacing (origin at 0).
     pub fn zeros(dims: Dims, spacing: [f32; 3]) -> Self {
         Volume { dims, spacing, origin: [0.0; 3], data: vec![0.0; dims.count()] }
     }
 
+    /// Build a volume by evaluating `f(x, y, z)` at every voxel.
     pub fn from_fn(dims: Dims, spacing: [f32; 3], mut f: impl FnMut(usize, usize, usize) -> f32) -> Self {
         let mut v = Volume::zeros(dims, spacing);
         let mut i = 0;
@@ -69,11 +82,13 @@ impl Volume {
         v
     }
 
+    /// Intensity at voxel (x, y, z).
     #[inline(always)]
     pub fn at(&self, x: usize, y: usize, z: usize) -> f32 {
         self.data[self.dims.idx(x, y, z)]
     }
 
+    /// Set the intensity at voxel (x, y, z).
     #[inline(always)]
     pub fn set(&mut self, x: usize, y: usize, z: usize, v: f32) {
         let i = self.dims.idx(x, y, z);
@@ -168,23 +183,30 @@ impl Volume {
 /// fields T(x,y,z) (Eq. 1), stored as structure-of-arrays for vectorization.
 #[derive(Clone, Debug)]
 pub struct VectorField {
+    /// Lattice shape.
     pub dims: Dims,
+    /// x-components, one per voxel (x-fastest layout).
     pub x: Vec<f32>,
+    /// y-components, one per voxel.
     pub y: Vec<f32>,
+    /// z-components, one per voxel.
     pub z: Vec<f32>,
 }
 
 impl VectorField {
+    /// An identity (all-zero) field over `dims`.
     pub fn zeros(dims: Dims) -> Self {
         let n = dims.count();
         VectorField { dims, x: vec![0.0; n], y: vec![0.0; n], z: vec![0.0; n] }
     }
 
+    /// The vector at flat index `i`.
     #[inline(always)]
     pub fn get(&self, i: usize) -> [f32; 3] {
         [self.x[i], self.y[i], self.z[i]]
     }
 
+    /// Set the vector at flat index `i`.
     #[inline(always)]
     pub fn set(&mut self, i: usize, v: [f32; 3]) {
         self.x[i] = v[0];

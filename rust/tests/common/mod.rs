@@ -1,0 +1,164 @@
+//! Shared helpers for the server protocol test suites: spin up a full
+//! coordinator stack and move volumes over the wire (chunked base64
+//! upload / slab fetch), mirroring what `ffdreg client` does.
+#![allow(dead_code)]
+
+use std::sync::Arc;
+
+use ffdreg::coordinator::server::{Client, Server, ServerConfig};
+use ffdreg::coordinator::{InterpolationService, Scheduler, SchedulerConfig};
+use ffdreg::util::base64;
+use ffdreg::util::json::Json;
+use ffdreg::volume::formats::Dtype;
+use ffdreg::volume::{Dims, Volume};
+
+/// A small coordinator stack on an ephemeral port.
+pub fn start_stack() -> (Server, Arc<Scheduler>) {
+    start_stack_with(ServerConfig::default())
+}
+
+/// [`start_stack`] with explicit store/jobs sizing.
+pub fn start_stack_with(cfg: ServerConfig) -> (Server, Arc<Scheduler>) {
+    let sched = Arc::new(Scheduler::start(
+        InterpolationService::new(None),
+        SchedulerConfig { workers: 1, queue_capacity: 16, max_batch: 2, intra_threads: 0 },
+    ));
+    let server = Server::start_with("127.0.0.1:0", sched.clone(), cfg).expect("bind");
+    (server, sched)
+}
+
+/// Call and require `ok:true`, returning the response.
+pub fn call_ok(c: &mut Client, req: &Json) -> Json {
+    let r = c.call(req).expect("io");
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{req:?} -> {r:?}");
+    r
+}
+
+/// Call and require a structured failure with the given code.
+pub fn call_err(c: &mut Client, req: &Json, code: &str) -> Json {
+    let r = c.call(req).expect("io");
+    assert_eq!(r.get("ok").as_bool(), Some(false), "{req:?} -> {r:?}");
+    assert_eq!(r.get("code").as_str(), Some(code), "{r:?}");
+    r
+}
+
+/// Upload a volume over the protocol in chunked base64 frames; returns
+/// `(handle, dedup)`.
+pub fn upload_volume(c: &mut Client, v: &Volume) -> (String, bool) {
+    call_ok(
+        c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload".into())),
+            ("dims", Json::arr_usize(&[v.dims.nz, v.dims.ny, v.dims.nx])),
+            (
+                "spacing",
+                Json::arr_f64(&[
+                    v.spacing[0] as f64,
+                    v.spacing[1] as f64,
+                    v.spacing[2] as f64,
+                ]),
+            ),
+            (
+                "origin",
+                Json::arr_f64(&[v.origin[0] as f64, v.origin[1] as f64, v.origin[2] as f64]),
+            ),
+            ("dtype", Json::Str("f32".into())),
+        ]),
+    );
+    let raw = Dtype::F32.encode(&v.data, false, 1.0, 0.0);
+    // Deliberately misaligned chunk size: exercises the server-side slab
+    // reassembly (pending-buffer) path.
+    for piece in raw.chunks(100_003) {
+        call_ok(
+            c,
+            &Json::obj(vec![
+                ("op", Json::Str("upload_chunk".into())),
+                ("data", Json::Str(base64::encode(piece))),
+            ]),
+        );
+    }
+    let done = call_ok(c, &Json::obj(vec![("op", Json::Str("upload_end".into()))]));
+    (
+        done.get("volume").as_str().expect("handle").to_string(),
+        done.get("dedup").as_bool().expect("dedup flag"),
+    )
+}
+
+/// Fetch a stored volume back out slab-by-slab.
+pub fn fetch_volume(c: &mut Client, handle: &str) -> Volume {
+    let meta = call_ok(
+        c,
+        &Json::obj(vec![
+            ("op", Json::Str("fetch".into())),
+            ("volume", Json::Str(handle.into())),
+        ]),
+    );
+    let d = meta.get("dims").as_arr().expect("dims");
+    let (nz, ny, nx) = (
+        d[0].as_usize().unwrap(),
+        d[1].as_usize().unwrap(),
+        d[2].as_usize().unwrap(),
+    );
+    let geom = |key: &str| -> [f32; 3] {
+        let a = meta.get(key).as_arr().expect(key);
+        [
+            a[0].as_f64().unwrap() as f32,
+            a[1].as_f64().unwrap() as f32,
+            a[2].as_f64().unwrap() as f32,
+        ]
+    };
+    let mut vol = Volume::zeros(Dims::new(nx, ny, nz), geom("spacing"));
+    vol.origin = geom("origin");
+    let chunks = meta.get("chunks").as_usize().expect("chunks");
+    for i in 0..chunks {
+        let r = call_ok(
+            c,
+            &Json::obj(vec![
+                ("op", Json::Str("fetch_chunk".into())),
+                ("volume", Json::Str(handle.into())),
+                ("chunk", Json::Num(i as f64)),
+            ]),
+        );
+        let (lo, n) = (
+            r.get("offset").as_usize().unwrap(),
+            r.get("voxels").as_usize().unwrap(),
+        );
+        let raw = base64::decode(r.get("data").as_str().unwrap()).expect("payload");
+        Dtype::F32.decode_into(&raw, false, 1.0, 0.0, &mut vol.data[lo..lo + n]);
+        assert_eq!(r.get("last").as_bool(), Some(i + 1 == chunks));
+    }
+    vol
+}
+
+/// A smooth Gaussian-blob test volume.
+pub fn blob(dims: Dims, cx: f32, cy: f32, cz: f32, sigma2: f32) -> Volume {
+    Volume::from_fn(dims, [1.0; 3], move |x, y, z| {
+        let d2 =
+            (x as f32 - cx).powi(2) + (y as f32 - cy).powi(2) + (z as f32 - cz).powi(2);
+        (-d2 / sigma2).exp()
+    })
+}
+
+/// Poll a job until it reaches a terminal state (bounded by `secs`).
+pub fn wait_job(c: &mut Client, id: usize, secs: u64) -> Json {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(secs);
+    loop {
+        let r = call_ok(
+            c,
+            &Json::obj(vec![
+                ("op", Json::Str("job".into())),
+                ("id", Json::Num(id as f64)),
+            ]),
+        );
+        match r.get("state").as_str() {
+            Some("done") | Some("failed") | Some("cancelled") => return r,
+            _ => {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "job {id} did not finish in {secs}s: {r:?}"
+                );
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Observability coverage: the `stats` op's counters and gauges — store
+//! occupancy/hits/evictions, jobs by state, queue depth, active
+//! connections — must move as expected across a scripted
+//! upload / register / cancel session.
+
+mod common;
+
+use common::*;
+use ffdreg::coordinator::server::Client;
+use ffdreg::util::json::Json;
+use ffdreg::volume::Dims;
+
+fn stats(c: &mut Client) -> Json {
+    call_ok(c, &Json::obj(vec![("op", Json::Str("stats".into()))]))
+}
+
+fn num(j: &Json, path: &[&str]) -> f64 {
+    let mut cur = j;
+    for p in path {
+        cur = cur.get(p);
+    }
+    cur.as_f64().unwrap_or_else(|| panic!("missing {path:?} in {j:?}"))
+}
+
+#[test]
+fn stats_counters_move_across_a_scripted_session() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+
+    // Baseline: empty store, no jobs, this connection visible.
+    let s0 = stats(&mut c);
+    assert_eq!(num(&s0, &["store", "volumes"]), 0.0);
+    assert_eq!(num(&s0, &["store", "bytes"]), 0.0);
+    assert_eq!(num(&s0, &["jobs", "done"]), 0.0);
+    assert_eq!(num(&s0, &["jobs", "queue_depth"]), 0.0);
+    assert!(num(&s0, &["connections"]) >= 1.0, "{s0:?}");
+    assert!(num(&s0, &["store", "budget_bytes"]) > 0.0);
+
+    // Upload twice (second dedupes) → occupancy 1, insertions 1, dedup 1.
+    let v = blob(Dims::new(10, 10, 10), 5.0, 5.0, 5.0, 16.0);
+    let (handle, _) = upload_volume(&mut c, &v);
+    upload_volume(&mut c, &v);
+    let s1 = stats(&mut c);
+    assert_eq!(num(&s1, &["store", "volumes"]), 1.0);
+    assert_eq!(num(&s1, &["store", "bytes"]), (10 * 10 * 10 * 4) as f64);
+    assert_eq!(num(&s1, &["store", "insertions"]), 1.0);
+    assert_eq!(num(&s1, &["store", "dedup_hits"]), 1.0);
+
+    // Fetch → hits move; unknown handle → misses move.
+    fetch_volume(&mut c, &handle);
+    call_err(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("fetch".into())),
+            ("volume", Json::Str("vol:missing".into())),
+        ]),
+        "not_found",
+    );
+    let s2 = stats(&mut c);
+    assert!(num(&s2, &["store", "hits"]) >= 1.0, "{s2:?}");
+    assert!(num(&s2, &["store", "misses"]) >= 1.0, "{s2:?}");
+
+    // A registration that completes → jobs.done ticks.
+    let w = blob(Dims::new(10, 10, 10), 6.0, 5.0, 5.0, 16.0);
+    let (hw, _) = upload_volume(&mut c, &w);
+    let mut req = Json::obj(vec![
+        ("op", Json::Str("register".into())),
+        ("reference", Json::Str(handle.clone())),
+        ("floating", Json::Str(hw.clone())),
+        ("levels", Json::Num(1.0)),
+        ("iters", Json::Num(2.0)),
+        ("async", Json::Bool(true)),
+    ]);
+    let id = call_ok(&mut c, &req).get("job").as_usize().unwrap();
+    wait_job(&mut c, id, 60);
+    let s3 = stats(&mut c);
+    assert_eq!(num(&s3, &["jobs", "done"]), 1.0, "{s3:?}");
+
+    // A failed registration → jobs.failed ticks.
+    if let Json::Obj(map) = &mut req {
+        map.insert("reference".into(), Json::Str("vol:unknown".into()));
+    }
+    let id = call_ok(&mut c, &req).get("job").as_usize().unwrap();
+    wait_job(&mut c, id, 30);
+
+    // A cancelled registration → jobs.cancelled ticks. Submit a long job
+    // and cancel it straight away (queued or running — both cancel).
+    if let Json::Obj(map) = &mut req {
+        map.insert("reference".into(), Json::Str(handle.clone()));
+        map.insert("iters".into(), Json::Num(400.0));
+    }
+    let id = call_ok(&mut c, &req).get("job").as_usize().unwrap();
+    call_ok(
+        &mut c,
+        &Json::obj(vec![("op", Json::Str("cancel".into())), ("id", Json::Num(id as f64))]),
+    );
+    let end = wait_job(&mut c, id, 60);
+    let s4 = stats(&mut c);
+    assert_eq!(num(&s4, &["jobs", "failed"]), 1.0, "{s4:?}");
+    if end.get("state").as_str() == Some("cancelled") {
+        assert_eq!(num(&s4, &["jobs", "cancelled"]), 1.0, "{s4:?}");
+    }
+    assert_eq!(num(&s4, &["jobs", "running"]), 0.0, "{s4:?}");
+    assert_eq!(num(&s4, &["jobs", "queue_depth"]), 0.0, "{s4:?}");
+
+    // The interpolate scheduler's counters still report under "stats".
+    call_ok(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("interpolate".into())),
+            ("dims", Json::arr_usize(&[8, 8, 8])),
+        ]),
+    );
+    let s5 = stats(&mut c);
+    assert!(num(&s5, &["stats", "completed"]) >= 1.0, "{s5:?}");
+    assert!(num(&s5, &["queue_depth"]) >= 0.0);
+    server.stop();
+}
+
+#[test]
+fn store_eviction_counters_surface_in_stats() {
+    use ffdreg::coordinator::server::ServerConfig;
+    let one = 8 * 8 * 8 * 4;
+    let (server, _sched) = start_stack_with(ServerConfig {
+        store_bytes: 2 * one,
+        ..Default::default()
+    });
+    let mut c = Client::connect(&server.addr).unwrap();
+    for seed in 0..3 {
+        upload_volume(&mut c, &blob(Dims::new(8, 8, 8), seed as f32, 4.0, 4.0, 9.0));
+    }
+    let s = stats(&mut c);
+    assert_eq!(num(&s, &["store", "volumes"]), 2.0, "{s:?}");
+    assert_eq!(num(&s, &["store", "evictions"]), 1.0, "{s:?}");
+    assert_eq!(num(&s, &["store", "bytes"]), (2 * one) as f64);
+    server.stop();
+}

@@ -298,7 +298,7 @@ fn parallel_similarity_kernels_match_serial_references() {
 
 #[test]
 fn register_op_threads_field_is_bitwise_neutral() {
-    use ffdreg::coordinator::service::{run_register, RegisterOp};
+    use ffdreg::coordinator::service::{run_register, RegisterOp, VolumeRef};
     use ffdreg::volume::formats::save_any;
 
     let dir = std::env::temp_dir().join("ffdreg-fused-tests");
@@ -311,15 +311,16 @@ fn register_op_threads_field_is_bitwise_neutral() {
     save_any(&floating, &fp).unwrap();
     let run = |threads: usize| {
         let op = RegisterOp {
-            reference: rp.clone(),
-            floating: fp.clone(),
+            reference: VolumeRef::Path(rp.clone()),
+            floating: VolumeRef::Path(fp.clone()),
             method: Method::Ttli,
             levels: 1,
             iters: 4,
             threads,
             out: None,
+            store_warped: false,
         };
-        run_register(&op).unwrap()
+        run_register(&op, None, &Default::default()).unwrap()
     };
     let a = run(1);
     let b = run(3);

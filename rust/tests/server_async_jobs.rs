@@ -1,0 +1,270 @@
+//! Async registration jobs over the wire, and the acceptance contract:
+//! sync `register` responses are bit-identical at every thread count,
+//! and the same registration submitted `"async":true` — using only
+//! `vol:` handles, no server-local paths — completes with identical
+//! results via upload → poll → fetch.
+
+mod common;
+
+use common::*;
+use ffdreg::coordinator::server::{Client, ServerConfig};
+use ffdreg::util::json::Json;
+use ffdreg::volume::{formats, Dims, Volume};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("ffdreg-async-jobs-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn pair() -> (Volume, Volume) {
+    let dims = Dims::new(16, 16, 16);
+    (
+        blob(dims, 8.0, 8.0, 8.0, 22.0),
+        blob(dims, 9.2, 7.5, 8.0, 22.0),
+    )
+}
+
+fn register_req(reference: &str, floating: &str, threads: usize) -> Json {
+    Json::obj(vec![
+        ("op", Json::Str("register".into())),
+        ("reference", Json::Str(reference.into())),
+        ("floating", Json::Str(floating.into())),
+        ("levels", Json::Num(2.0)),
+        ("iters", Json::Num(6.0)),
+        ("threads", Json::Num(threads as f64)),
+    ])
+}
+
+/// f64 bit pattern of a response field (JSON round-trips f64 exactly:
+/// Rust's float Display prints the shortest round-trippable decimal).
+fn bits(r: &Json, key: &str) -> u64 {
+    r.get(key).as_f64().unwrap_or_else(|| panic!("{key} in {r:?}")).to_bits()
+}
+
+#[test]
+fn sync_and_async_registration_agree_bitwise_at_every_thread_count() {
+    let (reference, floating) = pair();
+    let ref_p = tmp("sync_ref.nii");
+    let flo_p = tmp("sync_flo.nii");
+    formats::save_any(&reference, &ref_p).unwrap();
+    formats::save_any(&floating, &flo_p).unwrap();
+
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+
+    for threads in [1usize, 2] {
+        // --- sync, via server-local paths, warped saved to a file -------
+        let out_p = tmp(&format!("sync_warped_t{threads}.nii"));
+        let mut req = register_req(ref_p.to_str().unwrap(), flo_p.to_str().unwrap(), threads);
+        if let Json::Obj(map) = &mut req {
+            map.insert("out".into(), Json::Str(out_p.to_str().unwrap().into()));
+        }
+        let sync1 = call_ok(&mut c, &req);
+        // Sync register is deterministic: a repeat run is bit-identical.
+        let sync2 = call_ok(&mut c, &req);
+        for key in ["cost", "ssim", "mae", "iterations"] {
+            assert_eq!(bits(&sync1, key), bits(&sync2, key), "{key} (threads {threads})");
+        }
+
+        // --- async, via vol: handles only ------------------------------
+        let (href, _) = upload_volume(&mut c, &reference);
+        let (hflo, _) = upload_volume(&mut c, &floating);
+        let mut areq = register_req(&href, &hflo, threads);
+        if let Json::Obj(map) = &mut areq {
+            map.insert("async".into(), Json::Bool(true));
+            map.insert("store_warped".into(), Json::Bool(true));
+        }
+        let submitted = call_ok(&mut c, &areq);
+        assert_eq!(submitted.get("async").as_bool(), Some(true));
+        let id = submitted.get("job").as_usize().expect("job id");
+        let done = wait_job(&mut c, id, 120);
+        assert_eq!(done.get("state").as_str(), Some("done"), "{done:?}");
+
+        // Identical numerics, sync vs async.
+        for key in ["cost", "ssim", "mae", "iterations"] {
+            assert_eq!(
+                bits(&sync1, key),
+                bits(&done, key),
+                "{key}: async (handles) must match sync (paths) at threads {threads}"
+            );
+        }
+
+        // Identical warped payloads: the file the sync run saved vs the
+        // stored volume the async run reports.
+        let from_file = formats::load_any(&out_p).unwrap();
+        let warped_handle = done.get("warped").as_str().expect("warped handle");
+        let from_store = fetch_volume(&mut c, warped_handle);
+        let b = |d: &[f32]| d.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(
+            b(&from_file.data),
+            b(&from_store.data),
+            "warped checksums (threads {threads})"
+        );
+        assert_eq!(from_file.dims, from_store.dims);
+    }
+    server.stop();
+}
+
+#[test]
+fn async_jobs_report_progress_then_done() {
+    let dims = Dims::new(24, 24, 24);
+    let reference = blob(dims, 12.0, 12.0, 12.0, 40.0);
+    let floating = blob(dims, 14.0, 11.0, 12.5, 40.0);
+
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let (href, _) = upload_volume(&mut c, &reference);
+    let (hflo, _) = upload_volume(&mut c, &floating);
+    let mut req = register_req(&href, &hflo, 1);
+    if let Json::Obj(map) = &mut req {
+        map.insert("async".into(), Json::Bool(true));
+        map.insert("iters".into(), Json::Num(40.0));
+    }
+    let submitted = call_ok(&mut c, &req);
+    // The submit response itself is the first observation: queued.
+    assert_eq!(submitted.get("state").as_str(), Some("queued"));
+    let id = submitted.get("job").as_usize().unwrap();
+    // Poll through the lifecycle; running polls must carry progress fields.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let r = call_ok(
+            &mut c,
+            &Json::obj(vec![("op", Json::Str("job".into())), ("id", Json::Num(id as f64))]),
+        );
+        match r.get("state").as_str() {
+            Some("queued") => {}
+            Some("running") => {
+                assert!(r.get("levels").as_usize().unwrap_or(0) >= 1, "{r:?}");
+                assert!(r.get("level").as_usize().is_some(), "{r:?}");
+                assert!(r.get("iteration").as_usize().is_some(), "{r:?}");
+            }
+            Some("done") => {
+                assert!(r.get("cost").as_f64().is_some());
+                assert!(r.get("iterations").as_usize().unwrap() >= 1);
+                break;
+            }
+            other => panic!("unexpected state {other:?}: {r:?}"),
+        }
+        assert!(std::time::Instant::now() < deadline, "job never finished");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    server.stop();
+}
+
+#[test]
+fn cancel_over_the_protocol_lands_cooperatively() {
+    let dims = Dims::new(28, 28, 28);
+    let reference = blob(dims, 13.0, 14.0, 14.0, 30.0);
+    let floating = blob(dims, 15.0, 14.0, 14.0, 30.0);
+
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let (href, _) = upload_volume(&mut c, &reference);
+    let (hflo, _) = upload_volume(&mut c, &floating);
+    let mut req = register_req(&href, &hflo, 1);
+    if let Json::Obj(map) = &mut req {
+        map.insert("async".into(), Json::Bool(true));
+        map.insert("iters".into(), Json::Num(400.0));
+    }
+    let id = call_ok(&mut c, &req).get("job").as_usize().unwrap();
+    // Wait for it to actually run, then cancel.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let r = call_ok(
+            &mut c,
+            &Json::obj(vec![("op", Json::Str("job".into())), ("id", Json::Num(id as f64))]),
+        );
+        if r.get("state").as_str() == Some("running")
+            && r.get("iteration").as_usize().unwrap_or(0) >= 1
+        {
+            break;
+        }
+        assert_ne!(r.get("state").as_str(), Some("done"), "finished before cancel");
+        assert!(std::time::Instant::now() < deadline);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    let r = call_ok(
+        &mut c,
+        &Json::obj(vec![("op", Json::Str("cancel".into())), ("id", Json::Num(id as f64))]),
+    );
+    assert_eq!(r.get("cancel_requested").as_bool(), Some(true));
+    let done = wait_job(&mut c, id, 60);
+    assert_eq!(done.get("state").as_str(), Some("cancelled"), "{done:?}");
+    server.stop();
+}
+
+#[test]
+fn registration_queue_applies_backpressure() {
+    let (server, _sched) = start_stack_with(ServerConfig {
+        reg_workers: 1,
+        reg_queue: 1,
+        ..Default::default()
+    });
+    let mut c = Client::connect(&server.addr).unwrap();
+    let dims = Dims::new(24, 24, 24);
+    let (href, _) = upload_volume(&mut c, &blob(dims, 12.0, 12.0, 12.0, 30.0));
+    let (hflo, _) = upload_volume(&mut c, &blob(dims, 13.0, 12.0, 12.0, 30.0));
+    let mk = |iters: f64| {
+        let mut req = register_req(&href, &hflo, 1);
+        if let Json::Obj(map) = &mut req {
+            map.insert("async".into(), Json::Bool(true));
+            map.insert("iters".into(), Json::Num(iters));
+        }
+        req
+    };
+    // Flood: with one worker and a 1-deep queue, rejections must appear.
+    let mut ids = vec![];
+    let mut rejected = 0;
+    for _ in 0..8 {
+        let r = c.call(&mk(300.0)).unwrap();
+        if r.get("ok").as_bool() == Some(true) {
+            ids.push(r.get("job").as_usize().unwrap());
+        } else {
+            assert_eq!(r.get("code").as_str(), Some("backpressure"), "{r:?}");
+            rejected += 1;
+        }
+    }
+    assert!(rejected > 0, "1-deep queue must reject a burst of 8");
+    // Cancel survivors so teardown is prompt.
+    for id in &ids {
+        call_ok(
+            &mut c,
+            &Json::obj(vec![("op", Json::Str("cancel".into())), ("id", Json::Num(*id as f64))]),
+        );
+    }
+    for id in ids {
+        wait_job(&mut c, id, 60);
+    }
+    server.stop();
+}
+
+#[test]
+fn job_polling_failures_are_structured() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    call_err(
+        &mut c,
+        &Json::obj(vec![("op", Json::Str("job".into())), ("id", Json::Num(424242.0))]),
+        "not_found",
+    );
+    call_err(
+        &mut c,
+        &Json::obj(vec![("op", Json::Str("cancel".into())), ("id", Json::Num(424242.0))]),
+        "not_found",
+    );
+    call_err(&mut c, &Json::obj(vec![("op", Json::Str("job".into()))]), "bad_request");
+    // A job that fails (unknown handle) reports state=failed with the
+    // underlying code, and the same failure surfaces synchronously as an
+    // error line.
+    let mut req = register_req("vol:missing", "vol:missing", 1);
+    if let Json::Obj(map) = &mut req {
+        map.insert("async".into(), Json::Bool(true));
+    }
+    let id = call_ok(&mut c, &req).get("job").as_usize().unwrap();
+    let done = wait_job(&mut c, id, 30);
+    assert_eq!(done.get("state").as_str(), Some("failed"));
+    assert_eq!(done.get("code").as_str(), Some("not_found"), "{done:?}");
+    call_err(&mut c, &register_req("vol:missing", "vol:missing", 1), "not_found");
+    server.stop();
+}

@@ -168,6 +168,62 @@ fn register_accepts_mixed_formats_on_success_path() {
 }
 
 #[test]
+fn oversized_request_line_is_bad_request_not_oom() {
+    // Regression: the handler used an unbounded read_line, so one client
+    // streaming an endless newline-less request could grow server memory
+    // without limit. The reader is now capped at MAX_REQUEST_LINE: the
+    // client gets a structured bad_request and the connection closes.
+    use ffdreg::coordinator::server::MAX_REQUEST_LINE;
+    use std::io::{BufRead, BufReader, Write};
+
+    let (server, _sched) = start_stack();
+    let mut stream = std::net::TcpStream::connect(server.addr).unwrap();
+    // Exactly one byte over the cap, no newline: the overflow fires once
+    // the last byte is consumed (sending no more than the server will
+    // read keeps the close clean — no RST racing the response).
+    let chunk = vec![b'a'; 64 << 10];
+    let mut sent = 0usize;
+    while sent < MAX_REQUEST_LINE + 1 {
+        let n = chunk.len().min(MAX_REQUEST_LINE + 1 - sent);
+        stream.write_all(&chunk[..n]).unwrap();
+        sent += n;
+    }
+    stream.flush().unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let r = Json::parse(&line).unwrap();
+    expect_code(&r, "bad_request");
+    assert!(
+        r.get("error").as_str().unwrap().contains("exceeds"),
+        "{r:?}"
+    );
+    // The connection is closed after the overflow response.
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "server must close");
+    // And the server is still healthy for the next client.
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r = c.call(&Json::obj(vec![("op", Json::Str("ping".into()))])).unwrap();
+    assert_eq!(r.get("pong").as_bool(), Some(true));
+    server.stop();
+}
+
+#[test]
+fn register_out_rejects_handle_syntax() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let a = small_nii("out_handle_a.nii");
+    let mut req = register_req(&a, &a);
+    if let Json::Obj(map) = &mut req {
+        map.insert("out".into(), Json::Str("vol:abcd".into()));
+    }
+    let r = c.call(&req).unwrap();
+    expect_code(&r, "bad_request");
+    assert!(r.get("error").as_str().unwrap().contains("store_warped"), "{r:?}");
+    server.stop();
+}
+
+#[test]
 fn many_short_connections_do_not_accumulate_handles() {
     // Regression: the accept loop used to push every connection's
     // JoinHandle into a vec and never reap it until shutdown, so a

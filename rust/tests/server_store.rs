@@ -1,0 +1,311 @@
+//! The content-addressed volume store over the wire: chunked base64
+//! upload (slab-decoded as it arrives), dedup by content hash, slab
+//! fetch, LRU eviction under a byte budget, and `vol:` handles feeding
+//! the `interpolate` op.
+
+mod common;
+
+use common::*;
+use ffdreg::coordinator::server::{Client, ServerConfig};
+use ffdreg::util::base64;
+use ffdreg::util::json::Json;
+use ffdreg::volume::Dims;
+
+#[test]
+fn upload_fetch_round_trip_is_bit_identical() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let mut v = blob(Dims::new(11, 9, 21), 5.0, 4.0, 10.0, 30.0);
+    v.spacing = [0.7, 1.1, 2.3];
+    v.origin = [-12.5, 3.0, 42.0];
+    // 21 z-slices spans two default slabs; the odd chunk size in
+    // upload_volume misaligns frames against slab boundaries.
+    let (handle, dedup) = upload_volume(&mut c, &v);
+    assert!(handle.starts_with("vol:"), "{handle}");
+    assert!(!dedup);
+    let back = fetch_volume(&mut c, &handle);
+    assert_eq!(back.dims, v.dims);
+    assert_eq!(back.spacing, v.spacing);
+    assert_eq!(back.origin, v.origin);
+    let bits = |d: &[f32]| d.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&back.data), bits(&v.data), "payload bit-identical");
+    server.stop();
+}
+
+#[test]
+fn repeat_upload_dedupes_to_the_same_handle() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let v = blob(Dims::new(8, 8, 8), 4.0, 4.0, 4.0, 10.0);
+    let (h1, d1) = upload_volume(&mut c, &v);
+    let (h2, d2) = upload_volume(&mut c, &v);
+    assert_eq!(h1, h2);
+    assert!(!d1 && d2, "second upload must dedupe");
+    assert_eq!(server.store().len(), 1);
+    // Different content gets a different handle.
+    let mut w = v.clone();
+    w.data[0] += 1.0;
+    let (h3, _) = upload_volume(&mut c, &w);
+    assert_ne!(h1, h3);
+    server.stop();
+}
+
+#[test]
+fn upload_protocol_failures_are_structured() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    // Chunk without a session.
+    call_err(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload_chunk".into())),
+            ("data", Json::Str("AAAA".into())),
+        ]),
+        "bad_request",
+    );
+    // End without a session.
+    call_err(&mut c, &Json::obj(vec![("op", Json::Str("upload_end".into()))]), "bad_request");
+    // Begin without dims.
+    call_err(&mut c, &Json::obj(vec![("op", Json::Str("upload".into()))]), "bad_request");
+    // Begin, then bad base64 → session aborts.
+    call_ok(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload".into())),
+            ("dims", Json::arr_usize(&[4, 4, 4])),
+        ]),
+    );
+    call_err(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload_chunk".into())),
+            ("data", Json::Str("not base64 !!!".into())),
+        ]),
+        "bad_request",
+    );
+    call_err(&mut c, &Json::obj(vec![("op", Json::Str("upload_end".into()))]), "bad_request");
+    // Begin, send too few bytes, end → incomplete.
+    call_ok(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload".into())),
+            ("dims", Json::arr_usize(&[4, 4, 4])),
+        ]),
+    );
+    call_ok(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload_chunk".into())),
+            ("data", Json::Str(base64::encode(&[0u8; 16]))),
+        ]),
+    );
+    let r = call_err(&mut c, &Json::obj(vec![("op", Json::Str("upload_end".into()))]), "bad_request");
+    assert!(r.get("error").as_str().unwrap().contains("incomplete"), "{r:?}");
+    // Overrun: more bytes than declared.
+    call_ok(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload".into())),
+            ("dims", Json::arr_usize(&[1, 1, 2])),
+        ]),
+    );
+    call_err(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload_chunk".into())),
+            ("data", Json::Str(base64::encode(&[0u8; 64]))),
+        ]),
+        "bad_request",
+    );
+    // Unsupported dtype.
+    call_err(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload".into())),
+            ("dims", Json::arr_usize(&[4, 4, 4])),
+            ("dtype", Json::Str("rgb24".into())),
+        ]),
+        "unsupported",
+    );
+    server.stop();
+}
+
+#[test]
+fn upload_decodes_non_f32_dtypes_server_side() {
+    use ffdreg::volume::formats::Dtype;
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    // i16 big-endian payload with a rescale: the server must decode it
+    // exactly like the file loaders do.
+    let vals: Vec<f32> = (0..4 * 3 * 5).map(|i| (i as f32) * 0.5 - 10.0).collect();
+    let (slope, inter) = (0.5f32, -10.0f32);
+    let raw = Dtype::I16.encode(&vals, true, slope, inter);
+    call_ok(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload".into())),
+            ("dims", Json::arr_usize(&[5, 3, 4])),
+            ("dtype", Json::Str("i16".into())),
+            ("big_endian", Json::Bool(true)),
+            ("slope", Json::Num(slope as f64)),
+            ("inter", Json::Num(inter as f64)),
+        ]),
+    );
+    call_ok(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload_chunk".into())),
+            ("data", Json::Str(base64::encode(&raw))),
+        ]),
+    );
+    let done = call_ok(&mut c, &Json::obj(vec![("op", Json::Str("upload_end".into()))]));
+    let handle = done.get("volume").as_str().unwrap().to_string();
+    let back = fetch_volume(&mut c, &handle);
+    // Oracle: the same decode the file loaders perform.
+    let mut want = vec![0.0f32; vals.len()];
+    Dtype::I16.decode_into(&raw, true, slope, inter, &mut want);
+    assert_eq!(back.data, want);
+    server.stop();
+}
+
+#[test]
+fn store_budget_evicts_lru_over_the_protocol() {
+    // Budget fits exactly two 8³ volumes (2 KiB each).
+    let one = 8 * 8 * 8 * 4;
+    let (server, _sched) = start_stack_with(ServerConfig {
+        store_bytes: 2 * one,
+        ..Default::default()
+    });
+    let mut c = Client::connect(&server.addr).unwrap();
+    let va = blob(Dims::new(8, 8, 8), 1.0, 1.0, 1.0, 9.0);
+    let vb = blob(Dims::new(8, 8, 8), 2.0, 2.0, 2.0, 9.0);
+    let vc = blob(Dims::new(8, 8, 8), 3.0, 3.0, 3.0, 9.0);
+    let (ha, _) = upload_volume(&mut c, &va);
+    let (hb, _) = upload_volume(&mut c, &vb);
+    // Touch A (fetch) so B becomes the LRU victim.
+    fetch_volume(&mut c, &ha);
+    let (hc, _) = upload_volume(&mut c, &vc);
+    // A survived, B evicted, C resident.
+    fetch_volume(&mut c, &ha);
+    fetch_volume(&mut c, &hc);
+    call_err(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("fetch".into())),
+            ("volume", Json::Str(hb.clone())),
+        ]),
+        "not_found",
+    );
+    // A volume that cannot fit at all is refused with backpressure.
+    call_err(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("upload".into())),
+            ("dims", Json::arr_usize(&[16, 16, 16])),
+        ]),
+        "backpressure",
+    );
+    server.stop();
+}
+
+#[test]
+fn interpolate_accepts_input_handles_and_stores_the_warped_output() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let v = blob(Dims::new(14, 12, 10), 7.0, 6.0, 5.0, 20.0);
+    let (handle, _) = upload_volume(&mut c, &v);
+    let r = call_ok(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("interpolate".into())),
+            ("input", Json::Str(handle.clone())),
+            ("tile", Json::Num(5.0)),
+            ("seed", Json::Num(3.0)),
+            ("engine", Json::Str("cpu:ttli".into())),
+        ]),
+    );
+    assert_eq!(r.get("voxels").as_usize(), Some(v.dims.count()));
+    let warped_handle = r.get("warped").as_str().expect("warped handle").to_string();
+    let warped = fetch_volume(&mut c, &warped_handle);
+    // Oracle: the same grid/seed evaluated and warped locally.
+    use ffdreg::bspline::{ControlGrid, Interpolator, Method};
+    let mut grid = ControlGrid::zeros(v.dims, [5, 5, 5]);
+    grid.randomize(3, 5.0);
+    let field = Method::Ttli.instance().interpolate(&grid, v.dims);
+    let want = ffdreg::volume::resample::warp(&v, &field);
+    assert_eq!(warped.data, want.data, "server-side warp matches local oracle");
+    // Handle plumbing errors.
+    call_err(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("interpolate".into())),
+            ("input", Json::Str("relative/path.nii".into())),
+        ]),
+        "bad_request",
+    );
+    call_err(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("interpolate".into())),
+            ("input", Json::Str("vol:doesnotexist".into())),
+        ]),
+        "not_found",
+    );
+    call_err(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("interpolate".into())),
+            ("input", Json::Str(handle)),
+            ("dims", Json::arr_usize(&[4, 4, 4])),
+        ]),
+        "bad_request",
+    );
+    server.stop();
+}
+
+#[test]
+fn fetch_chunk_bounds_are_validated() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let v = blob(Dims::new(6, 6, 6), 3.0, 3.0, 3.0, 9.0);
+    let (handle, _) = upload_volume(&mut c, &v);
+    call_err(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("fetch_chunk".into())),
+            ("volume", Json::Str(handle)),
+            ("chunk", Json::Num(99.0)),
+        ]),
+        "bad_request",
+    );
+    call_err(
+        &mut c,
+        &Json::obj(vec![("op", Json::Str("fetch_chunk".into())), ("chunk", Json::Num(0.0))]),
+        "bad_request",
+    );
+    server.stop();
+}
+
+#[test]
+fn warped_output_volume_is_reachable_without_any_server_path() {
+    // The full remote IGS loop minus registration: upload → deform →
+    // fetch, never touching the server's filesystem.
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let mut v = blob(Dims::new(10, 10, 18), 5.0, 5.0, 9.0, 16.0);
+    v.origin = [4.0, -2.0, 7.5];
+    let (h, _) = upload_volume(&mut c, &v);
+    let r = call_ok(
+        &mut c,
+        &Json::obj(vec![
+            ("op", Json::Str("interpolate".into())),
+            ("input", Json::Str(h)),
+            ("seed", Json::Num(11.0)),
+        ]),
+    );
+    let warped = fetch_volume(&mut c, r.get("warped").as_str().unwrap());
+    // warp() stamps the input's geometry onto the output.
+    assert_eq!(warped.origin, v.origin);
+    assert_eq!(warped.dims, v.dims);
+    server.stop();
+}
