@@ -11,12 +11,13 @@
 //! so the figure isolates SIMD gains from multi-core gains; the extra
 //! `TV tN vs t1` rows expose the multi-core scaling curve itself.
 //!
-//! Explicit-SIMD axis: pass `-- --simd scalar,sse2,avx2` to pin each
+//! Explicit-SIMD axis: pass `-- --simd scalar,sse2,avx2,avx512` to pin each
 //! vectorized scheme (TTLI/VT/VV) to explicit ISA paths and measure the
 //! scalar-vs-SIMD speedup directly (entries are clamped to what the
-//! hardware supports; `FFDREG_SIMD` provides the same override for the
-//! default run). With `--threads N,...` the sweep uses the first entry as
-//! the per-instance worker count.
+//! hardware supports, with a warning, and every row is labeled with the
+//! *effective* ISA that actually ran; `FFDREG_SIMD` provides the same
+//! override for the default run). With `--threads N,...` the sweep uses
+//! the first entry as the per-instance worker count.
 
 use ffdreg::bspline::exec::Pooled;
 use ffdreg::bspline::{ControlGrid, Interpolator, Method};
@@ -42,12 +43,18 @@ fn run_simd_sweep(spec: &str, vd: Dims, tiles: &[usize], threads: usize, sink: &
     for entry in spec.split(',') {
         match Isa::parse(entry) {
             Some(isa) => {
-                let isa = isa.clamp_to_hw();
+                // Clamp to the hardware (warning once), then dedup on the
+                // *effective* path — `--simd avx2,avx512` on an AVX2-only
+                // box measures avx2 once and labels it avx2, instead of
+                // measuring it twice under two names.
+                let isa = isa.clamp_to_hw_warn();
                 if !isas.contains(&isa) {
                     isas.push(isa);
                 }
             }
-            None => eprintln!("warning: unknown --simd entry '{entry}' (want scalar|sse2|avx2)"),
+            None => eprintln!(
+                "warning: unknown --simd entry '{entry}' (want scalar|sse2|avx2|avx512)"
+            ),
         }
     }
     if isas.is_empty() {
@@ -148,9 +155,10 @@ fn main() {
 
     if let Some(spec) = args.get("simd") {
         // The SIMD axis extends past the paper's 3–7 tile range: 8/12/16
-        // are the tiles where the 8-wide AVX2 rows run full vector steps
-        // (below that the masked-remainder path carries the speedup) —
-        // the "larger tiles fill more SIMD slots" trend of §3.5.
+        // are the tiles where the 8-wide AVX2 rows run full vector steps,
+        // and 16 is one full AVX-512 step (below that the masked-remainder
+        // path carries the speedup) — the "larger tiles fill more SIMD
+        // slots" trend of §3.5.
         let simd_tiles = [3usize, 4, 5, 6, 7, 8, 12, 16];
         run_simd_sweep(
             spec,

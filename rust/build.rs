@@ -1,0 +1,47 @@
+//! Build-time toolchain probe for the AVX-512 SIMD lane.
+//!
+//! The `_mm512_*` intrinsics and `#[target_feature(enable = "avx512f")]`
+//! stabilized in rustc 1.89; the crate's MSRV is older (see `rust-version`
+//! in Cargo.toml). Rather than bump the floor for one optional lane, the
+//! lane compiles only when the building toolchain is new enough: this
+//! script emits `cfg(ffdreg_avx512)` for rustc >= 1.89, and on older
+//! toolchains `util::simd::detect()` simply never reports `Isa::Avx512`,
+//! so requests clamp to AVX2 exactly like on non-AVX-512 hardware.
+//!
+//! `FFDREG_NO_AVX512=1` suppresses the lane on any toolchain (useful for
+//! A/B-ing the dispatch fallback itself).
+
+use std::process::Command;
+
+fn rustc_minor() -> Option<(u32, u32)> {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".into());
+    let out = Command::new(rustc).arg("--version").output().ok()?;
+    if !out.status.success() {
+        return None;
+    }
+    let text = String::from_utf8(out.stdout).ok()?;
+    // "rustc 1.89.0 (...)" / "rustc 1.90.0-nightly (...)"
+    let version = text.split_whitespace().nth(1)?;
+    let mut parts = version.split('.');
+    let major: u32 = parts.next()?.parse().ok()?;
+    let minor: u32 = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}
+
+fn main() {
+    // Declare the cfg so `unexpected_cfgs` (rustc >= 1.80) knows it; older
+    // cargos treat the unknown directive as inert build-script metadata.
+    println!("cargo:rustc-check-cfg=cfg(ffdreg_avx512)");
+    println!("cargo:rerun-if-changed=build.rs");
+    println!("cargo:rerun-if-env-changed=FFDREG_NO_AVX512");
+    if std::env::var_os("FFDREG_NO_AVX512").is_some() {
+        return;
+    }
+    match rustc_minor() {
+        Some((major, minor)) if major > 1 || (major == 1 && minor >= 89) => {
+            println!("cargo:rustc-cfg=ffdreg_avx512");
+        }
+        // Unknown or pre-1.89 toolchain: leave the lane compiled out.
+        _ => {}
+    }
+}

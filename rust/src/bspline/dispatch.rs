@@ -117,13 +117,17 @@ impl Method {
     }
 
     /// Instance pinned to a specific ISA path (clamped to what the
-    /// hardware supports) — the A/B axis of the fig7 scalar-vs-SIMD sweep
-    /// and the ISA-agreement tests. Methods without an explicit-SIMD
-    /// kernel ignore `isa` and return the default instance.
+    /// hardware supports, **warning once** when the request exceeds it) —
+    /// the A/B axis of the fig7 scalar-vs-SIMD sweep and the
+    /// ISA-agreement tests. The instance's `simd_isa()` reports the
+    /// *effective* (clamped) path, so CLI output and bench rows labeled
+    /// from it can never claim an ISA the kernels did not run. Methods
+    /// without an explicit-SIMD kernel ignore `isa` and return the
+    /// default instance.
     pub fn instance_with_isa(&self, isa: Isa) -> Box<dyn Interpolator + Send + Sync> {
         match self {
             Method::Ttli | Method::Vt | Method::Vv => {
-                Box::new(ForcedIsa { method: *self, isa: isa.clamp_to_hw() })
+                Box::new(ForcedIsa { method: *self, isa: isa.clamp_to_hw_warn() })
             }
             _ => self.instance(),
         }
@@ -205,6 +209,10 @@ mod tests {
             // A pinned instance reports its pin (clamped to hardware).
             let pinned = m.instance_with_isa(Isa::Scalar);
             assert_eq!(pinned.simd_isa(), Isa::Scalar, "{m:?} pinned");
+            // Requesting more than the machine (or toolchain) supports
+            // must label the *effective* path, never the request.
+            let over = m.instance_with_isa(Isa::Avx512);
+            assert_eq!(over.simd_isa(), Isa::Avx512.clamp_to_hw(), "{m:?} over-pin");
             // par_instance forwards the inner instance's report.
             assert_eq!(m.par_instance(2).simd_isa(), reported, "{m:?} pooled");
         }

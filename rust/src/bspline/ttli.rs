@@ -16,11 +16,14 @@
 //! evaluate their 27-lerp trees in lanes, with the gathered cube entries
 //! broadcast and the per-offset lerp fractions loaded from the LUT's
 //! de-interleaved columns. Rows narrower than the vector (tile sizes
-//! 3–7 on AVX2, and every border tile) run as a masked-remainder vector
-//! step over the LUT's padded columns with a partial store, so the SIMD
-//! unit is engaged for every tile size; each live lane computes exactly
-//! what a full-width step would, keeping every ISA path internally
-//! consistent (and chunked output bit-identical to whole-volume output).
+//! 3–7 on AVX2, everything up to 15 on AVX-512, and every border tile)
+//! run as one masked-remainder vector step — a predicated load/store
+//! pair ([`Simd::load_masked`]/[`Simd::store_masked`], native `k`-mask
+//! instructions on AVX-512, buffered on the narrower ISAs) covers
+//! exactly the live lanes — so the SIMD unit is engaged for every tile
+//! size; each live lane computes exactly what a full-width step would,
+//! keeping every ISA path internally consistent (and chunked output
+//! bit-identical to whole-volume output).
 
 use super::coeffs::LerpLut;
 use super::exec::{slab_index, FieldSlabMut, ZChunk};
@@ -143,21 +146,23 @@ unsafe fn fill_generic<S: Simd>(
                         if a < x_lim {
                             // Masked remainder: rows narrower than the
                             // vector (δ < WIDTH, and every border tile)
-                            // still run in lanes — the padded LUT columns
-                            // keep the loads in bounds, and only the live
-                            // lanes are stored. Each live lane computes
-                            // exactly what a full-width step would.
-                            let gx0 = S::load(&lx.g0[a..]);
-                            let gx1 = S::load(&lx.g1[a..]);
-                            let sx = S::load(&lx.s1[a..]);
+                            // still run in lanes — a predicated
+                            // load/store pair covers exactly the live
+                            // lanes (dead lanes are zeroed on load and
+                            // discarded on store). Each live lane
+                            // computes exactly what a full-width step
+                            // would, so live output is bit-identical to
+                            // the unmasked path.
                             let live = x_lim - a;
-                            let mut buf = [0.0f32; 8];
-                            S::store(&mut buf, ttli_component_v::<S>(&cx, gx0, gx1, sx, wy, wz));
-                            ox[row + a..row + x_lim].copy_from_slice(&buf[..live]);
-                            S::store(&mut buf, ttli_component_v::<S>(&cy, gx0, gx1, sx, wy, wz));
-                            oy[row + a..row + x_lim].copy_from_slice(&buf[..live]);
-                            S::store(&mut buf, ttli_component_v::<S>(&cz, gx0, gx1, sx, wy, wz));
-                            oz[row + a..row + x_lim].copy_from_slice(&buf[..live]);
+                            let gx0 = S::load_masked(&lx.g0[a..], live);
+                            let gx1 = S::load_masked(&lx.g1[a..], live);
+                            let sx = S::load_masked(&lx.s1[a..], live);
+                            let vx = ttli_component_v::<S>(&cx, gx0, gx1, sx, wy, wz);
+                            let vy = ttli_component_v::<S>(&cy, gx0, gx1, sx, wy, wz);
+                            let vz = ttli_component_v::<S>(&cz, gx0, gx1, sx, wy, wz);
+                            S::store_masked(&mut ox[row + a..], live, vx);
+                            S::store_masked(&mut oy[row + a..], live, vy);
+                            S::store_masked(&mut oz[row + a..], live, vz);
                         }
                     }
                 }
@@ -165,6 +170,12 @@ unsafe fn fill_generic<S: Simd>(
         }
         zb = zt;
     }
+}
+
+#[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
+#[target_feature(enable = "avx512f,avx2,fma")]
+unsafe fn fill_avx512(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
+    fill_generic::<simd::Avx512Isa>(grid, vol_dims, chunk, out)
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -191,7 +202,11 @@ pub(crate) fn fill(
     check_extent(grid, vol_dims);
     debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
     match isa.clamp_to_hw() {
-        // SAFETY: clamp_to_hw guarantees the CPU supports the chosen path.
+        // SAFETY: clamp_to_hw guarantees the CPU supports the chosen path
+        // (and Avx512 is only ever reported when build.rs compiled the
+        // lane in, so the `_` fallback below can never mislabel it).
+        #[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
+        Isa::Avx512 => unsafe { fill_avx512(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { fill_avx2(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
@@ -309,6 +324,33 @@ mod tests {
                 "{isa:?} vs f64 reference"
             );
             assert!(f.max_abs_diff(&scalar) < 1e-4, "{isa:?} vs scalar path");
+        }
+    }
+
+    #[test]
+    fn masked_remainder_edge_dims_match_scalar_bitwise_on_fused_isas() {
+        // nx around the widest lane count (16): sub-width rows, exactly one
+        // full step, one full step plus a 1-lane tail. Fused paths (scalar,
+        // AVX2, AVX-512) must agree bit for bit, masked remainders
+        // included; SSE2 double-rounds, so it only gets the tolerance.
+        use crate::volume::VectorField;
+        for nx in [1usize, 15, 16, 17] {
+            let vd = Dims::new(nx, 9, 7);
+            let mut g = ControlGrid::zeros(vd, [6, 4, 3]);
+            g.randomize(1000 + nx as u64, 4.0);
+            let mut scalar = VectorField::zeros(vd);
+            fill(Isa::Scalar, &g, vd, ZChunk::full(vd), FieldSlabMut::whole(&mut scalar));
+            for isa in simd::supported() {
+                let mut f = VectorField::zeros(vd);
+                fill(isa, &g, vd, ZChunk::full(vd), FieldSlabMut::whole(&mut f));
+                if isa.fused_mul_add() {
+                    assert_eq!(f.x, scalar.x, "{isa} x (nx={nx})");
+                    assert_eq!(f.y, scalar.y, "{isa} y (nx={nx})");
+                    assert_eq!(f.z, scalar.z, "{isa} z (nx={nx})");
+                } else {
+                    assert!(f.max_abs_diff(&scalar) < 1e-4, "{isa} (nx={nx})");
+                }
+            }
         }
     }
 }

@@ -12,9 +12,11 @@
 //! voxel of the row); only the per-voxel 3-lerp stage is lane-parallel, so
 //! that stage is the one written against the [`Simd`] API, with the LUT's
 //! de-interleaved `g0`/`g1`/`s1` columns loaded `WIDTH` lanes at a time.
-//! Rows narrower than the vector (tile sizes 3–7 on AVX2, and border
-//! tiles) run as one masked-remainder vector step over the padded columns
-//! with a partial store, so the SIMD unit is engaged at every tile size.
+//! Rows narrower than the vector (tile sizes 3–7 on AVX2, up to 15 on
+//! AVX-512, and border tiles) run as one masked-remainder vector step —
+//! a predicated load/store pair, native `k`-mask instructions on AVX-512
+//! — so the SIMD unit is engaged at every tile size and live lanes stay
+//! bit-identical to the unmasked path.
 
 use super::coeffs::LerpLut;
 use super::exec::{slab_index, FieldSlabMut, ZChunk};
@@ -124,23 +126,20 @@ unsafe fn fill_generic<S: Simd>(
                         if a < x_lim {
                             // Masked remainder: rows narrower than the
                             // vector (δ < WIDTH, and every border tile)
-                            // still run in lanes — padded LUT columns
-                            // keep the loads in bounds; only live lanes
-                            // are stored.
-                            let g0 = S::load(&lx.g0[a..]);
-                            let g1 = S::load(&lx.g1[a..]);
-                            let s = S::load(&lx.s1[a..]);
+                            // still run in lanes — a predicated
+                            // load/store pair covers exactly the live
+                            // lanes, which compute exactly what a
+                            // full-width step would.
                             let live = x_lim - a;
-                            let mut buf = [0.0f32; 8];
+                            let g0 = S::load_masked(&lx.g0[a..], live);
+                            let g1 = S::load_masked(&lx.g1[a..], live);
+                            let s = S::load_masked(&lx.s1[a..], live);
                             let vx = S::lerp(S::lerp(c0x, c1x, g0), S::lerp(c2x, c3x, g1), s);
-                            S::store(&mut buf, vx);
-                            ox[row + a..row + x_lim].copy_from_slice(&buf[..live]);
                             let vy = S::lerp(S::lerp(c0y, c1y, g0), S::lerp(c2y, c3y, g1), s);
-                            S::store(&mut buf, vy);
-                            oy[row + a..row + x_lim].copy_from_slice(&buf[..live]);
                             let vz = S::lerp(S::lerp(c0z, c1z, g0), S::lerp(c2z, c3z, g1), s);
-                            S::store(&mut buf, vz);
-                            oz[row + a..row + x_lim].copy_from_slice(&buf[..live]);
+                            S::store_masked(&mut ox[row + a..], live, vx);
+                            S::store_masked(&mut oy[row + a..], live, vy);
+                            S::store_masked(&mut oz[row + a..], live, vz);
                         }
                     }
                 }
@@ -148,6 +147,12 @@ unsafe fn fill_generic<S: Simd>(
         }
         zb = zt;
     }
+}
+
+#[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
+#[target_feature(enable = "avx512f,avx2,fma")]
+unsafe fn fill_avx512(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
+    fill_generic::<simd::Avx512Isa>(grid, vol_dims, chunk, out)
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -174,6 +179,8 @@ pub(crate) fn fill(
     debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
     match isa.clamp_to_hw() {
         // SAFETY: clamp_to_hw guarantees the CPU supports the chosen path.
+        #[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
+        Isa::Avx512 => unsafe { fill_avx512(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { fill_avx2(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
@@ -257,6 +264,29 @@ mod tests {
                 "{isa:?} vs f64 reference"
             );
             assert!(f.max_abs_diff(&scalar) < 1e-4, "{isa:?} vs scalar path");
+        }
+    }
+
+    #[test]
+    fn masked_remainder_edge_dims_match_scalar_bitwise_on_fused_isas() {
+        use crate::volume::VectorField;
+        for nx in [1usize, 15, 16, 17] {
+            let vd = Dims::new(nx, 9, 7);
+            let mut g = ControlGrid::zeros(vd, [6, 4, 3]);
+            g.randomize(2000 + nx as u64, 4.0);
+            let mut scalar = VectorField::zeros(vd);
+            fill(Isa::Scalar, &g, vd, ZChunk::full(vd), FieldSlabMut::whole(&mut scalar));
+            for isa in simd::supported() {
+                let mut f = VectorField::zeros(vd);
+                fill(isa, &g, vd, ZChunk::full(vd), FieldSlabMut::whole(&mut f));
+                if isa.fused_mul_add() {
+                    assert_eq!(f.x, scalar.x, "{isa} x (nx={nx})");
+                    assert_eq!(f.y, scalar.y, "{isa} y (nx={nx})");
+                    assert_eq!(f.z, scalar.z, "{isa} z (nx={nx})");
+                } else {
+                    assert!(f.max_abs_diff(&scalar) < 1e-4, "{isa} (nx={nx})");
+                }
+            }
         }
     }
 }

@@ -7,10 +7,11 @@
 //! voxel performs 7 *vector* lerps of width 8 plus the scalar 9th trilerp.
 //!
 //! On the explicit-SIMD layer (`util::simd`) the 8 sub-cube lanes map to
-//! one AVX2 register, two SSE2 registers, or eight scalar steps — the loop
-//! is written once over `8 / WIDTH` register chunks. The combining 9th
-//! trilerp uses the ISA-matched scalar lerp ([`Simd::lerp1`]), which keeps
-//! VV bit-identical to TTLI *within* each ISA path (they evaluate the same
+//! one AVX2 register, two SSE2 registers, eight scalar steps, or one
+//! half-masked AVX-512 register (a single predicated step with 8 live
+//! lanes — [`Simd::load_masked`]). The combining 9th trilerp uses the
+//! ISA-matched scalar lerp ([`Simd::lerp1`]), which keeps VV
+//! bit-identical to TTLI *within* each ISA path (they evaluate the same
 //! lerp tree).
 
 use super::coeffs::LerpLut;
@@ -51,17 +52,36 @@ unsafe fn vv_component_v<S: Simd>(
     let mut t = [0.0f32; 8];
     let mut k = 0;
     while k < 8 {
-        let vfx = S::load(&fx[k..]);
-        let vfy = S::load(&fy[k..]);
-        let vfz = S::load(&fz[k..]);
-        let x00 = S::lerp(S::load(&ln[0][k..]), S::load(&ln[1][k..]), vfx);
-        let x10 = S::lerp(S::load(&ln[2][k..]), S::load(&ln[3][k..]), vfx);
-        let x01 = S::lerp(S::load(&ln[4][k..]), S::load(&ln[5][k..]), vfx);
-        let x11 = S::lerp(S::load(&ln[6][k..]), S::load(&ln[7][k..]), vfx);
-        let y0 = S::lerp(x00, x10, vfy);
-        let y1 = S::lerp(x01, x11, vfy);
-        S::store(&mut t[k..], S::lerp(y0, y1, vfz));
-        k += S::WIDTH;
+        // `8 - k` sub-cube lanes remain. ISAs wider than that (AVX-512's
+        // 16 lanes) run them as one masked step; everything else takes the
+        // full-width branch. `S::WIDTH` is const, so the branch resolves
+        // at monomorphization time.
+        if S::WIDTH <= 8 - k {
+            let vfx = S::load(&fx[k..]);
+            let vfy = S::load(&fy[k..]);
+            let vfz = S::load(&fz[k..]);
+            let x00 = S::lerp(S::load(&ln[0][k..]), S::load(&ln[1][k..]), vfx);
+            let x10 = S::lerp(S::load(&ln[2][k..]), S::load(&ln[3][k..]), vfx);
+            let x01 = S::lerp(S::load(&ln[4][k..]), S::load(&ln[5][k..]), vfx);
+            let x11 = S::lerp(S::load(&ln[6][k..]), S::load(&ln[7][k..]), vfx);
+            let y0 = S::lerp(x00, x10, vfy);
+            let y1 = S::lerp(x01, x11, vfy);
+            S::store(&mut t[k..], S::lerp(y0, y1, vfz));
+            k += S::WIDTH;
+        } else {
+            let n = 8 - k;
+            let vfx = S::load_masked(&fx[k..], n);
+            let vfy = S::load_masked(&fy[k..], n);
+            let vfz = S::load_masked(&fz[k..], n);
+            let x00 = S::lerp(S::load_masked(&ln[0][k..], n), S::load_masked(&ln[1][k..], n), vfx);
+            let x10 = S::lerp(S::load_masked(&ln[2][k..], n), S::load_masked(&ln[3][k..], n), vfx);
+            let x01 = S::lerp(S::load_masked(&ln[4][k..], n), S::load_masked(&ln[5][k..], n), vfx);
+            let x11 = S::lerp(S::load_masked(&ln[6][k..], n), S::load_masked(&ln[7][k..], n), vfx);
+            let y0 = S::lerp(x00, x10, vfy);
+            let y1 = S::lerp(x01, x11, vfy);
+            S::store_masked(&mut t[k..], n, S::lerp(y0, y1, vfz));
+            k = 8;
+        }
     }
     // 9th trilerp combining the 8 lane results (scalar, ISA-matched
     // rounding so it agrees with TTLI's combine stage lane for lane).
@@ -137,6 +157,12 @@ unsafe fn fill_generic<S: Simd>(
     }
 }
 
+#[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
+#[target_feature(enable = "avx512f,avx2,fma")]
+unsafe fn fill_avx512(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
+    fill_generic::<simd::Avx512Isa>(grid, vol_dims, chunk, out)
+}
+
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn fill_avx2(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
@@ -161,6 +187,8 @@ pub(crate) fn fill(
     debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
     match isa.clamp_to_hw() {
         // SAFETY: clamp_to_hw guarantees the CPU supports the chosen path.
+        #[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
+        Isa::Avx512 => unsafe { fill_avx512(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
         Isa::Avx2 => unsafe { fill_avx2(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
@@ -225,6 +253,29 @@ mod tests {
             assert_eq!(a.x, b.x, "{isa:?}");
             assert_eq!(a.y, b.y, "{isa:?}");
             assert_eq!(a.z, b.z, "{isa:?}");
+        }
+    }
+
+    #[test]
+    fn masked_remainder_edge_dims_match_scalar_bitwise_on_fused_isas() {
+        use crate::volume::VectorField;
+        for nx in [1usize, 15, 16, 17] {
+            let vd = Dims::new(nx, 9, 7);
+            let mut g = ControlGrid::zeros(vd, [6, 4, 3]);
+            g.randomize(3000 + nx as u64, 4.0);
+            let mut scalar = VectorField::zeros(vd);
+            fill(Isa::Scalar, &g, vd, ZChunk::full(vd), FieldSlabMut::whole(&mut scalar));
+            for isa in simd::supported() {
+                let mut f = VectorField::zeros(vd);
+                fill(isa, &g, vd, ZChunk::full(vd), FieldSlabMut::whole(&mut f));
+                if isa.fused_mul_add() {
+                    assert_eq!(f.x, scalar.x, "{isa} x (nx={nx})");
+                    assert_eq!(f.y, scalar.y, "{isa} y (nx={nx})");
+                    assert_eq!(f.z, scalar.z, "{isa} z (nx={nx})");
+                } else {
+                    assert!(f.max_abs_diff(&scalar) < 1e-4, "{isa} (nx={nx})");
+                }
+            }
         }
     }
 

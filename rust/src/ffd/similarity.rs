@@ -49,10 +49,16 @@ pub fn ssd(reference: &Volume, warped: &Volume) -> f64 {
 
 /// Normalized cross-correlation (global). Same deterministic per-slice
 /// reduction scheme as [`ssd`].
-pub fn ncc(reference: &Volume, warped: &Volume) -> f64 {
+///
+/// Returns `None` when the correlation is undefined — empty volumes, or
+/// either image having zero variance (a constant image correlates with
+/// nothing). `Some(r)` with `r ≈ 0` means the images are genuinely
+/// uncorrelated; the two cases used to share the `0.0` sentinel, which let
+/// registration reports mistake a constant warp for "uncorrelated".
+pub fn ncc(reference: &Volume, warped: &Volume) -> Option<f64> {
     assert_eq!(reference.dims, warped.dims);
     if reference.data.is_empty() {
-        return 0.0;
+        return None;
     }
     let n = reference.data.len() as f64;
     let dims = reference.dims;
@@ -91,9 +97,9 @@ pub fn ncc(reference: &Volume, warped: &Volume) -> f64 {
         vw += m[2];
     }
     if vr <= 0.0 || vw <= 0.0 {
-        return 0.0;
+        return None;
     }
-    cov / (vr * vw).sqrt()
+    Some(cov / (vr * vw).sqrt())
 }
 
 /// Voxelwise SSD gradient with respect to the deformation field:
@@ -163,7 +169,33 @@ mod tests {
         for d in &mut w.data {
             *d = 3.0 * *d + 7.0;
         }
-        assert!((ncc(&v, &w) - 1.0).abs() < 1e-9);
+        let r = ncc(&v, &w).expect("both images have variance");
+        assert!((r - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ncc_distinguishes_degenerate_from_uncorrelated() {
+        let v = ramp();
+        // Constant image: zero variance → correlation undefined, in either
+        // argument position.
+        let flat = Volume::from_fn(Dims::new(10, 10, 10), [1.0; 3], |_, _, _| 4.25);
+        assert_eq!(ncc(&v, &flat), None);
+        assert_eq!(ncc(&flat, &v), None);
+        // Empty volumes: undefined too.
+        let empty = Volume::from_fn(Dims::new(0, 0, 0), [1.0; 3], |_, _, _| 0.0);
+        assert_eq!(ncc(&empty, &empty), None);
+        // A checkerboard against a smooth ramp: both have variance, the
+        // correlation is defined and genuinely near zero — Some(≈0), which
+        // must now be distinguishable from the degenerate cases above.
+        let checker = Volume::from_fn(Dims::new(10, 10, 10), [1.0; 3], |x, y, z| {
+            if (x + y + z) % 2 == 0 {
+                1.0
+            } else {
+                -1.0
+            }
+        });
+        let r = ncc(&v, &checker).expect("both images have variance");
+        assert!(r.abs() < 0.2, "checker vs ramp should be ~uncorrelated, got {r}");
     }
 
     #[test]

@@ -191,7 +191,7 @@ fn cmd_interpolate(args: &Args) -> Result<(), Error> {
         String::new()
     };
     // Which explicit-SIMD path the kernels selected (runtime-detected,
-    // overridable with FFDREG_SIMD=scalar|sse2|avx2 for A/B runs).
+    // overridable with FFDREG_SIMD=scalar|sse2|avx2|avx512 for A/B runs).
     let simd_label = if method.simd_isa().is_some() {
         format!(" simd {}", imp.simd_isa())
     } else {

@@ -128,7 +128,8 @@ mod tests {
         let (_, field) = pneumoperitoneum(&vol, [5, 5, 5], &PneumoParams::default());
         let intra = acquire_intraop(&vol, &field, 3, 0.01);
         assert_ne!(intra.data, vol.data);
-        let c = crate::ffd::similarity::ncc(&vol, &intra);
+        let c = crate::ffd::similarity::ncc(&vol, &intra)
+            .expect("phantom pair is non-degenerate");
         assert!(c > 0.5, "still the same anatomy, ncc {c}");
         assert!(c < 0.9999, "but visibly deformed, ncc {c}");
     }

@@ -143,9 +143,13 @@ fn format_cell(v: f64) -> String {
 
 /// The shared `--json <path>` sink every bench harness carries: a flat list
 /// of per-measurement records written as `BENCH_<name>.json`, so CI and the
-/// perf-trajectory tooling consume benches without scraping the text
-/// tables. Each record is
-/// `{method, dims:[x,y,z], threads, simd, ns_per_voxel, ...extras}`.
+/// perf-trajectory tooling (`scripts/perf_compare.py`) consume benches
+/// without scraping the text tables. The document is
+/// `{bench, skipped, records: [...]}` where each record is
+/// `{method, dims:[x,y,z], threads, simd, ns_per_voxel, ...extras}`;
+/// `skipped` counts records whose non-finite `ns_per_voxel` was dropped, so
+/// a downstream gate can tell "nothing measured" from "measurements were
+/// discarded".
 ///
 /// `<path>` is a directory (the file lands inside it as
 /// `BENCH_<name>.json`) unless it already ends in `.json`, in which case it
@@ -154,6 +158,7 @@ pub struct BenchJson {
     name: String,
     dest: Option<PathBuf>,
     records: Vec<Json>,
+    skipped: usize,
 }
 
 impl BenchJson {
@@ -163,6 +168,7 @@ impl BenchJson {
             name: name.to_string(),
             dest: dest.map(PathBuf::from),
             records: Vec::new(),
+            skipped: 0,
         }
     }
 
@@ -212,6 +218,10 @@ impl BenchJson {
         ];
         if ns_per_voxel.is_finite() {
             fields.push(("ns_per_voxel", Json::Num(ns_per_voxel)));
+        } else {
+            // The record stays (its extras may matter) but the dropped
+            // timing is counted, so gates see the omission explicitly.
+            self.skipped += 1;
         }
         for &(k, v) in extra {
             fields.push((k, Json::Num(v)));
@@ -219,37 +229,53 @@ impl BenchJson {
         self.records.push(Json::obj(fields));
     }
 
-    /// Write `BENCH_<name>.json`; returns the path on success. Inert (and
-    /// `None`) when `--json` was not given.
-    pub fn finish(&self) -> Option<PathBuf> {
-        let dest = self.dest.as_ref()?;
+    /// How many non-finite `ns_per_voxel` values were dropped so far.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    /// Write `BENCH_<name>.json`; `Ok(None)` when `--json` was not given,
+    /// `Err` on any filesystem failure — callers decide whether that is
+    /// fatal ([`Self::finish`] makes it so).
+    pub fn try_finish(&self) -> std::io::Result<Option<PathBuf>> {
+        let Some(dest) = self.dest.as_ref() else {
+            return Ok(None);
+        };
         let path = if dest.extension().map(|e| e == "json").unwrap_or(false) {
             if let Some(parent) = dest.parent().filter(|p| !p.as_os_str().is_empty()) {
-                if let Err(e) = std::fs::create_dir_all(parent) {
-                    eprintln!("  (could not create bench-json dir {}: {e})", parent.display());
-                    return None;
-                }
+                std::fs::create_dir_all(parent)?;
             }
             dest.clone()
         } else {
-            if let Err(e) = std::fs::create_dir_all(dest) {
-                eprintln!("  (could not create bench-json dir {}: {e})", dest.display());
-                return None;
-            }
+            std::fs::create_dir_all(dest)?;
             dest.join(format!("BENCH_{}.json", self.name))
         };
         let doc = Json::obj(vec![
             ("bench", Json::Str(self.name.clone())),
+            ("skipped", Json::Num(self.skipped as f64)),
             ("records", Json::Arr(self.records.clone())),
         ]);
-        match std::fs::write(&path, doc.to_string_pretty()) {
-            Ok(()) => {
-                println!("  bench-json: wrote {} records to {}", self.records.len(), path.display());
-                Some(path)
-            }
+        std::fs::write(&path, doc.to_string_pretty())?;
+        println!(
+            "  bench-json: wrote {} records ({} skipped values) to {}",
+            self.records.len(),
+            self.skipped,
+            path.display()
+        );
+        Ok(Some(path))
+    }
+
+    /// Write `BENCH_<name>.json`; returns the path on success and `None`
+    /// when `--json` was not given. A write failure is **fatal** (exit 1):
+    /// a bench asked to persist records must not exit successfully without
+    /// them, or a downstream perf gate reading the artifact passes
+    /// vacuously on the missing file.
+    pub fn finish(&self) -> Option<PathBuf> {
+        match self.try_finish() {
+            Ok(p) => p,
             Err(e) => {
-                eprintln!("  (could not write {}: {e})", path.display());
-                None
+                eprintln!("error: could not write bench-json for '{}': {e}", self.name);
+                std::process::exit(1);
             }
         }
     }
@@ -321,10 +347,31 @@ mod tests {
         assert_eq!(recs.len(), 2);
         assert_eq!(recs[0].get("method").as_str(), Some("ttli"));
         assert_eq!(recs[0].get("ns_per_voxel").as_f64(), Some(1.25));
-        // NaN timing omitted, extras kept.
+        // NaN timing omitted, extras kept — and the drop counted.
         assert!(recs[1].get("ns_per_voxel").as_f64().is_none());
         assert_eq!(recs[1].get("speedup").as_f64(), Some(3.5));
         assert_eq!(recs[1].get("threads").as_usize(), Some(4));
+        assert_eq!(doc.get("skipped").as_usize(), Some(1));
+        assert_eq!(on.skipped(), 1);
+    }
+
+    #[test]
+    fn bench_json_counts_skipped_and_surfaces_write_errors() {
+        let dir = std::env::temp_dir().join("ffdreg-benchjson-test3");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Destination nested under an existing *file*: the directory can
+        // never be created, so try_finish must report the error instead of
+        // quietly returning as if nothing had been requested.
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, b"not a dir").unwrap();
+        let dest = blocker.join("sub");
+        let mut b = BenchJson::new("unit_err", dest.to_str());
+        b.record("ttli", [4, 4, 4], 1, "scalar", f64::NAN);
+        b.record("ttli", [4, 4, 4], 1, "scalar", f64::INFINITY);
+        b.record("ttli", [4, 4, 4], 1, "scalar", 2.0);
+        assert_eq!(b.skipped(), 2);
+        assert!(b.try_finish().is_err());
     }
 
     #[test]

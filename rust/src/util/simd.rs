@@ -9,7 +9,13 @@
 //!   fallback that keeps non-x86 targets and miri-style debugging working;
 //! * `Sse2Isa` — 4 lanes of SSE2 (`std::arch::x86_64`), the x86_64
 //!   baseline every 64-bit x86 CPU has; no FMA, so lerps round twice;
-//! * `Avx2Isa` — 8 lanes of AVX2 + FMA, fused single-rounding lerps.
+//! * `Avx2Isa` — 8 lanes of AVX2 + FMA, fused single-rounding lerps;
+//! * `Avx512Isa` — 16 lanes of AVX-512F, fused, with *native masked*
+//!   loads/stores ([`Simd::load_masked`]/[`Simd::store_masked`]) so
+//!   remainder rows run as one predicated vector step instead of relying
+//!   on padded LUT columns. Compiled only on toolchains that stabilized
+//!   the AVX-512 intrinsics (rustc ≥ 1.89 — see `build.rs`); elsewhere
+//!   [`detect`] simply tops out at AVX2.
 //!
 //! Kernels are written once as `#[inline(always)]` generics over [`Simd`]
 //! and monomorphized inside `#[target_feature]` wrappers (see
@@ -17,15 +23,20 @@
 //! intrinsics — codegens with the wrapper's ISA enabled. Which wrapper runs
 //! is a *runtime* decision: [`detect`] probes the CPU once via
 //! `is_x86_feature_detected!`, and [`active`] applies the
-//! `FFDREG_SIMD=scalar|sse2|avx2` override (clamped to what the hardware
-//! supports) for A/B testing.
+//! `FFDREG_SIMD=scalar|sse2|avx2|avx512` override (clamped to what the
+//! hardware supports) for A/B testing. Clamping warns once per process and
+//! every label downstream (CLI, bench rows) reports the *effective* path —
+//! a record must never claim an ISA the kernels did not run.
 //!
 //! Accuracy contract (tested in `proptest_bsi.rs`): every ISA path stays
-//! within the existing tolerance against the f64 reference. Paths are NOT
-//! bit-identical to each other — SSE2 has no FMA, so its lerps legitimately
-//! round differently — but *within* one ISA path, chunked output remains
-//! bit-identical to whole-volume output, and scalar tail voxels match what
-//! the vector lanes would have produced ([`Simd::lerp1`]).
+//! within the existing tolerance against the f64 reference. The fused
+//! paths (scalar, AVX2, AVX-512 — [`Isa::fused_mul_add`]) evaluate the
+//! identical lanewise lerp tree and are **bit-identical to each other**;
+//! SSE2 has no FMA, so its lerps legitimately round differently. *Within*
+//! one ISA path, chunked output remains bit-identical to whole-volume
+//! output, masked-remainder lanes compute exactly what full-width lanes
+//! would, and scalar tail voxels match what the vector lanes would have
+//! produced ([`Simd::lerp1`]).
 
 use std::sync::OnceLock;
 
@@ -40,6 +51,10 @@ pub enum Isa {
     Sse2 = 1,
     /// AVX2 + FMA, 8 lanes, fused multiply-add.
     Avx2 = 2,
+    /// AVX-512F, 16 lanes, fused multiply-add, native masked tails. The
+    /// variant always exists; [`detect`] only ever reports it when both
+    /// the CPU and the building toolchain support the lane (`build.rs`).
+    Avx512 = 3,
 }
 
 impl Isa {
@@ -49,6 +64,7 @@ impl Isa {
             Isa::Scalar => "scalar",
             Isa::Sse2 => "sse2",
             Isa::Avx2 => "avx2",
+            Isa::Avx512 => "avx512",
         }
     }
 
@@ -58,6 +74,7 @@ impl Isa {
             "scalar" | "none" | "off" => Some(Isa::Scalar),
             "sse2" | "sse" => Some(Isa::Sse2),
             "avx2" | "avx" => Some(Isa::Avx2),
+            "avx512" | "avx512f" => Some(Isa::Avx512),
             _ => None,
         }
     }
@@ -65,6 +82,36 @@ impl Isa {
     /// Clamp a requested ISA to what this machine can actually execute.
     pub fn clamp_to_hw(self) -> Isa {
         self.min(detect())
+    }
+
+    /// Clamp like [`Isa::clamp_to_hw`], warning once per process when the
+    /// request exceeds the hardware (or the toolchain, for AVX-512), so
+    /// CLI output and bench labels can't silently claim an ISA the
+    /// kernels never ran. Callers must label results with the *returned*
+    /// (effective) ISA, not the requested one.
+    pub fn clamp_to_hw_warn(self) -> Isa {
+        let eff = self.clamp_to_hw();
+        if eff != self {
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                eprintln!(
+                    "warning: requested SIMD isa '{}' unavailable here (best: '{}'); \
+                     running and labeling '{}'",
+                    self,
+                    detect(),
+                    eff
+                );
+            });
+        }
+        eff
+    }
+
+    /// Whether this ISA's `mul_add` (and hence `lerp`/`lerp1`) rounds once
+    /// (fused). All fused paths — scalar, AVX2, AVX-512 — evaluate the
+    /// same lanewise expression tree and are bit-identical to each other;
+    /// SSE2 has no FMA and rounds twice.
+    pub fn fused_mul_add(self) -> bool {
+        !matches!(self, Isa::Sse2)
     }
 }
 
@@ -76,6 +123,16 @@ impl std::fmt::Display for Isa {
 
 #[cfg(target_arch = "x86_64")]
 fn detect_impl() -> Isa {
+    // The AVX-512 probe is compiled out on pre-1.89 toolchains (build.rs),
+    // where the lane's kernels don't exist either — requests then clamp to
+    // AVX2 exactly as on non-AVX-512 hardware.
+    #[cfg(ffdreg_avx512)]
+    if std::is_x86_feature_detected!("avx512f")
+        && std::is_x86_feature_detected!("avx2")
+        && std::is_x86_feature_detected!("fma")
+    {
+        return Isa::Avx512;
+    }
     if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
         Isa::Avx2
     } else {
@@ -106,19 +163,25 @@ pub fn supported() -> Vec<Isa> {
     if best >= Isa::Avx2 {
         out.push(Isa::Avx2);
     }
+    if best >= Isa::Avx512 {
+        out.push(Isa::Avx512);
+    }
     out
 }
 
 /// The process-wide active ISA: hardware detection, overridden by
-/// `FFDREG_SIMD=scalar|sse2|avx2` (clamped to the hardware; unknown values
-/// are ignored with a warning). Cached at first use.
+/// `FFDREG_SIMD=scalar|sse2|avx2|avx512` (clamped to the hardware, warning
+/// once when clamped; unknown values are ignored with a warning). Cached
+/// at first use.
 pub fn active() -> Isa {
     static ACTIVE: OnceLock<Isa> = OnceLock::new();
     *ACTIVE.get_or_init(|| match std::env::var("FFDREG_SIMD") {
         Ok(v) => match Isa::parse(&v) {
-            Some(req) => req.clamp_to_hw(),
+            Some(req) => req.clamp_to_hw_warn(),
             None => {
-                eprintln!("warning: FFDREG_SIMD='{v}' not one of scalar|sse2|avx2; ignoring");
+                eprintln!(
+                    "warning: FFDREG_SIMD='{v}' not one of scalar|sse2|avx2|avx512; ignoring"
+                );
                 detect()
             }
         },
@@ -157,6 +220,38 @@ pub trait Simd {
     /// # Safety
     /// `p.len() >= Self::WIDTH`, and the CPU must support [`Self::ISA`].
     unsafe fn store(p: &mut [f32], v: Self::V);
+
+    /// Load the first `n` lanes from `p`; lanes `n..WIDTH` are zero. Live
+    /// lanes are bit-identical to a full [`Self::load`]. The default goes
+    /// through a stack buffer; AVX-512 overrides it with a native
+    /// predicated load, which is what lets remainder rows run as one
+    /// masked vector step instead of leaning on padded LUT columns.
+    ///
+    /// # Safety
+    /// `p.len() >= n`, `n <= Self::WIDTH`, and the CPU must support
+    /// [`Self::ISA`].
+    #[inline(always)]
+    unsafe fn load_masked(p: &[f32], n: usize) -> Self::V {
+        debug_assert!(n <= Self::WIDTH && Self::WIDTH <= 16);
+        let mut buf = [0.0f32; 16];
+        buf[..n].copy_from_slice(&p[..n]);
+        Self::load(&buf)
+    }
+
+    /// Store the first `n` lanes of `v` to `p`; memory past `n` is left
+    /// untouched. The default goes through a stack buffer; AVX-512
+    /// overrides it with a native predicated store.
+    ///
+    /// # Safety
+    /// `p.len() >= n`, `n <= Self::WIDTH`, and the CPU must support
+    /// [`Self::ISA`].
+    #[inline(always)]
+    unsafe fn store_masked(p: &mut [f32], n: usize, v: Self::V) {
+        debug_assert!(n <= Self::WIDTH && Self::WIDTH <= 16);
+        let mut buf = [0.0f32; 16];
+        Self::store(&mut buf, v);
+        p[..n].copy_from_slice(&buf[..n]);
+    }
 
     /// Lanewise `a - b`.
     ///
@@ -313,10 +408,73 @@ mod x86 {
             t.mul_add(b - a, a)
         }
     }
+
+    /// AVX-512F: 16 lanes, fused multiply-add (same rounding as scalar
+    /// `f32::mul_add` and AVX2), native masked loads/stores for remainder
+    /// rows. Only compiled on toolchains with stable AVX-512 intrinsics
+    /// (`cfg(ffdreg_avx512)`, emitted by `build.rs` for rustc >= 1.89).
+    #[cfg(ffdreg_avx512)]
+    pub struct Avx512Isa;
+
+    #[cfg(ffdreg_avx512)]
+    impl Simd for Avx512Isa {
+        type V = __m512;
+        const WIDTH: usize = 16;
+        const ISA: Isa = Isa::Avx512;
+
+        #[inline(always)]
+        unsafe fn splat(x: f32) -> __m512 {
+            _mm512_set1_ps(x)
+        }
+
+        #[inline(always)]
+        unsafe fn load(p: &[f32]) -> __m512 {
+            debug_assert!(p.len() >= 16);
+            _mm512_loadu_ps(p.as_ptr())
+        }
+
+        #[inline(always)]
+        unsafe fn store(p: &mut [f32], v: __m512) {
+            debug_assert!(p.len() >= 16);
+            _mm512_storeu_ps(p.as_mut_ptr(), v)
+        }
+
+        #[inline(always)]
+        unsafe fn load_masked(p: &[f32], n: usize) -> __m512 {
+            debug_assert!(n <= 16 && p.len() >= n);
+            let mask = ((1u32 << n) - 1) as __mmask16;
+            _mm512_maskz_loadu_ps(mask, p.as_ptr())
+        }
+
+        #[inline(always)]
+        unsafe fn store_masked(p: &mut [f32], n: usize, v: __m512) {
+            debug_assert!(n <= 16 && p.len() >= n);
+            let mask = ((1u32 << n) - 1) as __mmask16;
+            _mm512_mask_storeu_ps(p.as_mut_ptr(), mask, v)
+        }
+
+        #[inline(always)]
+        unsafe fn sub(a: __m512, b: __m512) -> __m512 {
+            _mm512_sub_ps(a, b)
+        }
+
+        #[inline(always)]
+        unsafe fn mul_add(a: __m512, b: __m512, c: __m512) -> __m512 {
+            _mm512_fmadd_ps(a, b, c)
+        }
+
+        #[inline(always)]
+        fn lerp1(a: f32, b: f32, t: f32) -> f32 {
+            t.mul_add(b - a, a)
+        }
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
 pub use x86::{Avx2Isa, Sse2Isa};
+
+#[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
+pub use x86::Avx512Isa;
 
 #[cfg(test)]
 mod tests {
@@ -324,11 +482,12 @@ mod tests {
 
     #[test]
     fn parse_and_name_round_trip() {
-        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2] {
+        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Avx512] {
             assert_eq!(Isa::parse(isa.name()), Some(isa));
         }
         assert_eq!(Isa::parse("AVX2"), Some(Isa::Avx2));
         assert_eq!(Isa::parse(" sse2 "), Some(Isa::Sse2));
+        assert_eq!(Isa::parse("avx512f"), Some(Isa::Avx512));
         assert_eq!(Isa::parse("neon"), None);
     }
 
@@ -336,15 +495,27 @@ mod tests {
     fn ordering_matches_width_hierarchy() {
         assert!(Isa::Scalar < Isa::Sse2);
         assert!(Isa::Sse2 < Isa::Avx2);
+        assert!(Isa::Avx2 < Isa::Avx512);
         assert_eq!(Isa::Avx2.min(Isa::Sse2), Isa::Sse2);
     }
 
     #[test]
     fn clamp_never_exceeds_hardware() {
-        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2] {
+        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Avx512] {
             assert!(isa.clamp_to_hw() <= detect());
+            // The warning variant must agree with the silent one — it only
+            // adds the one-shot diagnostic, never changes the result.
+            assert_eq!(isa.clamp_to_hw_warn(), isa.clamp_to_hw());
         }
         assert_eq!(Isa::Scalar.clamp_to_hw(), Isa::Scalar);
+    }
+
+    #[test]
+    fn fused_flag_partitions_isas() {
+        assert!(Isa::Scalar.fused_mul_add());
+        assert!(!Isa::Sse2.fused_mul_add());
+        assert!(Isa::Avx2.fused_mul_add());
+        assert!(Isa::Avx512.fused_mul_add());
     }
 
     #[test]
@@ -379,9 +550,9 @@ mod tests {
     #[cfg(target_arch = "x86_64")]
     #[test]
     fn x86_lanes_match_their_scalar_lerp1() {
-        let a: Vec<f32> = (0..8).map(|i| i as f32 * 0.7 - 2.0).collect();
-        let b: Vec<f32> = (0..8).map(|i| 3.0 - i as f32 * 0.35).collect();
-        let t: Vec<f32> = (0..8).map(|i| i as f32 / 8.0).collect();
+        let a: Vec<f32> = (0..16).map(|i| i as f32 * 0.7 - 2.0).collect();
+        let b: Vec<f32> = (0..16).map(|i| 3.0 - i as f32 * 0.35).collect();
+        let t: Vec<f32> = (0..16).map(|i| i as f32 / 16.0).collect();
 
         if detect() >= Isa::Sse2 {
             let mut out = [0.0f32; 4];
@@ -395,6 +566,55 @@ mod tests {
             lerp_via::<Avx2Isa>(&a, &b, &t, &mut out);
             for l in 0..8 {
                 assert_eq!(out[l], Avx2Isa::lerp1(a[l], b[l], t[l]), "avx2 lane {l}");
+            }
+        }
+        #[cfg(ffdreg_avx512)]
+        if detect() >= Isa::Avx512 {
+            let mut out = [0.0f32; 16];
+            lerp_via::<Avx512Isa>(&a, &b, &t, &mut out);
+            for l in 0..16 {
+                assert_eq!(out[l], Avx512Isa::lerp1(a[l], b[l], t[l]), "avx512 lane {l}");
+                // Fused-path bit-identity: avx512 lanes must also equal
+                // the scalar oracle, not just their own lerp1.
+                assert_eq!(out[l], ScalarIsa::lerp1(a[l], b[l], t[l]), "avx512 vs scalar {l}");
+            }
+        }
+    }
+
+    /// Masked load→store round-trip for one ISA: live lanes bit-identical
+    /// to the source, memory past `n` untouched (callers gate on
+    /// `detect()` so the intrinsics are safe to execute).
+    fn check_masked<S: Simd>() {
+        let src: Vec<f32> = (0..16).map(|i| i as f32 * 1.25 - 3.0).collect();
+        for n in 0..=S::WIDTH {
+            let mut out = vec![-7.0f32; 16];
+            unsafe {
+                let v = S::load_masked(&src, n);
+                S::store_masked(&mut out, n, v);
+            }
+            for l in 0..n {
+                assert_eq!(out[l], src[l], "{} live lane {l} (n={n})", S::ISA);
+            }
+            for l in n..16 {
+                assert_eq!(out[l], -7.0, "{} dead lane {l} (n={n})", S::ISA);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_ops_round_trip_live_lanes_only() {
+        check_masked::<ScalarIsa>();
+        #[cfg(target_arch = "x86_64")]
+        {
+            if detect() >= Isa::Sse2 {
+                check_masked::<Sse2Isa>();
+            }
+            if detect() >= Isa::Avx2 {
+                check_masked::<Avx2Isa>();
+            }
+            #[cfg(ffdreg_avx512)]
+            if detect() >= Isa::Avx512 {
+                check_masked::<Avx512Isa>();
             }
         }
     }

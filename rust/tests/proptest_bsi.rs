@@ -146,6 +146,54 @@ fn prop_simd_isa_paths_agree() {
 }
 
 #[test]
+fn prop_fused_isa_paths_bitwise_equal_scalar() {
+    // The acceptance bar for the AVX-512 lane: `FFDREG_SIMD=avx512` (and
+    // avx2) must be *bitwise* identical to `FFDREG_SIMD=scalar` for all
+    // eight schemes — the fused paths evaluate the same lanewise lerp
+    // tree, so not even the last ulp may move. SSE2 is the documented
+    // exception (no FMA) and is excluded by `fused_mul_add()`. Non-SIMD
+    // methods ignore the pin, which makes the property trivially — and
+    // intentionally — true for them too.
+    check("fused-isa-bitwise", 0xF05ED, 10, |g| {
+        let (grid, vd) = arbitrary_case(g);
+        for m in Method::ALL {
+            let scalar = m.instance_with_isa(Isa::Scalar).interpolate(&grid, vd);
+            for isa in simd::supported() {
+                if !isa.fused_mul_add() {
+                    continue;
+                }
+                let f = m.instance_with_isa(isa).interpolate(&grid, vd);
+                if f.x != scalar.x || f.y != scalar.y || f.z != scalar.z {
+                    return Err(format!("{m:?}/{isa:?} not bitwise equal to scalar"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn masked_remainder_edge_dims_bitwise_equal_scalar() {
+    // nx straddling the widest lane count (16): sub-width rows (1, 15),
+    // an exact multiple (16), and a full step plus a one-lane tail (17).
+    // The masked-remainder path may not cost a single bit on any scheme.
+    for nx in [1usize, 15, 16, 17] {
+        let vd = Dims::new(nx, 9, 7);
+        let mut grid = ControlGrid::zeros(vd, [6, 4, 3]);
+        grid.randomize(9000 + nx as u64, 5.0);
+        for m in Method::ALL {
+            let scalar = m.instance_with_isa(Isa::Scalar).interpolate(&grid, vd);
+            for isa in simd::supported().into_iter().filter(|i| i.fused_mul_add()) {
+                let f = m.instance_with_isa(isa).interpolate(&grid, vd);
+                assert_eq!(f.x, scalar.x, "{m:?}/{isa:?} x (nx={nx})");
+                assert_eq!(f.y, scalar.y, "{m:?}/{isa:?} y (nx={nx})");
+                assert_eq!(f.z, scalar.z, "{m:?}/{isa:?} z (nx={nx})");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_scattered_eval_entry_points_agree_at_boundaries() {
     use ffdreg::bspline::scattered::{eval_at, eval_batch, Point};
     check("scattered-boundary", 0x5CA77, 20, |g| {

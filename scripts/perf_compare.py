@@ -1,0 +1,190 @@
+#!/usr/bin/env python3
+"""Perf-regression gate over BENCH_*.json artifacts.
+
+Compares the ns-per-voxel records of the current bench run against a
+baseline run (typically the previous CI run's downloaded artifact) and
+fails on regression beyond a noise threshold. Records are keyed by
+(bench, method, dims, threads, simd, tile); duplicate keys within a run
+are min-aggregated (the fastest observation is the least noisy).
+
+Exit codes:
+  0  no regression beyond the threshold, or no baseline yet (loud skip),
+     or --bless was given.
+  1  at least one regression beyond the threshold, or a vacuous run: the
+     baseline has comparable records but the current run matched none of
+     them (e.g. the bench silently wrote nothing — exactly the failure
+     mode the gate exists to catch).
+  2  usage / unreadable input.
+
+The bench documents carry an explicit "skipped" count (records whose
+non-finite ns_per_voxel was dropped by the harness); it is reported here
+so a run that measured nothing cannot masquerade as a clean pass.
+
+No third-party dependencies — stdlib only.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def load_run(directory):
+    """Return ({key: ns_per_voxel}, total_records, total_skipped, files).
+
+    key = (bench, method, "x×y×z", threads, simd, tile-or-"-").
+    Records without a finite ns_per_voxel are ignored (the harness counts
+    them in "skipped").
+    """
+    table = {}
+    total_records = 0
+    total_skipped = 0
+    files = sorted(glob.glob(os.path.join(directory, "**", "BENCH_*.json"), recursive=True))
+    for path in files:
+        try:
+            with open(path, encoding="utf-8") as fh:
+                doc = json.load(fh)
+        except (OSError, ValueError) as exc:
+            print(f"error: cannot read {path}: {exc}", file=sys.stderr)
+            sys.exit(2)
+        bench = doc.get("bench", os.path.basename(path))
+        skipped = int(doc.get("skipped", 0))
+        total_skipped += skipped
+        records = doc.get("records", [])
+        for rec in records:
+            total_records += 1
+            ns = rec.get("ns_per_voxel")
+            if not isinstance(ns, (int, float)) or not ns == ns or ns in (float("inf"), float("-inf")):
+                continue
+            dims = rec.get("dims", [])
+            key = (
+                bench,
+                str(rec.get("method", "?")),
+                "x".join(str(d) for d in dims),
+                int(rec.get("threads", 0)),
+                str(rec.get("simd", "-")),
+                str(rec.get("tile", "-")),
+            )
+            prev = table.get(key)
+            if prev is None or ns < prev:
+                table[key] = ns
+        if skipped:
+            print(f"  note: {os.path.basename(path)} reports {skipped} skipped (non-finite) values")
+    return table, total_records, total_skipped, files
+
+
+def fmt_key(key):
+    bench, method, dims, threads, simd, tile = key
+    return f"{bench} | {method} | {dims} | t{threads} | {simd} | tile {tile}"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--baseline", required=True, help="directory with the previous run's BENCH_*.json")
+    ap.add_argument("--current", required=True, help="directory with this run's BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="relative ns-per-voxel regression that fails the gate (default 0.15 = +15%%)",
+    )
+    ap.add_argument(
+        "--min-ns",
+        type=float,
+        default=0.0,
+        help="ignore comparisons whose baseline is below this many ns/voxel (noise floor)",
+    )
+    ap.add_argument(
+        "--bless",
+        action="store_true",
+        help="report but do not fail — bless an intentional regression into the new baseline",
+    )
+    args = ap.parse_args()
+
+    cur, cur_records, cur_skipped, cur_files = load_run(args.current)
+    if not cur_files:
+        print(f"error: no BENCH_*.json under --current {args.current}", file=sys.stderr)
+        sys.exit(2)
+    print(
+        f"current:  {len(cur_files)} file(s), {cur_records} record(s), "
+        f"{len(cur)} keyed timing(s), {cur_skipped} skipped value(s)"
+    )
+
+    if not os.path.isdir(args.baseline) or not glob.glob(
+        os.path.join(args.baseline, "**", "BENCH_*.json"), recursive=True
+    ):
+        # First run (or the baseline artifact expired): nothing to gate
+        # against. Skip LOUDLY — a silent pass here and a silent pass on a
+        # broken download would be indistinguishable.
+        print("=" * 66)
+        print("PERF GATE SKIPPED: no baseline BENCH_*.json found at")
+        print(f"  {args.baseline}")
+        print("This is expected on the first run; the current artifact becomes")
+        print("the baseline for the next one.")
+        print("=" * 66)
+        sys.exit(0)
+
+    base, base_records, base_skipped, base_files = load_run(args.baseline)
+    print(
+        f"baseline: {len(base_files)} file(s), {base_records} record(s), "
+        f"{len(base)} keyed timing(s), {base_skipped} skipped value(s)"
+    )
+
+    shared = sorted(k for k in cur if k in base)
+    if base and not shared:
+        print(
+            "error: baseline has keyed timings but the current run matched none "
+            "of them — the gate would pass vacuously. Did a bench stop emitting "
+            "records, or did the keying change?",
+            file=sys.stderr,
+        )
+        sys.exit(0 if args.bless else 1)
+
+    regressions = []
+    improvements = 0
+    ignored = 0
+    print()
+    print(f"{'Δ%':>8}  {'base ns':>10}  {'cur ns':>10}  key")
+    for key in shared:
+        b, c = base[key], cur[key]
+        if b < args.min_ns:
+            ignored += 1
+            continue
+        delta = (c - b) / b
+        marker = ""
+        if delta > args.threshold:
+            regressions.append((key, b, c, delta))
+            marker = "  <-- REGRESSION"
+        elif delta < 0:
+            improvements += 1
+        print(f"{delta * 100.0:>+7.1f}%  {b:>10.3f}  {c:>10.3f}  {fmt_key(key)}{marker}")
+    print()
+
+    only_cur = len(cur) - len(shared)
+    only_base = len(base) - len(shared)
+    print(
+        f"compared {len(shared)} key(s) ({improvements} improved, {ignored} below the "
+        f"{args.min_ns} ns noise floor); {only_cur} new key(s), {only_base} baseline-only key(s)"
+    )
+
+    if regressions:
+        print()
+        print(f"{len(regressions)} regression(s) beyond +{args.threshold * 100.0:.0f}%:")
+        for key, b, c, delta in regressions:
+            print(f"  {fmt_key(key)}: {b:.3f} -> {c:.3f} ns/voxel ({delta * 100.0:+.1f}%)")
+        if args.bless:
+            print("blessed (--bless): reported but not failing the gate.")
+            sys.exit(0)
+        print(
+            "\nTo accept an intentional regression, re-run with --bless "
+            "(in CI: put [perf-bless] in the commit message).",
+        )
+        sys.exit(1)
+
+    print("perf gate: OK")
+    sys.exit(0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+#!/usr/bin/env bash
+# Profile-guided build of the ffdreg binary, reported as its own bench rows.
+#
+# Pipeline (DESIGN.md "Perf gate & PGO"):
+#   1. build with -Cprofile-generate
+#   2. run a training workload (small phantom dataset -> FFD registration,
+#      plus the SIMD interpolation kernels across methods)
+#   3. merge the raw profiles with llvm-profdata (shipped in the rustc
+#      sysroot when the llvm-tools component is installed)
+#   4. rebuild with -Cprofile-use and re-run the fig7 / fig8_fig9 benches,
+#      emitting BENCH_*.json under a pgo-labeled report directory so
+#      scripts/perf_compare.py can diff PGO vs default builds.
+#
+# Exits 0 without doing anything when llvm-profdata is not available (the
+# llvm-tools rustup component is optional) — the PGO lane is additive, it
+# must never fail a build that simply lacks the tooling.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+RUST_DIR=rust
+PROF_DIR="$(pwd)/target/pgo-profiles"
+MERGED="$PROF_DIR/merged.profdata"
+OUT_DIR="${1:-$RUST_DIR/target/bench-reports/pgo}"
+mkdir -p "$OUT_DIR"
+OUT_DIR="$(cd "$OUT_DIR" && pwd)"
+
+# llvm-profdata lives in the rustc sysroot (rustup component llvm-tools).
+SYSROOT="$(rustc --print sysroot)"
+PROFDATA="$(find "$SYSROOT" -name llvm-profdata -type f 2>/dev/null | head -n1 || true)"
+if [ -z "$PROFDATA" ]; then
+    PROFDATA="$(command -v llvm-profdata || true)"
+fi
+if [ -z "$PROFDATA" ]; then
+    echo "pgo.sh: llvm-profdata not found (install the llvm-tools rustup component); skipping PGO"
+    exit 0
+fi
+echo "pgo.sh: using $PROFDATA"
+
+rm -rf "$PROF_DIR"
+mkdir -p "$PROF_DIR"
+
+echo "== 1/4: instrumented build"
+(cd "$RUST_DIR" && RUSTFLAGS="-Cprofile-generate=$PROF_DIR" cargo build --release --bin ffdreg)
+
+echo "== 2/4: training workload"
+TRAIN_DIR="$(mktemp -d)"
+trap 'rm -rf "$TRAIN_DIR"' EXIT
+# Workspace target dir lives at the repo root (see the root Cargo.toml).
+BIN="target/release/ffdreg"
+# Registration path: a small phantom pair through the multi-level FFD loop.
+"$BIN" phantom --out "$TRAIN_DIR" --scale 0.08 --format vol
+"$BIN" register --reference "$TRAIN_DIR/Phantom2_pre.vol" \
+    --floating "$TRAIN_DIR/Phantom2_intra.vol" --levels 2 --iters 8
+# Interpolation path: every SIMD kernel family (plus the TV baseline),
+# remainder-heavy tile size included.
+for method in ttli vt vv tv; do
+    "$BIN" interpolate --method "$method" --dims 96,96,96 --tile 5 --seed 3
+    "$BIN" interpolate --method "$method" --dims 96,96,96 --tile 7 --seed 3
+done
+
+echo "== 3/4: merge profiles"
+"$PROFDATA" merge -o "$MERGED" "$PROF_DIR"
+
+echo "== 4/4: PGO build + benches"
+PGO_FLAGS="-Cprofile-use=$MERGED"
+(cd "$RUST_DIR" && RUSTFLAGS="$PGO_FLAGS" cargo build --release --bin ffdreg)
+(cd "$RUST_DIR" && RUSTFLAGS="$PGO_FLAGS" \
+    cargo bench --bench fig7_cpu_bsi -- --json "$OUT_DIR" --threads 2) || \
+    echo "pgo.sh: fig7 bench failed under PGO (non-fatal)"
+(cd "$RUST_DIR" && RUSTFLAGS="$PGO_FLAGS" \
+    cargo bench --bench fig8_fig9_registration -- --json "$OUT_DIR" --threads 2) || \
+    echo "pgo.sh: fig8_fig9 bench failed under PGO (non-fatal)"
+
+echo "pgo.sh: done; PGO bench JSON under $OUT_DIR"
