@@ -20,6 +20,15 @@
 //! drain the queue, and blocks on a completion latch before returning, so
 //! every borrow outlives every task. Nested `run` calls cannot deadlock —
 //! the submitting thread always helps execute queued tasks.
+//!
+//! Concurrency audit (kept current; re-check when touching this module):
+//! there are **no** `unsafe impl Send`/`Sync` anywhere in the crate — all
+//! cross-thread sharing goes through `Mutex`/`Condvar`/`Arc`/atomics, and
+//! mutable output fan-out uses disjoint `split_at_mut` slabs, so `Send`
+//! bounds are compiler-derived. The single `unsafe` in this module is the
+//! task-lifetime transmute in [`WorkerPool::run`], justified at the site by
+//! the latch protocol above. The TSan CI lane (`sanitizers.yml`) runs the
+//! pool/threadpool/server suites to back this up dynamically.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};

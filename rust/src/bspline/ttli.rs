@@ -33,15 +33,21 @@ use crate::volume::Dims;
 
 pub struct Ttli;
 
-/// `a + t·(b−a)` with a fused multiply-add (single rounding).
+/// `a + t·(b−a)` with a fused multiply-add (single rounding) — delegates
+/// to [`simd::fused_lerp`], the single owner of the fused-rounding
+/// contract (`cargo xtask lint` keeps raw `mul_add` out of this module).
 #[inline(always)]
 pub(crate) fn lerp(a: f32, b: f32, t: f32) -> f32 {
-    t.mul_add(b - a, a)
+    simd::fused_lerp(a, b, t)
 }
 
 /// Vectorized sub-cube trilerp: lane `l` is voxel `x0 + l` of the row; the
 /// cube entries are row constants (broadcast), only the x-fractions vary
 /// per lane.
+///
+/// # Safety
+/// The CPU must support `S::ISA` — guaranteed because every caller is
+/// monomorphized inside the matching `#[target_feature]` wrapper.
 #[inline(always)]
 unsafe fn subcube_trilerp_v<S: Simd>(
     c: &[f32; 64],
@@ -53,17 +59,26 @@ unsafe fn subcube_trilerp_v<S: Simd>(
     fz: S::V,
 ) -> S::V {
     let base = 2 * a + 8 * b + 32 * cc;
-    let x00 = S::lerp(S::splat(c[base]), S::splat(c[base + 1]), fx);
-    let x10 = S::lerp(S::splat(c[base + 4]), S::splat(c[base + 5]), fx);
-    let x01 = S::lerp(S::splat(c[base + 16]), S::splat(c[base + 17]), fx);
-    let x11 = S::lerp(S::splat(c[base + 20]), S::splat(c[base + 21]), fx);
-    let y0 = S::lerp(x00, x10, fy);
-    let y1 = S::lerp(x01, x11, fy);
-    S::lerp(y0, y1, fz)
+    // SAFETY: splat/lerp are register-only and require nothing beyond the
+    // ISA, which the caller vouches for; cube indices top out at
+    // base + 21 = 53 < 64.
+    unsafe {
+        let x00 = S::lerp(S::splat(c[base]), S::splat(c[base + 1]), fx);
+        let x10 = S::lerp(S::splat(c[base + 4]), S::splat(c[base + 5]), fx);
+        let x01 = S::lerp(S::splat(c[base + 16]), S::splat(c[base + 17]), fx);
+        let x11 = S::lerp(S::splat(c[base + 20]), S::splat(c[base + 21]), fx);
+        let y0 = S::lerp(x00, x10, fy);
+        let y1 = S::lerp(x01, x11, fy);
+        S::lerp(y0, y1, fz)
+    }
 }
 
 /// One component for `S::WIDTH` consecutive row voxels: per-lane x
 /// fractions (`gx0`/`gx1`/`sx`), shared y/z fractions broadcast.
+///
+/// # Safety
+/// The CPU must support `S::ISA` — guaranteed because every caller is
+/// monomorphized inside the matching `#[target_feature]` wrapper.
 #[inline(always)]
 unsafe fn ttli_component_v<S: Simd>(
     c: &[f32; 64],
@@ -73,28 +88,37 @@ unsafe fn ttli_component_v<S: Simd>(
     h: [f32; 3],
     k: [f32; 3],
 ) -> S::V {
-    let (gy0, gy1, sy) = (S::splat(h[0]), S::splat(h[1]), S::splat(h[2]));
-    let (gz0, gz1, sz) = (S::splat(k[0]), S::splat(k[1]), S::splat(k[2]));
-    let t000 = subcube_trilerp_v::<S>(c, 0, 0, 0, gx0, gy0, gz0);
-    let t100 = subcube_trilerp_v::<S>(c, 1, 0, 0, gx1, gy0, gz0);
-    let t010 = subcube_trilerp_v::<S>(c, 0, 1, 0, gx0, gy1, gz0);
-    let t110 = subcube_trilerp_v::<S>(c, 1, 1, 0, gx1, gy1, gz0);
-    let t001 = subcube_trilerp_v::<S>(c, 0, 0, 1, gx0, gy0, gz1);
-    let t101 = subcube_trilerp_v::<S>(c, 1, 0, 1, gx1, gy0, gz1);
-    let t011 = subcube_trilerp_v::<S>(c, 0, 1, 1, gx0, gy1, gz1);
-    let t111 = subcube_trilerp_v::<S>(c, 1, 1, 1, gx1, gy1, gz1);
-    let x0 = S::lerp(t000, t100, sx);
-    let x1 = S::lerp(t010, t110, sx);
-    let x2 = S::lerp(t001, t101, sx);
-    let x3 = S::lerp(t011, t111, sx);
-    let y0 = S::lerp(x0, x1, sy);
-    let y1 = S::lerp(x2, x3, sy);
-    S::lerp(y0, y1, sz)
+    // SAFETY: splat/lerp/subcube_trilerp_v are register-only and require
+    // nothing beyond the ISA, which the caller vouches for.
+    unsafe {
+        let (gy0, gy1, sy) = (S::splat(h[0]), S::splat(h[1]), S::splat(h[2]));
+        let (gz0, gz1, sz) = (S::splat(k[0]), S::splat(k[1]), S::splat(k[2]));
+        let t000 = subcube_trilerp_v::<S>(c, 0, 0, 0, gx0, gy0, gz0);
+        let t100 = subcube_trilerp_v::<S>(c, 1, 0, 0, gx1, gy0, gz0);
+        let t010 = subcube_trilerp_v::<S>(c, 0, 1, 0, gx0, gy1, gz0);
+        let t110 = subcube_trilerp_v::<S>(c, 1, 1, 0, gx1, gy1, gz0);
+        let t001 = subcube_trilerp_v::<S>(c, 0, 0, 1, gx0, gy0, gz1);
+        let t101 = subcube_trilerp_v::<S>(c, 1, 0, 1, gx1, gy0, gz1);
+        let t011 = subcube_trilerp_v::<S>(c, 0, 1, 1, gx0, gy1, gz1);
+        let t111 = subcube_trilerp_v::<S>(c, 1, 1, 1, gx1, gy1, gz1);
+        let x0 = S::lerp(t000, t100, sx);
+        let x1 = S::lerp(t010, t110, sx);
+        let x2 = S::lerp(t001, t101, sx);
+        let x3 = S::lerp(t011, t111, sx);
+        let y0 = S::lerp(x0, x1, sy);
+        let y1 = S::lerp(x2, x3, sy);
+        S::lerp(y0, y1, sz)
+    }
 }
 
 /// The slab kernel, generic over the ISA. The tile-layer walk is inlined
 /// (no closures) so the whole body monomorphizes into the
 /// `#[target_feature]` wrappers below.
+///
+/// # Safety
+/// The CPU must support `S::ISA`: this function is only ever called from
+/// the matching `#[target_feature]` wrapper (or with `S = ScalarIsa`,
+/// whose ops are plain Rust).
 #[inline(always)]
 unsafe fn fill_generic<S: Simd>(
     grid: &ControlGrid,
@@ -130,39 +154,48 @@ unsafe fn fill_generic<S: Simd>(
                         let wy = ly.at(ly_);
                         let row =
                             slab_index(vol_dims, chunk, tx * dx, ty * dy + ly_, tz * dz + lz_);
-                        let mut a = 0;
-                        while a + S::WIDTH <= x_lim {
-                            let gx0 = S::load(&lx.g0[a..]);
-                            let gx1 = S::load(&lx.g1[a..]);
-                            let sx = S::load(&lx.s1[a..]);
-                            let vx = ttli_component_v::<S>(&cx, gx0, gx1, sx, wy, wz);
-                            let vy = ttli_component_v::<S>(&cy, gx0, gx1, sx, wy, wz);
-                            let vz = ttli_component_v::<S>(&cz, gx0, gx1, sx, wy, wz);
-                            S::store(&mut ox[row + a..], vx);
-                            S::store(&mut oy[row + a..], vy);
-                            S::store(&mut oz[row + a..], vz);
-                            a += S::WIDTH;
-                        }
-                        if a < x_lim {
-                            // Masked remainder: rows narrower than the
-                            // vector (δ < WIDTH, and every border tile)
-                            // still run in lanes — a predicated
-                            // load/store pair covers exactly the live
-                            // lanes (dead lanes are zeroed on load and
-                            // discarded on store). Each live lane
-                            // computes exactly what a full-width step
-                            // would, so live output is bit-identical to
-                            // the unmasked path.
-                            let live = x_lim - a;
-                            let gx0 = S::load_masked(&lx.g0[a..], live);
-                            let gx1 = S::load_masked(&lx.g1[a..], live);
-                            let sx = S::load_masked(&lx.s1[a..], live);
-                            let vx = ttli_component_v::<S>(&cx, gx0, gx1, sx, wy, wz);
-                            let vy = ttli_component_v::<S>(&cy, gx0, gx1, sx, wy, wz);
-                            let vz = ttli_component_v::<S>(&cz, gx0, gx1, sx, wy, wz);
-                            S::store_masked(&mut ox[row + a..], live, vx);
-                            S::store_masked(&mut oy[row + a..], live, vy);
-                            S::store_masked(&mut oz[row + a..], live, vz);
+                        // SAFETY: the caller vouches for the ISA. Full
+                        // steps read/write WIDTH lanes at offsets with
+                        // a + WIDTH <= x_lim <= row length (the LUT
+                        // columns are at least `dx` long and the slab row
+                        // holds `x_lim` voxels past `row + a`); the
+                        // masked tail touches exactly `live = x_lim - a`
+                        // lanes, in bounds by the same argument.
+                        unsafe {
+                            let mut a = 0;
+                            while a + S::WIDTH <= x_lim {
+                                let gx0 = S::load(&lx.g0[a..]);
+                                let gx1 = S::load(&lx.g1[a..]);
+                                let sx = S::load(&lx.s1[a..]);
+                                let vx = ttli_component_v::<S>(&cx, gx0, gx1, sx, wy, wz);
+                                let vy = ttli_component_v::<S>(&cy, gx0, gx1, sx, wy, wz);
+                                let vz = ttli_component_v::<S>(&cz, gx0, gx1, sx, wy, wz);
+                                S::store(&mut ox[row + a..], vx);
+                                S::store(&mut oy[row + a..], vy);
+                                S::store(&mut oz[row + a..], vz);
+                                a += S::WIDTH;
+                            }
+                            if a < x_lim {
+                                // Masked remainder: rows narrower than the
+                                // vector (δ < WIDTH, and every border tile)
+                                // still run in lanes — a predicated
+                                // load/store pair covers exactly the live
+                                // lanes (dead lanes are zeroed on load and
+                                // discarded on store). Each live lane
+                                // computes exactly what a full-width step
+                                // would, so live output is bit-identical to
+                                // the unmasked path.
+                                let live = x_lim - a;
+                                let gx0 = S::load_masked(&lx.g0[a..], live);
+                                let gx1 = S::load_masked(&lx.g1[a..], live);
+                                let sx = S::load_masked(&lx.s1[a..], live);
+                                let vx = ttli_component_v::<S>(&cx, gx0, gx1, sx, wy, wz);
+                                let vy = ttli_component_v::<S>(&cy, gx0, gx1, sx, wy, wz);
+                                let vz = ttli_component_v::<S>(&cz, gx0, gx1, sx, wy, wz);
+                                S::store_masked(&mut ox[row + a..], live, vx);
+                                S::store_masked(&mut oy[row + a..], live, vy);
+                                S::store_masked(&mut oz[row + a..], live, vz);
+                            }
                         }
                     }
                 }
@@ -172,22 +205,32 @@ unsafe fn fill_generic<S: Simd>(
     }
 }
 
+// SAFETY: callers must have verified avx512f+avx2+fma at runtime — the
+// only caller is the `clamp_to_hw()` match in `fill`, which did.
 #[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
 #[target_feature(enable = "avx512f,avx2,fma")]
 unsafe fn fill_avx512(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
-    fill_generic::<simd::Avx512Isa>(grid, vol_dims, chunk, out)
+    // SAFETY: this wrapper's target features satisfy Avx512Isa's ISA
+    // precondition for the whole monomorphized kernel body.
+    unsafe { fill_generic::<simd::Avx512Isa>(grid, vol_dims, chunk, out) }
 }
 
+// SAFETY: callers must have verified avx2+fma at runtime — the only
+// caller is the `clamp_to_hw()` match in `fill`, which did.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn fill_avx2(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
-    fill_generic::<simd::Avx2Isa>(grid, vol_dims, chunk, out)
+    // SAFETY: this wrapper's target features satisfy Avx2Isa's ISA
+    // precondition for the whole monomorphized kernel body.
+    unsafe { fill_generic::<simd::Avx2Isa>(grid, vol_dims, chunk, out) }
 }
 
+// SAFETY: SSE2 is part of the x86_64 baseline — always executable here.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse2")]
 unsafe fn fill_sse2(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
-    fill_generic::<simd::Sse2Isa>(grid, vol_dims, chunk, out)
+    // SAFETY: SSE2 (baseline) satisfies Sse2Isa's ISA precondition.
+    unsafe { fill_generic::<simd::Sse2Isa>(grid, vol_dims, chunk, out) }
 }
 
 /// Fill `out` on an explicit ISA path (clamped to the hardware) — the
@@ -202,14 +245,16 @@ pub(crate) fn fill(
     check_extent(grid, vol_dims);
     debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
     match isa.clamp_to_hw() {
-        // SAFETY: clamp_to_hw guarantees the CPU supports the chosen path
-        // (and Avx512 is only ever reported when build.rs compiled the
-        // lane in, so the `_` fallback below can never mislabel it).
         #[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
+        // SAFETY: clamp_to_hw only reports Avx512 after runtime detection
+        // succeeded (and build.rs compiled the lane in, so the `_`
+        // fallback below can never mislabel it).
         Isa::Avx512 => unsafe { fill_avx512(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: clamp_to_hw only reports Avx2 after runtime detection.
         Isa::Avx2 => unsafe { fill_avx2(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is part of the x86_64 baseline.
         Isa::Sse2 => unsafe { fill_sse2(grid, vol_dims, chunk, out) },
         // SAFETY: the scalar path uses no intrinsics.
         _ => unsafe { fill_generic::<ScalarIsa>(grid, vol_dims, chunk, out) },

@@ -51,6 +51,11 @@ fn reduce_yz(c: &[f32; 64], l: usize, gy: [f32; 3], gz: [f32; 3]) -> f32 {
 
 /// The slab kernel, generic over the ISA (tile-layer walk inlined so the
 /// whole body monomorphizes into the `#[target_feature]` wrappers).
+///
+/// # Safety
+/// The CPU must support `S::ISA`: this function is only ever called from
+/// the matching `#[target_feature]` wrapper (or with `S = ScalarIsa`,
+/// whose ops are plain Rust).
 #[inline(always)]
 unsafe fn fill_generic<S: Simd>(
     grid: &ControlGrid,
@@ -92,54 +97,64 @@ unsafe fn fill_generic<S: Simd>(
                             slab_index(vol_dims, chunk, tx * dx, ty * dy + ly_, tz * dz + lz_);
                         // Vector loop over the tile row: 9 lane-parallel
                         // lerps per WIDTH voxels, column values broadcast.
-                        let (c0x, c1x, c2x, c3x) = (
-                            S::splat(colx[0]),
-                            S::splat(colx[1]),
-                            S::splat(colx[2]),
-                            S::splat(colx[3]),
-                        );
-                        let (c0y, c1y, c2y, c3y) = (
-                            S::splat(coly[0]),
-                            S::splat(coly[1]),
-                            S::splat(coly[2]),
-                            S::splat(coly[3]),
-                        );
-                        let (c0z, c1z, c2z, c3z) = (
-                            S::splat(colz[0]),
-                            S::splat(colz[1]),
-                            S::splat(colz[2]),
-                            S::splat(colz[3]),
-                        );
-                        let mut a = 0;
-                        while a + S::WIDTH <= x_lim {
-                            let g0 = S::load(&lx.g0[a..]);
-                            let g1 = S::load(&lx.g1[a..]);
-                            let s = S::load(&lx.s1[a..]);
-                            let vx = S::lerp(S::lerp(c0x, c1x, g0), S::lerp(c2x, c3x, g1), s);
-                            let vy = S::lerp(S::lerp(c0y, c1y, g0), S::lerp(c2y, c3y, g1), s);
-                            let vz = S::lerp(S::lerp(c0z, c1z, g0), S::lerp(c2z, c3z, g1), s);
-                            S::store(&mut ox[row + a..], vx);
-                            S::store(&mut oy[row + a..], vy);
-                            S::store(&mut oz[row + a..], vz);
-                            a += S::WIDTH;
-                        }
-                        if a < x_lim {
-                            // Masked remainder: rows narrower than the
-                            // vector (δ < WIDTH, and every border tile)
-                            // still run in lanes — a predicated
-                            // load/store pair covers exactly the live
-                            // lanes, which compute exactly what a
-                            // full-width step would.
-                            let live = x_lim - a;
-                            let g0 = S::load_masked(&lx.g0[a..], live);
-                            let g1 = S::load_masked(&lx.g1[a..], live);
-                            let s = S::load_masked(&lx.s1[a..], live);
-                            let vx = S::lerp(S::lerp(c0x, c1x, g0), S::lerp(c2x, c3x, g1), s);
-                            let vy = S::lerp(S::lerp(c0y, c1y, g0), S::lerp(c2y, c3y, g1), s);
-                            let vz = S::lerp(S::lerp(c0z, c1z, g0), S::lerp(c2z, c3z, g1), s);
-                            S::store_masked(&mut ox[row + a..], live, vx);
-                            S::store_masked(&mut oy[row + a..], live, vy);
-                            S::store_masked(&mut oz[row + a..], live, vz);
+                        //
+                        // SAFETY: the caller vouches for the ISA. Full
+                        // steps read/write WIDTH lanes with
+                        // a + WIDTH <= x_lim (LUT columns are at least
+                        // `dx` long, the slab row holds `x_lim` voxels
+                        // past `row`); the masked tail touches exactly
+                        // `live = x_lim - a` lanes, in bounds by the same
+                        // argument.
+                        unsafe {
+                            let (c0x, c1x, c2x, c3x) = (
+                                S::splat(colx[0]),
+                                S::splat(colx[1]),
+                                S::splat(colx[2]),
+                                S::splat(colx[3]),
+                            );
+                            let (c0y, c1y, c2y, c3y) = (
+                                S::splat(coly[0]),
+                                S::splat(coly[1]),
+                                S::splat(coly[2]),
+                                S::splat(coly[3]),
+                            );
+                            let (c0z, c1z, c2z, c3z) = (
+                                S::splat(colz[0]),
+                                S::splat(colz[1]),
+                                S::splat(colz[2]),
+                                S::splat(colz[3]),
+                            );
+                            let mut a = 0;
+                            while a + S::WIDTH <= x_lim {
+                                let g0 = S::load(&lx.g0[a..]);
+                                let g1 = S::load(&lx.g1[a..]);
+                                let s = S::load(&lx.s1[a..]);
+                                let vx = S::lerp(S::lerp(c0x, c1x, g0), S::lerp(c2x, c3x, g1), s);
+                                let vy = S::lerp(S::lerp(c0y, c1y, g0), S::lerp(c2y, c3y, g1), s);
+                                let vz = S::lerp(S::lerp(c0z, c1z, g0), S::lerp(c2z, c3z, g1), s);
+                                S::store(&mut ox[row + a..], vx);
+                                S::store(&mut oy[row + a..], vy);
+                                S::store(&mut oz[row + a..], vz);
+                                a += S::WIDTH;
+                            }
+                            if a < x_lim {
+                                // Masked remainder: rows narrower than the
+                                // vector (δ < WIDTH, and every border tile)
+                                // still run in lanes — a predicated
+                                // load/store pair covers exactly the live
+                                // lanes, which compute exactly what a
+                                // full-width step would.
+                                let live = x_lim - a;
+                                let g0 = S::load_masked(&lx.g0[a..], live);
+                                let g1 = S::load_masked(&lx.g1[a..], live);
+                                let s = S::load_masked(&lx.s1[a..], live);
+                                let vx = S::lerp(S::lerp(c0x, c1x, g0), S::lerp(c2x, c3x, g1), s);
+                                let vy = S::lerp(S::lerp(c0y, c1y, g0), S::lerp(c2y, c3y, g1), s);
+                                let vz = S::lerp(S::lerp(c0z, c1z, g0), S::lerp(c2z, c3z, g1), s);
+                                S::store_masked(&mut ox[row + a..], live, vx);
+                                S::store_masked(&mut oy[row + a..], live, vy);
+                                S::store_masked(&mut oz[row + a..], live, vz);
+                            }
                         }
                     }
                 }
@@ -149,22 +164,32 @@ unsafe fn fill_generic<S: Simd>(
     }
 }
 
+// SAFETY: callers must have verified avx512f+avx2+fma at runtime — the
+// only caller is the `clamp_to_hw()` match in `fill`, which did.
 #[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
 #[target_feature(enable = "avx512f,avx2,fma")]
 unsafe fn fill_avx512(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
-    fill_generic::<simd::Avx512Isa>(grid, vol_dims, chunk, out)
+    // SAFETY: this wrapper's target features satisfy Avx512Isa's ISA
+    // precondition for the whole monomorphized kernel body.
+    unsafe { fill_generic::<simd::Avx512Isa>(grid, vol_dims, chunk, out) }
 }
 
+// SAFETY: callers must have verified avx2+fma at runtime — the only
+// caller is the `clamp_to_hw()` match in `fill`, which did.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn fill_avx2(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
-    fill_generic::<simd::Avx2Isa>(grid, vol_dims, chunk, out)
+    // SAFETY: this wrapper's target features satisfy Avx2Isa's ISA
+    // precondition for the whole monomorphized kernel body.
+    unsafe { fill_generic::<simd::Avx2Isa>(grid, vol_dims, chunk, out) }
 }
 
+// SAFETY: SSE2 is part of the x86_64 baseline — always executable here.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse2")]
 unsafe fn fill_sse2(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
-    fill_generic::<simd::Sse2Isa>(grid, vol_dims, chunk, out)
+    // SAFETY: SSE2 (baseline) satisfies Sse2Isa's ISA precondition.
+    unsafe { fill_generic::<simd::Sse2Isa>(grid, vol_dims, chunk, out) }
 }
 
 /// Fill `out` on an explicit ISA path (clamped to the hardware).
@@ -178,12 +203,15 @@ pub(crate) fn fill(
     check_extent(grid, vol_dims);
     debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
     match isa.clamp_to_hw() {
-        // SAFETY: clamp_to_hw guarantees the CPU supports the chosen path.
         #[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
+        // SAFETY: clamp_to_hw only reports Avx512 after runtime detection
+        // succeeded (and build.rs compiled the lane in).
         Isa::Avx512 => unsafe { fill_avx512(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: clamp_to_hw only reports Avx2 after runtime detection.
         Isa::Avx2 => unsafe { fill_avx2(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is part of the x86_64 baseline.
         Isa::Sse2 => unsafe { fill_sse2(grid, vol_dims, chunk, out) },
         // SAFETY: the scalar path uses no intrinsics.
         _ => unsafe { fill_generic::<ScalarIsa>(grid, vol_dims, chunk, out) },

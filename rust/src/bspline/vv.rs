@@ -41,6 +41,10 @@ fn lanes(cube: &[f32; 64]) -> [[f32; 8]; 8] {
 /// Evaluate one component from the lane-transposed cube: 7 vector lerps
 /// over the 8 sub-cube lanes (in `8 / WIDTH` register chunks), then the
 /// scalar 9th trilerp combining the lane results.
+///
+/// # Safety
+/// The CPU must support `S::ISA` — guaranteed because every caller is
+/// monomorphized inside the matching `#[target_feature]` wrapper.
 #[inline(always)]
 unsafe fn vv_component_v<S: Simd>(
     ln: &[[f32; 8]; 8],
@@ -51,36 +55,45 @@ unsafe fn vv_component_v<S: Simd>(
 ) -> f32 {
     let mut t = [0.0f32; 8];
     let mut k = 0;
-    while k < 8 {
-        // `8 - k` sub-cube lanes remain. ISAs wider than that (AVX-512's
-        // 16 lanes) run them as one masked step; everything else takes the
-        // full-width branch. `S::WIDTH` is const, so the branch resolves
-        // at monomorphization time.
-        if S::WIDTH <= 8 - k {
-            let vfx = S::load(&fx[k..]);
-            let vfy = S::load(&fy[k..]);
-            let vfz = S::load(&fz[k..]);
-            let x00 = S::lerp(S::load(&ln[0][k..]), S::load(&ln[1][k..]), vfx);
-            let x10 = S::lerp(S::load(&ln[2][k..]), S::load(&ln[3][k..]), vfx);
-            let x01 = S::lerp(S::load(&ln[4][k..]), S::load(&ln[5][k..]), vfx);
-            let x11 = S::lerp(S::load(&ln[6][k..]), S::load(&ln[7][k..]), vfx);
-            let y0 = S::lerp(x00, x10, vfy);
-            let y1 = S::lerp(x01, x11, vfy);
-            S::store(&mut t[k..], S::lerp(y0, y1, vfz));
-            k += S::WIDTH;
-        } else {
-            let n = 8 - k;
-            let vfx = S::load_masked(&fx[k..], n);
-            let vfy = S::load_masked(&fy[k..], n);
-            let vfz = S::load_masked(&fz[k..], n);
-            let x00 = S::lerp(S::load_masked(&ln[0][k..], n), S::load_masked(&ln[1][k..], n), vfx);
-            let x10 = S::lerp(S::load_masked(&ln[2][k..], n), S::load_masked(&ln[3][k..], n), vfx);
-            let x01 = S::lerp(S::load_masked(&ln[4][k..], n), S::load_masked(&ln[5][k..], n), vfx);
-            let x11 = S::lerp(S::load_masked(&ln[6][k..], n), S::load_masked(&ln[7][k..], n), vfx);
-            let y0 = S::lerp(x00, x10, vfy);
-            let y1 = S::lerp(x01, x11, vfy);
-            S::store_masked(&mut t[k..], n, S::lerp(y0, y1, vfz));
-            k = 8;
+    // SAFETY: the caller vouches for the ISA. Full-width steps only run
+    // while `WIDTH <= 8 - k` lanes remain in the 8-element arrays; the
+    // masked step touches exactly the remaining `n = 8 - k` lanes.
+    unsafe {
+        while k < 8 {
+            // `8 - k` sub-cube lanes remain. ISAs wider than that
+            // (AVX-512's 16 lanes) run them as one masked step; everything
+            // else takes the full-width branch. `S::WIDTH` is const, so
+            // the branch resolves at monomorphization time.
+            if S::WIDTH <= 8 - k {
+                let vfx = S::load(&fx[k..]);
+                let vfy = S::load(&fy[k..]);
+                let vfz = S::load(&fz[k..]);
+                let x00 = S::lerp(S::load(&ln[0][k..]), S::load(&ln[1][k..]), vfx);
+                let x10 = S::lerp(S::load(&ln[2][k..]), S::load(&ln[3][k..]), vfx);
+                let x01 = S::lerp(S::load(&ln[4][k..]), S::load(&ln[5][k..]), vfx);
+                let x11 = S::lerp(S::load(&ln[6][k..]), S::load(&ln[7][k..]), vfx);
+                let y0 = S::lerp(x00, x10, vfy);
+                let y1 = S::lerp(x01, x11, vfy);
+                S::store(&mut t[k..], S::lerp(y0, y1, vfz));
+                k += S::WIDTH;
+            } else {
+                let n = 8 - k;
+                let vfx = S::load_masked(&fx[k..], n);
+                let vfy = S::load_masked(&fy[k..], n);
+                let vfz = S::load_masked(&fz[k..], n);
+                let x00 =
+                    S::lerp(S::load_masked(&ln[0][k..], n), S::load_masked(&ln[1][k..], n), vfx);
+                let x10 =
+                    S::lerp(S::load_masked(&ln[2][k..], n), S::load_masked(&ln[3][k..], n), vfx);
+                let x01 =
+                    S::lerp(S::load_masked(&ln[4][k..], n), S::load_masked(&ln[5][k..], n), vfx);
+                let x11 =
+                    S::lerp(S::load_masked(&ln[6][k..], n), S::load_masked(&ln[7][k..], n), vfx);
+                let y0 = S::lerp(x00, x10, vfy);
+                let y1 = S::lerp(x01, x11, vfy);
+                S::store_masked(&mut t[k..], n, S::lerp(y0, y1, vfz));
+                k = 8;
+            }
         }
     }
     // 9th trilerp combining the 8 lane results (scalar, ISA-matched
@@ -97,6 +110,11 @@ unsafe fn vv_component_v<S: Simd>(
 
 /// The slab kernel, generic over the ISA (tile-layer walk inlined so the
 /// whole body monomorphizes into the `#[target_feature]` wrappers).
+///
+/// # Safety
+/// The CPU must support `S::ISA`: this function is only ever called from
+/// the matching `#[target_feature]` wrapper (or with `S = ScalarIsa`,
+/// whose ops are plain Rust).
 #[inline(always)]
 unsafe fn fill_generic<S: Simd>(
     grid: &ControlGrid,
@@ -145,9 +163,13 @@ unsafe fn fill_generic<S: Simd>(
                             let fx: [f32; 8] =
                                 std::array::from_fn(|q| if q & 1 == 0 { gx0 } else { gx1 });
                             let s = [sx, sy, sz];
-                            ox[row + lx_] = vv_component_v::<S>(&lnx, &fx, &fy, &fz, s);
-                            oy[row + lx_] = vv_component_v::<S>(&lny, &fx, &fy, &fz, s);
-                            oz[row + lx_] = vv_component_v::<S>(&lnz, &fx, &fy, &fz, s);
+                            // SAFETY: the caller vouches for the ISA —
+                            // the only precondition vv_component_v has.
+                            unsafe {
+                                ox[row + lx_] = vv_component_v::<S>(&lnx, &fx, &fy, &fz, s);
+                                oy[row + lx_] = vv_component_v::<S>(&lny, &fx, &fy, &fz, s);
+                                oz[row + lx_] = vv_component_v::<S>(&lnz, &fx, &fy, &fz, s);
+                            }
                         }
                     }
                 }
@@ -157,22 +179,32 @@ unsafe fn fill_generic<S: Simd>(
     }
 }
 
+// SAFETY: callers must have verified avx512f+avx2+fma at runtime — the
+// only caller is the `clamp_to_hw()` match in `fill`, which did.
 #[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
 #[target_feature(enable = "avx512f,avx2,fma")]
 unsafe fn fill_avx512(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
-    fill_generic::<simd::Avx512Isa>(grid, vol_dims, chunk, out)
+    // SAFETY: this wrapper's target features satisfy Avx512Isa's ISA
+    // precondition for the whole monomorphized kernel body.
+    unsafe { fill_generic::<simd::Avx512Isa>(grid, vol_dims, chunk, out) }
 }
 
+// SAFETY: callers must have verified avx2+fma at runtime — the only
+// caller is the `clamp_to_hw()` match in `fill`, which did.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2,fma")]
 unsafe fn fill_avx2(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
-    fill_generic::<simd::Avx2Isa>(grid, vol_dims, chunk, out)
+    // SAFETY: this wrapper's target features satisfy Avx2Isa's ISA
+    // precondition for the whole monomorphized kernel body.
+    unsafe { fill_generic::<simd::Avx2Isa>(grid, vol_dims, chunk, out) }
 }
 
+// SAFETY: SSE2 is part of the x86_64 baseline — always executable here.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse2")]
 unsafe fn fill_sse2(grid: &ControlGrid, vol_dims: Dims, chunk: ZChunk, out: FieldSlabMut<'_>) {
-    fill_generic::<simd::Sse2Isa>(grid, vol_dims, chunk, out)
+    // SAFETY: SSE2 (baseline) satisfies Sse2Isa's ISA precondition.
+    unsafe { fill_generic::<simd::Sse2Isa>(grid, vol_dims, chunk, out) }
 }
 
 /// Fill `out` on an explicit ISA path (clamped to the hardware).
@@ -186,12 +218,15 @@ pub(crate) fn fill(
     check_extent(grid, vol_dims);
     debug_assert_eq!(out.x.len(), chunk.voxels(vol_dims));
     match isa.clamp_to_hw() {
-        // SAFETY: clamp_to_hw guarantees the CPU supports the chosen path.
         #[cfg(all(target_arch = "x86_64", ffdreg_avx512))]
+        // SAFETY: clamp_to_hw only reports Avx512 after runtime detection
+        // succeeded (and build.rs compiled the lane in).
         Isa::Avx512 => unsafe { fill_avx512(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: clamp_to_hw only reports Avx2 after runtime detection.
         Isa::Avx2 => unsafe { fill_avx2(grid, vol_dims, chunk, out) },
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: SSE2 is part of the x86_64 baseline.
         Isa::Sse2 => unsafe { fill_sse2(grid, vol_dims, chunk, out) },
         // SAFETY: the scalar path uses no intrinsics.
         _ => unsafe { fill_generic::<ScalarIsa>(grid, vol_dims, chunk, out) },

@@ -39,6 +39,8 @@ impl JointHistogram {
             joint[(ia + 1) * bins + ib] += (wa * (1.0 - wb)) as f64;
             joint[(ia + 1) * bins + ib + 1] += (wa * wb) as f64;
         }
+        // lint:allow(float-sum): serial single-threaded pass over the
+        // histogram in fixed index order — deterministic by construction.
         let total: f64 = joint.iter().sum();
         for p in &mut joint {
             *p /= total;
@@ -55,6 +57,8 @@ impl JointHistogram {
     }
 
     fn entropy(p: &[f64]) -> f64 {
+        // lint:allow(float-sum): serial single-threaded reduction in fixed
+        // bin order — deterministic by construction.
         -p.iter().filter(|&&v| v > 0.0).map(|&v| v * v.ln()).sum::<f64>()
     }
 

@@ -29,6 +29,11 @@
 // allow to extend the contract (the CI `cargo doc` step runs with
 // RUSTDOCFLAGS="-D warnings", so regressions in covered modules fail).
 #![warn(missing_docs)]
+// Unsafe discipline: every unsafe *operation* needs its own `unsafe {}`
+// block with a `// SAFETY:` justification, even inside `unsafe fn` bodies
+// (`cargo xtask lint` enforces the comments; this lint enforces the
+// blocks). See DESIGN.md "Static analysis & sanitizers".
+#![deny(unsafe_op_in_unsafe_fn)]
 
 #[allow(missing_docs)]
 pub mod affine;

@@ -16,6 +16,10 @@
 //! `ffdreg <cmd> --help` conceptually via README; flags are parsed by the
 //! in-repo CLI substrate (rust/src/cli.rs).
 
+// Same unsafe discipline as the library crate (lib.rs); the binary has no
+// unsafe code today, the attribute keeps it that way honestly.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::path::Path;
 use std::sync::Arc;
 

@@ -28,7 +28,7 @@ pub fn transform_landmark(field: &VectorField, p: Landmark) -> Landmark {
                 cl(z0 as isize + dz, d.nz),
             )]
         };
-        let lerp = |a: f32, b: f32, t: f32| t.mul_add(b - a, a);
+        let lerp = crate::util::simd::fused_lerp;
         let x00 = lerp(at(0, 0, 0), at(1, 0, 0), fx);
         let x10 = lerp(at(0, 1, 0), at(1, 1, 0), fx);
         let x01 = lerp(at(0, 0, 1), at(1, 0, 1), fx);

@@ -121,7 +121,7 @@ impl std::fmt::Display for Isa {
     }
 }
 
-#[cfg(target_arch = "x86_64")]
+#[cfg(all(target_arch = "x86_64", not(miri)))]
 fn detect_impl() -> Isa {
     // The AVX-512 probe is compiled out on pre-1.89 toolchains (build.rs),
     // where the lane's kernels don't exist either — requests then clamp to
@@ -141,8 +141,11 @@ fn detect_impl() -> Isa {
     }
 }
 
-#[cfg(not(target_arch = "x86_64"))]
+#[cfg(any(not(target_arch = "x86_64"), miri))]
 fn detect_impl() -> Isa {
+    // Miri cannot execute x86 intrinsics; reporting Scalar here makes every
+    // ISA-gated test degrade to the portable lane automatically, so the
+    // whole suite runs under `cargo miri test` with no per-test skip list.
     Isa::Scalar
 }
 
@@ -187,6 +190,25 @@ pub fn active() -> Isa {
         },
         Err(_) => detect(),
     })
+}
+
+/// Fused scalar multiply-add `a*b + c` (single rounding). This free
+/// function — together with the [`Simd`] impls below — is the one owner of
+/// raw `f32::mul_add` in the codebase: `cargo xtask lint` (rule
+/// `raw-mul-add`) routes every other module here so the single-rounding
+/// bit-identity contract has exactly one definition site.
+#[inline(always)]
+pub fn fused_mul_add(a: f32, b: f32, c: f32) -> f32 {
+    a.mul_add(b, c)
+}
+
+/// Fused scalar lerp `a + t·(b−a)` with the exact rounding of the fused
+/// ISA lanes ([`ScalarIsa`]'s `lerp1`, AVX2, AVX-512). Scalar kernels and
+/// row tails call this so their values are bit-identical to what the
+/// fused vector lanes would produce.
+#[inline(always)]
+pub fn fused_lerp(a: f32, b: f32, t: f32) -> f32 {
+    fused_mul_add(t, b - a, a)
 }
 
 /// Width-generic `f32` vector operations. Implementations are zero-sized
@@ -235,7 +257,9 @@ pub trait Simd {
         debug_assert!(n <= Self::WIDTH && Self::WIDTH <= 16);
         let mut buf = [0.0f32; 16];
         buf[..n].copy_from_slice(&p[..n]);
-        Self::load(&buf)
+        // SAFETY: `buf` has 16 >= WIDTH lanes, and the caller vouches for
+        // the ISA — all that `load` requires.
+        unsafe { Self::load(&buf) }
     }
 
     /// Store the first `n` lanes of `v` to `p`; memory past `n` is left
@@ -249,7 +273,9 @@ pub trait Simd {
     unsafe fn store_masked(p: &mut [f32], n: usize, v: Self::V) {
         debug_assert!(n <= Self::WIDTH && Self::WIDTH <= 16);
         let mut buf = [0.0f32; 16];
-        Self::store(&mut buf, v);
+        // SAFETY: `buf` has 16 >= WIDTH lanes, and the caller vouches for
+        // the ISA — all that `store` requires.
+        unsafe { Self::store(&mut buf, v) };
         p[..n].copy_from_slice(&buf[..n]);
     }
 
@@ -271,7 +297,9 @@ pub trait Simd {
     /// The CPU must support [`Self::ISA`].
     #[inline(always)]
     unsafe fn lerp(a: Self::V, b: Self::V, t: Self::V) -> Self::V {
-        Self::mul_add(t, Self::sub(b, a), a)
+        // SAFETY: the caller vouches for the ISA — the only precondition
+        // `sub` and `mul_add` have.
+        unsafe { Self::mul_add(t, Self::sub(b, a), a) }
     }
 
     /// Scalar lerp with the exact rounding behavior of one vector lane —
@@ -284,31 +312,41 @@ pub trait Simd {
 /// the AVX2 path and as the pre-SIMD scalar kernels).
 pub struct ScalarIsa;
 
+// SAFETY: the scalar lane is plain safe Rust (slice indexing, `f32`
+// arithmetic) — the `unsafe fn` signatures below only mirror the trait
+// contract; every body is a safe operation. Isa::Scalar is available on
+// every CPU, so the trait's ISA precondition is vacuous here.
 impl Simd for ScalarIsa {
     type V = f32;
     const WIDTH: usize = 1;
     const ISA: Isa = Isa::Scalar;
 
+    // SAFETY: no unsafe ops — see the impl-level comment.
     #[inline(always)]
     unsafe fn splat(x: f32) -> f32 {
         x
     }
 
+    // SAFETY: no unsafe ops — bounds-checked indexing.
     #[inline(always)]
     unsafe fn load(p: &[f32]) -> f32 {
         p[0]
     }
 
+    // SAFETY: no unsafe ops — bounds-checked indexing.
     #[inline(always)]
     unsafe fn store(p: &mut [f32], v: f32) {
         p[0] = v;
     }
 
+    // SAFETY: no unsafe ops — plain `f32` subtraction.
     #[inline(always)]
     unsafe fn sub(a: f32, b: f32) -> f32 {
         a - b
     }
 
+    // SAFETY: no unsafe ops — `f32::mul_add` is safe (and fused, matching
+    // the AVX2/AVX-512 rounding).
     #[inline(always)]
     unsafe fn mul_add(a: f32, b: f32, c: f32) -> f32 {
         a.mul_add(b, c)
@@ -329,36 +367,55 @@ mod x86 {
     /// followed by an add (two roundings) — `lerp1` matches that.
     pub struct Sse2Isa;
 
+    // SAFETY: SSE2 is part of the x86_64 baseline — every CPU this module
+    // compiles for can execute these intrinsics, so the trait's ISA
+    // precondition is met unconditionally. Pointer validity for the
+    // unaligned load/store comes from the `&[f32]` arguments plus the
+    // length contract on the trait (`p.len() >= WIDTH`), asserted in
+    // debug builds.
     impl Simd for Sse2Isa {
         type V = __m128;
         const WIDTH: usize = 4;
         const ISA: Isa = Isa::Sse2;
 
+        // SAFETY: SSE2 is baseline on x86_64 (impl-level comment).
         #[inline(always)]
         unsafe fn splat(x: f32) -> __m128 {
-            _mm_set1_ps(x)
+            // SAFETY: SSE2 is baseline on x86_64; no memory access.
+            unsafe { _mm_set1_ps(x) }
         }
 
+        // SAFETY: SSE2 baseline; caller guarantees `p.len() >= 4`.
         #[inline(always)]
         unsafe fn load(p: &[f32]) -> __m128 {
             debug_assert!(p.len() >= 4);
-            _mm_loadu_ps(p.as_ptr())
+            // SAFETY: `p` is a valid slice with at least 4 f32s (trait
+            // contract, debug-asserted); `_mm_loadu_ps` allows unaligned.
+            unsafe { _mm_loadu_ps(p.as_ptr()) }
         }
 
+        // SAFETY: SSE2 baseline; caller guarantees `p.len() >= 4`.
         #[inline(always)]
         unsafe fn store(p: &mut [f32], v: __m128) {
             debug_assert!(p.len() >= 4);
-            _mm_storeu_ps(p.as_mut_ptr(), v)
+            // SAFETY: `p` is a valid mutable slice with at least 4 f32s
+            // (trait contract, debug-asserted); unaligned store is allowed.
+            unsafe { _mm_storeu_ps(p.as_mut_ptr(), v) }
         }
 
+        // SAFETY: SSE2 baseline; register-only op.
         #[inline(always)]
         unsafe fn sub(a: __m128, b: __m128) -> __m128 {
-            _mm_sub_ps(a, b)
+            // SAFETY: SSE2 is baseline on x86_64; no memory access.
+            unsafe { _mm_sub_ps(a, b) }
         }
 
+        // SAFETY: SSE2 baseline; register-only ops (mul then add — two
+        // roundings, which is exactly what Isa::Sse2's contract says).
         #[inline(always)]
         unsafe fn mul_add(a: __m128, b: __m128, c: __m128) -> __m128 {
-            _mm_add_ps(_mm_mul_ps(a, b), c)
+            // SAFETY: SSE2 is baseline on x86_64; no memory access.
+            unsafe { _mm_add_ps(_mm_mul_ps(a, b), c) }
         }
 
         #[inline(always)]
@@ -371,36 +428,55 @@ mod x86 {
     /// same rounding as scalar `f32::mul_add`).
     pub struct Avx2Isa;
 
+    // SAFETY: unlike SSE2, AVX2+FMA is NOT baseline — the trait contract
+    // ("the CPU must support Self::ISA") is load-bearing here. Every call
+    // path reaches this impl through a `#[target_feature(enable =
+    // "avx2,fma")]` wrapper selected by the `clamp_to_hw()` dispatch
+    // match, so the features are runtime-verified before any intrinsic
+    // executes. Pointer validity comes from the `&[f32]` arguments plus
+    // the trait's length contract, asserted in debug builds.
     impl Simd for Avx2Isa {
         type V = __m256;
         const WIDTH: usize = 8;
         const ISA: Isa = Isa::Avx2;
 
+        // SAFETY: caller guarantees AVX2 (impl-level comment).
         #[inline(always)]
         unsafe fn splat(x: f32) -> __m256 {
-            _mm256_set1_ps(x)
+            // SAFETY: caller guarantees AVX2; no memory access.
+            unsafe { _mm256_set1_ps(x) }
         }
 
+        // SAFETY: caller guarantees AVX2 and `p.len() >= 8`.
         #[inline(always)]
         unsafe fn load(p: &[f32]) -> __m256 {
             debug_assert!(p.len() >= 8);
-            _mm256_loadu_ps(p.as_ptr())
+            // SAFETY: `p` is a valid slice with at least 8 f32s (trait
+            // contract, debug-asserted); unaligned load is allowed.
+            unsafe { _mm256_loadu_ps(p.as_ptr()) }
         }
 
+        // SAFETY: caller guarantees AVX2 and `p.len() >= 8`.
         #[inline(always)]
         unsafe fn store(p: &mut [f32], v: __m256) {
             debug_assert!(p.len() >= 8);
-            _mm256_storeu_ps(p.as_mut_ptr(), v)
+            // SAFETY: `p` is a valid mutable slice with at least 8 f32s
+            // (trait contract, debug-asserted); unaligned store is allowed.
+            unsafe { _mm256_storeu_ps(p.as_mut_ptr(), v) }
         }
 
+        // SAFETY: caller guarantees AVX2; register-only op.
         #[inline(always)]
         unsafe fn sub(a: __m256, b: __m256) -> __m256 {
-            _mm256_sub_ps(a, b)
+            // SAFETY: caller guarantees AVX2; no memory access.
+            unsafe { _mm256_sub_ps(a, b) }
         }
 
+        // SAFETY: caller guarantees AVX2+FMA; register-only fused op.
         #[inline(always)]
         unsafe fn mul_add(a: __m256, b: __m256, c: __m256) -> __m256 {
-            _mm256_fmadd_ps(a, b, c)
+            // SAFETY: caller guarantees FMA; no memory access.
+            unsafe { _mm256_fmadd_ps(a, b, c) }
         }
 
         #[inline(always)]
@@ -416,51 +492,79 @@ mod x86 {
     #[cfg(ffdreg_avx512)]
     pub struct Avx512Isa;
 
+    // SAFETY: AVX-512F is never assumed — every call path reaches this
+    // impl through a `#[target_feature(enable = "avx512f,...")]` wrapper
+    // selected by the `clamp_to_hw()` dispatch match, which only reports
+    // Avx512 after `is_x86_feature_detected!("avx512f")` succeeded. The
+    // masked ops additionally rely on the mask covering exactly the first
+    // `n` lanes, so predicated loads/stores touch only `p[..n]`.
     #[cfg(ffdreg_avx512)]
     impl Simd for Avx512Isa {
         type V = __m512;
         const WIDTH: usize = 16;
         const ISA: Isa = Isa::Avx512;
 
+        // SAFETY: caller guarantees AVX-512F (impl-level comment).
         #[inline(always)]
         unsafe fn splat(x: f32) -> __m512 {
-            _mm512_set1_ps(x)
+            // SAFETY: caller guarantees AVX-512F; no memory access.
+            unsafe { _mm512_set1_ps(x) }
         }
 
+        // SAFETY: caller guarantees AVX-512F and `p.len() >= 16`.
         #[inline(always)]
         unsafe fn load(p: &[f32]) -> __m512 {
             debug_assert!(p.len() >= 16);
-            _mm512_loadu_ps(p.as_ptr())
+            // SAFETY: `p` is a valid slice with at least 16 f32s (trait
+            // contract, debug-asserted); unaligned load is allowed.
+            unsafe { _mm512_loadu_ps(p.as_ptr()) }
         }
 
+        // SAFETY: caller guarantees AVX-512F and `p.len() >= 16`.
         #[inline(always)]
         unsafe fn store(p: &mut [f32], v: __m512) {
             debug_assert!(p.len() >= 16);
-            _mm512_storeu_ps(p.as_mut_ptr(), v)
+            // SAFETY: `p` is a valid mutable slice with at least 16 f32s
+            // (trait contract, debug-asserted); unaligned store is allowed.
+            unsafe { _mm512_storeu_ps(p.as_mut_ptr(), v) }
         }
 
+        // SAFETY: caller guarantees AVX-512F and `p.len() >= n`.
         #[inline(always)]
         unsafe fn load_masked(p: &[f32], n: usize) -> __m512 {
             debug_assert!(n <= 16 && p.len() >= n);
             let mask = ((1u32 << n) - 1) as __mmask16;
-            _mm512_maskz_loadu_ps(mask, p.as_ptr())
+            // SAFETY: the mask selects exactly lanes 0..n, so the
+            // predicated load reads only `p[..n]`, which the trait
+            // contract guarantees is in bounds; masked-off lanes are
+            // zeroed without touching memory.
+            unsafe { _mm512_maskz_loadu_ps(mask, p.as_ptr()) }
         }
 
+        // SAFETY: caller guarantees AVX-512F and `p.len() >= n`.
         #[inline(always)]
         unsafe fn store_masked(p: &mut [f32], n: usize, v: __m512) {
             debug_assert!(n <= 16 && p.len() >= n);
             let mask = ((1u32 << n) - 1) as __mmask16;
-            _mm512_mask_storeu_ps(p.as_mut_ptr(), mask, v)
+            // SAFETY: the mask selects exactly lanes 0..n, so the
+            // predicated store writes only `p[..n]`, which the trait
+            // contract guarantees is in bounds; memory past `n` is never
+            // touched.
+            unsafe { _mm512_mask_storeu_ps(p.as_mut_ptr(), mask, v) }
         }
 
+        // SAFETY: caller guarantees AVX-512F; register-only op.
         #[inline(always)]
         unsafe fn sub(a: __m512, b: __m512) -> __m512 {
-            _mm512_sub_ps(a, b)
+            // SAFETY: caller guarantees AVX-512F; no memory access.
+            unsafe { _mm512_sub_ps(a, b) }
         }
 
+        // SAFETY: caller guarantees AVX-512F; register-only fused op.
         #[inline(always)]
         unsafe fn mul_add(a: __m512, b: __m512, c: __m512) -> __m512 {
-            _mm512_fmadd_ps(a, b, c)
+            // SAFETY: caller guarantees AVX-512F; no memory access.
+            unsafe { _mm512_fmadd_ps(a, b, c) }
         }
 
         #[inline(always)]
@@ -532,6 +636,9 @@ mod tests {
     /// Run one width of lerps through a `Simd` impl (test helper; callers
     /// gate on `detect()` so the intrinsics are safe to execute).
     fn lerp_via<S: Simd>(a: &[f32], b: &[f32], t: &[f32], out: &mut [f32]) {
+        // SAFETY: every caller gates on `detect() >= S::ISA` before
+        // instantiating this helper, and passes slices of at least
+        // S::WIDTH elements.
         unsafe {
             let v = S::lerp(S::load(a), S::load(b), S::load(t));
             S::store(out, v);
@@ -588,6 +695,8 @@ mod tests {
         let src: Vec<f32> = (0..16).map(|i| i as f32 * 1.25 - 3.0).collect();
         for n in 0..=S::WIDTH {
             let mut out = vec![-7.0f32; 16];
+            // SAFETY: callers gate on `detect() >= S::ISA`; `src`/`out`
+            // hold 16 >= n elements.
             unsafe {
                 let v = S::load_masked(&src, n);
                 S::store_masked(&mut out, n, v);

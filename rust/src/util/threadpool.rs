@@ -5,6 +5,11 @@
 //! `par_chunks_mut` (split a mutable slice into contiguous chunks, one thread
 //! each) and `par_for` (index-range fan-out). Thread count defaults to the
 //! machine parallelism and is overridable via FFDREG_THREADS for experiments.
+//!
+//! Concurrency audit: this module is 100% safe code — `std::thread::scope`
+//! carries the borrows, each mutable chunk is popped from a `Mutex`-guarded
+//! queue by exactly one worker, and no manual `Send`/`Sync` impls exist.
+//! The TSan CI lane (`sanitizers.yml`) exercises these helpers.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

@@ -31,7 +31,7 @@ pub fn sample_trilinear(vol: &Volume, px: f32, py: f32, pz: f32) -> f32 {
             }
         }
     }
-    let lerp = |a: f32, b: f32, t: f32| t.mul_add(b - a, a);
+    let lerp = crate::util::simd::fused_lerp;
     let x00 = lerp(c[0], c[1], fx);
     let x10 = lerp(c[2], c[3], fx);
     let x01 = lerp(c[4], c[5], fx);
@@ -56,7 +56,7 @@ fn sample_trilinear_interior(vol: &Volume, px: f32, py: f32, pz: f32) -> f32 {
     let sy = vol.dims.nx;
     let sz = vol.dims.nx * vol.dims.ny;
     let d = &vol.data;
-    let lerp = |a: f32, b: f32, t: f32| t.mul_add(b - a, a);
+    let lerp = crate::util::simd::fused_lerp;
     let x00 = lerp(d[i000], d[i000 + 1], fx);
     let x10 = lerp(d[i000 + sy], d[i000 + sy + 1], fx);
     let x01 = lerp(d[i000 + sz], d[i000 + sz + 1], fx);

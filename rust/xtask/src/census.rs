@@ -1,0 +1,151 @@
+//! The unsafe-site census: count `unsafe` keyword occurrences per file,
+//! diff against a committed baseline, and gate growth.
+//!
+//! The baseline lives at `rust/xtask/unsafe_census.txt` as sorted
+//! `<count> <path>` lines. The gate is asymmetric on purpose:
+//!
+//! * **growth** (more `unsafe` in a file, or a new file with `unsafe`)
+//!   fails the lint — re-run with `--bless-census` (CI: land the updated
+//!   baseline, with an `[unsafe-bless]` token in the commit message);
+//! * **shrink** passes with a note asking for a re-bless, so deleting
+//!   unsafe code never blocks a PR.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+/// Count `unsafe` tokens in an already-scanned file.
+pub fn count_unsafe(scan: &crate::lexer::Scan) -> usize {
+    scan.toks.iter().filter(|t| t.text == "unsafe").count()
+}
+
+/// Parse a baseline file: `<count> <path>` lines, `#` comments ignored.
+pub fn parse_baseline(text: &str) -> BTreeMap<String, usize> {
+    let mut map = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(2, ' ');
+        let (Some(count), Some(path)) = (parts.next(), parts.next()) else {
+            continue;
+        };
+        if let Ok(n) = count.parse::<usize>() {
+            map.insert(path.trim().to_string(), n);
+        }
+    }
+    map
+}
+
+/// Render a census map back into the baseline text format.
+pub fn render_baseline(census: &BTreeMap<String, usize>) -> String {
+    let mut out = String::from(
+        "# unsafe-site census (gated by `cargo xtask lint`).\n\
+         # Regenerate with `cargo xtask lint --bless-census`; landing growth\n\
+         # requires an `[unsafe-bless]` token in the commit message.\n",
+    );
+    for (path, count) in census {
+        if *count > 0 {
+            let _ = writeln!(out, "{count} {path}");
+        }
+    }
+    out
+}
+
+/// Outcome of comparing the fresh census against the baseline.
+pub struct CensusDiff {
+    /// Lines describing growth (each one fails the gate).
+    pub grown: Vec<String>,
+    /// Lines describing shrink (informational only).
+    pub shrunk: Vec<String>,
+}
+
+/// Compare `fresh` (current tree) against `base` (committed baseline).
+pub fn diff(base: &BTreeMap<String, usize>, fresh: &BTreeMap<String, usize>) -> CensusDiff {
+    let mut grown = Vec::new();
+    let mut shrunk = Vec::new();
+    for (path, &now) in fresh {
+        if now == 0 {
+            continue;
+        }
+        match base.get(path) {
+            None => grown.push(format!("{path}: 0 -> {now} (new unsafe file)")),
+            Some(&was) if now > was => grown.push(format!("{path}: {was} -> {now}")),
+            Some(&was) if now < was => shrunk.push(format!("{path}: {was} -> {now}")),
+            _ => {}
+        }
+    }
+    for (path, &was) in base {
+        if was > 0 && fresh.get(path).copied().unwrap_or(0) == 0 {
+            shrunk.push(format!("{path}: {was} -> 0 (unsafe removed)"));
+        }
+    }
+    CensusDiff { grown, shrunk }
+}
+
+/// Write a machine-readable census artifact (hand-rolled JSON — the
+/// tool is zero-dependency) for CI upload.
+pub fn write_json(path: &Path, census: &BTreeMap<String, usize>) -> std::io::Result<()> {
+    let total: usize = census.values().sum();
+    let mut out = String::from("{\n  \"total_unsafe_sites\": ");
+    let _ = write!(out, "{total}");
+    out.push_str(",\n  \"files\": {\n");
+    let entries: Vec<String> = census
+        .iter()
+        .filter(|(_, &c)| c > 0)
+        .map(|(p, c)| format!("    \"{}\": {}", p.replace('\\', "/"), c))
+        .collect();
+    out.push_str(&entries.join(",\n"));
+    out.push_str("\n  }\n}\n");
+    fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::scan;
+
+    #[test]
+    fn counts_only_code_tokens() {
+        // `unsafe` in comments and strings must not inflate the census.
+        let src = "// unsafe unsafe\nlet s = \"unsafe\";\n// SAFETY: fine\nunsafe fn f() {}\n";
+        assert_eq!(count_unsafe(&scan(src)), 1);
+    }
+
+    #[test]
+    fn baseline_roundtrip() {
+        let mut census = BTreeMap::new();
+        census.insert("rust/src/a.rs".to_string(), 3usize);
+        census.insert("rust/src/b.rs".to_string(), 0usize);
+        let text = render_baseline(&census);
+        let parsed = parse_baseline(&text);
+        assert_eq!(parsed.get("rust/src/a.rs"), Some(&3));
+        assert_eq!(parsed.get("rust/src/b.rs"), None); // zero-count dropped
+    }
+
+    #[test]
+    fn growth_fails_shrink_passes() {
+        let base = parse_baseline("3 rust/src/a.rs\n5 rust/src/b.rs\n");
+        let mut fresh = BTreeMap::new();
+        fresh.insert("rust/src/a.rs".to_string(), 4usize); // grew
+        fresh.insert("rust/src/b.rs".to_string(), 2usize); // shrank
+        fresh.insert("rust/src/c.rs".to_string(), 1usize); // new
+        let d = diff(&base, &fresh);
+        assert_eq!(d.grown.len(), 2);
+        assert!(d.grown.iter().any(|l| l.contains("a.rs")));
+        assert!(d.grown.iter().any(|l| l.contains("c.rs")));
+        assert_eq!(d.shrunk.len(), 1);
+    }
+
+    #[test]
+    fn removed_file_counts_as_shrink() {
+        let base = parse_baseline("3 rust/src/gone.rs\n");
+        let fresh = BTreeMap::new();
+        let d = diff(&base, &fresh);
+        assert!(d.grown.is_empty());
+        assert_eq!(d.shrunk.len(), 1);
+        assert!(d.shrunk[0].contains("gone.rs"));
+    }
+}

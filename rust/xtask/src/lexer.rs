@@ -1,0 +1,305 @@
+//! A minimal, dependency-free Rust lexer — just enough fidelity for the
+//! repo-invariant lint rules.
+//!
+//! The scanner walks source text once and produces:
+//!
+//! * a token stream of identifiers/keywords/numbers and single-character
+//!   punctuation, each tagged with its 1-based source line — comments,
+//!   string literals, char literals and lifetimes never become tokens, so
+//!   a rule matching the token `unsafe` can never fire on the word inside
+//!   a doc comment or a test fixture string;
+//! * a per-line comment map (line → concatenated comment text on that
+//!   line), which is what the SAFETY-comment rule searches;
+//! * the set of lines that carry at least one code token, so rules can
+//!   distinguish comment-only lines from attribute/code lines.
+//!
+//! Handled literal forms: `// …`, nested `/* … */`, `"…"` with escapes,
+//! `r"…"`/`r#"…"#` (any hash depth), `b"…"`, `br#"…"#`, `'x'`/`'\n'` char
+//! literals, and `'lifetime` markers (the quote is dropped, the name
+//! lexes as an ordinary identifier). Raw identifiers (`r#fn`) degrade to
+//! `r`, `#`, `fn` — harmless for every rule here.
+
+use std::collections::{HashMap, HashSet};
+
+/// One code token: an identifier/keyword/number run or a single
+/// punctuation character.
+pub struct Tok {
+    /// The token text (identifier run or one punctuation char).
+    pub text: String,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// The scan result for one file (see module docs).
+pub struct Scan {
+    /// Code tokens in source order.
+    pub toks: Vec<Tok>,
+    comments: HashMap<usize, String>,
+    code_lines: HashSet<usize>,
+}
+
+impl Scan {
+    /// Concatenated comment text on `line`, if any.
+    pub fn comment_on(&self, line: usize) -> Option<&str> {
+        self.comments.get(&line).map(|s| s.as_str())
+    }
+
+    /// True when `line` holds comment text and no code tokens.
+    pub fn is_comment_only(&self, line: usize) -> bool {
+        self.comments.contains_key(&line) && !self.code_lines.contains(&line)
+    }
+
+    /// The contiguous run of comment-only lines ending at `line`
+    /// (inclusive), concatenated. Empty when `line` is not comment-only.
+    pub fn comment_run_ending_at(&self, line: usize) -> String {
+        let mut run = String::new();
+        let mut l = line;
+        while l >= 1 && self.is_comment_only(l) {
+            if let Some(c) = self.comment_on(l) {
+                run.push_str(c);
+                run.push('\n');
+            }
+            if l == 1 {
+                break;
+            }
+            l -= 1;
+        }
+        run
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Scan `src` into tokens + comment/code line maps.
+pub fn scan(src: &str) -> Scan {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: HashMap<usize, String> = HashMap::new();
+    let mut code_lines: HashSet<usize> = HashSet::new();
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            comments.entry(line).or_default().push_str(&text);
+            continue;
+        }
+        // Block comment (nested, possibly multi-line).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            let mut cur = String::from("/*");
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    cur.push_str("/*");
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    cur.push_str("*/");
+                    i += 2;
+                } else if b[i] == '\n' {
+                    comments.entry(line).or_default().push_str(&cur);
+                    cur.clear();
+                    line += 1;
+                    i += 1;
+                } else {
+                    cur.push(b[i]);
+                    i += 1;
+                }
+            }
+            comments.entry(line).or_default().push_str(&cur);
+            continue;
+        }
+        // Raw strings (r"…", r#"…"#, br"…") and byte strings/chars (b"…",
+        // b'…'). Anything that does not complete the literal prefix falls
+        // through to ordinary identifier scanning.
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            let raw = c == 'r' || (j < n && b[j] == 'r');
+            if c == 'b' && j < n && b[j] == 'r' {
+                j += 1;
+            }
+            if raw {
+                let mut hashes = 0usize;
+                while j < n && b[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && b[j] == '"' {
+                    code_lines.insert(line);
+                    j += 1;
+                    while j < n {
+                        if b[j] == '\n' {
+                            line += 1;
+                            j += 1;
+                            continue;
+                        }
+                        if b[j] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break;
+                            }
+                        }
+                        j += 1;
+                    }
+                    i = j;
+                    continue;
+                }
+            } else if c == 'b' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '\'') {
+                // Drop the `b`; the next loop turn scans the quoted body.
+                code_lines.insert(line);
+                i += 1;
+                continue;
+            }
+            // Fall through: ordinary identifier starting with r/b.
+        }
+        // String literal (escapes, may span lines).
+        if c == '"' {
+            code_lines.insert(line);
+            i += 1;
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                    continue;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            code_lines.insert(line);
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char literal: consume through the closing quote.
+                i += 2;
+                while i < n && b[i] != '\'' {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                i += 1;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                // Plain one-char literal like 'x' or '0'.
+                i += 3;
+                continue;
+            }
+            // Lifetime: drop the quote, lex the name as an identifier.
+            i += 1;
+            continue;
+        }
+        // Identifier / keyword / number run.
+        if is_ident_char(c) {
+            let start = i;
+            while i < n && is_ident_char(b[i]) {
+                i += 1;
+            }
+            toks.push(Tok { text: b[start..i].iter().collect(), line });
+            code_lines.insert(line);
+            continue;
+        }
+        // Single punctuation char.
+        toks.push(Tok { text: c.to_string(), line });
+        code_lines.insert(line);
+        i += 1;
+    }
+
+    Scan { toks, comments, code_lines }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(s: &Scan) -> Vec<&str> {
+        s.toks.iter().map(|t| t.text.as_str()).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_never_become_tokens() {
+        let s = scan("// unsafe here\nlet x = \"unsafe in a string\"; /* unsafe */\n");
+        assert!(!texts(&s).contains(&"unsafe"));
+        assert!(s.comment_on(1).unwrap().contains("unsafe here"));
+        assert!(s.comment_on(2).unwrap().contains("unsafe"));
+        assert!(s.is_comment_only(1));
+        assert!(!s.is_comment_only(2)); // line 2 also has code
+    }
+
+    #[test]
+    fn raw_strings_are_skipped_whole() {
+        let s = scan("let f = r#\"fn g() { unsafe { () } }\"#; let y = 1;\n");
+        let t = texts(&s);
+        assert!(!t.contains(&"unsafe"));
+        assert!(t.contains(&"y"));
+    }
+
+    #[test]
+    fn byte_strings_and_char_literals_are_skipped() {
+        let s = scan("let a = b\"unsafe\"; let c = 'u'; let esc = '\\n'; let lt: &'static str = \"x\";\n");
+        let t = texts(&s);
+        assert!(!t.contains(&"unsafe"));
+        assert!(t.contains(&"static")); // lifetime name lexes as ident
+    }
+
+    #[test]
+    fn nested_block_comments_terminate_correctly() {
+        let s = scan("/* outer /* inner */ still comment */ fn main() {}\n");
+        let t = texts(&s);
+        assert_eq!(t, vec!["fn", "main", "(", ")", "{", "}"]);
+    }
+
+    #[test]
+    fn lines_are_tracked_across_multiline_constructs() {
+        let s = scan("/* a\nb */\nfn f() {\n    g();\n}\n");
+        let f = s.toks.iter().find(|t| t.text == "fn").unwrap();
+        assert_eq!(f.line, 3);
+        let g = s.toks.iter().find(|t| t.text == "g").unwrap();
+        assert_eq!(g.line, 4);
+        assert!(s.is_comment_only(1));
+        assert!(s.is_comment_only(2));
+    }
+
+    #[test]
+    fn comment_run_concatenates_contiguous_comment_lines() {
+        let s = scan("// SAFETY: part one\n// part two\nunsafe fn f() {}\n");
+        let run = s.comment_run_ending_at(2);
+        assert!(run.contains("SAFETY:"));
+        assert!(run.contains("part two"));
+        assert_eq!(s.comment_run_ending_at(3), "");
+    }
+}

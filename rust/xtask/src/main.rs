@@ -1,0 +1,207 @@
+//! `cargo xtask` — repo-local developer tooling for ffdreg.
+//!
+//! Currently one subcommand:
+//!
+//! ```text
+//! cargo xtask lint [--bless-census] [--census-out PATH]
+//! ```
+//!
+//! which runs the zero-dependency static-analysis pass over the
+//! workspace sources (see `rules.rs` for the invariants) and the
+//! unsafe-site census gate (see `census.rs`).
+//!
+//! Exit codes: 0 clean, 1 violations/census growth, 2 usage or I/O
+//! error.
+
+mod census;
+mod lexer;
+mod rules;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Directories (repo-root relative) scanned for `.rs` sources.
+const SCAN_ROOTS: &[&str] = &[
+    "rust/src",
+    "rust/tests",
+    "rust/benches",
+    "rust/xtask/src",
+    "examples",
+];
+
+/// Extra single files outside the roots above.
+const SCAN_FILES: &[&str] = &["rust/build.rs", "rust/src/main.rs"];
+
+/// Directory names never descended into.
+const SKIP_DIRS: &[&str] = &["target", "vendor", ".git"];
+
+const BASELINE_REL: &str = "rust/xtask/unsafe_census.txt";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("lint") => lint(&args[1..]),
+        _ => {
+            eprintln!("usage: cargo xtask lint [--bless-census] [--census-out PATH]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn repo_root() -> PathBuf {
+    // xtask lives at <repo>/rust/xtask, so the repo root is two levels
+    // up from the manifest directory.
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .ancestors()
+        .nth(2)
+        .expect("xtask manifest dir has a grandparent")
+        .to_path_buf()
+}
+
+fn lint(args: &[String]) -> ExitCode {
+    let mut bless = false;
+    let mut census_out: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--bless-census" => bless = true,
+            "--census-out" => match it.next() {
+                Some(p) => census_out = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--census-out requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown flag: {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let root = repo_root();
+    let mut files: Vec<PathBuf> = Vec::new();
+    for rel in SCAN_ROOTS {
+        collect_rs(&root.join(rel), &mut files);
+    }
+    for rel in SCAN_FILES {
+        let p = root.join(rel);
+        if p.is_file() && !files.contains(&p) {
+            files.push(p);
+        }
+    }
+    files.sort();
+    if files.is_empty() {
+        eprintln!("xtask lint: no sources found under {}", root.display());
+        return ExitCode::from(2);
+    }
+
+    let mut violations: Vec<rules::Violation> = Vec::new();
+    let mut fresh: BTreeMap<String, usize> = BTreeMap::new();
+    for path in &files {
+        let Ok(src) = std::fs::read_to_string(path) else {
+            eprintln!("xtask lint: unreadable file {}", path.display());
+            return ExitCode::from(2);
+        };
+        let rel = rel_path(&root, path);
+        let scan = lexer::scan(&src);
+        rules::check_all(&rel, &scan, &mut violations);
+        let n = census::count_unsafe(&scan);
+        if n > 0 {
+            fresh.insert(rel, n);
+        }
+    }
+
+    for v in &violations {
+        println!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.msg);
+    }
+
+    // Census gate.
+    let baseline_path = root.join(BASELINE_REL);
+    let mut census_failed = false;
+    if bless {
+        if let Err(e) = std::fs::write(&baseline_path, census::render_baseline(&fresh)) {
+            eprintln!("xtask lint: cannot write {}: {e}", baseline_path.display());
+            return ExitCode::from(2);
+        }
+        println!(
+            "census: blessed {} unsafe sites across {} files -> {}",
+            fresh.values().sum::<usize>(),
+            fresh.len(),
+            BASELINE_REL
+        );
+    } else {
+        match std::fs::read_to_string(&baseline_path) {
+            Ok(text) => {
+                let base = census::parse_baseline(&text);
+                let d = census::diff(&base, &fresh);
+                for g in &d.grown {
+                    println!(
+                        "census: GROWTH {g} — justify the new unsafe, then run \
+                         `cargo xtask lint --bless-census` and land the commit \
+                         with an [unsafe-bless] token"
+                    );
+                    census_failed = true;
+                }
+                for s in &d.shrunk {
+                    println!("census: shrink {s} (nice — re-bless when convenient)");
+                }
+            }
+            Err(_) => {
+                println!(
+                    "census: no baseline at {BASELINE_REL} — run \
+                     `cargo xtask lint --bless-census` to create it"
+                );
+                census_failed = true;
+            }
+        }
+    }
+
+    if let Some(out) = census_out {
+        if let Err(e) = census::write_json(&out, &fresh) {
+            eprintln!("xtask lint: cannot write {}: {e}", out.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    let total_unsafe: usize = fresh.values().sum();
+    println!(
+        "xtask lint: {} files scanned, {} violations, {} unsafe sites in {} files",
+        files.len(),
+        violations.len(),
+        total_unsafe,
+        fresh.len()
+    );
+    if violations.is_empty() && !census_failed {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if SKIP_DIRS.iter().any(|s| *s == name) {
+                continue;
+            }
+            collect_rs(&path, out);
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+}

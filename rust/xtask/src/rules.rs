@@ -1,0 +1,530 @@
+//! The repo-invariant lint rules.
+//!
+//! Each rule takes a file's relative path (forward-slash separated, repo
+//! root relative, e.g. `rust/src/bspline/ttli.rs`), its [`Scan`], and
+//! pushes [`Violation`]s. The rules are deliberately narrow: they encode
+//! the invariants the ffdreg perf story depends on, not general style.
+
+use crate::lexer::Scan;
+
+/// One lint finding, printed as `path:line: [rule] message`.
+pub struct Violation {
+    /// Repo-relative path of the offending file.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Short rule name, e.g. `safety-comment`.
+    pub rule: &'static str,
+    /// Human-readable description of the finding.
+    pub msg: String,
+}
+
+impl Violation {
+    fn new(path: &str, line: usize, rule: &'static str, msg: String) -> Self {
+        Violation { path: path.to_string(), line, rule, msg }
+    }
+}
+
+/// Is line `l` "skippable" when walking upward from an `unsafe` site to
+/// its justification: attribute lines (`#[...]` / `#![...]`) sit between
+/// the comment and the item, so we hop over lines whose code tokens on
+/// that line start with `#`.
+fn line_starts_with_attr(scan: &Scan, l: usize) -> bool {
+    // First code token on line `l` is `#` — good enough: nothing else in
+    // this codebase starts a code line with `#` except attributes.
+    scan.toks
+        .iter()
+        .find(|t| t.line == l)
+        .map(|t| t.text == "#")
+        .unwrap_or(false)
+}
+
+fn has_code_on(scan: &Scan, l: usize) -> bool {
+    scan.toks.iter().any(|t| t.line == l)
+}
+
+/// Rule `safety-comment`: every `unsafe` keyword must be justified by a
+/// `SAFETY:` comment — on the same line, or in the contiguous comment
+/// run immediately above (attribute lines may sit in between). Doc
+/// comments with a `# Safety` section (the rustdoc convention on
+/// `unsafe fn` declarations) are accepted too.
+pub fn check_safety_comments(path: &str, scan: &Scan, out: &mut Vec<Violation>) {
+    for (idx, t) in scan.toks.iter().enumerate() {
+        if t.text != "unsafe" {
+            continue;
+        }
+        // `unsafe` inside a doc attribute or macro name can't happen —
+        // the lexer only emits code tokens. But `r#unsafe` degrades to
+        // `r # unsafe`; treat it the same (it never appears here anyway).
+        let _ = idx;
+        if is_justified(scan, t.line) {
+            continue;
+        }
+        out.push(Violation::new(
+            path,
+            t.line,
+            "safety-comment",
+            "`unsafe` without an immediately-preceding `// SAFETY:` comment \
+             (or `# Safety` doc section)"
+                .to_string(),
+        ));
+    }
+}
+
+fn is_justified(scan: &Scan, unsafe_line: usize) -> bool {
+    // Same-line trailing comment.
+    if let Some(c) = scan.comment_on(unsafe_line) {
+        if c.contains("SAFETY:") {
+            return true;
+        }
+    }
+    // Walk upward: skip attribute-only lines, then demand a comment run.
+    let mut l = unsafe_line;
+    while l > 1 {
+        l -= 1;
+        if scan.is_comment_only(l) {
+            let run = scan.comment_run_ending_at(l);
+            return run.contains("SAFETY:") || run.contains("# Safety");
+        }
+        if has_code_on(scan, l) {
+            if line_starts_with_attr(scan, l) {
+                // Attribute between comment and item — also accept a
+                // trailing comment on the attribute line itself.
+                if let Some(c) = scan.comment_on(l) {
+                    if c.contains("SAFETY:") {
+                        return true;
+                    }
+                }
+                continue;
+            }
+            return false;
+        }
+        // Blank line breaks the "immediately preceding" contract.
+        return false;
+    }
+    false
+}
+
+/// Rule `raw-mul-add`: `.mul_add(` / `f32::mul_add(` is forbidden
+/// outside `util/simd.rs`. Everything must route through
+/// `Isa::fused_mul_add` / `simd::fused_lerp` so the single-rounding
+/// bit-identity contract has exactly one owner.
+pub fn check_raw_mul_add(path: &str, scan: &Scan, out: &mut Vec<Violation>) {
+    if path.ends_with("util/simd.rs") {
+        return;
+    }
+    for (i, t) in scan.toks.iter().enumerate() {
+        if t.text != "mul_add" || i == 0 {
+            continue;
+        }
+        let prev = &scan.toks[i - 1].text;
+        // Method call `.mul_add(` or path call `f32::mul_add(`. A bare
+        // `mul_add` ident (e.g. a local fn named mul_add — none exist)
+        // or a longer ident like `fused_mul_add` never matches: the
+        // lexer emits maximal ident runs, so `fused_mul_add` is ONE
+        // token, not two.
+        if prev == "." || prev == ":" {
+            out.push(Violation::new(
+                path,
+                t.line,
+                "raw-mul-add",
+                "raw `mul_add` call outside util/simd.rs — use \
+                 `util::simd::fused_mul_add` / `fused_lerp` (or the `Simd` \
+                 trait) so the single-rounding contract stays centralized"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Line regions covered by `#[cfg(test)] mod … { … }` blocks: rules that
+/// police production numerics skip test modules.
+fn test_mod_regions(scan: &Scan) -> Vec<(usize, usize)> {
+    let toks = &scan.toks;
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        // Match `# [ cfg ( test ) ]` allowing nothing in between.
+        let is_cfg_test = toks[i].text == "#"
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks[i + 3].text == "("
+            && toks[i + 4].text == "test"
+            && toks[i + 5].text == ")"
+            && toks[i + 6].text == "]";
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // Scan forward for `mod <name> {` before any other item keyword.
+        let mut j = i + 7;
+        let mut saw_mod = false;
+        while j < toks.len() && j < i + 20 {
+            match toks[j].text.as_str() {
+                "mod" => {
+                    saw_mod = true;
+                    j += 1;
+                    break;
+                }
+                // Another attribute may follow (#[cfg(test)] #[allow(..)] mod …)
+                "#" | "[" | "]" | "(" | ")" | "," | "=" => j += 1,
+                w if w.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') => j += 1,
+                _ => break,
+            }
+        }
+        if !saw_mod {
+            i += 7;
+            continue;
+        }
+        // j points at the mod name; find the opening brace then match it.
+        let mut k = j;
+        while k < toks.len() && toks[k].text != "{" {
+            k += 1;
+        }
+        if k >= toks.len() {
+            break;
+        }
+        let start_line = toks[i].line;
+        let mut depth = 0isize;
+        let mut end_line = toks[toks.len() - 1].line;
+        while k < toks.len() {
+            match toks[k].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end_line = toks[k].line;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        regions.push((start_line, end_line));
+        i = k.max(i + 7);
+    }
+    regions
+}
+
+fn in_regions(regions: &[(usize, usize)], line: usize) -> bool {
+    regions.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+/// Rule `float-sum`: inside `ffd/` and `bspline/`, iterator `.sum()` /
+/// `.product()` reductions are forbidden in production code — the
+/// deterministic per-slice reduction helpers own accumulation order.
+/// Test modules are exempt; a specific site can be blessed with a
+/// `lint:allow(float-sum)` comment on the line or immediately above.
+pub fn check_float_sum(path: &str, scan: &Scan, out: &mut Vec<Violation>) {
+    if !(path.contains("/ffd/") || path.contains("/bspline/")) {
+        return;
+    }
+    let tests = test_mod_regions(scan);
+    for (i, t) in scan.toks.iter().enumerate() {
+        if (t.text != "sum" && t.text != "product") || i == 0 {
+            continue;
+        }
+        if scan.toks[i - 1].text != "." {
+            continue;
+        }
+        // Require a call: `.sum(` or turbofish `.sum::<f64>(`.
+        let next = scan.toks.get(i + 1).map(|t| t.text.as_str());
+        if next != Some("(") && next != Some(":") {
+            continue;
+        }
+        if in_regions(&tests, t.line) {
+            continue;
+        }
+        if blessed(scan, t.line, "lint:allow(float-sum)") {
+            continue;
+        }
+        out.push(Violation::new(
+            path,
+            t.line,
+            "float-sum",
+            format!(
+                "iterator `.{}()` reduction in ffd/bspline production code — \
+                 use the deterministic per-slice reduction helpers, or bless \
+                 this site with a `lint:allow(float-sum)` comment explaining \
+                 why its order is deterministic",
+                t.text
+            ),
+        ));
+    }
+}
+
+/// A site is blessed when `tag` appears in the same-line comment or in
+/// the contiguous comment run immediately above.
+fn blessed(scan: &Scan, line: usize, tag: &str) -> bool {
+    if let Some(c) = scan.comment_on(line) {
+        if c.contains(tag) {
+            return true;
+        }
+    }
+    if line > 1 && scan.is_comment_only(line - 1) {
+        return scan.comment_run_ending_at(line - 1).contains(tag);
+    }
+    false
+}
+
+/// Files allowed to define `#[target_feature]` functions: the slab
+/// kernels whose wrappers are reached exclusively through the
+/// `Isa::clamp_to_hw()` dispatch match, plus the SIMD substrate itself.
+const TARGET_FEATURE_FILES: &[&str] = &[
+    "rust/src/util/simd.rs",
+    "rust/src/bspline/ttli.rs",
+    "rust/src/bspline/vt.rs",
+    "rust/src/bspline/vv.rs",
+];
+
+/// Rule `undispatched-target-feature`: `#[target_feature]` functions may
+/// only live in the blessed kernel files, must not be `pub` (so no path
+/// outside the dispatch match can reach them), and their file must show
+/// dispatch evidence (a `clamp_to_hw` call feeding a `match`). Calling a
+/// `#[target_feature]` fn on a CPU without the feature is UB — the
+/// runtime-detected dispatch is the only sound entry point.
+pub fn check_target_feature(path: &str, scan: &Scan, out: &mut Vec<Violation>) {
+    let toks = &scan.toks;
+    let mut any = false;
+    for i in 0..toks.len() {
+        if toks[i].text != "target_feature" {
+            continue;
+        }
+        // Require attribute position: preceded by `[` then `#`.
+        if i < 2 || toks[i - 1].text != "[" || toks[i - 2].text != "#" {
+            continue;
+        }
+        any = true;
+        let line = toks[i].line;
+        if !TARGET_FEATURE_FILES.iter().any(|f| path.ends_with(f)) {
+            out.push(Violation::new(
+                path,
+                line,
+                "undispatched-target-feature",
+                format!(
+                    "`#[target_feature]` outside the dispatched kernel files \
+                     ({}) — add the file to the blessed list only with a \
+                     matching `clamp_to_hw` dispatch match",
+                    TARGET_FEATURE_FILES.join(", ")
+                ),
+            ));
+            continue;
+        }
+        // Forward-scan to the `fn` this attribute decorates; `pub`
+        // before it means the wrapper escapes the dispatch module.
+        let mut j = i;
+        while j < toks.len() && toks[j].text != "fn" {
+            if toks[j].text == "pub" {
+                out.push(Violation::new(
+                    path,
+                    line,
+                    "undispatched-target-feature",
+                    "`pub` `#[target_feature]` fn — wrappers must stay \
+                     private so the `clamp_to_hw` dispatch match is the only \
+                     caller"
+                        .to_string(),
+                ));
+                break;
+            }
+            j += 1;
+        }
+    }
+    if any && !toks.iter().any(|t| t.text.starts_with("clamp_to_hw")) {
+        out.push(Violation::new(
+            path,
+            toks.iter().find(|t| t.text == "target_feature").map(|t| t.line).unwrap_or(1),
+            "undispatched-target-feature",
+            "file defines `#[target_feature]` fns but shows no \
+             `clamp_to_hw` dispatch evidence — wrappers are unreachable \
+             through the runtime-detected ISA match"
+                .to_string(),
+        ));
+    }
+}
+
+/// Run every rule over one file.
+pub fn check_all(path: &str, scan: &Scan, out: &mut Vec<Violation>) {
+    check_safety_comments(path, scan, out);
+    check_raw_mul_add(path, scan, out);
+    check_float_sum(path, scan, out);
+    check_target_feature(path, scan, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::scan;
+
+    fn run(path: &str, src: &str) -> Vec<Violation> {
+        let s = scan(src);
+        let mut v = Vec::new();
+        check_all(path, &s, &mut v);
+        v
+    }
+
+    fn rules(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    // ---- safety-comment ----
+
+    #[test]
+    fn missing_safety_comment_fires() {
+        let src = "fn f(p: *const f32) -> f32 {\n    unsafe { *p }\n}\n";
+        let v = run("rust/src/x.rs", src);
+        assert_eq!(rules(&v), vec!["safety-comment"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn preceding_safety_comment_passes() {
+        let src = "fn f(p: *const f32) -> f32 {\n    // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n";
+        assert!(run("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn same_line_safety_comment_passes() {
+        let src = "fn f(p: *const f32) -> f32 {\n    unsafe { *p } // SAFETY: p valid per contract.\n}\n";
+        assert!(run("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn multiline_comment_run_passes() {
+        let src = "// SAFETY: long explanation that\n// spans multiple lines.\nunsafe fn f() {}\n";
+        assert!(run("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_hops_over_attributes() {
+        let src = "// SAFETY: wrapper is only reached via dispatch.\n#[inline]\n#[cfg(target_arch = \"x86_64\")]\nunsafe fn f() {}\n";
+        assert!(run("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn doc_safety_section_passes() {
+        let src = "/// Does a thing.\n///\n/// # Safety\n/// Caller must ensure the slice is non-empty.\nunsafe fn f() {}\n";
+        assert!(run("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn blank_line_breaks_the_justification() {
+        let src = "// SAFETY: stale comment.\n\nunsafe fn f() {}\n";
+        assert_eq!(rules(&run("rust/src/x.rs", src)), vec!["safety-comment"]);
+    }
+
+    #[test]
+    fn unsafe_in_string_or_comment_is_ignored() {
+        let src = "// this mentions unsafe code\nlet s = \"unsafe { }\";\n";
+        assert!(run("rust/src/x.rs", src).is_empty());
+    }
+
+    // ---- raw-mul-add ----
+
+    #[test]
+    fn raw_mul_add_in_ffd_fires() {
+        let src = "fn lerp(a: f32, b: f32, t: f32) -> f32 {\n    t.mul_add(b - a, a)\n}\n";
+        let v = run("rust/src/ffd/gradient.rs", src);
+        assert_eq!(rules(&v), vec!["raw-mul-add"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn path_form_mul_add_fires() {
+        let src = "fn f(a: f32) -> f32 { f32::mul_add(a, 2.0, 1.0) }\n";
+        assert_eq!(rules(&run("rust/src/volume/resample.rs", src)), vec!["raw-mul-add"]);
+    }
+
+    #[test]
+    fn mul_add_in_simd_rs_is_allowed() {
+        let src = "pub fn fused_mul_add(a: f32, b: f32, c: f32) -> f32 { a.mul_add(b, c) }\n";
+        assert!(run("rust/src/util/simd.rs", src).is_empty());
+    }
+
+    #[test]
+    fn fused_mul_add_ident_does_not_match() {
+        let src = "let y = crate::util::simd::fused_mul_add(a, b, c);\n";
+        assert!(run("rust/src/ffd/gradient.rs", src).is_empty());
+    }
+
+    // ---- float-sum ----
+
+    #[test]
+    fn float_sum_in_ffd_fires() {
+        let src = "fn total(v: &[f64]) -> f64 {\n    v.iter().sum()\n}\n";
+        let v = run("rust/src/ffd/nmi.rs", src);
+        assert_eq!(rules(&v), vec!["float-sum"]);
+    }
+
+    #[test]
+    fn turbofish_sum_fires() {
+        let src = "fn total(v: &[f64]) -> f64 { v.iter().sum::<f64>() }\n";
+        assert_eq!(rules(&run("rust/src/bspline/coeffs.rs", src)), vec!["float-sum"]);
+    }
+
+    #[test]
+    fn sum_outside_hot_dirs_is_allowed() {
+        let src = "fn total(v: &[f64]) -> f64 { v.iter().sum() }\n";
+        assert!(run("rust/src/util/stats.rs", src).is_empty());
+    }
+
+    #[test]
+    fn sum_in_cfg_test_mod_is_exempt() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    fn t(v: &[f64]) -> f64 { v.iter().sum() }\n}\n";
+        assert!(run("rust/src/ffd/nmi.rs", src).is_empty());
+    }
+
+    #[test]
+    fn blessed_sum_is_exempt() {
+        let src = "fn total(v: &[f64]) -> f64 {\n    // lint:allow(float-sum): serial iteration, fixed order.\n    v.iter().sum()\n}\n";
+        assert!(run("rust/src/ffd/nmi.rs", src).is_empty());
+    }
+
+    #[test]
+    fn checked_sum_field_access_is_not_a_call() {
+        // `.sum` as a struct field (no call parens) must not fire.
+        let src = "fn f(s: &Stats) -> f64 { s.sum }\n";
+        assert!(run("rust/src/ffd/nmi.rs", src).is_empty());
+    }
+
+    // ---- undispatched-target-feature ----
+
+    #[test]
+    fn target_feature_outside_kernel_files_fires() {
+        let src = "#[target_feature(enable = \"avx2\")]\nunsafe fn fast() {} // SAFETY: n/a\n";
+        let v = run("rust/src/ffd/workspace.rs", src);
+        assert!(rules(&v).contains(&"undispatched-target-feature"));
+    }
+
+    #[test]
+    fn pub_target_feature_fn_fires() {
+        let src = "// SAFETY: wrapper.\n#[target_feature(enable = \"avx2\")]\npub unsafe fn fill_avx2() {}\nfn d(isa: Isa) { match isa.clamp_to_hw() { _ => () } }\n";
+        let v = run("rust/src/bspline/ttli.rs", src);
+        assert!(rules(&v).contains(&"undispatched-target-feature"));
+    }
+
+    #[test]
+    fn private_dispatched_wrapper_passes() {
+        let src = "// SAFETY: only called from the dispatch match below.\n#[target_feature(enable = \"avx2\")]\nunsafe fn fill_avx2() {}\nfn dispatch(isa: Isa) {\n    match isa.clamp_to_hw() {\n        // SAFETY: clamp_to_hw verified avx2 is present.\n        Isa::Avx2 => unsafe { fill_avx2() },\n        _ => (),\n    }\n}\n";
+        assert!(run("rust/src/bspline/ttli.rs", src).is_empty());
+    }
+
+    #[test]
+    fn target_feature_without_dispatch_evidence_fires() {
+        let src = "// SAFETY: wrapper.\n#[target_feature(enable = \"avx2\")]\nunsafe fn fill_avx2() {}\n";
+        let v = run("rust/src/bspline/vt.rs", src);
+        assert!(rules(&v).contains(&"undispatched-target-feature"));
+    }
+
+    // ---- test-region detection ----
+
+    #[test]
+    fn test_mod_regions_span_the_braces() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { let x = vec![1]; }\n}\nfn c() {}\n";
+        let s = scan(src);
+        let r = test_mod_regions(&s);
+        assert_eq!(r.len(), 1);
+        assert!(r[0].0 <= 3 && r[0].1 >= 5);
+        assert!(!in_regions(&r, 6));
+    }
+}

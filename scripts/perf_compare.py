@@ -30,10 +30,13 @@ import os
 import sys
 
 
-def load_run(directory):
+def load_run(directory, series=""):
     """Return ({key: ns_per_voxel}, total_records, total_skipped, files).
 
     key = (bench, method, "x×y×z", threads, simd, tile-or-"-").
+    A non-empty `series` prefixes the bench component ("pgo:interp"), so
+    differently-built binaries (e.g. the PGO lane) are tracked as their own
+    rows and never compared against the default build's timings.
     Records without a finite ns_per_voxel are ignored (the harness counts
     them in "skipped").
     """
@@ -49,6 +52,8 @@ def load_run(directory):
             print(f"error: cannot read {path}: {exc}", file=sys.stderr)
             sys.exit(2)
         bench = doc.get("bench", os.path.basename(path))
+        if series:
+            bench = f"{series}:{bench}"
         skipped = int(doc.get("skipped", 0))
         total_skipped += skipped
         records = doc.get("records", [])
@@ -79,10 +84,16 @@ def fmt_key(key):
     return f"{bench} | {method} | {dims} | t{threads} | {simd} | tile {tile}"
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--baseline", required=True, help="directory with the previous run's BENCH_*.json")
     ap.add_argument("--current", required=True, help="directory with this run's BENCH_*.json")
+    ap.add_argument(
+        "--series",
+        default="",
+        help="label prefixed onto every bench key (both sides), keeping e.g. "
+        "the PGO lane's timings as their own tracked rows (default: none)",
+    )
     ap.add_argument(
         "--threshold",
         type=float,
@@ -100,9 +111,11 @@ def main():
         action="store_true",
         help="report but do not fail — bless an intentional regression into the new baseline",
     )
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    cur, cur_records, cur_skipped, cur_files = load_run(args.current)
+    if args.series:
+        print(f"series: {args.series}")
+    cur, cur_records, cur_skipped, cur_files = load_run(args.current, args.series)
     if not cur_files:
         print(f"error: no BENCH_*.json under --current {args.current}", file=sys.stderr)
         sys.exit(2)
@@ -125,7 +138,7 @@ def main():
         print("=" * 66)
         sys.exit(0)
 
-    base, base_records, base_skipped, base_files = load_run(args.baseline)
+    base, base_records, base_skipped, base_files = load_run(args.baseline, args.series)
     print(
         f"baseline: {len(base_files)} file(s), {base_records} record(s), "
         f"{len(base)} keyed timing(s), {base_skipped} skipped value(s)"

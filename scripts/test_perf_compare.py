@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Unit tests for the perf-regression gate (scripts/perf_compare.py).
+
+Stdlib-only (unittest + tempfile); run directly or via
+`python3 -m unittest discover -s scripts`. CI runs this in the `python`
+job so gate regressions (key parsing, aggregation, exit codes) are caught
+before they silently weaken the perf gate.
+"""
+
+import contextlib
+import io
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import perf_compare  # noqa: E402
+
+
+def write_bench(directory, name, records, bench=None, skipped=0):
+    """Write one BENCH_<name>.json document in the harness's schema."""
+    doc = {"bench": bench if bench is not None else name, "skipped": skipped, "records": records}
+    path = os.path.join(directory, f"BENCH_{name}.json")
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh)
+    return path
+
+
+def rec(method="ttli", dims=(64, 64, 64), threads=1, simd="avx2", tile=4, ns=10.0):
+    return {
+        "method": method,
+        "dims": list(dims),
+        "threads": threads,
+        "simd": simd,
+        "tile": tile,
+        "ns_per_voxel": ns,
+    }
+
+
+def run_main(argv):
+    """Run perf_compare.main(argv); return (exit_code, stdout, stderr)."""
+    out, err = io.StringIO(), io.StringIO()
+    code = 0
+    with contextlib.redirect_stdout(out), contextlib.redirect_stderr(err):
+        try:
+            perf_compare.main(argv)
+        except SystemExit as exc:
+            code = exc.code if isinstance(exc.code, int) else 0
+    return code, out.getvalue(), err.getvalue()
+
+
+class LoadRunTests(unittest.TestCase):
+    def test_key_fields_and_dims_join(self):
+        with tempfile.TemporaryDirectory() as d:
+            write_bench(d, "interp", [rec(method="vv", dims=(128, 96, 32), threads=8, simd="sse2", tile=8, ns=3.5)])
+            table, n_records, n_skipped, files = perf_compare.load_run(d)
+            self.assertEqual(len(files), 1)
+            self.assertEqual(n_records, 1)
+            self.assertEqual(n_skipped, 0)
+            key = ("interp", "vv", "128x96x32", 8, "sse2", "8")
+            self.assertEqual(table, {key: 3.5})
+
+    def test_min_aggregation_keeps_fastest_duplicate(self):
+        with tempfile.TemporaryDirectory() as d:
+            write_bench(d, "interp", [rec(ns=12.0), rec(ns=9.0), rec(ns=10.5)])
+            table, n_records, _, _ = perf_compare.load_run(d)
+            self.assertEqual(n_records, 3)
+            self.assertEqual(len(table), 1)
+            self.assertEqual(next(iter(table.values())), 9.0)
+
+    def test_non_finite_ns_dropped_and_skipped_counted(self):
+        with tempfile.TemporaryDirectory() as d:
+            bad = rec()
+            bad["ns_per_voxel"] = float("nan")
+            worse = rec(method="vt")
+            worse["ns_per_voxel"] = float("inf")
+            write_bench(d, "interp", [bad, worse, rec(method="tt", ns=5.0)], skipped=2)
+            table, n_records, n_skipped, _ = perf_compare.load_run(d)
+            self.assertEqual(n_records, 3)
+            self.assertEqual(n_skipped, 2)
+            self.assertEqual(len(table), 1)
+
+    def test_series_prefixes_bench_component(self):
+        with tempfile.TemporaryDirectory() as d:
+            write_bench(d, "interp", [rec(ns=4.0)])
+            plain, _, _, _ = perf_compare.load_run(d)
+            pgo, _, _, _ = perf_compare.load_run(d, series="pgo")
+            (plain_key,) = plain
+            (pgo_key,) = pgo
+            self.assertEqual(plain_key[0], "interp")
+            self.assertEqual(pgo_key[0], "pgo:interp")
+            self.assertEqual(plain_key[1:], pgo_key[1:])
+            # Distinct keys: a pgo row can never match a default-build row.
+            self.assertNotIn(pgo_key, plain)
+
+
+class GateExitCodeTests(unittest.TestCase):
+    def gate(self, base_records, cur_records, extra=()):
+        with tempfile.TemporaryDirectory() as base, tempfile.TemporaryDirectory() as cur:
+            write_bench(base, "interp", base_records)
+            write_bench(cur, "interp", cur_records)
+            return run_main(["--baseline", base, "--current", cur, *extra])
+
+    def test_small_delta_passes(self):
+        code, out, _ = self.gate([rec(ns=10.0)], [rec(ns=11.0)])  # +10% < 15%
+        self.assertEqual(code, 0)
+        self.assertIn("perf gate: OK", out)
+
+    def test_regression_beyond_threshold_fails(self):
+        code, out, _ = self.gate([rec(ns=10.0)], [rec(ns=12.0)])  # +20%
+        self.assertEqual(code, 1)
+        self.assertIn("REGRESSION", out)
+
+    def test_custom_threshold(self):
+        code, _, _ = self.gate([rec(ns=10.0)], [rec(ns=11.0)], extra=["--threshold", "0.05"])
+        self.assertEqual(code, 1)
+
+    def test_min_ns_noise_floor_ignores_fast_keys(self):
+        code, out, _ = self.gate([rec(ns=0.5)], [rec(ns=2.0)], extra=["--min-ns", "1.0"])
+        self.assertEqual(code, 0)
+        self.assertIn("1 below the", out)
+
+    def test_bless_reports_but_passes(self):
+        code, out, _ = self.gate([rec(ns=10.0)], [rec(ns=20.0)], extra=["--bless"])
+        self.assertEqual(code, 0)
+        self.assertIn("blessed", out)
+
+    def test_vacuous_overlap_fails(self):
+        # Baseline has timings, current matches none of them: the gate must
+        # fail rather than pass with nothing compared.
+        code, _, err = self.gate([rec(method="ttli")], [rec(method="renamed")])
+        self.assertEqual(code, 1)
+        self.assertIn("vacuously", err)
+
+    def test_vacuous_overlap_blessed_passes(self):
+        code, _, _ = self.gate([rec(method="ttli")], [rec(method="renamed")], extra=["--bless"])
+        self.assertEqual(code, 0)
+
+    def test_missing_baseline_is_loud_skip(self):
+        with tempfile.TemporaryDirectory() as cur, tempfile.TemporaryDirectory() as empty:
+            write_bench(cur, "interp", [rec()])
+            missing = os.path.join(empty, "never-downloaded")
+            code, out, _ = run_main(["--baseline", missing, "--current", cur])
+            self.assertEqual(code, 0)
+            self.assertIn("PERF GATE SKIPPED", out)
+
+    def test_missing_current_is_usage_error(self):
+        with tempfile.TemporaryDirectory() as base, tempfile.TemporaryDirectory() as cur:
+            write_bench(base, "interp", [rec()])
+            code, _, err = run_main(["--baseline", base, "--current", cur])
+            self.assertEqual(code, 2)
+            self.assertIn("no BENCH_*.json", err)
+
+    def test_series_flag_labels_and_compares(self):
+        with tempfile.TemporaryDirectory() as base, tempfile.TemporaryDirectory() as cur:
+            write_bench(base, "interp", [rec(ns=10.0)])
+            write_bench(cur, "interp", [rec(ns=25.0)])
+            code, out, _ = run_main(
+                ["--baseline", base, "--current", cur, "--series", "pgo"]
+            )
+            self.assertEqual(code, 1)
+            self.assertIn("series: pgo", out)
+            self.assertIn("pgo:interp", out)
+
+
+if __name__ == "__main__":
+    unittest.main()
