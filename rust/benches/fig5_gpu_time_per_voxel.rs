@@ -19,7 +19,7 @@ use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::cli::Args;
 use ffdreg::memmodel::gpumodel::{time_per_voxel, GTX1050, RTX2070};
 use ffdreg::phantom::dataset::{scaled_dims, TABLE2};
-use ffdreg::util::bench::{full_scale, parse_thread_axis, BenchJson, Report};
+use ffdreg::util::bench::{full_scale, parse_thread_axis, BenchJson, BenchTrace, Report};
 use ffdreg::util::stats::Summary;
 use ffdreg::util::timer;
 
@@ -29,6 +29,7 @@ fn main() {
     let scale = if full_scale() { 0.5 } else { 0.12 };
     let threads_axis = parse_thread_axis(args.get("threads"));
     let mut sink = BenchJson::new("fig5_gpu_time_per_voxel", args.get("json"));
+    let tracer = BenchTrace::new("fig5_gpu_time_per_voxel", args.has("trace"), args.get("json"));
 
     let mut rep = Report::new(
         "fig5_time_per_voxel",
@@ -52,6 +53,9 @@ fn main() {
                     let mut grid = ControlGrid::zeros(vd, [t, t, t]);
                     grid.randomize(pi as u64 + 1, 5.0);
                     let stats = timer::time_adaptive(1, 5, 0.1, || {
+                        let _span = ffdreg::util::trace::span("bench", "fig5.interpolate")
+                            .arg_num("tile", t as f64)
+                            .arg_num("threads", threads as f64);
                         std::hint::black_box(imp.interpolate(&grid, vd));
                     });
                     let ns = stats.min() * 1e9 / vd.count() as f64;
@@ -103,4 +107,5 @@ fn main() {
     }
     rep.finish();
     sink.finish();
+    tracer.finish();
 }

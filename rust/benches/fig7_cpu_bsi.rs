@@ -22,7 +22,7 @@
 use ffdreg::bspline::exec::Pooled;
 use ffdreg::bspline::{ControlGrid, Interpolator, Method};
 use ffdreg::cli::Args;
-use ffdreg::util::bench::{full_scale, parse_thread_axis, BenchJson, Report};
+use ffdreg::util::bench::{full_scale, parse_thread_axis, BenchJson, BenchTrace, Report};
 use ffdreg::util::simd::{self, Isa};
 use ffdreg::util::timer;
 use ffdreg::volume::Dims;
@@ -31,6 +31,8 @@ fn time_ns_per_voxel(imp: &dyn Interpolator, vd: Dims, tile: usize) -> f64 {
     let mut grid = ControlGrid::zeros(vd, [tile, tile, tile]);
     grid.randomize(3, 5.0);
     let s = timer::time_adaptive(1, 5, 0.2, || {
+        let _span =
+            ffdreg::util::trace::span("bench", "fig7.interpolate").arg_num("tile", tile as f64);
         std::hint::black_box(imp.interpolate(&grid, vd));
     });
     s.min() * 1e9 / vd.count() as f64
@@ -152,6 +154,7 @@ fn main() {
     let vd = Dims::new(edge, edge, edge);
     let threads_axis = parse_thread_axis(args.get("threads"));
     let mut sink = BenchJson::new("fig7_cpu_bsi", args.get("json"));
+    let tracer = BenchTrace::new("fig7_cpu_bsi", args.has("trace"), args.get("json"));
 
     if let Some(spec) = args.get("simd") {
         // The SIMD axis extends past the paper's 3–7 tile range: 8/12/16
@@ -168,6 +171,7 @@ fn main() {
             &mut sink,
         );
         sink.finish();
+        tracer.finish();
         return;
     }
 
@@ -244,4 +248,5 @@ fn main() {
     }
     speed_rep.finish();
     sink.finish();
+    tracer.finish();
 }

@@ -19,7 +19,7 @@ use ffdreg::cli::Args;
 use ffdreg::ffd::{multilevel::register_with_method, FfdConfig};
 use ffdreg::memmodel::gpumodel::{speedup_over_tv, GTX1050, RTX2070};
 use ffdreg::phantom::dataset::generate_dataset;
-use ffdreg::util::bench::{full_scale, BenchJson, Report};
+use ffdreg::util::bench::{full_scale, BenchJson, BenchTrace, Report};
 
 fn main() {
     let args = Args::from_env();
@@ -29,6 +29,9 @@ fn main() {
     let pairs = generate_dataset(scale, 7);
     let cfg = FfdConfig { levels: 2, max_iter: iters, threads, ..Default::default() };
     let mut sink = BenchJson::from_env("fig8_fig9_registration");
+    // The FFD hot loop is span-instrumented end to end, so this bench's
+    // trace shows the level→iteration→chunk hierarchy per method.
+    let tracer = BenchTrace::from_env("fig8_fig9_registration");
 
     let mut rep = Report::new(
         "fig8_fig9_registration",
@@ -39,8 +42,14 @@ fn main() {
     let mut sum_bsi_frac = 0.0;
     for pair in &pairs {
         let aff = ffdreg::affine::register(&pair.intra, &pair.pre, &Default::default());
-        let tv = register_with_method(&pair.intra, &aff.warped, Method::Tv, &cfg);
-        let ttli = register_with_method(&pair.intra, &aff.warped, Method::Ttli, &cfg);
+        let tv = {
+            let _span = ffdreg::util::trace::span("bench", "fig8.register.tv");
+            register_with_method(&pair.intra, &aff.warped, Method::Tv, &cfg)
+        };
+        let ttli = {
+            let _span = ffdreg::util::trace::span("bench", "fig8.register.ttli");
+            register_with_method(&pair.intra, &aff.warped, Method::Ttli, &cfg)
+        };
         let speedup = tv.timing.total_s / ttli.timing.total_s;
         sum_speedup += speedup;
         sum_bsi_frac += tv.timing.bsi_fraction();
@@ -85,4 +94,5 @@ fn main() {
     rep.note("paper Fig 8: 1.30x avg (GTX1050, BSI 27% of total); Fig 9: 1.14x (RTX2070, BSI 15%)");
     rep.finish();
     sink.finish();
+    tracer.finish();
 }

@@ -22,6 +22,7 @@ use super::service::{run_register, OpError, RegisterOp};
 use super::store::VolumeStore;
 use crate::ffd::{ProgressEvent, RegistrationHooks};
 use crate::util::json::Json;
+use crate::util::trace;
 
 /// Registration-queue tuning knobs.
 #[derive(Clone, Debug)]
@@ -77,6 +78,14 @@ pub enum JobState {
         iteration: usize,
         /// Objective after the latest iteration (+∞ until the first).
         cost: f64,
+        /// Cumulative BSI kernel time so far (s).
+        bsi_s: f64,
+        /// Cumulative regularizer time so far (s).
+        reg_s: f64,
+        /// Wall time since the registration started (s).
+        elapsed_s: f64,
+        /// Wall time spent in the current pyramid level (s).
+        level_s: f64,
     },
     /// Finished successfully.
     Done(JobResult),
@@ -123,6 +132,8 @@ struct JobEntry {
     op: Option<RegisterOp>,
     state: JobState,
     cancel: Arc<AtomicBool>,
+    /// Submission instant — the `job.queued` trace span measures from it.
+    queued_at: std::time::Instant,
     /// Threads blocked in [`JobEngine::wait`] on this job. History pruning
     /// defers removal while > 0, so a completed sync register can never be
     /// pruned into a spurious `not_found` before its waiter wakes.
@@ -192,6 +203,7 @@ impl JobEngine {
                     op: Some(op),
                     state: JobState::Queued,
                     cancel: Arc::new(AtomicBool::new(false)),
+                    queued_at: std::time::Instant::now(),
                     waiters: 0,
                 },
             );
@@ -379,11 +391,23 @@ fn worker_loop(shared: Arc<Shared>) {
                         continue;
                     }
                     let op = entry.op.take().expect("queued job carries its op");
+                    // Close the queued→claimed span now that a worker owns
+                    // the job (backdated to the submission instant).
+                    trace::emit_since(
+                        "job",
+                        "job.queued",
+                        entry.queued_at,
+                        vec![("id", Json::Num(id as f64))],
+                    );
                     entry.state = JobState::Running {
                         level: 0,
                         levels: op.levels.clamp(1, 6),
                         iteration: 0,
                         cost: f64::INFINITY,
+                        bsi_s: 0.0,
+                        reg_s: 0.0,
+                        elapsed_s: 0.0,
+                        level_s: 0.0,
                     };
                     break 'claim (id, op, entry.cancel.clone());
                 }
@@ -404,13 +428,20 @@ fn worker_loop(shared: Arc<Shared>) {
                             levels: ev.levels,
                             iteration: ev.iteration,
                             cost: ev.cost,
+                            bsi_s: ev.bsi_s,
+                            reg_s: ev.reg_s,
+                            elapsed_s: ev.elapsed_s,
+                            level_s: ev.level_s,
                         };
                     }
                 }
             })),
             cancel: Some(cancel.clone()),
         };
-        let outcome = run_register(&op, Some(&shared.store), &hooks);
+        let outcome = {
+            let _run = trace::span("job", "job.run").arg_num("id", id as f64);
+            run_register(&op, Some(&shared.store), &hooks)
+        };
 
         // Cancellation is cooperative: the job is Cancelled exactly when
         // the run observed the flag before publishing results (a cancel

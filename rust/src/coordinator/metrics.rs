@@ -1,10 +1,102 @@
-//! Service metrics: lock-free counters + a coarse log2 latency histogram,
-//! exposed through the server's STATS op and printed by the examples.
+//! Service metrics: lock-free counters + log2 latency histograms, a named
+//! registry with Prometheus text exposition, exposed through the server's
+//! `stats`/`metrics` ops and printed by the examples.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Histogram over latencies with 1µs–~1000s log2 buckets.
 const BUCKETS: usize = 32;
+
+/// A lock-free log2 latency histogram: bucket `i` covers
+/// `[2^i, 2^(i+1))` microseconds, with everything above folded into the
+/// last bucket. Tracks the exact sum and count alongside the buckets so
+/// Prometheus `_sum`/`_count` series are not quantized.
+#[derive(Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    sum_micros: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    /// Zeroed histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a duration in seconds. Robust to garbage input:
+    /// NaN, negative, zero and sub-microsecond durations all land in
+    /// bucket 0; +inf and absurdly large values fold into the last bucket.
+    fn bucket(seconds: f64) -> usize {
+        if !seconds.is_finite() || seconds <= 0.0 {
+            return if seconds == f64::INFINITY { BUCKETS - 1 } else { 0 };
+        }
+        let micros = (seconds * 1e6).max(1.0);
+        (micros.log2() as usize).min(BUCKETS - 1)
+    }
+
+    /// Record one observation (seconds).
+    pub fn record(&self, seconds: f64) {
+        self.buckets[Self::bucket(seconds)].fetch_add(1, Ordering::Relaxed);
+        let micros = if seconds.is_finite() && seconds > 0.0 { seconds * 1e6 } else { 0.0 };
+        self.sum_micros.fetch_add(micros as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations in seconds.
+    pub fn sum_s(&self) -> f64 {
+        self.sum_micros.load(Ordering::Relaxed) as f64 * 1e-6
+    }
+
+    /// Relaxed snapshot of the bucket counts.
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        let mut out = [0u64; BUCKETS];
+        for (o, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Latency percentile in seconds, linearly interpolated within the
+    /// containing log2 bucket (bucket `i` spans `2^i .. 2^(i+1)` µs).
+    /// Returns 0 for an empty histogram.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((p.clamp(0.0, 100.0) / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                // Interpolate linearly between the bucket's bounds by the
+                // fraction of the target rank inside this bucket.
+                let lo = (1u64 << i) as f64;
+                let hi = lo * 2.0;
+                let frac = (target - seen) as f64 / c as f64;
+                return (lo + frac * (hi - lo)) * 1e-6;
+            }
+            seen += c;
+        }
+        f64::INFINITY
+    }
+
+    /// Upper bound of bucket `i` in seconds (`le` label value).
+    pub fn upper_bound_s(i: usize) -> f64 {
+        (1u64 << (i as u32 + 1).min(63)) as f64 * 1e-6
+    }
+}
 
 /// Lock-free scheduler counters + execution-latency histogram.
 #[derive(Default)]
@@ -23,7 +115,7 @@ pub struct Metrics {
     pub batched_jobs: AtomicU64,
     /// Voxels interpolated (throughput numerator).
     pub voxels: AtomicU64,
-    exec_hist: [AtomicU64; BUCKETS],
+    exec_hist: Histogram,
 }
 
 impl Metrics {
@@ -32,34 +124,20 @@ impl Metrics {
         Self::default()
     }
 
-    fn bucket(seconds: f64) -> usize {
-        let micros = (seconds * 1e6).max(1.0);
-        (micros.log2() as usize).min(BUCKETS - 1)
-    }
-
     /// Record one execution's wall time into the histogram.
     pub fn record_exec(&self, seconds: f64) {
-        self.exec_hist[Self::bucket(seconds)].fetch_add(1, Ordering::Relaxed);
+        self.exec_hist.record(seconds);
     }
 
-    /// Approximate latency percentile from the histogram (bucket midpoint).
+    /// Approximate latency percentile from the histogram, linearly
+    /// interpolated within the containing log2 bucket.
     pub fn exec_percentile(&self, p: f64) -> f64 {
-        let counts: Vec<u64> =
-            self.exec_hist.iter().map(|c| c.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0.0;
-        }
-        let target = ((p / 100.0) * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, &c) in counts.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                // Midpoint of the 2^i .. 2^(i+1) µs bucket.
-                return (1u64 << i) as f64 * 1.5e-6;
-            }
-        }
-        f64::INFINITY
+        self.exec_hist.percentile(p)
+    }
+
+    /// The execution-latency histogram itself (for registry export).
+    pub fn exec_hist(&self) -> &Histogram {
+        &self.exec_hist
     }
 
     /// Render a compact JSON string of the counters.
@@ -80,9 +158,146 @@ impl Metrics {
     }
 }
 
+/// A named metrics registry: counters, gauges and histograms keyed by
+/// their full series name (base name plus optional `{label="…"}` suffix,
+/// e.g. `ffdreg_op_latency_seconds{op="ping"}`). Handles are `Arc`s to
+/// lock-free atomics — the registry lock is only taken on first
+/// registration and at render time.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<RegistryInner>,
+}
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: BTreeMap<String, Arc<AtomicU64>>,
+    gauges: BTreeMap<String, Arc<AtomicI64>>,
+    hists: BTreeMap<String, Arc<Histogram>>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create a monotonically increasing counter.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        let mut inner = self.inner.lock().unwrap();
+        Arc::clone(inner.counters.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-create a gauge (a value that can go up and down).
+    pub fn gauge(&self, name: &str) -> Arc<AtomicI64> {
+        let mut inner = self.inner.lock().unwrap();
+        Arc::clone(inner.gauges.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-create a latency histogram.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut inner = self.inner.lock().unwrap();
+        Arc::clone(inner.hists.entry(name.to_string()).or_default())
+    }
+
+    /// Render every registered series in the Prometheus text exposition
+    /// format (one `# TYPE` line per base name, then the samples).
+    pub fn render_prometheus(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        let mut last_base = String::new();
+        for (name, c) in &inner.counters {
+            type_line(&mut out, name, "counter", &mut last_base);
+            push_sample(&mut out, name, &format_num(c.load(Ordering::Relaxed) as f64));
+        }
+        last_base.clear();
+        for (name, g) in &inner.gauges {
+            type_line(&mut out, name, "gauge", &mut last_base);
+            push_sample(&mut out, name, &format_num(g.load(Ordering::Relaxed) as f64));
+        }
+        last_base.clear();
+        for (name, h) in &inner.hists {
+            type_line(&mut out, name, "histogram", &mut last_base);
+            let (base, labels) = split_labels(name);
+            let counts = h.bucket_counts();
+            let mut cum = 0u64;
+            for (i, &c) in counts.iter().enumerate() {
+                cum += c;
+                let le = format_num(Histogram::upper_bound_s(i));
+                push_sample(
+                    &mut out,
+                    &with_label(base, labels, "le", &le),
+                    &format_num(cum as f64),
+                );
+            }
+            push_sample(
+                &mut out,
+                &with_label(base, labels, "le", "+Inf"),
+                &format_num(h.count() as f64),
+            );
+            out.push_str(&format!("{base}_sum{lb} {}\n", format_num(h.sum_s()), lb = brace(labels)));
+            out.push_str(&format!(
+                "{base}_count{lb} {}\n",
+                format_num(h.count() as f64),
+                lb = brace(labels)
+            ));
+        }
+        out
+    }
+}
+
+/// Split `name{labels}` into (`name`, `labels-without-braces`).
+fn split_labels(name: &str) -> (&str, &str) {
+    match name.split_once('{') {
+        Some((base, rest)) => (base, rest.trim_end_matches('}')),
+        None => (name, ""),
+    }
+}
+
+/// `{a="b"}` for non-empty labels, empty string otherwise.
+fn brace(labels: &str) -> String {
+    if labels.is_empty() { String::new() } else { format!("{{{labels}}}") }
+}
+
+/// Series name `base_bucket{labels,key="val"}` for histogram bucket lines.
+fn with_label(base: &str, labels: &str, key: &str, val: &str) -> String {
+    if labels.is_empty() {
+        format!("{base}_bucket{{{key}=\"{val}\"}}")
+    } else {
+        format!("{base}_bucket{{{labels},{key}=\"{val}\"}}")
+    }
+}
+
+/// Emit a `# TYPE` header the first time a base name appears.
+fn type_line(out: &mut String, name: &str, kind: &str, last_base: &mut String) {
+    let (base, _) = split_labels(name);
+    if base != last_base {
+        out.push_str(&format!("# TYPE {base} {kind}\n"));
+        *last_base = base.to_string();
+    }
+}
+
+/// Sample line: `name value`.
+fn push_sample(out: &mut String, name: &str, value: &str) {
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(value);
+    out.push('\n');
+}
+
+/// Prometheus-friendly number formatting: integers without a trailing
+/// `.0`, everything else via shortest-roundtrip `{}`.
+fn format_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::quickcheck::{check, Gen};
 
     #[test]
     fn histogram_percentiles_monotone() {
@@ -111,7 +326,93 @@ mod tests {
 
     #[test]
     fn bucket_edges_are_safe() {
-        assert_eq!(Metrics::bucket(0.0), 0);
-        assert_eq!(Metrics::bucket(1e9), BUCKETS - 1);
+        assert_eq!(Histogram::bucket(0.0), 0);
+        assert_eq!(Histogram::bucket(-1.0), 0);
+        assert_eq!(Histogram::bucket(f64::NAN), 0);
+        assert_eq!(Histogram::bucket(f64::NEG_INFINITY), 0);
+        assert_eq!(Histogram::bucket(f64::INFINITY), BUCKETS - 1);
+        assert_eq!(Histogram::bucket(1e9), BUCKETS - 1);
+        assert_eq!(Histogram::bucket(1e-9), 0);
+    }
+
+    #[test]
+    fn percentile_interpolates_within_the_bucket() {
+        // 100 identical 10µs observations all land in bucket 3
+        // ([8µs,16µs)); percentiles must move smoothly across that bucket
+        // instead of snapping to its midpoint.
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record(10e-6);
+        }
+        let p1 = h.percentile(1.0);
+        let p50 = h.percentile(50.0);
+        let p100 = h.percentile(100.0);
+        assert!(p1 >= 8e-6 && p1 < p50, "p1={p1}");
+        assert!(p50 < p100 && p100 <= 16e-6 + 1e-12, "p50={p50} p100={p100}");
+    }
+
+    #[test]
+    fn percentile_property_monotone_in_p_and_robust_to_edge_durations() {
+        check("percentile-monotone", 0x5eed_11, 200, |g: &mut Gen| {
+            let h = Histogram::new();
+            let n = g.usize_in(1, 64);
+            for _ in 0..n {
+                // Mix sane durations with hostile edge cases.
+                let v = match g.usize_in(0, 5) {
+                    0 => f64::NAN,
+                    1 => -(g.f32_in(0.0, 10.0) as f64),
+                    2 => 0.0,
+                    3 => f64::INFINITY,
+                    _ => (g.f32_in(1e-7, 10.0)) as f64,
+                };
+                h.record(v);
+            }
+            if h.count() != n as u64 {
+                return Err(format!("lost records: {} of {n}", h.count()));
+            }
+            let mut prev = 0.0f64;
+            for p in [0.0, 1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 100.0] {
+                let v = h.percentile(p);
+                if v.is_nan() || v < prev {
+                    return Err(format!("percentile not monotone: p{p} -> {v} < {prev}"));
+                }
+                prev = v;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn registry_renders_parseable_prometheus_text() {
+        let r = Registry::new();
+        r.counter("ffdreg_store_hits_total").fetch_add(5, Ordering::Relaxed);
+        r.gauge("ffdreg_connections").store(2, Ordering::Relaxed);
+        let h = r.histogram("ffdreg_op_latency_seconds{op=\"ping\"}");
+        h.record(0.002);
+        h.record(0.004);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE ffdreg_store_hits_total counter"));
+        assert!(text.contains("ffdreg_store_hits_total 5\n"));
+        assert!(text.contains("# TYPE ffdreg_connections gauge"));
+        assert!(text.contains("ffdreg_connections 2\n"));
+        assert!(text.contains("# TYPE ffdreg_op_latency_seconds histogram"));
+        assert!(text.contains("ffdreg_op_latency_seconds_bucket{op=\"ping\",le=\"+Inf\"} 2\n"));
+        assert!(text.contains("ffdreg_op_latency_seconds_count{op=\"ping\"} 2\n"));
+        assert!(text.contains("ffdreg_op_latency_seconds_sum{op=\"ping\"} "));
+        // Bucket lines are cumulative and end at the total count.
+        let inf_line = text
+            .lines()
+            .find(|l| l.contains("le=\"+Inf\""))
+            .expect("+Inf bucket present");
+        assert!(inf_line.ends_with(" 2"));
+    }
+
+    #[test]
+    fn registry_handles_are_shared() {
+        let r = Registry::new();
+        let a = r.counter("c");
+        let b = r.counter("c");
+        a.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(b.load(Ordering::Relaxed), 1);
     }
 }

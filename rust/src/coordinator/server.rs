@@ -31,15 +31,18 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::job::{Engine, InterpolateJob};
 use super::jobs::{JobEngine, JobResult, JobState, JobSubmitError, JobsConfig};
+use super::metrics::{Histogram, Registry};
 use super::scheduler::{Scheduler, SubmitError};
 use super::service::{RegisterOp, VolumeRef};
 use super::store::VolumeStore;
 use crate::bspline::ControlGrid;
 use crate::util::base64;
 use crate::util::json::Json;
+use crate::util::trace;
 use crate::volume::formats::{stream::DEFAULT_SLAB_NZ, Dtype, SlabDecoder};
 use crate::volume::{Dims, Volume};
 
@@ -59,6 +62,8 @@ pub const OPS: &[&str] = &[
     "fetch_chunk",
     "job",
     "cancel",
+    "trace",
+    "metrics",
 ];
 
 /// Every structured error code the protocol can return.
@@ -110,6 +115,13 @@ struct Ctx {
     jobs: Arc<JobEngine>,
     /// Live connection-handler threads (stats gauge; see `reap_finished`).
     connections: Arc<AtomicUsize>,
+    /// Named metrics registry backing the `metrics` op.
+    metrics: Arc<Registry>,
+    /// Per-op wire latency histograms, pre-registered for every [`OPS`]
+    /// entry so the Prometheus exposition covers ops never yet called.
+    op_hist: Vec<(&'static str, Arc<Histogram>)>,
+    /// Server start instant (`stats` reports `uptime_s` from it).
+    started: Instant,
 }
 
 /// A running server (owns the listener thread).
@@ -161,11 +173,19 @@ impl Server {
                 ..Default::default()
             },
         ));
+        let metrics = Arc::new(Registry::new());
+        let op_hist: Vec<(&'static str, Arc<Histogram>)> = OPS
+            .iter()
+            .map(|&op| (op, metrics.histogram(&format!("ffdreg_op_latency_seconds{{op=\"{op}\"}}"))))
+            .collect();
         let ctx = Arc::new(Ctx {
             sched: scheduler,
             store,
             jobs,
             connections: Arc::new(AtomicUsize::new(0)),
+            metrics,
+            op_hist,
+            started: Instant::now(),
         });
         let ctx2 = ctx.clone();
         let handle = std::thread::spawn(move || {
@@ -452,12 +472,21 @@ fn handle_line(
         Ok(j) => j,
         Err(e) => return Some(err_line("bad_request", &format!("bad json: {e}"))),
     };
-    match req.get("op").as_str() {
+    // Resolve the op to its &'static OPS entry once: the wire span and the
+    // per-op latency histogram both key on it (unknown ops get neither).
+    let known: Option<&'static str> =
+        req.get("op").as_str().and_then(|name| OPS.iter().copied().find(|&o| o == name));
+    let t0 = Instant::now();
+    let _span = trace::span("wire", known.unwrap_or("op.unknown"));
+    let resp = match req.get("op").as_str() {
         Some("ping") => Some(
             Json::obj(vec![("ok", Json::Bool(true)), ("pong", Json::Bool(true))]).to_string(),
         ),
         Some("stats") => Some(format!(
-            r#"{{"ok":true,"stats":{},"queue_depth":{},"connections":{},"store":{},"jobs":{}}}"#,
+            r#"{{"ok":true,"uptime_s":{:.3},"version":"{}","simd":"{}","stats":{},"queue_depth":{},"connections":{},"store":{},"jobs":{}}}"#,
+            ctx.started.elapsed().as_secs_f64(),
+            crate::version(),
+            crate::util::simd::active().name(),
             ctx.sched.metrics.snapshot_json(),
             ctx.sched.queue_depth(),
             ctx.connections.load(Ordering::Relaxed),
@@ -482,9 +511,89 @@ fn handle_line(
         Some("fetch_chunk") => Some(handle_fetch_chunk(&req, ctx)),
         Some("job") => Some(handle_job(&req, ctx)),
         Some("cancel") => Some(handle_cancel(&req, ctx)),
+        Some("trace") => Some(handle_trace(&req)),
+        Some("metrics") => Some(handle_metrics(ctx)),
         Some(other) => Some(err_line("bad_request", &format!("unknown op '{other}'"))),
         None => Some(err_line("bad_request", "missing op")),
+    };
+    if let Some(k) = known {
+        if let Some((_, h)) = ctx.op_hist.iter().find(|(o, _)| *o == k) {
+            h.record(t0.elapsed().as_secs_f64());
+        }
     }
+    resp
+}
+
+// ---------------------------------------------------------------------------
+// trace / metrics
+
+/// Control server-side span tracing: `{"enable":true|false}` toggles the
+/// process-wide flag (enabling starts a fresh capture), `{"dump":true}`
+/// returns — and drains — the buffered events as a Chrome trace-event
+/// JSON object under `"trace"`. A bare `{"op":"trace"}` reports status.
+fn handle_trace(req: &Json) -> String {
+    if let Some(on) = req.get("enable").as_bool() {
+        if on {
+            trace::clear();
+        }
+        trace::set_enabled(on);
+    }
+    let mut pairs = vec![
+        ("ok", Json::Bool(true)),
+        ("enabled", Json::Bool(trace::enabled())),
+        ("events", Json::Num(trace::event_count() as f64)),
+        ("dropped", Json::Num(trace::dropped() as f64)),
+    ];
+    if req.get("dump").as_bool().unwrap_or(false) {
+        pairs.push(("trace", trace::export()));
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// Render every registered metric series — per-op wire latency histograms
+/// for all of [`OPS`], store/scheduler counters, live queue-depth and
+/// connection gauges — in the Prometheus text exposition format. The text
+/// ships inside a one-line JSON envelope (`"body"`); `ffdreg client
+/// metrics` prints the body raw for a scraper to consume.
+fn handle_metrics(ctx: &Ctx) -> String {
+    let m = &ctx.metrics;
+    // Mirror the live sources into registered series at render time: the
+    // atomics stay the single source of truth and the registry render
+    // stays one code path.
+    let s = &ctx.store;
+    m.counter("ffdreg_store_hits_total").store(s.hits.load(Ordering::Relaxed), Ordering::Relaxed);
+    m.counter("ffdreg_store_misses_total")
+        .store(s.misses.load(Ordering::Relaxed), Ordering::Relaxed);
+    m.counter("ffdreg_store_insertions_total")
+        .store(s.insertions.load(Ordering::Relaxed), Ordering::Relaxed);
+    m.counter("ffdreg_store_dedup_hits_total")
+        .store(s.dedup_hits.load(Ordering::Relaxed), Ordering::Relaxed);
+    m.counter("ffdreg_store_evictions_total")
+        .store(s.evictions.load(Ordering::Relaxed), Ordering::Relaxed);
+    let sched = &ctx.sched.metrics;
+    m.counter("ffdreg_scheduler_submitted_total")
+        .store(sched.submitted.load(Ordering::Relaxed), Ordering::Relaxed);
+    m.counter("ffdreg_scheduler_rejected_total")
+        .store(sched.rejected.load(Ordering::Relaxed), Ordering::Relaxed);
+    m.counter("ffdreg_scheduler_completed_total")
+        .store(sched.completed.load(Ordering::Relaxed), Ordering::Relaxed);
+    m.counter("ffdreg_scheduler_failed_total")
+        .store(sched.failed.load(Ordering::Relaxed), Ordering::Relaxed);
+    m.counter("ffdreg_voxels_total").store(sched.voxels.load(Ordering::Relaxed), Ordering::Relaxed);
+    m.gauge("ffdreg_store_bytes").store(s.bytes_used() as i64, Ordering::Relaxed);
+    m.gauge("ffdreg_store_volumes").store(s.len() as i64, Ordering::Relaxed);
+    m.gauge("ffdreg_scheduler_queue_depth")
+        .store(ctx.sched.queue_depth() as i64, Ordering::Relaxed);
+    m.gauge("ffdreg_job_queue_depth").store(ctx.jobs.queue_depth() as i64, Ordering::Relaxed);
+    m.gauge("ffdreg_connections")
+        .store(ctx.connections.load(Ordering::Relaxed) as i64, Ordering::Relaxed);
+    m.gauge("ffdreg_uptime_seconds").store(ctx.started.elapsed().as_secs() as i64, Ordering::Relaxed);
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("content_type", Json::Str("text/plain; version=0.0.4".into())),
+        ("body", Json::Str(m.render_prometheus())),
+    ])
+    .to_string()
 }
 
 // ---------------------------------------------------------------------------
@@ -615,12 +724,21 @@ fn job_state_json(id: u64, state: &JobState) -> String {
     ];
     match state {
         JobState::Queued | JobState::Cancelled => {}
-        JobState::Running { level, levels, iteration, cost } => {
+        JobState::Running { level, levels, iteration, cost, bsi_s, reg_s, elapsed_s, level_s } => {
             pairs.push(("level", Json::Num(*level as f64)));
             pairs.push(("levels", Json::Num(*levels as f64)));
             pairs.push(("iteration", Json::Num(*iteration as f64)));
             if cost.is_finite() {
                 pairs.push(("cost", Json::Num(*cost)));
+            }
+            // Live FfdTiming breakdown: where the registration's wall time
+            // is going, per the latest optimizer heartbeat.
+            pairs.push(("bsi_s", Json::Num(*bsi_s)));
+            pairs.push(("reg_s", Json::Num(*reg_s)));
+            pairs.push(("elapsed_s", Json::Num(*elapsed_s)));
+            pairs.push(("level_s", Json::Num(*level_s)));
+            if *elapsed_s > 0.0 {
+                pairs.push(("bsi_fraction", Json::Num(*bsi_s / *elapsed_s)));
             }
         }
         JobState::Done(r) => pairs.extend(register_result_pairs(r)),

@@ -29,6 +29,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::util::hash::Sha256;
 use crate::util::json::Json;
+use crate::util::trace;
 use crate::volume::Volume;
 
 /// Prefix that marks a string as a store handle rather than a path.
@@ -148,6 +149,7 @@ impl VolumeStore {
     /// refused.
     pub fn put(&self, vol: Volume) -> Result<(String, bool), PutError> {
         let bytes = Self::vol_bytes(&vol);
+        let _span = trace::span("store", "store.put").arg_num("bytes", bytes as f64);
         if bytes > self.budget {
             return Err(PutError::ExceedsBudget { bytes, budget: self.budget });
         }
@@ -162,6 +164,7 @@ impl VolumeStore {
         }
         // Evict LRU entries until the newcomer fits.
         while inner.bytes + bytes > self.budget {
+            let _evict = trace::span("store", "store.evict");
             let oldest = inner
                 .map
                 .iter()
@@ -182,6 +185,7 @@ impl VolumeStore {
     /// Look up a handle, refreshing its LRU recency. `None` counts a miss
     /// (never stored, or evicted since).
     pub fn get(&self, handle: &str) -> Option<Arc<Volume>> {
+        let _span = trace::span("store", "store.get");
         let mut inner = self.inner.lock().unwrap();
         inner.clock += 1;
         let now = inner.clock;

@@ -40,6 +40,26 @@ pub struct ProgressEvent {
     pub iteration: usize,
     /// Objective value after the iteration.
     pub cost: f64,
+    /// Cumulative BSI (dense-field interpolation) seconds so far.
+    pub bsi_s: f64,
+    /// Cumulative bending-energy regularization seconds so far.
+    pub reg_s: f64,
+    /// Wall seconds since the whole run started.
+    pub elapsed_s: f64,
+    /// Wall seconds since the current pyramid level started.
+    pub level_s: f64,
+}
+
+impl ProgressEvent {
+    /// Share of the run spent in BSI so far — the live analog of
+    /// [`FfdTiming::bsi_fraction`].
+    pub fn bsi_fraction(&self) -> f64 {
+        if self.elapsed_s > 0.0 {
+            self.bsi_s / self.elapsed_s
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Observation and cancellation hooks threaded through a registration run.
@@ -123,6 +143,9 @@ pub struct FfdTiming {
     pub reg_s: f64,
     pub other_s: f64,
     pub iterations: usize,
+    /// Wall seconds spent per pyramid level, coarse→fine (one entry per
+    /// level actually optimized).
+    pub level_s: Vec<f64>,
 }
 
 impl FfdTiming {

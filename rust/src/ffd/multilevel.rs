@@ -11,6 +11,7 @@ use super::optimizer::optimize_level_hooked;
 use super::workspace::LevelWorkspace;
 use super::{FfdConfig, FfdResult, FfdTiming, RegistrationHooks};
 use crate::bspline::{ControlGrid, Interpolator, Method};
+use crate::util::trace;
 use crate::volume::pyramid;
 use crate::volume::resample::warp;
 use crate::volume::{Dims, Volume};
@@ -113,6 +114,10 @@ pub fn register_multilevel_hooked(
             Some(coarse) => promote_grid(&coarse, r.dims, cfg.tile),
             None => ControlGrid::zeros(r.dims, cfg.tile),
         };
+        let level_t0 = Instant::now();
+        let _level_span = trace::span("ffd", "ffd.level")
+            .arg_num("level", level as f64)
+            .arg_num("levels", n_levels as f64);
         final_cost = optimize_level_hooked(
             r,
             f,
@@ -122,7 +127,9 @@ pub fn register_multilevel_hooked(
             &mut ws,
             hooks,
             (level, n_levels),
+            (t_start, level_t0),
         );
+        timing.level_s.push(level_t0.elapsed().as_secs_f64());
         grid = Some(g);
         if hooks.cancelled() {
             break;
@@ -154,9 +161,11 @@ pub fn register_multilevel_hooked(
     let t0 = Instant::now();
     let field = interp.interpolate(&grid, reference.dims);
     timing.bsi_s += t0.elapsed().as_secs_f64();
+    trace::emit_since("ffd", "ffd.final_field", t0, Vec::new());
     let t1 = Instant::now();
     let mut warped = warp(floating, &field);
     timing.warp_s += t1.elapsed().as_secs_f64();
+    trace::emit_since("ffd", "ffd.final_warp", t1, Vec::new());
     // The warped image lives on the reference lattice: stamp the reference's
     // world-space geometry so saved outputs round-trip in scanner space.
     warped.copy_geometry_from(reference);

@@ -9,10 +9,13 @@
 //! workspace's worker pool (`FfdConfig::threads`). See `ffd::workspace`
 //! for the bit-identity contract against the composed pipeline.
 
+use std::time::Instant;
+
 use super::gradient::max_norm;
 use super::workspace::LevelWorkspace;
 use super::{FfdConfig, FfdTiming, ProgressEvent, RegistrationHooks};
 use crate::bspline::ControlGrid;
+use crate::util::trace;
 use crate::volume::Volume;
 
 /// Optimize `grid` in place for up to `cfg.max_iter` iterations at one
@@ -40,6 +43,7 @@ pub fn optimize_level_ws(
     timing: &mut FfdTiming,
     ws: &mut LevelWorkspace,
 ) -> f64 {
+    let now = Instant::now();
     optimize_level_hooked(
         reference,
         floating,
@@ -49,13 +53,16 @@ pub fn optimize_level_ws(
         ws,
         &RegistrationHooks::default(),
         (0, 1),
+        (now, now),
     )
 }
 
 /// [`optimize_level_ws`] with progress/cancellation hooks. `level` is the
-/// `(index, total)` pyramid position stamped onto progress events. Hooks
-/// act only at iteration boundaries (observe after, cancel before), so an
-/// uncancelled hooked run is bitwise identical to the unhooked one.
+/// `(index, total)` pyramid position stamped onto progress events; `clock`
+/// is the `(run_start, level_start)` pair the events' `elapsed_s` /
+/// `level_s` are measured from. Hooks act only at iteration boundaries
+/// (observe after, cancel before), so an uncancelled hooked run is bitwise
+/// identical to the unhooked one.
 #[allow(clippy::too_many_arguments)]
 pub fn optimize_level_hooked(
     reference: &Volume,
@@ -66,6 +73,7 @@ pub fn optimize_level_hooked(
     ws: &mut LevelWorkspace,
     hooks: &RegistrationHooks,
     level: (usize, usize),
+    clock: (Instant, Instant),
 ) -> f64 {
     let interp = cfg.method.instance();
     let imp = interp.as_ref();
@@ -90,6 +98,9 @@ pub fn optimize_level_hooked(
             break;
         }
         timing.iterations += 1;
+        let _iter_span = trace::span("ffd", "ffd.iteration")
+            .arg_num("level", level.0 as f64)
+            .arg_num("iteration", (it + 1) as f64);
         // Gradient of the full objective (fused passes, fills ws.cg()).
         // The pass also yields the objective at `grid` for free — after an
         // accepted trial this recomputes the accepted cost bit-identically,
@@ -123,6 +134,10 @@ pub fn optimize_level_hooked(
             levels: level.1,
             iteration: it + 1,
             cost: current,
+            bsi_s: timing.bsi_s,
+            reg_s: timing.reg_s,
+            elapsed_s: clock.0.elapsed().as_secs_f64(),
+            level_s: clock.1.elapsed().as_secs_f64(),
         });
         if !improved {
             break;

@@ -39,6 +39,7 @@ use super::gradient::{voxel_to_cp_gradient_into, AdjointScratch};
 use super::{FfdConfig, FfdTiming};
 use crate::bspline::exec::{self, WorkerPool};
 use crate::bspline::{ControlGrid, Interpolator, Method};
+use crate::util::trace;
 use crate::volume::resample::{central_diff, warp_sample};
 use crate::volume::{Dims, VectorField, Volume};
 
@@ -228,6 +229,7 @@ impl LevelWorkspace {
         let ny = dims.ny;
 
         // Pass 1: dense field + warped volume (+ per-slice SSD partials).
+        let isa = crate::util::simd::active().name();
         let t_pass = Instant::now();
         let bsi_ns = AtomicU64::new(0);
         let rest_ns = AtomicU64::new(0);
@@ -245,29 +247,39 @@ impl LevelWorkspace {
                 |chunk, sx, sy, sz, sw, acc| {
                     if !reuse_field {
                         let t0 = Instant::now();
-                        imp.interpolate_into(
-                            grid,
-                            dims,
-                            chunk,
-                            exec::FieldSlabMut { x: &mut *sx, y: &mut *sy, z: &mut *sz },
-                        );
+                        {
+                            let _span = trace::span("ffd", "ffd.chunk.interpolate")
+                                .arg_num("z0", chunk.z0 as f64)
+                                .arg_str("isa", isa);
+                            imp.interpolate_into(
+                                grid,
+                                dims,
+                                chunk,
+                                exec::FieldSlabMut { x: &mut *sx, y: &mut *sy, z: &mut *sz },
+                            );
+                        }
                         bsi_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                     }
                     let t1 = Instant::now();
-                    for lz in 0..chunk.len() {
-                        let z = chunk.z0 + lz;
-                        acc[lz] = warp_ssd_slice(
-                            reference,
-                            floating,
-                            nx,
-                            ny,
-                            lz,
-                            z,
-                            sx,
-                            sy,
-                            sz,
-                            |i, w| sw[i] = w,
-                        );
+                    {
+                        let _span = trace::span("ffd", "ffd.chunk.warp")
+                            .arg_num("z0", chunk.z0 as f64)
+                            .arg_str("isa", isa);
+                        for lz in 0..chunk.len() {
+                            let z = chunk.z0 + lz;
+                            acc[lz] = warp_ssd_slice(
+                                reference,
+                                floating,
+                                nx,
+                                ny,
+                                lz,
+                                z,
+                                sx,
+                                sy,
+                                sz,
+                                |i, w| sw[i] = w,
+                            );
+                        }
                     }
                     rest_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 },
@@ -302,6 +314,9 @@ impl LevelWorkspace {
                 &mut vg.z,
                 slice_acc,
                 |chunk, gx, gy, gz, _acc| {
+                    let _span = trace::span("ffd", "ffd.chunk.gradient")
+                        .arg_num("z0", chunk.z0 as f64)
+                        .arg_str("isa", isa);
                     for lz in 0..chunk.len() {
                         let z = chunk.z0 + lz;
                         let zi = z as isize;
@@ -329,6 +344,7 @@ impl LevelWorkspace {
         // Pass 3: separable adjoint onto the control points.
         {
             let Self { pool, vg, cg, adj, .. } = self;
+            let _span = trace::span("ffd", "ffd.adjoint").arg_str("isa", isa);
             voxel_to_cp_gradient_into(grid, vg, Some(&**pool), cg, adj);
         }
         timing.gradient_s += t2.elapsed().as_secs_f64();
@@ -438,6 +454,7 @@ fn fused_ssd_pass(
     }
     let nx = dims.nx;
     let ny = dims.ny;
+    let isa = crate::util::simd::active().name();
     let t_pass = Instant::now();
     let bsi_ns = AtomicU64::new(0);
     let rest_ns = AtomicU64::new(0);
@@ -451,19 +468,29 @@ fn fused_ssd_pass(
         slice_acc,
         |chunk, sx, sy, sz, acc| {
             let t0 = Instant::now();
-            imp.interpolate_into(
-                grid,
-                dims,
-                chunk,
-                exec::FieldSlabMut { x: &mut *sx, y: &mut *sy, z: &mut *sz },
-            );
+            {
+                let _span = trace::span("ffd", "ffd.chunk.interpolate")
+                    .arg_num("z0", chunk.z0 as f64)
+                    .arg_str("isa", isa);
+                imp.interpolate_into(
+                    grid,
+                    dims,
+                    chunk,
+                    exec::FieldSlabMut { x: &mut *sx, y: &mut *sy, z: &mut *sz },
+                );
+            }
             bsi_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
             let t1 = Instant::now();
-            for lz in 0..chunk.len() {
-                let z = chunk.z0 + lz;
-                // Cost probes discard the warped values — scalar SSD only.
-                acc[lz] =
-                    warp_ssd_slice(reference, floating, nx, ny, lz, z, sx, sy, sz, |_, _| {});
+            {
+                let _span = trace::span("ffd", "ffd.chunk.similarity")
+                    .arg_num("z0", chunk.z0 as f64)
+                    .arg_str("isa", isa);
+                for lz in 0..chunk.len() {
+                    let z = chunk.z0 + lz;
+                    // Cost probes discard the warped values — scalar SSD only.
+                    acc[lz] =
+                        warp_ssd_slice(reference, floating, nx, ny, lz, z, sx, sy, sz, |_, _| {});
+                }
             }
             rest_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
         },

@@ -70,20 +70,27 @@ USAGE: ffdreg <command> [flags]
   phantom      --out DIR [--scale 0.25] [--seed 7] [--format vol|nii|mhd|mha]
   interpolate  [--method ttli|tt|tv|tv-tiling|vt|vv|th|ref|pjrt] [--dims X,Y,Z]
                [--tile 5] [--seed 1] [--check] [--threads N]
-               [--input VOLUME] [--out WARPED]
+               [--input VOLUME] [--out WARPED] [--trace-out TRACE.json]
   register     --reference A --floating B [--out warped.nii]
                [--method M] [--levels 3] [--iters 60] [--tile 5] [--be 0.001]
                [--threads N] [--no-affine] [--config cfg.json]
+               [--trace-out TRACE.json]
   affine       --reference A --floating B [--out warped.nii]
   serve        [--addr 127.0.0.1:7847] [--workers N] [--queue 256] [--batch 8]
                [--threads N] [--store-bytes B] [--reg-workers N] [--reg-queue N]
-  client       <upload|register|job|watch|cancel|fetch|stats> [--addr HOST:PORT]
+  client       <upload|register|job|watch|cancel|fetch|stats|metrics>
+               [--addr HOST:PORT]
                upload   --input VOLUME
                register --reference REF --floating FLO [--async] [--watch]
                         [--store-warped] [--method M] [--levels N] [--iters N]
                         [--threads N] [--out SERVER_PATH]
+                        [--trace-out TRACE.json]
                job/watch/cancel --id N    fetch --volume vol:HASH --out FILE
-               (REF/FLO are server paths or vol: handles; see PROTOCOL.md)
+               metrics  (prints the server's Prometheus text exposition)
+               (REF/FLO are server paths or vol: handles; see PROTOCOL.md.
+                --trace-out captures a Chrome trace-event JSON profile —
+                local for interpolate/register, server-side for client
+                register — loadable in Perfetto / chrome://tracing)
   artifacts    [--dir artifacts]
   version
 
@@ -123,7 +130,27 @@ fn cmd_phantom(args: &Args) -> Result<(), Error> {
     Ok(())
 }
 
+/// `--trace-out FILE`: turn on the in-process tracer for this run and
+/// remember where to write the profile. Must run before the traced work.
+fn trace_out_arg(args: &Args) -> Option<String> {
+    let path = args.get("trace-out").map(String::from);
+    if path.is_some() {
+        ffdreg::util::trace::set_enabled(true);
+    }
+    path
+}
+
+/// Disable tracing and write the buffered spans as Chrome trace-event JSON
+/// (loadable in Perfetto / `chrome://tracing`).
+fn write_trace(path: &str) -> Result<(), Error> {
+    ffdreg::util::trace::set_enabled(false);
+    std::fs::write(path, ffdreg::util::trace::export_string()).with_context(|| path.to_string())?;
+    println!("  wrote trace to {path}");
+    Ok(())
+}
+
 fn cmd_interpolate(args: &Args) -> Result<(), Error> {
+    let trace_out = trace_out_arg(args);
     let tile = args.get_usize("tile", 5)?;
     let seed = args.get_usize("seed", 1)? as u64;
     // 0 = process default pool (FFDREG_THREADS / machine parallelism).
@@ -174,6 +201,9 @@ fn cmd_interpolate(args: &Args) -> Result<(), Error> {
             timer::fmt_secs(secs),
             secs * 1e9 / vd.count() as f64
         );
+        if let Some(p) = &trace_out {
+            write_trace(p)?;
+        }
         return Ok(());
     }
 
@@ -186,6 +216,7 @@ fn cmd_interpolate(args: &Args) -> Result<(), Error> {
     let method = Method::parse(engine).ok_or_else(|| anyhow!("unknown method '{engine}'"))?;
     let imp = if threads > 0 { method.par_instance(threads) } else { method.instance() };
     let stats = timer::time_adaptive(3, 20, 0.5, || {
+        let _span = ffdreg::util::trace::span("cli", "interpolate.run");
         std::hint::black_box(imp.interpolate(&grid, vd));
     });
     let per_voxel = stats.mean() / vd.count() as f64;
@@ -234,6 +265,9 @@ fn cmd_interpolate(args: &Args) -> Result<(), Error> {
             );
         }
     }
+    if let Some(p) = &trace_out {
+        write_trace(p)?;
+    }
     Ok(())
 }
 
@@ -274,6 +308,7 @@ fn save_out(args: &Args, warped: &Volume) -> Result<(), Error> {
 }
 
 fn cmd_register(args: &Args) -> Result<(), Error> {
+    let trace_out = trace_out_arg(args);
     let cfg = Config::resolve(args)?;
     check_out(args)?;
     let (reference, floating) = load_pair(args)?;
@@ -341,6 +376,9 @@ fn cmd_register(args: &Args) -> Result<(), Error> {
         ffdreg::metrics::ssim(&reference, &result.warped)
     );
     save_out(args, &result.warped)?;
+    if let Some(p) = &trace_out {
+        write_trace(p)?;
+    }
     Ok(())
 }
 
@@ -460,7 +498,8 @@ impl ProtoClient {
         Ok(resp)
     }
 
-    /// Render a frame for the transcript, eliding long base64 payloads.
+    /// Render a frame for the transcript, eliding long base64 payloads and
+    /// inline trace dumps.
     fn render(&self, j: &ffdreg::util::json::Json) -> String {
         use ffdreg::util::json::Json;
         if self.quiet_data {
@@ -474,6 +513,11 @@ impl ProtoClient {
                     return Json::Obj(map).to_string();
                 }
             }
+            if let Some(evs) = j.get("trace").get("traceEvents").as_arr() {
+                let mut map = j.as_obj().cloned().unwrap_or_default();
+                map.insert("trace".into(), Json::Str(format!("<trace: {} events>", evs.len())));
+                return Json::Obj(map).to_string();
+            }
         }
         j.to_string()
     }
@@ -485,7 +529,9 @@ fn cmd_client(args: &Args) -> Result<(), Error> {
         .positional
         .get(1)
         .map(|s| s.as_str())
-        .ok_or_else(|| anyhow!("client needs an action: upload|register|job|watch|cancel|fetch|stats"))?;
+        .ok_or_else(|| {
+            anyhow!("client needs an action: upload|register|job|watch|cancel|fetch|stats|metrics")
+        })?;
     let addr = args.get("addr").unwrap_or("127.0.0.1:7847");
     let mut client = ProtoClient::connect(addr)?;
     match action {
@@ -498,6 +544,15 @@ fn cmd_client(args: &Args) -> Result<(), Error> {
         "register" => {
             let reference = args.get("reference").context("missing --reference")?;
             let floating = args.get("floating").context("missing --floating")?;
+            // Server-side profile capture: turn the coordinator's tracer on
+            // for the duration of this registration, dump it afterwards.
+            let trace_out = args.get("trace-out").map(String::from);
+            if trace_out.is_some() {
+                client.call_ok(&Json::obj(vec![
+                    ("op", Json::Str("trace".into())),
+                    ("enable", Json::Bool(true)),
+                ]))?;
+            }
             let mut pairs = vec![
                 ("op", Json::Str("register".into())),
                 ("reference", Json::Str(reference.into())),
@@ -526,6 +581,19 @@ fn cmd_client(args: &Args) -> Result<(), Error> {
                 if args.has("watch") {
                     client_watch(&mut client, id, args.get_usize("interval-ms", 200)?)?;
                 }
+            }
+            if let Some(path) = &trace_out {
+                let dump = client.call_ok(&Json::obj(vec![
+                    ("op", Json::Str("trace".into())),
+                    ("enable", Json::Bool(false)),
+                    ("dump", Json::Bool(true)),
+                ]))?;
+                let trace = dump.get("trace");
+                if trace.as_obj().is_none() {
+                    return Err(anyhow!("trace dump response carries no trace"));
+                }
+                std::fs::write(path, trace.to_string()).with_context(|| path.to_string())?;
+                println!("wrote server trace to {path}");
             }
             Ok(())
         }
@@ -558,6 +626,14 @@ fn cmd_client(args: &Args) -> Result<(), Error> {
         }
         "stats" => {
             client.call_ok(&Json::obj(vec![("op", Json::Str("stats".into()))]))?;
+            Ok(())
+        }
+        "metrics" => {
+            let resp = client.call_ok(&Json::obj(vec![("op", Json::Str("metrics".into()))]))?;
+            let body = resp.get("body").as_str().context("metrics response carries no body")?;
+            // Raw Prometheus text exposition — print it unframed so the
+            // output pipes straight into a scraper or promtool.
+            print!("{body}");
             Ok(())
         }
         other => Err(anyhow!("unknown client action '{other}'")),

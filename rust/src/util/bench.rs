@@ -281,6 +281,78 @@ impl BenchJson {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Trace capture (`--trace`)
+
+/// The shared `--trace` sink of the figure benches: when the flag is
+/// present, the in-process tracer ([`crate::util::trace`]) runs for the
+/// whole bench and the profile lands as `TRACE_<name>.json` next to the
+/// `BENCH_<name>.json` artifact (the `--json` destination, or the report
+/// dir without one). Without the flag the sink is inert and the bench pays
+/// only the tracer's disabled-path branch.
+pub struct BenchTrace {
+    name: String,
+    enabled: bool,
+    dir: PathBuf,
+}
+
+/// Directory the trace artifact shares with the bench-json artifact: the
+/// `--json` destination's directory when given, the report dir otherwise.
+fn trace_dest_dir(json_flag: Option<&str>) -> PathBuf {
+    match json_flag {
+        Some(d) => {
+            let p = PathBuf::from(d);
+            if p.extension().map(|e| e == "json").unwrap_or(false) {
+                p.parent()
+                    .filter(|q| !q.as_os_str().is_empty())
+                    .map(PathBuf::from)
+                    .unwrap_or_else(|| PathBuf::from("."))
+            } else {
+                p
+            }
+        }
+        None => report_dir(),
+    }
+}
+
+impl BenchTrace {
+    /// Build from explicit flag values; enables the tracer immediately when
+    /// `enabled` (so every span of the bench run is captured).
+    pub fn new(name: &str, enabled: bool, json_flag: Option<&str>) -> BenchTrace {
+        if enabled {
+            super::trace::set_enabled(true);
+        }
+        BenchTrace { name: name.to_string(), enabled, dir: trace_dest_dir(json_flag) }
+    }
+
+    /// Scan the process arguments for `--trace` (and `--json` for the
+    /// destination directory).
+    pub fn from_env(name: &str) -> BenchTrace {
+        let args = crate::cli::Args::from_env();
+        BenchTrace::new(name, args.has("trace"), args.get("json"))
+    }
+
+    /// Disable the tracer and write `TRACE_<name>.json`; `None` when
+    /// `--trace` was not given. A write failure is fatal, mirroring
+    /// [`BenchJson::finish`]: a bench asked to capture a profile must not
+    /// exit successfully without it.
+    pub fn finish(&self) -> Option<PathBuf> {
+        if !self.enabled {
+            return None;
+        }
+        super::trace::set_enabled(false);
+        let path = self.dir.join(format!("TRACE_{}.json", self.name));
+        let write = std::fs::create_dir_all(&self.dir)
+            .and_then(|_| std::fs::write(&path, super::trace::export_string()));
+        if let Err(e) = write {
+            eprintln!("error: could not write trace for '{}': {e}", self.name);
+            std::process::exit(1);
+        }
+        println!("  trace: wrote {}", path.display());
+        Some(path)
+    }
+}
+
 /// Where bench JSON reports land.
 pub fn report_dir() -> PathBuf {
     PathBuf::from(
@@ -384,6 +456,23 @@ mod tests {
         b.record("tv", [4, 4, 4], 0, "-", 9.0);
         assert_eq!(b.finish().unwrap(), file);
         assert!(file.exists());
+    }
+
+    #[test]
+    fn bench_trace_is_inert_without_flag() {
+        let off = BenchTrace::new("unit_trace_off", false, None);
+        assert!(off.finish().is_none());
+    }
+
+    #[test]
+    fn trace_artifact_lands_next_to_the_bench_json() {
+        // Directory destination: shared verbatim.
+        assert_eq!(trace_dest_dir(Some("out/dir")), PathBuf::from("out/dir"));
+        // Explicit-file destination: the trace shares its parent.
+        assert_eq!(trace_dest_dir(Some("out/dir/custom.json")), PathBuf::from("out/dir"));
+        assert_eq!(trace_dest_dir(Some("bare.json")), PathBuf::from("."));
+        // No --json: the report dir.
+        assert_eq!(trace_dest_dir(None), report_dir());
     }
 
     #[test]

@@ -1,0 +1,388 @@
+//! Hierarchical span tracing with Chrome trace-event (Perfetto) export.
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Disabled cost is one branch.** [`span`] and [`Span::drop`] check a
+//!    single relaxed atomic and return; no clock reads, no allocation, no
+//!    TLS touch. The perf gate runs with tracing disabled, so this is the
+//!    path that must stay free.
+//! 2. **Safe code only.** The per-thread rings are plain `VecDeque`s owned
+//!    through an `Arc<Mutex<…>>` registered once per thread: the owning
+//!    thread is the only writer, so the lock is uncontended on the hot
+//!    path and only ever fought over during an export. No `unsafe`
+//!    anywhere in this module (the xtask `trace-safe` rule enforces it).
+//! 3. **Bit-identity.** Spans observe wall clocks and nothing else; they
+//!    never touch kernel arithmetic or reduction order, so every traced
+//!    output is bitwise identical to its untraced twin.
+//!
+//! Spans are RAII guards: [`span("ffd", "level")`](span) opens a span that
+//! closes (and records one complete `"ph":"X"` event) when the guard
+//! drops. Nesting falls out of scoping — guards drop in LIFO order, so a
+//! child's event is recorded before, and is temporally contained in, its
+//! parent's. Each thread gets its own bounded ring (capacity
+//! [`RING_CAP`]); when full, the oldest events are dropped and counted.
+//!
+//! Export ([`export`] / [`export_string`]) drains every ring into the
+//! Chrome trace-event JSON object format (`{"traceEvents":[…]}`), which
+//! Perfetto and `chrome://tracing` load directly.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Maximum buffered events per thread; beyond this the oldest are dropped
+/// (and counted — see [`dropped`]).
+pub const RING_CAP: usize = 1 << 16;
+
+/// One recorded span: a complete event in Chrome trace-event terms.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Span name, e.g. `"iteration"`.
+    pub name: &'static str,
+    /// Category, e.g. `"wire"`, `"job"`, `"ffd"`, `"store"`.
+    pub cat: &'static str,
+    /// Start, in microseconds since the trace epoch.
+    pub ts_us: f64,
+    /// Duration in microseconds.
+    pub dur_us: f64,
+    /// Trace-local thread id (small integers assigned in registration order).
+    pub tid: u64,
+    /// Span arguments (shown in the Perfetto detail pane).
+    pub args: Vec<(&'static str, Json)>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+/// The shared time origin for all `ts` fields. Initialized on first use
+/// (eagerly by [`set_enabled`]) so every thread measures from one epoch.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+struct Ring {
+    tid: u64,
+    events: Mutex<VecDeque<Event>>,
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL_RING: RefCell<Option<Arc<Ring>>> = const { RefCell::new(None) };
+}
+
+/// Push one event onto the calling thread's ring, registering the ring on
+/// first use. Single-writer: only the owning thread pushes, so the mutex
+/// is uncontended except while an export drains it.
+fn push(mut ev: Event) {
+    LOCAL_RING.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let ring = slot.get_or_insert_with(|| {
+            let ring = Arc::new(Ring {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                events: Mutex::new(VecDeque::new()),
+            });
+            registry().lock().unwrap().push(Arc::clone(&ring));
+            ring
+        });
+        ev.tid = ring.tid;
+        let mut q = ring.events.lock().unwrap();
+        if q.len() >= RING_CAP {
+            q.pop_front();
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+        q.push_back(ev);
+    });
+}
+
+/// Turn tracing on or off, process-wide. Enabling pins the trace epoch if
+/// it is not already set. Spans opened while enabled still record on drop
+/// even if tracing is disabled mid-span.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is tracing currently enabled? One relaxed load — this is the entire
+/// disabled-path cost of every instrumentation point.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Number of events dropped to ring overflow since the last [`clear`].
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Number of events currently buffered across all threads.
+pub fn event_count() -> usize {
+    registry().lock().unwrap().iter().map(|r| r.events.lock().unwrap().len()).sum()
+}
+
+/// Discard all buffered events (and the overflow count) without exporting.
+pub fn clear() {
+    for ring in registry().lock().unwrap().iter() {
+        ring.events.lock().unwrap().clear();
+    }
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// An RAII span guard. Created by [`span`]; records one complete event
+/// covering its lifetime when dropped. Inert (a single-branch no-op) when
+/// tracing is disabled at creation.
+#[must_use = "a span measures its guard's lifetime — bind it with `let _span = …`"]
+pub struct Span {
+    live: Option<LiveSpan>,
+}
+
+struct LiveSpan {
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    args: Vec<(&'static str, Json)>,
+}
+
+impl Span {
+    /// Attach an argument (builder-style). No-op on an inert span.
+    pub fn arg(mut self, key: &'static str, val: Json) -> Span {
+        if let Some(l) = self.live.as_mut() {
+            l.args.push((key, val));
+        }
+        self
+    }
+
+    /// Attach a numeric argument.
+    pub fn arg_num(self, key: &'static str, val: f64) -> Span {
+        if self.live.is_some() { self.arg(key, Json::Num(val)) } else { self }
+    }
+
+    /// Attach a string argument (only allocates on a live span).
+    pub fn arg_str(self, key: &'static str, val: &str) -> Span {
+        if self.live.is_some() { self.arg(key, Json::Str(val.to_string())) } else { self }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(live) = self.live.take() else { return };
+        let dur_us = live.start.elapsed().as_secs_f64() * 1e6;
+        let ts_us = live
+            .start
+            .checked_duration_since(epoch())
+            .map(|d| d.as_secs_f64() * 1e6)
+            .unwrap_or(0.0);
+        push(Event {
+            name: live.name,
+            cat: live.cat,
+            ts_us,
+            dur_us,
+            tid: 0, // assigned by push()
+            args: live.args,
+        });
+    }
+}
+
+/// Open a span. When tracing is disabled this is one branch and returns an
+/// inert guard whose drop is another single branch.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if !enabled() {
+        return Span { live: None };
+    }
+    Span { live: Some(LiveSpan { name, cat, start: Instant::now(), args: Vec::new() }) }
+}
+
+/// Record a complete event whose start was observed earlier (e.g. a job's
+/// time on the queue, measured from its submission instant at claim time).
+pub fn emit_since(cat: &'static str, name: &'static str, start: Instant, args: Vec<(&'static str, Json)>) {
+    if !enabled() {
+        return;
+    }
+    let dur_us = start.elapsed().as_secs_f64() * 1e6;
+    let ts_us = start
+        .checked_duration_since(epoch())
+        .map(|d| d.as_secs_f64() * 1e6)
+        .unwrap_or(0.0);
+    push(Event { name, cat, ts_us, dur_us, tid: 0, args });
+}
+
+/// Drain every thread's ring: returns all buffered events sorted by start
+/// time and leaves the buffers empty.
+pub fn drain() -> Vec<Event> {
+    let mut out = Vec::new();
+    for ring in registry().lock().unwrap().iter() {
+        out.extend(ring.events.lock().unwrap().split_off(0));
+    }
+    DROPPED.store(0, Ordering::Relaxed);
+    out.sort_by(|a, b| a.ts_us.total_cmp(&b.ts_us));
+    out
+}
+
+/// Drain and export as a Chrome trace-event JSON object
+/// (`{"traceEvents":[…]}`) loadable in Perfetto / `chrome://tracing`.
+pub fn export() -> Json {
+    let pid = std::process::id() as f64;
+    let events: Vec<Json> = drain()
+        .into_iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::Str(e.name.to_string())),
+                ("cat", Json::Str(e.cat.to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(e.ts_us)),
+                ("dur", Json::Num(e.dur_us)),
+                ("pid", Json::Num(pid)),
+                ("tid", Json::Num(e.tid as f64)),
+                ("args", Json::Obj(e.args.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// [`export`], serialized.
+pub fn export_string() -> String {
+    export().to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tracing state is process-global; serialize the tests that toggle it.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_tracing_records_nothing() {
+        let _g = lock();
+        set_enabled(false);
+        clear();
+        {
+            let _s = span("t", "noop").arg_num("x", 1.0);
+        }
+        emit_since("t", "noop2", Instant::now(), vec![]);
+        assert_eq!(event_count(), 0);
+    }
+
+    #[test]
+    fn span_guard_drop_ordering() {
+        // The load-bearing fixture for the xtask `trace-safe` rule: nested
+        // guards drop LIFO, so the child records first and its interval is
+        // contained in the parent's.
+        let _g = lock();
+        set_enabled(true);
+        clear();
+        {
+            let _parent = span("t", "parent");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _child = span("t", "child");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        set_enabled(false);
+        let evs = drain();
+        let child = evs.iter().find(|e| e.name == "child").expect("child recorded");
+        let parent = evs.iter().find(|e| e.name == "parent").expect("parent recorded");
+        assert!(child.ts_us >= parent.ts_us, "child starts after parent");
+        assert!(
+            child.ts_us + child.dur_us <= parent.ts_us + parent.dur_us,
+            "child ends before parent (LIFO drop)"
+        );
+        assert!(child.dur_us < parent.dur_us);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest() {
+        let _g = lock();
+        set_enabled(true);
+        clear();
+        for _ in 0..(RING_CAP + 7) {
+            let _s = span("t", "tick");
+        }
+        set_enabled(false);
+        assert!(dropped() >= 7, "dropped={}", dropped());
+        assert!(event_count() <= RING_CAP);
+        clear();
+    }
+
+    #[test]
+    fn export_is_valid_chrome_trace_json() {
+        let _g = lock();
+        set_enabled(true);
+        clear();
+        {
+            let _s = span("cat", "op").arg_str("isa", "scalar").arg_num("z0", 4.0);
+        }
+        set_enabled(false);
+        let text = export_string();
+        let j = Json::parse(&text).expect("export parses");
+        let evs = j.get("traceEvents").as_arr().expect("traceEvents array");
+        assert!(!evs.is_empty());
+        let e = &evs[0];
+        assert_eq!(e.get("ph").as_str(), Some("X"));
+        assert_eq!(e.get("name").as_str(), Some("op"));
+        assert!(e.get("ts").as_f64().is_some());
+        assert!(e.get("dur").as_f64().unwrap() >= 0.0);
+        assert!(e.get("tid").as_f64().unwrap() >= 1.0);
+        assert_eq!(e.get("args").get("isa").as_str(), Some("scalar"));
+        // Export drained the rings.
+        assert_eq!(event_count(), 0);
+    }
+
+    #[test]
+    fn emit_since_backdates_the_start() {
+        let _g = lock();
+        set_enabled(true);
+        clear();
+        let t0 = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        emit_since("t", "queued", t0, vec![("id", Json::Num(7.0))]);
+        set_enabled(false);
+        let evs = drain();
+        let e = evs.iter().find(|e| e.name == "queued").unwrap();
+        assert!(e.dur_us >= 2_000.0, "dur_us={}", e.dur_us);
+    }
+
+    #[test]
+    fn spans_from_worker_threads_get_distinct_tids() {
+        let _g = lock();
+        set_enabled(true);
+        clear();
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    let _s = span("t", "worker");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        set_enabled(false);
+        let evs = drain();
+        let mut tids: Vec<u64> = evs.iter().filter(|e| e.name == "worker").map(|e| e.tid).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        assert_eq!(tids.len(), 3, "three distinct worker tids");
+    }
+}

@@ -1,0 +1,285 @@
+//! Observability subsystem, end to end: the tracing/metrics contract the
+//! server and FFD pipeline promise.
+//!
+//!  * Bit-identity: tracing on vs off changes nothing about registration
+//!    output, at every thread count (spans read wall clocks only).
+//!  * The `trace` op's dump is valid Chrome trace-event JSON whose
+//!    op → job → level → iteration → chunk spans nest temporally.
+//!  * The `metrics` op renders parseable Prometheus text covering a
+//!    latency histogram for every declared wire op.
+//!  * `stats` reports uptime, build version and the active SIMD ISA.
+
+mod common;
+
+use common::*;
+use ffdreg::coordinator::server::{Client, OPS};
+use ffdreg::ffd::FfdConfig;
+use ffdreg::util::json::Json;
+use ffdreg::util::trace;
+use ffdreg::volume::Dims;
+
+/// The tracer is process-global; tests that toggle it serialize here so
+/// the harness' parallel test threads cannot interleave captures.
+fn trace_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn op(name: &str) -> Json {
+    Json::obj(vec![("op", Json::Str(name.into()))])
+}
+
+// ---------------------------------------------------------------------------
+// bit-identity
+
+#[test]
+fn tracing_is_bitwise_invisible_to_registration() {
+    let dims = Dims::new(20, 20, 20);
+    let reference = blob(dims, 10.0, 10.0, 10.0, 30.0);
+    let floating = blob(dims, 11.5, 9.0, 10.0, 30.0);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+
+    let _g = trace_lock();
+    for threads in [1usize, 2, 5] {
+        let cfg = FfdConfig { levels: 2, max_iter: 4, threads, ..Default::default() };
+        trace::set_enabled(false);
+        trace::clear();
+        let off = ffdreg::ffd::register(&reference, &floating, &cfg);
+        assert_eq!(trace::event_count(), 0, "disabled tracer recorded events");
+
+        trace::set_enabled(true);
+        let on = ffdreg::ffd::register(&reference, &floating, &cfg);
+        let recorded = trace::event_count();
+        trace::set_enabled(false);
+        trace::clear();
+
+        assert!(recorded > 0, "tracing enabled but no spans recorded (threads {threads})");
+        assert_eq!(
+            off.cost.to_bits(),
+            on.cost.to_bits(),
+            "cost differs with tracing on (threads {threads})"
+        );
+        assert_eq!(off.timing.iterations, on.timing.iterations, "iterations (threads {threads})");
+        assert_eq!(
+            bits(&off.warped.data),
+            bits(&on.warped.data),
+            "warped volume differs with tracing on (threads {threads})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// server trace flow
+
+/// `[start, end)` µs intervals of every complete event with this name.
+fn intervals(events: &[Json], name: &str) -> Vec<(f64, f64)> {
+    events
+        .iter()
+        .filter(|e| e.get("name").as_str() == Some(name))
+        .map(|e| {
+            let ts = e.get("ts").as_f64().expect("ts");
+            (ts, ts + e.get("dur").as_f64().expect("dur"))
+        })
+        .collect()
+}
+
+/// Temporal containment (children may run on other threads, so the
+/// hierarchy is by time, not tid). Half a microsecond of float slack.
+fn contained(child: (f64, f64), parents: &[(f64, f64)]) -> bool {
+    const EPS: f64 = 0.5;
+    parents.iter().any(|&(s, e)| child.0 + EPS >= s && child.1 <= e + EPS)
+}
+
+#[test]
+fn server_trace_dump_is_chrome_trace_json_with_nested_spans() {
+    let dims = Dims::new(20, 20, 20);
+    let reference = blob(dims, 10.0, 10.0, 10.0, 30.0);
+    let floating = blob(dims, 11.5, 9.0, 10.0, 30.0);
+
+    let _g = trace_lock();
+    trace::set_enabled(false);
+    trace::clear();
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+
+    let mut enable = op("trace");
+    if let Json::Obj(map) = &mut enable {
+        map.insert("enable".into(), Json::Bool(true));
+    }
+    let r = call_ok(&mut c, &enable);
+    assert_eq!(r.get("enabled").as_bool(), Some(true), "{r:?}");
+
+    let (href, _) = upload_volume(&mut c, &reference);
+    let (hflo, _) = upload_volume(&mut c, &floating);
+    let req = Json::obj(vec![
+        ("op", Json::Str("register".into())),
+        ("reference", Json::Str(href)),
+        ("floating", Json::Str(hflo)),
+        ("levels", Json::Num(2.0)),
+        ("iters", Json::Num(3.0)),
+        ("threads", Json::Num(2.0)),
+        ("async", Json::Bool(true)),
+    ]);
+    let submitted = call_ok(&mut c, &req);
+    let id = submitted.get("job").as_usize().expect("job id");
+    let done = wait_job(&mut c, id, 120);
+    assert_eq!(done.get("state").as_str(), Some("done"), "{done:?}");
+
+    let mut dump = op("trace");
+    if let Json::Obj(map) = &mut dump {
+        map.insert("enable".into(), Json::Bool(false));
+        map.insert("dump".into(), Json::Bool(true));
+    }
+    let resp = call_ok(&mut c, &dump);
+    assert_eq!(resp.get("enabled").as_bool(), Some(false), "{resp:?}");
+    server.stop();
+    trace::clear();
+
+    // The dump must round-trip through our own parser as a Chrome
+    // trace-event object: {"traceEvents":[...complete events...]}.
+    let text = resp.get("trace").to_string();
+    let parsed = Json::parse(&text).expect("trace dump re-parses");
+    assert_eq!(parsed.get("displayTimeUnit").as_str(), Some("ms"));
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents array").clone();
+    assert!(!events.is_empty(), "empty trace after a traced registration");
+    for e in &events {
+        assert_eq!(e.get("ph").as_str(), Some("X"), "complete events only: {e:?}");
+        assert!(!e.get("name").as_str().unwrap_or("").is_empty(), "{e:?}");
+        assert!(!e.get("cat").as_str().unwrap_or("").is_empty(), "{e:?}");
+        assert!(e.get("pid").as_f64().is_some() && e.get("tid").as_f64().is_some(), "{e:?}");
+        assert!(e.get("ts").as_f64().unwrap_or(-1.0) >= 0.0, "{e:?}");
+        assert!(e.get("dur").as_f64().unwrap_or(-1.0) >= 0.0, "{e:?}");
+    }
+
+    // Every layer of the hierarchy left spans: wire op, job lifecycle,
+    // FFD levels/iterations, and the chunked kernel passes.
+    let wire_register = intervals(&events, "register");
+    let job_run = intervals(&events, "job.run");
+    let levels = intervals(&events, "ffd.level");
+    let iterations = intervals(&events, "ffd.iteration");
+    let chunks: Vec<(f64, f64)> = events
+        .iter()
+        .filter(|e| e.get("name").as_str().unwrap_or("").starts_with("ffd.chunk."))
+        .map(|e| {
+            let ts = e.get("ts").as_f64().unwrap();
+            (ts, ts + e.get("dur").as_f64().unwrap())
+        })
+        .collect();
+    assert!(!wire_register.is_empty(), "no wire span for the register op");
+    assert!(!intervals(&events, "job.queued").is_empty(), "no job.queued span");
+    assert_eq!(job_run.len(), 1, "expected exactly one job.run span");
+    assert_eq!(levels.len(), 2, "expected one ffd.level span per pyramid level");
+    assert!(!iterations.is_empty(), "no ffd.iteration spans");
+    assert!(!chunks.is_empty(), "no ffd.chunk.* spans");
+
+    // Temporal nesting: chunk ⊆ iteration ⊆ level ⊆ job.run, and the job
+    // ran only after the (async) register op accepted it.
+    for &lv in &levels {
+        assert!(contained(lv, &job_run), "level {lv:?} outside job.run {job_run:?}");
+    }
+    for &it in &iterations {
+        assert!(contained(it, &levels), "iteration {it:?} outside every level");
+    }
+    for &ch in &chunks {
+        assert!(contained(ch, &iterations), "chunk {ch:?} outside every iteration");
+    }
+    let submit_start = wire_register.iter().map(|i| i.0).fold(f64::INFINITY, f64::min);
+    assert!(
+        job_run[0].0 >= submit_start,
+        "job.run began before the register op was submitted"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// metrics op
+
+#[test]
+fn metrics_op_renders_prometheus_covering_every_wire_op() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    // Exercise a few ops so some series are non-zero; coverage of the
+    // rest must come from pre-registration, not from traffic.
+    call_ok(&mut c, &op("ping"));
+    call_ok(&mut c, &op("stats"));
+    let r = call_ok(&mut c, &op("metrics"));
+    server.stop();
+
+    assert!(
+        r.get("content_type").as_str().unwrap_or("").starts_with("text/plain"),
+        "{r:?}"
+    );
+    let body = r.get("body").as_str().expect("metrics body").to_string();
+
+    // Light-weight exposition-format check: every sample line is
+    // `series value` with a parseable value and balanced label braces.
+    let mut samples = 0usize;
+    for line in body.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("bad line {line:?}"));
+        assert!(value.parse::<f64>().is_ok(), "unparseable value in {line:?}");
+        assert!(series.starts_with("ffdreg_"), "foreign series {line:?}");
+        assert_eq!(
+            series.contains('{'),
+            series.ends_with('}'),
+            "unbalanced labels in {line:?}"
+        );
+        samples += 1;
+    }
+    assert!(samples > 0, "no samples in metrics body");
+
+    // A latency histogram for every declared wire op, called or not.
+    assert!(body.contains("# TYPE ffdreg_op_latency_seconds histogram"));
+    for wire_op in OPS {
+        let bucket = format!("ffdreg_op_latency_seconds_bucket{{op=\"{wire_op}\",le=\"+Inf\"}}");
+        let sum = format!("ffdreg_op_latency_seconds_sum{{op=\"{wire_op}\"}}");
+        let count = format!("ffdreg_op_latency_seconds_count{{op=\"{wire_op}\"}}");
+        for series in [&bucket, &sum, &count] {
+            assert!(body.contains(series.as_str()), "metrics body lacks {series}");
+        }
+    }
+    // The ping we sent must have been observed by its histogram.
+    let ping_count = body
+        .lines()
+        .find(|l| l.starts_with("ffdreg_op_latency_seconds_count{op=\"ping\"}"))
+        .and_then(|l| l.rsplit_once(' '))
+        .and_then(|(_, v)| v.parse::<f64>().ok())
+        .expect("ping count series");
+    assert!(ping_count >= 1.0, "ping latency not recorded: {ping_count}");
+
+    // Store/scheduler counters and the live gauges ride along.
+    for series in [
+        "ffdreg_store_hits_total",
+        "ffdreg_store_insertions_total",
+        "ffdreg_scheduler_submitted_total",
+        "ffdreg_scheduler_completed_total",
+        "ffdreg_store_bytes",
+        "ffdreg_scheduler_queue_depth",
+        "ffdreg_job_queue_depth",
+        "ffdreg_connections",
+        "ffdreg_uptime_seconds",
+    ] {
+        assert!(body.contains(series), "metrics body lacks {series}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stats extensions
+
+#[test]
+fn stats_reports_uptime_version_and_simd_isa() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r = call_ok(&mut c, &op("stats"));
+    assert!(r.get("uptime_s").as_f64().expect("uptime_s") >= 0.0, "{r:?}");
+    assert_eq!(r.get("version").as_str(), Some(ffdreg::version()), "{r:?}");
+    assert_eq!(
+        r.get("simd").as_str(),
+        Some(ffdreg::util::simd::active().name()),
+        "{r:?}"
+    );
+    // Our own connection is counted.
+    assert!(r.get("connections").as_usize().expect("connections") >= 1, "{r:?}");
+    server.stop();
+}

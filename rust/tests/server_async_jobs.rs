@@ -127,6 +127,7 @@ fn async_jobs_report_progress_then_done() {
     let id = submitted.get("job").as_usize().unwrap();
     // Poll through the lifecycle; running polls must carry progress fields.
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    let mut saw_timed_poll = false;
     loop {
         let r = call_ok(
             &mut c,
@@ -138,6 +139,22 @@ fn async_jobs_report_progress_then_done() {
                 assert!(r.get("levels").as_usize().unwrap_or(0) >= 1, "{r:?}");
                 assert!(r.get("level").as_usize().is_some(), "{r:?}");
                 assert!(r.get("iteration").as_usize().is_some(), "{r:?}");
+                // Every running poll carries the live FfdTiming breakdown.
+                let bsi = r.get("bsi_s").as_f64().expect("bsi_s");
+                let reg = r.get("reg_s").as_f64().expect("reg_s");
+                let elapsed = r.get("elapsed_s").as_f64().expect("elapsed_s");
+                let level_s = r.get("level_s").as_f64().expect("level_s");
+                assert!(bsi >= 0.0 && reg >= 0.0 && level_s >= 0.0, "{r:?}");
+                assert!(elapsed + 1e-9 >= bsi, "elapsed < bsi: {r:?}");
+                assert!(elapsed + 1e-9 >= level_s, "elapsed < level_s: {r:?}");
+                if elapsed > 0.0 {
+                    let frac = r.get("bsi_fraction").as_f64().expect("bsi_fraction");
+                    assert!((0.0..=1.0 + 1e-9).contains(&frac), "{r:?}");
+                    if r.get("iteration").as_usize().unwrap_or(0) >= 1 {
+                        assert!(bsi > 0.0, "an iteration implies BSI time: {r:?}");
+                        saw_timed_poll = true;
+                    }
+                }
             }
             Some("done") => {
                 assert!(r.get("cost").as_f64().is_some());
@@ -149,6 +166,11 @@ fn async_jobs_report_progress_then_done() {
         assert!(std::time::Instant::now() < deadline, "job never finished");
         std::thread::sleep(std::time::Duration::from_millis(1));
     }
+    assert!(
+        saw_timed_poll,
+        "never observed a running poll with the FfdTiming breakdown populated \
+         (40 iterations at 1ms polling should yield many)"
+    );
     server.stop();
 }
 

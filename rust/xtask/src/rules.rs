@@ -343,12 +343,47 @@ pub fn check_target_feature(path: &str, scan: &Scan, out: &mut Vec<Violation>) {
     }
 }
 
+/// Rule `trace-safe`: the tracing substrate (`util/trace.rs`) must stay
+/// `unsafe`-free — its per-thread rings are plain `Mutex<VecDeque>`s by
+/// design, so the unsafe census never grows for observability — and must
+/// keep its `span_guard_drop_ordering` test. Span guards record on Drop;
+/// LIFO drop order is the entire nesting guarantee of the hierarchy, and
+/// that named test is its executable proof.
+pub fn check_trace_safety(path: &str, scan: &Scan, out: &mut Vec<Violation>) {
+    if !path.ends_with("util/trace.rs") {
+        return;
+    }
+    if let Some(t) = scan.toks.iter().find(|t| t.text == "unsafe") {
+        out.push(Violation::new(
+            path,
+            t.line,
+            "trace-safe",
+            "`unsafe` in util/trace.rs — the tracing rings are a \
+             safe-code-only subsystem (per-thread `Mutex<VecDeque>`); \
+             keep it that way"
+                .to_string(),
+        ));
+    }
+    if !scan.toks.iter().any(|t| t.text == "span_guard_drop_ordering") {
+        out.push(Violation::new(
+            path,
+            1,
+            "trace-safe",
+            "util/trace.rs has no `span_guard_drop_ordering` test — the \
+             RAII drop-order fixture is the executable proof that child \
+             spans nest inside their parents; restore it under that name"
+                .to_string(),
+        ));
+    }
+}
+
 /// Run every rule over one file.
 pub fn check_all(path: &str, scan: &Scan, out: &mut Vec<Violation>) {
     check_safety_comments(path, scan, out);
     check_raw_mul_add(path, scan, out);
     check_float_sum(path, scan, out);
     check_target_feature(path, scan, out);
+    check_trace_safety(path, scan, out);
 }
 
 #[cfg(test)]
@@ -514,6 +549,37 @@ mod tests {
         let src = "// SAFETY: wrapper.\n#[target_feature(enable = \"avx2\")]\nunsafe fn fill_avx2() {}\n";
         let v = run("rust/src/bspline/vt.rs", src);
         assert!(rules(&v).contains(&"undispatched-target-feature"));
+    }
+
+    // ---- trace-safe ----
+
+    #[test]
+    fn unsafe_in_trace_rs_fires() {
+        // Even a SAFETY-justified unsafe block is rejected in trace.rs —
+        // the module's contract is zero unsafe, not justified unsafe.
+        let src = "// SAFETY: would pass the safety-comment rule.\nunsafe fn f() {}\nfn span_guard_drop_ordering() {}\n";
+        let v = run("rust/src/util/trace.rs", src);
+        assert!(rules(&v).contains(&"trace-safe"));
+    }
+
+    #[test]
+    fn trace_rs_without_the_drop_ordering_fixture_fires() {
+        let src = "pub fn span() {}\n";
+        let v = run("rust/src/util/trace.rs", src);
+        assert_eq!(rules(&v), vec!["trace-safe"]);
+    }
+
+    #[test]
+    fn safe_trace_rs_with_the_fixture_passes() {
+        let src = "pub fn span() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn span_guard_drop_ordering() {}\n}\n";
+        assert!(run("rust/src/util/trace.rs", src).is_empty());
+    }
+
+    #[test]
+    fn trace_rule_only_polices_trace_rs() {
+        // Other files without the fixture name are untouched by this rule.
+        let src = "pub fn span() {}\n";
+        assert!(run("rust/src/util/timer.rs", src).is_empty());
     }
 
     // ---- test-region detection ----

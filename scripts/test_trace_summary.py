@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Unit tests for trace_summary.py (stdlib unittest, no dependencies).
+
+Run: python3 scripts/test_trace_summary.py
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import trace_summary  # noqa: E402
+
+
+def ev(name, ts, dur, tid=1, cat="x"):
+    return {"name": name, "cat": cat, "ph": "X", "ts": ts, "dur": dur,
+            "pid": 1, "tid": tid}
+
+
+def write_trace(events, path):
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, fh)
+
+
+class LoadTests(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.path = os.path.join(self.dir.name, "t.json")
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def test_loads_complete_events_and_skips_other_phases(self):
+        write_trace([ev("a", 0, 10), {"name": "m", "ph": "M", "ts": 0}], self.path)
+        events = trace_summary.load_events(self.path)
+        self.assertEqual([e["name"] for e in events], ["a"])
+
+    def test_rejects_non_trace_documents(self):
+        with open(self.path, "w", encoding="utf-8") as fh:
+            json.dump({"nope": []}, fh)
+        with self.assertRaises(ValueError):
+            trace_summary.load_events(self.path)
+
+    def test_rejects_events_with_broken_timing(self):
+        write_trace([ev("a", 0, -5)], self.path)
+        with self.assertRaises(ValueError):
+            trace_summary.load_events(self.path)
+        write_trace([{"name": "a", "ph": "X", "ts": "soon", "dur": 1}], self.path)
+        with self.assertRaises(ValueError):
+            trace_summary.load_events(self.path)
+
+    def test_main_exit_codes(self):
+        write_trace([ev("a", 0, 10)], self.path)
+        self.assertEqual(trace_summary.main([self.path]), 0)
+        self.assertEqual(trace_summary.main([self.path + ".missing"]), 2)
+
+
+class SelfTimeTests(unittest.TestCase):
+    def selfs(self, events):
+        return {e["name"]: s for e, s in trace_summary.self_times(events)}
+
+    def test_child_time_is_subtracted_from_the_parent(self):
+        s = self.selfs([ev("parent", 0, 100), ev("child", 10, 30)])
+        self.assertAlmostEqual(s["parent"], 70.0)
+        self.assertAlmostEqual(s["child"], 30.0)
+
+    def test_overlapping_children_are_not_double_counted(self):
+        # Two children covering [10,40) and [30,60): union is 50, not 60.
+        s = self.selfs([ev("p", 0, 100), ev("c1", 10, 30), ev("c2", 30, 30)])
+        self.assertAlmostEqual(s["p"], 50.0)
+
+    def test_other_threads_do_not_steal_self_time(self):
+        # The tid=2 span lies inside the tid=1 span's interval but runs on
+        # another thread — same-thread self time must be untouched.
+        s = self.selfs([ev("p", 0, 100, tid=1), ev("w", 10, 50, tid=2)])
+        self.assertAlmostEqual(s["p"], 100.0)
+        self.assertAlmostEqual(s["w"], 50.0)
+
+    def test_deep_nesting(self):
+        s = self.selfs([ev("a", 0, 100), ev("b", 10, 50), ev("c", 20, 10)])
+        self.assertAlmostEqual(s["a"], 50.0)  # 100 - b's 50 (c inside b)
+        self.assertAlmostEqual(s["b"], 40.0)
+        self.assertAlmostEqual(s["c"], 10.0)
+
+
+class BsiFractionTests(unittest.TestCase):
+    def test_fraction_over_job_run(self):
+        events = [
+            ev("job.run", 0, 1000),
+            ev("ffd.chunk.interpolate", 10, 100, tid=2),
+            ev("ffd.chunk.interpolate", 200, 150, tid=3),
+            ev("ffd.chunk.gradient", 400, 100, tid=2),
+        ]
+        bsi, total, frac = trace_summary.bsi_fraction(events)
+        self.assertAlmostEqual(bsi, 250.0)
+        self.assertAlmostEqual(total, 1000.0)
+        self.assertAlmostEqual(frac, 0.25)
+
+    def test_falls_back_to_level_spans_without_a_job(self):
+        # CLI/bench captures have no job.run — ffd.level anchors instead.
+        events = [
+            ev("ffd.level", 0, 400),
+            ev("ffd.level", 400, 600),
+            ev("ffd.chunk.interpolate", 10, 100),
+        ]
+        bsi, total, frac = trace_summary.bsi_fraction(events)
+        self.assertAlmostEqual(total, 1000.0)
+        self.assertAlmostEqual(frac, 0.1)
+
+    def test_none_without_an_anchor(self):
+        self.assertIsNone(trace_summary.bsi_fraction([ev("interpolate.run", 0, 5)]))
+
+
+class SummaryTests(unittest.TestCase):
+    def test_summary_mentions_top_spans_and_fraction(self):
+        events = [
+            ev("job.run", 0, 1000),
+            ev("ffd.chunk.interpolate", 10, 400, tid=2),
+        ]
+        text = trace_summary.summarize(events)
+        self.assertIn("job.run", text)
+        self.assertIn("ffd.chunk.interpolate", text)
+        self.assertIn("BSI fraction: 40.0%", text)
+
+    def test_empty_trace_summary(self):
+        self.assertIn("empty", trace_summary.summarize([]))
+
+
+if __name__ == "__main__":
+    unittest.main()

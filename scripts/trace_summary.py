@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Summarize a Chrome trace-event JSON capture from ffdreg's tracer.
+
+Reads the `{"traceEvents":[...]}` file written by `--trace-out` (CLI),
+`--trace` (benches) or the server's `trace` op, and prints:
+
+  * the top spans by *self* time (wall time minus the time covered by
+    same-thread child spans — the quantity worth optimizing, since a
+    parent that merely waits on instrumented children has ~zero self
+    time);
+  * per-name totals (count, total wall, mean);
+  * the BSI fraction: time in B-spline interpolation kernel spans
+    (ffd.chunk.interpolate) over total traced registration time, the
+    paper's headline ratio.
+
+Exit codes: 0 on success, 2 on unreadable/invalid input.
+
+No third-party dependencies — stdlib only.
+"""
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+# Span names counted as BSI kernel time, and the span whose duration
+# anchors the denominator of the BSI fraction.
+BSI_SPAN = "ffd.chunk.interpolate"
+TOTAL_SPANS = ("job.run", "ffd.level")
+
+
+def load_events(path):
+    """Return the complete ('ph' == 'X') events of a trace file.
+
+    Raises ValueError on structurally invalid input; events missing a
+    numeric ts/dur are rejected rather than skipped, so a malformed
+    capture fails loudly.
+    """
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    if not isinstance(doc, dict) or not isinstance(doc.get("traceEvents"), list):
+        raise ValueError("not a Chrome trace-event object (no traceEvents array)")
+    events = []
+    for ev in doc["traceEvents"]:
+        if not isinstance(ev, dict) or ev.get("ph") != "X":
+            continue
+        name, ts, dur = ev.get("name"), ev.get("ts"), ev.get("dur")
+        if not isinstance(name, str):
+            raise ValueError(f"event without a name: {ev!r}")
+        if not isinstance(ts, (int, float)) or not isinstance(dur, (int, float)):
+            raise ValueError(f"event without numeric ts/dur: {ev!r}")
+        if dur < 0:
+            raise ValueError(f"negative duration: {ev!r}")
+        events.append({"name": name, "ts": float(ts), "dur": float(dur),
+                       "tid": ev.get("tid", 0), "cat": ev.get("cat", "")})
+    return events
+
+
+def self_times(events):
+    """Per-event self time: duration minus same-thread child coverage.
+
+    Children are detected per thread by interval containment (the tracer
+    emits complete events; on one thread spans nest like a call stack).
+    Overlapping children are merged so shared coverage is not double-
+    subtracted.
+    """
+    by_tid = defaultdict(list)
+    for ev in events:
+        by_tid[ev["tid"]].append(ev)
+    selfs = []
+    for evs in by_tid.values():
+        evs.sort(key=lambda e: (e["ts"], -e["dur"]))
+        for i, parent in enumerate(evs):
+            p0, p1 = parent["ts"], parent["ts"] + parent["dur"]
+            # Direct children: contained events not contained in a closer
+            # ancestor also inside this parent. For self time only total
+            # coverage matters, so merge all strictly-contained intervals.
+            merged = []
+            for other in evs:
+                if other is parent:
+                    continue
+                o0, o1 = other["ts"], other["ts"] + other["dur"]
+                if o0 >= p0 and o1 <= p1 and other["dur"] < parent["dur"]:
+                    merged.append((o0, o1))
+            merged.sort()
+            covered = 0.0
+            cur0 = cur1 = None
+            for o0, o1 in merged:
+                if cur1 is None or o0 > cur1:
+                    if cur1 is not None:
+                        covered += cur1 - cur0
+                    cur0, cur1 = o0, o1
+                else:
+                    cur1 = max(cur1, o1)
+            if cur1 is not None:
+                covered += cur1 - cur0
+            selfs.append((parent, max(0.0, parent["dur"] - covered)))
+    return selfs
+
+
+def bsi_fraction(events):
+    """(bsi_us, total_us, fraction) of the capture, or None without a
+    registration anchor span."""
+    bsi = sum(e["dur"] for e in events if e["name"] == BSI_SPAN)
+    for anchor in TOTAL_SPANS:
+        total = sum(e["dur"] for e in events if e["name"] == anchor)
+        if total > 0:
+            return bsi, total, bsi / total
+    return None
+
+
+def summarize(events, top=10):
+    """Render the human-readable summary string for a list of events."""
+    if not events:
+        return "trace is empty (no complete events)\n"
+    lines = []
+    per_name = defaultdict(lambda: [0, 0.0, 0.0])  # count, wall, self
+    for ev, self_us in self_times(events):
+        agg = per_name[ev["name"]]
+        agg[0] += 1
+        agg[1] += ev["dur"]
+        agg[2] += self_us
+
+    lines.append(f"{len(events)} events, {len(per_name)} span names")
+    lines.append("")
+    lines.append(f"top {top} spans by self time:")
+    lines.append(f"  {'name':<28} {'count':>6} {'self ms':>10} {'wall ms':>10} {'mean us':>10}")
+    ranked = sorted(per_name.items(), key=lambda kv: kv[1][2], reverse=True)
+    for name, (count, wall, self_us) in ranked[:top]:
+        lines.append(
+            f"  {name:<28} {count:>6} {self_us / 1e3:>10.3f} "
+            f"{wall / 1e3:>10.3f} {wall / count:>10.1f}"
+        )
+    frac = bsi_fraction(events)
+    lines.append("")
+    if frac is None:
+        lines.append("BSI fraction: n/a (no registration anchor span in capture)")
+    else:
+        bsi, total, f = frac
+        lines.append(
+            f"BSI fraction: {100.0 * f:.1f}% "
+            f"({bsi / 1e3:.3f} ms {BSI_SPAN} / {total / 1e3:.3f} ms registration)"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file (TRACE_*.json)")
+    ap.add_argument("--top", type=int, default=10, help="rows in the self-time table")
+    args = ap.parse_args(argv)
+    try:
+        events = load_events(args.trace)
+    except (OSError, ValueError, json.JSONDecodeError) as exc:
+        print(f"error: {args.trace}: {exc}", file=sys.stderr)
+        return 2
+    sys.stdout.write(summarize(events, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
