@@ -412,6 +412,7 @@ where
 /// tile-aligned (`gran`), so per-voxel arithmetic is partition-independent
 /// and callers that fold `acc` in slice order get bit-identical reductions
 /// at every thread count.
+// lint:hot-loop — execution substrate for every fused FFD pass (with_capacity fan-out only).
 #[allow(clippy::too_many_arguments)]
 pub fn run_slab_pass3<F>(
     pool: &WorkerPool,
@@ -465,6 +466,7 @@ pub fn run_slab_pass3<F>(
 /// NOTE: deliberately a structural twin of [`run_slab_pass3`] — generic
 /// buffer-count machinery costs more than the duplication here. Any change
 /// to the partition/split/fan logic must be applied to BOTH functions.
+// lint:hot-loop — structural twin of run_slab_pass3; same allocation discipline applies.
 #[allow(clippy::too_many_arguments)]
 pub fn run_slab_pass4<F>(
     pool: &WorkerPool,

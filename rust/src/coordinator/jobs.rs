@@ -187,6 +187,8 @@ impl JobEngine {
     }
 
     /// Enqueue a registration; returns the job id to poll.
+    // ORDERING: Relaxed id fetch_add — only uniqueness of the job id
+    // matters; the job entry itself is published under the inner mutex.
     pub fn submit(&self, op: RegisterOp) -> Result<u64, JobSubmitError> {
         if self.shared.shutdown.load(Ordering::Acquire) {
             return Err(JobSubmitError::ShuttingDown);
@@ -440,7 +442,27 @@ fn worker_loop(shared: Arc<Shared>) {
         };
         let outcome = {
             let _run = trace::span("job", "job.run").arg_num("id", id as f64);
-            run_register(&op, Some(&shared.store), &hooks)
+            // A panicking registration must not take this worker thread
+            // down with it (the engine would silently lose a worker per
+            // panic until no queue consumer remains): contain the unwind
+            // and surface a structured `internal` failure instead. The
+            // shared state the closure touches is either lock-protected
+            // (poisoning keeps a torn update from being observed) or
+            // read-only, hence the AssertUnwindSafe.
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                #[cfg(debug_assertions)]
+                test_panic_lever(&op);
+                run_register(&op, Some(&shared.store), &hooks)
+            }))
+            .unwrap_or_else(|payload| {
+                Err(OpError {
+                    code: "internal",
+                    message: format!(
+                        "registration job panicked: {}",
+                        panic_message(payload.as_ref())
+                    ),
+                })
+            })
         };
 
         // Cancellation is cooperative: the job is Cancelled exactly when
@@ -469,6 +491,32 @@ fn worker_loop(shared: Arc<Shared>) {
         }
         drop(guard);
         shared.changed.notify_all();
+    }
+}
+
+/// Best-effort extraction of a panic payload's message: `panic!("…")`
+/// carries a `&str`, `panic!("{x}")` a `String`; anything else (custom
+/// payloads via `panic_any`) gets a placeholder.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Deliberate panic trigger for the catch_unwind regression tests: a
+/// floating volume whose *path* is literally `__ffdreg_panic__` panics
+/// before any volume I/O. Dev/test builds only — release builds compile
+/// this out entirely, so the magic path cannot exist in production.
+#[cfg(debug_assertions)]
+fn test_panic_lever(op: &RegisterOp) {
+    if let super::service::VolumeRef::Path(p) = &op.floating {
+        if p.as_os_str() == "__ffdreg_panic__" {
+            panic!("deliberate test panic (__ffdreg_panic__)");
+        }
     }
 }
 
@@ -528,6 +576,31 @@ mod tests {
         match engine.wait(id) {
             JobState::Failed { code, .. } => assert_eq!(code, "not_found"),
             other => panic!("expected failed, got {other:?}"),
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn panicking_job_fails_with_internal_and_the_worker_survives() {
+        let store = Arc::new(VolumeStore::new(16 << 20));
+        let (a, _) = store.put(blob(6.0)).unwrap();
+        let (b, _) = store.put(blob(7.0)).unwrap();
+        // Default config = exactly one worker: if the panic killed the
+        // worker thread, the follow-up job would hang instead of running.
+        let engine = JobEngine::start(store, JobsConfig::default());
+        let id = engine.submit(op(&a, "__ffdreg_panic__", 1)).unwrap();
+        match engine.wait(id) {
+            JobState::Failed { code, message } => {
+                assert_eq!(code, "internal");
+                assert!(message.contains("panicked"), "{message}");
+                assert!(message.contains("__ffdreg_panic__"), "{message}");
+            }
+            other => panic!("expected failed, got {other:?}"),
+        }
+        let id2 = engine.submit(op(&a, &b, 3)).unwrap();
+        match engine.wait(id2) {
+            JobState::Done(r) => assert!(r.cost.is_finite()),
+            other => panic!("expected done after panic containment, got {other:?}"),
         }
         engine.shutdown();
     }

@@ -141,6 +141,8 @@ impl Metrics {
     }
 
     /// Render a compact JSON string of the counters.
+    // ORDERING: Relaxed loads — independent monotonic counters rendered for
+    // display; cross-counter skew within one snapshot is acceptable.
     pub fn snapshot_json(&self) -> String {
         use crate::util::json::Json;
         Json::obj(vec![

@@ -107,11 +107,16 @@ impl Scheduler {
     }
 
     /// Allocate a job id.
+    // ORDERING: Relaxed fetch_add — only uniqueness of the returned id
+    // matters; nothing synchronizes through this counter.
     pub fn next_job_id(&self) -> u64 {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Submit a job; the outcome arrives on the returned receiver.
+    // ORDERING: Relaxed stat bumps (rejected/submitted) — monotonic
+    // counters for display; the job handoff itself is ordered by the
+    // queue mutex and the condvar, never by these counters.
     pub fn submit(
         &self,
         job: InterpolateJob,
@@ -164,6 +169,9 @@ impl Drop for Scheduler {
     }
 }
 
+// ORDERING: Relaxed stat bumps (batches/completed/failed/voxels) —
+// display-only monotonic counters; job results travel through the mpsc
+// reply channel, which provides the ordering that matters.
 fn worker_loop(
     shared: Arc<Shared>,
     service: InterpolationService,

@@ -77,6 +77,7 @@ pub const ERROR_CODES: &[&str] = &[
     "shutting_down",
     "exec_failed",
     "cancelled",
+    "internal",
 ];
 
 /// Hard cap on one request line (JSON + base64 payload frame). Upload
@@ -555,6 +556,9 @@ fn handle_trace(req: &Json) -> String {
 /// connection gauges — in the Prometheus text exposition format. The text
 /// ships inside a one-line JSON envelope (`"body"`); `ffdreg client
 /// metrics` prints the body raw for a scraper to consume.
+// ORDERING: Relaxed throughout — every load/store here mirrors independent
+// monotonic counters into display series; a scrape tolerates cross-counter
+// skew and no control flow depends on inter-field ordering.
 fn handle_metrics(ctx: &Ctx) -> String {
     let m = &ctx.metrics;
     // Mirror the live sources into registered series at render time: the
@@ -580,6 +584,8 @@ fn handle_metrics(ctx: &Ctx) -> String {
     m.counter("ffdreg_scheduler_failed_total")
         .store(sched.failed.load(Ordering::Relaxed), Ordering::Relaxed);
     m.counter("ffdreg_voxels_total").store(sched.voxels.load(Ordering::Relaxed), Ordering::Relaxed);
+    m.counter("ffdreg_trace_dropped_events_total")
+        .store(trace::dropped(), Ordering::Relaxed);
     m.gauge("ffdreg_store_bytes").store(s.bytes_used() as i64, Ordering::Relaxed);
     m.gauge("ffdreg_store_volumes").store(s.len() as i64, Ordering::Relaxed);
     m.gauge("ffdreg_scheduler_queue_depth")

@@ -147,6 +147,9 @@ impl VolumeStore {
     /// onto already-stored content. Evicts least-recently-used entries
     /// until the budget holds; a volume bigger than the whole budget is
     /// refused.
+    // ORDERING: Relaxed stat bumps (dedup_hits/evictions/insertions) —
+    // monotonic traffic counters; all map/bytes state is guarded by the
+    // `inner` mutex, which carries the real ordering.
     pub fn put(&self, vol: Volume) -> Result<(String, bool), PutError> {
         let bytes = Self::vol_bytes(&vol);
         let _span = trace::span("store", "store.put").arg_num("bytes", bytes as f64);
@@ -184,6 +187,8 @@ impl VolumeStore {
 
     /// Look up a handle, refreshing its LRU recency. `None` counts a miss
     /// (never stored, or evicted since).
+    // ORDERING: Relaxed hit/miss bumps — monotonic traffic counters; the
+    // entry itself is read under the `inner` mutex.
     pub fn get(&self, handle: &str) -> Option<Arc<Volume>> {
         let _span = trace::span("store", "store.get");
         let mut inner = self.inner.lock().unwrap();
@@ -223,6 +228,8 @@ impl VolumeStore {
     }
 
     /// Occupancy + traffic counters, as the `stats` op reports them.
+    // ORDERING: Relaxed loads — independent monotonic counters rendered
+    // for display; cross-counter skew within one report is acceptable.
     pub fn stats_json(&self) -> Json {
         let inner = self.inner.lock().unwrap();
         Json::obj(vec![

@@ -5,6 +5,10 @@
 //! Derivatives are analytic through the B-spline basis derivative
 //! (`coeffs::basis_deriv_f64`), as NiftyReg's `reg_jacobian` computes them.
 
+// lint:orphan(ok: ROADMAP item — folding diagnostics land in the register
+// pipeline once per-level QC reporting exists; the module is kept compiled
+// and tested until then.)
+
 use crate::bspline::coeffs::{basis_deriv_f64, basis_f64};
 use crate::bspline::ControlGrid;
 use crate::volume::{Dims, Volume};

@@ -163,6 +163,7 @@ impl LevelWorkspace {
 
     /// Fused objective evaluation for `grid`: SSD via one
     /// interpolate+warp+reduce pass, plus λ·bending when λ ≠ 0.
+    // lint:hot-loop — per-iteration cost probe; all buffers come from the workspace.
     pub fn cost(
         &mut self,
         reference: &Volume,
@@ -181,6 +182,7 @@ impl LevelWorkspace {
     /// [`Self::cost`] for the in-place trial grid from [`Self::make_trial`] /
     /// [`Self::make_trial_along`] — the line-search probe: one fused pass,
     /// no warped volume, no allocation.
+    // lint:hot-loop — line-search probe, runs several times per iteration.
     pub fn trial_cost(
         &mut self,
         reference: &Volume,
@@ -208,6 +210,7 @@ impl LevelWorkspace {
     /// fused pass was the last field writer). Pass 1 then skips the dense
     /// interpolation — the stored values are bit-identical, so the result
     /// is unchanged; only one full BSI pass per iteration is saved.
+    // lint:hot-loop — one call per optimizer iteration; reuses workspace buffers only.
     #[allow(clippy::too_many_arguments)]
     pub fn objective_gradient(
         &mut self,
@@ -388,6 +391,7 @@ fn resize_field(f: &mut VectorField, dims: Dims) {
 /// per-voxel arithmetic the bit-identity contract lives in — both fused
 /// passes call it, so they cannot diverge from each other or (by
 /// construction) from the composed `warp`→`ssd` oracle.
+// lint:hot-loop — innermost per-voxel loop of every fused pass.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn warp_ssd_slice(
@@ -435,6 +439,7 @@ fn regularization_energy(grid: &ControlGrid, lambda: f32, timing: &mut FfdTiming
 /// One fused interpolate+warp+SSD pass: fills `field` (scratch) and the
 /// per-slice SSD partials, returns `Σ(R−W)²/N`. Bitwise equal to the
 /// composed `interpolate` → `warp` → `ssd` oracle at every thread count.
+// lint:hot-loop — the per-iteration fused pass; scratch comes pre-sized from the workspace.
 #[allow(clippy::too_many_arguments)]
 fn fused_ssd_pass(
     pool: &WorkerPool,

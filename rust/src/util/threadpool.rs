@@ -111,6 +111,8 @@ pub fn par_chunks_mut3<T: Send, F>(
 }
 
 /// Parallel for over `0..n`: calls `f(i)` once per index.
+// ORDERING: Relaxed fetch_add — the counter only hands out distinct
+// indices; completion ordering comes from the scoped-thread join.
 pub fn par_for<F>(n: usize, f: F)
 where
     F: Fn(usize) + Sync,

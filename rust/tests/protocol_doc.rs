@@ -73,6 +73,31 @@ fn every_error_literal_in_the_handlers_is_declared() {
 }
 
 #[test]
+fn trace_drop_counter_is_registered_documented_and_scraped() {
+    // Silent span loss must be observable: the trace ring-buffer drop
+    // counter has to be mirrored into the metrics registry (server.rs),
+    // documented (PROTOCOL.md), and actually present in a live scrape.
+    const SERIES: &str = "ffdreg_trace_dropped_events_total";
+    assert!(
+        SERVER_RS.contains(SERIES),
+        "server.rs no longer mirrors {SERIES} into the metrics registry"
+    );
+    assert!(
+        PROTOCOL_MD.contains(&format!("`{SERIES}`")),
+        "PROTOCOL.md no longer documents {SERIES}"
+    );
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let r = c.call(&Json::obj(vec![("op", Json::Str("metrics".into()))])).unwrap();
+    let body = r.get("body").as_str().expect("metrics body");
+    assert!(
+        body.contains(SERIES),
+        "live metrics scrape lacks {SERIES}:\n{body}"
+    );
+    server.stop();
+}
+
+#[test]
 fn dispatch_arms_and_declared_ops_agree_exactly() {
     // The `handle_line` dispatch arms are `Some("<op>") =>`. Scrape that
     // function's region: the literal set must equal OPS in both

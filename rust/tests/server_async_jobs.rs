@@ -262,6 +262,44 @@ fn registration_queue_applies_backpressure() {
 }
 
 #[test]
+fn panicking_job_is_contained_and_the_worker_survives() {
+    // One registration worker: if the panic killed its thread, the
+    // follow-up job would sit queued forever instead of completing.
+    let (server, _sched) = start_stack_with(ServerConfig {
+        reg_workers: 1,
+        ..Default::default()
+    });
+    let mut c = Client::connect(&server.addr).unwrap();
+    let dims = Dims::new(16, 16, 16);
+    let (href, _) = upload_volume(&mut c, &blob(dims, 8.0, 8.0, 8.0, 22.0));
+    let (hflo, _) = upload_volume(&mut c, &blob(dims, 9.0, 8.0, 8.0, 22.0));
+
+    // `__ffdreg_panic__` is the dev-build panic lever in the job worker
+    // (jobs.rs::test_panic_lever): it unwinds inside the job execution,
+    // exactly where a real registration panic would.
+    let mut req = register_req(&href, "__ffdreg_panic__", 1);
+    if let Json::Obj(map) = &mut req {
+        map.insert("async".into(), Json::Bool(true));
+    }
+    let id = call_ok(&mut c, &req).get("job").as_usize().unwrap();
+    let done = wait_job(&mut c, id, 30);
+    assert_eq!(done.get("state").as_str(), Some("failed"), "{done:?}");
+    assert_eq!(done.get("code").as_str(), Some("internal"), "{done:?}");
+    let msg = done.get("error").as_str().unwrap_or_default();
+    assert!(msg.contains("panicked"), "panic message not captured: {done:?}");
+
+    // The lone worker must still be alive to claim and finish real work.
+    let mut ok = register_req(&href, &hflo, 1);
+    if let Json::Obj(map) = &mut ok {
+        map.insert("async".into(), Json::Bool(true));
+    }
+    let id2 = call_ok(&mut c, &ok).get("job").as_usize().unwrap();
+    let done2 = wait_job(&mut c, id2, 120);
+    assert_eq!(done2.get("state").as_str(), Some("done"), "{done2:?}");
+    server.stop();
+}
+
+#[test]
 fn job_polling_failures_are_structured() {
     let (server, _sched) = start_stack();
     let mut c = Client::connect(&server.addr).unwrap();

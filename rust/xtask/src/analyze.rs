@@ -1,0 +1,988 @@
+//! `cargo xtask analyze` — concurrency & panic-safety static analysis.
+//!
+//! Four rules over the production crate (`rust/src`, `#[cfg(test)]`
+//! regions exempt), built on the fn-span parser (`parse.rs`):
+//!
+//! 1. **lock-order** — per-function `.lock()`/`.read()`/`.write()`
+//!    acquisition sequences on named Mutex/RwLock receivers, propagated
+//!    one level through the call graph, merged into a global lock graph.
+//!    Holds are scope-bounded (an `a -> b` edge needs `b` acquired before
+//!    `a`'s enclosing block closes) and propagated callee locks are point
+//!    events (released inside the callee: targets, never sources).
+//!    A cycle (potential AB/BA deadlock) always fails; an edge absent
+//!    from the committed `rust/xtask/lock_order.txt` baseline fails until
+//!    blessed with `--bless-lock-order`.
+//! 2. **atomic-ordering** — every `Ordering::Relaxed` access on an
+//!    atomic field that a cross-thread consumer observes (heuristic: the
+//!    field is touched from ≥ 2 functions in ≥ 2 different files) needs
+//!    an `// ORDERING:` justification — same association rules as
+//!    `// SAFETY:` (same line, or the contiguous comment run immediately
+//!    above; a justification above the enclosing `fn` covers the whole
+//!    fn, the analog of a `# Safety` doc section).
+//! 3. **panic-census** — `unwrap()` / `expect(` / `panic!` /
+//!    `unreachable!` / slice-index sites in the serving core
+//!    (`coordinator/`, `util/threadpool.rs`, `bspline/exec.rs`), diffed
+//!    against the committed `rust/xtask/panic_census.txt`: growth fails
+//!    (re-bless with `--bless-panic-census`, land with a `[panic-bless]`
+//!    commit token), shrink is informational — the same asymmetric gate
+//!    as the unsafe census.
+//! 4. **hot-loop-alloc** — inside functions marked `// lint:hot-loop`,
+//!    heap-allocating calls (`Vec::new`, `vec!`, `.to_vec()`,
+//!    `.collect()`, `.clone()`) are forbidden, so the allocation-free
+//!    iteration contract of the fused registration passes is enforced
+//!    statically; a provably-cold site can be blessed with
+//!    `lint:allow(hot-loop-alloc)`.
+//!
+//! Plus one informational check: **orphan-module** — a `rust/src` module
+//! referenced by nothing but its own `mod` declaration is reported as a
+//! note (never a failure); annotate intentional staging modules with a
+//! `lint:orphan(ok: …)` comment.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+
+use crate::lexer::Scan;
+use crate::parse::{self, Parsed};
+use crate::rules::{comment_above_contains, Violation};
+
+/// One scanned + parsed source file.
+pub struct FileScan {
+    /// Repo-relative, forward-slash path (`rust/src/util/trace.rs`).
+    pub rel: String,
+    /// Lexer scan.
+    pub scan: Scan,
+    /// Fn spans / test regions.
+    pub parsed: Parsed,
+    /// Total source lines (comments included — the token stream alone
+    /// can't see trailing comment-only lines).
+    pub nlines: usize,
+}
+
+impl FileScan {
+    /// Scan + parse one file.
+    pub fn new(rel: &str, src: &str) -> FileScan {
+        let scan = crate::lexer::scan(src);
+        let parsed = parse::parse(&scan);
+        FileScan { rel: rel.to_string(), scan, parsed, nlines: src.lines().count() }
+    }
+
+    /// Module name used to qualify lock names: the file stem, or the
+    /// parent directory for `mod.rs`.
+    fn module(&self) -> String {
+        let stem = self.rel.rsplit('/').next().unwrap_or(&self.rel);
+        let stem = stem.strip_suffix(".rs").unwrap_or(stem);
+        if stem == "mod" {
+            let mut it = self.rel.rsplit('/');
+            it.next();
+            it.next().unwrap_or("mod").to_string()
+        } else {
+            stem.to_string()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 1: lock-order
+
+/// Where a lock-order edge was first observed.
+#[derive(Clone)]
+pub struct EdgeProv {
+    /// Repo-relative file.
+    pub file: String,
+    /// Line of the function that exhibits the order.
+    pub line: usize,
+    /// Function name.
+    pub func: String,
+}
+
+/// The global lock-acquisition graph.
+pub struct LockGraph {
+    /// Qualified lock name (`module.receiver`) → acquisition-site count.
+    pub sites: BTreeMap<String, usize>,
+    /// Observed acquisition order: `(a, b)` = `a` held (or taken) before
+    /// `b` somewhere, with the first function exhibiting it.
+    pub edges: BTreeMap<(String, String), EdgeProv>,
+}
+
+enum Event {
+    Lock(String),
+    Call(String),
+}
+
+/// For every token, the index of the `}` closing the innermost `{ … }`
+/// block containing it (the last token when outside every block) — the
+/// latest point a guard bound at that token can still be alive, since a
+/// RAII guard cannot outlive its enclosing block.
+fn hold_ends(scan: &Scan) -> Vec<usize> {
+    let toks = &scan.toks;
+    let n = toks.len();
+    let last = n.saturating_sub(1);
+    let mut close_of: Vec<usize> = vec![last; n];
+    let mut stack: Vec<usize> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        match t.text.as_str() {
+            "{" => stack.push(i),
+            "}" => {
+                if let Some(open) = stack.pop() {
+                    close_of[open] = i;
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut res = vec![last; n];
+    let mut stack: Vec<usize> = Vec::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.text == "{" {
+            stack.push(i);
+        }
+        if let Some(&top) = stack.last() {
+            res[i] = close_of[top];
+        }
+        if t.text == "}" {
+            stack.pop();
+        }
+    }
+    res
+}
+
+/// Build the lock graph: per-fn acquisition sequences (locks qualified
+/// `module.receiver`), one level of inter-procedural propagation (a call
+/// to a uniquely-named fn splices that fn's *direct* lock sequence in at
+/// the call position), then `a -> b` edges wherever `b` is acquired while
+/// `a` can still be held. Three precision rules keep the syntactic model
+/// honest on real code:
+///
+/// * **scope-bounded holds** — a guard dies no later than the close of
+///   its enclosing `{ }` block, so a lock taken in a finished inner scope
+///   does not order locks taken after it (worker loops re-acquiring a
+///   queue mutex would otherwise self-cycle);
+/// * **point propagation** — a callee's locks are acquired *and released*
+///   inside the callee, so propagated locks are edge targets at the call
+///   position but never sources for later caller code;
+/// * **no self-propagation** — a call that happens to share the current
+///   fn's name (`deque.clear()` inside `fn clear`) is a name-collision
+///   recursion artifact, not evidence of nesting.
+pub fn build_lock_graph(files: &[FileScan]) -> LockGraph {
+    struct FnSeq {
+        file: String,
+        line: usize,
+        name: String,
+        /// `(token, hold_end, event)`, token-ordered.
+        events: Vec<(usize, usize, Event)>,
+    }
+    let mut seqs: Vec<FnSeq> = Vec::new();
+    let mut sites: BTreeMap<String, usize> = BTreeMap::new();
+
+    for fs in files {
+        let module = fs.module();
+        let locks = parse::lock_sites(&fs.scan);
+        let calls = parse::call_sites(&fs.scan);
+        let holds = hold_ends(&fs.scan);
+        for (fi, f) in fs.parsed.fns.iter().enumerate() {
+            if f.in_test || f.body.is_none() {
+                continue;
+            }
+            let mut events: Vec<(usize, usize, Event)> = Vec::new();
+            for l in &locks {
+                if fs.parsed.enclosing_fn(l.tok) == Some(fi) {
+                    let name = format!("{module}.{}", l.recv);
+                    *sites.entry(name.clone()).or_insert(0) += 1;
+                    events.push((l.tok, holds[l.tok], Event::Lock(name)));
+                }
+            }
+            for c in &calls {
+                if fs.parsed.enclosing_fn(c.tok) == Some(fi) {
+                    events.push((c.tok, holds[c.tok], Event::Call(c.callee.clone())));
+                }
+            }
+            events.sort_by_key(|(tok, _, _)| *tok);
+            seqs.push(FnSeq {
+                file: fs.rel.clone(),
+                line: f.line,
+                name: f.name.clone(),
+                events,
+            });
+        }
+    }
+
+    // Direct lock sequence per *uniquely resolvable* fn name: if several
+    // same-named fns acquire locks, propagation through that name would
+    // fabricate edges between unrelated impls — skip it instead.
+    let mut by_name: BTreeMap<&str, Vec<Vec<String>>> = BTreeMap::new();
+    for s in &seqs {
+        let direct: Vec<String> = s
+            .events
+            .iter()
+            .filter_map(|(_, _, e)| match e {
+                Event::Lock(n) => Some(n.clone()),
+                Event::Call(_) => None,
+            })
+            .collect();
+        by_name.entry(&s.name).or_default().push(direct);
+    }
+    let callee_locks: BTreeMap<&str, &Vec<String>> = by_name
+        .iter()
+        .filter_map(|(name, defs)| {
+            let locking: Vec<&Vec<String>> =
+                defs.iter().filter(|d| !d.is_empty()).collect();
+            match locking.as_slice() {
+                [one] => Some((*name, *one)),
+                _ => None,
+            }
+        })
+        .collect();
+
+    let mut edges: BTreeMap<(String, String), EdgeProv> = BTreeMap::new();
+    for s in &seqs {
+        // `(tok, hold_end, lock)` — propagated locks use their call token
+        // as hold_end (released inside the callee: targets, not sources).
+        let mut effective: Vec<(usize, usize, String)> = Vec::new();
+        for (tok, hold, e) in &s.events {
+            match e {
+                Event::Lock(n) => effective.push((*tok, *hold, n.clone())),
+                Event::Call(c) => {
+                    if *c == s.name {
+                        continue; // self-named call: recursion artifact
+                    }
+                    if let Some(sub) = callee_locks.get(c.as_str()) {
+                        for n in sub.iter() {
+                            effective.push((*tok, *tok, n.clone()));
+                        }
+                    }
+                }
+            }
+        }
+        for i in 0..effective.len() {
+            for j in (i + 1)..effective.len() {
+                if effective[i].2 == effective[j].2 {
+                    continue;
+                }
+                if effective[j].0 > effective[i].1 {
+                    continue; // i's guard is dead by the time j is taken
+                }
+                edges
+                    .entry((effective[i].2.clone(), effective[j].2.clone()))
+                    .or_insert_with(|| EdgeProv {
+                        file: s.file.clone(),
+                        line: s.line,
+                        func: s.name.clone(),
+                    });
+            }
+        }
+    }
+    LockGraph { sites, edges }
+}
+
+/// Find a cycle in the lock graph, returned as the lock-name path
+/// `a → b → … → a`, or `None` when the graph is acyclic.
+pub fn find_cycle(g: &LockGraph) -> Option<Vec<String>> {
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (a, b) in g.edges.keys() {
+        adj.entry(a).or_default().push(b);
+    }
+    // 0 = white, 1 = on stack, 2 = done.
+    let mut color: BTreeMap<&str, u8> = BTreeMap::new();
+    let mut stack: Vec<&str> = Vec::new();
+
+    fn dfs<'a>(
+        node: &'a str,
+        adj: &BTreeMap<&'a str, Vec<&'a str>>,
+        color: &mut BTreeMap<&'a str, u8>,
+        stack: &mut Vec<&'a str>,
+    ) -> Option<Vec<String>> {
+        color.insert(node, 1);
+        stack.push(node);
+        for &next in adj.get(node).map(Vec::as_slice).unwrap_or(&[]) {
+            match color.get(next).copied().unwrap_or(0) {
+                0 => {
+                    if let Some(c) = dfs(next, adj, color, stack) {
+                        return Some(c);
+                    }
+                }
+                1 => {
+                    let start = stack.iter().position(|&n| n == next).unwrap_or(0);
+                    let mut cycle: Vec<String> =
+                        stack[start..].iter().map(|s| s.to_string()).collect();
+                    cycle.push(next.to_string());
+                    return Some(cycle);
+                }
+                _ => {}
+            }
+        }
+        stack.pop();
+        color.insert(node, 2);
+        None
+    }
+
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    for n in nodes {
+        if color.get(n).copied().unwrap_or(0) == 0 {
+            if let Some(c) = dfs(n, &adj, &mut color, &mut stack) {
+                return Some(c);
+            }
+        }
+    }
+    None
+}
+
+/// Render the lock graph as the committed baseline text.
+pub fn render_lock_baseline(g: &LockGraph) -> String {
+    let mut out = String::from(
+        "# ffdreg lock-order baseline — the blessed lock acquisition order\n\
+         # (gated by `cargo xtask analyze`; regenerate with\n\
+         # `cargo xtask analyze --bless-lock-order`).\n\
+         # `lock <name> <sites>` lines are informational; a NEW `edge` not\n\
+         # listed here fails the analysis, and a cycle always fails.\n",
+    );
+    for (name, n) in &g.sites {
+        let _ = writeln!(out, "lock {name} {n}");
+    }
+    for ((a, b), p) in &g.edges {
+        let _ = writeln!(out, "edge {a} -> {b}  # fn {} ({}:{})", p.func, p.file, p.line);
+    }
+    out
+}
+
+/// Parse the blessed edge set out of a baseline file.
+pub fn parse_lock_baseline(text: &str) -> BTreeSet<(String, String)> {
+    let mut edges = BTreeSet::new();
+    for line in text.lines() {
+        let line = line.trim();
+        let Some(rest) = line.strip_prefix("edge ") else { continue };
+        let rest = rest.split('#').next().unwrap_or(rest);
+        let mut parts = rest.splitn(2, "->");
+        if let (Some(a), Some(b)) = (parts.next(), parts.next()) {
+            edges.insert((a.trim().to_string(), b.trim().to_string()));
+        }
+    }
+    edges
+}
+
+/// Gate the current graph against the blessed baseline: cycles always
+/// fail; new edges fail until blessed. Returns informational notes
+/// (edges in the baseline that no longer exist).
+pub fn check_lock_order(
+    g: &LockGraph,
+    baseline: &BTreeSet<(String, String)>,
+    out: &mut Vec<Violation>,
+) -> Vec<String> {
+    if let Some(cycle) = find_cycle(g) {
+        let first = (cycle[0].clone(), cycle[1].clone());
+        let p = &g.edges[&first];
+        out.push(Violation::new(
+            &p.file,
+            p.line,
+            "lock-order",
+            format!(
+                "lock-order cycle (potential deadlock): {} — every path must \
+                 acquire these locks in one global order",
+                cycle.join(" -> ")
+            ),
+        ));
+    }
+    for ((a, b), p) in &g.edges {
+        if !baseline.contains(&(a.clone(), b.clone())) {
+            out.push(Violation::new(
+                &p.file,
+                p.line,
+                "lock-order",
+                format!(
+                    "new lock-order edge `{a} -> {b}` (fn `{}`) not in the \
+                     blessed baseline — review the acquisition order, then \
+                     `cargo xtask analyze --bless-lock-order`",
+                    p.func
+                ),
+            ));
+        }
+    }
+    baseline
+        .iter()
+        .filter(|e| !g.edges.contains_key(*e))
+        .map(|(a, b)| format!("lock-order: blessed edge `{a} -> {b}` no longer observed (re-bless when convenient)"))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Rule 2: atomic-ordering
+
+/// `// ORDERING:` audit for `Ordering::Relaxed` accesses on atomics with
+/// a cross-thread consumer (field touched from ≥ 2 fns in ≥ 2 files).
+pub fn check_atomic_ordering(files: &[FileScan], out: &mut Vec<Violation>) {
+    struct Site<'a> {
+        fs: &'a FileScan,
+        fn_idx: Option<usize>,
+        line: usize,
+        method: String,
+    }
+    // recv field name -> sites, and the set of (file, fn) touching it.
+    let mut by_field: BTreeMap<String, Vec<Site>> = BTreeMap::new();
+    for fs in files {
+        for s in parse::relaxed_sites(&fs.scan) {
+            if parse::in_regions(&fs.parsed.test_regions, s.line) {
+                continue;
+            }
+            by_field.entry(s.recv.clone()).or_default().push(Site {
+                fs,
+                fn_idx: fs.parsed.enclosing_fn(s.tok),
+                line: s.line,
+                method: s.method,
+            });
+        }
+    }
+    for (field, sites) in &by_field {
+        let mut touchers: BTreeSet<(&str, &str)> = BTreeSet::new();
+        for s in sites {
+            let func = s.fn_idx.map(|i| s.fs.parsed.fns[i].name.as_str()).unwrap_or("<static>");
+            touchers.insert((s.fs.rel.as_str(), func));
+        }
+        let distinct_files: BTreeSet<&str> = touchers.iter().map(|(f, _)| *f).collect();
+        if touchers.len() < 2 || distinct_files.len() < 2 {
+            continue; // single-function / single-module atomic: Relaxed is local
+        }
+        let other_file = |me: &str| {
+            distinct_files.iter().find(|f| **f != me).copied().unwrap_or("elsewhere")
+        };
+        for s in sites {
+            if comment_above_contains(&s.fs.scan, s.line, &["ORDERING:"]) {
+                continue;
+            }
+            // A justification above the enclosing fn covers the whole fn
+            // (the `# Safety`-doc analog for per-fn ordering contracts).
+            if let Some(fi) = s.fn_idx {
+                let decl = s.fs.parsed.fns[fi].line;
+                if comment_above_contains(&s.fs.scan, decl, &["ORDERING:"]) {
+                    continue;
+                }
+            }
+            out.push(Violation::new(
+                &s.fs.rel,
+                s.line,
+                "atomic-ordering",
+                format!(
+                    "`{}.{}(… Relaxed …)` on a cross-module atomic (also touched \
+                     in {}) without an `// ORDERING:` justification on the site \
+                     or its fn",
+                    field,
+                    s.method,
+                    other_file(&s.fs.rel),
+                ),
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule 3: panic-census
+
+/// Files inside the panic-census scope: the serving core whose threads
+/// must survive (a panicked reg worker or pool thread strands jobs).
+pub fn panic_scope(rel: &str) -> bool {
+    rel.starts_with("rust/src/coordinator/")
+        || rel == "rust/src/util/threadpool.rs"
+        || rel == "rust/src/bspline/exec.rs"
+}
+
+/// Count panic-capable sites (`unwrap()` / `expect(` / `panic!` /
+/// `unreachable!` / slice-index) outside `#[cfg(test)]` regions.
+pub fn count_panic_sites(fs: &FileScan) -> usize {
+    let toks = &fs.scan.toks;
+    let mut n = 0usize;
+    for i in 0..toks.len() {
+        let line = toks[i].line;
+        if parse::in_regions(&fs.parsed.test_regions, line) {
+            continue;
+        }
+        let t = toks[i].text.as_str();
+        let next = toks.get(i + 1).map(|t| t.text.as_str());
+        let hit = match t {
+            "." => {
+                matches!(toks.get(i + 1).map(|t| t.text.as_str()), Some("unwrap") | Some("expect"))
+                    && toks.get(i + 2).map(|t| t.text.as_str()) == Some("(")
+            }
+            "panic" | "unreachable" => next == Some("!"),
+            // Index expression: `[` directly after a value (ident / call /
+            // index result). Types (`: [f32; 3]`), patterns (`let [a, b]`),
+            // attributes (`#[…]`) and macros (`vec![…]`) are all preceded
+            // by something else.
+            "[" if i > 0 => {
+                let prev = toks[i - 1].text.as_str();
+                prev == ")" || prev == "]" || (parse_ident(prev) && !is_keyword(prev))
+            }
+            _ => false,
+        };
+        if hit {
+            n += 1;
+        }
+    }
+    n
+}
+
+fn parse_ident(t: &str) -> bool {
+    let mut chars = t.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_alphabetic() || c == '_')
+        && chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+fn is_keyword(t: &str) -> bool {
+    matches!(
+        t,
+        "let" | "mut" | "ref" | "in" | "return" | "if" | "else" | "match" | "for" | "while"
+            | "loop" | "box" | "move" | "as" | "where" | "impl" | "dyn"
+    )
+}
+
+/// The panic census over all in-scope files (`path -> site count`).
+pub fn panic_census(files: &[FileScan]) -> BTreeMap<String, usize> {
+    let mut census = BTreeMap::new();
+    for fs in files {
+        if !panic_scope(&fs.rel) {
+            continue;
+        }
+        let n = count_panic_sites(fs);
+        if n > 0 {
+            census.insert(fs.rel.clone(), n);
+        }
+    }
+    census
+}
+
+/// Baseline header for `rust/xtask/panic_census.txt`.
+pub const PANIC_BASELINE_HEADER: &str =
+    "# panic-site census of the serving core (coordinator/, util/threadpool.rs,\n\
+     # bspline/exec.rs) — unwrap/expect/panic!/unreachable!/slice-index sites,\n\
+     # gated by `cargo xtask analyze`. Regenerate with\n\
+     # `cargo xtask analyze --bless-panic-census`; landing growth requires a\n\
+     # `[panic-bless]` token in the commit message.\n";
+
+// ---------------------------------------------------------------------------
+// Rule 4: hot-loop-alloc
+
+/// Forbid heap allocation inside `// lint:hot-loop`-marked functions.
+pub fn check_hot_loop_alloc(files: &[FileScan], out: &mut Vec<Violation>) {
+    for fs in files {
+        for f in &fs.parsed.fns {
+            let Some((open, close)) = f.body else { continue };
+            if f.in_test || !comment_above_contains(&fs.scan, f.line, &["lint:hot-loop"]) {
+                continue;
+            }
+            let toks = &fs.scan.toks;
+            for i in open..=close {
+                let what = match toks[i].text.as_str() {
+                    "Vec"
+                        if toks.get(i + 1).map(|t| t.text.as_str()) == Some(":")
+                            && toks.get(i + 2).map(|t| t.text.as_str()) == Some(":")
+                            && toks.get(i + 3).map(|t| t.text.as_str()) == Some("new") =>
+                    {
+                        Some("Vec::new")
+                    }
+                    "vec" if toks.get(i + 1).map(|t| t.text.as_str()) == Some("!") => {
+                        Some("vec![…]")
+                    }
+                    "." => match toks.get(i + 1).map(|t| t.text.as_str()) {
+                        Some("to_vec") => Some(".to_vec()"),
+                        Some("collect") => Some(".collect()"),
+                        Some("clone") => Some(".clone()"),
+                        _ => None,
+                    },
+                    _ => None,
+                };
+                let Some(what) = what else { continue };
+                let line = toks[i].line;
+                if crate::rules::blessed(&fs.scan, line, "lint:allow(hot-loop-alloc)") {
+                    continue;
+                }
+                out.push(Violation::new(
+                    &fs.rel,
+                    line,
+                    "hot-loop-alloc",
+                    format!(
+                        "`{what}` inside `// lint:hot-loop` fn `{}` — the fused \
+                         passes promise allocation-free iteration; hoist the \
+                         allocation to setup, or bless a provably-cold site \
+                         with `lint:allow(hot-loop-alloc)`",
+                        f.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Informational: orphan-module
+
+/// Modules under `rust/src` that are *declared* (`mod name;` in some
+/// other file) but whose name is referenced nowhere else — compiled in,
+/// reachable by nothing. Returns `(rel, blessed)` pairs; blessed means a
+/// `lint:orphan(ok: …)` comment acknowledges the staging state.
+pub fn orphan_modules(files: &[FileScan]) -> Vec<(String, bool)> {
+    let mut out = Vec::new();
+    for fs in files {
+        if !fs.rel.starts_with("rust/src/") {
+            continue;
+        }
+        let leaf = fs.rel.rsplit('/').next().unwrap_or("");
+        if matches!(leaf, "lib.rs" | "main.rs" | "mod.rs" | "build.rs") {
+            continue;
+        }
+        let stem = leaf.strip_suffix(".rs").unwrap_or(leaf);
+        let mut declared = false;
+        let mut referenced = false;
+        for other in files {
+            if other.rel == fs.rel {
+                continue;
+            }
+            for (i, t) in other.scan.toks.iter().enumerate() {
+                if t.text != stem {
+                    continue;
+                }
+                if i > 0 && other.scan.toks[i - 1].text == "mod" {
+                    declared = true;
+                } else {
+                    referenced = true;
+                }
+            }
+        }
+        if !declared || referenced {
+            continue;
+        }
+        let blessed = (1..=fs.nlines).any(|l| {
+            fs.scan.comment_on(l).map_or(false, |c| c.contains("lint:orphan(ok"))
+        });
+        out.push((fs.rel.clone(), blessed));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Findings artifact
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Write the machine-readable findings artifact (hand-rolled JSON — the
+/// tool is zero-dependency) for CI upload.
+pub fn write_findings(
+    path: &std::path::Path,
+    violations: &[Violation],
+    graph: &LockGraph,
+    census: &BTreeMap<String, usize>,
+    orphans: &[(String, bool)],
+) -> std::io::Result<()> {
+    let mut out = String::from("{\n  \"violations\": [\n");
+    let vs: Vec<String> = violations
+        .iter()
+        .map(|v| {
+            format!(
+                "    {{\"path\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"msg\": \"{}\"}}",
+                json_escape(&v.path),
+                v.line,
+                v.rule,
+                json_escape(&v.msg)
+            )
+        })
+        .collect();
+    out.push_str(&vs.join(",\n"));
+    let _ = write!(
+        out,
+        "\n  ],\n  \"lock_graph\": {{\"locks\": {}, \"acquisition_sites\": {}, \"edges\": {}}},\n",
+        graph.sites.len(),
+        graph.sites.values().sum::<usize>(),
+        graph.edges.len()
+    );
+    let _ = write!(
+        out,
+        "  \"panic_census\": {{\"total_sites\": {}, \"files\": {}}},\n",
+        census.values().sum::<usize>(),
+        census.len()
+    );
+    let os: Vec<String> = orphans
+        .iter()
+        .map(|(rel, blessed)| {
+            format!("    {{\"path\": \"{}\", \"blessed\": {}}}", json_escape(rel), blessed)
+        })
+        .collect();
+    out.push_str("  \"orphan_modules\": [\n");
+    out.push_str(&os.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    std::fs::write(path, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fs(rel: &str, src: &str) -> FileScan {
+        FileScan::new(rel, src)
+    }
+
+    fn rules_of(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    // ---- lock-order ----
+
+    #[test]
+    fn ab_ba_two_lock_cycle_is_detected() {
+        // The classic seeded deadlock: one fn takes a then b, another
+        // takes b then a.
+        let src = "fn forward(&self) {\n    let _a = self.a.lock().unwrap();\n    let _b = self.b.lock().unwrap();\n}\nfn backward(&self) {\n    let _b = self.b.lock().unwrap();\n    let _a = self.a.lock().unwrap();\n}\n";
+        let files = vec![fs("rust/src/coordinator/pair.rs", src)];
+        let g = build_lock_graph(&files);
+        assert_eq!(g.sites.len(), 2);
+        assert_eq!(g.sites["pair.a"], 2);
+        let cycle = find_cycle(&g).expect("AB/BA must cycle");
+        assert!(cycle.len() >= 3, "{cycle:?}");
+        let mut v = Vec::new();
+        let notes = check_lock_order(&g, &parse_lock_baseline(&render_lock_baseline(&g)), &mut v);
+        assert!(rules_of(&v).contains(&"lock-order"), "cycle fails even when blessed");
+        assert!(notes.is_empty());
+    }
+
+    #[test]
+    fn interprocedural_cycle_split_across_two_functions_is_caught() {
+        // No single fn holds both orders: `enqueue` takes a then calls
+        // `notify` (which takes b); `drain` takes b then calls `reap`
+        // (which takes a). Only the one-level propagation sees the cycle.
+        let src = "fn enqueue(&self) {\n    let _a = self.a.lock().unwrap();\n    self.notify();\n}\nfn notify(&self) {\n    let _b = self.b.lock().unwrap();\n}\nfn drain(&self) {\n    let _b = self.b.lock().unwrap();\n    self.reap();\n}\nfn reap(&self) {\n    let _a = self.a.lock().unwrap();\n}\n";
+        let files = vec![fs("rust/src/coordinator/split.rs", src)];
+        let g = build_lock_graph(&files);
+        assert!(g.edges.contains_key(&("split.a".into(), "split.b".into())));
+        assert!(g.edges.contains_key(&("split.b".into(), "split.a".into())));
+        assert!(find_cycle(&g).is_some(), "propagated AB/BA must cycle");
+    }
+
+    #[test]
+    fn consistent_order_is_acyclic_and_new_edges_need_blessing() {
+        let src = "fn one(&self) {\n    let _a = self.a.lock().unwrap();\n    let _b = self.b.lock().unwrap();\n}\nfn two(&self) {\n    let _a = self.a.lock().unwrap();\n    let _b = self.b.lock().unwrap();\n}\n";
+        let files = vec![fs("rust/src/coordinator/ok.rs", src)];
+        let g = build_lock_graph(&files);
+        assert!(find_cycle(&g).is_none());
+        // Unblessed edge -> violation.
+        let mut v = Vec::new();
+        check_lock_order(&g, &BTreeSet::new(), &mut v);
+        assert_eq!(rules_of(&v), vec!["lock-order"]);
+        assert!(v[0].msg.contains("ok.a -> ok.b"), "{}", v[0].msg);
+        // Blessing via the rendered baseline silences it.
+        let blessed = parse_lock_baseline(&render_lock_baseline(&g));
+        let mut v2 = Vec::new();
+        let notes = check_lock_order(&g, &blessed, &mut v2);
+        assert!(v2.is_empty() && notes.is_empty());
+    }
+
+    #[test]
+    fn stale_blessed_edges_are_informational() {
+        let g = LockGraph { sites: BTreeMap::new(), edges: BTreeMap::new() };
+        let mut baseline = BTreeSet::new();
+        baseline.insert(("gone.a".to_string(), "gone.b".to_string()));
+        let mut v = Vec::new();
+        let notes = check_lock_order(&g, &baseline, &mut v);
+        assert!(v.is_empty());
+        assert_eq!(notes.len(), 1);
+        assert!(notes[0].contains("no longer observed"));
+    }
+
+    #[test]
+    fn test_mod_locks_do_not_enter_the_graph() {
+        let src = "fn prod(&self) { let _g = self.real.lock().unwrap(); }\n#[cfg(test)]\nmod tests {\n    fn t(&self) {\n        let _x = self.fake_a.lock().unwrap();\n        let _y = self.fake_b.lock().unwrap();\n    }\n}\n";
+        let g = build_lock_graph(&[fs("rust/src/util/x.rs", src)]);
+        assert_eq!(g.sites.len(), 1);
+        assert!(g.edges.is_empty());
+    }
+
+    #[test]
+    fn scoped_guard_release_breaks_the_order() {
+        // The queue guard dies at its block's `}` before the state lock is
+        // taken — no hold-while-acquiring, so no edge (the worker-loop
+        // pattern that would otherwise self-cycle against `Drop`).
+        let src = "fn run(&self) {\n    {\n        let _q = self.queue.lock().unwrap();\n    }\n    let _s = self.state.lock().unwrap();\n}\n";
+        let g = build_lock_graph(&[fs("rust/src/bspline/exec.rs", src)]);
+        assert_eq!(g.sites.len(), 2);
+        assert!(g.edges.is_empty(), "{:?}", g.edges.keys().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn propagated_callee_locks_are_targets_not_sources() {
+        // `helper` releases its own lock before returning, so a call to it
+        // orders held-caller-locks *before* sink (target) but never sink
+        // before later caller locks (source).
+        let src = "fn helper(&self) {\n    let _s = self.sink.lock().unwrap();\n}\nfn work(&self) {\n    self.helper();\n    let _q = self.queue.lock().unwrap();\n}\nfn held(&self) {\n    let _q = self.queue.lock().unwrap();\n    self.helper();\n}\n";
+        let g = build_lock_graph(&[fs("rust/src/coordinator/m.rs", src)]);
+        assert!(g.edges.contains_key(&("m.queue".into(), "m.sink".into())));
+        assert!(!g.edges.contains_key(&("m.sink".into(), "m.queue".into())));
+        assert!(find_cycle(&g).is_none());
+    }
+
+    #[test]
+    fn self_named_call_does_not_propagate() {
+        // `buf.clear()` inside `fn clear` shares the fn's own name — a
+        // name-collision recursion artifact that must not splice the fn's
+        // lock sequence into itself (would fabricate events -> registry).
+        let src = "fn clear(&self) {\n    let _g = self.registry.lock().unwrap();\n    for ring in self.rings.iter() {\n        ring.events.lock().unwrap().clear();\n    }\n}\n";
+        let g = build_lock_graph(&[fs("rust/src/util/trace.rs", src)]);
+        assert!(g.edges.contains_key(&("trace.registry".into(), "trace.events".into())));
+        assert!(!g.edges.contains_key(&("trace.events".into(), "trace.registry".into())));
+        assert!(find_cycle(&g).is_none());
+    }
+
+    // ---- atomic-ordering ----
+
+    const ATOMIC_PRODUCER: &str = "impl Store {\n    pub fn put(&self) {\n        self.hits.fetch_add(1, Ordering::Relaxed);\n    }\n}\n";
+
+    #[test]
+    fn cross_module_relaxed_without_justification_fires() {
+        let consumer = "fn mirror(s: &Store) {\n    let _n = s.hits.load(Ordering::Relaxed);\n}\n";
+        let files = vec![
+            fs("rust/src/coordinator/store.rs", ATOMIC_PRODUCER),
+            fs("rust/src/coordinator/server.rs", consumer),
+        ];
+        let mut v = Vec::new();
+        check_atomic_ordering(&files, &mut v);
+        assert_eq!(rules_of(&v), vec!["atomic-ordering", "atomic-ordering"]);
+        assert!(v[0].msg.contains("hits"), "{}", v[0].msg);
+    }
+
+    #[test]
+    fn ordering_comment_on_site_or_fn_justifies() {
+        let producer = "impl Store {\n    pub fn put(&self) {\n        // ORDERING: monotonic counter, no ordering with other data.\n        self.hits.fetch_add(1, Ordering::Relaxed);\n    }\n}\n";
+        let consumer = "// ORDERING: render-time mirror; counters are independent.\nfn mirror(s: &Store) {\n    let _n = s.hits.load(Ordering::Relaxed);\n}\n";
+        let files = vec![
+            fs("rust/src/coordinator/store.rs", producer),
+            fs("rust/src/coordinator/server.rs", consumer),
+        ];
+        let mut v = Vec::new();
+        check_atomic_ordering(&files, &mut v);
+        assert!(v.is_empty(), "{:?}", rules_of(&v));
+    }
+
+    #[test]
+    fn single_module_relaxed_needs_no_justification() {
+        let src = "fn bump(&self) { self.local.fetch_add(1, Ordering::Relaxed); }\nfn read(&self) -> u64 { self.local.load(Ordering::Relaxed) }\n";
+        let files = vec![fs("rust/src/ffd/workspace.rs", src)];
+        let mut v = Vec::new();
+        check_atomic_ordering(&files, &mut v);
+        assert!(v.is_empty());
+    }
+
+    // ---- panic-census ----
+
+    #[test]
+    fn panic_sites_are_counted_in_scope_only() {
+        let src = "fn f(v: &[u32], i: usize) -> u32 {\n    let x = v[i];\n    let y = v.get(i).unwrap();\n    let z = v.get(i).expect(\"bounds\");\n    if i > 99 { panic!(\"boom\"); }\n    if i > 999 { unreachable!(); }\n    x + y + z\n}\n#[cfg(test)]\nmod tests {\n    fn t(v: &[u32]) -> u32 { v[0] + v.get(0).unwrap() }\n}\n";
+        let in_scope = fs("rust/src/coordinator/jobs.rs", src);
+        assert_eq!(count_panic_sites(&in_scope), 5);
+        let census = panic_census(&[
+            fs("rust/src/coordinator/jobs.rs", src),
+            fs("rust/src/ffd/workspace.rs", src), // out of scope
+        ]);
+        assert_eq!(census.len(), 1);
+        assert_eq!(census["rust/src/coordinator/jobs.rs"], 5);
+    }
+
+    #[test]
+    fn types_patterns_and_macros_are_not_slice_indexing() {
+        let src = "fn f(d: [usize; 3]) -> Vec<usize> {\n    let [a, b, c] = d;\n    let v: Vec<[f32; 3]> = vec![[1.0, 2.0, 3.0]];\n    let _ = v;\n    vec![a, b, c]\n}\n";
+        assert_eq!(count_panic_sites(&fs("rust/src/coordinator/x.rs", src)), 0);
+    }
+
+    #[test]
+    fn panic_census_growth_fails_via_census_diff() {
+        // The gate reuses the census diff machinery; growth must fail.
+        let base = crate::census::parse_baseline("2 rust/src/coordinator/jobs.rs\n");
+        let mut fresh = BTreeMap::new();
+        fresh.insert("rust/src/coordinator/jobs.rs".to_string(), 3usize);
+        let d = crate::census::diff(&base, &fresh);
+        assert_eq!(d.grown.len(), 1);
+    }
+
+    // ---- hot-loop-alloc ----
+
+    #[test]
+    fn alloc_in_marked_hot_loop_fires() {
+        let src = "// lint:hot-loop\nfn fused_pass(xs: &[f32]) -> Vec<f32> {\n    let doubled: Vec<f32> = xs.iter().map(|x| x * 2.0).collect();\n    let copy = doubled.clone();\n    let mut v = Vec::new();\n    v.extend_from_slice(&copy);\n    let w = vec![0.0; 4];\n    let t = xs.to_vec();\n    let _ = (w, t);\n    v\n}\n";
+        let mut v = Vec::new();
+        check_hot_loop_alloc(&[fs("rust/src/ffd/workspace.rs", src)], &mut v);
+        let r = rules_of(&v);
+        assert_eq!(r.len(), 5, "{:?}", v.iter().map(|x| &x.msg).collect::<Vec<_>>());
+        assert!(r.iter().all(|r| *r == "hot-loop-alloc"));
+    }
+
+    #[test]
+    fn unmarked_fns_may_allocate() {
+        let src = "fn setup(xs: &[f32]) -> Vec<f32> { xs.to_vec() }\n";
+        let mut v = Vec::new();
+        check_hot_loop_alloc(&[fs("rust/src/ffd/workspace.rs", src)], &mut v);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn blessed_alloc_site_is_exempt() {
+        let src = "// lint:hot-loop\nfn pass(xs: &[f32]) -> f32 {\n    // lint:allow(hot-loop-alloc): one-time cold-path diagnostics.\n    let d = xs.to_vec();\n    d[0]\n}\n";
+        let mut v = Vec::new();
+        check_hot_loop_alloc(&[fs("rust/src/ffd/workspace.rs", src)], &mut v);
+        assert!(v.is_empty(), "{:?}", v.iter().map(|x| &x.msg).collect::<Vec<_>>());
+    }
+
+    // ---- orphan-module ----
+
+    #[test]
+    fn unreferenced_module_is_reported_and_bless_acknowledges() {
+        let modrs = "pub mod used;\npub mod orphan;\npub mod staged;\n";
+        let user = "use super::used::thing;\nfn f() { thing(); }\n";
+        let files = vec![
+            fs("rust/src/ffd/mod.rs", modrs),
+            fs("rust/src/ffd/used.rs", "pub fn thing() {}\n"),
+            fs("rust/src/ffd/other.rs", user),
+            fs("rust/src/ffd/orphan.rs", "pub fn lonely() {}\n"),
+            fs(
+                "rust/src/ffd/staged.rs",
+                "// lint:orphan(ok: ROADMAP item)\npub fn later() {}\n",
+            ),
+        ];
+        let orphans = orphan_modules(&files);
+        let names: Vec<&str> = orphans.iter().map(|(r, _)| r.as_str()).collect();
+        assert!(names.contains(&"rust/src/ffd/orphan.rs"));
+        assert!(!names.contains(&"rust/src/ffd/used.rs"));
+        assert!(!names.contains(&"rust/src/ffd/other.rs"), "user file references `used`");
+        let staged = orphans.iter().find(|(r, _)| r.ends_with("staged.rs")).unwrap();
+        assert!(staged.1, "lint:orphan(ok …) marks the orphan as blessed");
+        let orphan = orphans.iter().find(|(r, _)| r.ends_with("orphan.rs")).unwrap();
+        assert!(!orphan.1);
+    }
+
+    // ---- findings artifact ----
+
+    #[test]
+    fn findings_json_is_well_formed() {
+        let g = LockGraph { sites: BTreeMap::new(), edges: BTreeMap::new() };
+        let v = vec![Violation::new(
+            "rust/src/a.rs",
+            3,
+            "lock-order",
+            "msg with \"quotes\" and\nnewline".to_string(),
+        )];
+        let dir = std::env::temp_dir().join("ffdreg-xtask-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("findings.json");
+        write_findings(&path, &v, &g, &BTreeMap::new(), &[("rust/src/o.rs".into(), true)])
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\\\"quotes\\\""));
+        assert!(text.contains("\"orphan_modules\""));
+        assert!(!text.contains('\u{0}'));
+    }
+}

@@ -41,11 +41,19 @@ pub fn parse_baseline(text: &str) -> BTreeMap<String, usize> {
 
 /// Render a census map back into the baseline text format.
 pub fn render_baseline(census: &BTreeMap<String, usize>) -> String {
-    let mut out = String::from(
+    render_with_header(
         "# unsafe-site census (gated by `cargo xtask lint`).\n\
          # Regenerate with `cargo xtask lint --bless-census`; landing growth\n\
          # requires an `[unsafe-bless]` token in the commit message.\n",
-    );
+        census,
+    )
+}
+
+/// Render a census map under an arbitrary `#`-comment header — the
+/// panic census (`cargo xtask analyze`) shares the file format and the
+/// asymmetric growth gate.
+pub fn render_with_header(header: &str, census: &BTreeMap<String, usize>) -> String {
+    let mut out = String::from(header);
     for (path, count) in census {
         if *count > 0 {
             let _ = writeln!(out, "{count} {path}");

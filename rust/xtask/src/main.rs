@@ -1,20 +1,27 @@
 //! `cargo xtask` — repo-local developer tooling for ffdreg.
 //!
-//! Currently one subcommand:
+//! Two subcommands:
 //!
 //! ```text
-//! cargo xtask lint [--bless-census] [--census-out PATH]
+//! cargo xtask lint    [--bless-census] [--census-out PATH]
+//! cargo xtask analyze [--bless-lock-order] [--bless-panic-census] [--findings-out PATH]
 //! ```
 //!
-//! which runs the zero-dependency static-analysis pass over the
+//! `lint` runs the zero-dependency static-analysis pass over the
 //! workspace sources (see `rules.rs` for the invariants) and the
-//! unsafe-site census gate (see `census.rs`).
+//! unsafe-site census gate (see `census.rs`). `analyze` runs the
+//! concurrency & panic-safety pass over the production crate
+//! (`rust/src`): lock-order graph, atomic-ordering audit, panic census
+//! and hot-loop allocation lint (see `analyze.rs`, built on the fn-span
+//! parser in `parse.rs`).
 //!
 //! Exit codes: 0 clean, 1 violations/census growth, 2 usage or I/O
 //! error.
 
+mod analyze;
 mod census;
 mod lexer;
+mod parse;
 mod rules;
 
 use std::collections::BTreeMap;
@@ -42,8 +49,12 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(|s| s.as_str()) {
         Some("lint") => lint(&args[1..]),
+        Some("analyze") => analyze_cmd(&args[1..]),
         _ => {
-            eprintln!("usage: cargo xtask lint [--bless-census] [--census-out PATH]");
+            eprintln!(
+                "usage: cargo xtask lint [--bless-census] [--census-out PATH]\n\
+                 \x20      cargo xtask analyze [--bless-lock-order] [--bless-panic-census] [--findings-out PATH]"
+            );
             ExitCode::from(2)
         }
     }
@@ -174,6 +185,193 @@ fn lint(args: &[String]) -> ExitCode {
         fresh.len()
     );
     if violations.is_empty() && !census_failed {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}
+
+const LOCK_BASELINE_REL: &str = "rust/xtask/lock_order.txt";
+const PANIC_BASELINE_REL: &str = "rust/xtask/panic_census.txt";
+
+/// `cargo xtask analyze` — the concurrency & panic-safety pass. Scans
+/// the production crate only (`rust/src`): tests/benches/examples may
+/// lock and unwrap however they like.
+fn analyze_cmd(args: &[String]) -> ExitCode {
+    let mut bless_lock = false;
+    let mut bless_panic = false;
+    let mut findings_out: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--bless-lock-order" => bless_lock = true,
+            "--bless-panic-census" => bless_panic = true,
+            "--findings-out" => match it.next() {
+                Some(p) => findings_out = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--findings-out requires a path");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown flag: {other}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let root = repo_root();
+    let mut paths: Vec<PathBuf> = Vec::new();
+    collect_rs(&root.join("rust/src"), &mut paths);
+    paths.sort();
+    if paths.is_empty() {
+        eprintln!("xtask analyze: no sources found under {}", root.display());
+        return ExitCode::from(2);
+    }
+    let mut files: Vec<analyze::FileScan> = Vec::new();
+    for path in &paths {
+        let Ok(src) = std::fs::read_to_string(path) else {
+            eprintln!("xtask analyze: unreadable file {}", path.display());
+            return ExitCode::from(2);
+        };
+        files.push(analyze::FileScan::new(&rel_path(&root, path), &src));
+    }
+
+    let mut violations: Vec<rules::Violation> = Vec::new();
+
+    // Rule 1: lock-order.
+    let graph = analyze::build_lock_graph(&files);
+    let lock_baseline_path = root.join(LOCK_BASELINE_REL);
+    if bless_lock {
+        if let Some(cycle) = analyze::find_cycle(&graph) {
+            eprintln!(
+                "xtask analyze: refusing to bless a cyclic lock graph: {}",
+                cycle.join(" -> ")
+            );
+            return ExitCode::from(2);
+        }
+        if let Err(e) = std::fs::write(&lock_baseline_path, analyze::render_lock_baseline(&graph))
+        {
+            eprintln!("xtask analyze: cannot write {}: {e}", lock_baseline_path.display());
+            return ExitCode::from(2);
+        }
+        println!(
+            "lock-order: blessed {} locks / {} edges -> {}",
+            graph.sites.len(),
+            graph.edges.len(),
+            LOCK_BASELINE_REL
+        );
+    }
+    match std::fs::read_to_string(&lock_baseline_path) {
+        Ok(text) => {
+            let baseline = analyze::parse_lock_baseline(&text);
+            for note in analyze::check_lock_order(&graph, &baseline, &mut violations) {
+                println!("{note}");
+            }
+        }
+        Err(_) => {
+            violations.push(rules::Violation::new(
+                LOCK_BASELINE_REL,
+                1,
+                "lock-order",
+                "no lock-order baseline — run `cargo xtask analyze --bless-lock-order` \
+                 to record the blessed acquisition order"
+                    .to_string(),
+            ));
+        }
+    }
+
+    // Rule 2: atomic-ordering.
+    analyze::check_atomic_ordering(&files, &mut violations);
+
+    // Rule 3: panic-census.
+    let census = analyze::panic_census(&files);
+    let panic_baseline_path = root.join(PANIC_BASELINE_REL);
+    if bless_panic {
+        let text = census::render_with_header(analyze::PANIC_BASELINE_HEADER, &census);
+        if let Err(e) = std::fs::write(&panic_baseline_path, text) {
+            eprintln!("xtask analyze: cannot write {}: {e}", panic_baseline_path.display());
+            return ExitCode::from(2);
+        }
+        println!(
+            "panic-census: blessed {} panic sites across {} files -> {}",
+            census.values().sum::<usize>(),
+            census.len(),
+            PANIC_BASELINE_REL
+        );
+    } else {
+        match std::fs::read_to_string(&panic_baseline_path) {
+            Ok(text) => {
+                let base = census::parse_baseline(&text);
+                let d = census::diff(&base, &census);
+                for g in &d.grown {
+                    violations.push(rules::Violation::new(
+                        PANIC_BASELINE_REL,
+                        1,
+                        "panic-census",
+                        format!(
+                            "panic-site growth {g} — contain the panic (Result / \
+                             catch_unwind), or run `cargo xtask analyze \
+                             --bless-panic-census` and land with a [panic-bless] token"
+                        ),
+                    ));
+                }
+                for s in &d.shrunk {
+                    println!("panic-census: shrink {s} (nice — re-bless when convenient)");
+                }
+            }
+            Err(_) => {
+                violations.push(rules::Violation::new(
+                    PANIC_BASELINE_REL,
+                    1,
+                    "panic-census",
+                    "no panic-census baseline — run `cargo xtask analyze \
+                     --bless-panic-census` to create it"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+
+    // Rule 4: hot-loop-alloc.
+    analyze::check_hot_loop_alloc(&files, &mut violations);
+
+    // Informational: orphan modules.
+    let orphans = analyze::orphan_modules(&files);
+    for (rel, blessed) in &orphans {
+        if !blessed {
+            println!(
+                "analyze: note: orphan module {rel} — referenced only by its `mod` \
+                 declaration; wire it up, or acknowledge with a `lint:orphan(ok: …)` \
+                 comment"
+            );
+        }
+    }
+
+    for v in &violations {
+        println!("{}:{}: [{}] {}", v.path, v.line, v.rule, v.msg);
+    }
+
+    if let Some(out) = findings_out {
+        if let Err(e) = analyze::write_findings(&out, &violations, &graph, &census, &orphans) {
+            eprintln!("xtask analyze: cannot write {}: {e}", out.display());
+            return ExitCode::from(2);
+        }
+    }
+
+    println!(
+        "xtask analyze: {} files scanned, {} violations; {} locks / {} edges, \
+         {} panic sites in {} files, {} orphan modules ({} blessed)",
+        files.len(),
+        violations.len(),
+        graph.sites.len(),
+        graph.edges.len(),
+        census.values().sum::<usize>(),
+        census.len(),
+        orphans.len(),
+        orphans.iter().filter(|(_, b)| *b).count()
+    );
+    if violations.is_empty() {
         ExitCode::SUCCESS
     } else {
         ExitCode::FAILURE

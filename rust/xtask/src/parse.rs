@@ -1,0 +1,529 @@
+//! Lightweight item/function-span parsing on top of the lexer token
+//! stream — just enough structure for the `analyze` rules (`analyze.rs`)
+//! without becoming a Rust parser.
+//!
+//! What it recovers from a [`Scan`]:
+//!
+//! * **fn spans** — every `fn` item (including nested fns) with its body
+//!   located by brace matching, so a token index can be attributed to its
+//!   *innermost* enclosing function;
+//! * **call sites** — `ident(` pairs (free/assoc fns and method calls;
+//!   macros like `panic!(…)` never match because the `!` sits between the
+//!   ident and the paren);
+//! * **lock sites** — no-arg `.lock()` / `.read()` / `.write()` calls with
+//!   the receiver identifier recovered by a bounded walk-back (so
+//!   `self.state.lock()` names `state` and `registry().lock()` names
+//!   `registry`);
+//! * **atomic accesses** — `.load(…)`/`.store(…)`/`.fetch_*(…)`/… calls
+//!   whose argument list mentions `Relaxed`, again with the receiver
+//!   field recovered;
+//! * **`#[cfg(test)]` regions** — brace-matched line spans of in-file
+//!   test modules, shared with `rules.rs`.
+//!
+//! Everything operates on the lexer's code-token stream, so comments,
+//! strings (`"fn f() {"`), and raw strings can never confuse a span.
+
+use crate::lexer::Scan;
+
+/// One `fn` item found in a scan (possibly nested inside another fn).
+pub struct FnSpan {
+    /// The function's name (the identifier after `fn`).
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    /// Token-index range `(open, close)` of the body braces, inclusive.
+    /// `None` for bodyless declarations (trait methods, extern fns).
+    pub body: Option<(usize, usize)>,
+    /// Last line of the body (== `line` for bodyless declarations).
+    pub end_line: usize,
+    /// True when the span lies inside a `#[cfg(test)]` module region.
+    pub in_test: bool,
+}
+
+/// A call site: `callee(` — free fn, associated fn, or method call.
+pub struct CallSite {
+    /// Called identifier (last path segment / method name).
+    pub callee: String,
+    /// Token index of the callee identifier.
+    pub tok: usize,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// A no-arg `.lock()` / `.read()` / `.write()` acquisition site.
+pub struct LockSite {
+    /// Receiver identifier (field or function name, e.g. `queue`).
+    pub recv: String,
+    /// Token index of the `.` starting the call.
+    pub tok: usize,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// An atomic access (`.load`/`.store`/`.fetch_*`/`.swap`/…) that names
+/// `Relaxed` somewhere in its argument list.
+pub struct RelaxedSite {
+    /// Receiver identifier (the atomic field, e.g. `hits`).
+    pub recv: String,
+    /// The accessor method (`load`, `store`, `fetch_add`, …).
+    pub method: String,
+    /// Token index of the `.` starting the call.
+    pub tok: usize,
+    /// 1-based source line.
+    pub line: usize,
+}
+
+/// The parsed view of one file.
+pub struct Parsed {
+    /// Every fn span, in source order (nested fns appear after their
+    /// enclosing fn because discovery is by token position of `fn`).
+    pub fns: Vec<FnSpan>,
+    /// `#[cfg(test)] mod` line regions.
+    pub test_regions: Vec<(usize, usize)>,
+}
+
+impl Parsed {
+    /// Index (into [`Parsed::fns`]) of the innermost fn whose body
+    /// contains token `tok`, if any.
+    pub fn enclosing_fn(&self, tok: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, f) in self.fns.iter().enumerate() {
+            if let Some((open, close)) = f.body {
+                if tok >= open && tok <= close {
+                    // Latest-starting containing body = innermost.
+                    if best.map_or(true, |b| self.fns[b].body.unwrap().0 < open) {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        best
+    }
+}
+
+fn is_ident(tok: &str) -> bool {
+    let mut chars = tok.chars();
+    matches!(chars.next(), Some(c) if c.is_ascii_alphabetic() || c == '_')
+        && chars.all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Parse a scan into fn spans + test regions.
+pub fn parse(scan: &Scan) -> Parsed {
+    let test_regions = test_mod_regions(scan);
+    let toks = &scan.toks;
+    let mut fns = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].text != "fn" {
+            continue;
+        }
+        let Some(name_tok) = toks.get(i + 1) else { continue };
+        if !is_ident(&name_tok.text) {
+            continue; // `fn(usize) -> f32` pointer type, not an item
+        }
+        // Scan forward for the body `{` (or a `;` = bodyless decl) at
+        // zero paren/bracket depth, so parens in the signature —
+        // `fn f(g: impl Fn() -> T)` — can't fool the brace search.
+        let mut depth = 0isize;
+        let mut j = i + 2;
+        let mut body = None;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                ";" if depth == 0 => break,
+                "{" if depth == 0 => {
+                    body = Some(j);
+                    break;
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let (body, end_line) = match body {
+            None => (None, name_tok.line),
+            Some(open) => {
+                let close = match_brace(scan, open);
+                (Some((open, close)), toks[close].line)
+            }
+        };
+        fns.push(FnSpan {
+            name: name_tok.text.clone(),
+            line: toks[i].line,
+            body,
+            end_line,
+            in_test: in_regions(&test_regions, toks[i].line),
+        });
+    }
+    Parsed { fns, test_regions }
+}
+
+/// Token index of the `}` matching the `{` at `open` (last token when
+/// unbalanced — truncated input degrades to "rest of file").
+fn match_brace(scan: &Scan, open: usize) -> usize {
+    let toks = &scan.toks;
+    let mut depth = 0isize;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        match t.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len() - 1
+}
+
+/// Every `ident(` call site (the ident directly preceding an opening
+/// paren, excluding fn *definitions*). Macro invocations (`name!(…)`)
+/// never match: the `!` token separates the ident from the paren.
+pub fn call_sites(scan: &Scan) -> Vec<CallSite> {
+    let toks = &scan.toks;
+    let mut out = Vec::new();
+    for i in 0..toks.len().saturating_sub(1) {
+        if !is_ident(&toks[i].text) || toks[i + 1].text != "(" {
+            continue;
+        }
+        if i > 0 && toks[i - 1].text == "fn" {
+            continue; // definition, not a call
+        }
+        // Control-flow keywords can precede a parenthesized expression.
+        if matches!(
+            toks[i].text.as_str(),
+            "if" | "while" | "for" | "match" | "return" | "loop" | "in" | "move" | "else"
+        ) {
+            continue;
+        }
+        out.push(CallSite { callee: toks[i].text.clone(), tok: i, line: toks[i].line });
+    }
+    out
+}
+
+/// Walk back from the token *before* the `.` of a method call to recover
+/// the receiver identifier: `self.state.lock()` → `state`,
+/// `registry().lock()` → `registry`, `rings[i].lock()` → `rings`.
+fn receiver_ident(scan: &Scan, dot: usize) -> Option<String> {
+    let toks = &scan.toks;
+    let mut i = dot.checked_sub(1)?;
+    // Hop over one trailing `(…)` or `[…]` group (call or index).
+    for _ in 0..2 {
+        let t = toks[i].text.as_str();
+        if t == ")" || t == "]" {
+            let open = if t == ")" { "(" } else { "[" };
+            let close = t;
+            let mut depth = 0isize;
+            loop {
+                let s = toks[i].text.as_str();
+                if s == close {
+                    depth += 1;
+                } else if s == open {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                i = i.checked_sub(1)?;
+            }
+            i = i.checked_sub(1)?;
+        } else {
+            break;
+        }
+    }
+    let t = &toks[i].text;
+    if is_ident(t) && t != "self" {
+        return Some(t.clone());
+    }
+    // `self.lock()` / `(expr).lock()` — no useful field name.
+    None
+}
+
+/// No-argument `.lock()` / `.read()` / `.write()` acquisition sites.
+/// The no-arg requirement keeps `io::Read::read(&mut buf)` and friends
+/// out: `Mutex::lock` / `RwLock::{read,write}` take no arguments.
+pub fn lock_sites(scan: &Scan) -> Vec<LockSite> {
+    let toks = &scan.toks;
+    let mut out = Vec::new();
+    for i in 0..toks.len().saturating_sub(3) {
+        if toks[i].text != "."
+            || !matches!(toks[i + 1].text.as_str(), "lock" | "read" | "write")
+            || toks[i + 2].text != "("
+            || toks[i + 3].text != ")"
+        {
+            continue;
+        }
+        if let Some(recv) = receiver_ident(scan, i) {
+            out.push(LockSite { recv, tok: i, line: toks[i].line });
+        }
+    }
+    out
+}
+
+/// Atomic accessor methods whose `Ordering` argument we audit.
+const ATOMIC_METHODS: &[&str] = &[
+    "load",
+    "store",
+    "swap",
+    "fetch_add",
+    "fetch_sub",
+    "fetch_and",
+    "fetch_or",
+    "fetch_xor",
+    "fetch_update",
+    "compare_exchange",
+    "compare_exchange_weak",
+];
+
+/// Atomic accesses that pass `Relaxed` (as `Ordering::Relaxed` or a bare
+/// imported `Relaxed`) anywhere in the argument list.
+pub fn relaxed_sites(scan: &Scan) -> Vec<RelaxedSite> {
+    let toks = &scan.toks;
+    let mut out = Vec::new();
+    for i in 0..toks.len().saturating_sub(2) {
+        if toks[i].text != "."
+            || !ATOMIC_METHODS.contains(&toks[i + 1].text.as_str())
+            || toks[i + 2].text != "("
+        {
+            continue;
+        }
+        // Scan the argument list for `Relaxed`.
+        let mut depth = 0isize;
+        let mut k = i + 2;
+        let mut relaxed = false;
+        while k < toks.len() {
+            match toks[k].text.as_str() {
+                "(" => depth += 1,
+                ")" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                "Relaxed" => relaxed = true,
+                _ => {}
+            }
+            k += 1;
+        }
+        if !relaxed {
+            continue;
+        }
+        if let Some(recv) = receiver_ident(scan, i) {
+            out.push(RelaxedSite {
+                recv,
+                method: toks[i + 1].text.clone(),
+                tok: i,
+                line: toks[i].line,
+            });
+        }
+    }
+    out
+}
+
+/// Line regions covered by `#[cfg(test)] mod … { … }` blocks: rules that
+/// police production code skip test modules.
+pub fn test_mod_regions(scan: &Scan) -> Vec<(usize, usize)> {
+    let toks = &scan.toks;
+    let mut regions = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < toks.len() {
+        // Match `# [ cfg ( test ) ]` allowing nothing in between.
+        let is_cfg_test = toks[i].text == "#"
+            && toks[i + 1].text == "["
+            && toks[i + 2].text == "cfg"
+            && toks[i + 3].text == "("
+            && toks[i + 4].text == "test"
+            && toks[i + 5].text == ")"
+            && toks[i + 6].text == "]";
+        if !is_cfg_test {
+            i += 1;
+            continue;
+        }
+        // Scan forward for `mod <name> {` before any other item keyword.
+        let mut j = i + 7;
+        let mut saw_mod = false;
+        while j < toks.len() && j < i + 20 {
+            match toks[j].text.as_str() {
+                "mod" => {
+                    saw_mod = true;
+                    j += 1;
+                    break;
+                }
+                // Another attribute may follow (#[cfg(test)] #[allow(..)] mod …)
+                "#" | "[" | "]" | "(" | ")" | "," | "=" => j += 1,
+                w if w.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') => j += 1,
+                _ => break,
+            }
+        }
+        if !saw_mod {
+            i += 7;
+            continue;
+        }
+        // j points at the mod name; find the opening brace then match it.
+        let mut k = j;
+        while k < toks.len() && toks[k].text != "{" {
+            k += 1;
+        }
+        if k >= toks.len() {
+            break;
+        }
+        let start_line = toks[i].line;
+        let close = match_brace(scan, k);
+        regions.push((start_line, toks[close].line));
+        i = close.max(i + 7);
+    }
+    regions
+}
+
+/// True when `line` falls inside any of the given line regions.
+pub fn in_regions(regions: &[(usize, usize)], line: usize) -> bool {
+    regions.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::scan;
+
+    fn spans(src: &str) -> Vec<(String, usize, usize)> {
+        parse(&scan(src))
+            .fns
+            .iter()
+            .map(|f| (f.name.clone(), f.line, f.end_line))
+            .collect()
+    }
+
+    #[test]
+    fn fn_spans_cover_simple_items() {
+        let src = "fn a() {\n    g();\n}\n\npub fn b(x: usize) -> usize {\n    x\n}\n";
+        assert_eq!(
+            spans(src),
+            vec![("a".to_string(), 1, 3), ("b".to_string(), 5, 7)]
+        );
+    }
+
+    #[test]
+    fn fn_spans_survive_nested_closures_and_braces() {
+        // A closure with its own braces, a match, and a nested block must
+        // not end the enclosing fn early.
+        let src = "fn outer() {\n    let f = |x: usize| {\n        match x {\n            0 => {}\n            _ => { inner_call(); }\n        }\n    };\n    f(3);\n}\nfn after() {}\n";
+        let s = spans(src);
+        assert_eq!(s[0], ("outer".to_string(), 1, 9));
+        assert_eq!(s[1], ("after".to_string(), 10, 10));
+    }
+
+    #[test]
+    fn fns_inside_impl_blocks_are_found() {
+        let src = "impl Foo {\n    fn method(&self) -> usize {\n        self.x\n    }\n    pub fn other(&self) {}\n}\n";
+        let s = spans(src);
+        assert_eq!(s[0].0, "method");
+        assert_eq!(s[1].0, "other");
+    }
+
+    #[test]
+    fn nested_fn_is_its_own_innermost_span() {
+        let src = "fn outer() {\n    fn inner() {\n        target();\n    }\n    inner();\n}\n";
+        let p = parse(&scan(src));
+        assert_eq!(p.fns.len(), 2);
+        let sc = scan(src);
+        let call_tok = call_sites(&sc)
+            .into_iter()
+            .find(|c| c.callee == "target")
+            .unwrap()
+            .tok;
+        let owner = p.enclosing_fn(call_tok).unwrap();
+        assert_eq!(p.fns[owner].name, "inner");
+    }
+
+    #[test]
+    fn signature_parens_do_not_confuse_the_body_search() {
+        // `impl Fn() -> usize` in the signature, `where` clause after.
+        let src = "fn apply<F>(f: F) -> usize\nwhere\n    F: Fn() -> usize,\n{\n    f()\n}\n";
+        assert_eq!(spans(src), vec![("apply".to_string(), 1, 6)]);
+    }
+
+    #[test]
+    fn bodyless_trait_methods_have_no_body() {
+        let src = "trait T {\n    fn required(&self) -> usize;\n    fn provided(&self) {}\n}\n";
+        let p = parse(&scan(src));
+        assert!(p.fns[0].body.is_none());
+        assert!(p.fns[1].body.is_some());
+    }
+
+    #[test]
+    fn fn_pointer_types_are_not_items() {
+        let src = "fn f(cb: fn(usize) -> usize) -> usize { cb(1) }\n";
+        assert_eq!(spans(src).len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_mod_fns_are_marked() {
+        let src = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { prod(); }\n}\n";
+        let p = parse(&scan(src));
+        assert!(!p.fns[0].in_test);
+        assert!(p.fns[1].in_test);
+        assert_eq!(p.test_regions.len(), 1);
+    }
+
+    #[test]
+    fn raw_strings_with_fn_and_lock_text_are_invisible() {
+        // The raw string contains `fn ` and `.lock()` — neither may
+        // produce a span or a lock site.
+        let src = "fn real() {\n    let fixture = r#\"fn fake() { x.lock() }\"#;\n    let plain = \"also fn text() and y.lock() here\";\n    let _ = (fixture, plain);\n}\n";
+        let sc = scan(src);
+        let p = parse(&sc);
+        assert_eq!(p.fns.len(), 1);
+        assert_eq!(p.fns[0].name, "real");
+        assert!(lock_sites(&sc).is_empty());
+    }
+
+    #[test]
+    fn call_sites_skip_macros_and_keywords() {
+        let src = "fn f(x: usize) {\n    panic!(\"boom\");\n    if (x > 0) {\n        helper(x);\n    }\n}\n";
+        let calls: Vec<String> =
+            call_sites(&scan(src)).into_iter().map(|c| c.callee).collect();
+        assert_eq!(calls, vec!["helper".to_string()]);
+    }
+
+    #[test]
+    fn lock_sites_name_the_receiver_field() {
+        let src = "fn f(&self) {\n    let g = self.state.lock().unwrap();\n    let q = shared.queue.lock().unwrap();\n    let r = registry().lock().unwrap();\n    let s = rings[i].lock().unwrap();\n}\n";
+        let names: Vec<String> =
+            lock_sites(&scan(src)).into_iter().map(|l| l.recv).collect();
+        assert_eq!(names, vec!["state", "queue", "registry", "rings"]);
+    }
+
+    #[test]
+    fn argful_read_write_calls_are_not_lock_sites() {
+        let src = "fn f() {\n    file.read(&mut buf).unwrap();\n    sock.write(&bytes).unwrap();\n    guard.write().push(1);\n}\n";
+        let names: Vec<String> =
+            lock_sites(&scan(src)).into_iter().map(|l| l.recv).collect();
+        assert_eq!(names, vec!["guard".to_string()]);
+    }
+
+    #[test]
+    fn relaxed_sites_capture_field_and_method() {
+        let src = "fn f(&self) {\n    self.hits.fetch_add(1, Ordering::Relaxed);\n    let n = DROPPED.load(Ordering::Relaxed);\n    self.flag.store(true, Ordering::SeqCst);\n}\n";
+        let s = relaxed_sites(&scan(src));
+        let got: Vec<(String, String)> =
+            s.into_iter().map(|r| (r.recv, r.method)).collect();
+        assert_eq!(
+            got,
+            vec![
+                ("hits".to_string(), "fetch_add".to_string()),
+                ("DROPPED".to_string(), "load".to_string()),
+            ]
+        );
+    }
+
+    #[test]
+    fn chained_mirror_store_names_the_producing_call() {
+        // `m.counter("x").store(v.load(Relaxed), Relaxed)` — the store's
+        // receiver is the `counter` call; the inner load names `v`.
+        let src = "fn f() {\n    m.counter(\"x\").store(v.load(Ordering::Relaxed), Ordering::Relaxed);\n}\n";
+        let s = relaxed_sites(&scan(src));
+        let got: Vec<String> = s.into_iter().map(|r| r.recv).collect();
+        assert_eq!(got, vec!["counter".to_string(), "v".to_string()]);
+    }
+}

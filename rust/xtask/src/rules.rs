@@ -20,7 +20,7 @@ pub struct Violation {
 }
 
 impl Violation {
-    fn new(path: &str, line: usize, rule: &'static str, msg: String) -> Self {
+    pub(crate) fn new(path: &str, line: usize, rule: &'static str, msg: String) -> Self {
         Violation { path: path.to_string(), line, rule, msg }
     }
 }
@@ -72,26 +72,35 @@ pub fn check_safety_comments(path: &str, scan: &Scan, out: &mut Vec<Violation>) 
 }
 
 fn is_justified(scan: &Scan, unsafe_line: usize) -> bool {
+    comment_above_contains(scan, unsafe_line, &["SAFETY:", "# Safety"])
+}
+
+/// Does any of `tags` appear in the comment associated with `line` —
+/// the same-line trailing comment, or the contiguous comment run
+/// immediately above (attribute lines may sit in between, a blank line
+/// breaks the association)? This is the shared association contract for
+/// `// SAFETY:`, `// ORDERING:` and the `lint:` markers.
+pub(crate) fn comment_above_contains(scan: &Scan, line: usize, tags: &[&str]) -> bool {
+    let hit = |s: &str| tags.iter().any(|t| s.contains(t));
     // Same-line trailing comment.
-    if let Some(c) = scan.comment_on(unsafe_line) {
-        if c.contains("SAFETY:") {
+    if let Some(c) = scan.comment_on(line) {
+        if hit(c) {
             return true;
         }
     }
     // Walk upward: skip attribute-only lines, then demand a comment run.
-    let mut l = unsafe_line;
+    let mut l = line;
     while l > 1 {
         l -= 1;
         if scan.is_comment_only(l) {
-            let run = scan.comment_run_ending_at(l);
-            return run.contains("SAFETY:") || run.contains("# Safety");
+            return hit(&scan.comment_run_ending_at(l));
         }
         if has_code_on(scan, l) {
             if line_starts_with_attr(scan, l) {
                 // Attribute between comment and item — also accept a
                 // trailing comment on the attribute line itself.
                 if let Some(c) = scan.comment_on(l) {
-                    if c.contains("SAFETY:") {
+                    if hit(c) {
                         return true;
                     }
                 }
@@ -137,79 +146,9 @@ pub fn check_raw_mul_add(path: &str, scan: &Scan, out: &mut Vec<Violation>) {
     }
 }
 
-/// Line regions covered by `#[cfg(test)] mod … { … }` blocks: rules that
-/// police production numerics skip test modules.
-fn test_mod_regions(scan: &Scan) -> Vec<(usize, usize)> {
-    let toks = &scan.toks;
-    let mut regions = Vec::new();
-    let mut i = 0usize;
-    while i + 6 < toks.len() {
-        // Match `# [ cfg ( test ) ]` allowing nothing in between.
-        let is_cfg_test = toks[i].text == "#"
-            && toks[i + 1].text == "["
-            && toks[i + 2].text == "cfg"
-            && toks[i + 3].text == "("
-            && toks[i + 4].text == "test"
-            && toks[i + 5].text == ")"
-            && toks[i + 6].text == "]";
-        if !is_cfg_test {
-            i += 1;
-            continue;
-        }
-        // Scan forward for `mod <name> {` before any other item keyword.
-        let mut j = i + 7;
-        let mut saw_mod = false;
-        while j < toks.len() && j < i + 20 {
-            match toks[j].text.as_str() {
-                "mod" => {
-                    saw_mod = true;
-                    j += 1;
-                    break;
-                }
-                // Another attribute may follow (#[cfg(test)] #[allow(..)] mod …)
-                "#" | "[" | "]" | "(" | ")" | "," | "=" => j += 1,
-                w if w.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') => j += 1,
-                _ => break,
-            }
-        }
-        if !saw_mod {
-            i += 7;
-            continue;
-        }
-        // j points at the mod name; find the opening brace then match it.
-        let mut k = j;
-        while k < toks.len() && toks[k].text != "{" {
-            k += 1;
-        }
-        if k >= toks.len() {
-            break;
-        }
-        let start_line = toks[i].line;
-        let mut depth = 0isize;
-        let mut end_line = toks[toks.len() - 1].line;
-        while k < toks.len() {
-            match toks[k].text.as_str() {
-                "{" => depth += 1,
-                "}" => {
-                    depth -= 1;
-                    if depth == 0 {
-                        end_line = toks[k].line;
-                        break;
-                    }
-                }
-                _ => {}
-            }
-            k += 1;
-        }
-        regions.push((start_line, end_line));
-        i = k.max(i + 7);
-    }
-    regions
-}
-
-fn in_regions(regions: &[(usize, usize)], line: usize) -> bool {
-    regions.iter().any(|&(a, b)| line >= a && line <= b)
-}
+// `#[cfg(test)] mod … { … }` region tracking lives in the fn-span
+// parser now (`cargo xtask analyze` shares it).
+use crate::parse::{in_regions, test_mod_regions};
 
 /// Rule `float-sum`: inside `ffd/` and `bspline/`, iterator `.sum()` /
 /// `.product()` reductions are forbidden in production code — the
@@ -256,7 +195,7 @@ pub fn check_float_sum(path: &str, scan: &Scan, out: &mut Vec<Violation>) {
 
 /// A site is blessed when `tag` appears in the same-line comment or in
 /// the contiguous comment run immediately above.
-fn blessed(scan: &Scan, line: usize, tag: &str) -> bool {
+pub(crate) fn blessed(scan: &Scan, line: usize, tag: &str) -> bool {
     if let Some(c) = scan.comment_on(line) {
         if c.contains(tag) {
             return true;
