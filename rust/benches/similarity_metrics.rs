@@ -1,0 +1,95 @@
+//! Fused similarity-metric hot-loop timings: SSD vs NCC vs NMI through the
+//! same `LevelWorkspace` cost and gradient passes the registration loop
+//! runs. SSD is the paper's metric (one slab pass, stride-1 reductions);
+//! NCC adds per-slice five-sum reductions to the same pass; NMI adds a
+//! second slab pass accumulating deterministic per-slice joint histograms
+//! plus the Parzen gradient table. These rows quantify what each metric
+//! costs over SSD on identical volumes, and feed the perf-regression gate
+//! as `BENCH_similarity.json`.
+//!
+//! Run: cargo bench --bench similarity_metrics [-- --threads N --json DIR]
+
+use std::time::Instant;
+
+use ffdreg::bspline::{ControlGrid, Method};
+use ffdreg::cli::Args;
+use ffdreg::ffd::workspace::LevelWorkspace;
+use ffdreg::ffd::{FfdTiming, Similarity};
+use ffdreg::util::bench::{full_scale, BenchJson, BenchTrace, Report};
+use ffdreg::volume::{Dims, Volume};
+
+fn main() {
+    let args = Args::from_env();
+    let threads = args.get_usize("threads", 0).expect("--threads expects an integer");
+    let n = if full_scale() { 128 } else { 64 };
+    let reps = if full_scale() { 12 } else { 5 };
+    let dims = Dims::new(n, n, n);
+    let c = n as f32 / 2.0;
+    let blob = |shift: f32| {
+        Volume::from_fn(dims, [1.0; 3], move |x, y, z| {
+            let d2 = (x as f32 - c - shift).powi(2)
+                + (y as f32 - c).powi(2)
+                + (z as f32 - c * 0.8).powi(2);
+            (-d2 / (2.0 * c)).exp() + 0.01 * ((x * 3 + y * 5 + z * 7) % 11) as f32
+        })
+    };
+    let reference = blob(0.0);
+    let floating = blob(2.5);
+    let mut grid = ControlGrid::zeros(dims, [5, 5, 5]);
+    grid.randomize(11, 1.2);
+
+    let mut sink = BenchJson::from_env("similarity");
+    let tracer = BenchTrace::from_env("similarity_metrics");
+    let mut rep = Report::new(
+        "similarity_metrics",
+        "fused cost/gradient passes per similarity metric (SSD baseline)",
+    );
+    let isa = ffdreg::util::simd::active().name();
+    let nvox = dims.count() as f64;
+
+    let mut ssd_grad_s = 0.0;
+    for sim in [Similarity::Ssd, Similarity::Ncc, Similarity::Nmi] {
+        let mut ws = LevelWorkspace::with_similarity(threads, sim);
+        let imp = Method::Ttli.instance();
+        let mut timing = FfdTiming::default();
+        // Warm-up sizes every workspace buffer (including the NMI
+        // histogram scratch) outside the timed region.
+        let mut objective =
+            ws.cost(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing);
+        ws.objective_gradient(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing, false);
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            objective = ws.cost(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing);
+        }
+        let cost_s = t0.elapsed().as_secs_f64() / reps as f64;
+        let t1 = Instant::now();
+        for _ in 0..reps {
+            ws.objective_gradient(
+                &reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing, false,
+            );
+        }
+        let grad_s = t1.elapsed().as_secs_f64() / reps as f64;
+        if sim == Similarity::Ssd {
+            ssd_grad_s = grad_s;
+        }
+
+        let label = format!("fused-{}", sim.key());
+        rep.row(&label)
+            .cell("cost ms", cost_s * 1e3)
+            .cell("grad ms", grad_s * 1e3)
+            .cell("cost ns/vox", cost_s * 1e9 / nvox)
+            .cell("grad ns/vox", grad_s * 1e9 / nvox)
+            .cell("vs SSD grad", if ssd_grad_s > 0.0 { grad_s / ssd_grad_s } else { 1.0 })
+            .cell("objective", objective);
+        sink.record_extra(&label, dims.as_array(), threads, isa, grad_s * 1e9 / nvox, &[
+            ("cost_ns_per_voxel", cost_s * 1e9 / nvox),
+            ("objective", objective),
+        ]);
+    }
+
+    rep.note("all metrics share pass 1 (interpolate+warp) and pass 3 (adjoint); the delta is the reduction stride (NCC) / extra histogram pass (NMI)");
+    rep.finish();
+    sink.finish();
+    tracer.finish();
+}

@@ -407,10 +407,15 @@ where
 /// One fused z-slab pass over three SoA `f32` output buffers plus a
 /// per-z-slice `f64` accumulator: `f(chunk, xs, ys, zs, acc)` receives the
 /// chunk's output slabs (slab-relative index 0 = voxel `(0, 0, chunk.z0)`)
-/// and the chunk's span of the per-slice buffer (`acc[lz]` belongs to
-/// global slice `chunk.z0 + lz`). Chunks are unions of whole z-slices and
+/// and the chunk's span of the per-slice buffer. `aux` carries
+/// `stride = aux.len() / nz` `f64` slots per slice (`aux.len()` must be an
+/// exact multiple of `nz`): slot `k` of global slice `chunk.z0 + lz`
+/// arrives as `acc[lz * stride + k]`. SSD passes use stride 1, the fused
+/// NCC pass stride 5 (its five raw sums), the fused NMI pass stride 4
+/// (per-slice reference/warped min/max). Chunks are unions of whole
+/// z-slices and
 /// tile-aligned (`gran`), so per-voxel arithmetic is partition-independent
-/// and callers that fold `acc` in slice order get bit-identical reductions
+/// and callers that fold `aux` in slice order get bit-identical reductions
 /// at every thread count.
 // lint:hot-loop — execution substrate for every fused FFD pass (with_capacity fan-out only).
 #[allow(clippy::too_many_arguments)]
@@ -429,10 +434,11 @@ pub fn run_slab_pass3<F>(
     assert_eq!(x.len(), vol_dims.count());
     assert_eq!(y.len(), vol_dims.count());
     assert_eq!(z.len(), vol_dims.count());
-    assert_eq!(aux.len(), vol_dims.nz);
+    assert_eq!(aux.len() % vol_dims.nz.max(1), 0, "aux must hold whole slices");
     if vol_dims.count() == 0 {
         return;
     }
+    let stride = aux.len() / vol_dims.nz;
     let chunks = partition_z_granular(vol_dims.nz, pool.threads() * CHUNKS_PER_THREAD, gran);
     if chunks.len() <= 1 || pool.threads() <= 1 {
         f(ZChunk::full(vol_dims), x, y, z, aux);
@@ -453,7 +459,7 @@ pub fn run_slab_pass3<F>(
         ry = rest;
         let (sz, rest) = std::mem::take(&mut rz).split_at_mut(n);
         rz = rest;
-        let (sa, rest) = std::mem::take(&mut ra).split_at_mut(ch.len());
+        let (sa, rest) = std::mem::take(&mut ra).split_at_mut(ch.len() * stride);
         ra = rest;
         tasks.push(Box::new(move || fr(ch, sx, sy, sz, sa)));
     }
@@ -485,10 +491,11 @@ pub fn run_slab_pass4<F>(
     assert_eq!(y.len(), vol_dims.count());
     assert_eq!(z.len(), vol_dims.count());
     assert_eq!(w.len(), vol_dims.count());
-    assert_eq!(aux.len(), vol_dims.nz);
+    assert_eq!(aux.len() % vol_dims.nz.max(1), 0, "aux must hold whole slices");
     if vol_dims.count() == 0 {
         return;
     }
+    let stride = aux.len() / vol_dims.nz;
     let chunks = partition_z_granular(vol_dims.nz, pool.threads() * CHUNKS_PER_THREAD, gran);
     if chunks.len() <= 1 || pool.threads() <= 1 {
         f(ZChunk::full(vol_dims), x, y, z, w, aux);
@@ -512,9 +519,43 @@ pub fn run_slab_pass4<F>(
         rz = rest;
         let (sw, rest) = std::mem::take(&mut rw).split_at_mut(n);
         rw = rest;
-        let (sa, rest) = std::mem::take(&mut ra).split_at_mut(ch.len());
+        let (sa, rest) = std::mem::take(&mut ra).split_at_mut(ch.len() * stride);
         ra = rest;
         tasks.push(Box::new(move || fr(ch, sx, sy, sz, sw, sa)));
+    }
+    pool.run(tasks);
+}
+
+/// Aux-only z-slab pass: fan `f(chunk, acc)` over z-chunks where `acc` is
+/// the chunk's span of a per-slice `f64` buffer with
+/// `stride = aux.len() / nz` slots per slice (same layout contract as
+/// [`run_slab_pass3`]'s `aux`, no voxel output buffers). The fused NMI
+/// pass uses this to accumulate per-slice partial joint histograms
+/// (stride = bins²) that the caller folds in slice order — parallel
+/// accumulation stays bitwise identical to serial at every thread count.
+// lint:hot-loop — execution substrate for the fused NMI histogram pass.
+pub fn run_slab_aux<F>(pool: &WorkerPool, nz: usize, gran: usize, aux: &mut [f64], f: F)
+where
+    F: Fn(ZChunk, &mut [f64]) + Sync,
+{
+    if nz == 0 {
+        return;
+    }
+    assert_eq!(aux.len() % nz, 0, "aux must hold whole slices");
+    let stride = aux.len() / nz;
+    let chunks = partition_z_granular(nz, pool.threads() * CHUNKS_PER_THREAD, gran);
+    let full = ZChunk { z0: 0, z1: nz };
+    if chunks.len() <= 1 || pool.threads() <= 1 {
+        f(full, aux);
+        return;
+    }
+    let mut ra = aux;
+    let fr = &f;
+    let mut tasks: Vec<Task<'_>> = Vec::with_capacity(chunks.len());
+    for ch in chunks {
+        let (sa, rest) = std::mem::take(&mut ra).split_at_mut(ch.len() * stride);
+        ra = rest;
+        tasks.push(Box::new(move || fr(ch, sa)));
     }
     pool.run(tasks);
 }

@@ -75,6 +75,10 @@ impl Config {
         if let Some(v) = ffd.get("threads").as_usize() {
             c.ffd.threads = v;
         }
+        if let Some(s) = ffd.get("similarity").as_str() {
+            c.ffd.similarity = crate::ffd::Similarity::parse(s)
+                .ok_or_else(|| format!("unknown similarity '{s}'"))?;
+        }
         if let Some(v) = j.get("affine_first").as_bool() {
             c.affine_first = v;
         }
@@ -115,6 +119,10 @@ impl Config {
     pub fn apply_args(mut self, args: &Args) -> Result<Config, String> {
         if let Some(m) = args.get("method") {
             self.ffd.method = Method::parse(m).ok_or_else(|| format!("unknown method '{m}'"))?;
+        }
+        if let Some(s) = args.get("similarity") {
+            self.ffd.similarity = crate::ffd::Similarity::parse(s)
+                .ok_or_else(|| format!("unknown similarity '{s}'"))?;
         }
         self.ffd.levels = args.get_usize("levels", self.ffd.levels)?;
         self.ffd.max_iter = args.get_usize("iters", self.ffd.max_iter)?;
@@ -228,5 +236,30 @@ mod tests {
     fn unknown_method_is_an_error() {
         let j = Json::parse(r#"{"ffd":{"method":"warp9"}}"#).unwrap();
         assert!(Config::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn similarity_from_json_and_cli() {
+        use crate::ffd::Similarity;
+        assert_eq!(Config::default().ffd.similarity, Similarity::Ssd);
+        let j = Json::parse(r#"{"ffd":{"similarity":"ncc"}}"#).unwrap();
+        let base = Config::from_json(&j).unwrap();
+        assert_eq!(base.ffd.similarity, Similarity::Ncc);
+        // CLI flag layers over the config file.
+        let args = crate::cli::Args::parse(
+            ["--similarity", "nmi"].iter().map(|s| s.to_string()),
+        );
+        let c = base.apply_args(&args).unwrap();
+        assert_eq!(c.ffd.similarity, Similarity::Nmi);
+    }
+
+    #[test]
+    fn unknown_similarity_is_an_error() {
+        let j = Json::parse(r#"{"ffd":{"similarity":"zncc"}}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+        let args = crate::cli::Args::parse(
+            ["--similarity", "mi2"].iter().map(|s| s.to_string()),
+        );
+        assert!(Config::default().apply_args(&args).is_err());
     }
 }

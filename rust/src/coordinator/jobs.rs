@@ -59,6 +59,9 @@ pub struct JobResult {
     pub bsi_s: f64,
     /// Optimizer iterations across all levels.
     pub iterations: usize,
+    /// Similarity metric the run optimized (`ssd` | `ncc` | `nmi`) —
+    /// echoed so clients can tell which objective `cost` is measured in.
+    pub similarity: &'static str,
     /// `vol:` handle of the stored warped output (when requested).
     pub warped: Option<String>,
 }
@@ -476,6 +479,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 total_s: o.result.timing.total_s,
                 bsi_s: o.result.timing.bsi_s,
                 iterations: o.result.timing.iterations,
+                similarity: op.similarity.key(),
                 warped: o.warped_handle,
             }),
             Err(OpError { code: "cancelled", .. }) => JobState::Cancelled,
@@ -540,6 +544,7 @@ mod tests {
             reference: VolumeRef::parse(reference),
             floating: VolumeRef::parse(floating),
             method: crate::bspline::Method::Ttli,
+            similarity: crate::ffd::Similarity::Ssd,
             levels: 1,
             iters,
             threads: 1,

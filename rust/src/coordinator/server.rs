@@ -610,6 +610,7 @@ fn handle_metrics(ctx: &Ctx) -> String {
 fn register_result_pairs(r: &JobResult) -> Vec<(&'static str, Json)> {
     let mut pairs = vec![
         ("cost", Json::Num(r.cost)),
+        ("similarity", Json::Str(r.similarity.into())),
         ("ssim", Json::Num(r.ssim)),
         ("mae", Json::Num(r.mae)),
         ("total_s", Json::Num(r.total_s)),
@@ -638,6 +639,11 @@ fn handle_register(req: &Json, ctx: &Ctx) -> String {
     else {
         return err_line("bad_request", "unknown method");
     };
+    let Some(similarity) =
+        crate::ffd::Similarity::parse(req.get("similarity").as_str().unwrap_or("ssd"))
+    else {
+        return err_line("bad_request", "unknown similarity (expected ssd|ncc|nmi)");
+    };
     let out = match req.get("out").as_str() {
         Some(o) if VolumeStore::is_handle(o) => {
             return err_line(
@@ -652,6 +658,7 @@ fn handle_register(req: &Json, ctx: &Ctx) -> String {
         reference: VolumeRef::parse(ref_str),
         floating: VolumeRef::parse(flo_str),
         method,
+        similarity,
         levels: req.get("levels").as_usize().unwrap_or(2),
         iters: req.get("iters").as_usize().unwrap_or(20),
         threads: req.get("threads").as_usize().unwrap_or(0),

@@ -185,6 +185,8 @@ pub struct RegisterOp {
     pub floating: VolumeRef,
     /// BSI scheme driving the dense deformation field.
     pub method: Method,
+    /// Similarity metric for the fused cost/gradient passes.
+    pub similarity: crate::ffd::Similarity,
     /// Pyramid levels (clamped to 1..=6).
     pub levels: usize,
     /// Max optimizer iterations per level (clamped to 1..=500).
@@ -291,6 +293,7 @@ pub fn run_register(
     }
     let cfg = crate::ffd::FfdConfig {
         method: op.method,
+        similarity: op.similarity,
         levels: op.levels.clamp(1, 6),
         max_iter: op.iters.clamp(1, 500),
         // The threads field is remote-controlled (protocol "threads"):
@@ -384,6 +387,7 @@ mod tests {
             reference: VolumeRef::parse(reference),
             floating: VolumeRef::parse(floating),
             method: Method::Ttli,
+            similarity: crate::ffd::Similarity::Ssd,
             levels: 1,
             iters: 1,
             threads: 0,

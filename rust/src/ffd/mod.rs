@@ -1,7 +1,8 @@
 //! Free-Form-Deformation non-rigid registration (NiftyReg `reg_f3d` analog,
 //! DESIGN.md S10): the application the paper accelerates. The deformation
 //! model is the cubic B-spline control grid of [`crate::bspline`]; the
-//! similarity is SSD with an optional bending-energy regularizer; the
+//! similarity is pluggable ([`Similarity`]: SSD, NCC, or NMI) with an
+//! optional analytic bending-energy regularizer; the
 //! optimizer is gradient ascent with backtracking line search over a
 //! multi-resolution pyramid — NiftyReg's default scheme.
 //!
@@ -90,6 +91,47 @@ impl RegistrationHooks {
     }
 }
 
+/// Similarity metric driving the fused cost/gradient passes
+/// (`ffd::workspace`). All three run inside the same fused
+/// interpolate→warp→similarity pass and honor the repo's determinism
+/// contract: per-slice partial reductions folded in fixed slice order,
+/// bitwise identical to their composed oracles at every thread count
+/// and SIMD ISA.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Similarity {
+    /// Sum of squared differences (mono-modal; the paper's metric).
+    #[default]
+    Ssd,
+    /// Normalized cross-correlation, cost `1 − r` (intensity-affine
+    /// invariant; degenerate inputs map to cost 1.0 — see
+    /// [`similarity::ncc_from_sums`]).
+    Ncc,
+    /// Normalized mutual information (Studholme), cost `2 − NMI`, from a
+    /// deterministic 64²-bin Parzen joint histogram ([`nmi`]).
+    Nmi,
+}
+
+impl Similarity {
+    /// Parse a protocol/CLI name (`ssd` | `ncc` | `nmi`).
+    pub fn parse(s: &str) -> Option<Similarity> {
+        match s {
+            "ssd" => Some(Similarity::Ssd),
+            "ncc" => Some(Similarity::Ncc),
+            "nmi" => Some(Similarity::Nmi),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (CLI/protocol/bench label).
+    pub fn key(&self) -> &'static str {
+        match self {
+            Similarity::Ssd => "ssd",
+            Similarity::Ncc => "ncc",
+            Similarity::Nmi => "nmi",
+        }
+    }
+}
+
 /// Registration hyper-parameters (NiftyReg-flavored defaults).
 #[derive(Clone, Debug)]
 pub struct FfdConfig {
@@ -112,6 +154,8 @@ pub struct FfdConfig {
     /// pool (`FFDREG_THREADS` / machine parallelism). Results are bitwise
     /// identical at every thread count.
     pub threads: usize,
+    /// Similarity metric for the fused cost/gradient passes.
+    pub similarity: Similarity,
 }
 
 impl Default for FfdConfig {
@@ -124,6 +168,7 @@ impl Default for FfdConfig {
             method: Method::Ttli,
             step_tolerance: 0.01,
             threads: 0,
+            similarity: Similarity::Ssd,
         }
     }
 }
@@ -166,7 +211,8 @@ pub struct FfdResult {
     pub field: VectorField,
     /// Floating image resampled into the reference frame.
     pub warped: Volume,
-    /// Final SSD cost.
+    /// Final objective value under the configured [`Similarity`]
+    /// (plus λ·bending when `bending_weight > 0`).
     pub cost: f64,
     pub timing: FfdTiming,
 }

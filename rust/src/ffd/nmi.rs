@@ -1,91 +1,196 @@
 //! Normalized Mutual Information — NiftyReg's default similarity for
 //! multi-modal registration (the paper's §6 pipeline ultimately runs on
 //! NiftyReg's NMI). Implemented with a joint histogram and a Parzen-style
-//! triangular kernel; used here as an *evaluation* metric and as an
-//! alternative similarity for robustness experiments (SSD remains the
-//! optimized objective on the mono-modal synthetic data).
+//! triangular kernel, now a selectable fused-objective similarity
+//! ([`crate::ffd::Similarity::Nmi`]).
+//!
+//! Determinism contract: the joint histogram is *defined* as per-z-slice
+//! partial histograms merged in fixed slice order — [`joint_hist_slice`]
+//! is the single per-voxel accumulation, and both the composed
+//! [`JointHistogram::build`] and the fused workspace pass
+//! (`ffd::workspace`) fold its partials identically, so serial, parallel,
+//! and fused accumulation produce the same bits at every thread count.
 
-// lint:orphan(ok: ROADMAP item — NMI becomes a selectable similarity once
-// the multi-modal objective plumbing lands; kept compiled and tested.)
-
+use crate::util::threadpool::par_map;
 use crate::volume::Volume;
 
-/// Joint histogram of two normalized volumes.
+/// Default bin count (NiftyReg's 64) used by [`nmi`] and the fused pass.
+pub const DEFAULT_BINS: usize = 64;
+
+/// Intensity normalization of one volume, replicating
+/// [`Volume::normalized`]'s per-voxel arithmetic without materializing the
+/// normalized copy: `vn = (v − lo) * scale` with
+/// `scale = 1/(hi−lo)` (or 0 for constant/empty images). The fused pass
+/// computes the warped image's `(lo, hi)` from per-slice partial min/max
+/// folded across slices — f32 min/max of finite values is
+/// order-insensitive, so the result is bitwise equal to the serial
+/// [`Volume::intensity_range`] fold.
+#[derive(Clone, Copy, Debug)]
+pub struct NormParams {
+    /// Minimum intensity.
+    pub lo: f32,
+    /// `1/(hi − lo)`, or 0.0 when the image is constant or empty.
+    pub scale: f32,
+}
+
+impl NormParams {
+    /// Normalization of `v` (serial range scan, the composed path).
+    pub fn of(v: &Volume) -> NormParams {
+        let (lo, hi) = v.intensity_range();
+        NormParams::from_range(lo, hi)
+    }
+
+    /// Normalization from an externally computed min/max (the fused path's
+    /// per-slice fold).
+    pub fn from_range(lo: f32, hi: f32) -> NormParams {
+        NormParams { lo, scale: if hi > lo { 1.0 / (hi - lo) } else { 0.0 } }
+    }
+}
+
+/// Accumulate slice `z`'s bilinear (triangular-kernel) bin contributions
+/// of the pair `(a, b)` into `out` (one `bins²` cell block, row index =
+/// `a`'s bin). THE single per-voxel histogram definition shared by the
+/// composed build and the fused pass.
+pub(crate) fn joint_hist_slice(
+    a: &Volume,
+    b: &Volume,
+    na: NormParams,
+    nb: NormParams,
+    bins: usize,
+    z: usize,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), bins * bins);
+    let plane = a.dims.nx * a.dims.ny;
+    let base = z * plane;
+    let scale = (bins - 1) as f32;
+    for i in base..base + plane {
+        let va = (a.data[i] - na.lo) * na.scale;
+        let vb = (b.data[i] - nb.lo) * nb.scale;
+        let fa = va * scale;
+        let fb = vb * scale;
+        let ia = (fa as usize).min(bins - 2);
+        let ib = (fb as usize).min(bins - 2);
+        let wa = fa - ia as f32;
+        let wb = fb - ib as f32;
+        // Bilinear spread over the 2x2 neighborhood.
+        out[ia * bins + ib] += ((1.0 - wa) * (1.0 - wb)) as f64;
+        out[ia * bins + ib + 1] += ((1.0 - wa) * wb) as f64;
+        out[(ia + 1) * bins + ib] += (wa * (1.0 - wb)) as f64;
+        out[(ia + 1) * bins + ib + 1] += (wa * wb) as f64;
+    }
+}
+
+/// Fold per-slice partial histograms (concatenated `bins²` blocks in slice
+/// order) into `joint`, then normalize to probabilities and fill the
+/// marginals. Returns the pre-normalization weight total (= voxel count in
+/// exact arithmetic: each voxel spreads weights summing to 1). Shared by
+/// the composed and fused paths — identical adds in identical order.
+fn fold_and_normalize(
+    bins: usize,
+    parts: &[f64],
+    joint: &mut [f64],
+    marg_a: &mut [f64],
+    marg_b: &mut [f64],
+) -> f64 {
+    let cells = bins * bins;
+    joint.fill(0.0);
+    for part in parts.chunks_exact(cells) {
+        for (cell, p) in joint.iter_mut().zip(part) {
+            *cell += *p;
+        }
+    }
+    // lint:allow(float-sum): serial single-threaded pass over the
+    // histogram in fixed index order — deterministic by construction.
+    let total: f64 = joint.iter().sum();
+    for p in joint.iter_mut() {
+        *p /= total;
+    }
+    marg_a.fill(0.0);
+    marg_b.fill(0.0);
+    for ia in 0..bins {
+        for ib in 0..bins {
+            marg_a[ia] += joint[ia * bins + ib];
+            marg_b[ib] += joint[ia * bins + ib];
+        }
+    }
+    total
+}
+
+/// `−Σ p·ln p` over positive entries, in fixed index order.
+fn entropy(p: &[f64]) -> f64 {
+    // lint:allow(float-sum): serial single-threaded reduction in fixed
+    // bin order — deterministic by construction.
+    -p.iter().filter(|&&v| v > 0.0).map(|&v| v * v.ln()).sum::<f64>()
+}
+
+/// Studholme NMI from the three entropies; degenerate joint entropy
+/// (constant images) is defined as maximal similarity 2.0.
+fn studholme(ha: f64, hb: f64, hj: f64) -> f64 {
+    if hj <= 0.0 {
+        2.0
+    } else {
+        (ha + hb) / hj
+    }
+}
+
+/// Joint histogram of two volumes (intensities normalized to [0, 1]).
 pub struct JointHistogram {
+    /// Bin count per axis.
     pub bins: usize,
     /// `p[a * bins + b]` — joint probability.
     pub joint: Vec<f64>,
+    /// Marginal of the first volume.
     pub marg_a: Vec<f64>,
+    /// Marginal of the second volume.
     pub marg_b: Vec<f64>,
 }
 
 impl JointHistogram {
     /// Build from two same-shaped volumes with `bins`² cells, linear
-    /// (triangular-kernel) binning for smoothness.
+    /// (triangular-kernel) binning for smoothness. Per-slice partial
+    /// histograms are accumulated in parallel and merged in fixed slice
+    /// order, so the result is bitwise identical at every thread count.
     pub fn build(a: &Volume, b: &Volume, bins: usize) -> JointHistogram {
         assert_eq!(a.dims, b.dims);
         assert!(bins >= 2);
-        let an = a.normalized();
-        let bn = b.normalized();
-        let mut joint = vec![0.0f64; bins * bins];
-        let scale = (bins - 1) as f32;
-        for (&va, &vb) in an.data.iter().zip(&bn.data) {
-            let fa = va * scale;
-            let fb = vb * scale;
-            let ia = (fa as usize).min(bins - 2);
-            let ib = (fb as usize).min(bins - 2);
-            let wa = fa - ia as f32;
-            let wb = fb - ib as f32;
-            // Bilinear spread over the 2x2 neighborhood.
-            joint[ia * bins + ib] += ((1.0 - wa) * (1.0 - wb)) as f64;
-            joint[ia * bins + ib + 1] += ((1.0 - wa) * wb) as f64;
-            joint[(ia + 1) * bins + ib] += (wa * (1.0 - wb)) as f64;
-            joint[(ia + 1) * bins + ib + 1] += (wa * wb) as f64;
+        let na = NormParams::of(a);
+        let nb = NormParams::of(b);
+        let cells = bins * bins;
+        let parts = par_map(a.dims.nz, |z| {
+            let mut h = vec![0.0f64; cells];
+            joint_hist_slice(a, b, na, nb, bins, z, &mut h);
+            h
+        });
+        let mut flat = vec![0.0f64; a.dims.nz * cells];
+        for (dst, part) in flat.chunks_exact_mut(cells).zip(&parts) {
+            dst.copy_from_slice(part);
         }
-        // lint:allow(float-sum): serial single-threaded pass over the
-        // histogram in fixed index order — deterministic by construction.
-        let total: f64 = joint.iter().sum();
-        for p in &mut joint {
-            *p /= total;
-        }
+        let mut joint = vec![0.0f64; cells];
         let mut marg_a = vec![0.0f64; bins];
         let mut marg_b = vec![0.0f64; bins];
-        for ia in 0..bins {
-            for ib in 0..bins {
-                marg_a[ia] += joint[ia * bins + ib];
-                marg_b[ib] += joint[ia * bins + ib];
-            }
-        }
+        fold_and_normalize(bins, &flat, &mut joint, &mut marg_a, &mut marg_b);
         JointHistogram { bins, joint, marg_a, marg_b }
     }
 
-    fn entropy(p: &[f64]) -> f64 {
-        // lint:allow(float-sum): serial single-threaded reduction in fixed
-        // bin order — deterministic by construction.
-        -p.iter().filter(|&&v| v > 0.0).map(|&v| v * v.ln()).sum::<f64>()
-    }
-
+    /// Marginal entropy of the first volume.
     pub fn entropy_a(&self) -> f64 {
-        Self::entropy(&self.marg_a)
+        entropy(&self.marg_a)
     }
 
+    /// Marginal entropy of the second volume.
     pub fn entropy_b(&self) -> f64 {
-        Self::entropy(&self.marg_b)
+        entropy(&self.marg_b)
     }
 
+    /// Joint entropy.
     pub fn joint_entropy(&self) -> f64 {
-        Self::entropy(&self.joint)
+        entropy(&self.joint)
     }
 
     /// Studholme's normalized mutual information (H(A)+H(B))/H(A,B) ∈ [1,2].
     pub fn nmi(&self) -> f64 {
-        let hj = self.joint_entropy();
-        if hj <= 0.0 {
-            // Degenerate (constant images): define as maximal similarity.
-            2.0
-        } else {
-            (self.entropy_a() + self.entropy_b()) / hj
-        }
+        studholme(self.entropy_a(), self.entropy_b(), self.joint_entropy())
     }
 
     /// Mutual information H(A)+H(B)−H(A,B).
@@ -96,7 +201,139 @@ impl JointHistogram {
 
 /// Convenience: NMI with NiftyReg's default 64 bins.
 pub fn nmi(a: &Volume, b: &Volume) -> f64 {
-    JointHistogram::build(a, b, 64).nmi()
+    JointHistogram::build(a, b, DEFAULT_BINS).nmi()
+}
+
+/// NMI as a minimization cost: `2 − NMI ∈ [0, 1]` (0 = maximally
+/// informative, incl. the degenerate constant-image case). The composed
+/// oracle of the fused NMI pass.
+pub fn nmi_cost(a: &Volume, b: &Volume) -> f64 {
+    2.0 - nmi(a, b)
+}
+
+// ---------------------------------------------------------------------------
+// Workspace scratch: allocation-free histogram + Parzen gradient state
+
+/// Pre-allocated joint-histogram state for the fused NMI passes
+/// (`ffd::workspace`): per-slice partial histograms, the folded joint
+/// probabilities and marginals, and the per-bin ∂NMI/∂p lookup table the
+/// Parzen-window gradient reads per voxel. Sized once per pyramid level —
+/// cost probes and gradient steps allocate nothing.
+pub struct NmiScratch {
+    /// Bin count per axis.
+    pub bins: usize,
+    /// `nz × bins²` per-slice partial histograms (slice-major).
+    slices: Vec<f64>,
+    /// Folded joint probabilities (`bins²`), valid after [`Self::finalize`].
+    pub joint: Vec<f64>,
+    /// Marginal of the reference.
+    pub marg_a: Vec<f64>,
+    /// Marginal of the warped floating image.
+    pub marg_b: Vec<f64>,
+    /// `dl[a*bins+b] = ∂NMI/∂p(a,b)`, valid after
+    /// [`Self::fill_gradient_table`].
+    pub dl: Vec<f64>,
+    /// Pre-normalization weight total of the last [`Self::finalize`].
+    pub total: f64,
+    /// NMI value of the last [`Self::finalize`].
+    pub nmi: f64,
+}
+
+impl NmiScratch {
+    /// Empty scratch for `bins`² histograms (no slice storage yet).
+    pub fn new(bins: usize) -> NmiScratch {
+        assert!(bins >= 2);
+        NmiScratch {
+            bins,
+            slices: Vec::new(),
+            joint: vec![0.0; bins * bins],
+            marg_a: vec![0.0; bins],
+            marg_b: vec![0.0; bins],
+            dl: vec![0.0; bins * bins],
+            total: 0.0,
+            nmi: 0.0,
+        }
+    }
+
+    /// Size the per-slice storage for `nz` slices and zero it — call once
+    /// per cost/gradient pass before accumulating (grows only on pyramid
+    /// level changes; steady-state iterations reuse the allocation).
+    pub fn reset_slices(&mut self, nz: usize) -> &mut [f64] {
+        let want = nz * self.bins * self.bins;
+        if self.slices.len() != want {
+            self.slices.resize(want, 0.0);
+        }
+        self.slices.fill(0.0);
+        &mut self.slices
+    }
+
+    /// Fold the accumulated per-slice partials in slice order, normalize,
+    /// and compute NMI — arithmetic identical to
+    /// [`JointHistogram::build`]. Returns the cost `2 − NMI`.
+    pub fn finalize(&mut self) -> f64 {
+        self.total = fold_and_normalize(
+            self.bins,
+            &self.slices,
+            &mut self.joint,
+            &mut self.marg_a,
+            &mut self.marg_b,
+        );
+        let ha = entropy(&self.marg_a);
+        let hb = entropy(&self.marg_b);
+        let hj = entropy(&self.joint);
+        self.nmi = studholme(ha, hb, hj);
+        2.0 - self.nmi
+    }
+
+    /// Fill `dl[a,b] = ∂NMI/∂p(a,b) = (NMI·(1+ln p(a,b)) − (1+ln pA(a)) −
+    /// (1+ln pB(b))) / H(A,B)` for the Parzen-window gradient. Empty bins
+    /// (and a degenerate joint entropy) get 0 — moving infinitesimal mass
+    /// into a bin the histogram does not populate has no defined slope, so
+    /// the gradient conservatively ignores it.
+    pub fn fill_gradient_table(&mut self) {
+        let bins = self.bins;
+        let hj = entropy(&self.joint);
+        for a in 0..bins {
+            let la = 1.0 + self.marg_a[a].max(f64::MIN_POSITIVE).ln();
+            for b in 0..bins {
+                let pab = self.joint[a * bins + b];
+                self.dl[a * bins + b] = if pab > 0.0 && hj > 0.0 {
+                    let lb = 1.0 + self.marg_b[b].max(f64::MIN_POSITIVE).ln();
+                    (self.nmi * (1.0 + pab.ln()) - la - lb) / hj
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+
+    /// Per-voxel Parzen-window derivative `∂(2−NMI)/∂W(v)` for reference
+    /// intensity `r` and warped intensity `w`, after [`Self::finalize`] +
+    /// [`Self::fill_gradient_table`]. Shifting `w` moves the voxel's
+    /// bilinear bin weights at rate `∂fb/∂w = (bins−1)·nb.scale` along the
+    /// `b` axis; chaining through `p = weight/total` and the `dl` table
+    /// gives the cost slope. Per-voxel pure function → bitwise identical
+    /// at every thread count.
+    #[inline]
+    pub fn cost_dw(&self, r: f32, w: f32, na: NormParams, nb: NormParams) -> f64 {
+        let bins = self.bins;
+        let scale = (bins - 1) as f32;
+        let fa = (r - na.lo) * na.scale * scale;
+        let fb = (w - nb.lo) * nb.scale * scale;
+        let ia = (fa as usize).min(bins - 2);
+        let ib = (fb as usize).min(bins - 2);
+        let wa = (fa - ia as f32) as f64;
+        let dfb = (scale * nb.scale) as f64;
+        let row0 = ia * bins + ib;
+        let row1 = (ia + 1) * bins + ib;
+        let dnmi_dfb = (1.0 - wa) * (self.dl[row0 + 1] - self.dl[row0])
+            + wa * (self.dl[row1 + 1] - self.dl[row1]);
+        if self.total > 0.0 {
+            -(dnmi_dfb * dfb) / self.total
+        } else {
+            0.0
+        }
+    }
 }
 
 #[cfg(test)]
@@ -161,5 +398,69 @@ mod tests {
         let c = Volume::zeros(Dims::new(8, 8, 8), [1.0; 3]);
         let n = nmi(&c, &c);
         assert!(n.is_finite());
+        assert_eq!(nmi_cost(&c, &c), 0.0);
+    }
+
+    #[test]
+    fn scratch_path_matches_composed_build_bitwise() {
+        // The NmiScratch accumulate→finalize pipeline IS the histogram
+        // definition; it must agree with JointHistogram::build to the bit.
+        let a = textured(7);
+        let b = textured(8);
+        let bins = 16;
+        let h = JointHistogram::build(&a, &b, bins);
+        let mut s = NmiScratch::new(bins);
+        let na = NormParams::of(&a);
+        let nb = NormParams::of(&b);
+        let cells = bins * bins;
+        let slices = s.reset_slices(a.dims.nz);
+        for z in 0..a.dims.nz {
+            joint_hist_slice(&a, &b, na, nb, bins, z, &mut slices[z * cells..(z + 1) * cells]);
+        }
+        let cost = s.finalize();
+        assert_eq!(cost.to_bits(), (2.0 - h.nmi()).to_bits());
+        for (x, y) in s.joint.iter().zip(&h.joint) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn parzen_gradient_matches_finite_differences_of_nmi_cost() {
+        // Perturb one voxel's warped intensity and compare cost_dw against
+        // the central finite difference of the full nmi_cost pipeline.
+        let a = textured(9);
+        let mut b = textured(10);
+        let bins = 32;
+        let na = NormParams::of(&a);
+        let nb = NormParams::of(&b);
+        let mut s = NmiScratch::new(bins);
+        let cells = bins * bins;
+        {
+            let slices = s.reset_slices(a.dims.nz);
+            for z in 0..a.dims.nz {
+                joint_hist_slice(&a, &b, na, nb, bins, z, &mut slices[z * cells..(z + 1) * cells]);
+            }
+        }
+        s.finalize();
+        s.fill_gradient_table();
+        let i = a.dims.idx(8, 8, 8);
+        let analytic = s.cost_dw(a.data[i], b.data[i], na, nb);
+        // FD with the *same* normalization params (h is small enough not
+        // to shift the global min/max of this textured volume).
+        let h = 1e-3f32;
+        let orig = b.data[i];
+        let mut cost_at = |v: f32| {
+            b.data[i] = v;
+            let hist = JointHistogram::build(&a, &b, bins);
+            2.0 - hist.nmi()
+        };
+        let cp = cost_at(orig + h);
+        let cm = cost_at(orig - h);
+        b.data[i] = orig;
+        let fd = (cp - cm) / (2.0 * h as f64);
+        assert!(
+            (analytic - fd).abs() < 0.25 * fd.abs().max(1e-7),
+            "analytic {analytic} vs fd {fd}"
+        );
     }
 }

@@ -47,8 +47,54 @@ pub fn ssd(reference: &Volume, warped: &Volume) -> f64 {
     total / n as f64
 }
 
-/// Normalized cross-correlation (global). Same deterministic per-slice
-/// reduction scheme as [`ssd`].
+/// Per-slice partial of the five NCC raw sums `[Σr, Σw, Σrw, Σr², Σw²]`
+/// over slice `z` — the exact per-voxel accumulation (and accumulator
+/// order) the fused NCC cost pass replicates (see `ffd::workspace`).
+pub(crate) fn ncc_slice_sums(reference: &Volume, warped: &Volume, z: usize) -> [f64; 5] {
+    let plane = reference.dims.nx * reference.dims.ny;
+    let base = z * plane;
+    let mut s = [0.0f64; 5];
+    for i in base..base + plane {
+        let r = reference.data[i] as f64;
+        let w = warped.data[i] as f64;
+        s[0] += r;
+        s[1] += w;
+        s[2] += r * w;
+        s[3] += r * r;
+        s[4] += w * w;
+    }
+    s
+}
+
+/// Finish a normalized cross-correlation from the five raw sums
+/// `[Σr, Σw, Σrw, Σr², Σw²]` over `n` voxels — the single definition of
+/// the NCC arithmetic shared by the composed [`ncc`] oracle and the fused
+/// pass, so both produce identical bits from identical sums.
+///
+/// Returns `None` when the correlation is undefined: `n == 0`, or either
+/// image has zero variance (including negative variance estimates from
+/// floating-point cancellation, clamped into the degenerate case).
+pub fn ncc_from_sums(n: f64, s: [f64; 5]) -> Option<f64> {
+    if n <= 0.0 {
+        return None;
+    }
+    let [sr, sw, srw, srr, sww] = s;
+    let mr = sr / n;
+    let mw = sw / n;
+    // Raw-sum (König) forms: cov = Σrw − Σr·mw, vr = Σr² − Σr·mr, …
+    let cov = srw - sr * mw;
+    let vr = srr - sr * mr;
+    let vw = sww - sw * mw;
+    if vr <= 0.0 || vw <= 0.0 {
+        return None;
+    }
+    Some(cov / (vr * vw).sqrt())
+}
+
+/// Normalized cross-correlation (global), computed as five per-slice raw
+/// sums merged in fixed slice order — the same deterministic per-slice
+/// reduction scheme as [`ssd`], and the composed oracle the fused NCC
+/// pass is held bit-identical to.
 ///
 /// Returns `None` when the correlation is undefined — empty volumes, or
 /// either image having zero variance (a constant image correlates with
@@ -61,45 +107,26 @@ pub fn ncc(reference: &Volume, warped: &Volume) -> Option<f64> {
         return None;
     }
     let n = reference.data.len() as f64;
-    let dims = reference.dims;
-    let plane = dims.nx * dims.ny;
-    let sums = par_map(dims.nz, |z| {
-        let base = z * plane;
-        let (mut sr, mut sw) = (0.0f64, 0.0f64);
-        for i in base..base + plane {
-            sr += reference.data[i] as f64;
-            sw += warped.data[i] as f64;
-        }
-        [sr, sw]
-    });
-    let (mut sr, mut sw) = (0.0f64, 0.0f64);
+    let sums = par_map(reference.dims.nz, |z| ncc_slice_sums(reference, warped, z));
+    let mut acc = [0.0f64; 5];
     for s in &sums {
-        sr += s[0];
-        sw += s[1];
-    }
-    let (mr, mw) = (sr / n, sw / n);
-    let moments = par_map(dims.nz, |z| {
-        let base = z * plane;
-        let (mut cov, mut vr, mut vw) = (0.0f64, 0.0f64, 0.0f64);
-        for i in base..base + plane {
-            let dr = reference.data[i] as f64 - mr;
-            let dw = warped.data[i] as f64 - mw;
-            cov += dr * dw;
-            vr += dr * dr;
-            vw += dw * dw;
+        for k in 0..5 {
+            acc[k] += s[k];
         }
-        [cov, vr, vw]
-    });
-    let (mut cov, mut vr, mut vw) = (0.0f64, 0.0f64, 0.0f64);
-    for m in &moments {
-        cov += m[0];
-        vr += m[1];
-        vw += m[2];
     }
-    if vr <= 0.0 || vw <= 0.0 {
-        return None;
+    ncc_from_sums(n, acc)
+}
+
+/// NCC as a minimization cost: `1 − r` (0 = perfectly correlated, 2 =
+/// perfectly anti-correlated). Degenerate inputs — where [`ncc`] is
+/// `None` — map to the defined cost `1.0` ("no correlation evidence"),
+/// never NaN: a constant-intensity trial warp must produce a finite,
+/// comparable cost inside the optimizer's line search.
+pub fn ncc_cost(reference: &Volume, warped: &Volume) -> f64 {
+    match ncc(reference, warped) {
+        Some(r) => 1.0 - r,
+        None => 1.0,
     }
-    Some(cov / (vr * vw).sqrt())
 }
 
 /// Voxelwise SSD gradient with respect to the deformation field:
@@ -196,6 +223,26 @@ mod tests {
         });
         let r = ncc(&v, &checker).expect("both images have variance");
         assert!(r.abs() < 0.2, "checker vs ramp should be ~uncorrelated, got {r}");
+    }
+
+    #[test]
+    fn ncc_cost_is_defined_for_degenerate_inputs() {
+        let v = ramp();
+        let flat = Volume::from_fn(Dims::new(10, 10, 10), [1.0; 3], |_, _, _| 4.25);
+        let empty = Volume::from_fn(Dims::new(0, 0, 0), [1.0; 3], |_, _, _| 0.0);
+        // Constant reference, constant floating, and empty overlap all map
+        // to the defined "no correlation evidence" cost — finite, never NaN.
+        assert_eq!(ncc_cost(&flat, &v), 1.0);
+        assert_eq!(ncc_cost(&v, &flat), 1.0);
+        assert_eq!(ncc_cost(&flat, &flat), 1.0);
+        assert_eq!(ncc_cost(&empty, &empty), 1.0);
+        // Well-posed inputs: cost = 1 − r.
+        let mut w = v.clone();
+        for d in &mut w.data {
+            *d = 2.0 * *d - 3.0;
+        }
+        let c = ncc_cost(&v, &w);
+        assert!(c.is_finite() && c < 1e-9, "affine pair should cost ~0, got {c}");
     }
 
     #[test]

@@ -7,19 +7,31 @@
 //! [`LevelWorkspace`] through the optimizers so iterations and line-search
 //! trials allocate nothing, and fuses
 //!
-//! * interpolate → warp → SSD into **one** chunked pass for cost probes —
-//!   a line-search trial only needs a scalar, so the warped volume is
-//!   never materialized; and
-//! * interpolate → warp (pass 1) and ∇W → SSD-voxel-gradient (pass 2)
-//!   for the gradient step — the spatial-gradient field is never
-//!   materialized, and the SSD objective falls out of pass 1 for free.
+//! * interpolate → warp → similarity into **one** chunked pass for cost
+//!   probes — a line-search trial only needs a scalar, so SSD/NCC probes
+//!   never materialize the warped volume (NMI needs it for the joint
+//!   histogram and reuses the workspace's warped scratch); and
+//! * interpolate → warp (pass 1) and ∇W · ∂cost/∂W (pass 2) for the
+//!   gradient step — the spatial-gradient field is never materialized, and
+//!   the similarity objective falls out of pass 1 for free.
+//!
+//! The similarity is a strategy ([`Similarity`]), fixed per workspace:
+//!
+//! * **SSD** — per-slice `Σ(R−W)²` partials (the original fused metric);
+//! * **NCC** — per-slice five raw sums `[Σr, Σw, Σrw, Σr², Σw²]` finished
+//!   by [`ncc_from_sums`]; gradient via the closed-form
+//!   `∂(1−r)/∂W(v) = −[(R(v)−m_R) − (cov/v_W)(W(v)−m_W)]/√(v_R·v_W)`;
+//! * **NMI** — deterministic per-slice partial joint histograms
+//!   ([`nmi::NmiScratch`]) folded in slice order, Parzen-window gradient
+//!   through the `∂NMI/∂p` table ([`NmiScratch::cost_dw`]).
 //!
 //! **Bit-identity contract**: every fused kernel replicates the per-voxel
-//! arithmetic of the composed `interpolate` → [`warp`] → [`ssd`] /
-//! [`ssd_voxel_gradient`] oracle exactly, and every reduction is
-//! accumulated per z-slice and folded in slice order — so results are
-//! bitwise identical to the composed path at every thread count
-//! (property-tested in `tests/ffd_fused.rs`).
+//! arithmetic of the composed `interpolate` → [`warp`] → similarity
+//! ([`ssd`] / [`ncc_cost`] / [`nmi_cost`]) oracle exactly, and every
+//! reduction is accumulated per z-slice and folded in slice order — so
+//! results are bitwise identical to the composed path at every thread
+//! count (property-tested in `tests/ffd_fused.rs` and
+//! `tests/similarity_conformance.rs`).
 //!
 //! Threading: the workspace owns one [`WorkerPool`] sized by
 //! [`FfdConfig::threads`] (0 = the process-default pool) and every fused
@@ -28,7 +40,9 @@
 //!
 //! [`warp`]: crate::volume::resample::warp
 //! [`ssd`]: super::similarity::ssd
-//! [`ssd_voxel_gradient`]: super::similarity::ssd_voxel_gradient
+//! [`ncc_cost`]: super::similarity::ncc_cost
+//! [`nmi_cost`]: super::nmi::nmi_cost
+//! [`ncc_from_sums`]: super::similarity::ncc_from_sums
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -36,7 +50,9 @@ use std::time::Instant;
 
 use super::bending::{bending_energy, bending_gradient_into};
 use super::gradient::{voxel_to_cp_gradient_into, AdjointScratch};
-use super::{FfdConfig, FfdTiming};
+use super::nmi::{self, NmiScratch, NormParams};
+use super::similarity::ncc_from_sums;
+use super::{FfdConfig, FfdTiming, Similarity};
 use crate::bspline::exec::{self, WorkerPool};
 use crate::bspline::{ControlGrid, Interpolator, Method};
 use crate::util::trace;
@@ -49,11 +65,13 @@ use crate::volume::{Dims, VectorField, Volume};
 /// iteration loop.
 pub struct LevelWorkspace {
     pool: Arc<WorkerPool>,
+    /// Similarity metric the fused passes compute (fixed per workspace).
+    sim: Similarity,
     /// Dense deformation field scratch (reference lattice).
     field: VectorField,
-    /// Warped floating image scratch (gradient step only).
+    /// Warped floating image scratch (gradient step; NMI cost probes too).
     warped: Volume,
-    /// Voxelwise SSD gradient scratch.
+    /// Voxelwise similarity-gradient scratch.
     vg: VectorField,
     /// Line-search trial grid.
     trial: ControlGrid,
@@ -62,19 +80,30 @@ pub struct LevelWorkspace {
     /// Bending-energy gradient scratch.
     bg: ControlGrid,
     adj: AdjointScratch,
-    /// Per-z-slice reduction slots (SSD partials).
+    /// Per-z-slice reduction slots, [`Similarity`]-strided: 1 `f64` per
+    /// slice for SSD partials, 5 for the NCC raw sums, 4 for the NMI
+    /// reference/warped min/max.
     slice_acc: Vec<f64>,
+    /// Joint-histogram scratch, created on first use by an NMI pass.
+    nmi: Option<NmiScratch>,
 }
 
 impl LevelWorkspace {
-    /// Workspace for one registration run, pool sized by `cfg.threads`.
+    /// Workspace for one registration run: pool sized by `cfg.threads`,
+    /// fused passes computing `cfg.similarity`.
     pub fn new(cfg: &FfdConfig) -> LevelWorkspace {
-        LevelWorkspace::for_threads(cfg.threads)
+        LevelWorkspace::with_similarity(cfg.threads, cfg.similarity)
     }
 
-    /// Workspace whose fused passes fan across `threads` workers (0 = the
-    /// process-default pool).
+    /// SSD workspace whose fused passes fan across `threads` workers (0 =
+    /// the process-default pool).
     pub fn for_threads(threads: usize) -> LevelWorkspace {
+        LevelWorkspace::with_similarity(threads, Similarity::Ssd)
+    }
+
+    /// Workspace computing `sim` across `threads` workers (0 = the
+    /// process-default pool).
+    pub fn with_similarity(threads: usize, sim: Similarity) -> LevelWorkspace {
         let pool = if threads > 0 {
             Arc::new(WorkerPool::new(threads))
         } else {
@@ -82,6 +111,7 @@ impl LevelWorkspace {
         };
         LevelWorkspace {
             pool,
+            sim,
             field: VectorField::zeros(Dims::new(0, 0, 0)),
             warped: Volume::zeros(Dims::new(0, 0, 0), [1.0; 3]),
             vg: VectorField::zeros(Dims::new(0, 0, 0)),
@@ -90,12 +120,18 @@ impl LevelWorkspace {
             bg: ControlGrid::zeros(Dims::new(1, 1, 1), [1, 1, 1]),
             adj: AdjointScratch::default(),
             slice_acc: Vec::new(),
+            nmi: None,
         }
     }
 
     /// Workers the fused passes fan across.
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// The similarity metric this workspace's fused passes compute.
+    pub fn similarity(&self) -> Similarity {
+        self.sim
     }
 
     /// An interpolator bound to this workspace's pool — the
@@ -115,6 +151,15 @@ impl LevelWorkspace {
         &self.trial
     }
 
+    /// Per-slice `f64` reduction slots the metric's fused pass needs.
+    fn acc_stride(&self) -> usize {
+        match self.sim {
+            Similarity::Ssd => 1,
+            Similarity::Ncc => 5,
+            Similarity::Nmi => 4,
+        }
+    }
+
     /// Size every buffer for one pyramid level (idempotent: reuses
     /// allocations when shapes already match).
     fn ensure_level(&mut self, vol_dims: Dims, grid: &ControlGrid) {
@@ -125,9 +170,10 @@ impl LevelWorkspace {
             self.warped.data.clear();
             self.warped.data.resize(vol_dims.count(), 0.0);
         }
-        if self.slice_acc.len() != vol_dims.nz {
+        let acc = vol_dims.nz * self.acc_stride();
+        if self.slice_acc.len() != acc {
             self.slice_acc.clear();
-            self.slice_acc.resize(vol_dims.nz, 0.0);
+            self.slice_acc.resize(acc, 0.0);
         }
         if self.trial.dims != grid.dims || self.trial.tile != grid.tile {
             self.trial.reshape_zeroed_like(grid);
@@ -161,8 +207,9 @@ impl LevelWorkspace {
         }
     }
 
-    /// Fused objective evaluation for `grid`: SSD via one
-    /// interpolate+warp+reduce pass, plus λ·bending when λ ≠ 0.
+    /// Fused objective evaluation for `grid`: the configured similarity via
+    /// one interpolate+warp+reduce pass (NMI adds its histogram pass), plus
+    /// λ·bending when λ ≠ 0.
     // lint:hot-loop — per-iteration cost probe; all buffers come from the workspace.
     pub fn cost(
         &mut self,
@@ -174,14 +221,31 @@ impl LevelWorkspace {
         timing: &mut FfdTiming,
     ) -> f64 {
         self.ensure_level(reference.dims, grid);
-        let Self { pool, field, slice_acc, .. } = self;
-        let ssd = fused_ssd_pass(pool, imp, grid, reference, floating, field, slice_acc, timing);
-        ssd + regularization_energy(grid, lambda, timing)
+        let sim = match self.sim {
+            Similarity::Ssd => {
+                let Self { pool, field, slice_acc, .. } = self;
+                fused_ssd_pass(pool, imp, grid, reference, floating, field, slice_acc, timing)
+            }
+            Similarity::Ncc => {
+                let Self { pool, field, slice_acc, .. } = self;
+                fused_ncc_pass(pool, imp, grid, reference, floating, field, slice_acc, timing)
+            }
+            Similarity::Nmi => {
+                let Self { pool, field, warped, slice_acc, nmi, .. } = self;
+                let scratch = nmi.get_or_insert_with(|| NmiScratch::new(nmi::DEFAULT_BINS));
+                fused_nmi_eval(
+                    pool, imp, grid, reference, floating, field, warped, slice_acc, scratch,
+                    false, timing,
+                )
+                .0
+            }
+        };
+        sim + regularization_energy(grid, lambda, timing)
     }
 
     /// [`Self::cost`] for the in-place trial grid from [`Self::make_trial`] /
     /// [`Self::make_trial_along`] — the line-search probe: one fused pass,
-    /// no warped volume, no allocation.
+    /// no allocation.
     // lint:hot-loop — line-search probe, runs several times per iteration.
     pub fn trial_cost(
         &mut self,
@@ -192,15 +256,32 @@ impl LevelWorkspace {
         timing: &mut FfdTiming,
     ) -> f64 {
         debug_assert_eq!(self.field.dims, reference.dims, "cost()/gradient first sizes the level");
-        let Self { pool, field, trial, slice_acc, .. } = self;
-        let ssd = fused_ssd_pass(pool, imp, trial, reference, floating, field, slice_acc, timing);
-        let reg = regularization_energy(trial, lambda, timing);
-        ssd + reg
+        let sim = match self.sim {
+            Similarity::Ssd => {
+                let Self { pool, field, trial, slice_acc, .. } = self;
+                fused_ssd_pass(pool, imp, trial, reference, floating, field, slice_acc, timing)
+            }
+            Similarity::Ncc => {
+                let Self { pool, field, trial, slice_acc, .. } = self;
+                fused_ncc_pass(pool, imp, trial, reference, floating, field, slice_acc, timing)
+            }
+            Similarity::Nmi => {
+                let Self { pool, field, warped, trial, slice_acc, nmi, .. } = self;
+                let scratch = nmi.get_or_insert_with(|| NmiScratch::new(nmi::DEFAULT_BINS));
+                fused_nmi_eval(
+                    pool, imp, trial, reference, floating, field, warped, slice_acc, scratch,
+                    false, timing,
+                )
+                .0
+            }
+        };
+        let reg = regularization_energy(&self.trial, lambda, timing);
+        sim + reg
     }
 
     /// Fused objective gradient for `grid` into the workspace's CP-gradient
     /// buffer ([`Self::cg`]): interpolate+warp (pass 1, which also yields
-    /// the SSD objective for free), fused ∇W·SSD-residual (pass 2, no
+    /// the similarity objective), fused ∇W·(∂cost/∂W) (pass 2, no
     /// spatial-gradient field), separable adjoint (pass 3), plus
     /// λ·bending. Returns the objective value at `grid`.
     ///
@@ -226,13 +307,70 @@ impl LevelWorkspace {
         // cannot hold across it, whatever the caller believes.
         let reuse_field = reuse_field && self.field.dims == reference.dims;
         self.ensure_level(reference.dims, grid);
+        let isa = crate::util::simd::active().name();
+
+        // Passes 1+2: metric-specific (fill warped + vg, return objective).
+        let sim = match self.sim {
+            Similarity::Ssd => {
+                self.ssd_gradient_passes(reference, floating, imp, grid, timing, reuse_field, isa)
+            }
+            Similarity::Ncc => {
+                self.ncc_gradient_passes(reference, floating, imp, grid, timing, reuse_field, isa)
+            }
+            Similarity::Nmi => {
+                self.nmi_gradient_passes(reference, floating, imp, grid, timing, reuse_field, isa)
+            }
+        };
+
+        // Pass 3: separable adjoint onto the control points.
+        let t_adj = Instant::now();
+        {
+            let Self { pool, vg, cg, adj, .. } = self;
+            let _span = trace::span("ffd", "ffd.adjoint").arg_str("isa", isa);
+            voxel_to_cp_gradient_into(grid, vg, Some(&**pool), cg, adj);
+        }
+        timing.gradient_s += t_adj.elapsed().as_secs_f64();
+
+        // λ-regularization: energy for the returned objective, gradient
+        // axpy'd onto cg. Skipped entirely when λ == 0.
+        let mut obj = sim;
+        if lambda != 0.0 {
+            let t3 = Instant::now();
+            obj += lambda as f64 * bending_energy(grid);
+            {
+                let Self { cg, bg, .. } = self;
+                bending_gradient_into(grid, bg);
+                for i in 0..cg.len() {
+                    cg.x[i] += lambda * bg.x[i];
+                    cg.y[i] += lambda * bg.y[i];
+                    cg.z[i] += lambda * bg.z[i];
+                }
+            }
+            timing.reg_s += t3.elapsed().as_secs_f64();
+        }
+        obj
+    }
+
+    /// SSD gradient passes 1+2: warp + per-slice SSD partials, then
+    /// `∇W · (−2/N)(R−W)` into `vg`. Returns the SSD objective.
+    // lint:hot-loop — per-iteration gradient passes; workspace buffers only.
+    #[allow(clippy::too_many_arguments)]
+    fn ssd_gradient_passes(
+        &mut self,
+        reference: &Volume,
+        floating: &Volume,
+        imp: &dyn Interpolator,
+        grid: &ControlGrid,
+        timing: &mut FfdTiming,
+        reuse_field: bool,
+        isa: &'static str,
+    ) -> f64 {
         let dims = reference.dims;
         let n = dims.count();
         let nx = dims.nx;
         let ny = dims.ny;
 
         // Pass 1: dense field + warped volume (+ per-slice SSD partials).
-        let isa = crate::util::simd::active().name();
         let t_pass = Instant::now();
         let bsi_ns = AtomicU64::new(0);
         let rest_ns = AtomicU64::new(0);
@@ -306,70 +444,167 @@ impl LevelWorkspace {
         let t2 = Instant::now();
         {
             let Self { pool, warped, vg, slice_acc, .. } = self;
-            let warped_ref: &Volume = warped;
             let scale = -2.0 / n as f32;
-            exec::run_slab_pass3(
+            fused_gradient_pass2(pool, dims, grid.tile[2], reference, warped, vg, slice_acc, isa, |r, w| {
+                scale * (r - w)
+            });
+        }
+        timing.gradient_s += t2.elapsed().as_secs_f64();
+        ssd
+    }
+
+    /// NCC gradient passes 1+2: warp + per-slice five-sum partials, then
+    /// the closed-form `∂(1−r)/∂W` per voxel into `vg` (zero when the
+    /// correlation is degenerate). Returns the NCC cost `1 − r` (1.0 when
+    /// degenerate — same mapping as [`super::similarity::ncc_cost`]).
+    // lint:hot-loop — per-iteration gradient passes; workspace buffers only.
+    #[allow(clippy::too_many_arguments)]
+    fn ncc_gradient_passes(
+        &mut self,
+        reference: &Volume,
+        floating: &Volume,
+        imp: &dyn Interpolator,
+        grid: &ControlGrid,
+        timing: &mut FfdTiming,
+        reuse_field: bool,
+        isa: &'static str,
+    ) -> f64 {
+        let dims = reference.dims;
+        let n = dims.count();
+        let nx = dims.nx;
+        let ny = dims.ny;
+
+        // Pass 1: dense field + warped volume + per-slice five sums.
+        let t_pass = Instant::now();
+        let bsi_ns = AtomicU64::new(0);
+        let rest_ns = AtomicU64::new(0);
+        {
+            let Self { pool, field, warped, slice_acc, .. } = self;
+            exec::run_slab_pass4(
                 pool,
                 dims,
                 grid.tile[2],
-                &mut vg.x,
-                &mut vg.y,
-                &mut vg.z,
+                &mut field.x,
+                &mut field.y,
+                &mut field.z,
+                &mut warped.data,
                 slice_acc,
-                |chunk, gx, gy, gz, _acc| {
-                    let _span = trace::span("ffd", "ffd.chunk.gradient")
-                        .arg_num("z0", chunk.z0 as f64)
-                        .arg_str("isa", isa);
-                    for lz in 0..chunk.len() {
-                        let z = chunk.z0 + lz;
-                        let zi = z as isize;
-                        for y in 0..ny {
-                            let yi = y as isize;
-                            let si = (lz * ny + y) * nx;
-                            let gi = (z * ny + y) * nx;
-                            for x in 0..nx {
-                                // Same per-voxel arithmetic as the composed
-                                // `gradient(warped)` → residual-multiply
-                                // oracle (shared central_diff kernel).
-                                let d = central_diff(warped_ref, x as isize, yi, zi);
-                                let diff = scale
-                                    * (reference.data[gi + x] - warped_ref.data[gi + x]);
-                                gx[si + x] = diff * d[0];
-                                gy[si + x] = diff * d[1];
-                                gz[si + x] = diff * d[2];
-                            }
+                |chunk, sx, sy, sz, sw, acc| {
+                    if !reuse_field {
+                        let t0 = Instant::now();
+                        {
+                            let _span = trace::span("ffd", "ffd.chunk.interpolate")
+                                .arg_num("z0", chunk.z0 as f64)
+                                .arg_str("isa", isa);
+                            imp.interpolate_into(
+                                grid,
+                                dims,
+                                chunk,
+                                exec::FieldSlabMut { x: &mut *sx, y: &mut *sy, z: &mut *sz },
+                            );
+                        }
+                        bsi_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    }
+                    let t1 = Instant::now();
+                    {
+                        let _span = trace::span("ffd", "ffd.chunk.similarity")
+                            .arg_num("z0", chunk.z0 as f64)
+                            .arg_str("isa", isa);
+                        for lz in 0..chunk.len() {
+                            let z = chunk.z0 + lz;
+                            let s = warp_ncc_slice(
+                                reference,
+                                floating,
+                                nx,
+                                ny,
+                                lz,
+                                z,
+                                sx,
+                                sy,
+                                sz,
+                                |i, w| sw[i] = w,
+                            );
+                            acc[lz * 5..lz * 5 + 5].copy_from_slice(&s);
                         }
                     }
+                    rest_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 },
             );
         }
+        attribute_pass(
+            timing,
+            t_pass.elapsed().as_secs_f64(),
+            bsi_ns.load(Ordering::Relaxed),
+            rest_ns.load(Ordering::Relaxed),
+        );
+        let sums = fold_ncc_sums(&self.slice_acc);
 
-        // Pass 3: separable adjoint onto the control points.
+        // Closed-form per-voxel factor: with means m_R/m_W and central sums
+        // cov/v_R/v_W, ∂(1−r)/∂W(v) = −[(R−m_R) − (cov/v_W)(W−m_W)]/√(v_R·v_W).
+        // Degenerate correlation (None) → zero gradient, cost 1.0.
+        let (obj, ka, kb, mr, mw) = match ncc_from_sums(n as f64, sums) {
+            Some(rho) => {
+                let nf = n as f64;
+                let mr = sums[0] / nf;
+                let mw = sums[1] / nf;
+                let cov = sums[2] - sums[0] * mw;
+                let vr = sums[3] - sums[0] * mr;
+                let vw = sums[4] - sums[1] * mw;
+                (1.0 - rho, -1.0 / (vr * vw).sqrt(), cov / vw, mr, mw)
+            }
+            None => (1.0, 0.0, 0.0, 0.0, 0.0),
+        };
+
+        // Pass 2: ∇W · ∂cost/∂W into vg.
+        let t2 = Instant::now();
         {
-            let Self { pool, vg, cg, adj, .. } = self;
-            let _span = trace::span("ffd", "ffd.adjoint").arg_str("isa", isa);
-            voxel_to_cp_gradient_into(grid, vg, Some(&**pool), cg, adj);
+            let Self { pool, warped, vg, slice_acc, .. } = self;
+            fused_gradient_pass2(pool, dims, grid.tile[2], reference, warped, vg, slice_acc, isa, move |r, w| {
+                (ka * ((r as f64 - mr) - kb * (w as f64 - mw))) as f32
+            });
         }
         timing.gradient_s += t2.elapsed().as_secs_f64();
-
-        // λ-regularization: energy for the returned objective, gradient
-        // axpy'd onto cg. Skipped entirely when λ == 0.
-        let mut obj = ssd;
-        if lambda != 0.0 {
-            let t3 = Instant::now();
-            obj += lambda as f64 * bending_energy(grid);
-            {
-                let Self { cg, bg, .. } = self;
-                bending_gradient_into(grid, bg);
-                for i in 0..cg.len() {
-                    cg.x[i] += lambda * bg.x[i];
-                    cg.y[i] += lambda * bg.y[i];
-                    cg.z[i] += lambda * bg.z[i];
-                }
-            }
-            timing.reg_s += t3.elapsed().as_secs_f64();
-        }
         obj
+    }
+
+    /// NMI gradient passes 1+2: warp + deterministic joint histogram
+    /// ([`fused_nmi_eval`]), then the Parzen-window per-voxel slope
+    /// ([`NmiScratch::cost_dw`]) into `vg`. Returns the NMI cost `2 − NMI`.
+    // lint:hot-loop — per-iteration gradient passes; workspace buffers only.
+    #[allow(clippy::too_many_arguments)]
+    fn nmi_gradient_passes(
+        &mut self,
+        reference: &Volume,
+        floating: &Volume,
+        imp: &dyn Interpolator,
+        grid: &ControlGrid,
+        timing: &mut FfdTiming,
+        reuse_field: bool,
+        isa: &'static str,
+    ) -> f64 {
+        if self.nmi.is_none() {
+            self.nmi = Some(NmiScratch::new(nmi::DEFAULT_BINS));
+        }
+        let dims = reference.dims;
+        let Self { pool, field, warped, vg, slice_acc, nmi, .. } = self;
+        let scratch = match nmi.as_mut() {
+            Some(s) => s,
+            None => return 0.0, // unreachable: sized above
+        };
+        let (cost, na, nb) = fused_nmi_eval(
+            pool, imp, grid, reference, floating, field, warped, slice_acc, scratch, reuse_field,
+            timing,
+        );
+
+        // Pass 2: Parzen-window slope × ∇W into vg.
+        let t2 = Instant::now();
+        scratch.fill_gradient_table();
+        let scr: &NmiScratch = scratch;
+        fused_gradient_pass2(pool, dims, grid.tile[2], reference, warped, vg, slice_acc, isa, move |r, w| {
+            scr.cost_dw(r, w, na, nb) as f32
+        });
+        timing.gradient_s += t2.elapsed().as_secs_f64();
+        cost
     }
 }
 
@@ -388,8 +623,8 @@ fn resize_field(f: &mut VectorField, dims: Dims) {
 /// at every displaced voxel, feeds the warped value to `store` (the
 /// gradient pass persists it, cost probes discard it), and returns the
 /// slice's `Σ(R−W)²` partial. This is THE single definition of the fused
-/// per-voxel arithmetic the bit-identity contract lives in — both fused
-/// passes call it, so they cannot diverge from each other or (by
+/// per-voxel arithmetic the SSD bit-identity contract lives in — both
+/// fused passes call it, so they cannot diverge from each other or (by
 /// construction) from the composed `warp`→`ssd` oracle.
 // lint:hot-loop — innermost per-voxel loop of every fused pass.
 #[inline]
@@ -421,6 +656,92 @@ fn warp_ssd_slice(
         }
     }
     s
+}
+
+/// Warp + five-sum NCC partial for one z-slice of a field slab — the fused
+/// twin of [`super::similarity::ncc_slice_sums`]: identical per-voxel
+/// accumulator order `[Σr, Σw, Σrw, Σr², Σw²]` over the slice's flat index
+/// order, so the folded sums (and therefore the finished correlation) are
+/// bitwise equal to the composed `warp`→`ncc` oracle.
+// lint:hot-loop — innermost per-voxel loop of the fused NCC passes.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn warp_ncc_slice(
+    reference: &Volume,
+    floating: &Volume,
+    nx: usize,
+    ny: usize,
+    lz: usize,
+    z: usize,
+    sx: &[f32],
+    sy: &[f32],
+    sz: &[f32],
+    mut store: impl FnMut(usize, f32),
+) -> [f64; 5] {
+    let mut s = [0.0f64; 5];
+    for y in 0..ny {
+        let si = (lz * ny + y) * nx;
+        let gi = (z * ny + y) * nx;
+        for x in 0..nx {
+            let px = x as f32 + sx[si + x];
+            let py = y as f32 + sy[si + x];
+            let pz = z as f32 + sz[si + x];
+            let w = warp_sample(floating, px, py, pz);
+            store(si + x, w);
+            let r = reference.data[gi + x] as f64;
+            let wf = w as f64;
+            s[0] += r;
+            s[1] += wf;
+            s[2] += r * wf;
+            s[3] += r * r;
+            s[4] += wf * wf;
+        }
+    }
+    s
+}
+
+/// Warp + intensity-range partial for one z-slice of a field slab (the
+/// fused NMI pass's first stage): stores every warped value into `sw` and
+/// returns `[min R, max R, min W, max W]` over the slice. f32 min/max of
+/// finite values is order-insensitive, so the slice-fold of these partials
+/// is bitwise equal to the serial [`Volume::intensity_range`] scan the
+/// composed oracle performs.
+// lint:hot-loop — innermost per-voxel loop of the fused NMI pass.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn warp_range_slice(
+    reference: &Volume,
+    floating: &Volume,
+    nx: usize,
+    ny: usize,
+    lz: usize,
+    z: usize,
+    sx: &[f32],
+    sy: &[f32],
+    sz: &[f32],
+    sw: &mut [f32],
+) -> [f64; 4] {
+    let mut rlo = f32::INFINITY;
+    let mut rhi = f32::NEG_INFINITY;
+    let mut wlo = f32::INFINITY;
+    let mut whi = f32::NEG_INFINITY;
+    for y in 0..ny {
+        let si = (lz * ny + y) * nx;
+        let gi = (z * ny + y) * nx;
+        for x in 0..nx {
+            let px = x as f32 + sx[si + x];
+            let py = y as f32 + sy[si + x];
+            let pz = z as f32 + sz[si + x];
+            let w = warp_sample(floating, px, py, pz);
+            sw[si + x] = w;
+            let r = reference.data[gi + x];
+            rlo = rlo.min(r);
+            rhi = rhi.max(r);
+            wlo = wlo.min(w);
+            whi = whi.max(w);
+        }
+    }
+    [rlo as f64, rhi as f64, wlo as f64, whi as f64]
 }
 
 /// λ·bending_energy(grid) — skipped entirely when λ == 0 (the seed paid a
@@ -513,6 +834,279 @@ fn fused_ssd_pass(
     total / n as f64
 }
 
+/// One fused interpolate+warp+NCC pass: fills `field` (scratch) and the
+/// per-slice five-sum partials (stride-5 `slice_acc`), returns the NCC
+/// cost `1 − r` (1.0 for degenerate correlations). Bitwise equal to the
+/// composed `interpolate` → `warp` → [`super::similarity::ncc_cost`]
+/// oracle at every thread count: same per-voxel sums, same slice-order
+/// fold, same [`ncc_from_sums`] finisher.
+// lint:hot-loop — the per-iteration fused pass; scratch comes pre-sized from the workspace.
+#[allow(clippy::too_many_arguments)]
+fn fused_ncc_pass(
+    pool: &WorkerPool,
+    imp: &dyn Interpolator,
+    grid: &ControlGrid,
+    reference: &Volume,
+    floating: &Volume,
+    field: &mut VectorField,
+    slice_acc: &mut [f64],
+    timing: &mut FfdTiming,
+) -> f64 {
+    let dims = reference.dims;
+    debug_assert_eq!(field.dims, dims);
+    let n = dims.count();
+    let nx = dims.nx;
+    let ny = dims.ny;
+    let isa = crate::util::simd::active().name();
+    let t_pass = Instant::now();
+    let bsi_ns = AtomicU64::new(0);
+    let rest_ns = AtomicU64::new(0);
+    exec::run_slab_pass3(
+        pool,
+        dims,
+        grid.tile[2],
+        &mut field.x,
+        &mut field.y,
+        &mut field.z,
+        slice_acc,
+        |chunk, sx, sy, sz, acc| {
+            let t0 = Instant::now();
+            {
+                let _span = trace::span("ffd", "ffd.chunk.interpolate")
+                    .arg_num("z0", chunk.z0 as f64)
+                    .arg_str("isa", isa);
+                imp.interpolate_into(
+                    grid,
+                    dims,
+                    chunk,
+                    exec::FieldSlabMut { x: &mut *sx, y: &mut *sy, z: &mut *sz },
+                );
+            }
+            bsi_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let t1 = Instant::now();
+            {
+                let _span = trace::span("ffd", "ffd.chunk.similarity")
+                    .arg_num("z0", chunk.z0 as f64)
+                    .arg_str("isa", isa);
+                for lz in 0..chunk.len() {
+                    let z = chunk.z0 + lz;
+                    // Cost probes discard the warped values — sums only.
+                    let s = warp_ncc_slice(
+                        reference, floating, nx, ny, lz, z, sx, sy, sz, |_, _| {},
+                    );
+                    acc[lz * 5..lz * 5 + 5].copy_from_slice(&s);
+                }
+            }
+            rest_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        },
+    );
+    attribute_pass(
+        timing,
+        t_pass.elapsed().as_secs_f64(),
+        bsi_ns.load(Ordering::Relaxed),
+        rest_ns.load(Ordering::Relaxed),
+    );
+    match ncc_from_sums(n as f64, fold_ncc_sums(slice_acc)) {
+        Some(r) => 1.0 - r,
+        None => 1.0,
+    }
+}
+
+/// Fold stride-5 per-slice NCC partials in slice order — the same
+/// slice-major, component-inner accumulation as the composed
+/// [`super::similarity::ncc`], so identical partials produce identical
+/// bits.
+fn fold_ncc_sums(slice_acc: &[f64]) -> [f64; 5] {
+    let mut sums = [0.0f64; 5];
+    for sl in slice_acc.chunks_exact(5) {
+        for k in 0..5 {
+            sums[k] += sl[k];
+        }
+    }
+    sums
+}
+
+/// Fused NMI evaluation: pass A interpolates the field (unless
+/// `reuse_field`), warps into the workspace's `warped` buffer and folds
+/// per-slice reference/warped intensity ranges (stride-4 `slice_acc`);
+/// pass B accumulates per-slice partial joint histograms into `scratch`
+/// ([`exec::run_slab_aux`]) and finalizes them in slice order. Returns
+/// `(2 − NMI, NormParams_ref, NormParams_warped)` — bitwise equal to the
+/// composed `interpolate` → `warp` → [`nmi::nmi_cost`] oracle at every
+/// thread count (shared [`nmi::joint_hist_slice`] accumulation, shared
+/// fold).
+// lint:hot-loop — the per-iteration fused NMI passes; scratch grows only on level changes.
+#[allow(clippy::too_many_arguments)]
+fn fused_nmi_eval(
+    pool: &WorkerPool,
+    imp: &dyn Interpolator,
+    grid: &ControlGrid,
+    reference: &Volume,
+    floating: &Volume,
+    field: &mut VectorField,
+    warped: &mut Volume,
+    slice_acc: &mut [f64],
+    scratch: &mut NmiScratch,
+    reuse_field: bool,
+    timing: &mut FfdTiming,
+) -> (f64, NormParams, NormParams) {
+    let dims = reference.dims;
+    debug_assert_eq!(field.dims, dims);
+    let nx = dims.nx;
+    let ny = dims.ny;
+    let isa = crate::util::simd::active().name();
+
+    // Pass A: field + warped volume + per-slice intensity ranges.
+    let t_pass = Instant::now();
+    let bsi_ns = AtomicU64::new(0);
+    let rest_ns = AtomicU64::new(0);
+    exec::run_slab_pass4(
+        pool,
+        dims,
+        grid.tile[2],
+        &mut field.x,
+        &mut field.y,
+        &mut field.z,
+        &mut warped.data,
+        slice_acc,
+        |chunk, sx, sy, sz, sw, acc| {
+            if !reuse_field {
+                let t0 = Instant::now();
+                {
+                    let _span = trace::span("ffd", "ffd.chunk.interpolate")
+                        .arg_num("z0", chunk.z0 as f64)
+                        .arg_str("isa", isa);
+                    imp.interpolate_into(
+                        grid,
+                        dims,
+                        chunk,
+                        exec::FieldSlabMut { x: &mut *sx, y: &mut *sy, z: &mut *sz },
+                    );
+                }
+                bsi_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+            let t1 = Instant::now();
+            {
+                let _span = trace::span("ffd", "ffd.chunk.warp")
+                    .arg_num("z0", chunk.z0 as f64)
+                    .arg_str("isa", isa);
+                for lz in 0..chunk.len() {
+                    let z = chunk.z0 + lz;
+                    let r = warp_range_slice(reference, floating, nx, ny, lz, z, sx, sy, sz, sw);
+                    acc[lz * 4..lz * 4 + 4].copy_from_slice(&r);
+                }
+            }
+            rest_ns.fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        },
+    );
+    attribute_pass(
+        timing,
+        t_pass.elapsed().as_secs_f64(),
+        bsi_ns.load(Ordering::Relaxed),
+        rest_ns.load(Ordering::Relaxed),
+    );
+
+    // Fold the per-slice ranges (order-insensitive min/max — bitwise equal
+    // to the serial whole-volume scan).
+    let mut rlo = f64::INFINITY;
+    let mut rhi = f64::NEG_INFINITY;
+    let mut wlo = f64::INFINITY;
+    let mut whi = f64::NEG_INFINITY;
+    for sl in slice_acc.chunks_exact(4) {
+        rlo = rlo.min(sl[0]);
+        rhi = rhi.max(sl[1]);
+        wlo = wlo.min(sl[2]);
+        whi = whi.max(sl[3]);
+    }
+    let na = NormParams::from_range(rlo as f32, rhi as f32);
+    let nb = NormParams::from_range(wlo as f32, whi as f32);
+
+    // Pass B: per-slice partial joint histograms, folded in slice order.
+    let t_hist = Instant::now();
+    let bins = scratch.bins;
+    let cells = bins * bins;
+    let blocks = scratch.reset_slices(dims.nz);
+    let warped_ref: &Volume = warped;
+    exec::run_slab_aux(pool, dims.nz, grid.tile[2], blocks, |chunk, out| {
+        let _span = trace::span("ffd", "ffd.chunk.histogram")
+            .arg_num("z0", chunk.z0 as f64)
+            .arg_str("isa", isa);
+        for lz in 0..chunk.len() {
+            let z = chunk.z0 + lz;
+            nmi::joint_hist_slice(
+                reference,
+                warped_ref,
+                na,
+                nb,
+                bins,
+                z,
+                &mut out[lz * cells..(lz + 1) * cells],
+            );
+        }
+    });
+    let cost = scratch.finalize();
+    timing.warp_s += t_hist.elapsed().as_secs_f64();
+    (cost, na, nb)
+}
+
+/// Pass 2 of every gradient step: `vg(v) = ∇W(v) · scalar(R(v), W(v))`,
+/// with ∇W the shared [`central_diff`] kernel over the warped volume pass
+/// 1 filled, and `scalar` the metric's per-voxel ∂cost/∂W factor.
+/// Per-voxel values are independent and `scalar` is a pure function of
+/// voxel data plus precomputed globals, so the result is bitwise identical
+/// at every thread count.
+// lint:hot-loop — the per-iteration voxel-gradient pass; buffers pre-sized by the workspace.
+#[allow(clippy::too_many_arguments)]
+fn fused_gradient_pass2<S>(
+    pool: &WorkerPool,
+    dims: Dims,
+    gran: usize,
+    reference: &Volume,
+    warped: &Volume,
+    vg: &mut VectorField,
+    slice_acc: &mut [f64],
+    isa: &str,
+    scalar: S,
+) where
+    S: Fn(f32, f32) -> f32 + Sync,
+{
+    let nx = dims.nx;
+    let ny = dims.ny;
+    exec::run_slab_pass3(
+        pool,
+        dims,
+        gran,
+        &mut vg.x,
+        &mut vg.y,
+        &mut vg.z,
+        slice_acc,
+        |chunk, gx, gy, gz, _acc| {
+            let _span = trace::span("ffd", "ffd.chunk.gradient")
+                .arg_num("z0", chunk.z0 as f64)
+                .arg_str("isa", isa);
+            for lz in 0..chunk.len() {
+                let z = chunk.z0 + lz;
+                let zi = z as isize;
+                for y in 0..ny {
+                    let yi = y as isize;
+                    let si = (lz * ny + y) * nx;
+                    let gi = (z * ny + y) * nx;
+                    for x in 0..nx {
+                        // Same per-voxel arithmetic as the composed
+                        // `gradient(warped)` → scalar-multiply oracle
+                        // (shared central_diff kernel).
+                        let d = central_diff(warped, x as isize, yi, zi);
+                        let s = scalar(reference.data[gi + x], warped.data[gi + x]);
+                        gx[si + x] = s * d[0];
+                        gy[si + x] = s * d[1];
+                        gz[si + x] = s * d[2];
+                    }
+                }
+            }
+        },
+    );
+}
+
 /// Split a fused pass's wall time between BSI and warp/reduce by the
 /// measured busy-share of its chunks. `FfdTiming`'s contract is wall
 /// clock, so the per-chunk CPU nanos are only used as the split ratio —
@@ -533,7 +1127,8 @@ fn attribute_pass(timing: &mut FfdTiming, wall_s: f64, bsi_ns: u64, rest_ns: u64
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ffd::similarity::{ssd, ssd_voxel_gradient};
+    use crate::ffd::nmi::nmi_cost;
+    use crate::ffd::similarity::{ncc_cost, ssd, ssd_voxel_gradient};
     use crate::volume::resample::warp;
 
     fn blob(dims: Dims, cx: f32) -> Volume {
@@ -564,6 +1159,72 @@ mod tests {
             let c = ws.cost(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing);
             assert_eq!(c.to_bits(), oracle.to_bits(), "threads={threads}");
         }
+    }
+
+    #[test]
+    fn fused_ncc_cost_matches_composed_pipeline() {
+        let dims = Dims::new(21, 20, 19);
+        let reference = blob(dims, 10.0);
+        let floating = blob(dims, 11.5);
+        let mut grid = ControlGrid::zeros(dims, [5, 5, 5]);
+        grid.randomize(5, 1.5);
+        let imp = Method::Ttli.instance();
+        let oracle = {
+            let f = imp.interpolate(&grid, dims);
+            let w = warp(&floating, &f);
+            ncc_cost(&reference, &w)
+        };
+        for threads in [1usize, 3] {
+            let mut ws = LevelWorkspace::with_similarity(threads, Similarity::Ncc);
+            let mut timing = FfdTiming::default();
+            let c = ws.cost(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing);
+            assert_eq!(c.to_bits(), oracle.to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_nmi_cost_matches_composed_pipeline() {
+        let dims = Dims::new(21, 20, 19);
+        let reference = blob(dims, 10.0);
+        let floating = blob(dims, 11.5);
+        let mut grid = ControlGrid::zeros(dims, [5, 5, 5]);
+        grid.randomize(7, 1.5);
+        let imp = Method::Ttli.instance();
+        let oracle = {
+            let f = imp.interpolate(&grid, dims);
+            let w = warp(&floating, &f);
+            nmi_cost(&reference, &w)
+        };
+        for threads in [1usize, 3] {
+            let mut ws = LevelWorkspace::with_similarity(threads, Similarity::Nmi);
+            let mut timing = FfdTiming::default();
+            let c = ws.cost(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing);
+            assert_eq!(c.to_bits(), oracle.to_bits(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fused_ncc_handles_constant_reference_without_nan() {
+        // Degenerate correlation: constant reference → defined cost 1.0 and
+        // an exactly-zero gradient, never NaN (regression for the latent
+        // unwrap-on-variance bug the Similarity refactor fixed).
+        let dims = Dims::new(12, 12, 12);
+        let reference = Volume::from_fn(dims, [1.0; 3], |_, _, _| 4.25);
+        let floating = blob(dims, 6.0);
+        let mut grid = ControlGrid::zeros(dims, [4, 4, 4]);
+        grid.randomize(9, 0.5);
+        let imp = Method::Ttli.instance();
+        let mut ws = LevelWorkspace::with_similarity(2, Similarity::Ncc);
+        let mut timing = FfdTiming::default();
+        let c = ws.cost(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing);
+        assert_eq!(c, 1.0);
+        let g = ws.objective_gradient(
+            &reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing, false,
+        );
+        assert_eq!(g, 1.0);
+        assert!(ws.cg().x.iter().all(|v| *v == 0.0), "degenerate NCC gradient must be zero");
+        assert!(ws.cg().y.iter().all(|v| *v == 0.0));
+        assert!(ws.cg().z.iter().all(|v| *v == 0.0));
     }
 
     #[test]

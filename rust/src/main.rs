@@ -72,7 +72,8 @@ USAGE: ffdreg <command> [flags]
                [--tile 5] [--seed 1] [--check] [--threads N]
                [--input VOLUME] [--out WARPED] [--trace-out TRACE.json]
   register     --reference A --floating B [--out warped.nii]
-               [--method M] [--levels 3] [--iters 60] [--tile 5] [--be 0.001]
+               [--method M] [--similarity ssd|ncc|nmi] [--levels 3]
+               [--iters 60] [--tile 5] [--be 0.001]
                [--threads N] [--no-affine] [--config cfg.json]
                [--trace-out TRACE.json]
   affine       --reference A --floating B [--out warped.nii]
@@ -82,7 +83,8 @@ USAGE: ffdreg <command> [flags]
                [--addr HOST:PORT]
                upload   --input VOLUME
                register --reference REF --floating FLO [--async] [--watch]
-                        [--store-warped] [--method M] [--levels N] [--iters N]
+                        [--store-warped] [--method M]
+                        [--similarity ssd|ncc|nmi] [--levels N] [--iters N]
                         [--threads N] [--out SERVER_PATH]
                         [--trace-out TRACE.json]
                job/watch/cancel --id N    fetch --volume vol:HASH --out FILE
@@ -318,11 +320,12 @@ fn cmd_register(args: &Args) -> Result<(), Error> {
         cfg.ffd.threads.to_string()
     };
     println!(
-        "registering {}x{}x{} (method {}, levels {}, tile {:?}, be {}, threads {threads_label})",
+        "registering {}x{}x{} (method {}, similarity {}, levels {}, tile {:?}, be {}, threads {threads_label})",
         reference.dims.nx,
         reference.dims.ny,
         reference.dims.nz,
         cfg.ffd.method.key(),
+        cfg.ffd.similarity.key(),
         cfg.ffd.levels,
         cfg.ffd.tile,
         cfg.ffd.bending_weight
@@ -563,6 +566,9 @@ fn cmd_client(args: &Args) -> Result<(), Error> {
             ];
             if let Some(m) = args.get("method") {
                 pairs.push(("method", Json::Str(m.into())));
+            }
+            if let Some(s) = args.get("similarity") {
+                pairs.push(("similarity", Json::Str(s.into())));
             }
             if let Some(o) = args.get("out") {
                 pairs.push(("out", Json::Str(o.into())));

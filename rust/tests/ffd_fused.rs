@@ -8,7 +8,7 @@ use ffdreg::ffd::bending::{bending_energy, bending_gradient};
 use ffdreg::ffd::gradient::voxel_to_cp_gradient;
 use ffdreg::ffd::similarity::{ncc, ssd, ssd_voxel_gradient};
 use ffdreg::ffd::workspace::LevelWorkspace;
-use ffdreg::ffd::{optimizer, register, FfdConfig, FfdTiming};
+use ffdreg::ffd::{optimizer, register, FfdConfig, FfdTiming, Similarity};
 use ffdreg::volume::resample::{gradient, warp};
 use ffdreg::volume::{Dims, Volume};
 
@@ -119,6 +119,7 @@ fn registration_thread_count_bit_identity() {
         method: Method::Ttli,
         step_tolerance: 0.01,
         threads: 1,
+        similarity: Similarity::Ssd,
     };
     let a = register(&reference, &floating, &base);
     for threads in [2usize, 4] {
@@ -163,6 +164,7 @@ fn step_regrows_after_early_backtrack() {
         method: Method::Ttli,
         step_tolerance: 1e-4,
         threads: 0,
+        similarity: Similarity::Ssd,
     };
     // Accepted step of iteration k = L∞ difference between the grids after
     // k and k−1 iterations (the step is L∞-normalized, so the largest CP
@@ -221,6 +223,7 @@ fn lambda_zero_spends_no_regularization_time() {
             method: Method::Ttli,
             step_tolerance: 0.001,
             threads: 0,
+            similarity: Similarity::Ssd,
         };
         let mut grid = ControlGrid::zeros(dims, [5, 5, 5]);
         let mut timing = FfdTiming::default();
@@ -315,6 +318,7 @@ fn register_op_threads_field_is_bitwise_neutral() {
             reference: VolumeRef::Path(rp.clone()),
             floating: VolumeRef::Path(fp.clone()),
             method: Method::Ttli,
+            similarity: Similarity::Ssd,
             levels: 1,
             iters: 4,
             threads,

@@ -73,6 +73,40 @@ fn every_error_literal_in_the_handlers_is_declared() {
 }
 
 #[test]
+fn register_similarity_field_is_parsed_documented_and_echoed() {
+    // The register op's `similarity` field: server.rs must actually parse
+    // it, PROTOCOL.md must document it with every accepted metric name,
+    // and the result payload must echo it (sync response + done-state
+    // table) so clients can tell which objective `cost` is measured in.
+    assert!(
+        SERVER_RS.contains("req.get(\"similarity\")"),
+        "server.rs no longer parses the register op's similarity field"
+    );
+    assert!(
+        SERVER_RS.contains("Json::Str(r.similarity.into())"),
+        "server.rs no longer echoes similarity in register results"
+    );
+    for name in ["ssd", "ncc", "nmi"] {
+        assert!(
+            ffdreg::ffd::Similarity::parse(name).is_some(),
+            "metric '{name}' is documented but no longer parseable"
+        );
+        assert!(
+            PROTOCOL_MD.contains(&format!("`{name}`")),
+            "PROTOCOL.md lacks the `{name}` similarity name"
+        );
+    }
+    assert!(
+        PROTOCOL_MD.contains("`similarity`"),
+        "PROTOCOL.md lacks the register op's `similarity` field"
+    );
+    assert!(
+        PROTOCOL_MD.contains("\"similarity\":\"nmi\""),
+        "PROTOCOL.md lacks a worked register example selecting a non-default metric"
+    );
+}
+
+#[test]
 fn trace_drop_counter_is_registered_documented_and_scraped() {
     // Silent span loss must be observable: the trace ring-buffer drop
     // counter has to be mirrored into the metrics registry (server.rs),

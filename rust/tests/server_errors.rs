@@ -125,6 +125,21 @@ fn protocol_level_failures_are_bad_request() {
 }
 
 #[test]
+fn register_unknown_similarity_is_bad_request() {
+    let (server, _sched) = start_stack();
+    let mut c = Client::connect(&server.addr).unwrap();
+    let a = small_nii("sim_a.nii");
+    let mut req = register_req(&a, &a);
+    if let Json::Obj(map) = &mut req {
+        map.insert("similarity".into(), Json::Str("zncc".into()));
+    }
+    let r = c.call(&req).unwrap();
+    expect_code(&r, "bad_request");
+    assert!(r.get("error").as_str().unwrap().contains("similarity"), "{r:?}");
+    server.stop();
+}
+
+#[test]
 fn exec_failures_carry_exec_code() {
     let (server, _sched) = start_stack();
     let mut c = Client::connect(&server.addr).unwrap();

@@ -1,0 +1,345 @@
+//! Similarity conformance suite: every metric the fused registration hot
+//! loop offers (SSD, NCC, NMI) is oracle-locked to its composed
+//! `interpolate` → `warp` → similarity pipeline — bitwise, at every
+//! thread count — and its analytic gradient is checked against finite
+//! differences of its own cost. The CI `similarity-matrix` lane runs this
+//! binary under `FFDREG_SIMD` ∈ {scalar, avx2} × `FFDREG_THREADS`
+//! ∈ {1, N}, so the bit-identity contract is exercised per ISA as well.
+//!
+//! Also here: golden-value NMI cases whose joint histograms are
+//! hand-computable (values landing exactly on bin centers), a repeated
+//! 8-thread determinism run for the parallel joint-histogram
+//! accumulation, and the degenerate-input behavior of the fused NCC/NMI
+//! passes (constant or empty images must yield defined costs, never NaN).
+
+use ffdreg::bspline::{ControlGrid, Interpolator, Method};
+use ffdreg::ffd::nmi::{nmi_cost, JointHistogram};
+use ffdreg::ffd::similarity::{ncc_cost, ssd};
+use ffdreg::ffd::workspace::LevelWorkspace;
+use ffdreg::ffd::{FfdTiming, Similarity};
+use ffdreg::volume::resample::warp;
+use ffdreg::volume::{Dims, Volume};
+
+/// A smooth blob pair with a mild texture — well-posed for all three
+/// metrics (non-constant, non-degenerate correlation, spread histogram).
+fn blob_pair(dims: Dims, offset: f32) -> (Volume, Volume) {
+    let cy = dims.ny as f32 / 2.0;
+    let cz = dims.nz as f32 / 2.0;
+    let cx = dims.nx as f32 / 2.0;
+    let mk = move |c: f32| {
+        Volume::from_fn(dims, [1.0; 3], move |x, y, z| {
+            let d2 = (x as f32 - c).powi(2)
+                + (y as f32 - cy).powi(2)
+                + (z as f32 - cz).powi(2);
+            (-d2 / 18.0).exp() + 0.01 * ((x * 3 + y * 5 + z * 7) % 11) as f32
+        })
+    };
+    (mk(cx), mk(cx + offset))
+}
+
+/// The composed oracle for one metric over an already-warped image.
+fn composed_cost(sim: Similarity, reference: &Volume, warped: &Volume) -> f64 {
+    match sim {
+        Similarity::Ssd => ssd(reference, warped),
+        Similarity::Ncc => ncc_cost(reference, warped),
+        Similarity::Nmi => nmi_cost(reference, warped),
+    }
+}
+
+const METRICS: [Similarity; 3] = [Similarity::Ssd, Similarity::Ncc, Similarity::Nmi];
+
+// ---------------------------------------------------------------------------
+// Fused ≡ composed, bitwise, at every thread count — cost and gradient paths
+
+#[test]
+fn fused_cost_is_bitwise_equal_to_composed_for_every_metric() {
+    let dims = Dims::new(23, 19, 17); // odd dims: partial border tiles
+    let (reference, floating) = blob_pair(dims, 1.7);
+    let mut grid = ControlGrid::zeros(dims, [5, 4, 3]);
+    grid.randomize(31, 1.8);
+    let imp = Method::Ttli.instance();
+    let field = imp.interpolate(&grid, dims);
+    let warped = warp(&floating, &field);
+    for sim in METRICS {
+        let oracle = composed_cost(sim, &reference, &warped);
+        for threads in [1usize, 2, 5] {
+            let mut ws = LevelWorkspace::with_similarity(threads, sim);
+            let mut timing = FfdTiming::default();
+            let fused =
+                ws.cost(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing);
+            assert_eq!(
+                fused.to_bits(),
+                oracle.to_bits(),
+                "{sim:?} threads={threads}: fused {fused} vs composed {oracle}"
+            );
+            // The in-place trial path runs the same fused pass on the trial
+            // grid — with a zero gradient step the trial IS the grid, so
+            // the probe must reproduce the same bits.
+            ws.objective_gradient(
+                &reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing, false,
+            );
+            ws.make_trial(&grid, 0.0);
+            let trial =
+                ws.trial_cost(&reference, &floating, imp.as_ref(), 0.0, &mut timing);
+            assert_eq!(trial.to_bits(), oracle.to_bits(), "{sim:?} trial path");
+        }
+    }
+}
+
+#[test]
+fn fused_gradient_objective_and_cp_gradient_are_thread_invariant() {
+    let dims = Dims::new(21, 18, 16);
+    let (reference, floating) = blob_pair(dims, 1.4);
+    let mut grid = ControlGrid::zeros(dims, [5, 5, 5]);
+    grid.randomize(17, 1.1);
+    let imp = Method::Ttli.instance();
+    let field = imp.interpolate(&grid, dims);
+    let warped = warp(&floating, &field);
+    for sim in METRICS {
+        let oracle_cost = composed_cost(sim, &reference, &warped);
+        // Thread-count baseline: the 1-thread gradient.
+        let mut base = LevelWorkspace::with_similarity(1, sim);
+        let mut timing = FfdTiming::default();
+        let obj1 = base.objective_gradient(
+            &reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing, false,
+        );
+        assert_eq!(
+            obj1.to_bits(),
+            oracle_cost.to_bits(),
+            "{sim:?}: gradient pass 1 must reproduce the composed objective"
+        );
+        for threads in [2usize, 5] {
+            let mut ws = LevelWorkspace::with_similarity(threads, sim);
+            let obj = ws.objective_gradient(
+                &reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing, false,
+            );
+            assert_eq!(obj.to_bits(), obj1.to_bits(), "{sim:?} threads={threads}");
+            assert_eq!(ws.cg().x, base.cg().x, "{sim:?} threads={threads}");
+            assert_eq!(ws.cg().y, base.cg().y, "{sim:?} threads={threads}");
+            assert_eq!(ws.cg().z, base.cg().z, "{sim:?} threads={threads}");
+            // Field-reuse path (the pass above filled ws.field for this
+            // grid): skipping the interpolation stage must be bitwise
+            // neutral for every metric.
+            let obj2 = ws.objective_gradient(
+                &reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing, true,
+            );
+            assert_eq!(obj2.to_bits(), obj1.to_bits(), "{sim:?} reuse threads={threads}");
+            assert_eq!(ws.cg().x, base.cg().x, "{sim:?} reuse threads={threads}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analytic gradients vs finite differences of each metric's own fused cost
+
+/// FD-check the control-point gradient of `sim` at its largest-gradient
+/// CPs. `band` is the relative tolerance: the voxel gradients use the
+/// warped image's central-difference ∇W as an approximation of ∇F∘T
+/// (NiftyReg's choice), so bands are loose — this guards signs and
+/// magnitudes, while the bitwise tests above pin exact values.
+fn fd_gradient_check(sim: Similarity, band: f64) {
+    let dims = Dims::new(22, 20, 18);
+    let (reference, floating) = blob_pair(dims, 1.6);
+    let mut grid = ControlGrid::zeros(dims, [5, 5, 5]);
+    grid.randomize(13, 0.8);
+    let imp = Method::Ttli.instance();
+    let mut ws = LevelWorkspace::with_similarity(1, sim);
+    let mut timing = FfdTiming::default();
+    ws.objective_gradient(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing, false);
+    let gx = ws.cg().x.clone();
+    // Probe the three CPs where the analytic x-gradient is largest — the
+    // relative band is meaningful there.
+    let mut order: Vec<usize> = (0..gx.len()).collect();
+    order.sort_by(|&a, &b| gx[b].abs().partial_cmp(&gx[a].abs()).unwrap());
+    let h = 0.05f32;
+    for &i in order.iter().take(3) {
+        let mut gp = grid.clone();
+        gp.x[i] += h;
+        let mut gm = grid.clone();
+        gm.x[i] -= h;
+        let cp = ws.cost(&reference, &floating, imp.as_ref(), &gp, 0.0, &mut timing);
+        let cm = ws.cost(&reference, &floating, imp.as_ref(), &gm, 0.0, &mut timing);
+        let fd = (cp - cm) / (2.0 * h as f64);
+        let g = gx[i] as f64;
+        assert!(
+            (g - fd).abs() <= band * fd.abs().max(1e-7),
+            "{sim:?} cp {i}: analytic {g} vs fd {fd}"
+        );
+    }
+}
+
+#[test]
+fn ssd_gradient_matches_finite_differences() {
+    fd_gradient_check(Similarity::Ssd, 0.35);
+}
+
+#[test]
+fn ncc_gradient_matches_finite_differences() {
+    fd_gradient_check(Similarity::Ncc, 0.35);
+}
+
+#[test]
+fn nmi_gradient_matches_finite_differences() {
+    // The Parzen-window ∂cost/∂W is near-exact per voxel (see
+    // `ffd::nmi` tests); the extra slack over SSD/NCC covers the
+    // normalization-range term the Parzen model omits.
+    fd_gradient_check(Similarity::Nmi, 0.5);
+}
+
+// ---------------------------------------------------------------------------
+// Golden-value NMI: joint histograms small enough to compute by hand
+
+/// Quantized identical images: values {0,1,2,3} land exactly on bin
+/// centers for 4 bins (fa = v) *and* for the default 64 bins
+/// (fa = v·21), so the joint histogram is exactly diagonal and
+/// NMI = (H+H)/H = 2 with no float slack at all.
+#[test]
+fn golden_nmi_identical_quantized_images_is_exactly_two() {
+    let dims = Dims::new(8, 8, 4);
+    let v = Volume::from_fn(dims, [1.0; 3], |x, y, z| ((x + y + z) % 4) as f32);
+    let h = JointHistogram::build(&v, &v, 4);
+    // Hand-computed: (x+y+z)%4 is uniform on this lattice → every value
+    // has count 64 of 256, so the diagonal cells are exactly 1/4.
+    for a in 0..4 {
+        for b in 0..4 {
+            let want = if a == b { 0.25 } else { 0.0 };
+            assert_eq!(h.joint[a * 4 + b], want, "joint[{a},{b}]");
+        }
+        assert_eq!(h.marg_a[a], 0.25);
+        assert_eq!(h.marg_b[a], 0.25);
+    }
+    // Entropies: −Σ¼·ln¼ = ln 4 = 2·ln 2 (sequential 4-term fold).
+    let ln4 = 2.0 * std::f64::consts::LN_2;
+    assert!((h.entropy_a() - ln4).abs() < 1e-12, "{}", h.entropy_a());
+    assert!((h.entropy_b() - ln4).abs() < 1e-12);
+    assert!((h.joint_entropy() - ln4).abs() < 1e-12);
+    // Identical marginal and joint probability vectors → identical
+    // entropy bits → (E+E)/E is exactly 2.0 in IEEE arithmetic.
+    assert_eq!(h.nmi(), 2.0);
+    assert_eq!(nmi_cost(&v, &v), 0.0, "default-bin path shares the exactness");
+}
+
+/// Independent one-bit images (a keyed on x parity, b on y parity):
+/// the joint is uniform over 4 corner cells (¼ each) while each marginal
+/// is {½, ½} — H(A) = H(B) = ln 2, H(A,B) = ln 4, so NMI = 1 (no mutual
+/// information) and MI = 0.
+#[test]
+fn golden_nmi_independent_bits_is_one() {
+    let dims = Dims::new(8, 8, 4);
+    let a = Volume::from_fn(dims, [1.0; 3], |x, _, _| if x % 2 == 0 { 0.0 } else { 3.0 });
+    let b = Volume::from_fn(dims, [1.0; 3], |_, y, _| if y % 2 == 0 { 0.0 } else { 3.0 });
+    let h = JointHistogram::build(&a, &b, 4);
+    for ia in 0..4 {
+        for ib in 0..4 {
+            let corner = (ia == 0 || ia == 3) && (ib == 0 || ib == 3);
+            let want = if corner { 0.25 } else { 0.0 };
+            assert_eq!(h.joint[ia * 4 + ib], want, "joint[{ia},{ib}]");
+        }
+    }
+    assert_eq!(h.marg_a, [0.5, 0.0, 0.0, 0.5]);
+    assert_eq!(h.marg_b, [0.5, 0.0, 0.0, 0.5]);
+    let ln2 = std::f64::consts::LN_2;
+    assert!((h.entropy_a() - ln2).abs() < 1e-12);
+    assert!((h.entropy_b() - ln2).abs() < 1e-12);
+    assert!((h.joint_entropy() - 2.0 * ln2).abs() < 1e-12);
+    assert!((h.nmi() - 1.0).abs() < 1e-12, "independent images carry no MI: {}", h.nmi());
+    assert!(h.mi().abs() < 1e-12);
+}
+
+/// Perfectly dependent one-bit images through a *decreasing* mapping
+/// (b = 3 − a): anti-correlated for NCC, but maximally informative for
+/// NMI — the multi-modal case the metric exists for.
+#[test]
+fn golden_nmi_inverted_bits_is_two() {
+    let dims = Dims::new(8, 8, 4);
+    let a = Volume::from_fn(dims, [1.0; 3], |x, _, _| if x % 2 == 0 { 0.0 } else { 3.0 });
+    let b = Volume::from_fn(dims, [1.0; 3], |x, _, _| if x % 2 == 0 { 3.0 } else { 0.0 });
+    let h = JointHistogram::build(&a, &b, 4);
+    assert_eq!(h.joint[3], 0.5, "joint[0,3]"); // a=0 ↔ b=3
+    assert_eq!(h.joint[3 * 4], 0.5, "joint[3,0]"); // a=3 ↔ b=0
+    assert_eq!(h.nmi(), 2.0, "deterministic mapping → maximal NMI");
+    // NCC sees the same pair as perfectly anti-correlated (cost 2).
+    let c = ncc_cost(&a, &b);
+    assert!((c - 2.0).abs() < 1e-9, "anti-correlated NCC cost: {c}");
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic parallel joint histograms: 50 repeats at 8 threads
+
+#[test]
+fn nmi_fused_cost_is_deterministic_over_50_runs_at_8_threads() {
+    let dims = Dims::new(24, 21, 19);
+    let (reference, floating) = blob_pair(dims, 1.9);
+    let mut grid = ControlGrid::zeros(dims, [5, 5, 5]);
+    grid.randomize(23, 1.3);
+    let imp = Method::Ttli.instance();
+    let mut ws = LevelWorkspace::with_similarity(8, Similarity::Nmi);
+    let mut timing = FfdTiming::default();
+    let first = ws.cost(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing);
+    for run in 1..50 {
+        let c = ws.cost(&reference, &floating, imp.as_ref(), &grid, 0.0, &mut timing);
+        assert_eq!(
+            c.to_bits(),
+            first.to_bits(),
+            "run {run}: parallel joint-histogram accumulation drifted"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Degenerate inputs through the fused passes: defined costs, never NaN
+
+#[test]
+fn fused_ncc_degenerate_inputs_have_defined_costs() {
+    let dims = Dims::new(12, 12, 12);
+    let blob = Volume::from_fn(dims, [1.0; 3], |x, y, z| {
+        let d2 = (x as f32 - 6.0).powi(2) + (y as f32 - 6.0).powi(2) + (z as f32 - 6.0).powi(2);
+        (-d2 / 9.0).exp()
+    });
+    let flat = Volume::from_fn(dims, [1.0; 3], |_, _, _| 4.25);
+    let imp = Method::Ttli.instance();
+    let mut grid = ControlGrid::zeros(dims, [4, 4, 4]);
+    grid.randomize(7, 0.4);
+    let run = |reference: &Volume, floating: &Volume| {
+        let mut ws = LevelWorkspace::with_similarity(2, Similarity::Ncc);
+        let mut timing = FfdTiming::default();
+        ws.cost(reference, floating, imp.as_ref(), &grid, 0.0, &mut timing)
+    };
+    // Constant reference / constant floating / constant pair: degenerate
+    // correlation maps to the defined "no correlation evidence" cost 1.0 —
+    // matching the composed oracle bitwise, never NaN.
+    assert_eq!(run(&flat, &blob), 1.0);
+    assert_eq!(run(&blob, &flat), 1.0);
+    assert_eq!(run(&flat, &flat), 1.0);
+    // Empty overlap (zero-voxel volumes): still the defined cost.
+    let empty = Volume::from_fn(Dims::new(0, 0, 0), [1.0; 3], |_, _, _| 0.0);
+    let empty_grid = ControlGrid::zeros(Dims::new(0, 0, 0), [4, 4, 4]);
+    let mut ws = LevelWorkspace::with_similarity(2, Similarity::Ncc);
+    let mut timing = FfdTiming::default();
+    let c = ws.cost(&empty, &empty, imp.as_ref(), &empty_grid, 0.0, &mut timing);
+    assert_eq!(c, 1.0);
+    assert_eq!(c, ncc_cost(&empty, &empty), "fused empty = composed empty");
+}
+
+#[test]
+fn fused_nmi_degenerate_inputs_have_defined_costs() {
+    let dims = Dims::new(12, 12, 12);
+    let flat = Volume::from_fn(dims, [1.0; 3], |_, _, _| 2.5);
+    let imp = Method::Ttli.instance();
+    let grid = ControlGrid::zeros(dims, [4, 4, 4]);
+    let mut ws = LevelWorkspace::with_similarity(2, Similarity::Nmi);
+    let mut timing = FfdTiming::default();
+    // Constant pair: all histogram mass in one cell, entropies 0 — the
+    // Studholme convention maps it to maximal similarity (cost 0), and the
+    // fused pass must agree with the composed oracle exactly.
+    let c = ws.cost(&flat, &flat, imp.as_ref(), &grid, 0.0, &mut timing);
+    assert!(c.is_finite(), "constant NMI cost must be finite, got {c}");
+    assert_eq!(c.to_bits(), nmi_cost(&flat, &flat).to_bits());
+    // Empty volumes: finite, composed-equal.
+    let empty = Volume::from_fn(Dims::new(0, 0, 0), [1.0; 3], |_, _, _| 0.0);
+    let empty_grid = ControlGrid::zeros(Dims::new(0, 0, 0), [4, 4, 4]);
+    let mut ws = LevelWorkspace::with_similarity(2, Similarity::Nmi);
+    let c = ws.cost(&empty, &empty, imp.as_ref(), &empty_grid, 0.0, &mut timing);
+    assert!(c.is_finite());
+    assert_eq!(c.to_bits(), nmi_cost(&empty, &empty).to_bits());
+}
